@@ -1,0 +1,108 @@
+//! Regenerate every table and figure of the paper in one run, writing
+//! the report that EXPERIMENTS.md quotes.
+//!
+//! ```sh
+//! cargo run --release --example full_eval -- --quick   # thinned grids
+//! cargo run --release --example full_eval              # full grids
+//! ```
+
+use srsvd::experiments::{efficiency, fig1, k_grid, table1};
+
+fn main() {
+    let quick = std::env::args().any(|a| a == "--quick") || srsvd::experiments::quick_mode();
+    let seed = 42;
+    let ks = k_grid(100, quick);
+    let runs = if quick { 5 } else { 30 };
+    println!(
+        "srsvd full evaluation (quick={quick}, seed={seed}, ks={} points, runs={runs})\n",
+        ks.len()
+    );
+
+    // ---------------- Figure 1 -------------------------------------------
+    println!("== Fig 1a: MSE vs number of principal components ==");
+    let rows = fig1::fig1a(if quick { &[1, 2, 5, 10, 25, 50, 100] } else { &ks }, seed);
+    print!("{}", fig1::render_k_table("(100x1000 uniform)", &rows));
+
+    println!("\n== Fig 1b: MSE-SUM vs sample size ==");
+    let ns: &[usize] = if quick { &[200, 1000, 5000] } else { &[100, 200, 500, 1000, 2000, 5000, 10000] };
+    let mut t = srsvd::bench::Table::new(&["n", "S-RSVD", "RSVD"]);
+    for (n, s, r) in fig1::fig1b(ns, &ks, seed) {
+        t.row(&[n.to_string(), format!("{s:.3}"), format!("{r:.3}")]);
+    }
+    print!("{}", t.render());
+
+    println!("\n== Fig 1c: MSE-SUM vs data distribution ==");
+    let mut t = srsvd::bench::Table::new(&["distribution", "S-RSVD", "RSVD"]);
+    for (d, s, r) in fig1::fig1c(&ks, seed) {
+        t.row(&[d.to_string(), format!("{s:.3}"), format!("{r:.3}")]);
+    }
+    print!("{}", t.render());
+
+    println!("\n== Fig 1d: implicit vs explicit centering (must coincide) ==");
+    let mut t = srsvd::bench::Table::new(&["k", "implicit", "explicit", "|diff|"]);
+    for (k, i, e) in fig1::fig1d(if quick { &[1, 5, 20, 80] } else { &ks }, seed) {
+        t.row(&[
+            k.to_string(),
+            format!("{i:.6}"),
+            format!("{e:.6}"),
+            format!("{:.2e}", (i - e).abs()),
+        ]);
+    }
+    print!("{}", t.render());
+
+    println!("\n== Fig 1e: MSE-SUM vs power iterations q ==");
+    let qs: &[usize] = if quick { &[0, 1, 2, 4] } else { &[0, 1, 2, 3, 4, 6, 8] };
+    let mut t = srsvd::bench::Table::new(&["q", "S-RSVD", "RSVD"]);
+    for (q, s, r) in fig1::fig1e(qs, &ks, seed) {
+        t.row(&[q.to_string(), format!("{s:.3}"), format!("{r:.3}")]);
+    }
+    print!("{}", t.render());
+
+    println!("\n== Fig 1f: MSE-SUM difference vs q, per distribution ==");
+    println!("(negative = S-RSVD more accurate)");
+    for (dist, series) in fig1::fig1f(qs, &ks, seed) {
+        let cells: Vec<String> = series
+            .iter()
+            .map(|(q, d)| format!("q={q}:{d:+.3}"))
+            .collect();
+        println!("  {dist:<12} {}", cells.join("  "));
+    }
+
+    // ---------------- Table 1 --------------------------------------------
+    println!("\n== Table 1 (left): image data ==");
+    let digits = table1::digits_stats(if quick { 400 } else { 1979 }, runs, seed);
+    let faces = table1::faces_stats(
+        if quick {
+            srsvd::data::FacesSpec { side: 16, count: 120, rank: 12, noise: 5.0 }
+        } else {
+            srsvd::data::FacesSpec::default()
+        },
+        runs,
+        seed,
+    );
+    print!("{}", table1::render(&[digits, faces]));
+
+    println!("\n== Table 1 (right): word data ==");
+    let ns: &[usize] = if quick { &[1000, 4000] } else { &[1000, 10_000, 100_000, 300_000] };
+    let stats: Vec<_> = ns
+        .iter()
+        .map(|&n| {
+            let pairs = (n * 50).min(4_000_000);
+            let k = 100.min(n / 4);
+            table1::words_stats(n, pairs, k, runs.min(10), seed)
+        })
+        .collect();
+    print!("{}", table1::render(&stats));
+
+    // ---------------- §4 efficiency --------------------------------------
+    println!("\n== §4 efficiency: sparse S-RSVD vs densified RSVD ==");
+    let points: &[(usize, f64)] = if quick {
+        &[(2000, 0.01), (8000, 0.005)]
+    } else {
+        &[(2000, 0.01), (8000, 0.005), (20_000, 0.002), (50_000, 0.001)]
+    };
+    let rows = efficiency::sweep(500, points, 10, seed);
+    print!("{}", efficiency::render(&rows));
+
+    println!("\ndone — paste the sections above into EXPERIMENTS.md");
+}

@@ -1,0 +1,151 @@
+//! END-TO-END DRIVER: the full three-layer system on a real workload.
+//!
+//! Starts the coordinator with both engines — the PJRT runtime executing
+//! the AOT-compiled JAX/Pallas pipeline, and the native rust engine —
+//! then drives a mixed stream of factorization jobs through it:
+//! grid-shaped dense PCA jobs (served by the compiled artifact), off-grid
+//! dense jobs and sparse co-occurrence jobs (served natively). Reports
+//! per-engine latency, throughput, and cross-engine accuracy agreement.
+//!
+//! This is deliverable (e) of DESIGN.md: it proves Layer 1 (Pallas
+//! kernels) → Layer 2 (JAX pipeline) → AOT HLO → rust runtime → Layer 3
+//! coordinator all compose.
+//!
+//! ```sh
+//! make artifacts && cargo run --release --example svd_service
+//! ```
+
+use std::time::Instant;
+
+use srsvd::coordinator::{
+    Coordinator, CoordinatorConfig, EnginePreference, JobSpec, MatrixInput, ShiftSpec,
+};
+use srsvd::data::{cooccurrence_matrix, random_matrix, CorpusSpec, DataSpec, Distribution};
+use srsvd::rng::Xoshiro256pp;
+use srsvd::stats::{mean, quantile};
+use srsvd::svd::{SvdConfig, SvdEngine};
+use srsvd::util::timer::fmt_duration;
+
+fn main() {
+    srsvd::util::logging::init();
+    let artifact_dir = std::path::PathBuf::from("artifacts");
+    if !artifact_dir.join("manifest.json").exists() {
+        eprintln!("artifacts not built — run `make artifacts` first");
+        std::process::exit(1);
+    }
+
+    let coord = Coordinator::start(CoordinatorConfig {
+        native_workers: 2,
+        queue_capacity: 64,
+        artifact_dir: Some(artifact_dir),
+    })
+    .expect("coordinator");
+
+    // ---- build the workload ------------------------------------------------
+    let n_jobs = std::env::var("SRSVD_JOBS")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(30usize);
+    println!("submitting {n_jobs} mixed jobs ...\n");
+
+    let mut handles = Vec::new();
+    let t0 = Instant::now();
+    for j in 0..n_jobs as u64 {
+        let spec = match j % 3 {
+            // Artifact-served: the 100×1000 grid shape from aot.py.
+            0 => {
+                let mut rng = Xoshiro256pp::seed_from_u64(100 + j);
+                let x = random_matrix(
+                    DataSpec { m: 100, n: 1000, dist: Distribution::Uniform },
+                    &mut rng,
+                );
+                JobSpec::pca(MatrixInput::Dense(x), 10, 1000 + j)
+            }
+            // Native dense: off-grid shape.
+            1 => {
+                let mut rng = Xoshiro256pp::seed_from_u64(200 + j);
+                let x = random_matrix(
+                    DataSpec { m: 80, n: 600, dist: Distribution::Exponential },
+                    &mut rng,
+                );
+                JobSpec::pca(MatrixInput::Dense(x), 8, 2000 + j)
+            }
+            // Native sparse: word co-occurrence (never densified).
+            _ => {
+                let mut rng = Xoshiro256pp::seed_from_u64(300 + j);
+                let x = cooccurrence_matrix(
+                    CorpusSpec {
+                        contexts: 300,
+                        targets: 3000,
+                        pairs: 120_000,
+                        zipf_s: 1.05,
+                        topics: 12,
+                    },
+                    &mut rng,
+                );
+                JobSpec {
+                    input: MatrixInput::Sparse(x),
+                    config: SvdConfig::paper(32),
+                    shift: ShiftSpec::MeanCenter,
+                    engine: EnginePreference::Auto,
+                    seed: 3000 + j,
+                    score: true,
+                }
+            }
+        };
+        handles.push(coord.submit(spec).expect("submit"));
+    }
+
+    // ---- collect ------------------------------------------------------------
+    let mut art_lat = Vec::new();
+    let mut nat_lat = Vec::new();
+    let mut art_mses = Vec::new();
+    for h in handles {
+        let r = h.wait().expect("result");
+        let out = r.outcome.expect("job failed");
+        match r.engine {
+            SvdEngine::Artifact => {
+                art_lat.push(r.exec_s);
+                art_mses.push(out.mse.unwrap());
+            }
+            SvdEngine::Native => nat_lat.push(r.exec_s),
+        }
+    }
+    let wall = t0.elapsed().as_secs_f64();
+
+    // ---- report --------------------------------------------------------------
+    println!("all {n_jobs} jobs completed in {} wall-clock", fmt_duration(wall));
+    println!("throughput: {:.1} jobs/s\n", n_jobs as f64 / wall);
+    let report = |name: &str, lat: &[f64]| {
+        if lat.is_empty() {
+            return;
+        }
+        println!(
+            "{name:<18} n={:<4} mean={} p50={} p95={}",
+            lat.len(),
+            fmt_duration(mean(lat)),
+            fmt_duration(quantile(lat, 0.5)),
+            fmt_duration(quantile(lat, 0.95)),
+        );
+    };
+    report("artifact engine", &art_lat);
+    report("native engine", &nat_lat);
+    println!("\nservice metrics: {}", coord.metrics());
+
+    // ---- cross-engine verification -------------------------------------------
+    // The same job on both engines must agree (f32 artifact vs f64 native).
+    let mut rng = Xoshiro256pp::seed_from_u64(999);
+    let x = random_matrix(DataSpec { m: 100, n: 1000, dist: Distribution::Uniform }, &mut rng);
+    let mut a_spec = JobSpec::pca(MatrixInput::Dense(x.clone()), 10, 77);
+    a_spec.engine = EnginePreference::ArtifactOnly;
+    let mut n_spec = JobSpec::pca(MatrixInput::Dense(x), 10, 77);
+    n_spec.engine = EnginePreference::Native;
+    let ma = coord.submit_blocking(a_spec).unwrap().outcome.unwrap().mse.unwrap();
+    let mn = coord.submit_blocking(n_spec).unwrap().outcome.unwrap().mse.unwrap();
+    println!("\ncross-engine check (same seed): artifact mse={ma:.6} native mse={mn:.6}");
+    let rel = (ma - mn).abs() / mn.max(1e-12);
+    assert!(rel < 5e-3, "engines disagree: rel err {rel}");
+    println!("agreement within {:.3}% — PASS", rel * 100.0);
+
+    coord.shutdown();
+}

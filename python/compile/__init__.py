@@ -1,0 +1,7 @@
+"""Build-time compile path for srsvd.
+
+Layer 2 (JAX pipeline) + Layer 1 (Pallas kernels), AOT-lowered to HLO
+text artifacts consumed by the rust runtime. Python is never on the
+request path: ``make artifacts`` runs once and the rust binary is
+self-contained afterwards.
+"""

@@ -1,0 +1,198 @@
+"""AOT exporter: lower the S-RSVD pipeline to HLO text artifacts.
+
+Interchange format is HLO **text**, not a serialized ``HloModuleProto``:
+jax >= 0.5 emits protos with 64-bit instruction ids which the pinned
+runtime (xla_extension 0.5.1, bound by the rust ``xla`` crate) rejects
+(``proto.id() <= INT_MAX``); the text parser reassigns ids and
+round-trips cleanly. See /opt/xla-example/README.md.
+
+One artifact is lowered per static configuration in the grid below
+(shapes are static under AOT). The rust coordinator routes factorization
+jobs to artifacts via ``artifacts/manifest.json``; configurations
+outside the grid fall back to the native rust engine.
+
+Run: ``cd python && python -m compile.aot --out ../artifacts``
+(wired as ``make artifacts``; a no-op when inputs are unchanged thanks
+to the Makefile dependency rule).
+"""
+
+import argparse
+import hashlib
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+from .kernels import matmul_rank1, row_mean
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (id-safe interchange).
+
+    ``as_hlo_text(True)`` forces *full* printing of large constants:
+    the default elides arrays with more than 10 elements as
+    ``constant({...})``, which the 0.5.1 text parser silently turns
+    into garbage — the Jacobi pair-index tables (190 entries at K=20)
+    came back as zeros and the in-graph SVD never converged. See
+    DESIGN.md "HLO-text interchange pitfalls" and
+    python/tests/test_aot.py::test_no_elided_constants.
+    """
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text(True)
+
+
+def _spec(shape, dtype="f32"):
+    return jax.ShapeDtypeStruct(tuple(shape), jnp.float32 if dtype == "f32" else dtype)
+
+
+# ---------------------------------------------------------------------------
+# Artifact grid.
+#
+# Each entry describes one compiled pipeline. `method`/`sweeps` pick the
+# small-SVD backend (jacobi = accurate, gram = cheap when n >> K).
+# Shapes mirror the paper's experiment regimes at artifact-friendly
+# sizes; the native rust engine covers arbitrary shapes (e.g. the k- and
+# q-sweeps of Figure 1).
+# ---------------------------------------------------------------------------
+GRID = [
+    # name                      m     n     k    K    q  sweeps method
+    ("uniform_100x1000_k10_q0", 100, 1000, 10, 20, 0, 8, "jacobi"),
+    ("uniform_100x1000_k10_q1", 100, 1000, 10, 20, 1, 8, "jacobi"),
+    ("uniform_100x1000_k25_q0", 100, 1000, 25, 50, 0, 8, "jacobi"),
+    ("digits_64x1979_k10_q0",   64,  1979, 10, 20, 0, 8, "jacobi"),
+    ("faces_1024x1024_k10_q0",  1024, 1024, 10, 20, 0, 8, "jacobi"),
+    ("words_1000x4000_k64_q0",  1000, 4000, 64, 128, 0, 6, "gram"),
+]
+
+
+def build_artifacts(out_dir: str) -> dict:
+    os.makedirs(out_dir, exist_ok=True)
+    entries = []
+
+    for name, m, n, k, K, q, sweeps, method in GRID:
+        fn = lambda x, mu, om: model.srsvd_scored(
+            x, mu, om, k=k, q=q, sweeps=sweeps, method=method
+        )
+        lowered = jax.jit(fn).lower(
+            _spec((m, n)), _spec((m,)), _spec((n, K))
+        )
+        text = to_hlo_text(lowered)
+        fname = f"srsvd_{name}.hlo.txt"
+        with open(os.path.join(out_dir, fname), "w") as f:
+            f.write(text)
+        entries.append(
+            {
+                "name": name,
+                "file": fname,
+                "op": "srsvd_scored",
+                "m": m,
+                "n": n,
+                "k": k,
+                "K": K,
+                "q": q,
+                "sweeps": sweeps,
+                "method": method,
+                "dtype": "f32",
+                "inputs": [
+                    {"name": "x", "shape": [m, n]},
+                    {"name": "mu", "shape": [m]},
+                    {"name": "omega", "shape": [n, K]},
+                ],
+                "outputs": [
+                    {"name": "u", "shape": [m, k]},
+                    {"name": "s", "shape": [k]},
+                    {"name": "v", "shape": [n, k]},
+                    {"name": "mse", "shape": []},
+                ],
+                "sha256": hashlib.sha256(text.encode()).hexdigest(),
+            }
+        )
+        print(f"lowered {fname}: {len(text)} chars")
+
+    # Row-mean artifact (computing the shifting vector rust-side via the
+    # pallas kernel) for each distinct m, n in the grid.
+    seen = set()
+    for _, m, n, *_ in GRID:
+        if (m, n) in seen:
+            continue
+        seen.add((m, n))
+        lowered = jax.jit(lambda x: (row_mean(x),)).lower(_spec((m, n)))
+        text = to_hlo_text(lowered)
+        fname = f"rowmean_{m}x{n}.hlo.txt"
+        with open(os.path.join(out_dir, fname), "w") as f:
+            f.write(text)
+        entries.append(
+            {
+                "name": f"rowmean_{m}x{n}",
+                "file": fname,
+                "op": "row_mean",
+                "m": m,
+                "n": n,
+                "k": 0,
+                "K": 0,
+                "q": 0,
+                "sweeps": 0,
+                "method": "-",
+                "dtype": "f32",
+                "inputs": [{"name": "x", "shape": [m, n]}],
+                "outputs": [{"name": "mu", "shape": [m]}],
+                "sha256": hashlib.sha256(text.encode()).hexdigest(),
+            }
+        )
+        print(f"lowered {fname}: {len(text)} chars")
+
+    # Smoke artifact: the raw rank-1 matmul primitive at a tiny shape,
+    # used by rust runtime unit tests (fast to compile + execute).
+    lowered = jax.jit(lambda a, b, u, v: (matmul_rank1(a, b, u, v),)).lower(
+        _spec((8, 16)), _spec((16, 4)), _spec((8,)), _spec((4,))
+    )
+    text = to_hlo_text(lowered)
+    with open(os.path.join(out_dir, "smoke_matmul_rank1.hlo.txt"), "w") as f:
+        f.write(text)
+    entries.append(
+        {
+            "name": "smoke_matmul_rank1",
+            "file": "smoke_matmul_rank1.hlo.txt",
+            "op": "matmul_rank1",
+            "m": 8,
+            "n": 16,
+            "k": 4,
+            "K": 4,
+            "q": 0,
+            "sweeps": 0,
+            "method": "-",
+            "dtype": "f32",
+            "inputs": [
+                {"name": "a", "shape": [8, 16]},
+                {"name": "b", "shape": [16, 4]},
+                {"name": "u", "shape": [8]},
+                {"name": "v", "shape": [4]},
+            ],
+            "outputs": [{"name": "c", "shape": [8, 4]}],
+            "sha256": hashlib.sha256(text.encode()).hexdigest(),
+        }
+    )
+    print("lowered smoke_matmul_rank1.hlo.txt")
+
+    manifest = {"version": 1, "dtype": "f32", "artifacts": entries}
+    with open(os.path.join(out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2)
+    print(f"wrote manifest with {len(entries)} artifacts to {out_dir}")
+    return manifest
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts", help="output directory")
+    args = ap.parse_args()
+    build_artifacts(args.out)
+
+
+if __name__ == "__main__":
+    main()

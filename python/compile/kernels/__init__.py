@@ -1,0 +1,31 @@
+"""Layer-1 Pallas kernels for the Shifted Randomized SVD pipeline.
+
+Every shifted product in Basirat (2019) Algorithm 1 reduces to a single
+primitive: a matmul with a fused rank-1 downdate,
+
+    C = A @ B - outer(u, v)
+
+which is exactly what lets the algorithm avoid materializing the dense
+shifted matrix  X-bar = X - mu 1^T:
+
+    Xbar Omega  = X Omega - mu (1^T Omega) -> matmul_rank1(X,   Omega, u=mu,    v=colsum(Omega))
+    Xbar^T Q    = X^T Q   - 1 (mu^T Q)     -> matmul_rank1(X^T, Q,     u=1,     v=mu^T Q)
+    Q^T Xbar    = Q^T X   - (Q^T mu) 1^T   -> matmul_rank1(Q^T, X,     u=Q^T mu, v=1)
+
+The kernels here are tiled for TPU VMEM (see DESIGN.md
+section Hardware-adaptation) and run under ``interpret=True`` so they
+lower to plain HLO executable on the CPU PJRT client.
+"""
+
+from .shifted_matmul import matmul_rank1, shifted_right, shifted_left, shifted_project
+from .colmean import row_mean
+from .mse import shifted_mse
+
+__all__ = [
+    "matmul_rank1",
+    "shifted_right",
+    "shifted_left",
+    "shifted_project",
+    "row_mean",
+    "shifted_mse",
+]

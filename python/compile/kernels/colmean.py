@@ -1,0 +1,57 @@
+"""Pallas row-mean kernel: mu = mean(X, axis=1).
+
+The shifting vector of S-RSVD in the PCA use case is the mean of the
+column observations, i.e. the per-row mean of the (m, n) data matrix.
+The kernel reduces over column tiles so X streams HBM->VMEM once; the
+(bm, 1) accumulator stays VMEM-resident across the column loop.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _row_mean_kernel(x_ref, o_ref, *, n_steps: int, n_true: int):
+    s = pl.program_id(1)
+
+    @pl.when(s == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.sum(x_ref[...], axis=1, keepdims=True)
+
+    @pl.when(s == n_steps - 1)
+    def _finish():
+        o_ref[...] = o_ref[...] / n_true
+
+
+def _pad_to(x, mult, axis):
+    rem = (-x.shape[axis]) % mult
+    if rem == 0:
+        return x
+    pads = [(0, 0)] * x.ndim
+    pads[axis] = (0, rem)
+    return jnp.pad(x, pads)
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bn"))
+def row_mean(x, *, bm: int = 128, bn: int = 512):
+    """Per-row mean of an (m, n) matrix, tiled. Returns (m,)."""
+    m, n = x.shape
+    bm = min(bm, m)
+    bn = min(bn, n)
+    xp = _pad_to(_pad_to(x, bm, 0), bn, 1)
+    mp_, np_ = xp.shape
+    n_steps = np_ // bn
+
+    out = pl.pallas_call(
+        functools.partial(_row_mean_kernel, n_steps=n_steps, n_true=n),
+        grid=(mp_ // bm, n_steps),
+        in_specs=[pl.BlockSpec((bm, bn), lambda i, s: (i, s))],
+        out_specs=pl.BlockSpec((bm, 1), lambda i, s: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((mp_, 1), x.dtype),
+        interpret=True,
+    )(xp)
+    return out[:m, 0]

@@ -1,0 +1,40 @@
+"""Pure-jnp oracles for the Pallas kernels.
+
+Each function is the direct, unfused jnp expression of what the
+corresponding kernel must compute. pytest (python/tests/test_kernels.py)
+asserts allclose between kernel and oracle across a hypothesis sweep of
+shapes and dtypes — this is the core L1 correctness signal.
+"""
+
+import jax.numpy as jnp
+
+
+def matmul_rank1_ref(a, b, u, v):
+    """a @ b - outer(u, v)."""
+    return a @ b - jnp.outer(u, v)
+
+
+def shifted_right_ref(x, omega, mu):
+    """(X - mu 1^T) @ Omega, by explicit densification."""
+    return (x - mu[:, None]) @ omega
+
+
+def shifted_left_ref(x, q, mu):
+    """(X - mu 1^T)^T @ Q, by explicit densification."""
+    return (x - mu[:, None]).T @ q
+
+
+def shifted_project_ref(x, q, mu):
+    """Q^T (X - mu 1^T), by explicit densification."""
+    return q.T @ (x - mu[:, None])
+
+
+def row_mean_ref(x):
+    """mean(X, axis=1)."""
+    return jnp.mean(x, axis=1)
+
+
+def shifted_mse_ref(x, mu, r):
+    """mean over columns of squared L2 reconstruction error."""
+    d = x - mu[:, None] - r
+    return jnp.sum(d * d) / x.shape[1]

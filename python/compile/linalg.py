@@ -1,0 +1,156 @@
+"""Pure-jax dense linear algebra that lowers to plain HLO.
+
+Why this exists: ``jnp.linalg.qr`` / ``jnp.linalg.svd`` lower to LAPACK
+custom-calls (``lapack_*geqrf_ffi`` etc.) that the pinned runtime
+(xla_extension 0.5.1, what the rust ``xla`` crate binds) cannot execute.
+Everything in this module is built from matmuls, ``lax.fori_loop`` and
+dynamic slices, so the whole S-RSVD pipeline exports as self-contained
+HLO text.
+
+Algorithms:
+  * ``mgs_qr``      — Modified Gram–Schmidt with one re-orthogonalization
+                      pass ("twice is enough", Giraud et al. 2005).
+  * ``jacobi_svd``  — one-sided Jacobi (Hestenes) with a fixed number of
+                      cyclic sweeps; orthogonalizes columns by plane
+                      rotations. Fixed sweep count keeps the HLO static.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+
+def _mgs_pass(a):
+    """One modified-Gram–Schmidt pass over the columns of ``a`` (m, k).
+
+    Returns Q with orthonormal columns (rank-deficient columns map to
+    zero vectors rather than NaN — the randomized sampling upstream makes
+    exact deficiency measure-zero, but padding tiles can hit it).
+    """
+    m, k = a.shape
+    eps = jnp.asarray(1e-30, a.dtype)
+
+    def body(j, q):
+        col = lax.dynamic_slice(q, (0, j), (m, 1))
+        # Project out all previous columns: one matvec against the already
+        # orthonormalized prefix. Columns >= j are masked out of the
+        # projection by zeroing their coefficients.
+        coeff = q.T @ col  # (k, 1)
+        mask = (jnp.arange(k) < j).astype(a.dtype)[:, None]
+        col = col - q @ (coeff * mask)
+        nrm = jnp.sqrt(jnp.sum(col * col))
+        col = jnp.where(nrm > eps, col / nrm, jnp.zeros_like(col))
+        return lax.dynamic_update_slice(q, col, (0, j))
+
+    return lax.fori_loop(0, k, body, a)
+
+
+@jax.jit
+def mgs_qr(a):
+    """Orthonormal basis of the columns of ``a`` (m, k), m >= k.
+
+    Two MGS passes: the second pass restores orthogonality lost to
+    cancellation (classical "twice is enough" result), which matters here
+    because the power-iteration matrices are deliberately ill-conditioned
+    (singular values decay like sigma^(2q+1)).
+    """
+    return _mgs_pass(_mgs_pass(a))
+
+
+def _jacobi_pairs(k):
+    """Static (p, q) index arrays covering all column pairs, p < q."""
+    ps, qs = [], []
+    for p in range(k - 1):
+        for q in range(p + 1, k):
+            ps.append(p)
+            qs.append(q)
+    return jnp.array(ps, jnp.int32), jnp.array(qs, jnp.int32)
+
+
+@functools.partial(jax.jit, static_argnames=("sweeps",))
+def jacobi_svd(w, sweeps: int = 10):
+    """One-sided Jacobi SVD of ``w`` (n, k) with n >= k.
+
+    Returns (u, s, v) with ``w = u @ diag(s) @ v.T``; u is (n, k) with
+    orthonormal columns, s is (k,) descending, v is (k, k) orthogonal.
+
+    Method: right-multiply by plane rotations until columns are
+    orthogonal: ``w J1 J2 ... = b`` with b's columns orthogonal; then
+    s = ||b_j||, u = b / s, and v accumulates the rotations.
+    """
+    n, k = w.shape
+    dtype = w.dtype
+    eps0 = jnp.asarray(1e-30, dtype)
+    if k < 2:
+        # No column pairs to rotate: the SVD is just the column norm.
+        s = jnp.sqrt(jnp.sum(w * w, axis=0))
+        u = w / jnp.where(s > eps0, s, eps0)[None, :]
+        return u, s, jnp.eye(k, dtype=dtype)
+    ps, qs = _jacobi_pairs(k)
+    n_pairs = ps.shape[0]
+    eps = jnp.asarray(1e-30, dtype)
+
+    def rotate(carry, idx):
+        b, v = carry
+        p = ps[idx]
+        q = qs[idx]
+        bp = lax.dynamic_slice(b, (0, p), (n, 1))
+        bq = lax.dynamic_slice(b, (0, q), (n, 1))
+        app = jnp.sum(bp * bp)
+        aqq = jnp.sum(bq * bq)
+        apq = jnp.sum(bp * bq)
+
+        # Rotation angle zeroing the (p, q) Gram entry.
+        tau = (aqq - app) / (2.0 * jnp.where(jnp.abs(apq) > eps, apq, eps))
+        t = jnp.sign(tau) / (jnp.abs(tau) + jnp.sqrt(1.0 + tau * tau))
+        c = 1.0 / jnp.sqrt(1.0 + t * t)
+        s_ = c * t
+        # Skip (identity rotation) when already orthogonal.
+        no_op = jnp.abs(apq) <= eps * jnp.sqrt(app * aqq) + eps
+        c = jnp.where(no_op, jnp.asarray(1.0, dtype), c.astype(dtype))
+        s_ = jnp.where(no_op, jnp.asarray(0.0, dtype), s_.astype(dtype))
+
+        new_bp = c * bp - s_ * bq
+        new_bq = s_ * bp + c * bq
+        b = lax.dynamic_update_slice(b, new_bp, (0, p))
+        b = lax.dynamic_update_slice(b, new_bq, (0, q))
+
+        vp = lax.dynamic_slice(v, (0, p), (k, 1))
+        vq = lax.dynamic_slice(v, (0, q), (k, 1))
+        new_vp = c * vp - s_ * vq
+        new_vq = s_ * vp + c * vq
+        v = lax.dynamic_update_slice(v, new_vp, (0, p))
+        v = lax.dynamic_update_slice(v, new_vq, (0, q))
+        return (b, v)
+
+    def sweep_body(_, carry):
+        def pair_body(i, carry):
+            return rotate(carry, i)
+
+        return lax.fori_loop(0, n_pairs, pair_body, carry)
+
+    b, v = lax.fori_loop(0, sweeps, sweep_body, (w, jnp.eye(k, dtype=dtype)))
+
+    s = jnp.sqrt(jnp.sum(b * b, axis=0))
+    order = jnp.argsort(-s)
+    s = s[order]
+    b = b[:, order]
+    v = v[:, order]
+    u = b / jnp.where(s > eps, s, eps)[None, :]
+    return u, s, v
+
+
+@functools.partial(jax.jit, static_argnames=("sweeps",))
+def svd_small(y, sweeps: int = 10):
+    """SVD of a short-fat ``y`` (K, n), K <= n — the paper's Line 13.
+
+    Runs one-sided Jacobi on y^T (n, K): ``y^T = u_t s v_t^T`` gives
+    ``y = v_t s u_t^T``, so the left factors of y are ``v_t`` (K, K) and
+    the right factors are ``u_t`` (n, K).
+
+    Returns (u1, s, v): y = u1 @ diag(s) @ v.T with u1 (K, K), v (n, K).
+    """
+    ut, s, vt = jacobi_svd(y.T, sweeps=sweeps)
+    return vt, s, ut

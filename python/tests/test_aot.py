@@ -1,0 +1,131 @@
+"""AOT artifact integrity: manifest consistency + runtime-safe HLO.
+
+The critical invariant is that no artifact contains a custom-call — the
+pinned xla_extension 0.5.1 runtime on the rust side can only execute
+plain HLO ops (LAPACK custom-calls from jnp.linalg, or Mosaic calls from
+non-interpret Pallas, would fail at compile time in the coordinator).
+"""
+
+import hashlib
+import json
+import os
+
+import pytest
+
+ART = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+
+
+@pytest.fixture(scope="module")
+def manifest():
+    path = os.path.join(ART, "manifest.json")
+    if not os.path.exists(path):
+        pytest.skip("artifacts not built (run `make artifacts`)")
+    with open(path) as f:
+        return json.load(f)
+
+
+def test_manifest_lists_all_grid_configs(manifest):
+    from compile.aot import GRID
+
+    names = {e["name"] for e in manifest["artifacts"]}
+    for name, *_ in GRID:
+        assert name in names
+
+
+def test_artifact_files_exist_and_hash_match(manifest):
+    for e in manifest["artifacts"]:
+        path = os.path.join(ART, e["file"])
+        assert os.path.exists(path), e["file"]
+        with open(path) as f:
+            text = f.read()
+        assert hashlib.sha256(text.encode()).hexdigest() == e["sha256"], e["name"]
+
+
+def test_no_custom_calls_anywhere(manifest):
+    for e in manifest["artifacts"]:
+        with open(os.path.join(ART, e["file"])) as f:
+            text = f.read()
+        assert "custom-call" not in text and "custom_call" not in text, e["name"]
+
+
+def test_no_elided_constants(manifest):
+    """`as_hlo_text()` without print_large_constants=True abbreviates
+    >10-element constants as `constant({...})`; the 0.5.1 parser turns
+    those into garbage (observed: Jacobi pair tables of zeros → the
+    in-graph SVD silently never converges). Guard against regression."""
+    for e in manifest["artifacts"]:
+        with open(os.path.join(ART, e["file"])) as f:
+            text = f.read()
+        assert "{...}" not in text, e["name"]
+
+
+def test_hlo_entry_signature_matches_manifest(manifest):
+    """ENTRY parameter count and shapes line up with declared inputs."""
+    for e in manifest["artifacts"]:
+        with open(os.path.join(ART, e["file"])) as f:
+            text = f.read()
+        assert "ENTRY" in text, e["name"]
+        for i, inp in enumerate(e["inputs"]):
+            dims = ",".join(str(d) for d in inp["shape"])
+            want = f"f32[{dims}]" if inp["shape"] else "f32[]"
+            assert want in text, (e["name"], inp["name"], want)
+
+
+def test_srsvd_artifacts_declare_consistent_ranks(manifest):
+    for e in manifest["artifacts"]:
+        if e["op"] != "srsvd_scored":
+            continue
+        assert e["k"] < e["K"] <= e["m"], e["name"]
+        assert e["m"] <= e["n"], e["name"]
+        u_shape = e["outputs"][0]["shape"]
+        assert u_shape == [e["m"], e["k"]]
+
+
+def test_no_dense_xbar_materialization(manifest):
+    """Structural perf audit (EXPERIMENTS.md §Perf L1/L2): the whole point
+    of S-RSVD is that the dense centered matrix X - mu 1^T never exists.
+    In HLO that would appear as a subtract producing a full f32[m,n]
+    tensor; the fused kernels only subtract tile-shaped or (m,K)/(K,n)
+    intermediates. Assert no full-size subtract in any srsvd artifact."""
+    import re
+
+    for e in manifest["artifacts"]:
+        if e["op"] != "srsvd_scored":
+            continue
+        m, n = e["m"], e["n"]
+        with open(os.path.join(ART, e["file"])) as f:
+            text = f.read()
+        full = f"f32[{m},{n}]"
+        for line in text.splitlines():
+            if "subtract(" in line and line.lstrip().startswith(
+                tuple(f"{p}{full}" for p in ("", "ROOT "))
+            ) or re.match(rf"^\s*\S+\s*=\s*{re.escape(full)}.*subtract\(", line):
+                raise AssertionError(
+                    f"{e['name']}: dense Xbar materialized: {line.strip()}"
+                )
+
+
+def test_artifacts_roundtrip_numerics_in_jax():
+    """Execute one lowered artifact via jax itself and compare to direct
+    pipeline output — guards against lowering-time divergence."""
+    import numpy as np
+    import jax
+    import jax.numpy as jnp
+    from compile import model
+
+    m, n, k, K, q = 40, 200, 5, 10, 0
+    r = np.random.default_rng(0)
+    x = r.uniform(0, 1, size=(m, n)).astype(np.float32)
+    mu = x.mean(axis=1)
+    om = r.normal(size=(n, K)).astype(np.float32)
+
+    fn = lambda x, mu, om: model.srsvd_scored(x, mu, om, k=k, q=q)
+    direct = fn(jnp.asarray(x), jnp.asarray(mu), jnp.asarray(om))
+    compiled = jax.jit(fn).lower(
+        jax.ShapeDtypeStruct((m, n), jnp.float32),
+        jax.ShapeDtypeStruct((m,), jnp.float32),
+        jax.ShapeDtypeStruct((n, K), jnp.float32),
+    ).compile()
+    aot = compiled(jnp.asarray(x), jnp.asarray(mu), jnp.asarray(om))
+    for d, a in zip(direct, aot):
+        np.testing.assert_allclose(np.asarray(d), np.asarray(a), rtol=1e-5, atol=1e-5)

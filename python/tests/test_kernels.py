@@ -1,0 +1,155 @@
+"""L1 correctness: every Pallas kernel vs its pure-jnp oracle.
+
+Hypothesis sweeps shapes (including non-tile-multiple, degenerate and
+tall/fat extremes) and block sizes; this is the core signal that the
+fused rank-1 downdate is exact.
+"""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import (
+    matmul_rank1,
+    shifted_right,
+    shifted_left,
+    shifted_project,
+    row_mean,
+    shifted_mse,
+)
+from compile.kernels import ref
+
+settings.register_profile("ci", max_examples=25, deadline=None)
+settings.load_profile("ci")
+
+
+def _rng(seed):
+    return np.random.default_rng(seed)
+
+
+def _assert_close(got, want, tol=None):
+    got = np.asarray(got)
+    want = np.asarray(want)
+    scale = max(1.0, float(np.max(np.abs(want))))
+    tol = tol if tol is not None else 5e-5 * scale
+    np.testing.assert_allclose(got, want, atol=tol, rtol=5e-4)
+
+
+dims = st.integers(min_value=1, max_value=90)
+
+
+@given(m=dims, n=dims, p=st.integers(1, 40), seed=st.integers(0, 2**31 - 1))
+def test_matmul_rank1_matches_ref(m, n, p, seed):
+    r = _rng(seed)
+    a = jnp.asarray(r.normal(size=(m, n)), jnp.float32)
+    b = jnp.asarray(r.normal(size=(n, p)), jnp.float32)
+    u = jnp.asarray(r.normal(size=(m,)), jnp.float32)
+    v = jnp.asarray(r.normal(size=(p,)), jnp.float32)
+    _assert_close(matmul_rank1(a, b, u, v), ref.matmul_rank1_ref(a, b, u, v))
+
+
+@given(
+    m=st.integers(1, 50),
+    n=st.integers(1, 70),
+    p=st.integers(1, 20),
+    bm=st.sampled_from([1, 3, 8, 32, 128]),
+    bn=st.sampled_from([2, 16, 64, 256]),
+    bp=st.sampled_from([1, 4, 32, 128]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_matmul_rank1_block_size_invariance(m, n, p, bm, bn, bp, seed):
+    """The result must not depend on the VMEM tiling."""
+    r = _rng(seed)
+    a = jnp.asarray(r.normal(size=(m, n)), jnp.float32)
+    b = jnp.asarray(r.normal(size=(n, p)), jnp.float32)
+    u = jnp.asarray(r.normal(size=(m,)), jnp.float32)
+    v = jnp.asarray(r.normal(size=(p,)), jnp.float32)
+    got = matmul_rank1(a, b, u, v, bm=bm, bn=bn, bp=bp)
+    _assert_close(got, ref.matmul_rank1_ref(a, b, u, v))
+
+
+def test_matmul_rank1_zero_rank1_is_plain_matmul():
+    r = _rng(0)
+    a = jnp.asarray(r.normal(size=(17, 23)), jnp.float32)
+    b = jnp.asarray(r.normal(size=(23, 5)), jnp.float32)
+    z_u = jnp.zeros((17,), jnp.float32)
+    z_v = jnp.zeros((5,), jnp.float32)
+    _assert_close(matmul_rank1(a, b, z_u, z_v), a @ b)
+
+
+@given(m=dims, n=dims, K=st.integers(1, 30), seed=st.integers(0, 2**31 - 1))
+def test_shifted_right_never_materializes_but_matches(m, n, K, seed):
+    r = _rng(seed)
+    x = jnp.asarray(r.uniform(0, 1, size=(m, n)), jnp.float32)
+    om = jnp.asarray(r.normal(size=(n, K)), jnp.float32)
+    mu = jnp.mean(x, axis=1)
+    _assert_close(shifted_right(x, om, mu), ref.shifted_right_ref(x, om, mu))
+
+
+@given(m=dims, n=dims, K=st.integers(1, 30), seed=st.integers(0, 2**31 - 1))
+def test_shifted_left_matches(m, n, K, seed):
+    r = _rng(seed)
+    x = jnp.asarray(r.uniform(0, 1, size=(m, n)), jnp.float32)
+    q = jnp.asarray(r.normal(size=(m, K)), jnp.float32)
+    mu = jnp.mean(x, axis=1)
+    _assert_close(shifted_left(x, q, mu), ref.shifted_left_ref(x, q, mu))
+
+
+@given(m=dims, n=dims, K=st.integers(1, 30), seed=st.integers(0, 2**31 - 1))
+def test_shifted_project_matches(m, n, K, seed):
+    r = _rng(seed)
+    x = jnp.asarray(r.uniform(0, 1, size=(m, n)), jnp.float32)
+    q = jnp.asarray(r.normal(size=(m, K)), jnp.float32)
+    mu = jnp.mean(x, axis=1)
+    _assert_close(shifted_project(x, q, mu), ref.shifted_project_ref(x, q, mu))
+
+
+@given(m=dims, n=dims, seed=st.integers(0, 2**31 - 1))
+def test_row_mean_matches(m, n, seed):
+    r = _rng(seed)
+    x = jnp.asarray(r.normal(size=(m, n)), jnp.float32)
+    _assert_close(row_mean(x), ref.row_mean_ref(x))
+
+
+@given(
+    m=dims,
+    n=dims,
+    bm=st.sampled_from([1, 8, 128]),
+    bn=st.sampled_from([4, 64, 512]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_row_mean_block_invariance(m, n, bm, bn, seed):
+    r = _rng(seed)
+    x = jnp.asarray(r.normal(size=(m, n)), jnp.float32)
+    _assert_close(row_mean(x, bm=bm, bn=bn), ref.row_mean_ref(x))
+
+
+@given(m=dims, n=dims, seed=st.integers(0, 2**31 - 1))
+def test_shifted_mse_matches(m, n, seed):
+    r = _rng(seed)
+    x = jnp.asarray(r.uniform(0, 1, size=(m, n)), jnp.float32)
+    rec = jnp.asarray(r.normal(size=(m, n)), jnp.float32)
+    mu = jnp.mean(x, axis=1)
+    got = shifted_mse(x, mu, rec)
+    want = ref.shifted_mse_ref(x, mu, rec)
+    np.testing.assert_allclose(float(got), float(want), rtol=2e-3)
+
+
+def test_shifted_mse_perfect_reconstruction_is_zero():
+    r = _rng(3)
+    x = jnp.asarray(r.uniform(0, 1, size=(30, 80)), jnp.float32)
+    mu = jnp.mean(x, axis=1)
+    rec = x - mu[:, None]
+    assert float(shifted_mse(x, mu, rec)) < 1e-8
+
+
+def test_shift_identity_three_forms_consistent():
+    """The three shifted products agree with each other via transposes."""
+    r = _rng(7)
+    x = jnp.asarray(r.uniform(0, 1, size=(25, 60)), jnp.float32)
+    q = jnp.asarray(r.normal(size=(25, 6)), jnp.float32)
+    mu = jnp.mean(x, axis=1)
+    left = shifted_left(x, q, mu)      # (n, K) = Xbar^T Q
+    proj = shifted_project(x, q, mu)   # (K, n) = Q^T Xbar
+    _assert_close(left.T, proj)

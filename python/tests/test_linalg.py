@@ -1,0 +1,113 @@
+"""Pure-jax linalg: MGS QR and one-sided Jacobi SVD vs numpy.linalg."""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.linalg import mgs_qr, jacobi_svd, svd_small
+from compile.model import _svd_small_gram
+
+settings.register_profile("ci", max_examples=20, deadline=None)
+settings.load_profile("ci")
+
+
+@given(
+    m=st.integers(2, 120),
+    k=st.integers(1, 24),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_mgs_qr_orthonormal_and_span(m, k, seed):
+    k = min(k, m)
+    r = np.random.default_rng(seed)
+    a = r.normal(size=(m, k)).astype(np.float32)
+    q = np.asarray(mgs_qr(jnp.asarray(a)))
+    # Orthonormal columns.
+    np.testing.assert_allclose(q.T @ q, np.eye(k), atol=2e-5)
+    # Span preserved: projecting A onto Q loses nothing.
+    np.testing.assert_allclose(q @ (q.T @ a), a, atol=1e-3, rtol=1e-3)
+
+
+def test_mgs_qr_rank_deficient_no_nan():
+    a = np.zeros((10, 4), np.float32)
+    a[:, 0] = 1.0
+    a[:, 1] = 1.0  # duplicate column -> rank deficient
+    q = np.asarray(mgs_qr(jnp.asarray(a)))
+    assert np.isfinite(q).all()
+
+
+def test_mgs_qr_ill_conditioned_reorthogonalization():
+    """Second MGS pass must hold orthogonality on a kappa~1e6 matrix."""
+    r = np.random.default_rng(0)
+    u, _ = np.linalg.qr(r.normal(size=(80, 8)))
+    s = np.logspace(0, -6, 8)
+    v, _ = np.linalg.qr(r.normal(size=(8, 8)))
+    a = (u * s) @ v
+    q = np.asarray(mgs_qr(jnp.asarray(a.astype(np.float32))))
+    assert np.max(np.abs(q.T @ q - np.eye(8))) < 5e-4
+
+
+@given(
+    n=st.integers(2, 100),
+    k=st.integers(1, 12),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_jacobi_svd_matches_numpy(n, k, seed):
+    k = min(k, n)
+    r = np.random.default_rng(seed)
+    w = r.normal(size=(n, k)).astype(np.float32)
+    u, s, v = (np.asarray(t) for t in jacobi_svd(jnp.asarray(w)))
+    s_np = np.linalg.svd(w, compute_uv=False)
+    scale = max(1.0, s_np[0])
+    np.testing.assert_allclose(s, s_np, atol=2e-4 * scale, rtol=2e-4)
+    # Factorization reconstructs w.
+    np.testing.assert_allclose((u * s) @ v.T, w, atol=2e-4 * scale)
+    # u has orthonormal columns where s > 0.
+    nz = s > 1e-5 * scale
+    g = (u[:, nz]).T @ u[:, nz]
+    np.testing.assert_allclose(g, np.eye(int(nz.sum())), atol=2e-3)
+    # v orthogonal.
+    np.testing.assert_allclose(v.T @ v, np.eye(k), atol=2e-3)
+
+
+def test_jacobi_svd_descending_order():
+    r = np.random.default_rng(5)
+    w = r.normal(size=(50, 9)).astype(np.float32)
+    _, s, _ = jacobi_svd(jnp.asarray(w))
+    s = np.asarray(s)
+    assert (np.diff(s) <= 1e-6).all()
+
+
+@given(
+    K=st.integers(2, 12),
+    n=st.integers(12, 120),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_svd_small_short_fat(K, n, seed):
+    K = min(K, n)
+    r = np.random.default_rng(seed)
+    y = r.normal(size=(K, n)).astype(np.float32)
+    u1, s, v = (np.asarray(t) for t in svd_small(jnp.asarray(y)))
+    scale = max(1.0, float(np.max(np.abs(y))) * np.sqrt(n))
+    np.testing.assert_allclose((u1 * s) @ v.T, y, atol=5e-4 * scale)
+    np.testing.assert_allclose(u1.T @ u1, np.eye(K), atol=2e-3)
+
+
+@given(
+    K=st.integers(2, 10),
+    n=st.integers(16, 150),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_svd_small_gram_matches_jacobi_on_singvals(K, n, seed):
+    K = min(K, n)
+    r = np.random.default_rng(seed)
+    y = r.normal(size=(K, n)).astype(np.float32)
+    _, s_j, _ = svd_small(jnp.asarray(y))
+    u_g, s_g, v_g = _svd_small_gram(jnp.asarray(y), sweeps=10)
+    s_np = np.linalg.svd(y, compute_uv=False)
+    scale = max(1.0, s_np[0])
+    np.testing.assert_allclose(np.asarray(s_j), s_np, atol=5e-4 * scale, rtol=1e-3)
+    np.testing.assert_allclose(np.asarray(s_g), s_np, atol=5e-3 * scale, rtol=5e-3)
+    # Gram route also reconstructs.
+    rec = (np.asarray(u_g) * np.asarray(s_g)) @ np.asarray(v_g).T
+    np.testing.assert_allclose(rec, y, atol=1e-2 * scale)

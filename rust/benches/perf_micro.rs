@@ -1,0 +1,129 @@
+//! Perf microbenches: the hot paths behind every experiment —
+//! blocked GEMM (with plan sweep), the fused rank-1 product, sparse
+//! SpMM, Householder QR, Jacobi SVD, and the artifact engine's
+//! end-to-end execute. Drives the EXPERIMENTS.md §Perf log.
+//!
+//! Run: `cargo bench --bench perf_micro`.
+
+use srsvd::bench::{Bencher, Table};
+use srsvd::linalg::{
+    gemm, householder_qr, jacobi_svd, matmul, Csr, Dense, JacobiOpts, MatmulPlan,
+};
+use srsvd::rng::{Rng, Xoshiro256pp};
+use srsvd::util::timer::fmt_duration;
+
+fn gflops(flops: f64, secs: f64) -> String {
+    format!("{:.2}", flops / secs / 1e9)
+}
+
+fn main() {
+    let b = Bencher::from_env();
+    let mut rng = Xoshiro256pp::seed_from_u64(0);
+
+    println!("== GEMM plan sweep (512x512x512 f64) ==");
+    let a = Dense::gaussian(512, 512, &mut rng);
+    let c = Dense::gaussian(512, 512, &mut rng);
+    let flops = 2.0 * 512f64.powi(3);
+    let mut t = Table::new(&["mc", "kc", "time", "GFLOP/s"]);
+    for (mc, kc) in [(16, 64), (32, 128), (64, 256), (128, 256), (64, 512), (256, 256)] {
+        let s = b.run(&format!("gemm {mc}/{kc}"), || {
+            gemm::matmul_with_plan(&a, &c, MatmulPlan { mc, kc })
+        });
+        t.row(&[
+            mc.to_string(),
+            kc.to_string(),
+            fmt_duration(s.mean_s),
+            gflops(flops, s.mean_s),
+        ]);
+    }
+    print!("{}", t.render());
+
+    println!("\n== fused rank-1 vs matmul+subtract (200x2000 · 2000x40) ==");
+    let x = Dense::gaussian(200, 2000, &mut rng);
+    let om = Dense::gaussian(2000, 40, &mut rng);
+    let u: Vec<f64> = (0..200).map(|_| rng.next_gaussian()).collect();
+    let v: Vec<f64> = (0..40).map(|_| rng.next_gaussian()).collect();
+    let s1 = b.run("fused", || gemm::matmul_rank1(&x, &om, &u, &v));
+    let s2 = b.run("unfused", || {
+        let mut c = matmul(&x, &om);
+        for i in 0..200 {
+            for j in 0..40 {
+                c[(i, j)] -= u[i] * v[j];
+            }
+        }
+        c
+    });
+    println!(
+        "  fused {}  unfused {}  ({:+.1}%)",
+        fmt_duration(s1.mean_s),
+        fmt_duration(s2.mean_s),
+        (s1.mean_s / s2.mean_s - 1.0) * 100.0
+    );
+
+    println!("\n== sparse SpMM (2000x20000, densities) x 20 ==");
+    let mut t = Table::new(&["density", "nnz", "time", "GFLOP/s(nnz)"]);
+    for density in [0.001, 0.01, 0.05] {
+        let sp = Csr::random(2000, 20000, density, &mut rng, |r| r.next_uniform());
+        let bmat = Dense::gaussian(20000, 20, &mut rng);
+        let s = b.run(&format!("spmm d={density}"), || sp.matmul_dense(&bmat));
+        t.row(&[
+            density.to_string(),
+            sp.nnz().to_string(),
+            fmt_duration(s.mean_s),
+            gflops(2.0 * sp.nnz() as f64 * 20.0, s.mean_s),
+        ]);
+    }
+    print!("{}", t.render());
+
+    println!("\n== Householder QR (m x 20) ==");
+    let mut t = Table::new(&["m", "time"]);
+    for m in [500usize, 2000, 8000] {
+        let a = Dense::gaussian(m, 20, &mut rng);
+        let s = b.run(&format!("qr {m}"), || householder_qr(&a));
+        t.row(&[m.to_string(), fmt_duration(s.mean_s)]);
+    }
+    print!("{}", t.render());
+
+    println!("\n== one-sided Jacobi SVD (n x K) ==");
+    let mut t = Table::new(&["n", "K", "time"]);
+    for (n, k) in [(1000usize, 20usize), (4000, 20), (1000, 64)] {
+        let w = Dense::gaussian(n, k, &mut rng);
+        let s = b.run(&format!("jacobi {n}x{k}"), || {
+            jacobi_svd(&w, JacobiOpts::default())
+        });
+        t.row(&[n.to_string(), k.to_string(), fmt_duration(s.mean_s)]);
+    }
+    print!("{}", t.render());
+
+    // Artifact engine end-to-end (compile once, execute many).
+    let dir = std::path::Path::new("artifacts");
+    if dir.join("manifest.json").exists() {
+        println!("\n== artifact engine: srsvd_scored 100x1000 k=10 q=0 ==");
+        let mut ex = srsvd::runtime::Executor::new(dir).unwrap();
+        let spec = ex.manifest().find_srsvd(100, 1000, 10, 0).unwrap().clone();
+        let compile_s = ex.ensure_compiled(&spec.name).unwrap();
+        let x = Dense::from_fn(100, 1000, |_, _| rng.next_uniform());
+        let mu = x.row_means();
+        let omega = Dense::gaussian(1000, spec.kk, &mut rng);
+        let s = b.run("artifact execute", || {
+            ex.run_srsvd(&spec, &x, &mu, &omega).unwrap()
+        });
+        println!(
+            "  compile(once)={}  execute mean={} p95={}",
+            fmt_duration(compile_s),
+            fmt_duration(s.mean_s),
+            fmt_duration(s.p95_s)
+        );
+        // Native comparison point.
+        let cfg = srsvd::svd::SvdConfig::paper(10);
+        let sn = b.run("native same config", || {
+            let mut r = Xoshiro256pp::seed_from_u64(3);
+            srsvd::svd::ShiftedRsvd::new(cfg)
+                .factorize(&x, &mu, &mut r)
+                .unwrap()
+        });
+        println!("  native engine same config: {}", fmt_duration(sn.mean_s));
+    } else {
+        println!("\n(artifacts not built; skipping artifact-engine bench)");
+    }
+}

@@ -1,0 +1,33 @@
+//! Bench: regenerate Table 1 (right) — word co-occurrence matrices at
+//! several target-vocabulary sizes n, with the sparse (never-densified)
+//! S-RSVD path.
+//!
+//! Run: `cargo bench --bench table1_words`
+//! (SRSVD_FULL=1 runs the paper's n grid up to 3e5 — slow.)
+
+use srsvd::experiments::table1;
+
+fn main() {
+    let quick = srsvd::experiments::quick_mode();
+    let full = std::env::var("SRSVD_FULL").as_deref() == Ok("1");
+    let (ns, runs): (Vec<usize>, usize) = if quick {
+        (vec![1000, 4000], 3)
+    } else if full {
+        (vec![1000, 10_000, 100_000, 300_000], 30)
+    } else {
+        (vec![1000, 4000, 10_000], 8)
+    };
+
+    println!("== Table 1 (right): word data (m=1000 contexts), {runs} runs ==");
+    let stats: Vec<_> = ns
+        .iter()
+        .map(|&n| {
+            let pairs = (n * 50).min(4_000_000);
+            let k = 100.min(n / 4);
+            eprintln!("  building + factorizing n={n} (k={k}, pairs={pairs}) ...");
+            table1::words_stats(n, pairs, k, runs, 42)
+        })
+        .collect();
+    print!("{}", table1::render(&stats));
+    println!("\npaper: S-RSVD MSE below RSVD at every n; p1=p2=0.00; WR 70-77%.");
+}

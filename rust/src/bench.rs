@@ -1,0 +1,208 @@
+//! Mini benchmark harness (criterion is unavailable offline).
+//!
+//! Usage pattern in `rust/benches/*.rs` (all `harness = false`):
+//!
+//! ```no_run
+//! use srsvd::bench::{Bencher, Table};
+//! let mut b = Bencher::from_env();
+//! let stats = b.run("matmul 256", || { /* work */ });
+//! println!("{stats}");
+//! ```
+//!
+//! Provides warmup, adaptive iteration counts, mean/median/p95 and a
+//! fixed-width table printer whose rows mirror the paper's tables.
+
+use std::time::Instant;
+
+use crate::stats::{mean, median, quantile, std_dev};
+
+/// Timing statistics for one benchmark case.
+#[derive(Debug, Clone)]
+pub struct BenchStats {
+    pub name: String,
+    pub iters: usize,
+    pub mean_s: f64,
+    pub median_s: f64,
+    pub p95_s: f64,
+    pub std_s: f64,
+}
+
+impl std::fmt::Display for BenchStats {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "{:<44} {:>10} {:>12} {:>12} {:>12}  (n={})",
+            self.name,
+            crate::util::timer::fmt_duration(self.mean_s),
+            crate::util::timer::fmt_duration(self.median_s),
+            crate::util::timer::fmt_duration(self.p95_s),
+            crate::util::timer::fmt_duration(self.std_s),
+            self.iters
+        )
+    }
+}
+
+/// Benchmark runner with a time budget per case.
+#[derive(Debug, Clone)]
+pub struct Bencher {
+    /// Minimum measured iterations.
+    pub min_iters: usize,
+    /// Maximum measured iterations.
+    pub max_iters: usize,
+    /// Target wall-clock budget per case (seconds).
+    pub budget_s: f64,
+    /// Warmup iterations.
+    pub warmup: usize,
+}
+
+impl Default for Bencher {
+    fn default() -> Self {
+        Bencher { min_iters: 3, max_iters: 50, budget_s: 2.0, warmup: 1 }
+    }
+}
+
+impl Bencher {
+    /// Honor `SRSVD_BENCH_QUICK=1` (CI smoke) and `SRSVD_BENCH_BUDGET`
+    /// (seconds per case).
+    pub fn from_env() -> Self {
+        let mut b = Bencher::default();
+        if std::env::var("SRSVD_BENCH_QUICK").as_deref() == Ok("1") {
+            b.min_iters = 1;
+            b.max_iters = 3;
+            b.budget_s = 0.3;
+            b.warmup = 0;
+        }
+        if let Ok(s) = std::env::var("SRSVD_BENCH_BUDGET") {
+            if let Ok(v) = s.parse::<f64>() {
+                b.budget_s = v;
+            }
+        }
+        b
+    }
+
+    /// Measure `f`, returning aggregate stats. The closure's return value
+    /// is passed through `std::hint::black_box` to keep the work alive.
+    pub fn run<T>(&self, name: &str, mut f: impl FnMut() -> T) -> BenchStats {
+        for _ in 0..self.warmup {
+            std::hint::black_box(f());
+        }
+        let mut times = Vec::new();
+        let start = Instant::now();
+        while times.len() < self.min_iters
+            || (times.len() < self.max_iters
+                && start.elapsed().as_secs_f64() < self.budget_s)
+        {
+            let t = Instant::now();
+            std::hint::black_box(f());
+            times.push(t.elapsed().as_secs_f64());
+        }
+        BenchStats {
+            name: name.to_string(),
+            iters: times.len(),
+            mean_s: mean(&times),
+            median_s: median(&times),
+            p95_s: quantile(&times, 0.95),
+            std_s: std_dev(&times),
+        }
+    }
+}
+
+/// Fixed-width table printer for experiment/bench reports.
+#[derive(Debug, Default)]
+pub struct Table {
+    header: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(header: &[&str]) -> Table {
+        Table {
+            header: header.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: &[String]) {
+        assert_eq!(cells.len(), self.header.len(), "table arity");
+        self.rows.push(cells.to_vec());
+    }
+
+    /// Render with per-column auto-width.
+    pub fn render(&self) -> String {
+        let ncol = self.header.len();
+        let mut widths: Vec<usize> = self.header.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        let mut out = String::new();
+        let fmt_row = |cells: &[String], widths: &[usize]| -> String {
+            let mut line = String::new();
+            for i in 0..ncol {
+                if i > 0 {
+                    line.push_str("  ");
+                }
+                line.push_str(&format!("{:>w$}", cells[i], w = widths[i]));
+            }
+            line
+        };
+        out.push_str(&fmt_row(&self.header, &widths));
+        out.push('\n');
+        out.push_str(&"-".repeat(widths.iter().sum::<usize>() + 2 * (ncol - 1)));
+        out.push('\n');
+        for row in &self.rows {
+            out.push_str(&fmt_row(row, &widths));
+            out.push('\n');
+        }
+        out
+    }
+}
+
+/// Format a float in compact scientific-ish style for table cells.
+pub fn fmt_sci(x: f64) -> String {
+    if x == 0.0 {
+        "0".into()
+    } else if x.abs() >= 0.01 && x.abs() < 1e5 {
+        format!("{x:.4}")
+    } else {
+        format!("{x:.3e}")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bencher_respects_min_iters() {
+        let b = Bencher { min_iters: 4, max_iters: 5, budget_s: 0.0, warmup: 0 };
+        let s = b.run("noop", || 1 + 1);
+        assert_eq!(s.iters, 4);
+        assert!(s.mean_s >= 0.0);
+    }
+
+    #[test]
+    fn table_renders_aligned() {
+        let mut t = Table::new(&["k", "mse"]);
+        t.row(&["1".into(), "0.5".into()]);
+        t.row(&["100".into(), "0.25".into()]);
+        let r = t.render();
+        assert!(r.contains("k"));
+        assert!(r.lines().count() == 4);
+    }
+
+    #[test]
+    #[should_panic(expected = "table arity")]
+    fn table_rejects_wrong_arity() {
+        let mut t = Table::new(&["a", "b"]);
+        t.row(&["only-one".into()]);
+    }
+
+    #[test]
+    fn fmt_sci_ranges() {
+        assert_eq!(fmt_sci(0.0), "0");
+        assert_eq!(fmt_sci(0.5), "0.5000");
+        assert!(fmt_sci(1.95e-5).contains('e'));
+    }
+}

@@ -1,0 +1,221 @@
+//! Declarative CLI argument parser (clap is unavailable offline).
+//!
+//! Supports `--flag`, `--key value`, `--key=value`, positionals, and
+//! subcommands, with generated `--help` text. Used by `rust/src/main.rs`
+//! and the examples.
+
+use std::collections::BTreeMap;
+
+use crate::util::{Error, Result};
+
+/// One declared option.
+#[derive(Debug, Clone)]
+pub struct OptSpec {
+    pub name: &'static str,
+    pub help: &'static str,
+    /// `true` for boolean flags (no value).
+    pub is_flag: bool,
+    pub default: Option<&'static str>,
+}
+
+/// A declarative argument parser.
+#[derive(Debug, Clone, Default)]
+pub struct ArgSpec {
+    pub about: &'static str,
+    opts: Vec<OptSpec>,
+}
+
+impl ArgSpec {
+    pub fn new(about: &'static str) -> ArgSpec {
+        ArgSpec { about, opts: Vec::new() }
+    }
+
+    pub fn flag(mut self, name: &'static str, help: &'static str) -> Self {
+        self.opts.push(OptSpec { name, help, is_flag: true, default: None });
+        self
+    }
+
+    pub fn opt(mut self, name: &'static str, default: &'static str, help: &'static str) -> Self {
+        self.opts
+            .push(OptSpec { name, help, is_flag: false, default: Some(default) });
+        self
+    }
+
+    /// Required option (no default).
+    pub fn req(mut self, name: &'static str, help: &'static str) -> Self {
+        self.opts.push(OptSpec { name, help, is_flag: false, default: None });
+        self
+    }
+
+    pub fn usage(&self, prog: &str) -> String {
+        let mut out = format!("{}\n\nUSAGE: {prog} [OPTIONS]\n\nOPTIONS:\n", self.about);
+        for o in &self.opts {
+            let lhs = if o.is_flag {
+                format!("--{}", o.name)
+            } else if let Some(d) = o.default {
+                format!("--{} <value = {d}>", o.name)
+            } else {
+                format!("--{} <value, required>", o.name)
+            };
+            out.push_str(&format!("  {lhs:<34} {}\n", o.help));
+        }
+        out.push_str("  --help                             show this message\n");
+        out
+    }
+
+    /// Parse a raw argv slice (without the program name).
+    pub fn parse(&self, args: &[String]) -> Result<Args> {
+        let mut values: BTreeMap<String, String> = BTreeMap::new();
+        let mut flags: Vec<String> = Vec::new();
+        let mut positional: Vec<String> = Vec::new();
+        let mut i = 0;
+        while i < args.len() {
+            let a = &args[i];
+            if a == "--help" || a == "-h" {
+                return Ok(Args { help: true, ..Args::default() });
+            }
+            if let Some(body) = a.strip_prefix("--") {
+                let (name, inline) = match body.split_once('=') {
+                    Some((n, v)) => (n.to_string(), Some(v.to_string())),
+                    None => (body.to_string(), None),
+                };
+                let spec = self
+                    .opts
+                    .iter()
+                    .find(|o| o.name == name)
+                    .ok_or_else(|| Error::Invalid(format!("unknown option --{name}")))?;
+                if spec.is_flag {
+                    if inline.is_some() {
+                        return Err(Error::Invalid(format!("--{name} takes no value")));
+                    }
+                    flags.push(name);
+                } else {
+                    let value = match inline {
+                        Some(v) => v,
+                        None => {
+                            i += 1;
+                            args.get(i)
+                                .cloned()
+                                .ok_or_else(|| Error::Invalid(format!("--{name} needs a value")))?
+                        }
+                    };
+                    values.insert(name, value);
+                }
+            } else {
+                positional.push(a.clone());
+            }
+            i += 1;
+        }
+        // Fill defaults; detect missing required options.
+        for o in &self.opts {
+            if o.is_flag || values.contains_key(o.name) {
+                continue;
+            }
+            match o.default {
+                Some(d) => {
+                    values.insert(o.name.to_string(), d.to_string());
+                }
+                None => {
+                    return Err(Error::Invalid(format!("missing required --{}", o.name)));
+                }
+            }
+        }
+        Ok(Args { values, flags, positional, help: false })
+    }
+}
+
+/// Parsed arguments.
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    values: BTreeMap<String, String>,
+    flags: Vec<String>,
+    pub positional: Vec<String>,
+    pub help: bool,
+}
+
+impl Args {
+    pub fn get(&self, name: &str) -> &str {
+        self.values
+            .get(name)
+            .unwrap_or_else(|| panic!("option {name} not declared"))
+    }
+
+    pub fn get_usize(&self, name: &str) -> Result<usize> {
+        self.get(name)
+            .parse()
+            .map_err(|_| Error::Invalid(format!("--{name}: expected integer, got {:?}", self.get(name))))
+    }
+
+    pub fn get_u64(&self, name: &str) -> Result<u64> {
+        self.get(name)
+            .parse()
+            .map_err(|_| Error::Invalid(format!("--{name}: expected integer, got {:?}", self.get(name))))
+    }
+
+    pub fn get_f64(&self, name: &str) -> Result<f64> {
+        self.get(name)
+            .parse()
+            .map_err(|_| Error::Invalid(format!("--{name}: expected number, got {:?}", self.get(name))))
+    }
+
+    pub fn has_flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn spec() -> ArgSpec {
+        ArgSpec::new("test tool")
+            .opt("k", "10", "rank")
+            .opt("seed", "0", "rng seed")
+            .req("input", "input path")
+            .flag("quick", "thin grids")
+    }
+
+    fn sv(items: &[&str]) -> Vec<String> {
+        items.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn parses_all_forms() {
+        let a = spec()
+            .parse(&sv(&["--k", "25", "--quick", "--input=data.bin", "pos1"]))
+            .unwrap();
+        assert_eq!(a.get_usize("k").unwrap(), 25);
+        assert_eq!(a.get("seed"), "0"); // default
+        assert_eq!(a.get("input"), "data.bin");
+        assert!(a.has_flag("quick"));
+        assert_eq!(a.positional, vec!["pos1"]);
+    }
+
+    #[test]
+    fn missing_required_errors() {
+        assert!(spec().parse(&sv(&["--k", "3"])).is_err());
+    }
+
+    #[test]
+    fn unknown_option_errors() {
+        assert!(spec().parse(&sv(&["--bogus", "1", "--input", "x"])).is_err());
+    }
+
+    #[test]
+    fn flag_with_value_errors() {
+        assert!(spec().parse(&sv(&["--quick=1", "--input", "x"])).is_err());
+    }
+
+    #[test]
+    fn help_short_circuits() {
+        let a = spec().parse(&sv(&["--help"])).unwrap();
+        assert!(a.help);
+        assert!(spec().usage("prog").contains("--input"));
+    }
+
+    #[test]
+    fn bad_numbers_error() {
+        let a = spec().parse(&sv(&["--k", "lots", "--input", "x"])).unwrap();
+        assert!(a.get_usize("k").is_err());
+    }
+}

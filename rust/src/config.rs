@@ -1,0 +1,202 @@
+//! Configuration system: a small key=value format (INI-like sections)
+//! parsed into typed service/experiment configs, with env-var and CLI
+//! overrides layered on top.
+//!
+//! The offline environment has no serde/toml; this covers the subset a
+//! deployment needs:
+//!
+//! ```text
+//! # srsvd.conf
+//! [service]
+//! native_workers = 4
+//! queue_capacity = 256
+//! artifact_dir   = artifacts
+//!
+//! [svd]
+//! k           = 10
+//! oversample  = 10
+//! power_iters = 0
+//! basis       = direct        # direct | qr-update-paper | qr-update-exact
+//! small_svd   = jacobi        # jacobi | gram
+//! ```
+
+use std::collections::BTreeMap;
+use std::path::PathBuf;
+
+use crate::coordinator::CoordinatorConfig;
+use crate::svd::{BasisMethod, SmallSvdMethod, SvdConfig};
+use crate::util::{Error, Result};
+
+/// Raw parsed file: section -> key -> value.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct RawConfig {
+    sections: BTreeMap<String, BTreeMap<String, String>>,
+}
+
+impl RawConfig {
+    /// Parse the key=value format. `#` and `;` start comments; keys
+    /// outside a section go into the "" section.
+    pub fn parse(text: &str) -> Result<RawConfig> {
+        let mut out = RawConfig::default();
+        let mut section = String::new();
+        for (lineno, raw) in text.lines().enumerate() {
+            let line = match raw.find(['#', ';']) {
+                Some(i) => &raw[..i],
+                None => raw,
+            }
+            .trim();
+            if line.is_empty() {
+                continue;
+            }
+            if let Some(name) = line.strip_prefix('[').and_then(|s| s.strip_suffix(']')) {
+                section = name.trim().to_string();
+                out.sections.entry(section.clone()).or_default();
+                continue;
+            }
+            let Some((key, value)) = line.split_once('=') else {
+                return Err(Error::Invalid(format!(
+                    "config line {}: expected key = value, got {raw:?}",
+                    lineno + 1
+                )));
+            };
+            out.sections
+                .entry(section.clone())
+                .or_default()
+                .insert(key.trim().to_string(), value.trim().to_string());
+        }
+        Ok(out)
+    }
+
+    pub fn load(path: &std::path::Path) -> Result<RawConfig> {
+        RawConfig::parse(&std::fs::read_to_string(path)?)
+    }
+
+    pub fn get(&self, section: &str, key: &str) -> Option<&str> {
+        self.sections.get(section)?.get(key).map(|s| s.as_str())
+    }
+
+    fn get_usize(&self, section: &str, key: &str) -> Result<Option<usize>> {
+        match self.get(section, key) {
+            None => Ok(None),
+            Some(v) => v
+                .parse::<usize>()
+                .map(Some)
+                .map_err(|_| Error::Invalid(format!("{section}.{key}: not an integer: {v:?}"))),
+        }
+    }
+
+    /// Build the service config (defaults where unset).
+    pub fn coordinator(&self) -> Result<CoordinatorConfig> {
+        let mut cfg = CoordinatorConfig::default();
+        if let Some(w) = self.get_usize("service", "native_workers")? {
+            cfg.native_workers = w.max(1);
+        }
+        if let Some(c) = self.get_usize("service", "queue_capacity")? {
+            cfg.queue_capacity = c.max(1);
+        }
+        match self.get("service", "artifact_dir") {
+            Some("off") | Some("none") => cfg.artifact_dir = None,
+            Some(dir) => cfg.artifact_dir = Some(PathBuf::from(dir)),
+            None => {}
+        }
+        Ok(cfg)
+    }
+
+    /// Build the SVD config (defaults where unset).
+    pub fn svd(&self) -> Result<SvdConfig> {
+        let mut cfg = SvdConfig::default();
+        if let Some(k) = self.get_usize("svd", "k")? {
+            cfg.k = k;
+        }
+        if let Some(o) = self.get_usize("svd", "oversample")? {
+            cfg.oversample = o;
+        }
+        if let Some(q) = self.get_usize("svd", "power_iters")? {
+            cfg.power_iters = q;
+        }
+        if let Some(b) = self.get("svd", "basis") {
+            cfg.basis = parse_basis(b)?;
+        }
+        if let Some(s) = self.get("svd", "small_svd") {
+            cfg.small_svd = parse_small_svd(s)?;
+        }
+        Ok(cfg)
+    }
+}
+
+pub fn parse_basis(s: &str) -> Result<BasisMethod> {
+    match s {
+        "direct" => Ok(BasisMethod::Direct),
+        "qr-update-paper" => Ok(BasisMethod::QrUpdatePaper),
+        "qr-update-exact" => Ok(BasisMethod::QrUpdateExact),
+        _ => Err(Error::Invalid(format!(
+            "unknown basis {s:?} (direct | qr-update-paper | qr-update-exact)"
+        ))),
+    }
+}
+
+pub fn parse_small_svd(s: &str) -> Result<SmallSvdMethod> {
+    match s {
+        "jacobi" => Ok(SmallSvdMethod::Jacobi),
+        "gram" => Ok(SmallSvdMethod::GramEig),
+        _ => Err(Error::Invalid(format!("unknown small_svd {s:?} (jacobi | gram)"))),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = "
+# demo
+[service]
+native_workers = 3
+queue_capacity = 8
+artifact_dir = artifacts   ; inline comment
+
+[svd]
+k = 25
+oversample = 25
+power_iters = 2
+basis = qr-update-exact
+small_svd = gram
+";
+
+    #[test]
+    fn full_roundtrip() {
+        let raw = RawConfig::parse(SAMPLE).unwrap();
+        let svc = raw.coordinator().unwrap();
+        assert_eq!(svc.native_workers, 3);
+        assert_eq!(svc.queue_capacity, 8);
+        assert_eq!(svc.artifact_dir, Some(PathBuf::from("artifacts")));
+        let svd = raw.svd().unwrap();
+        assert_eq!(svd.k, 25);
+        assert_eq!(svd.sample_width(), 50);
+        assert_eq!(svd.power_iters, 2);
+        assert_eq!(svd.basis, BasisMethod::QrUpdateExact);
+        assert_eq!(svd.small_svd, SmallSvdMethod::GramEig);
+    }
+
+    #[test]
+    fn defaults_when_missing() {
+        let raw = RawConfig::parse("").unwrap();
+        let svd = raw.svd().unwrap();
+        assert_eq!(svd.k, SvdConfig::default().k);
+    }
+
+    #[test]
+    fn artifact_dir_off() {
+        let raw = RawConfig::parse("[service]\nartifact_dir = off\n").unwrap();
+        assert_eq!(raw.coordinator().unwrap().artifact_dir, None);
+    }
+
+    #[test]
+    fn errors_are_located() {
+        let err = RawConfig::parse("[svd]\nk 10\n").unwrap_err();
+        assert!(format!("{err}").contains("line 2"));
+        let raw = RawConfig::parse("[svd]\nk = ten\n").unwrap();
+        assert!(raw.svd().is_err());
+        assert!(parse_basis("bogus").is_err());
+        assert!(parse_small_svd("bogus").is_err());
+    }
+}

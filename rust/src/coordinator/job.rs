@@ -1,0 +1,168 @@
+//! Job types for the factorization service.
+
+use crate::linalg::{Csr, Dense};
+use crate::svd::{Factorization, SvdConfig, SvdEngine};
+use crate::util::Result;
+
+/// Monotonic job identifier.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct JobId(pub u64);
+
+impl std::fmt::Display for JobId {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "job-{}", self.0)
+    }
+}
+
+/// The data matrix of a job.
+#[derive(Debug, Clone)]
+pub enum MatrixInput {
+    Dense(Dense),
+    Sparse(Csr),
+}
+
+impl MatrixInput {
+    pub fn shape(&self) -> (usize, usize) {
+        match self {
+            MatrixInput::Dense(x) => x.shape(),
+            MatrixInput::Sparse(x) => x.shape(),
+        }
+    }
+
+    pub fn stored_entries(&self) -> usize {
+        match self {
+            MatrixInput::Dense(x) => x.rows() * x.cols(),
+            MatrixInput::Sparse(x) => x.nnz(),
+        }
+    }
+
+    pub fn as_ops(&self) -> &dyn crate::svd::MatVecOps {
+        match self {
+            MatrixInput::Dense(x) => x,
+            MatrixInput::Sparse(x) => x,
+        }
+    }
+}
+
+/// What to shift by (Alg. 1's μ).
+#[derive(Debug, Clone)]
+pub enum ShiftSpec {
+    /// μ = 0: plain RSVD of X.
+    None,
+    /// μ = row means of X: the PCA use case.
+    MeanCenter,
+    /// An explicit shifting vector.
+    Vector(Vec<f64>),
+}
+
+impl ShiftSpec {
+    pub fn resolve(&self, input: &MatrixInput) -> Result<Vec<f64>> {
+        let (m, _) = input.shape();
+        match self {
+            ShiftSpec::None => Ok(vec![0.0; m]),
+            ShiftSpec::MeanCenter => Ok(match input {
+                MatrixInput::Dense(x) => x.row_means(),
+                MatrixInput::Sparse(x) => x.row_means(),
+            }),
+            ShiftSpec::Vector(v) => {
+                crate::ensure!(v.len() == m, "shift vector length {} != m {}", v.len(), m);
+                Ok(v.clone())
+            }
+        }
+    }
+}
+
+/// Where the job may run.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum EnginePreference {
+    /// Prefer a compiled artifact when one matches, else native.
+    Auto,
+    /// Native rust engine only.
+    Native,
+    /// Compiled artifact only (error if no shape match).
+    ArtifactOnly,
+}
+
+/// A factorization request.
+#[derive(Debug, Clone)]
+pub struct JobSpec {
+    pub input: MatrixInput,
+    pub config: SvdConfig,
+    pub shift: ShiftSpec,
+    pub engine: EnginePreference,
+    /// Seed for Ω (deterministic replay).
+    pub seed: u64,
+    /// Also compute the paper's MSE metric.
+    pub score: bool,
+}
+
+impl JobSpec {
+    /// Mean-centered PCA job with paper parameters (K = 2k, q = 0).
+    pub fn pca(input: MatrixInput, k: usize, seed: u64) -> JobSpec {
+        JobSpec {
+            input,
+            config: SvdConfig::paper(k),
+            shift: ShiftSpec::MeanCenter,
+            engine: EnginePreference::Auto,
+            seed,
+            score: true,
+        }
+    }
+}
+
+/// Successful job output.
+#[derive(Debug, Clone)]
+pub struct JobOutput {
+    pub factorization: Factorization,
+    /// The paper's MSE (present when `score` was requested).
+    pub mse: Option<f64>,
+}
+
+/// Completed job envelope.
+#[derive(Debug)]
+pub struct JobResult {
+    pub id: JobId,
+    pub outcome: Result<JobOutput>,
+    /// Engine that actually ran the job.
+    pub engine: SvdEngine,
+    /// Seconds spent executing.
+    pub exec_s: f64,
+    /// Seconds spent queued before a worker picked the job up.
+    pub queue_s: f64,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Xoshiro256pp;
+
+    #[test]
+    fn shift_spec_resolution() {
+        let mut rng = Xoshiro256pp::seed_from_u64(0);
+        let x = Dense::gaussian(5, 8, &mut rng);
+        let input = MatrixInput::Dense(x.clone());
+        assert_eq!(ShiftSpec::None.resolve(&input).unwrap(), vec![0.0; 5]);
+        assert_eq!(
+            ShiftSpec::MeanCenter.resolve(&input).unwrap(),
+            x.row_means()
+        );
+        assert!(ShiftSpec::Vector(vec![1.0; 3]).resolve(&input).is_err());
+        assert_eq!(
+            ShiftSpec::Vector(vec![1.0; 5]).resolve(&input).unwrap(),
+            vec![1.0; 5]
+        );
+    }
+
+    #[test]
+    fn pca_spec_defaults() {
+        let mut rng = Xoshiro256pp::seed_from_u64(1);
+        let spec = JobSpec::pca(
+            MatrixInput::Dense(Dense::gaussian(4, 6, &mut rng)),
+            2,
+            7,
+        );
+        assert_eq!(spec.config.sample_width(), 4);
+        assert!(spec.score);
+        assert_eq!(spec.input.shape(), (4, 6));
+    }
+}

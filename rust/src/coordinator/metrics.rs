@@ -1,0 +1,112 @@
+//! Lock-free service metrics (atomics only — read on the hot path).
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// Shared counters, updated by workers and the submitter.
+#[derive(Debug, Default)]
+pub struct Metrics {
+    pub submitted: AtomicU64,
+    pub completed: AtomicU64,
+    pub failed: AtomicU64,
+    pub native_jobs: AtomicU64,
+    pub artifact_jobs: AtomicU64,
+    pub queue_depth: AtomicU64,
+    /// Total execution time, nanoseconds.
+    pub exec_ns: AtomicU64,
+    /// Total queueing time, nanoseconds.
+    pub queue_ns: AtomicU64,
+    /// Max single-job execution time, nanoseconds.
+    pub max_exec_ns: AtomicU64,
+}
+
+impl Metrics {
+    pub fn record_exec(&self, exec_s: f64, queue_s: f64, ok: bool) {
+        self.completed.fetch_add(1, Ordering::Relaxed);
+        if !ok {
+            self.failed.fetch_add(1, Ordering::Relaxed);
+        }
+        let ns = (exec_s * 1e9) as u64;
+        self.exec_ns.fetch_add(ns, Ordering::Relaxed);
+        self.queue_ns
+            .fetch_add((queue_s * 1e9) as u64, Ordering::Relaxed);
+        self.max_exec_ns.fetch_max(ns, Ordering::Relaxed);
+    }
+
+    pub fn snapshot(&self) -> MetricsSnapshot {
+        let completed = self.completed.load(Ordering::Relaxed);
+        let exec_ns = self.exec_ns.load(Ordering::Relaxed);
+        let queue_ns = self.queue_ns.load(Ordering::Relaxed);
+        MetricsSnapshot {
+            submitted: self.submitted.load(Ordering::Relaxed),
+            completed,
+            failed: self.failed.load(Ordering::Relaxed),
+            native_jobs: self.native_jobs.load(Ordering::Relaxed),
+            artifact_jobs: self.artifact_jobs.load(Ordering::Relaxed),
+            queue_depth: self.queue_depth.load(Ordering::Relaxed),
+            mean_exec_s: if completed > 0 {
+                exec_ns as f64 / completed as f64 / 1e9
+            } else {
+                0.0
+            },
+            mean_queue_s: if completed > 0 {
+                queue_ns as f64 / completed as f64 / 1e9
+            } else {
+                0.0
+            },
+            max_exec_s: self.max_exec_ns.load(Ordering::Relaxed) as f64 / 1e9,
+        }
+    }
+}
+
+/// Point-in-time view of the service counters.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct MetricsSnapshot {
+    pub submitted: u64,
+    pub completed: u64,
+    pub failed: u64,
+    pub native_jobs: u64,
+    pub artifact_jobs: u64,
+    pub queue_depth: u64,
+    pub mean_exec_s: f64,
+    pub mean_queue_s: f64,
+    pub max_exec_s: f64,
+}
+
+impl std::fmt::Display for MetricsSnapshot {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "submitted={} completed={} failed={} native={} artifact={} \
+             depth={} mean_exec={:.3}ms mean_queue={:.3}ms max_exec={:.3}ms",
+            self.submitted,
+            self.completed,
+            self.failed,
+            self.native_jobs,
+            self.artifact_jobs,
+            self.queue_depth,
+            self.mean_exec_s * 1e3,
+            self.mean_queue_s * 1e3,
+            self.max_exec_s * 1e3,
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn record_and_snapshot() {
+        let m = Metrics::default();
+        m.submitted.fetch_add(3, Ordering::Relaxed);
+        m.record_exec(0.010, 0.001, true);
+        m.record_exec(0.030, 0.002, false);
+        let s = m.snapshot();
+        assert_eq!(s.submitted, 3);
+        assert_eq!(s.completed, 2);
+        assert_eq!(s.failed, 1);
+        assert!((s.mean_exec_s - 0.020).abs() < 1e-6);
+        assert!((s.max_exec_s - 0.030).abs() < 1e-6);
+        assert!(format!("{s}").contains("completed=2"));
+    }
+}

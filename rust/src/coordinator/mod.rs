@@ -1,0 +1,419 @@
+//! The factorization service — L3 of the stack.
+//!
+//! A [`Coordinator`] owns a pool of native worker threads plus (when
+//! artifacts are available) one *runtime actor* thread that hosts the
+//! PJRT [`crate::runtime::Executor`] (PJRT wrappers are not `Send`, so
+//! the executor is confined to its actor). Jobs are routed at submit
+//! time ([`router`]): dense, grid-shaped jobs go to the compiled
+//! artifact; everything else — arbitrary shapes, sparse inputs,
+//! ablation variants — runs natively.
+//!
+//! Backpressure: both queues are bounded (`queue_capacity`); `submit`
+//! blocks when full, `try_submit` returns `Error::Service` instead.
+//!
+//! ```no_run
+//! use srsvd::coordinator::{Coordinator, CoordinatorConfig};
+//! use srsvd::coordinator::job::{JobSpec, MatrixInput};
+//! use srsvd::linalg::Dense;
+//! # use srsvd::rng::{Rng, Xoshiro256pp};
+//! let coord = Coordinator::start(CoordinatorConfig::default()).unwrap();
+//! # let mut rng = Xoshiro256pp::seed_from_u64(0);
+//! let x = Dense::from_fn(100, 1000, |_, _| rng.next_uniform());
+//! let handle = coord.submit(JobSpec::pca(MatrixInput::Dense(x), 10, 7)).unwrap();
+//! let result = handle.wait().unwrap();
+//! println!("mse = {:?}", result.outcome.unwrap().mse);
+//! ```
+
+pub mod job;
+pub mod metrics;
+pub mod native_worker;
+pub mod router;
+mod runtime_actor;
+
+pub use job::{EnginePreference, JobId, JobOutput, JobResult, JobSpec, MatrixInput, ShiftSpec};
+pub use metrics::{Metrics, MetricsSnapshot};
+pub use router::Route;
+
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::mpsc::{sync_channel, Receiver, RecvTimeoutError, SyncSender};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use crate::runtime::Manifest;
+use crate::svd::SvdEngine;
+use crate::util::{Error, Result};
+
+/// Service configuration.
+#[derive(Debug, Clone)]
+pub struct CoordinatorConfig {
+    /// Native worker threads.
+    pub native_workers: usize,
+    /// Bounded queue capacity (per engine).
+    pub queue_capacity: usize,
+    /// Artifact directory; `None` disables the artifact engine,
+    /// `Some(dir)` requires a valid manifest there.
+    pub artifact_dir: Option<PathBuf>,
+}
+
+impl Default for CoordinatorConfig {
+    fn default() -> Self {
+        CoordinatorConfig {
+            native_workers: worker_default(),
+            queue_capacity: 256,
+            artifact_dir: default_artifact_dir(),
+        }
+    }
+}
+
+fn worker_default() -> usize {
+    std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(1)
+}
+
+fn default_artifact_dir() -> Option<PathBuf> {
+    let dir = Manifest::default_dir();
+    if dir.join("manifest.json").exists() {
+        Some(dir)
+    } else {
+        None
+    }
+}
+
+struct WorkItem {
+    id: JobId,
+    spec: JobSpec,
+    enqueued: Instant,
+    reply: std::sync::mpsc::Sender<JobResult>,
+}
+
+/// Handle to an in-flight job.
+pub struct JobHandle {
+    pub id: JobId,
+    rx: Receiver<JobResult>,
+}
+
+impl JobHandle {
+    /// Block until the job completes.
+    pub fn wait(self) -> Result<JobResult> {
+        self.rx
+            .recv()
+            .map_err(|_| Error::Service("worker dropped without reply".into()))
+    }
+
+    /// Block with a timeout.
+    pub fn wait_timeout(&self, dur: Duration) -> Result<JobResult> {
+        self.rx.recv_timeout(dur).map_err(|e| match e {
+            RecvTimeoutError::Timeout => Error::Service("job timed out".into()),
+            RecvTimeoutError::Disconnected => {
+                Error::Service("worker dropped without reply".into())
+            }
+        })
+    }
+}
+
+/// The factorization service.
+pub struct Coordinator {
+    native_tx: Option<SyncSender<WorkItem>>,
+    artifact_tx: Option<SyncSender<WorkItem>>,
+    manifest: Option<Manifest>,
+    metrics: Arc<Metrics>,
+    next_id: AtomicU64,
+    native_handles: Vec<std::thread::JoinHandle<()>>,
+    actor_handle: Option<std::thread::JoinHandle<()>>,
+}
+
+impl Coordinator {
+    /// Start workers (and the runtime actor when artifacts are present).
+    pub fn start(config: CoordinatorConfig) -> Result<Coordinator> {
+        crate::util::logging::init();
+        crate::ensure!(config.native_workers >= 1, "need at least one worker");
+        let metrics = Arc::new(Metrics::default());
+
+        // Native pool: shared bounded queue behind a mutexed receiver.
+        let (native_tx, native_rx) = sync_channel::<WorkItem>(config.queue_capacity);
+        let native_rx = Arc::new(Mutex::new(native_rx));
+        let mut native_handles = Vec::new();
+        for w in 0..config.native_workers {
+            let rx = Arc::clone(&native_rx);
+            let mx = Arc::clone(&metrics);
+            native_handles.push(
+                std::thread::Builder::new()
+                    .name(format!("srsvd-native-{w}"))
+                    .spawn(move || native_loop(rx, mx))
+                    .map_err(|e| Error::Service(format!("spawn worker: {e}")))?,
+            );
+        }
+
+        // Artifact actor (optional).
+        let (artifact_tx, actor_handle, manifest) = match &config.artifact_dir {
+            Some(dir) => {
+                let manifest = Manifest::load(dir)?;
+                let (tx, rx) = sync_channel::<WorkItem>(config.queue_capacity);
+                let mx = Arc::clone(&metrics);
+                let dir = dir.clone();
+                let handle = std::thread::Builder::new()
+                    .name("srsvd-runtime-actor".into())
+                    .spawn(move || runtime_actor::actor_loop(dir, rx, mx))
+                    .map_err(|e| Error::Service(format!("spawn actor: {e}")))?;
+                (Some(tx), Some(handle), Some(manifest))
+            }
+            None => (None, None, None),
+        };
+
+        log::info!(
+            "coordinator: {} native workers, artifact engine: {}",
+            config.native_workers,
+            if artifact_tx.is_some() { "on" } else { "off" }
+        );
+        Ok(Coordinator {
+            native_tx: Some(native_tx),
+            artifact_tx,
+            manifest,
+            metrics,
+            next_id: AtomicU64::new(1),
+            native_handles,
+            actor_handle,
+        })
+    }
+
+    /// Start with the native engine only (no artifacts required).
+    pub fn start_native_only(workers: usize) -> Result<Coordinator> {
+        Coordinator::start(CoordinatorConfig {
+            native_workers: workers,
+            queue_capacity: 256,
+            artifact_dir: None,
+        })
+    }
+
+    pub fn metrics(&self) -> MetricsSnapshot {
+        self.metrics.snapshot()
+    }
+
+    pub fn manifest(&self) -> Option<&Manifest> {
+        self.manifest.as_ref()
+    }
+
+    /// Submit a job; blocks when the target queue is full (backpressure).
+    pub fn submit(&self, spec: JobSpec) -> Result<JobHandle> {
+        self.submit_inner(spec, true)
+    }
+
+    /// Submit without blocking; `Error::Service` when the queue is full.
+    pub fn try_submit(&self, spec: JobSpec) -> Result<JobHandle> {
+        self.submit_inner(spec, false)
+    }
+
+    fn submit_inner(&self, spec: JobSpec, block: bool) -> Result<JobHandle> {
+        let route = router::route(&spec, self.manifest.as_ref())?;
+        let id = JobId(self.next_id.fetch_add(1, Ordering::Relaxed));
+        let (reply_tx, reply_rx) = std::sync::mpsc::channel();
+        let item = WorkItem { id, spec, enqueued: Instant::now(), reply: reply_tx };
+        let tx = match route {
+            Route::Native => self.native_tx.as_ref().unwrap(),
+            Route::Artifact { .. } => self.artifact_tx.as_ref().ok_or_else(|| {
+                Error::Service("artifact route chosen but engine is off".into())
+            })?,
+        };
+        match route {
+            Route::Native => self.metrics.native_jobs.fetch_add(1, Ordering::Relaxed),
+            Route::Artifact { .. } => {
+                self.metrics.artifact_jobs.fetch_add(1, Ordering::Relaxed)
+            }
+        };
+        self.metrics.submitted.fetch_add(1, Ordering::Relaxed);
+        self.metrics.queue_depth.fetch_add(1, Ordering::Relaxed);
+        let send_result = if block {
+            tx.send(item).map_err(|_| Error::Service("queue closed".into()))
+        } else {
+            tx.try_send(item).map_err(|e| match e {
+                std::sync::mpsc::TrySendError::Full(_) => {
+                    Error::Service("queue full (backpressure)".into())
+                }
+                std::sync::mpsc::TrySendError::Disconnected(_) => {
+                    Error::Service("queue closed".into())
+                }
+            })
+        };
+        if let Err(e) = send_result {
+            self.metrics.queue_depth.fetch_sub(1, Ordering::Relaxed);
+            return Err(e);
+        }
+        Ok(JobHandle { id, rx: reply_rx })
+    }
+
+    /// Convenience: submit and wait.
+    pub fn submit_blocking(&self, spec: JobSpec) -> Result<JobResult> {
+        self.submit(spec)?.wait()
+    }
+
+    /// Drain queues and join all threads.
+    pub fn shutdown(mut self) {
+        self.native_tx.take();
+        self.artifact_tx.take();
+        for h in self.native_handles.drain(..) {
+            let _ = h.join();
+        }
+        if let Some(h) = self.actor_handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for Coordinator {
+    fn drop(&mut self) {
+        // Close queues so worker threads exit even without shutdown().
+        self.native_tx.take();
+        self.artifact_tx.take();
+    }
+}
+
+fn native_loop(rx: Arc<Mutex<Receiver<WorkItem>>>, metrics: Arc<Metrics>) {
+    loop {
+        let item = {
+            let guard = rx.lock().expect("queue mutex poisoned");
+            guard.recv()
+        };
+        let Ok(item) = item else { return };
+        metrics.queue_depth.fetch_sub(1, Ordering::Relaxed);
+        let queue_s = item.enqueued.elapsed().as_secs_f64();
+        let t = Instant::now();
+        let outcome = native_worker::execute_native(&item.spec);
+        let exec_s = t.elapsed().as_secs_f64();
+        metrics.record_exec(exec_s, queue_s, outcome.is_ok());
+        let _ = item.reply.send(JobResult {
+            id: item.id,
+            outcome,
+            engine: SvdEngine::Native,
+            exec_s,
+            queue_s,
+        });
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::{Csr, Dense};
+    use crate::rng::{Rng, Xoshiro256pp};
+    use crate::svd::SvdConfig;
+
+    fn dense_spec(seed: u64) -> JobSpec {
+        let mut rng = Xoshiro256pp::seed_from_u64(seed);
+        JobSpec {
+            input: MatrixInput::Dense(Dense::from_fn(30, 80, |_, _| rng.next_uniform())),
+            config: SvdConfig::paper(4),
+            shift: ShiftSpec::MeanCenter,
+            engine: EnginePreference::Native,
+            seed,
+            score: true,
+        }
+    }
+
+    #[test]
+    fn native_only_roundtrip() {
+        let coord = Coordinator::start_native_only(2).unwrap();
+        let r = coord.submit_blocking(dense_spec(1)).unwrap();
+        assert!(r.outcome.is_ok());
+        assert_eq!(r.engine, SvdEngine::Native);
+        let m = coord.metrics();
+        assert_eq!(m.completed, 1);
+        assert_eq!(m.failed, 0);
+        coord.shutdown();
+    }
+
+    #[test]
+    fn many_jobs_all_complete() {
+        let coord = Coordinator::start_native_only(3).unwrap();
+        let handles: Vec<_> = (0..20)
+            .map(|s| coord.submit(dense_spec(s)).unwrap())
+            .collect();
+        let mut ids = std::collections::HashSet::new();
+        for h in handles {
+            let r = h.wait().unwrap();
+            assert!(r.outcome.is_ok());
+            ids.insert(r.id);
+        }
+        assert_eq!(ids.len(), 20);
+        assert_eq!(coord.metrics().completed, 20);
+        assert_eq!(coord.metrics().queue_depth, 0);
+        coord.shutdown();
+    }
+
+    #[test]
+    fn sparse_jobs_run_native() {
+        let coord = Coordinator::start_native_only(1).unwrap();
+        let mut rng = Xoshiro256pp::seed_from_u64(5);
+        let spec = JobSpec {
+            input: MatrixInput::Sparse(Csr::random(40, 200, 0.05, &mut rng, |r| {
+                r.next_uniform() + 0.1
+            })),
+            config: SvdConfig::paper(5),
+            shift: ShiftSpec::MeanCenter,
+            engine: EnginePreference::Auto,
+            seed: 6,
+            score: true,
+        };
+        let r = coord.submit_blocking(spec).unwrap();
+        assert_eq!(r.engine, SvdEngine::Native);
+        assert!(r.outcome.unwrap().mse.unwrap() >= 0.0);
+        coord.shutdown();
+    }
+
+    #[test]
+    fn bad_job_reports_error_not_hang() {
+        let coord = Coordinator::start_native_only(1).unwrap();
+        let mut spec = dense_spec(7);
+        spec.shift = ShiftSpec::Vector(vec![0.0; 3]); // wrong length
+        let r = coord.submit_blocking(spec).unwrap();
+        assert!(r.outcome.is_err());
+        assert_eq!(coord.metrics().failed, 1);
+        coord.shutdown();
+    }
+
+    #[test]
+    fn try_submit_backpressure() {
+        // 1 worker, capacity 1: a burst must eventually hit "queue full".
+        let coord = Coordinator::start(CoordinatorConfig {
+            native_workers: 1,
+            queue_capacity: 1,
+            artifact_dir: None,
+        })
+        .unwrap();
+        let mut handles = Vec::new();
+        let mut saw_full = false;
+        for s in 0..50 {
+            match coord.try_submit(dense_spec(s)) {
+                Ok(h) => handles.push(h),
+                Err(e) => {
+                    saw_full = true;
+                    assert!(format!("{e}").contains("backpressure"), "{e}");
+                    break;
+                }
+            }
+        }
+        assert!(saw_full, "expected backpressure with capacity 1");
+        for h in handles {
+            let _ = h.wait();
+        }
+        coord.shutdown();
+    }
+
+    #[test]
+    fn deterministic_results_across_pool_sizes() {
+        let r1 = {
+            let c = Coordinator::start_native_only(1).unwrap();
+            let r = c.submit_blocking(dense_spec(9)).unwrap();
+            c.shutdown();
+            r.outcome.unwrap().mse.unwrap()
+        };
+        let r4 = {
+            let c = Coordinator::start_native_only(4).unwrap();
+            let r = c.submit_blocking(dense_spec(9)).unwrap();
+            c.shutdown();
+            r.outcome.unwrap().mse.unwrap()
+        };
+        assert_eq!(r1, r4);
+    }
+}

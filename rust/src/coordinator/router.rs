@@ -1,0 +1,144 @@
+//! Routing: decide which engine executes a job.
+//!
+//! A job can run on a compiled artifact only if (a) the input is dense
+//! (artifacts take a dense f32 operand), (b) the manifest has an
+//! `srsvd_scored` entry whose static shape/rank/power match the job
+//! config exactly, and (c) the job uses the default Direct basis — the
+//! AOT pipeline implements the fused (exact) shift. Everything else
+//! runs on the native engine, which handles arbitrary shapes and
+//! sparse inputs.
+
+use crate::runtime::Manifest;
+use crate::svd::{BasisMethod, SvdEngine};
+use crate::util::{Error, Result};
+
+use super::job::{EnginePreference, JobSpec, MatrixInput};
+
+/// Route decision with the artifact name when applicable.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum Route {
+    Native,
+    Artifact { name: String },
+}
+
+impl Route {
+    pub fn engine(&self) -> SvdEngine {
+        match self {
+            Route::Native => SvdEngine::Native,
+            Route::Artifact { .. } => SvdEngine::Artifact,
+        }
+    }
+}
+
+/// Compute the route for `spec` under `manifest` (None = no runtime).
+pub fn route(spec: &JobSpec, manifest: Option<&Manifest>) -> Result<Route> {
+    let artifact = find_artifact(spec, manifest);
+    match (spec.engine, artifact) {
+        (EnginePreference::Native, _) => Ok(Route::Native),
+        (EnginePreference::Auto, Some(name)) => Ok(Route::Artifact { name }),
+        (EnginePreference::Auto, None) => Ok(Route::Native),
+        (EnginePreference::ArtifactOnly, Some(name)) => Ok(Route::Artifact { name }),
+        (EnginePreference::ArtifactOnly, None) => Err(Error::Service(format!(
+            "no compiled artifact matches job (shape {:?}, k={}, q={}) and \
+             engine=ArtifactOnly was requested",
+            spec.input.shape(),
+            spec.config.k,
+            spec.config.power_iters,
+        ))),
+    }
+}
+
+fn find_artifact(spec: &JobSpec, manifest: Option<&Manifest>) -> Option<String> {
+    let manifest = manifest?;
+    if !matches!(spec.input, MatrixInput::Dense(_)) {
+        return None; // sparse inputs always run native (that's the point)
+    }
+    if spec.config.basis != BasisMethod::Direct {
+        return None; // ablation variants are native-only
+    }
+    let (m, n) = spec.input.shape();
+    let a = manifest.find_srsvd(m, n, spec.config.k, spec.config.power_iters)?;
+    // The artifact's sampling width must match the job's.
+    if a.kk != spec.config.sample_width() {
+        return None;
+    }
+    Some(a.name.clone())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::job::{JobSpec, MatrixInput, ShiftSpec};
+    use crate::linalg::{Csr, Dense};
+    use crate::rng::{Rng, Xoshiro256pp};
+    use crate::svd::SvdConfig;
+    use std::path::Path;
+
+    fn manifest() -> Option<Manifest> {
+        let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        Manifest::load(&dir).ok()
+    }
+
+    fn dense_job(m: usize, n: usize, k: usize, pref: EnginePreference) -> JobSpec {
+        let mut rng = Xoshiro256pp::seed_from_u64(0);
+        JobSpec {
+            input: MatrixInput::Dense(Dense::from_fn(m, n, |_, _| rng.next_uniform())),
+            config: SvdConfig::paper(k),
+            shift: ShiftSpec::MeanCenter,
+            engine: pref,
+            seed: 0,
+            score: true,
+        }
+    }
+
+    #[test]
+    fn native_preference_always_native() {
+        let m = manifest();
+        let r = route(&dense_job(100, 1000, 10, EnginePreference::Native), m.as_ref()).unwrap();
+        assert_eq!(r, Route::Native);
+    }
+
+    #[test]
+    fn auto_picks_artifact_for_grid_shape() {
+        let Some(m) = manifest() else { return };
+        let r = route(&dense_job(100, 1000, 10, EnginePreference::Auto), Some(&m)).unwrap();
+        assert!(matches!(r, Route::Artifact { .. }), "{r:?}");
+    }
+
+    #[test]
+    fn auto_falls_back_for_off_grid_shape() {
+        let Some(m) = manifest() else { return };
+        let r = route(&dense_job(33, 77, 4, EnginePreference::Auto), Some(&m)).unwrap();
+        assert_eq!(r, Route::Native);
+    }
+
+    #[test]
+    fn artifact_only_errors_when_unmatched() {
+        let Some(m) = manifest() else { return };
+        let r = route(&dense_job(33, 77, 4, EnginePreference::ArtifactOnly), Some(&m));
+        assert!(r.is_err());
+    }
+
+    #[test]
+    fn sparse_inputs_never_route_to_artifacts() {
+        let Some(m) = manifest() else { return };
+        let mut rng = Xoshiro256pp::seed_from_u64(1);
+        let spec = JobSpec {
+            input: MatrixInput::Sparse(Csr::random(100, 1000, 0.01, &mut rng, |r| {
+                r.next_uniform()
+            })),
+            config: SvdConfig::paper(10),
+            shift: ShiftSpec::MeanCenter,
+            engine: EnginePreference::Auto,
+            seed: 0,
+            score: false,
+        };
+        assert_eq!(route(&spec, Some(&m)).unwrap(), Route::Native);
+    }
+
+    #[test]
+    fn no_manifest_means_native() {
+        let r = route(&dense_job(100, 1000, 10, EnginePreference::Auto), None).unwrap();
+        assert_eq!(r, Route::Native);
+    }
+}

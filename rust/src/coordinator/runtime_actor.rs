@@ -1,0 +1,92 @@
+//! The runtime actor: a single thread owning the PJRT [`Executor`]
+//! (whose wrappers are not `Send`), consuming artifact-routed jobs from
+//! a bounded channel.
+//!
+//! The actor compiles executables lazily on first use and keeps them
+//! cached for the life of the service, so steady-state jobs pay only
+//! the execute cost.
+
+use std::path::PathBuf;
+use std::sync::atomic::Ordering;
+use std::sync::mpsc::Receiver;
+use std::sync::Arc;
+use std::time::Instant;
+
+use crate::linalg::Dense;
+use crate::rng::Xoshiro256pp;
+use crate::runtime::Executor;
+use crate::svd::SvdEngine;
+use crate::util::{Error, Result};
+
+use super::job::{JobOutput, JobResult, JobSpec, MatrixInput};
+use super::metrics::Metrics;
+
+pub(super) fn actor_loop(dir: PathBuf, rx: Receiver<super::WorkItem>, metrics: Arc<Metrics>) {
+    let mut executor = match Executor::new(&dir) {
+        Ok(e) => e,
+        Err(e) => {
+            // Fail every queued job with a clear error, then exit.
+            log::error!("runtime actor failed to start: {e}");
+            for item in rx.iter() {
+                metrics.queue_depth.fetch_sub(1, Ordering::Relaxed);
+                let _ = item.reply.send(JobResult {
+                    id: item.id,
+                    outcome: Err(Error::Runtime(format!("executor unavailable: {e}"))),
+                    engine: SvdEngine::Artifact,
+                    exec_s: 0.0,
+                    queue_s: item.enqueued.elapsed().as_secs_f64(),
+                });
+                metrics.record_exec(0.0, 0.0, false);
+            }
+            return;
+        }
+    };
+
+    for item in rx.iter() {
+        metrics.queue_depth.fetch_sub(1, Ordering::Relaxed);
+        let queue_s = item.enqueued.elapsed().as_secs_f64();
+        let t = Instant::now();
+        let outcome = execute_artifact(&mut executor, &item.spec);
+        let exec_s = t.elapsed().as_secs_f64();
+        metrics.record_exec(exec_s, queue_s, outcome.is_ok());
+        let _ = item.reply.send(JobResult {
+            id: item.id,
+            outcome,
+            engine: SvdEngine::Artifact,
+            exec_s,
+            queue_s,
+        });
+    }
+}
+
+fn execute_artifact(executor: &mut Executor, spec: &JobSpec) -> Result<JobOutput> {
+    let MatrixInput::Dense(x) = &spec.input else {
+        return Err(Error::Service(
+            "artifact engine requires a dense input (router bug)".into(),
+        ));
+    };
+    let (m, n) = x.shape();
+    let art = executor
+        .manifest()
+        .find_srsvd(m, n, spec.config.k, spec.config.power_iters)
+        .ok_or_else(|| {
+            Error::Service(format!(
+                "no artifact for shape {m}x{n} k={} q={} (router bug)",
+                spec.config.k, spec.config.power_iters
+            ))
+        })?
+        .clone();
+    let mu = spec.shift.resolve(&spec.input)?;
+    // Ω generated rust-side: deterministic replay across engines.
+    let mut rng = Xoshiro256pp::seed_from_u64(spec.seed);
+    let omega = Dense::gaussian(n, art.kk, &mut rng);
+    let out = executor.run_srsvd(&art, x, &mu, &omega)?;
+    Ok(JobOutput {
+        factorization: out.factorization,
+        mse: spec.score.then_some(out.mse),
+    })
+}
+
+// Integration tests for the actor live in rust/tests/service.rs (they
+// need built artifacts); unit coverage of the routing/queueing logic is
+// in coordinator::tests.

@@ -1,0 +1,159 @@
+//! Synthetic Zipfian corpus → sparse word co-occurrence matrix (§5.3
+//! substitute for the Wikipedia/CoNLL-2017 counts).
+//!
+//! The paper builds p(wᵢ | wⱼ) ≈ n(wⱼ, wᵢ)/n(wⱼ) over the m most
+//! frequent context words and n most frequent target words. What the
+//! experiment needs from the data is: Zipfian unigram margins, extreme
+//! sparsity at large n, non-negative entries, non-zero row means. We
+//! generate exactly that: a Zipfian unigram language with topic-like
+//! bigram affinity, sampled into a count matrix and normalized per
+//! context word.
+
+use crate::linalg::{Csr, Triplets};
+use crate::rng::{Rng, ZipfSampler};
+
+/// Corpus / co-occurrence matrix parameters.
+#[derive(Debug, Clone, Copy)]
+pub struct CorpusSpec {
+    /// Context vocabulary (matrix rows; the paper fixes m = 1000).
+    pub contexts: usize,
+    /// Target vocabulary (matrix columns; the paper sweeps n up to 3e5).
+    pub targets: usize,
+    /// Number of sampled co-occurrence pairs ("corpus size"). Drives the
+    /// density: pairs / (contexts · targets).
+    pub pairs: usize,
+    /// Zipf exponent of the unigram distribution (≈1 for natural text).
+    pub zipf_s: f64,
+    /// Number of latent topics coupling context and target choice; more
+    /// topics → lower-rank structure in the conditional matrix.
+    pub topics: usize,
+}
+
+impl Default for CorpusSpec {
+    fn default() -> Self {
+        CorpusSpec {
+            contexts: 1000,
+            targets: 10_000,
+            pairs: 2_000_000,
+            zipf_s: 1.05,
+            topics: 32,
+        }
+    }
+}
+
+/// Build the m×n conditional-probability co-occurrence matrix
+/// p(target | context).
+///
+/// Sampling model: a pair is drawn by (1) sampling a topic t, (2)
+/// sampling the context word from a Zipf distribution re-ranked by a
+/// topic-dependent permutation offset, (3) likewise for the target.
+/// This produces Zipfian margins *and* correlated structure (the
+/// low-rank signal PCA is after), at O(pairs) cost.
+pub fn cooccurrence_matrix(spec: CorpusSpec, rng: &mut dyn Rng) -> Csr {
+    let m = spec.contexts;
+    let n = spec.targets;
+    let zc = ZipfSampler::new(m as u64, spec.zipf_s);
+    let zt = ZipfSampler::new(n as u64, spec.zipf_s);
+
+    // Topic offsets: each topic re-ranks the vocabulary by a fixed
+    // rotation, so words cluster by topic without changing the margins.
+    let ctx_off: Vec<usize> = (0..spec.topics)
+        .map(|_| rng.next_below(m as u64) as usize)
+        .collect();
+    let tgt_off: Vec<usize> = (0..spec.topics)
+        .map(|_| rng.next_below(n as u64) as usize)
+        .collect();
+
+    let mut counts = Triplets::new(m, n);
+    let mut ctx_totals = vec![0u32; m];
+    for _ in 0..spec.pairs {
+        let t = rng.next_below(spec.topics as u64) as usize;
+        let c = (zc.sample(rng) as usize - 1 + ctx_off[t]) % m;
+        let w = (zt.sample(rng) as usize - 1 + tgt_off[t]) % n;
+        counts.push(c, w, 1.0);
+        ctx_totals[c] += 1;
+    }
+    let counts = counts.to_csr();
+
+    // Normalize each row by the context total: p(w | c).
+    let mut probs = Triplets::new(m, n);
+    for i in 0..m {
+        let tot = ctx_totals[i].max(1) as f64;
+        for (j, v) in counts.row_iter(i) {
+            probs.push(i, j, v / tot);
+        }
+    }
+    probs.to_csr()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Xoshiro256pp;
+
+    fn small_spec() -> CorpusSpec {
+        CorpusSpec {
+            contexts: 50,
+            targets: 300,
+            pairs: 30_000,
+            zipf_s: 1.05,
+            topics: 4,
+        }
+    }
+
+    #[test]
+    fn rows_are_conditional_distributions() {
+        let mut rng = Xoshiro256pp::seed_from_u64(0);
+        let x = cooccurrence_matrix(small_spec(), &mut rng);
+        assert_eq!(x.shape(), (50, 300));
+        for i in 0..50 {
+            let s: f64 = x.row_iter(i).map(|(_, v)| v).sum();
+            if x.row_iter(i).count() > 0 {
+                assert!((s - 1.0).abs() < 1e-9, "row {i} sums to {s}");
+            }
+        }
+        assert!(x.to_dense().data().iter().all(|&v| v >= 0.0));
+    }
+
+    #[test]
+    fn sparse_at_scale() {
+        let mut rng = Xoshiro256pp::seed_from_u64(1);
+        let spec = CorpusSpec {
+            contexts: 200,
+            targets: 5000,
+            pairs: 100_000,
+            zipf_s: 1.05,
+            topics: 8,
+        };
+        let x = cooccurrence_matrix(spec, &mut rng);
+        // Density bounded by pairs/(m·n) and Zipf collisions push it lower.
+        assert!(x.density() < 0.1, "density {}", x.density());
+        assert!(x.nnz() > 10_000);
+    }
+
+    #[test]
+    fn zipfian_margins_head_heavy() {
+        let mut rng = Xoshiro256pp::seed_from_u64(2);
+        let x = cooccurrence_matrix(small_spec(), &mut rng);
+        // Column mass concentrates on a small head (after topic
+        // rotation the *sorted* mass profile must still be Zipf-like).
+        let mut col_mass = vec![0.0; 300];
+        for i in 0..50 {
+            for (j, v) in x.row_iter(i) {
+                col_mass[j] += v;
+            }
+        }
+        col_mass.sort_by(|a, b| b.partial_cmp(a).unwrap());
+        let head: f64 = col_mass[..30].iter().sum();
+        let total: f64 = col_mass.iter().sum();
+        assert!(head / total > 0.3, "head share {}", head / total);
+    }
+
+    #[test]
+    fn deterministic_per_seed() {
+        let a = cooccurrence_matrix(small_spec(), &mut Xoshiro256pp::seed_from_u64(9));
+        let b = cooccurrence_matrix(small_spec(), &mut Xoshiro256pp::seed_from_u64(9));
+        assert_eq!(a.nnz(), b.nnz());
+        assert!(crate::linalg::fro_diff(&a.to_dense(), &b.to_dense()) == 0.0);
+    }
+}

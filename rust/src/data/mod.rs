@@ -1,0 +1,17 @@
+//! Synthetic workload generators substituting the paper's datasets.
+//!
+//! The paper evaluates on (1) random matrices of several distributions,
+//! (2) UCI handwritten digits and LFW faces, (3) word co-occurrence
+//! probabilities from English Wikipedia. (2) and (3) are not available
+//! in this offline environment, so each is replaced by a generator that
+//! preserves the property the experiment exercises — see DESIGN.md
+//! §Substitutions for the full argument. All generators are seeded and
+//! deterministic.
+
+pub mod corpus;
+pub mod images;
+pub mod random;
+
+pub use corpus::{CorpusSpec, cooccurrence_matrix};
+pub use images::{digits_matrix, faces_matrix, DigitsSpec, FacesSpec};
+pub use random::{random_matrix, DataSpec, Distribution};

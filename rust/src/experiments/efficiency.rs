@@ -1,0 +1,115 @@
+//! §4's efficiency claim — the experiment the paper argues but does not
+//! plot: for sparse X with non-zero mean, S-RSVD runs in
+//! O(nnz·k + (m+n)k²) while RSVD must densify X̄ and pay O(mnk), plus
+//! the O(mn) materialization itself.
+//!
+//! The bench sweeps n (and density) and times three legs:
+//!   1. S-RSVD on sparse X (implicit shift) — the paper's algorithm;
+//!   2. RSVD on the densified X̄ (materialize + factorize) — the baseline;
+//!   3. RSVD on sparse X *without* centering — the accuracy-losing dodge.
+
+use crate::linalg::Csr;
+use crate::rng::Xoshiro256pp;
+use crate::svd::{Rsvd, ShiftedRsvd, SvdConfig};
+use crate::util::timer::Timer;
+
+/// Timing row for one (n, density) point.
+#[derive(Debug, Clone)]
+pub struct EffRow {
+    pub n: usize,
+    pub nnz: usize,
+    /// Seconds: S-RSVD on sparse X with implicit mean shift.
+    pub srsvd_sparse_s: f64,
+    /// Seconds: densify X̄ then RSVD (includes materialization).
+    pub rsvd_densified_s: f64,
+    /// Seconds: RSVD on sparse X, no centering (accuracy baseline).
+    pub rsvd_sparse_s: f64,
+    /// Peak extra f64s the densified path allocates (m·n).
+    pub densified_elems: usize,
+}
+
+impl EffRow {
+    pub fn speedup(&self) -> f64 {
+        self.rsvd_densified_s / self.srsvd_sparse_s.max(1e-12)
+    }
+}
+
+/// Run the sweep: m fixed, n and density per point.
+pub fn sweep(m: usize, points: &[(usize, f64)], k: usize, seed: u64) -> Vec<EffRow> {
+    let cfg = SvdConfig::paper(k);
+    points
+        .iter()
+        .map(|&(n, density)| {
+            let mut rng = Xoshiro256pp::seed_from_u64(seed ^ n as u64);
+            let x = Csr::random(m, n, density, &mut rng, |r| r.next_uniform() + 0.05);
+            let mu = x.row_means();
+
+            let t = Timer::start();
+            let mut r1 = Xoshiro256pp::seed_from_u64(seed ^ 1);
+            ShiftedRsvd::new(cfg).factorize(&x, &mu, &mut r1).expect("srsvd");
+            let srsvd_sparse_s = t.elapsed_secs();
+
+            let t = Timer::start();
+            let mut r2 = Xoshiro256pp::seed_from_u64(seed ^ 1);
+            Rsvd::new(cfg)
+                .factorize_centered_sparse(&x, &mut r2)
+                .expect("rsvd densified");
+            let rsvd_densified_s = t.elapsed_secs();
+
+            let t = Timer::start();
+            let mut r3 = Xoshiro256pp::seed_from_u64(seed ^ 1);
+            Rsvd::new(cfg).factorize(&x, &mut r3).expect("rsvd sparse");
+            let rsvd_sparse_s = t.elapsed_secs();
+
+            EffRow {
+                n,
+                nnz: x.nnz(),
+                srsvd_sparse_s,
+                rsvd_densified_s,
+                rsvd_sparse_s,
+                densified_elems: m * n,
+            }
+        })
+        .collect()
+}
+
+/// Render the sweep as a table with the headline speedup column.
+pub fn render(rows: &[EffRow]) -> String {
+    let mut t = crate::bench::Table::new(&[
+        "n", "nnz", "S-RSVD(sparse)", "RSVD(densified)", "RSVD(no-center)", "speedup",
+    ]);
+    for r in rows {
+        t.row(&[
+            r.n.to_string(),
+            r.nnz.to_string(),
+            crate::util::timer::fmt_duration(r.srsvd_sparse_s),
+            crate::util::timer::fmt_duration(r.rsvd_densified_s),
+            crate::util::timer::fmt_duration(r.rsvd_sparse_s),
+            format!("{:.1}x", r.speedup()),
+        ]);
+    }
+    t.render()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sparse_shifted_beats_densified_at_scale() {
+        // Modest scale so the test stays fast; the full sweep lives in
+        // the `efficiency` bench.
+        let rows = sweep(200, &[(4000, 0.005)], 8, 1);
+        let r = &rows[0];
+        assert!(
+            r.speedup() > 1.5,
+            "expected sparse-shifted to win: {r:?}"
+        );
+    }
+
+    #[test]
+    fn render_contains_speedup() {
+        let rows = sweep(50, &[(500, 0.02)], 4, 2);
+        assert!(render(&rows).contains('x'));
+    }
+}

@@ -1,0 +1,163 @@
+//! Figure 1 (a–f): the random-data experiments of §5.1.
+//!
+//! Each runner returns the series the corresponding panel plots, so a
+//! bench target (or `examples/full_eval.rs`) just formats rows.
+
+use crate::bench::Table;
+use crate::data::{random_matrix, DataSpec, Distribution};
+use crate::linalg::Dense;
+use crate::rng::Xoshiro256pp;
+use crate::svd::SvdConfig;
+
+use super::{mse_sum, run_rsvd, run_rsvd_centered, run_srsvd, Algo};
+
+/// Default data shape of §5.1: 100×1000 uniform in [0, 1).
+pub fn default_matrix(seed: u64) -> Dense {
+    let mut rng = Xoshiro256pp::seed_from_u64(seed);
+    random_matrix(
+        DataSpec { m: 100, n: 1000, dist: Distribution::Uniform },
+        &mut rng,
+    )
+}
+
+/// Fig. 1a: MSE vs number of principal components (fixed data).
+/// Returns rows of (k, mse_srsvd, mse_rsvd).
+pub fn fig1a(ks: &[usize], seed: u64) -> Vec<(usize, f64, f64)> {
+    let x = default_matrix(seed);
+    ks.iter()
+        .map(|&k| {
+            let cfg = SvdConfig::paper(k);
+            let s = run_srsvd(&x, cfg, seed ^ 0xA5).mse;
+            let r = run_rsvd(&x, cfg, seed ^ 0xA5).mse;
+            (k, s, r)
+        })
+        .collect()
+}
+
+/// Fig. 1b: MSE-SUM vs sample size n. Returns (n, sum_srsvd, sum_rsvd).
+pub fn fig1b(ns: &[usize], ks: &[usize], seed: u64) -> Vec<(usize, f64, f64)> {
+    ns.iter()
+        .map(|&n| {
+            let mut rng = Xoshiro256pp::seed_from_u64(seed ^ n as u64);
+            let x = random_matrix(
+                DataSpec { m: 100, n, dist: Distribution::Uniform },
+                &mut rng,
+            );
+            let s = mse_sum(&x, ks, 0, seed, Algo::Srsvd);
+            let r = mse_sum(&x, ks, 0, seed, Algo::Rsvd);
+            (n, s, r)
+        })
+        .collect()
+}
+
+/// Fig. 1c: MSE-SUM vs data distribution. Returns (name, sum_s, sum_r).
+pub fn fig1c(ks: &[usize], seed: u64) -> Vec<(&'static str, f64, f64)> {
+    Distribution::ALL
+        .iter()
+        .map(|&dist| {
+            let mut rng = Xoshiro256pp::seed_from_u64(seed ^ dist.name().len() as u64);
+            let x = random_matrix(DataSpec { m: 100, n: 1000, dist }, &mut rng);
+            let s = mse_sum(&x, ks, 0, seed, Algo::Srsvd);
+            let r = mse_sum(&x, ks, 0, seed, Algo::Rsvd);
+            (dist.name(), s, r)
+        })
+        .collect()
+}
+
+/// Fig. 1d: implicit (S-RSVD on X) vs explicit (RSVD on materialized X̄)
+/// centering. Returns (k, mse_implicit, mse_explicit) — the two curves
+/// must coincide (Eq. 11).
+pub fn fig1d(ks: &[usize], seed: u64) -> Vec<(usize, f64, f64)> {
+    let x = default_matrix(seed ^ 0xD);
+    ks.iter()
+        .map(|&k| {
+            let cfg = SvdConfig::paper(k);
+            let implicit = run_srsvd(&x, cfg, seed ^ 0x1D).mse;
+            let explicit = run_rsvd_centered(&x, cfg, seed ^ 0x1D).mse;
+            (k, implicit, explicit)
+        })
+        .collect()
+}
+
+/// Fig. 1e: MSE-SUM vs power iteration count q (uniform data).
+/// Returns (q, sum_srsvd, sum_rsvd).
+pub fn fig1e(qs: &[usize], ks: &[usize], seed: u64) -> Vec<(usize, f64, f64)> {
+    let x = default_matrix(seed ^ 0xE);
+    qs.iter()
+        .map(|&q| {
+            let s = mse_sum(&x, ks, q, seed, Algo::Srsvd);
+            let r = mse_sum(&x, ks, q, seed, Algo::Rsvd);
+            (q, s, r)
+        })
+        .collect()
+}
+
+/// Fig. 1f: MSE-SUM(S-RSVD) − MSE-SUM(RSVD) vs q, per distribution
+/// (negative everywhere = S-RSVD more accurate; Zipf stays negative).
+pub fn fig1f(
+    qs: &[usize],
+    ks: &[usize],
+    seed: u64,
+) -> Vec<(&'static str, Vec<(usize, f64)>)> {
+    Distribution::ALL
+        .iter()
+        .map(|&dist| {
+            let mut rng = Xoshiro256pp::seed_from_u64(seed ^ 0xF0 ^ dist.name().len() as u64);
+            let x = random_matrix(DataSpec { m: 100, n: 1000, dist }, &mut rng);
+            let series = qs
+                .iter()
+                .map(|&q| {
+                    let s = mse_sum(&x, ks, q, seed, Algo::Srsvd);
+                    let r = mse_sum(&x, ks, q, seed, Algo::Rsvd);
+                    (q, s - r)
+                })
+                .collect();
+            (dist.name(), series)
+        })
+        .collect()
+}
+
+/// Render fig1a-style rows as a table (helper for benches/examples).
+pub fn render_k_table(title: &str, rows: &[(usize, f64, f64)]) -> String {
+    let mut t = Table::new(&["k", "S-RSVD", "RSVD", "ratio"]);
+    for &(k, s, r) in rows {
+        t.row(&[
+            k.to_string(),
+            format!("{s:.5}"),
+            format!("{r:.5}"),
+            format!("{:.3}", s / r.max(1e-300)),
+        ]);
+    }
+    format!("{title}\n{}", t.render())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fig1a_centering_wins_at_small_k() {
+        let rows = fig1a(&[1, 2, 5], 7);
+        for (k, s, r) in rows {
+            assert!(s < r, "k={k}: srsvd {s} rsvd {r}");
+        }
+    }
+
+    #[test]
+    fn fig1d_curves_coincide() {
+        for (k, imp, exp) in fig1d(&[2, 6], 11) {
+            assert!(
+                (imp - exp).abs() < 1e-9 * exp.max(1.0),
+                "k={k}: {imp} vs {exp}"
+            );
+        }
+    }
+
+    #[test]
+    fn fig1f_all_negative_at_q0() {
+        let rows = fig1f(&[0], &[1, 2, 4], 13);
+        for (name, series) in rows {
+            assert!(series[0].1 < 0.0, "{name}: diff {}", series[0].1);
+        }
+    }
+}

@@ -1,0 +1,198 @@
+//! Table 1: image data (digits, faces) and word data, with the paper's
+//! statistics — MSE per algorithm, t-test p-values for H₀¹ (MSE pairs
+//! over repeated runs) and H₀² (per-column errors), and win-rates.
+
+use crate::bench::{fmt_sci, Table};
+use crate::data::{
+    cooccurrence_matrix, digits_matrix, faces_matrix, CorpusSpec, DigitsSpec, FacesSpec,
+};
+use crate::linalg::{Csr, Dense};
+use crate::rng::Xoshiro256pp;
+use crate::stats::{mean, paired_t_test, win_rate};
+use crate::svd::{column_errors, Rsvd, ShiftedRsvd, SvdConfig};
+
+use super::RunMetrics;
+
+/// One Table-1 cell: aggregate statistics over `runs` repetitions.
+#[derive(Debug, Clone)]
+pub struct Table1Stats {
+    pub name: String,
+    pub mse_srsvd: f64,
+    pub mse_rsvd: f64,
+    /// H₀¹ p-value: paired t-test on the per-run MSE pairs.
+    pub p1: f64,
+    /// H₀² p-value: paired t-test on per-column errors (final run).
+    pub p2: f64,
+    /// Win-rate of S-RSVD over columns (final run).
+    pub wr_srsvd: f64,
+    pub runs: usize,
+}
+
+impl Table1Stats {
+    pub fn wr_rsvd(&self) -> f64 {
+        1.0 - self.wr_srsvd
+    }
+}
+
+/// Run the Table-1 protocol on a dense matrix: `runs` repetitions with
+/// different seeds, both algorithms scored per the §5 protocol.
+pub fn table1_dense(name: &str, x: &Dense, k: usize, runs: usize, seed: u64) -> Table1Stats {
+    let cfg = SvdConfig::paper(k);
+    let mut mses_s = Vec::with_capacity(runs);
+    let mut mses_r = Vec::with_capacity(runs);
+    let mut last: Option<(RunMetrics, RunMetrics)> = None;
+    for t in 0..runs {
+        let s = super::run_srsvd(x, cfg, seed ^ (t as u64 * 0x9E37));
+        let r = super::run_rsvd(x, cfg, seed ^ (t as u64 * 0x9E37));
+        mses_s.push(s.mse);
+        mses_r.push(r.mse);
+        last = Some((s, r));
+    }
+    let (s_last, r_last) = last.expect("runs >= 1");
+    let p1 = if runs >= 2 {
+        paired_t_test(&mses_s, &mses_r).p
+    } else {
+        f64::NAN
+    };
+    let p2 = paired_t_test(&s_last.col_errors, &r_last.col_errors).p;
+    Table1Stats {
+        name: name.to_string(),
+        mse_srsvd: mean(&mses_s),
+        mse_rsvd: mean(&mses_r),
+        p1,
+        p2,
+        wr_srsvd: win_rate(&s_last.col_errors, &r_last.col_errors),
+        runs,
+    }
+}
+
+/// Word-data variant: sparse input, S-RSVD stays sparse; RSVD factorizes
+/// the off-center matrix through the same operator (no densification
+/// needed since μ = 0 for RSVD — the *centered* RSVD baseline is what
+/// the efficiency bench measures).
+pub fn table1_sparse(name: &str, x: &Csr, k: usize, runs: usize, seed: u64) -> Table1Stats {
+    let cfg = SvdConfig::paper(k);
+    let mu = x.row_means();
+    let mut mses_s = Vec::with_capacity(runs);
+    let mut mses_r = Vec::with_capacity(runs);
+    let mut last_cols: Option<(Vec<f64>, Vec<f64>)> = None;
+    for t in 0..runs {
+        let run_seed = seed ^ (t as u64 * 0x9E37);
+        // S-RSVD on the implicitly centered matrix.
+        let mut rng = Xoshiro256pp::seed_from_u64(run_seed);
+        let f_s = ShiftedRsvd::new(cfg).factorize(x, &mu, &mut rng).expect("srsvd");
+        mses_s.push(x.shifted_mse(&mu, &f_s.u, &f_s.s, &f_s.v));
+        // RSVD on the off-center matrix, scored against X (μ = 0).
+        let mut rng = Xoshiro256pp::seed_from_u64(run_seed);
+        let f_r = Rsvd::new(cfg).factorize(x, &mut rng).expect("rsvd");
+        let zeros = vec![0.0; x.rows()];
+        mses_r.push(x.shifted_mse(&zeros, &f_r.u, &f_r.s, &f_r.v));
+        if t + 1 == runs {
+            // Per-column errors via the dense path (scoring only; kept
+            // feasible by the reduced default sizes — the factorizations
+            // above never densify).
+            let xd = x.to_dense();
+            let cols_s = column_errors(&xd, &mu, &f_s);
+            let cols_r = column_errors(&xd, &zeros, &f_r);
+            last_cols = Some((cols_s, cols_r));
+        }
+    }
+    let (cols_s, cols_r) = last_cols.expect("runs >= 1");
+    let p1 = if runs >= 2 {
+        paired_t_test(&mses_s, &mses_r).p
+    } else {
+        f64::NAN
+    };
+    Table1Stats {
+        name: name.to_string(),
+        mse_srsvd: mean(&mses_s),
+        mse_rsvd: mean(&mses_r),
+        p1,
+        p2: paired_t_test(&cols_s, &cols_r).p,
+        wr_srsvd: win_rate(&cols_s, &cols_r),
+        runs,
+    }
+}
+
+/// The digits experiment (Table 1 left, col 1). Paper: 64×1979, k=10.
+pub fn digits_stats(count: usize, runs: usize, seed: u64) -> Table1Stats {
+    let mut rng = Xoshiro256pp::seed_from_u64(seed);
+    let x = digits_matrix(DigitsSpec { count, ..Default::default() }, &mut rng);
+    table1_dense("digits", &x, 10, runs, seed ^ 0xD161)
+}
+
+/// The faces experiment (Table 1 left, col 2). Paper: 62500×13233 LFW;
+/// default here 1024×400 synthetic (same regime, see DESIGN.md).
+pub fn faces_stats(spec: FacesSpec, runs: usize, seed: u64) -> Table1Stats {
+    let mut rng = Xoshiro256pp::seed_from_u64(seed);
+    let x = faces_matrix(spec, &mut rng);
+    table1_dense("faces", &x, 10, runs, seed ^ 0xFACE)
+}
+
+/// One word-data column of Table 1 right: m=1000 contexts × n targets.
+pub fn words_stats(targets: usize, pairs: usize, k: usize, runs: usize, seed: u64) -> Table1Stats {
+    let mut rng = Xoshiro256pp::seed_from_u64(seed);
+    let x = cooccurrence_matrix(
+        CorpusSpec { targets, pairs, ..Default::default() },
+        &mut rng,
+    );
+    table1_sparse(&format!("words n={targets}"), &x, k, runs, seed ^ 0x30D5)
+}
+
+/// Render a set of Table-1 cells in the paper's row layout.
+pub fn render(stats: &[Table1Stats]) -> String {
+    let mut header = vec!["metric".to_string()];
+    header.extend(stats.iter().map(|s| s.name.clone()));
+    let hdr: Vec<&str> = header.iter().map(|s| s.as_str()).collect();
+    let mut t = Table::new(&hdr);
+    let row = |label: &str, f: &dyn Fn(&Table1Stats) -> String| {
+        let mut cells = vec![label.to_string()];
+        cells.extend(stats.iter().map(|s| f(s)));
+        cells
+    };
+    t.row(&row("MSE of S-RSVD", &|s| fmt_sci(s.mse_srsvd)));
+    t.row(&row("MSE of RSVD", &|s| fmt_sci(s.mse_rsvd)));
+    t.row(&row("p1-value", &|s| format!("{:.3}", s.p1)));
+    t.row(&row("p2-value", &|s| format!("{:.3}", s.p2)));
+    t.row(&row("WR of S-RSVD", &|s| format!("{:.0}%", s.wr_srsvd * 100.0)));
+    t.row(&row("WR of RSVD", &|s| format!("{:.0}%", s.wr_rsvd() * 100.0)));
+    t.render()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn digits_srsvd_wins() {
+        let s = digits_stats(200, 3, 1);
+        assert!(s.mse_srsvd < s.mse_rsvd, "{s:?}");
+        assert!(s.wr_srsvd > 0.5, "{s:?}");
+        assert!(s.p2 < 0.05, "{s:?}");
+    }
+
+    #[test]
+    fn faces_srsvd_wins_big() {
+        let spec = FacesSpec { side: 16, count: 80, rank: 10, noise: 5.0 };
+        let s = faces_stats(spec, 3, 2);
+        assert!(s.mse_srsvd < s.mse_rsvd, "{s:?}");
+        // The faces regime has the largest centering advantage.
+        assert!(s.wr_srsvd > 0.6, "wr {}", s.wr_srsvd);
+    }
+
+    #[test]
+    fn words_srsvd_wins() {
+        let s = words_stats(500, 40_000, 16, 3, 3);
+        assert!(s.mse_srsvd < s.mse_rsvd, "{s:?}");
+        assert!(s.wr_srsvd > 0.5, "{s:?}");
+    }
+
+    #[test]
+    fn render_has_paper_rows() {
+        let s = digits_stats(100, 2, 4);
+        let out = render(&[s]);
+        for needle in ["MSE of S-RSVD", "p1-value", "WR of RSVD"] {
+            assert!(out.contains(needle), "{out}");
+        }
+    }
+}

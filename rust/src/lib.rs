@@ -1,0 +1,67 @@
+//! # srsvd — Shifted Randomized Singular Value Decomposition
+//!
+//! A production-shaped reproduction of *"Shifted Randomized Singular
+//! Value Decomposition"* (Ali Basirat, 2019), which extends the
+//! randomized SVD of Halko, Martinsson & Tropp (2011) to factorize a
+//! shifted matrix `X̄ = X − μ·1ᵀ` **without ever materializing `X̄`** —
+//! the key case being PCA of large sparse matrices whose mean-centering
+//! would densify them.
+//!
+//! ## Layout
+//!
+//! * [`linalg`] — from-scratch dense & sparse linear algebra: blocked
+//!   GEMM, Householder/MGS QR, rank-1 QR-update, one-sided Jacobi SVD,
+//!   CSR sparse kernels. No BLAS/LAPACK dependency.
+//! * [`svd`] — the paper's algorithms: deterministic SVD oracle,
+//!   the RSVD baseline, and [`svd::ShiftedRsvd`] (Algorithm 1) with
+//!   dense and sparse paths.
+//! * [`rng`] — PRNG suite (xoshiro256++, Gaussian, Zipf) seeding every
+//!   experiment deterministically.
+//! * [`data`] — synthetic workload generators standing in for the
+//!   paper's datasets (see DESIGN.md §Substitutions).
+//! * [`stats`] — paired t-tests (Student-t CDF via incomplete beta),
+//!   win-rates, descriptive statistics.
+//! * [`runtime`] — PJRT executor: loads the AOT HLO artifacts produced
+//!   by `python/compile/aot.py` and runs them on the CPU client.
+//! * [`coordinator`] — the factorization service: job queue, worker
+//!   pool, config router (artifact vs native engine), metrics.
+//! * [`experiments`] — one runner per paper figure/table, shared by
+//!   `examples/` and `benches/`.
+//! * [`bench`] / [`prop`] — mini criterion / proptest substitutes
+//!   (the build environment is offline; see DESIGN.md).
+//!
+//! ## Quickstart
+//!
+//! ```no_run
+//! use srsvd::prelude::*;
+//!
+//! let mut rng = Xoshiro256pp::seed_from_u64(0);
+//! let x = Dense::from_fn(100, 1000, |_, _| rng.next_uniform());
+//! let cfg = SvdConfig { k: 10, oversample: 10, power_iters: 1, ..Default::default() };
+//! let fact = ShiftedRsvd::new(cfg).factorize_mean_centered(&x, &mut rng).unwrap();
+//! println!("top singular values: {:?}", &fact.s[..5]);
+//! ```
+
+pub mod bench;
+pub mod cli;
+pub mod config;
+pub mod coordinator;
+pub mod data;
+pub mod experiments;
+pub mod linalg;
+pub mod prop;
+pub mod rng;
+pub mod runtime;
+pub mod stats;
+pub mod svd;
+pub mod util;
+
+/// Convenience re-exports for the common API surface.
+pub mod prelude {
+    pub use crate::data::{DataSpec, Distribution};
+    pub use crate::linalg::{Dense, Csr};
+    pub use crate::rng::{Rng, Xoshiro256pp};
+    pub use crate::svd::{
+        Factorization, Pca, Rsvd, ShiftedRsvd, SvdConfig, SvdEngine,
+    };
+}

@@ -1,0 +1,281 @@
+//! Row-major dense f64 matrix.
+//!
+//! Deliberately simple: contiguous `Vec<f64>`, row-major, with the
+//! handful of structural ops the SVD algorithms need. Heavy compute
+//! (products) lives in [`crate::linalg::gemm`].
+
+use crate::rng::Rng;
+
+/// A dense `rows x cols` matrix, row-major.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Dense {
+    rows: usize,
+    cols: usize,
+    data: Vec<f64>,
+}
+
+impl Dense {
+    /// All-zeros matrix.
+    pub fn zeros(rows: usize, cols: usize) -> Self {
+        Dense { rows, cols, data: vec![0.0; rows * cols] }
+    }
+
+    /// Identity-like matrix (1s on the main diagonal).
+    pub fn eye(n: usize) -> Self {
+        let mut m = Dense::zeros(n, n);
+        for i in 0..n {
+            m[(i, i)] = 1.0;
+        }
+        m
+    }
+
+    /// Build from a generator function.
+    pub fn from_fn(rows: usize, cols: usize, mut f: impl FnMut(usize, usize) -> f64) -> Self {
+        let mut data = Vec::with_capacity(rows * cols);
+        for i in 0..rows {
+            for j in 0..cols {
+                data.push(f(i, j));
+            }
+        }
+        Dense { rows, cols, data }
+    }
+
+    /// Wrap an existing row-major buffer.
+    pub fn from_vec(rows: usize, cols: usize, data: Vec<f64>) -> Self {
+        assert_eq!(data.len(), rows * cols, "buffer/shape mismatch");
+        Dense { rows, cols, data }
+    }
+
+    /// Standard-Gaussian random matrix (the test matrix Ω of Alg. 1).
+    pub fn gaussian(rows: usize, cols: usize, rng: &mut dyn Rng) -> Self {
+        Dense::from_fn(rows, cols, |_, _| rng.next_gaussian())
+    }
+
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+
+    pub fn shape(&self) -> (usize, usize) {
+        (self.rows, self.cols)
+    }
+
+    pub fn data(&self) -> &[f64] {
+        &self.data
+    }
+
+    pub fn data_mut(&mut self) -> &mut [f64] {
+        &mut self.data
+    }
+
+    /// Borrow row `i` as a slice.
+    #[inline]
+    pub fn row(&self, i: usize) -> &[f64] {
+        &self.data[i * self.cols..(i + 1) * self.cols]
+    }
+
+    #[inline]
+    pub fn row_mut(&mut self, i: usize) -> &mut [f64] {
+        &mut self.data[i * self.cols..(i + 1) * self.cols]
+    }
+
+    /// Copy column `j` out (row-major storage makes columns strided).
+    pub fn col(&self, j: usize) -> Vec<f64> {
+        (0..self.rows).map(|i| self[(i, j)]).collect()
+    }
+
+    pub fn set_col(&mut self, j: usize, v: &[f64]) {
+        assert_eq!(v.len(), self.rows);
+        for i in 0..self.rows {
+            self[(i, j)] = v[i];
+        }
+    }
+
+    /// Transposed copy.
+    pub fn transpose(&self) -> Dense {
+        let mut t = Dense::zeros(self.cols, self.rows);
+        // Blocked transpose for cache friendliness on large matrices.
+        const B: usize = 32;
+        for bi in (0..self.rows).step_by(B) {
+            for bj in (0..self.cols).step_by(B) {
+                for i in bi..(bi + B).min(self.rows) {
+                    for j in bj..(bj + B).min(self.cols) {
+                        t[(j, i)] = self[(i, j)];
+                    }
+                }
+            }
+        }
+        t
+    }
+
+    /// Keep the first `k` columns.
+    pub fn truncate_cols(&self, k: usize) -> Dense {
+        assert!(k <= self.cols);
+        Dense::from_fn(self.rows, k, |i, j| self[(i, j)])
+    }
+
+    /// Per-row mean: the PCA shifting vector μ (columns are samples).
+    pub fn row_means(&self) -> Vec<f64> {
+        let inv = 1.0 / self.cols as f64;
+        (0..self.rows)
+            .map(|i| self.row(i).iter().sum::<f64>() * inv)
+            .collect()
+    }
+
+    /// Subtract `mu` from every column: the explicit densifying
+    /// mean-centering (Eq. 2) the paper's algorithm avoids. Used by the
+    /// RSVD baseline and by tests.
+    pub fn subtract_column(&self, mu: &[f64]) -> Dense {
+        assert_eq!(mu.len(), self.rows);
+        let mut out = self.clone();
+        for i in 0..self.rows {
+            let m = mu[i];
+            for x in out.row_mut(i) {
+                *x -= m;
+            }
+        }
+        out
+    }
+
+    /// Frobenius norm.
+    pub fn fro_norm(&self) -> f64 {
+        self.data.iter().map(|x| x * x).sum::<f64>().sqrt()
+    }
+
+    /// Squared L2 norm of column `j`.
+    pub fn col_norm_sq(&self, j: usize) -> f64 {
+        (0..self.rows).map(|i| self[(i, j)] * self[(i, j)]).sum()
+    }
+
+    /// `self * diag(d)` — scale columns (forming U·Σ).
+    pub fn scale_cols(&self, d: &[f64]) -> Dense {
+        assert_eq!(d.len(), self.cols);
+        Dense::from_fn(self.rows, self.cols, |i, j| self[(i, j)] * d[j])
+    }
+
+    /// Matrix–vector product `self * v`.
+    pub fn matvec(&self, v: &[f64]) -> Vec<f64> {
+        assert_eq!(v.len(), self.cols);
+        (0..self.rows)
+            .map(|i| {
+                self.row(i)
+                    .iter()
+                    .zip(v)
+                    .map(|(a, b)| a * b)
+                    .sum::<f64>()
+            })
+            .collect()
+    }
+
+    /// Transposed matrix–vector product `selfᵀ * v`.
+    pub fn tmatvec(&self, v: &[f64]) -> Vec<f64> {
+        assert_eq!(v.len(), self.rows);
+        let mut out = vec![0.0; self.cols];
+        for i in 0..self.rows {
+            let vi = v[i];
+            for (o, &x) in out.iter_mut().zip(self.row(i)) {
+                *o += vi * x;
+            }
+        }
+        out
+    }
+
+    /// Convert to f32 row-major (the runtime artifact boundary).
+    pub fn to_f32(&self) -> Vec<f32> {
+        self.data.iter().map(|&x| x as f32).collect()
+    }
+
+    /// Build from f32 row-major data (artifact outputs).
+    pub fn from_f32(rows: usize, cols: usize, data: &[f32]) -> Dense {
+        assert_eq!(data.len(), rows * cols);
+        Dense {
+            rows,
+            cols,
+            data: data.iter().map(|&x| x as f64).collect(),
+        }
+    }
+
+    /// Maximum absolute entry.
+    pub fn max_abs(&self) -> f64 {
+        self.data.iter().fold(0.0f64, |m, x| m.max(x.abs()))
+    }
+}
+
+impl std::ops::Index<(usize, usize)> for Dense {
+    type Output = f64;
+    #[inline]
+    fn index(&self, (i, j): (usize, usize)) -> &f64 {
+        debug_assert!(i < self.rows && j < self.cols);
+        &self.data[i * self.cols + j]
+    }
+}
+
+impl std::ops::IndexMut<(usize, usize)> for Dense {
+    #[inline]
+    fn index_mut(&mut self, (i, j): (usize, usize)) -> &mut f64 {
+        debug_assert!(i < self.rows && j < self.cols);
+        &mut self.data[i * self.cols + j]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Xoshiro256pp;
+
+    #[test]
+    fn indexing_round_trip() {
+        let mut m = Dense::zeros(3, 5);
+        m[(2, 4)] = 7.5;
+        assert_eq!(m[(2, 4)], 7.5);
+        assert_eq!(m.row(2)[4], 7.5);
+        assert_eq!(m.col(4)[2], 7.5);
+    }
+
+    #[test]
+    fn transpose_involution() {
+        let mut rng = Xoshiro256pp::seed_from_u64(0);
+        let a = Dense::gaussian(37, 53, &mut rng);
+        assert_eq!(a.transpose().transpose(), a);
+        assert_eq!(a.transpose()[(10, 20)], a[(20, 10)]);
+    }
+
+    #[test]
+    fn row_means_and_centering() {
+        let a = Dense::from_vec(2, 3, vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0]);
+        let mu = a.row_means();
+        assert_eq!(mu, vec![2.0, 5.0]);
+        let c = a.subtract_column(&mu);
+        assert_eq!(c.row(0), &[-1.0, 0.0, 1.0]);
+        assert!(c.row_means().iter().all(|&m| m.abs() < 1e-15));
+    }
+
+    #[test]
+    fn matvec_against_manual() {
+        let a = Dense::from_vec(2, 3, vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0]);
+        assert_eq!(a.matvec(&[1.0, 0.0, -1.0]), vec![-2.0, -2.0]);
+        assert_eq!(a.tmatvec(&[1.0, 1.0]), vec![5.0, 7.0, 9.0]);
+    }
+
+    #[test]
+    fn truncate_and_scale() {
+        let a = Dense::from_fn(4, 4, |i, j| (i + j) as f64);
+        let t = a.truncate_cols(2);
+        assert_eq!(t.shape(), (4, 2));
+        assert_eq!(t[(3, 1)], 4.0);
+        let s = t.scale_cols(&[2.0, 0.5]);
+        assert_eq!(s[(3, 0)], 6.0);
+        assert_eq!(s[(3, 1)], 2.0);
+    }
+
+    #[test]
+    fn f32_round_trip() {
+        let mut rng = Xoshiro256pp::seed_from_u64(1);
+        let a = Dense::gaussian(8, 9, &mut rng);
+        let b = Dense::from_f32(8, 9, &a.to_f32());
+        assert!(crate::linalg::fro_diff(&a, &b) < 1e-5);
+    }
+}

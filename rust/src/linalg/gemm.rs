@@ -1,0 +1,283 @@
+//! Blocked dense GEMM and the fused rank-1 variant — the native hot path.
+//!
+//! `matmul_rank1(A, B, u, v) = A·B − u·vᵀ` is the same primitive the
+//! Pallas kernel implements (see `python/compile/kernels/`): every
+//! product against the implicitly shifted matrix `X̄ = X − μ·1ᵀ` is a
+//! plain product plus a rank-1 downdate, so the dense `X̄` never exists.
+//!
+//! Design: classic cache-blocked i-k-j loop order over row-major data.
+//! The inner kernel is a j-vectorizable AXPY (`c_row += a_ik * b_row`),
+//! which LLVM auto-vectorizes well; panels are sized so a block of B
+//! and a row-strip of C stay L1/L2 resident. Single-threaded by design
+//! — the benchmark machine exposes one core (see DESIGN.md §Perf), and
+//! the coordinator parallelizes across *jobs* instead.
+
+use super::Dense;
+
+/// Tuning knobs for the blocked GEMM (exposed for the perf bench).
+#[derive(Debug, Clone, Copy)]
+pub struct MatmulPlan {
+    /// Rows of A per panel (strip of C kept hot).
+    pub mc: usize,
+    /// Contraction-depth per panel (strip of B kept hot).
+    pub kc: usize,
+}
+
+impl Default for MatmulPlan {
+    fn default() -> Self {
+        // f64: 256 KiB L2 / 8 bytes ≈ 32k doubles. kc×nc panel of B plus
+        // mc×kc panel of A; kc=192, mc=48 measured best on this core (EXPERIMENTS.md §Perf).
+        MatmulPlan { mc: 48, kc: 192 }
+    }
+}
+
+/// `C = A · B` (blocked).
+pub fn matmul(a: &Dense, b: &Dense) -> Dense {
+    matmul_with_plan(a, b, MatmulPlan::default())
+}
+
+pub fn matmul_with_plan(a: &Dense, b: &Dense, plan: MatmulPlan) -> Dense {
+    assert_eq!(a.cols(), b.rows(), "matmul shape mismatch");
+    let (m, _k) = a.shape();
+    let n = b.cols();
+    let mut c = Dense::zeros(m, n);
+    gemm_into(a, b, &mut c, plan);
+    c
+}
+
+/// `C = A · B − u·vᵀ` — the shifted-product primitive.
+pub fn matmul_rank1(a: &Dense, b: &Dense, u: &[f64], v: &[f64]) -> Dense {
+    matmul_rank1_with_plan(a, b, u, v, MatmulPlan::default())
+}
+
+pub fn matmul_rank1_with_plan(
+    a: &Dense,
+    b: &Dense,
+    u: &[f64],
+    v: &[f64],
+    plan: MatmulPlan,
+) -> Dense {
+    assert_eq!(a.cols(), b.rows(), "matmul shape mismatch");
+    let (m, _) = a.shape();
+    let n = b.cols();
+    assert_eq!(u.len(), m, "u length");
+    assert_eq!(v.len(), n, "v length");
+    let mut c = Dense::zeros(m, n);
+    // Fused epilogue: seed C with the downdate, then accumulate A·B on
+    // top — one pass over C total.
+    for i in 0..m {
+        let ui = u[i];
+        if ui != 0.0 {
+            for (cx, &vx) in c.row_mut(i).iter_mut().zip(v) {
+                *cx = -ui * vx;
+            }
+        }
+    }
+    gemm_into(a, b, &mut c, plan);
+    c
+}
+
+/// Accumulating core: `C += A · B`, cache-blocked.
+fn gemm_into(a: &Dense, b: &Dense, c: &mut Dense, plan: MatmulPlan) {
+    let (m, kdim) = a.shape();
+    let n = b.cols();
+    let mc = plan.mc.max(1);
+    let kc = plan.kc.max(1);
+
+    for k0 in (0..kdim).step_by(kc) {
+        let k1 = (k0 + kc).min(kdim);
+        for i0 in (0..m).step_by(mc) {
+            let i1 = (i0 + mc).min(m);
+            for i in i0..i1 {
+                let a_row = &a.row(i)[k0..k1];
+                let c_row = c.row_mut(i);
+                // 4-way k-unroll: quarters the number of passes over
+                // c_row, the dominant memory traffic for wide C.
+                // (Perf log: 2-way = 10.3 GFLOP/s, 4-way = see
+                // EXPERIMENTS.md §Perf.)
+                let mut kk = 0;
+                while kk + 3 < a_row.len() {
+                    let a0 = a_row[kk];
+                    let a1 = a_row[kk + 1];
+                    let a2 = a_row[kk + 2];
+                    let a3 = a_row[kk + 3];
+                    let b0 = b.row(k0 + kk);
+                    let b1 = b.row(k0 + kk + 1);
+                    let b2 = b.row(k0 + kk + 2);
+                    let b3 = b.row(k0 + kk + 3);
+                    for j in 0..n {
+                        c_row[j] += a0 * b0[j] + a1 * b1[j] + a2 * b2[j] + a3 * b3[j];
+                    }
+                    kk += 4;
+                }
+                while kk < a_row.len() {
+                    let aik = a_row[kk];
+                    if aik != 0.0 {
+                        let b_row = b.row(k0 + kk);
+                        for j in 0..n {
+                            c_row[j] += aik * b_row[j];
+                        }
+                    }
+                    kk += 1;
+                }
+            }
+        }
+    }
+}
+
+/// `C = Aᵀ · B` without forming Aᵀ (A is m×n, B is m×k → C is n×k).
+///
+/// Used for the `X̄ᵀQ` products: row-major X is traversed row-wise and
+/// scattered into C, which is the cache-friendly direction.
+pub fn tmatmul(a: &Dense, b: &Dense) -> Dense {
+    assert_eq!(a.rows(), b.rows(), "tmatmul shape mismatch");
+    let (m, n) = a.shape();
+    let k = b.cols();
+    let mut c = Dense::zeros(n, k);
+    for i in 0..m {
+        let a_row = a.row(i);
+        let b_row = b.row(i);
+        for (jj, &aij) in a_row.iter().enumerate() {
+            if aij != 0.0 {
+                let c_row = c.row_mut(jj);
+                for l in 0..k {
+                    c_row[l] += aij * b_row[l];
+                }
+            }
+        }
+    }
+    c
+}
+
+/// `C = Aᵀ·B − u·vᵀ` fused (u has length n = a.cols()).
+pub fn tmatmul_rank1(a: &Dense, b: &Dense, u: &[f64], v: &[f64]) -> Dense {
+    let (m, n) = a.shape();
+    assert_eq!(m, b.rows());
+    let k = b.cols();
+    assert_eq!(u.len(), n);
+    assert_eq!(v.len(), k);
+    let mut c = Dense::zeros(n, k);
+    for j in 0..n {
+        let uj = u[j];
+        if uj != 0.0 {
+            for (cx, &vx) in c.row_mut(j).iter_mut().zip(v) {
+                *cx = -uj * vx;
+            }
+        }
+    }
+    for i in 0..m {
+        let a_row = a.row(i);
+        let b_row = b.row(i);
+        for (jj, &aij) in a_row.iter().enumerate() {
+            if aij != 0.0 {
+                let c_row = c.row_mut(jj);
+                for l in 0..k {
+                    c_row[l] += aij * b_row[l];
+                }
+            }
+        }
+    }
+    c
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::fro_diff;
+    use crate::rng::{Rng, Xoshiro256pp};
+
+    fn naive_matmul(a: &Dense, b: &Dense) -> Dense {
+        let (m, k) = a.shape();
+        let n = b.cols();
+        Dense::from_fn(m, n, |i, j| (0..k).map(|l| a[(i, l)] * b[(l, j)]).sum())
+    }
+
+    #[test]
+    fn blocked_matches_naive() {
+        let mut rng = Xoshiro256pp::seed_from_u64(0);
+        for (m, k, n) in [(1, 1, 1), (3, 5, 2), (17, 33, 9), (64, 70, 65), (100, 257, 31)] {
+            let a = Dense::gaussian(m, k, &mut rng);
+            let b = Dense::gaussian(k, n, &mut rng);
+            let want = naive_matmul(&a, &b);
+            assert!(fro_diff(&matmul(&a, &b), &want) < 1e-9 * (m * n) as f64 + 1e-12);
+        }
+    }
+
+    #[test]
+    fn plan_invariance() {
+        let mut rng = Xoshiro256pp::seed_from_u64(1);
+        let a = Dense::gaussian(40, 90, &mut rng);
+        let b = Dense::gaussian(90, 30, &mut rng);
+        let base = matmul(&a, &b);
+        for (mc, kc) in [(1, 1), (7, 13), (64, 256), (1000, 1000)] {
+            let got = matmul_with_plan(&a, &b, MatmulPlan { mc, kc });
+            assert!(fro_diff(&got, &base) < 1e-10);
+        }
+    }
+
+    #[test]
+    fn rank1_fusion_exact() {
+        let mut rng = Xoshiro256pp::seed_from_u64(2);
+        let a = Dense::gaussian(23, 31, &mut rng);
+        let b = Dense::gaussian(31, 11, &mut rng);
+        let u: Vec<f64> = (0..23).map(|_| rng.next_gaussian()).collect();
+        let v: Vec<f64> = (0..11).map(|_| rng.next_gaussian()).collect();
+        let fused = matmul_rank1(&a, &b, &u, &v);
+        let mut want = matmul(&a, &b);
+        for i in 0..23 {
+            for j in 0..11 {
+                want[(i, j)] -= u[i] * v[j];
+            }
+        }
+        assert!(fro_diff(&fused, &want) < 1e-10);
+    }
+
+    #[test]
+    fn rank1_zero_vectors_is_plain_matmul() {
+        let mut rng = Xoshiro256pp::seed_from_u64(3);
+        let a = Dense::gaussian(12, 8, &mut rng);
+        let b = Dense::gaussian(8, 6, &mut rng);
+        let got = matmul_rank1(&a, &b, &vec![0.0; 12], &vec![0.0; 6]);
+        assert!(fro_diff(&got, &matmul(&a, &b)) < 1e-14);
+    }
+
+    #[test]
+    fn tmatmul_matches_explicit_transpose() {
+        let mut rng = Xoshiro256pp::seed_from_u64(4);
+        let a = Dense::gaussian(19, 27, &mut rng);
+        let b = Dense::gaussian(19, 7, &mut rng);
+        let want = matmul(&a.transpose(), &b);
+        assert!(fro_diff(&tmatmul(&a, &b), &want) < 1e-10);
+    }
+
+    #[test]
+    fn tmatmul_rank1_matches_composition() {
+        let mut rng = Xoshiro256pp::seed_from_u64(5);
+        let a = Dense::gaussian(15, 21, &mut rng);
+        let b = Dense::gaussian(15, 5, &mut rng);
+        let u: Vec<f64> = (0..21).map(|_| rng.next_gaussian()).collect();
+        let v: Vec<f64> = (0..5).map(|_| rng.next_gaussian()).collect();
+        let fused = tmatmul_rank1(&a, &b, &u, &v);
+        let mut want = tmatmul(&a, &b);
+        for i in 0..21 {
+            for j in 0..5 {
+                want[(i, j)] -= u[i] * v[j];
+            }
+        }
+        assert!(fro_diff(&fused, &want) < 1e-10);
+    }
+
+    /// The shifted-product identity the whole paper rests on:
+    /// (X − μ1ᵀ)Ω == matmul_rank1(X, Ω, μ, colsum(Ω)).
+    #[test]
+    fn shifted_product_identity() {
+        let mut rng = Xoshiro256pp::seed_from_u64(6);
+        let x = Dense::from_fn(20, 35, |_, _| rng.next_uniform());
+        let om = Dense::gaussian(35, 6, &mut rng);
+        let mu = x.row_means();
+        let colsum: Vec<f64> = (0..6).map(|j| om.col(j).iter().sum()).collect();
+        let implicit = matmul_rank1(&x, &om, &mu, &colsum);
+        let explicit = matmul(&x.subtract_column(&mu), &om);
+        assert!(fro_diff(&implicit, &explicit) < 1e-9);
+    }
+}

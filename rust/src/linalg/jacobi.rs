@@ -1,0 +1,272 @@
+//! One-sided Jacobi SVD and the symmetric Jacobi eigensolver.
+//!
+//! One-sided Jacobi (Hestenes 1958) orthogonalizes the columns of `W`
+//! by plane rotations: `W·J₁·J₂⋯ = B` with mutually orthogonal columns,
+//! giving `W = U·Σ·Vᵀ` with `σⱼ = ‖bⱼ‖`, `uⱼ = bⱼ/σⱼ` and `V` the
+//! accumulated rotations. It is slow for big matrices but simple,
+//! accurate (computes small singular values to high relative accuracy)
+//! and has no LAPACK dependency — exactly what the deterministic oracle
+//! and the small `K×n` projected SVD (Alg. 1 Line 13) need.
+
+use super::Dense;
+
+/// Convergence controls for the Jacobi loops.
+#[derive(Debug, Clone, Copy)]
+pub struct JacobiOpts {
+    /// Hard cap on cyclic sweeps.
+    pub max_sweeps: usize,
+    /// Stop when every off-diagonal |gram(p,q)| <= tol·‖wₚ‖‖w_q‖.
+    pub tol: f64,
+}
+
+impl Default for JacobiOpts {
+    fn default() -> Self {
+        JacobiOpts { max_sweeps: 30, tol: 1e-12 }
+    }
+}
+
+/// Full SVD of `w` (n×k, n ≥ k): returns `(u, s, v)` with
+/// `w = u·diag(s)·vᵀ`, `s` descending, `u` n×k, `v` k×k.
+pub fn jacobi_svd(w: &Dense, opts: JacobiOpts) -> (Dense, Vec<f64>, Dense) {
+    let (n, k) = w.shape();
+    assert!(n >= k, "jacobi_svd wants tall input, got {n}x{k}");
+    // Column-major copies for cache-friendly column rotations.
+    let mut b: Vec<Vec<f64>> = (0..k).map(|j| w.col(j)).collect();
+    let mut v: Vec<Vec<f64>> = (0..k)
+        .map(|j| {
+            let mut e = vec![0.0; k];
+            e[j] = 1.0;
+            e
+        })
+        .collect();
+
+    // Cached squared column norms: rotating (p, q) maps the Gram
+    // entries exactly (app' = c²app − 2cs·apq + s²aqq, and symmetrically
+    // for aqq'), so only the cross term apq needs an O(n) reduction per
+    // pair — a ~3× cut in reduction work. Norms are refreshed from the
+    // data once per sweep to stop drift. (Perf log: EXPERIMENTS.md §Perf.)
+    let mut norms: Vec<f64> = b.iter().map(|col| col.iter().map(|x| x * x).sum()).collect();
+
+    for _sweep in 0..opts.max_sweeps {
+        let mut converged = true;
+        for p in 0..k.saturating_sub(1) {
+            for q in (p + 1)..k {
+                let (bp, bq) = pair_mut(&mut b, p, q);
+                let app = norms[p];
+                let aqq = norms[q];
+                let apq: f64 = bp.iter().zip(bq.iter()).map(|(x, y)| x * y).sum();
+                if apq.abs() <= opts.tol * (app * aqq).sqrt() + f64::MIN_POSITIVE {
+                    continue;
+                }
+                converged = false;
+                // Rotation zeroing the (p,q) Gram entry.
+                let tau = (aqq - app) / (2.0 * apq);
+                let t = tau.signum() / (tau.abs() + (1.0 + tau * tau).sqrt());
+                let c = 1.0 / (1.0 + t * t).sqrt();
+                let s = c * t;
+                rotate(bp, bq, c, s);
+                let (vp, vq) = pair_mut(&mut v, p, q);
+                rotate(vp, vq, c, s);
+                let (c2, s2, cs) = (c * c, s * s, c * s);
+                norms[p] = c2 * app - 2.0 * cs * apq + s2 * aqq;
+                norms[q] = s2 * app + 2.0 * cs * apq + c2 * aqq;
+            }
+        }
+        if converged {
+            break;
+        }
+        // Refresh cached norms from the data between sweeps.
+        for (j, col) in b.iter().enumerate() {
+            norms[j] = col.iter().map(|x| x * x).sum();
+        }
+    }
+
+    // Extract factors, sorted by descending singular value.
+    let mut sv: Vec<(f64, usize)> = b
+        .iter()
+        .enumerate()
+        .map(|(j, col)| (col.iter().map(|x| x * x).sum::<f64>().sqrt(), j))
+        .collect();
+    sv.sort_by(|a, b| b.0.partial_cmp(&a.0).unwrap());
+
+    let mut u = Dense::zeros(n, k);
+    let mut vout = Dense::zeros(k, k);
+    let mut s = Vec::with_capacity(k);
+    for (out_j, &(sigma, j)) in sv.iter().enumerate() {
+        s.push(sigma);
+        let inv = if sigma > 1e-300 { 1.0 / sigma } else { 0.0 };
+        for i in 0..n {
+            u[(i, out_j)] = b[j][i] * inv;
+        }
+        for i in 0..k {
+            vout[(i, out_j)] = v[j][i];
+        }
+    }
+    (u, s, vout)
+}
+
+#[inline]
+fn rotate(x: &mut [f64], y: &mut [f64], c: f64, s: f64) {
+    for (xi, yi) in x.iter_mut().zip(y.iter_mut()) {
+        let a = *xi;
+        let b = *yi;
+        *xi = c * a - s * b;
+        *yi = s * a + c * b;
+    }
+}
+
+/// Two distinct mutable column borrows.
+fn pair_mut<T>(cols: &mut [Vec<T>], p: usize, q: usize) -> (&mut Vec<T>, &mut Vec<T>) {
+    debug_assert!(p < q);
+    let (lo, hi) = cols.split_at_mut(q);
+    (&mut lo[p], &mut hi[0])
+}
+
+/// Symmetric Jacobi eigendecomposition of a k×k symmetric matrix.
+///
+/// Returns `(evecs, evals)` with eigenvalues descending; used by the
+/// Gram-route small SVD (`Y·Yᵀ = U₁Σ²U₁ᵀ`).
+pub fn sym_jacobi_eig(a: &Dense, opts: JacobiOpts) -> (Dense, Vec<f64>) {
+    let k = a.rows();
+    assert_eq!(a.shape(), (k, k), "need square symmetric");
+    let mut m = a.clone();
+    let mut v = Dense::eye(k);
+
+    for _sweep in 0..opts.max_sweeps {
+        let mut off = 0.0f64;
+        for p in 0..k {
+            for q in (p + 1)..k {
+                off = off.max(m[(p, q)].abs());
+            }
+        }
+        if off <= opts.tol * m.max_abs().max(1e-300) {
+            break;
+        }
+        for p in 0..k.saturating_sub(1) {
+            for q in (p + 1)..k {
+                let apq = m[(p, q)];
+                if apq.abs() <= opts.tol * m.max_abs().max(1e-300) {
+                    continue;
+                }
+                let app = m[(p, p)];
+                let aqq = m[(q, q)];
+                let tau = (aqq - app) / (2.0 * apq);
+                let t = tau.signum() / (tau.abs() + (1.0 + tau * tau).sqrt());
+                let c = 1.0 / (1.0 + t * t).sqrt();
+                let s = c * t;
+                // Update rows/cols p and q of m (two-sided rotation).
+                for i in 0..k {
+                    let mip = m[(i, p)];
+                    let miq = m[(i, q)];
+                    m[(i, p)] = c * mip - s * miq;
+                    m[(i, q)] = s * mip + c * miq;
+                }
+                for i in 0..k {
+                    let mpi = m[(p, i)];
+                    let mqi = m[(q, i)];
+                    m[(p, i)] = c * mpi - s * mqi;
+                    m[(q, i)] = s * mpi + c * mqi;
+                }
+                for i in 0..k {
+                    let vip = v[(i, p)];
+                    let viq = v[(i, q)];
+                    v[(i, p)] = c * vip - s * viq;
+                    v[(i, q)] = s * vip + c * viq;
+                }
+            }
+        }
+    }
+
+    let mut order: Vec<usize> = (0..k).collect();
+    order.sort_by(|&i, &j| m[(j, j)].partial_cmp(&m[(i, i)]).unwrap());
+    let evals: Vec<f64> = order.iter().map(|&i| m[(i, i)]).collect();
+    let evecs = Dense::from_fn(k, k, |i, j| v[(i, order[j])]);
+    (evecs, evals)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::gemm;
+    use crate::linalg::qr::orthonormality_residual;
+    use crate::linalg::{fro_diff, matmul};
+    use crate::rng::Xoshiro256pp;
+
+    #[test]
+    fn svd_reconstructs_random_matrices() {
+        let mut rng = Xoshiro256pp::seed_from_u64(0);
+        for (n, k) in [(1, 1), (5, 5), (40, 8), (100, 15), (64, 64)] {
+            let w = Dense::gaussian(n, k, &mut rng);
+            let (u, s, v) = jacobi_svd(&w, JacobiOpts::default());
+            let rec = matmul(&u.scale_cols(&s), &v.transpose());
+            assert!(fro_diff(&rec, &w) < 1e-9 * (n as f64), "{n}x{k}");
+            assert!(orthonormality_residual(&v) < 1e-10, "{n}x{k}");
+            // Descending.
+            assert!(s.windows(2).all(|p| p[0] >= p[1] - 1e-12), "{n}x{k}");
+        }
+    }
+
+    #[test]
+    fn svd_singular_values_match_known_matrix() {
+        // diag(3, 2, 1) embedded in a rotation.
+        let d = Dense::from_vec(3, 3, vec![3.0, 0.0, 0.0, 0.0, 2.0, 0.0, 0.0, 0.0, 1.0]);
+        let (_, s, _) = jacobi_svd(&d, JacobiOpts::default());
+        assert!((s[0] - 3.0).abs() < 1e-12);
+        assert!((s[1] - 2.0).abs() < 1e-12);
+        assert!((s[2] - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn svd_rank_deficient() {
+        // Two identical columns: one zero singular value.
+        let mut w = Dense::zeros(10, 3);
+        for i in 0..10 {
+            w[(i, 0)] = (i + 1) as f64;
+            w[(i, 1)] = (i + 1) as f64;
+            w[(i, 2)] = if i == 0 { 1.0 } else { 0.0 };
+        }
+        let (u, s, v) = jacobi_svd(&w, JacobiOpts::default());
+        assert!(s[2] < 1e-10, "smallest sv {}", s[2]);
+        let rec = matmul(&u.scale_cols(&s), &v.transpose());
+        assert!(fro_diff(&rec, &w) < 1e-9);
+    }
+
+    #[test]
+    fn svd_high_relative_accuracy_small_values() {
+        // sigma = [1, 1e-6]: Jacobi should nail both.
+        let mut rng = Xoshiro256pp::seed_from_u64(1);
+        let (q1, _) = crate::linalg::qr::householder_qr(&Dense::gaussian(30, 2, &mut rng));
+        let (q2, _) = crate::linalg::qr::householder_qr(&Dense::gaussian(2, 2, &mut rng));
+        let w = matmul(&q1.scale_cols(&[1.0, 1e-6]), &q2.transpose());
+        let (_, s, _) = jacobi_svd(&w, JacobiOpts::default());
+        assert!((s[0] - 1.0).abs() < 1e-10);
+        assert!((s[1] - 1e-6).abs() < 1e-12, "tiny sv {}", s[1]);
+    }
+
+    #[test]
+    fn eig_matches_svd_on_psd_gram() {
+        let mut rng = Xoshiro256pp::seed_from_u64(2);
+        let w = Dense::gaussian(30, 6, &mut rng);
+        let g = gemm::tmatmul(&w, &w); // 6x6 PSD
+        let (evecs, evals) = sym_jacobi_eig(&g, JacobiOpts::default());
+        let (_, s, _) = jacobi_svd(&w, JacobiOpts::default());
+        for j in 0..6 {
+            assert!(
+                (evals[j].max(0.0).sqrt() - s[j]).abs() < 1e-8 * s[0].max(1.0),
+                "eval {j}"
+            );
+        }
+        // Eigen relation G V = V Λ.
+        let gv = matmul(&g, &evecs);
+        let vl = evecs.scale_cols(&evals);
+        assert!(fro_diff(&gv, &vl) < 1e-8 * g.fro_norm().max(1.0));
+        assert!(orthonormality_residual(&evecs) < 1e-10);
+    }
+
+    #[test]
+    fn eig_handles_diagonal_and_identity() {
+        let (v, l) = sym_jacobi_eig(&Dense::eye(4), JacobiOpts::default());
+        assert!(l.iter().all(|&x| (x - 1.0).abs() < 1e-14));
+        assert!(orthonormality_residual(&v) < 1e-12);
+    }
+}

@@ -1,0 +1,218 @@
+//! QR factorizations: Householder (thin, backward stable) and Modified
+//! Gram–Schmidt with re-orthogonalization.
+//!
+//! The randomized SVD only needs an orthonormal *basis* Q of the sample
+//! matrix; Householder is the default (stable even when power iteration
+//! makes the sample matrix ill-conditioned). MGS mirrors the pure-jax
+//! implementation in `python/compile/linalg.py` bit-for-bit in
+//! structure, which keeps the two engines comparable in tests.
+
+use super::Dense;
+
+/// Thin Householder QR of an `m x k` matrix (`m >= k`).
+///
+/// Returns `(q, r)` with `q` m×k (orthonormal columns) and `r` k×k upper
+/// triangular such that `a = q · r`.
+pub fn householder_qr(a: &Dense) -> (Dense, Dense) {
+    let (m, k) = a.shape();
+    assert!(m >= k, "householder_qr needs m >= k, got {m}x{k}");
+    let mut r = a.clone(); // will carry the reduced matrix
+    // Householder vectors, stored column-wise in an m×k workspace.
+    let mut vs = Dense::zeros(m, k);
+
+    for j in 0..k {
+        // Build the reflector for column j below the diagonal.
+        let mut norm_sq = 0.0;
+        for i in j..m {
+            norm_sq += r[(i, j)] * r[(i, j)];
+        }
+        let norm = norm_sq.sqrt();
+        if norm == 0.0 {
+            // Zero column: identity reflector (v = 0).
+            continue;
+        }
+        let alpha = if r[(j, j)] >= 0.0 { -norm } else { norm };
+        // v = x - alpha e1, normalized so v[j] carries the pivot.
+        let mut v_norm_sq = 0.0;
+        for i in j..m {
+            let vi = if i == j { r[(i, j)] - alpha } else { r[(i, j)] };
+            vs[(i, j)] = vi;
+            v_norm_sq += vi * vi;
+        }
+        if v_norm_sq == 0.0 {
+            continue;
+        }
+        let beta = 2.0 / v_norm_sq;
+        // Apply H = I - beta v vᵀ to the trailing columns of r.
+        for jj in j..k {
+            let mut dot = 0.0;
+            for i in j..m {
+                dot += vs[(i, j)] * r[(i, jj)];
+            }
+            let s = beta * dot;
+            for i in j..m {
+                r[(i, jj)] -= s * vs[(i, j)];
+            }
+        }
+    }
+
+    // Extract the k×k upper triangle.
+    let r_out = Dense::from_fn(k, k, |i, j| if i <= j { r[(i, j)] } else { 0.0 });
+
+    // Form thin Q by applying the reflectors to the first k columns of I,
+    // in reverse order.
+    let mut q = Dense::from_fn(m, k, |i, j| if i == j { 1.0 } else { 0.0 });
+    for j in (0..k).rev() {
+        let mut v_norm_sq = 0.0;
+        for i in j..m {
+            v_norm_sq += vs[(i, j)] * vs[(i, j)];
+        }
+        if v_norm_sq == 0.0 {
+            continue;
+        }
+        let beta = 2.0 / v_norm_sq;
+        for jj in 0..k {
+            let mut dot = 0.0;
+            for i in j..m {
+                dot += vs[(i, j)] * q[(i, jj)];
+            }
+            let s = beta * dot;
+            for i in j..m {
+                q[(i, jj)] -= s * vs[(i, j)];
+            }
+        }
+    }
+    (q, r_out)
+}
+
+/// Orthonormal basis via two passes of Modified Gram–Schmidt
+/// ("twice is enough": the second pass restores orthogonality lost to
+/// cancellation). Rank-deficient columns become zero columns.
+pub fn mgs_qr(a: &Dense) -> Dense {
+    let q = mgs_pass(a);
+    mgs_pass(&q)
+}
+
+fn mgs_pass(a: &Dense) -> Dense {
+    let (m, k) = a.shape();
+    let mut q = a.clone();
+    for j in 0..k {
+        let mut col = q.col(j);
+        // Project out previous columns.
+        for p in 0..j {
+            let qp = q.col(p);
+            let dot: f64 = qp.iter().zip(&col).map(|(x, y)| x * y).sum();
+            for i in 0..m {
+                col[i] -= dot * qp[i];
+            }
+        }
+        let nrm = col.iter().map(|x| x * x).sum::<f64>().sqrt();
+        if nrm > 1e-300 {
+            for x in &mut col {
+                *x /= nrm;
+            }
+        } else {
+            col.iter_mut().for_each(|x| *x = 0.0);
+        }
+        q.set_col(j, &col);
+    }
+    q
+}
+
+/// Max deviation of `qᵀq` from the identity — orthonormality residual.
+pub fn orthonormality_residual(q: &Dense) -> f64 {
+    let k = q.cols();
+    let g = super::gemm::tmatmul(q, q);
+    let mut worst = 0.0f64;
+    for i in 0..k {
+        for j in 0..k {
+            let want = if i == j { 1.0 } else { 0.0 };
+            worst = worst.max((g[(i, j)] - want).abs());
+        }
+    }
+    worst
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::{fro_diff, matmul};
+    use crate::rng::Xoshiro256pp;
+
+    #[test]
+    fn householder_reconstructs_and_is_orthonormal() {
+        let mut rng = Xoshiro256pp::seed_from_u64(0);
+        for (m, k) in [(5, 5), (30, 7), (100, 20), (64, 1)] {
+            let a = Dense::gaussian(m, k, &mut rng);
+            let (q, r) = householder_qr(&a);
+            assert!(orthonormality_residual(&q) < 1e-12, "{m}x{k}");
+            assert!(fro_diff(&matmul(&q, &r), &a) < 1e-10, "{m}x{k}");
+            // R upper triangular.
+            for i in 0..k {
+                for j in 0..i {
+                    assert_eq!(r[(i, j)], 0.0);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn householder_handles_zero_columns() {
+        let mut a = Dense::zeros(10, 3);
+        a[(0, 0)] = 1.0;
+        a[(1, 2)] = 2.0; // middle column all-zero
+        let (q, r) = householder_qr(&a);
+        assert!(fro_diff(&matmul(&q, &r), &a) < 1e-12);
+        assert!(q.data().iter().all(|x| x.is_finite()));
+    }
+
+    #[test]
+    fn mgs_orthonormal_and_preserves_span() {
+        let mut rng = Xoshiro256pp::seed_from_u64(1);
+        let a = Dense::gaussian(50, 12, &mut rng);
+        let q = mgs_qr(&a);
+        assert!(orthonormality_residual(&q) < 1e-12);
+        // Projection onto span(Q) reproduces A.
+        let proj = matmul(&q, &super::super::gemm::tmatmul(&q, &a));
+        assert!(fro_diff(&proj, &a) < 1e-9);
+    }
+
+    #[test]
+    fn mgs_ill_conditioned_stays_orthonormal() {
+        // sigma from 1 down to 1e-9: single-pass MGS would lose
+        // orthogonality; the second pass must hold it.
+        let mut rng = Xoshiro256pp::seed_from_u64(2);
+        let (u, _) = householder_qr(&Dense::gaussian(60, 8, &mut rng));
+        let (v, _) = householder_qr(&Dense::gaussian(8, 8, &mut rng));
+        let s: Vec<f64> = (0..8).map(|i| 10f64.powi(-(i as i32 + 1) * 9 / 8)).collect();
+        let a = matmul(&u.scale_cols(&s), &v.transpose());
+        let q = mgs_qr(&a);
+        assert!(orthonormality_residual(&q) < 1e-10);
+    }
+
+    #[test]
+    fn mgs_rank_deficient_zero_columns_not_nan() {
+        let mut a = Dense::zeros(10, 3);
+        for i in 0..10 {
+            a[(i, 0)] = 1.0;
+            a[(i, 1)] = 1.0; // duplicate of column 0
+            a[(i, 2)] = i as f64;
+        }
+        let q = mgs_qr(&a);
+        assert!(q.data().iter().all(|x| x.is_finite()));
+        // The duplicate column must vanish.
+        assert!(q.col_norm_sq(1) < 1e-20);
+    }
+
+    #[test]
+    fn householder_and_mgs_span_the_same_space() {
+        let mut rng = Xoshiro256pp::seed_from_u64(3);
+        let a = Dense::gaussian(40, 6, &mut rng);
+        let (qh, _) = householder_qr(&a);
+        let qm = mgs_qr(&a);
+        // Projectors agree.
+        let ph = matmul(&qh, &qh.transpose());
+        let pm = matmul(&qm, &qm.transpose());
+        assert!(fro_diff(&ph, &pm) < 1e-9);
+    }
+}

@@ -1,0 +1,234 @@
+//! Rank-1 QR update (Golub & Van Loan, *Matrix Computations* §12.5.1).
+//!
+//! Given a thin QR factorization `A = Q·R` (`Q` m×k orthonormal, `R`
+//! k×k upper triangular), compute the factorization of `A + u·vᵀ`
+//! without refactorizing. This is the device the paper's Algorithm 1
+//! (Line 6) uses to turn the basis of `XΩ` into a basis of
+//! `XΩ − μ·1ᵀ` in one rank-1 step.
+//!
+//! Thin-QR subtlety the paper glosses over: `u` generally has a
+//! component *outside* range(Q) (the mean vector is not in the sample
+//! range), so the update must grow the basis by the normalized residual
+//! `q⁺ = (u − QQᵀu)/ρ` before the classical Givens sweep:
+//!
+//! ```text
+//! A + uvᵀ = [Q q⁺] · ( [R; 0] + [w; ρ]·vᵀ ),   w = Qᵀu
+//! ```
+//!
+//! Two Givens passes restore triangularity of the (k+1)×k inner factor;
+//! the same rotations applied to `[Q q⁺]` yield the updated basis. Cost
+//! is O(mk) — *cheaper* than the O(m²) the paper quotes (they cite the
+//! square-Q variant); see DESIGN.md "Paper erratum".
+
+use super::Dense;
+
+/// Result of [`qr_rank1_update`].
+pub struct QrUpdate {
+    /// Updated orthonormal basis, m×k (the leading k columns after the
+    /// augmented sweep; the (k+1)-th direction has zero weight in R).
+    pub q: Dense,
+    /// Updated k×k upper-triangular factor.
+    pub r: Dense,
+}
+
+/// Apply one Givens rotation G(c, s) to rows (i, i+1) of a matrix,
+/// columns `lo..`.
+fn apply_givens_rows(m: &mut Dense, i: usize, c: f64, s: f64, lo: usize) {
+    let cols = m.cols();
+    for j in lo..cols {
+        let a = m[(i, j)];
+        let b = m[(i + 1, j)];
+        m[(i, j)] = c * a + s * b;
+        m[(i + 1, j)] = -s * a + c * b;
+    }
+}
+
+/// Apply one Givens rotation to columns (i, i+1) of a matrix (acting on
+/// Q from the right with Gᵀ).
+fn apply_givens_cols(m: &mut Dense, i: usize, c: f64, s: f64) {
+    let rows = m.rows();
+    for r in 0..rows {
+        let a = m[(r, i)];
+        let b = m[(r, i + 1)];
+        m[(r, i)] = c * a + s * b;
+        m[(r, i + 1)] = -s * a + c * b;
+    }
+}
+
+fn givens(a: f64, b: f64) -> (f64, f64) {
+    if b == 0.0 {
+        (1.0, 0.0)
+    } else {
+        let h = a.hypot(b);
+        (a / h, b / h)
+    }
+}
+
+/// Compute the thin QR factorization of `Q·R + u·vᵀ`.
+///
+/// `q` must have orthonormal columns; `r` upper triangular (k×k).
+pub fn qr_rank1_update(q: &Dense, r: &Dense, u: &[f64], v: &[f64]) -> QrUpdate {
+    let (m, k) = q.shape();
+    assert_eq!(r.shape(), (k, k), "R must be kxk");
+    assert_eq!(u.len(), m, "u length");
+    assert_eq!(v.len(), k, "v length");
+
+    // w = Qᵀu and the residual direction.
+    let w = q.tmatvec(u);
+    let qw = q.matvec(&w);
+    let mut resid: Vec<f64> = u.iter().zip(&qw).map(|(a, b)| a - b).collect();
+    let rho = resid.iter().map(|x| x * x).sum::<f64>().sqrt();
+
+    // Augmented basis [Q q+] (m x (k+1)) and factor [R; 0] (k+1 x k).
+    let kk = k + 1;
+    let mut qa = Dense::zeros(m, kk);
+    for i in 0..m {
+        for j in 0..k {
+            qa[(i, j)] = q[(i, j)];
+        }
+    }
+    if rho > 1e-300 {
+        for x in &mut resid {
+            *x /= rho;
+        }
+        for i in 0..m {
+            qa[(i, k)] = resid[i];
+        }
+    }
+    let mut ra = Dense::zeros(kk, k);
+    for i in 0..k {
+        for j in i..k {
+            ra[(i, j)] = r[(i, j)];
+        }
+    }
+
+    // wa = [w; rho].
+    let mut wa = w;
+    wa.push(if rho > 1e-300 { rho } else { 0.0 });
+
+    // Pass 1 (bottom-up): rotate wa to alpha*e1. Each rotation acts on
+    // rows (i, i+1) of ra — making it upper Hessenberg — and columns
+    // (i, i+1) of qa.
+    for i in (0..kk - 1).rev() {
+        let (c, s) = givens(wa[i], wa[i + 1]);
+        if s != 0.0 {
+            wa[i] = c * wa[i] + s * wa[i + 1];
+            wa[i + 1] = 0.0;
+            apply_givens_rows(&mut ra, i, c, s, i.saturating_sub(1));
+            apply_givens_cols(&mut qa, i, c, s);
+        }
+    }
+
+    // Rank-1 term now only touches row 0.
+    for j in 0..k {
+        ra[(0, j)] += wa[0] * v[j];
+    }
+
+    // Pass 2 (top-down): re-triangularize the Hessenberg ra.
+    for i in 0..k.min(kk - 1) {
+        let (c, s) = givens(ra[(i, i)], ra[(i + 1, i)]);
+        if s != 0.0 {
+            apply_givens_rows(&mut ra, i, c, s, i);
+            ra[(i + 1, i)] = 0.0; // exact zero by construction
+            apply_givens_cols(&mut qa, i, c, s);
+        }
+    }
+
+    // The (k+1)-th row of ra is now zero: drop the last basis column.
+    let q_out = Dense::from_fn(m, k, |i, j| qa[(i, j)]);
+    let r_out = Dense::from_fn(k, k, |i, j| if i <= j { ra[(i, j)] } else { 0.0 });
+    QrUpdate { q: q_out, r: r_out }
+}
+
+/// Convenience: basis of `A − μ·1_cᵀ·S` for the paper's Line 6, where the
+/// rank-1 right factor is chosen by `variant` (see DESIGN.md).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ShiftVariant {
+    /// v = Ωᵀ1 (column sums of Ω): the exact shifted sample matrix
+    /// `XΩ − μ(1ᵀΩ)`.
+    Exact,
+    /// v = 1: the paper's literal Line 6, `XΩ − μ·1ᵀ`.
+    PaperLiteral,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::qr::{householder_qr, orthonormality_residual};
+    use crate::linalg::{fro_diff, matmul};
+    use crate::rng::{Rng, Xoshiro256pp};
+
+    fn explicit_update(a: &Dense, u: &[f64], v: &[f64]) -> Dense {
+        let mut out = a.clone();
+        for i in 0..a.rows() {
+            for j in 0..a.cols() {
+                out[(i, j)] += u[i] * v[j];
+            }
+        }
+        out
+    }
+
+    #[test]
+    fn update_matches_refactorization() {
+        let mut rng = Xoshiro256pp::seed_from_u64(0);
+        for (m, k) in [(10, 3), (50, 8), (120, 20)] {
+            let a = Dense::gaussian(m, k, &mut rng);
+            let (q, r) = householder_qr(&a);
+            let u: Vec<f64> = (0..m).map(|_| rng.next_gaussian()).collect();
+            let v: Vec<f64> = (0..k).map(|_| rng.next_gaussian()).collect();
+            let upd = qr_rank1_update(&q, &r, &u, &v);
+            let want = explicit_update(&a, &u, &v);
+            assert!(
+                fro_diff(&matmul(&upd.q, &upd.r), &want) < 1e-9 * (m as f64),
+                "{m}x{k}"
+            );
+            assert!(orthonormality_residual(&upd.q) < 1e-10, "{m}x{k}");
+        }
+    }
+
+    #[test]
+    fn update_with_u_in_range_of_q() {
+        // u = Q y exactly: rho = 0 path.
+        let mut rng = Xoshiro256pp::seed_from_u64(1);
+        let a = Dense::gaussian(30, 5, &mut rng);
+        let (q, r) = householder_qr(&a);
+        let y: Vec<f64> = (0..5).map(|_| rng.next_gaussian()).collect();
+        let u = q.matvec(&y);
+        let v: Vec<f64> = (0..5).map(|_| rng.next_gaussian()).collect();
+        let upd = qr_rank1_update(&q, &r, &u, &v);
+        let want = explicit_update(&a, &u, &v);
+        assert!(fro_diff(&matmul(&upd.q, &upd.r), &want) < 1e-9);
+        assert!(orthonormality_residual(&upd.q) < 1e-10);
+    }
+
+    #[test]
+    fn update_with_zero_u_is_identity() {
+        let mut rng = Xoshiro256pp::seed_from_u64(2);
+        let a = Dense::gaussian(20, 4, &mut rng);
+        let (q, r) = householder_qr(&a);
+        let upd = qr_rank1_update(&q, &r, &vec![0.0; 20], &vec![1.0; 4]);
+        assert!(fro_diff(&matmul(&upd.q, &upd.r), &a) < 1e-10);
+    }
+
+    /// The paper's use: turn QR(XΩ) into a basis of the shifted sample.
+    #[test]
+    fn shifted_basis_via_update_spans_centered_sample() {
+        let mut rng = Xoshiro256pp::seed_from_u64(3);
+        let x = Dense::from_fn(40, 200, |_, _| rng.next_uniform());
+        let om = Dense::gaussian(200, 10, &mut rng);
+        let mu = x.row_means();
+        let x1 = matmul(&x, &om);
+        let (q, r) = householder_qr(&x1);
+        // Exact variant: v = colsum(Omega).
+        let v: Vec<f64> = (0..10).map(|j| om.col(j).iter().sum::<f64>()).collect();
+        let neg_mu: Vec<f64> = mu.iter().map(|x| -x).collect();
+        let upd = qr_rank1_update(&q, &r, &neg_mu, &v);
+        // The updated basis must capture Xbar*Omega.
+        let want = matmul(&x.subtract_column(&mu), &om);
+        let proj = matmul(
+            &upd.q,
+            &crate::linalg::gemm::tmatmul(&upd.q, &want),
+        );
+        assert!(fro_diff(&proj, &want) < 1e-8 * want.fro_norm().max(1.0));
+    }
+}

@@ -1,0 +1,380 @@
+//! Sparse matrices in CSR form, with the shifted products that make the
+//! paper's efficiency claim real.
+//!
+//! For a sparse `X` with non-zero mean, explicit centering `X − μ·1ᵀ`
+//! is dense — O(mn) memory and O(mnk) factorization. The shifted
+//! products below touch only `nnz` entries plus the rank-1 correction,
+//! so S-RSVD runs in `O(nnz·k + (m+n)k²)` (paper Eq. 15).
+
+use super::{Dense, gemm};
+use crate::rng::Rng;
+
+/// COO builder: accumulate (row, col, value) triplets, then seal to CSR.
+#[derive(Debug, Clone, Default)]
+pub struct Triplets {
+    rows: usize,
+    cols: usize,
+    entries: Vec<(u32, u32, f64)>,
+}
+
+impl Triplets {
+    pub fn new(rows: usize, cols: usize) -> Self {
+        Triplets { rows, cols, entries: Vec::new() }
+    }
+
+    pub fn push(&mut self, i: usize, j: usize, v: f64) {
+        assert!(i < self.rows && j < self.cols, "triplet out of bounds");
+        if v != 0.0 {
+            self.entries.push((i as u32, j as u32, v));
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    /// Seal into CSR, summing duplicate coordinates.
+    pub fn to_csr(mut self) -> Csr {
+        self.entries
+            .sort_unstable_by_key(|&(i, j, _)| ((i as u64) << 32) | j as u64);
+        let mut indptr = vec![0usize; self.rows + 1];
+        let mut indices = Vec::with_capacity(self.entries.len());
+        let mut values: Vec<f64> = Vec::with_capacity(self.entries.len());
+        let mut prev: Option<(u32, u32)> = None;
+        for &(i, j, v) in &self.entries {
+            if prev == Some((i, j)) {
+                // Duplicate coordinate: accumulate.
+                *values.last_mut().unwrap() += v;
+            } else {
+                indices.push(j);
+                values.push(v);
+                indptr[i as usize + 1] += 1;
+                prev = Some((i, j));
+            }
+        }
+        // Counts -> offsets. Note rows after the last triplet row stay 0.
+        // We accumulated counts only in indptr[i+1]; rows with no entries
+        // keep zero counts, so prefix-sum is correct.
+        for i in 0..self.rows {
+            indptr[i + 1] += indptr[i];
+        }
+        Csr { rows: self.rows, cols: self.cols, indptr, indices, values }
+    }
+}
+
+/// Compressed Sparse Row matrix (f64 values, u32 column indices).
+#[derive(Debug, Clone)]
+pub struct Csr {
+    rows: usize,
+    cols: usize,
+    indptr: Vec<usize>,
+    indices: Vec<u32>,
+    values: Vec<f64>,
+}
+
+impl Csr {
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+
+    pub fn shape(&self) -> (usize, usize) {
+        (self.rows, self.cols)
+    }
+
+    pub fn nnz(&self) -> usize {
+        self.values.len()
+    }
+
+    pub fn density(&self) -> f64 {
+        self.nnz() as f64 / (self.rows as f64 * self.cols as f64)
+    }
+
+    /// Entries of row `i` as (col, value) pairs.
+    pub fn row_iter(&self, i: usize) -> impl Iterator<Item = (usize, f64)> + '_ {
+        let lo = self.indptr[i];
+        let hi = self.indptr[i + 1];
+        self.indices[lo..hi]
+            .iter()
+            .zip(&self.values[lo..hi])
+            .map(|(&j, &v)| (j as usize, v))
+    }
+
+    /// Random sparse matrix with the given density; values from `gen`.
+    pub fn random(
+        rows: usize,
+        cols: usize,
+        density: f64,
+        rng: &mut dyn Rng,
+        mut gen: impl FnMut(&mut dyn Rng) -> f64,
+    ) -> Csr {
+        let mut t = Triplets::new(rows, cols);
+        let target = ((rows * cols) as f64 * density).round() as usize;
+        for _ in 0..target {
+            let i = rng.next_below(rows as u64) as usize;
+            let j = rng.next_below(cols as u64) as usize;
+            t.push(i, j, gen(rng));
+        }
+        t.to_csr()
+    }
+
+    /// Densify (tests / the RSVD-baseline comparison only — this is the
+    /// memory blow-up the paper's algorithm avoids).
+    pub fn to_dense(&self) -> Dense {
+        let mut d = Dense::zeros(self.rows, self.cols);
+        for i in 0..self.rows {
+            for (j, v) in self.row_iter(i) {
+                d[(i, j)] = v;
+            }
+        }
+        d
+    }
+
+    /// Per-row mean over *all* columns (zeros included) — the PCA
+    /// shifting vector, in O(nnz).
+    pub fn row_means(&self) -> Vec<f64> {
+        let inv = 1.0 / self.cols as f64;
+        (0..self.rows)
+            .map(|i| self.row_iter(i).map(|(_, v)| v).sum::<f64>() * inv)
+            .collect()
+    }
+
+    /// `X · B` for dense `B` (n×k) → dense (m×k), O(nnz·k).
+    pub fn matmul_dense(&self, b: &Dense) -> Dense {
+        assert_eq!(self.cols, b.rows(), "spmm shape mismatch");
+        let k = b.cols();
+        let mut c = Dense::zeros(self.rows, k);
+        for i in 0..self.rows {
+            let c_row = c.row_mut(i);
+            for (j, v) in self.row_iter(i) {
+                let b_row = b.row(j);
+                for l in 0..k {
+                    c_row[l] += v * b_row[l];
+                }
+            }
+        }
+        c
+    }
+
+    /// `Xᵀ · B` for dense `B` (m×k) → dense (n×k), O(nnz·k); CSR rows
+    /// scatter into the output, no transpose materialized.
+    pub fn tmatmul_dense(&self, b: &Dense) -> Dense {
+        assert_eq!(self.rows, b.rows(), "spmm^T shape mismatch");
+        let k = b.cols();
+        let mut c = Dense::zeros(self.cols, k);
+        for i in 0..self.rows {
+            let b_row = b.row(i);
+            for (j, v) in self.row_iter(i) {
+                let c_row = c.row_mut(j);
+                for l in 0..k {
+                    c_row[l] += v * b_row[l];
+                }
+            }
+        }
+        c
+    }
+
+    /// `(X − u·vᵀ_sel)·B` fused: `X·B − u·(vᵀB)`-style downdate where the
+    /// rank-1 right factor is supplied directly (length k).
+    pub fn matmul_rank1(&self, b: &Dense, u: &[f64], v: &[f64]) -> Dense {
+        assert_eq!(u.len(), self.rows);
+        assert_eq!(v.len(), b.cols());
+        let mut c = self.matmul_dense(b);
+        for i in 0..self.rows {
+            let ui = u[i];
+            if ui != 0.0 {
+                for (cx, &vx) in c.row_mut(i).iter_mut().zip(v) {
+                    *cx -= ui * vx;
+                }
+            }
+        }
+        c
+    }
+
+    /// `Xᵀ·B − u·vᵀ` fused (u length n, v length k).
+    pub fn tmatmul_rank1(&self, b: &Dense, u: &[f64], v: &[f64]) -> Dense {
+        assert_eq!(u.len(), self.cols);
+        assert_eq!(v.len(), b.cols());
+        let mut c = self.tmatmul_dense(b);
+        for j in 0..self.cols {
+            let uj = u[j];
+            if uj != 0.0 {
+                for (cx, &vx) in c.row_mut(j).iter_mut().zip(v) {
+                    *cx -= uj * vx;
+                }
+            }
+        }
+        c
+    }
+
+    /// Squared Frobenius norm of `(X − μ1ᵀ) − U·diag(s)·Vᵀ` divided by n —
+    /// the paper's MSE — computed in O(nnz·k + (m+n)k²) without
+    /// densifying either the centered matrix or the reconstruction.
+    ///
+    /// Expansion: ‖X̄ − R‖² = ‖X‖² − 2⟨X, M⟩ + ‖M‖² where M = μ1ᵀ + R and
+    /// ‖M‖² and ⟨X, M⟩ decompose over the low-rank structure.
+    pub fn shifted_mse(&self, mu: &[f64], u: &Dense, s: &[f64], v: &Dense) -> f64 {
+        let (m, n) = self.shape();
+        let k = s.len();
+        assert_eq!(u.shape(), (m, k));
+        assert_eq!(v.shape(), (n, k));
+        assert_eq!(mu.len(), m);
+
+        // ‖X‖²
+        let x_sq: f64 = self.values.iter().map(|v| v * v).sum();
+
+        // us = U·diag(s)
+        let us = u.scale_cols(s);
+
+        // ⟨X, μ1ᵀ⟩ = Σᵢ μᵢ · rowsumᵢ ; ⟨X, R⟩ = Σ_(i,j) x_ij (us_i · v_j)
+        let mut x_dot_m = 0.0;
+        for i in 0..m {
+            let mut row_sum = 0.0;
+            let us_row = us.row(i);
+            let mut dot_r = 0.0;
+            for (j, xv) in self.row_iter(i) {
+                row_sum += xv;
+                let v_row = v.row(j);
+                let mut d = 0.0;
+                for l in 0..k {
+                    d += us_row[l] * v_row[l];
+                }
+                dot_r += xv * d;
+            }
+            x_dot_m += mu[i] * row_sum + dot_r;
+        }
+
+        // ‖M‖² = ‖μ1ᵀ‖² + 2⟨μ1ᵀ, R⟩ + ‖R‖²
+        let mu_sq: f64 = mu.iter().map(|x| x * x).sum::<f64>() * n as f64;
+        // ⟨μ1ᵀ, R⟩ = μᵀ·US·(Vᵀ1) = (μᵀUS)·colsum(V)
+        let mu_us = us.tmatvec(mu); // k
+        let v_colsum: Vec<f64> = (0..k)
+            .map(|l| (0..n).map(|j| v[(j, l)]).sum())
+            .collect();
+        let cross: f64 = mu_us.iter().zip(&v_colsum).map(|(a, b)| a * b).sum();
+        // ‖R‖² = tr(S Uᵀ U S Vᵀ V); with exactly orthonormal U, V this is
+        // Σ s², but the factors are numerical so compute the Gram product.
+        let ug = gemm::tmatmul(&us, &us); // k×k
+        let vg = gemm::tmatmul(v, v); // k×k
+        let mut r_sq = 0.0;
+        for i in 0..k {
+            for j in 0..k {
+                r_sq += ug[(i, j)] * vg[(i, j)];
+            }
+        }
+
+        let total = x_sq - 2.0 * x_dot_m + mu_sq + 2.0 * cross + r_sq;
+        total.max(0.0) / n as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::{fro_diff, matmul};
+    use crate::rng::Xoshiro256pp;
+
+    fn sample(rng: &mut Xoshiro256pp) -> Csr {
+        Csr::random(30, 80, 0.05, rng, |r| r.next_uniform() + 0.1)
+    }
+
+    #[test]
+    fn triplets_roundtrip_and_duplicates_sum() {
+        let mut t = Triplets::new(3, 4);
+        t.push(0, 1, 2.0);
+        t.push(2, 3, 1.0);
+        t.push(0, 1, 3.0); // duplicate -> 5.0
+        t.push(1, 0, -1.0);
+        let c = t.to_csr();
+        assert_eq!(c.nnz(), 3);
+        let d = c.to_dense();
+        assert_eq!(d[(0, 1)], 5.0);
+        assert_eq!(d[(1, 0)], -1.0);
+        assert_eq!(d[(2, 3)], 1.0);
+    }
+
+    #[test]
+    fn empty_rows_ok() {
+        let mut t = Triplets::new(5, 5);
+        t.push(4, 4, 1.0);
+        let c = t.to_csr();
+        assert_eq!(c.row_iter(0).count(), 0);
+        assert_eq!(c.row_iter(4).count(), 1);
+        assert_eq!(c.row_means()[4], 0.2);
+    }
+
+    #[test]
+    fn spmm_matches_dense() {
+        let mut rng = Xoshiro256pp::seed_from_u64(0);
+        let x = sample(&mut rng);
+        let b = Dense::gaussian(80, 7, &mut rng);
+        let want = matmul(&x.to_dense(), &b);
+        assert!(fro_diff(&x.matmul_dense(&b), &want) < 1e-10);
+    }
+
+    #[test]
+    fn spmm_transpose_matches_dense() {
+        let mut rng = Xoshiro256pp::seed_from_u64(1);
+        let x = sample(&mut rng);
+        let b = Dense::gaussian(30, 5, &mut rng);
+        let want = matmul(&x.to_dense().transpose(), &b);
+        assert!(fro_diff(&x.tmatmul_dense(&b), &want) < 1e-10);
+    }
+
+    #[test]
+    fn shifted_products_never_densify_but_match() {
+        let mut rng = Xoshiro256pp::seed_from_u64(2);
+        let x = sample(&mut rng);
+        let mu = x.row_means();
+        let om = Dense::gaussian(80, 6, &mut rng);
+        let colsum: Vec<f64> = (0..6).map(|j| om.col(j).iter().sum()).collect();
+        let implicit = x.matmul_rank1(&om, &mu, &colsum);
+        let explicit = matmul(&x.to_dense().subtract_column(&mu), &om);
+        assert!(fro_diff(&implicit, &explicit) < 1e-9);
+    }
+
+    #[test]
+    fn shifted_mse_matches_dense_computation() {
+        let mut rng = Xoshiro256pp::seed_from_u64(3);
+        let x = sample(&mut rng);
+        let mu = x.row_means();
+        // A plausible low-rank factorization (from the dense oracle).
+        let xd = x.to_dense().subtract_column(&mu);
+        let (u, s, v) = crate::linalg::jacobi::jacobi_svd(
+            &xd.transpose(),
+            crate::linalg::JacobiOpts::default(),
+        );
+        // xdᵀ = u s vᵀ → xd = v s uᵀ: left = v, right = u.
+        let k = 5;
+        let left = v.truncate_cols(k);
+        let right = u.truncate_cols(k);
+        let sk = &s[..k];
+        let got = x.shifted_mse(&mu, &left, sk, &right);
+        let rec = matmul(&left.scale_cols(sk), &right.transpose());
+        let want = {
+            let d = fro_diff(&xd, &rec);
+            d * d / x.cols() as f64
+        };
+        assert!(
+            (got - want).abs() < 1e-8 * want.max(1.0),
+            "got {got} want {want}"
+        );
+    }
+
+    #[test]
+    fn density_and_nnz_accounting() {
+        let mut rng = Xoshiro256pp::seed_from_u64(4);
+        let x = Csr::random(100, 100, 0.01, &mut rng, |r| r.next_uniform());
+        // Collisions make nnz <= target.
+        assert!(x.nnz() <= 100);
+        assert!(x.nnz() > 50);
+        assert!((x.density() - x.nnz() as f64 / 1e4).abs() < 1e-12);
+    }
+}

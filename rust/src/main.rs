@@ -1,0 +1,310 @@
+//! `srsvd` — the command-line front end.
+//!
+//! ```text
+//! srsvd factorize --dist uniform --m 100 --n 1000 --k 10 ...   one-shot PCA
+//! srsvd serve     --jobs 32 --workers 2 ...                    run the service demo
+//! srsvd experiment --id fig1a ...                              regenerate a paper artifact
+//! srsvd artifacts [--dir artifacts]                            inspect the AOT manifest
+//! ```
+
+use srsvd::cli::ArgSpec;
+use srsvd::config::{parse_basis, parse_small_svd, RawConfig};
+use srsvd::coordinator::{
+    Coordinator, CoordinatorConfig, EnginePreference, JobSpec, MatrixInput, ShiftSpec,
+};
+use srsvd::data::{random_matrix, DataSpec, Distribution};
+use srsvd::experiments::{fig1, k_grid, table1};
+use srsvd::linalg::Dense;
+use srsvd::rng::Xoshiro256pp;
+use srsvd::runtime::Manifest;
+use srsvd::svd::SvdConfig;
+use srsvd::util::Result;
+
+fn main() {
+    srsvd::util::logging::init();
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let code = match run(&args) {
+        Ok(()) => 0,
+        Err(e) => {
+            eprintln!("error: {e}");
+            2
+        }
+    };
+    std::process::exit(code);
+}
+
+fn run(args: &[String]) -> Result<()> {
+    let Some(cmd) = args.first() else {
+        print_root_help();
+        return Ok(());
+    };
+    let rest = &args[1..];
+    match cmd.as_str() {
+        "factorize" => cmd_factorize(rest),
+        "serve" => cmd_serve(rest),
+        "experiment" => cmd_experiment(rest),
+        "artifacts" => cmd_artifacts(rest),
+        "--help" | "-h" | "help" => {
+            print_root_help();
+            Ok(())
+        }
+        other => {
+            print_root_help();
+            Err(srsvd::util::Error::Invalid(format!("unknown command {other:?}")))
+        }
+    }
+}
+
+fn print_root_help() {
+    println!(
+        "srsvd — Shifted Randomized SVD (Basirat 2019) reproduction\n\n\
+         COMMANDS:\n\
+         \x20 factorize   one-shot PCA of a generated matrix\n\
+         \x20 serve       run the factorization service on a synthetic job stream\n\
+         \x20 experiment  regenerate a paper figure/table (fig1a..fig1f, table1-images, table1-words)\n\
+         \x20 artifacts   list the compiled AOT artifacts\n\n\
+         Run `srsvd <command> --help` for options."
+    );
+}
+
+fn svd_config_from(a: &srsvd::cli::Args) -> Result<SvdConfig> {
+    Ok(SvdConfig {
+        k: a.get_usize("k")?,
+        oversample: a.get_usize("oversample")?,
+        power_iters: a.get_usize("q")?,
+        basis: parse_basis(a.get("basis"))?,
+        small_svd: parse_small_svd(a.get("small-svd"))?,
+    })
+}
+
+fn cmd_factorize(args: &[String]) -> Result<()> {
+    let spec = ArgSpec::new("One-shot PCA of a generated random matrix")
+        .opt("dist", "uniform", "uniform | normal | exponential | zipf")
+        .opt("m", "100", "rows (features)")
+        .opt("n", "1000", "columns (samples)")
+        .opt("k", "10", "target rank")
+        .opt("oversample", "10", "K = k + oversample (paper: oversample = k)")
+        .opt("q", "0", "power iterations")
+        .opt("basis", "direct", "direct | qr-update-paper | qr-update-exact")
+        .opt("small-svd", "jacobi", "jacobi | gram")
+        .opt("seed", "0", "rng seed")
+        .opt("engine", "auto", "auto | native | artifact");
+    let a = spec.parse(args)?;
+    if a.help {
+        print!("{}", spec.usage("srsvd factorize"));
+        return Ok(());
+    }
+    let dist = Distribution::parse(a.get("dist"))
+        .ok_or_else(|| srsvd::util::Error::Invalid(format!("unknown dist {:?}", a.get("dist"))))?;
+    let (m, n) = (a.get_usize("m")?, a.get_usize("n")?);
+    let seed = a.get_u64("seed")?;
+    let mut rng = Xoshiro256pp::seed_from_u64(seed);
+    let x = random_matrix(DataSpec { m, n, dist }, &mut rng);
+    let engine = match a.get("engine") {
+        "auto" => EnginePreference::Auto,
+        "native" => EnginePreference::Native,
+        "artifact" => EnginePreference::ArtifactOnly,
+        e => return Err(srsvd::util::Error::Invalid(format!("unknown engine {e:?}"))),
+    };
+    let job = JobSpec {
+        input: MatrixInput::Dense(x),
+        config: svd_config_from(&a)?,
+        shift: ShiftSpec::MeanCenter,
+        engine,
+        seed: seed ^ 0xFA,
+        score: true,
+    };
+    let coord = Coordinator::start(CoordinatorConfig::default())?;
+    let r = coord.submit_blocking(job)?;
+    let out = r.outcome?;
+    println!(
+        "engine={:?} exec={} queue={}",
+        r.engine,
+        srsvd::util::timer::fmt_duration(r.exec_s),
+        srsvd::util::timer::fmt_duration(r.queue_s)
+    );
+    println!("mse = {:.6}", out.mse.unwrap_or(f64::NAN));
+    println!("singular values: {:?}", &out.factorization.s);
+    coord.shutdown();
+    Ok(())
+}
+
+fn cmd_serve(args: &[String]) -> Result<()> {
+    let spec = ArgSpec::new("Run the factorization service on a synthetic job stream")
+        .opt("jobs", "32", "number of jobs to submit")
+        .opt("workers", "0", "native workers (0 = auto)")
+        .opt("queue", "64", "queue capacity")
+        .opt("config", "", "optional srsvd.conf path")
+        .opt("seed", "0", "rng seed")
+        .flag("native-only", "disable the artifact engine");
+    let a = spec.parse(args)?;
+    if a.help {
+        print!("{}", spec.usage("srsvd serve"));
+        return Ok(());
+    }
+    let mut cfg = if a.get("config").is_empty() {
+        CoordinatorConfig::default()
+    } else {
+        RawConfig::load(std::path::Path::new(a.get("config")))?.coordinator()?
+    };
+    if a.get_usize("workers")? > 0 {
+        cfg.native_workers = a.get_usize("workers")?;
+    }
+    cfg.queue_capacity = a.get_usize("queue")?;
+    if a.has_flag("native-only") {
+        cfg.artifact_dir = None;
+    }
+    let jobs = a.get_usize("jobs")?;
+    let seed = a.get_u64("seed")?;
+
+    let coord = Coordinator::start(cfg)?;
+    let t = srsvd::util::timer::Timer::start();
+    let mut handles = Vec::new();
+    for j in 0..jobs {
+        // Alternate artifact-shaped and native-shaped jobs.
+        let (m, n, k) = if j % 2 == 0 { (100, 1000, 10) } else { (64, 512, 8) };
+        let mut rng = Xoshiro256pp::seed_from_u64(seed ^ j as u64);
+        let x = random_matrix(DataSpec { m, n, dist: Distribution::Uniform }, &mut rng);
+        handles.push(coord.submit(JobSpec::pca(MatrixInput::Dense(x), k, seed ^ j as u64))?);
+    }
+    for h in handles {
+        let r = h.wait()?;
+        r.outcome?;
+    }
+    let wall = t.elapsed_secs();
+    let m = coord.metrics();
+    println!("{m}");
+    println!(
+        "wall={:.2}s throughput={:.1} jobs/s",
+        wall,
+        jobs as f64 / wall
+    );
+    coord.shutdown();
+    Ok(())
+}
+
+fn cmd_experiment(args: &[String]) -> Result<()> {
+    let spec = ArgSpec::new("Regenerate a paper figure/table")
+        .req("id", "fig1a | fig1b | fig1c | fig1d | fig1e | fig1f | table1-images | table1-words | efficiency")
+        .opt("seed", "42", "rng seed")
+        .opt("runs", "10", "repetitions for table1 statistics")
+        .flag("quick", "thin the sweep grids (~8x faster)");
+    let a = spec.parse(args)?;
+    if a.help {
+        print!("{}", spec.usage("srsvd experiment"));
+        return Ok(());
+    }
+    let seed = a.get_u64("seed")?;
+    let quick = a.has_flag("quick") || srsvd::experiments::quick_mode();
+    let ks = k_grid(100, quick);
+    let runs = a.get_usize("runs")?;
+    match a.get("id") {
+        "fig1a" => {
+            let rows = fig1::fig1a(&ks, seed);
+            print!("{}", fig1::render_k_table("Fig 1a: MSE vs #components", &rows));
+        }
+        "fig1b" => {
+            let ns: &[usize] = if quick { &[200, 1000, 5000] } else { &[100, 200, 500, 1000, 2000, 5000, 10000] };
+            let mut t = srsvd::bench::Table::new(&["n", "MSE-SUM S-RSVD", "MSE-SUM RSVD"]);
+            for (n, s, r) in fig1::fig1b(ns, &ks, seed) {
+                t.row(&[n.to_string(), format!("{s:.3}"), format!("{r:.3}")]);
+            }
+            print!("{}", t.render());
+        }
+        "fig1c" => {
+            let mut t = srsvd::bench::Table::new(&["distribution", "MSE-SUM S-RSVD", "MSE-SUM RSVD"]);
+            for (d, s, r) in fig1::fig1c(&ks, seed) {
+                t.row(&[d.to_string(), format!("{s:.3}"), format!("{r:.3}")]);
+            }
+            print!("{}", t.render());
+        }
+        "fig1d" => {
+            let rows = fig1::fig1d(&ks, seed);
+            let mut t = srsvd::bench::Table::new(&["k", "implicit (S-RSVD)", "explicit (RSVD on Xbar)"]);
+            for (k, i, e) in rows {
+                t.row(&[k.to_string(), format!("{i:.5}"), format!("{e:.5}")]);
+            }
+            print!("{}", t.render());
+        }
+        "fig1e" => {
+            let qs: &[usize] = if quick { &[0, 1, 2, 4] } else { &[0, 1, 2, 3, 4, 6, 8] };
+            let mut t = srsvd::bench::Table::new(&["q", "MSE-SUM S-RSVD", "MSE-SUM RSVD"]);
+            for (q, s, r) in fig1::fig1e(qs, &ks, seed) {
+                t.row(&[q.to_string(), format!("{s:.3}"), format!("{r:.3}")]);
+            }
+            print!("{}", t.render());
+        }
+        "fig1f" => {
+            let qs: &[usize] = if quick { &[0, 1, 2, 4] } else { &[0, 1, 2, 4, 8, 16] };
+            for (dist, series) in fig1::fig1f(qs, &ks, seed) {
+                println!("{dist}:");
+                for (q, d) in series {
+                    println!("  q={q:<3} MSE-SUM(S-RSVD) - MSE-SUM(RSVD) = {d:.4}");
+                }
+            }
+        }
+        "table1-images" => {
+            let digits = table1::digits_stats(if quick { 400 } else { 1979 }, runs, seed);
+            let faces = table1::faces_stats(
+                if quick {
+                    srsvd::data::FacesSpec { side: 16, count: 120, rank: 12, noise: 5.0 }
+                } else {
+                    srsvd::data::FacesSpec::default()
+                },
+                runs,
+                seed,
+            );
+            print!("{}", table1::render(&[digits, faces]));
+        }
+        "table1-words" => {
+            let ns: &[usize] = if quick { &[1000, 4000] } else { &[1000, 10_000, 100_000, 300_000] };
+            let stats: Vec<_> = ns
+                .iter()
+                .map(|&n| table1::words_stats(n, (n * 50).min(4_000_000), 100.min(n / 4), runs, seed))
+                .collect();
+            print!("{}", table1::render(&stats));
+        }
+        "efficiency" => {
+            let points: &[(usize, f64)] = if quick {
+                &[(2000, 0.01), (8000, 0.005)]
+            } else {
+                &[(2000, 0.01), (8000, 0.005), (20_000, 0.002), (50_000, 0.001)]
+            };
+            let rows = srsvd::experiments::efficiency::sweep(500, points, 10, seed);
+            print!("{}", srsvd::experiments::efficiency::render(&rows));
+        }
+        other => {
+            return Err(srsvd::util::Error::Invalid(format!("unknown experiment {other:?}")));
+        }
+    }
+    Ok(())
+}
+
+fn cmd_artifacts(args: &[String]) -> Result<()> {
+    let spec = ArgSpec::new("List the compiled AOT artifacts").opt("dir", "artifacts", "artifact directory");
+    let a = spec.parse(args)?;
+    if a.help {
+        print!("{}", spec.usage("srsvd artifacts"));
+        return Ok(());
+    }
+    let manifest = Manifest::load(std::path::Path::new(a.get("dir")))?;
+    manifest.validate_files()?;
+    let mut t = srsvd::bench::Table::new(&["name", "op", "shape", "k", "K", "q", "method"]);
+    for art in &manifest.artifacts {
+        t.row(&[
+            art.name.clone(),
+            art.op.clone(),
+            format!("{}x{}", art.m, art.n),
+            art.k.to_string(),
+            art.kk.to_string(),
+            art.q.to_string(),
+            art.method.clone(),
+        ]);
+    }
+    print!("{}", t.render());
+    Ok(())
+}
+
+// `Dense` is used by the doc examples above.
+#[allow(unused_imports)]
+use Dense as _DocAnchor;

@@ -1,0 +1,184 @@
+//! Mini property-testing framework (proptest is unavailable offline).
+//!
+//! Deterministic, seed-replayable generators over [`crate::rng`]: a
+//! failing case prints its case index and seed so it can be replayed
+//! exactly. Supports a lightweight shrink: on failure the runner retries
+//! the property on "smaller" cases produced by the generator's own
+//! `shrink` hint.
+//!
+//! ```no_run
+//! use srsvd::prop::{forall, Gen};
+//! forall("matmul associative-ish", 50, |g| {
+//!     let m = g.usize_in(1, 20);
+//!     // ... build inputs from g, return Ok(()) or Err(message)
+//!     Ok(())
+//! });
+//! ```
+
+use crate::rng::{Rng, SplitMix64, Xoshiro256pp};
+
+/// Per-case generator handle: derives all values from a case-specific
+/// seed so any failure is replayable.
+pub struct Gen {
+    rng: Xoshiro256pp,
+    pub case_seed: u64,
+    /// Shrink level 0 = full-size cases; higher levels should generate
+    /// smaller inputs. Generators honor it through the sizing helpers.
+    pub shrink_level: u32,
+}
+
+impl Gen {
+    fn new(case_seed: u64, shrink_level: u32) -> Gen {
+        Gen {
+            rng: Xoshiro256pp::seed_from_u64(case_seed),
+            case_seed,
+            shrink_level,
+        }
+    }
+
+    /// Uniform usize in [lo, hi] (inclusive), shrunk toward `lo`.
+    pub fn usize_in(&mut self, lo: usize, hi: usize) -> usize {
+        assert!(lo <= hi);
+        let (lo64, hi64) = (lo as u64, hi as u64);
+        let span = hi64 - lo64 + 1;
+        let shrunk_span = match self.shrink_level {
+            0 => span,
+            1 => (span / 4).max(1),
+            _ => 1,
+        };
+        (lo64 + self.rng.next_below(shrunk_span)) as usize
+    }
+
+    pub fn f64_in(&mut self, lo: f64, hi: f64) -> f64 {
+        self.rng.next_range(lo, hi)
+    }
+
+    pub fn gaussian(&mut self) -> f64 {
+        self.rng.next_gaussian()
+    }
+
+    pub fn uniform(&mut self) -> f64 {
+        self.rng.next_uniform()
+    }
+
+    pub fn bool(&mut self) -> bool {
+        self.rng.next_u64() & 1 == 1
+    }
+
+    /// Pick one element of a slice.
+    pub fn choose<'a, T>(&mut self, items: &'a [T]) -> &'a T {
+        &items[self.rng.next_below(items.len() as u64) as usize]
+    }
+
+    /// A fresh RNG derived from this case (for seeding algorithms under
+    /// test without coupling them to generator draws).
+    pub fn derived_rng(&mut self) -> Xoshiro256pp {
+        Xoshiro256pp::seed_from_u64(self.rng.next_u64())
+    }
+}
+
+/// Run `cases` random cases of `property`. Panics (with replay info) on
+/// the first failure after attempting shrunk repetitions.
+///
+/// The master seed comes from `SRSVD_PROP_SEED` (default 0xC0FFEE) so CI
+/// is deterministic; set it to replay a reported failure.
+pub fn forall(
+    name: &str,
+    cases: usize,
+    mut property: impl FnMut(&mut Gen) -> Result<(), String>,
+) {
+    let master = std::env::var("SRSVD_PROP_SEED")
+        .ok()
+        .and_then(|s| s.parse::<u64>().ok())
+        .unwrap_or(0xC0FFEE);
+    let mut seeder = SplitMix64::new(master ^ hash_name(name));
+    for case in 0..cases {
+        let case_seed = seeder.next_u64();
+        let mut g = Gen::new(case_seed, 0);
+        if let Err(msg) = property(&mut g) {
+            // Try shrunk variants of the same seed for a smaller report.
+            let mut final_msg = msg;
+            let mut final_level = 0;
+            for level in [2u32, 1] {
+                let mut sg = Gen::new(case_seed, level);
+                if let Err(m) = property(&mut sg) {
+                    final_msg = m;
+                    final_level = level;
+                    break;
+                }
+            }
+            panic!(
+                "property {name:?} failed at case {case} \
+                 (seed {case_seed:#x}, shrink level {final_level}): {final_msg}\n\
+                 replay with SRSVD_PROP_SEED={master}"
+            );
+        }
+    }
+}
+
+fn hash_name(name: &str) -> u64 {
+    // FNV-1a.
+    let mut h: u64 = 0xcbf29ce484222325;
+    for b in name.bytes() {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x100000001b3);
+    }
+    h
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        let mut count = 0;
+        forall("always true", 25, |g| {
+            let _ = g.usize_in(1, 10);
+            count += 1;
+            Ok(())
+        });
+        assert_eq!(count, 25);
+    }
+
+    #[test]
+    #[should_panic(expected = "property")]
+    fn failing_property_reports() {
+        forall("always false", 5, |_| Err("nope".into()));
+    }
+
+    #[test]
+    fn generators_in_bounds() {
+        forall("bounds", 100, |g| {
+            let x = g.usize_in(3, 9);
+            if !(3..=9).contains(&x) {
+                return Err(format!("usize_in out of bounds: {x}"));
+            }
+            let f = g.f64_in(-1.0, 1.0);
+            if !(-1.0..1.0).contains(&f) {
+                return Err(format!("f64_in out of bounds: {f}"));
+            }
+            let c = *g.choose(&[1, 2, 3]);
+            if !(1..=3).contains(&c) {
+                return Err("choose out of slice".into());
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn deterministic_given_fixed_env_seed() {
+        // Two identical runs draw identical values.
+        let mut first = Vec::new();
+        forall("det-a", 10, |g| {
+            first.push(g.usize_in(0, 1000));
+            Ok(())
+        });
+        let mut second = Vec::new();
+        forall("det-a", 10, |g| {
+            second.push(g.usize_in(0, 1000));
+            Ok(())
+        });
+        assert_eq!(first, second);
+    }
+}

@@ -1,0 +1,130 @@
+//! Non-uniform distributions beyond the `Rng` trait basics.
+
+use super::Rng;
+
+/// Zipf(s, n) sampler over `{1, ..., n}` using rejection-inversion
+/// (Hörmann & Derflinger 1996) — O(1) per sample for any exponent
+/// `s > 0`, `s != 1` handled via the generalized harmonic integral.
+///
+/// Word frequencies in the paper's §5.3 co-occurrence experiments are
+/// Zipfian; this sampler drives both the synthetic corpus generator and
+/// the "Zipfian" random-matrix distribution of Figure 1c/1f.
+#[derive(Debug, Clone)]
+pub struct ZipfSampler {
+    n: u64,
+    s: f64,
+    h_x1: f64,
+    h_n: f64,
+    dummy: f64,
+}
+
+impl ZipfSampler {
+    pub fn new(n: u64, s: f64) -> Self {
+        assert!(n >= 1, "Zipf needs n >= 1");
+        assert!(s > 0.0, "Zipf needs s > 0");
+        let h_x1 = Self::h(1.5, s) - 1.0;
+        let h_n = Self::h(n as f64 + 0.5, s);
+        let dummy = 2.0 - Self::h_inv(Self::h(2.5, s) - (2.0f64).powf(-s), s);
+        ZipfSampler { n, s, h_x1, h_n, dummy }
+    }
+
+    /// H(x) = integral of x^-s: (x^(1-s) - 1)/(1-s), with the s=1 limit ln x.
+    fn h(x: f64, s: f64) -> f64 {
+        if (s - 1.0).abs() < 1e-12 {
+            x.ln()
+        } else {
+            (x.powf(1.0 - s) - 1.0) / (1.0 - s)
+        }
+    }
+
+    fn h_inv(y: f64, s: f64) -> f64 {
+        if (s - 1.0).abs() < 1e-12 {
+            y.exp()
+        } else {
+            (1.0 + (1.0 - s) * y).powf(1.0 / (1.0 - s))
+        }
+    }
+
+    /// Draw a rank in `{1, ..., n}` (rank 1 most probable).
+    pub fn sample(&self, rng: &mut dyn Rng) -> u64 {
+        if self.n == 1 {
+            return 1;
+        }
+        loop {
+            let u = self.h_x1 + rng.next_uniform() * (self.h_n - self.h_x1);
+            let x = Self::h_inv(u, self.s);
+            let k = (x + 0.5).floor().clamp(1.0, self.n as f64);
+            if k - x <= self.dummy
+                || u >= Self::h(k + 0.5, self.s) - k.powf(-self.s)
+            {
+                return k as u64;
+            }
+        }
+    }
+
+    /// The normalized probability of rank `k` (for tests / analysis).
+    pub fn pmf(&self, k: u64) -> f64 {
+        let z: f64 = (1..=self.n).map(|i| (i as f64).powf(-self.s)).sum();
+        (k as f64).powf(-self.s) / z
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Xoshiro256pp;
+
+    #[test]
+    fn zipf_ranks_in_range_and_head_heavy() {
+        let z = ZipfSampler::new(1000, 1.1);
+        let mut rng = Xoshiro256pp::seed_from_u64(11);
+        let mut head = 0usize;
+        let n = 20_000;
+        for _ in 0..n {
+            let k = z.sample(&mut rng);
+            assert!((1..=1000).contains(&k));
+            if k <= 10 {
+                head += 1;
+            }
+        }
+        // P(rank <= 10) for Zipf(1.1, 1000) is ~0.5; be generous.
+        let frac = head as f64 / n as f64;
+        assert!(frac > 0.35 && frac < 0.75, "head mass {frac}");
+    }
+
+    #[test]
+    fn zipf_empirical_matches_pmf() {
+        let z = ZipfSampler::new(50, 1.5);
+        let mut rng = Xoshiro256pp::seed_from_u64(13);
+        let n = 100_000;
+        let mut counts = vec![0usize; 51];
+        for _ in 0..n {
+            counts[z.sample(&mut rng) as usize] += 1;
+        }
+        for k in [1u64, 2, 5, 10] {
+            let emp = counts[k as usize] as f64 / n as f64;
+            let want = z.pmf(k);
+            assert!(
+                (emp - want).abs() < 0.01 + 0.1 * want,
+                "rank {k}: emp {emp} vs pmf {want}"
+            );
+        }
+    }
+
+    #[test]
+    fn zipf_s_equals_one_limit() {
+        let z = ZipfSampler::new(100, 1.0);
+        let mut rng = Xoshiro256pp::seed_from_u64(17);
+        for _ in 0..1000 {
+            let k = z.sample(&mut rng);
+            assert!((1..=100).contains(&k));
+        }
+    }
+
+    #[test]
+    fn zipf_n_one_degenerate() {
+        let z = ZipfSampler::new(1, 2.0);
+        let mut rng = Xoshiro256pp::seed_from_u64(19);
+        assert_eq!(z.sample(&mut rng), 1);
+    }
+}

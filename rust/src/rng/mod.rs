@@ -1,0 +1,163 @@
+//! Pseudo-random number generation built from scratch (the offline
+//! environment has no `rand` crate).
+//!
+//! * [`Xoshiro256pp`] — xoshiro256++ (Blackman & Vigna 2019), fast,
+//!   64-bit, 2^256-1 period, with `jump()` for independent streams.
+//! * [`SplitMix64`] — seeding and cheap derived streams.
+//! * Gaussian variates via the polar (Marsaglia) method.
+//! * Zipf variates via Hörmann & Derflinger rejection-inversion.
+//!
+//! All experiment randomness flows through [`Rng`] so every figure and
+//! table in the paper reproduction is replayable from a single `u64`
+//! seed.
+
+mod distributions;
+mod xoshiro;
+
+pub use distributions::ZipfSampler;
+pub use xoshiro::{SplitMix64, Xoshiro256pp};
+
+/// Uniform random source + derived distributions.
+///
+/// Implementors only provide [`Rng::next_u64`]; everything else is
+/// derived. Keep implementations `Send` so worker threads can own one.
+pub trait Rng: Send {
+    /// Next raw 64 random bits.
+    fn next_u64(&mut self) -> u64;
+
+    /// Uniform in `[0, 1)` with 53-bit resolution.
+    fn next_uniform(&mut self) -> f64 {
+        // Take the top 53 bits -> exactly representable in f64.
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Uniform in `[lo, hi)`.
+    fn next_range(&mut self, lo: f64, hi: f64) -> f64 {
+        lo + (hi - lo) * self.next_uniform()
+    }
+
+    /// Uniform integer in `[0, n)` (Lemire's unbiased method).
+    fn next_below(&mut self, n: u64) -> u64 {
+        assert!(n > 0, "next_below(0)");
+        let mut x = self.next_u64();
+        let mut m = (x as u128) * (n as u128);
+        let mut lo = m as u64;
+        if lo < n {
+            let t = n.wrapping_neg() % n;
+            while lo < t {
+                x = self.next_u64();
+                m = (x as u128) * (n as u128);
+                lo = m as u64;
+            }
+        }
+        (m >> 64) as u64
+    }
+
+    /// Standard normal via Marsaglia's polar method.
+    ///
+    /// Stateless (discards the second variate) to keep the trait
+    /// object-safe without interior caching; GEMM-level fills dominate
+    /// cost anyway.
+    fn next_gaussian(&mut self) -> f64 {
+        loop {
+            let u = 2.0 * self.next_uniform() - 1.0;
+            let v = 2.0 * self.next_uniform() - 1.0;
+            let s = u * u + v * v;
+            if s > 0.0 && s < 1.0 {
+                return u * (-2.0 * s.ln() / s).sqrt();
+            }
+        }
+    }
+
+    /// Exponential with rate 1 (inverse CDF).
+    fn next_exponential(&mut self) -> f64 {
+        -(1.0 - self.next_uniform()).ln()
+    }
+}
+
+/// Fisher–Yates shuffle (free function to keep `Rng` dyn-compatible).
+pub fn shuffle<T>(rng: &mut dyn Rng, items: &mut [T]) {
+    for i in (1..items.len()).rev() {
+        let j = rng.next_below(i as u64 + 1) as usize;
+        items.swap(i, j);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn uniform_in_unit_interval_with_decent_mean() {
+        let mut r = Xoshiro256pp::seed_from_u64(1);
+        let n = 20_000;
+        let mut sum = 0.0;
+        for _ in 0..n {
+            let x = r.next_uniform();
+            assert!((0.0..1.0).contains(&x));
+            sum += x;
+        }
+        let mean = sum / n as f64;
+        assert!((mean - 0.5).abs() < 0.01, "mean {mean}");
+    }
+
+    #[test]
+    fn gaussian_moments() {
+        let mut r = Xoshiro256pp::seed_from_u64(2);
+        let n = 50_000;
+        let (mut s1, mut s2) = (0.0, 0.0);
+        for _ in 0..n {
+            let x = r.next_gaussian();
+            s1 += x;
+            s2 += x * x;
+        }
+        let mean = s1 / n as f64;
+        let var = s2 / n as f64 - mean * mean;
+        assert!(mean.abs() < 0.02, "mean {mean}");
+        assert!((var - 1.0).abs() < 0.03, "var {var}");
+    }
+
+    #[test]
+    fn exponential_mean_one() {
+        let mut r = Xoshiro256pp::seed_from_u64(3);
+        let n = 50_000;
+        let mean: f64 = (0..n).map(|_| r.next_exponential()).sum::<f64>() / n as f64;
+        assert!((mean - 1.0).abs() < 0.02, "mean {mean}");
+    }
+
+    #[test]
+    fn next_below_unbiased_small_n() {
+        let mut r = Xoshiro256pp::seed_from_u64(4);
+        let mut counts = [0usize; 3];
+        for _ in 0..30_000 {
+            counts[r.next_below(3) as usize] += 1;
+        }
+        for c in counts {
+            assert!((c as f64 - 10_000.0).abs() < 400.0, "{counts:?}");
+        }
+    }
+
+    #[test]
+    fn shuffle_is_permutation() {
+        let mut r = Xoshiro256pp::seed_from_u64(5);
+        let mut v: Vec<u32> = (0..100).collect();
+        shuffle(&mut r, &mut v);
+        let mut sorted = v.clone();
+        sorted.sort_unstable();
+        assert_eq!(sorted, (0..100).collect::<Vec<_>>());
+        assert_ne!(v, (0..100).collect::<Vec<_>>()); // astronomically unlikely
+    }
+
+    #[test]
+    fn deterministic_from_seed() {
+        let a: Vec<u64> = {
+            let mut r = Xoshiro256pp::seed_from_u64(9);
+            (0..16).map(|_| r.next_u64()).collect()
+        };
+        let b: Vec<u64> = {
+            let mut r = Xoshiro256pp::seed_from_u64(9);
+            (0..16).map(|_| r.next_u64()).collect()
+        };
+        assert_eq!(a, b);
+    }
+}

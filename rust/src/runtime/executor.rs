@@ -1,0 +1,236 @@
+//! The PJRT executor: compile HLO-text artifacts once, execute many
+//! times. Thread-confined (PJRT wrappers are not `Send`); the
+//! coordinator hosts one executor inside a dedicated actor thread.
+
+use std::collections::HashMap;
+
+use crate::linalg::Dense;
+use crate::runtime::manifest::{ArtifactSpec, Manifest};
+use crate::svd::Factorization;
+use crate::util::{Error, Result};
+
+/// Outputs of one `srsvd_scored` artifact execution.
+#[derive(Debug, Clone)]
+pub struct SrsvdOutput {
+    pub factorization: Factorization,
+    /// The paper's MSE metric, computed in-graph by the fused Pallas
+    /// scorer (f32).
+    pub mse: f64,
+}
+
+/// Compiles and runs AOT artifacts on the PJRT CPU client.
+pub struct Executor {
+    client: xla::PjRtClient,
+    manifest: Manifest,
+    cache: HashMap<String, xla::PjRtLoadedExecutable>,
+}
+
+fn xerr(context: &str, e: xla::Error) -> Error {
+    Error::Runtime(format!("{context}: {e}"))
+}
+
+impl Executor {
+    /// Create a CPU PJRT client and parse the manifest in `dir`.
+    pub fn new(dir: &std::path::Path) -> Result<Executor> {
+        let manifest = Manifest::load(dir)?;
+        manifest.validate_files()?;
+        let client = xla::PjRtClient::cpu().map_err(|e| xerr("PjRtClient::cpu", e))?;
+        log::info!(
+            "runtime: platform={} devices={} artifacts={}",
+            client.platform_name(),
+            client.device_count(),
+            manifest.artifacts.len()
+        );
+        Ok(Executor { client, manifest, cache: HashMap::new() })
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    /// Compile (and cache) the named artifact. Returns compile seconds.
+    pub fn ensure_compiled(&mut self, name: &str) -> Result<f64> {
+        if self.cache.contains_key(name) {
+            return Ok(0.0);
+        }
+        let spec = self
+            .manifest
+            .find(name)
+            .ok_or_else(|| Error::Artifact(format!("unknown artifact {name:?}")))?
+            .clone();
+        let path = self.manifest.path_of(&spec);
+        let t = crate::util::timer::Timer::start();
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str()
+                .ok_or_else(|| Error::Artifact("non-utf8 artifact path".into()))?,
+        )
+        .map_err(|e| xerr("HloModuleProto::from_text_file", e))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| xerr(&format!("compile {name}"), e))?;
+        let secs = t.elapsed_secs();
+        log::debug!("compiled artifact {name} in {:.2}s", secs);
+        self.cache.insert(name.to_string(), exe);
+        Ok(secs)
+    }
+
+    /// Execute an artifact with row-major f32 inputs; returns the output
+    /// tuple elements as flat f32 vectors (in manifest output order).
+    pub fn run_raw(&mut self, name: &str, inputs: &[(Vec<f32>, Vec<usize>)]) -> Result<Vec<Vec<f32>>> {
+        self.ensure_compiled(name)?;
+        let spec = self.manifest.find(name).unwrap().clone();
+        if inputs.len() != spec.inputs.len() {
+            return Err(Error::Invalid(format!(
+                "artifact {name}: expected {} inputs, got {}",
+                spec.inputs.len(),
+                inputs.len()
+            )));
+        }
+        let mut literals = Vec::with_capacity(inputs.len());
+        for ((data, shape), ispec) in inputs.iter().zip(&spec.inputs) {
+            if *shape != ispec.shape {
+                return Err(Error::Shape(format!(
+                    "artifact {name} input {}: expected {:?}, got {:?}",
+                    ispec.name, ispec.shape, shape
+                )));
+            }
+            let lit = xla::Literal::vec1(data);
+            let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+            let lit = if dims.is_empty() {
+                lit.reshape(&[]).map_err(|e| xerr("reshape scalar", e))?
+            } else {
+                lit.reshape(&dims).map_err(|e| xerr("reshape input", e))?
+            };
+            literals.push(lit);
+        }
+        let exe = self.cache.get(name).unwrap();
+        let result = exe
+            .execute::<xla::Literal>(&literals)
+            .map_err(|e| xerr(&format!("execute {name}"), e))?;
+        let tuple = result[0][0]
+            .to_literal_sync()
+            .map_err(|e| xerr("to_literal_sync", e))?;
+        // aot.py lowers with return_tuple=True: always a tuple, even 1-ary.
+        let parts = tuple.to_tuple().map_err(|e| xerr("to_tuple", e))?;
+        if parts.len() != spec.outputs.len() {
+            return Err(Error::Runtime(format!(
+                "artifact {name}: expected {} outputs, got {}",
+                spec.outputs.len(),
+                parts.len()
+            )));
+        }
+        parts
+            .into_iter()
+            .map(|p| p.to_vec::<f32>().map_err(|e| xerr("to_vec", e)))
+            .collect()
+    }
+
+    /// Execute an `srsvd_scored` artifact: factorize `X − μ1ᵀ` with the
+    /// supplied Gaussian test matrix Ω (generated rust-side for seed
+    /// control).
+    pub fn run_srsvd(
+        &mut self,
+        spec: &ArtifactSpec,
+        x: &Dense,
+        mu: &[f64],
+        omega: &Dense,
+    ) -> Result<SrsvdOutput> {
+        let (m, n, k, kk) = (spec.m, spec.n, spec.k, spec.kk);
+        crate::ensure_shape!(x.shape() == (m, n), "x must be {m}x{n}");
+        crate::ensure_shape!(mu.len() == m, "mu must have length {m}");
+        crate::ensure_shape!(omega.shape() == (n, kk), "omega must be {n}x{kk}");
+
+        let mu32: Vec<f32> = mu.iter().map(|&v| v as f32).collect();
+        let outs = self.run_raw(
+            &spec.name,
+            &[
+                (x.to_f32(), vec![m, n]),
+                (mu32, vec![m]),
+                (omega.to_f32(), vec![n, kk]),
+            ],
+        )?;
+        let u = Dense::from_f32(m, k, &outs[0]);
+        let s: Vec<f64> = outs[1].iter().map(|&v| v as f64).collect();
+        let v = Dense::from_f32(n, k, &outs[2]);
+        let mse = outs[3][0] as f64;
+        Ok(SrsvdOutput { factorization: Factorization { u, s, v }, mse })
+    }
+
+    /// Execute a `row_mean` artifact.
+    pub fn run_row_mean(&mut self, spec: &ArtifactSpec, x: &Dense) -> Result<Vec<f64>> {
+        let (m, n) = (spec.m, spec.n);
+        crate::ensure_shape!(x.shape() == (m, n), "x must be {m}x{n}");
+        let outs = self.run_raw(&spec.name, &[(x.to_f32(), vec![m, n])])?;
+        Ok(outs[0].iter().map(|&v| v as f64).collect())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::path::Path;
+
+    fn executor() -> Option<Executor> {
+        let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        if !dir.join("manifest.json").exists() {
+            eprintln!("skipping executor tests: artifacts not built");
+            return None;
+        }
+        Some(Executor::new(&dir).expect("executor"))
+    }
+
+    #[test]
+    fn smoke_matmul_rank1_numerics() {
+        let Some(mut ex) = executor() else { return };
+        // a (8x16) = all 0.5, b (16x4) = all 0.25, u = 1s, v = [0,1,2,3]:
+        // (a@b)[i,j] = 16*0.5*0.25 = 2.0; out[i,j] = 2.0 - v[j].
+        let a = vec![0.5f32; 8 * 16];
+        let b = vec![0.25f32; 16 * 4];
+        let u = vec![1.0f32; 8];
+        let v = vec![0.0f32, 1.0, 2.0, 3.0];
+        let outs = ex
+            .run_raw(
+                "smoke_matmul_rank1",
+                &[
+                    (a, vec![8, 16]),
+                    (b, vec![16, 4]),
+                    (u, vec![8]),
+                    (v, vec![4]),
+                ],
+            )
+            .unwrap();
+        let c = &outs[0];
+        assert_eq!(c.len(), 32);
+        for i in 0..8 {
+            for j in 0..4 {
+                let want = 2.0 - j as f32;
+                assert!((c[i * 4 + j] - want).abs() < 1e-5, "({i},{j})");
+            }
+        }
+    }
+
+    #[test]
+    fn shape_validation_rejects_bad_inputs() {
+        let Some(mut ex) = executor() else { return };
+        let bad = ex.run_raw("smoke_matmul_rank1", &[(vec![0.0; 4], vec![2, 2])]);
+        assert!(bad.is_err());
+        let bad2 = ex.run_raw(
+            "smoke_matmul_rank1",
+            &[
+                (vec![0.0; 64], vec![8, 8]), // wrong shape
+                (vec![0.0; 64], vec![16, 4]),
+                (vec![0.0; 8], vec![8]),
+                (vec![0.0; 4], vec![4]),
+            ],
+        );
+        assert!(bad2.is_err());
+    }
+
+    #[test]
+    fn unknown_artifact_errors() {
+        let Some(mut ex) = executor() else { return };
+        assert!(ex.ensure_compiled("no_such_artifact").is_err());
+    }
+}

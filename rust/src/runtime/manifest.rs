@@ -1,0 +1,187 @@
+//! `artifacts/manifest.json` — the contract between the python compile
+//! path and the rust runtime.
+
+use std::path::{Path, PathBuf};
+
+use crate::util::json::Json;
+use crate::util::{Error, Result};
+
+/// Shape/name of one input or output tensor.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct TensorSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+}
+
+impl TensorSpec {
+    pub fn elements(&self) -> usize {
+        self.shape.iter().product::<usize>().max(1)
+    }
+}
+
+/// One compiled pipeline configuration.
+#[derive(Debug, Clone)]
+pub struct ArtifactSpec {
+    pub name: String,
+    pub file: String,
+    /// Operation kind: `srsvd_scored`, `row_mean`, `matmul_rank1`, ...
+    pub op: String,
+    pub m: usize,
+    pub n: usize,
+    pub k: usize,
+    /// Sampling width K.
+    pub kk: usize,
+    pub q: usize,
+    pub sweeps: usize,
+    pub method: String,
+    pub inputs: Vec<TensorSpec>,
+    pub outputs: Vec<TensorSpec>,
+    pub sha256: String,
+}
+
+/// The parsed manifest.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub version: usize,
+    pub dir: PathBuf,
+    pub artifacts: Vec<ArtifactSpec>,
+}
+
+fn tensor_specs(v: &Json) -> Result<Vec<TensorSpec>> {
+    v.as_arr()?
+        .iter()
+        .map(|t| {
+            Ok(TensorSpec {
+                name: t.get("name")?.as_str()?.to_string(),
+                shape: t
+                    .get("shape")?
+                    .as_arr()?
+                    .iter()
+                    .map(|d| d.as_usize())
+                    .collect::<Result<_>>()?,
+            })
+        })
+        .collect()
+}
+
+impl Manifest {
+    /// Load `<dir>/manifest.json`.
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path).map_err(|e| {
+            Error::Artifact(format!(
+                "cannot read {} (run `make artifacts`): {e}",
+                path.display()
+            ))
+        })?;
+        let v = Json::parse(&text)?;
+        let artifacts = v
+            .get("artifacts")?
+            .as_arr()?
+            .iter()
+            .map(|a| {
+                Ok(ArtifactSpec {
+                    name: a.get("name")?.as_str()?.to_string(),
+                    file: a.get("file")?.as_str()?.to_string(),
+                    op: a.get("op")?.as_str()?.to_string(),
+                    m: a.get("m")?.as_usize()?,
+                    n: a.get("n")?.as_usize()?,
+                    k: a.get("k")?.as_usize()?,
+                    kk: a.get("K")?.as_usize()?,
+                    q: a.get("q")?.as_usize()?,
+                    sweeps: a.get("sweeps")?.as_usize()?,
+                    method: a.get("method")?.as_str()?.to_string(),
+                    inputs: tensor_specs(a.get("inputs")?)?,
+                    outputs: tensor_specs(a.get("outputs")?)?,
+                    sha256: a.get("sha256")?.as_str()?.to_string(),
+                })
+            })
+            .collect::<Result<Vec<_>>>()?;
+        Ok(Manifest {
+            version: v.get("version")?.as_usize()?,
+            dir: dir.to_path_buf(),
+            artifacts,
+        })
+    }
+
+    /// The default artifact directory: `$SRSVD_ARTIFACTS` or
+    /// `<repo>/artifacts` relative to the current dir.
+    pub fn default_dir() -> PathBuf {
+        std::env::var("SRSVD_ARTIFACTS")
+            .map(PathBuf::from)
+            .unwrap_or_else(|_| PathBuf::from("artifacts"))
+    }
+
+    pub fn find(&self, name: &str) -> Option<&ArtifactSpec> {
+        self.artifacts.iter().find(|a| a.name == name)
+    }
+
+    /// Find a compiled S-RSVD pipeline matching a job configuration.
+    pub fn find_srsvd(&self, m: usize, n: usize, k: usize, q: usize) -> Option<&ArtifactSpec> {
+        self.artifacts
+            .iter()
+            .find(|a| a.op == "srsvd_scored" && a.m == m && a.n == n && a.k == k && a.q == q)
+    }
+
+    /// Path of an artifact's HLO file.
+    pub fn path_of(&self, spec: &ArtifactSpec) -> PathBuf {
+        self.dir.join(&spec.file)
+    }
+
+    /// Validate that every listed file exists (not content hashes — the
+    /// python side owns those; see python/tests/test_aot.py).
+    pub fn validate_files(&self) -> Result<()> {
+        for a in &self.artifacts {
+            let p = self.path_of(a);
+            if !p.exists() {
+                return Err(Error::Artifact(format!(
+                    "artifact file missing: {}",
+                    p.display()
+                )));
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn repo_artifacts() -> Option<Manifest> {
+        let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        Manifest::load(&dir).ok()
+    }
+
+    #[test]
+    fn loads_real_manifest_when_built() {
+        let Some(m) = repo_artifacts() else {
+            eprintln!("skipping: artifacts not built");
+            return;
+        };
+        assert_eq!(m.version, 1);
+        assert!(!m.artifacts.is_empty());
+        m.validate_files().unwrap();
+        // The smoke artifact is always in the grid.
+        let smoke = m.find("smoke_matmul_rank1").expect("smoke artifact");
+        assert_eq!(smoke.inputs.len(), 4);
+        assert_eq!(smoke.outputs[0].shape, vec![8, 4]);
+    }
+
+    #[test]
+    fn find_srsvd_matches_grid_config() {
+        let Some(m) = repo_artifacts() else {
+            return;
+        };
+        let a = m.find_srsvd(100, 1000, 10, 0).expect("grid config");
+        assert_eq!(a.kk, 20);
+        assert!(m.find_srsvd(123, 456, 7, 0).is_none());
+    }
+
+    #[test]
+    fn parse_error_messages_are_useful() {
+        let err = Manifest::load(Path::new("/nonexistent")).unwrap_err();
+        let msg = format!("{err}");
+        assert!(msg.contains("make artifacts"), "{msg}");
+    }
+}

@@ -1,0 +1,15 @@
+//! PJRT runtime: load the AOT HLO artifacts produced by
+//! `python/compile/aot.py`, compile them on the CPU client, execute
+//! them from the rust hot path.
+//!
+//! Interchange is HLO **text** (see aot.py for why), parsed by
+//! `HloModuleProto::from_text_file`. The PJRT wrapper types are not
+//! `Send`, so [`Executor`] is confined to whichever thread created it;
+//! the coordinator wraps it in a dedicated actor thread
+//! ([`crate::coordinator::runtime_actor`]).
+
+pub mod executor;
+pub mod manifest;
+
+pub use executor::{Executor, SrsvdOutput};
+pub use manifest::{ArtifactSpec, Manifest, TensorSpec};

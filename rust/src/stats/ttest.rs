@@ -1,0 +1,123 @@
+//! Paired t-tests and win-rates — the machinery behind Table 1.
+//!
+//! The paper runs each factorization 30 times and tests
+//!   H₀¹: no difference between the MSE of S-RSVD and RSVD
+//!   H₀²: no difference between individual column reconstruction errors
+//! and additionally reports the win-rate (fraction of columns/images one
+//! algorithm reconstructs better).
+
+use super::special::t_two_sided_p;
+use super::{mean, variance};
+
+/// Outcome of a paired two-sided t-test on differences `a[i] - b[i]`.
+#[derive(Debug, Clone, Copy)]
+pub struct TTestResult {
+    /// t statistic (mean(d) / (sd(d)/√n)).
+    pub t: f64,
+    /// Degrees of freedom (n − 1).
+    pub df: f64,
+    /// Two-sided p-value.
+    pub p: f64,
+    /// Mean difference (negative ⇒ `a` smaller, i.e. `a` more accurate
+    /// when the measurements are errors).
+    pub mean_diff: f64,
+    pub n: usize,
+}
+
+/// Paired two-sided t-test of `a` vs `b` (equal lengths, n ≥ 2).
+pub fn paired_t_test(a: &[f64], b: &[f64]) -> TTestResult {
+    assert_eq!(a.len(), b.len(), "paired test needs equal lengths");
+    assert!(a.len() >= 2, "paired test needs n >= 2");
+    let d: Vec<f64> = a.iter().zip(b).map(|(x, y)| x - y).collect();
+    let n = d.len();
+    let md = mean(&d);
+    let sd = variance(&d).sqrt();
+    let df = (n - 1) as f64;
+    if sd == 0.0 {
+        // All differences identical: p = 1 if exactly zero, else ~0.
+        let p = if md == 0.0 { 1.0 } else { 0.0 };
+        return TTestResult { t: if md == 0.0 { 0.0 } else { f64::INFINITY }, df, p, mean_diff: md, n };
+    }
+    let t = md / (sd / (n as f64).sqrt());
+    TTestResult { t, df, p: t_two_sided_p(t, df), mean_diff: md, n }
+}
+
+/// Fraction of indices where `a[i] < b[i]` (ties split evenly) — the
+/// paper's WR row: how often algorithm A reconstructs a column/image
+/// more accurately than algorithm B.
+pub fn win_rate(a: &[f64], b: &[f64]) -> f64 {
+    assert_eq!(a.len(), b.len());
+    if a.is_empty() {
+        return 0.5;
+    }
+    let mut wins = 0.0;
+    for (x, y) in a.iter().zip(b) {
+        if x < y {
+            wins += 1.0;
+        } else if x == y {
+            wins += 0.5;
+        }
+    }
+    wins / a.len() as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::{Rng, Xoshiro256pp};
+
+    #[test]
+    fn detects_systematic_difference() {
+        let mut rng = Xoshiro256pp::seed_from_u64(0);
+        let a: Vec<f64> = (0..30).map(|_| 1.0 + 0.05 * rng.next_gaussian()).collect();
+        let b: Vec<f64> = a.iter().map(|x| x + 0.2).collect(); // b clearly larger
+        let r = paired_t_test(&a, &b);
+        assert!(r.p < 1e-10, "p {}", r.p);
+        assert!(r.mean_diff < 0.0);
+    }
+
+    #[test]
+    fn no_difference_high_p() {
+        let mut rng = Xoshiro256pp::seed_from_u64(1);
+        let a: Vec<f64> = (0..100).map(|_| rng.next_gaussian()).collect();
+        let b: Vec<f64> = (0..100).map(|_| rng.next_gaussian()).collect();
+        let r = paired_t_test(&a, &b);
+        assert!(r.p > 0.01, "p {}", r.p); // independent same-dist samples
+    }
+
+    #[test]
+    fn identical_inputs_p_one() {
+        let a = [1.0, 2.0, 3.0];
+        let r = paired_t_test(&a, &a);
+        assert_eq!(r.p, 1.0);
+        assert_eq!(r.t, 0.0);
+    }
+
+    #[test]
+    fn constant_offset_zero_variance() {
+        let a = [1.0, 2.0, 3.0];
+        let b = [2.0, 3.0, 4.0];
+        let r = paired_t_test(&a, &b);
+        assert_eq!(r.p, 0.0);
+        assert_eq!(r.mean_diff, -1.0);
+    }
+
+    #[test]
+    fn matches_reference_scipy_example() {
+        // scipy.stats.ttest_rel([1,2,3,4,5],[1.1,2.4,2.9,4.3,5.4])
+        // -> statistic=-2.2691267, pvalue=0.0858104 (df=4)
+        let a = [1.0, 2.0, 3.0, 4.0, 5.0];
+        let b = [1.1, 2.4, 2.9, 4.3, 5.4];
+        let r = paired_t_test(&a, &b);
+        assert!((r.t - (-2.2691267)).abs() < 1e-6, "t {}", r.t);
+        assert!((r.p - 0.0858104).abs() < 1e-6, "p {}", r.p);
+    }
+
+    #[test]
+    fn win_rate_basics() {
+        assert_eq!(win_rate(&[1.0, 1.0], &[2.0, 2.0]), 1.0);
+        assert_eq!(win_rate(&[2.0, 2.0], &[1.0, 1.0]), 0.0);
+        assert_eq!(win_rate(&[1.0, 2.0], &[2.0, 1.0]), 0.5);
+        assert_eq!(win_rate(&[1.0], &[1.0]), 0.5);
+    }
+}

@@ -1,0 +1,137 @@
+//! The paper's algorithms: S-RSVD (Algorithm 1), the RSVD baseline
+//! (Halko et al. 2011), and a deterministic Jacobi-SVD oracle, all over
+//! a common operator abstraction so dense and sparse inputs share one
+//! code path.
+
+pub mod deterministic;
+pub mod ops;
+pub mod pca;
+pub mod rsvd;
+pub mod shifted;
+
+pub use deterministic::deterministic_svd;
+pub use ops::MatVecOps;
+pub use pca::{column_errors, Pca};
+pub use rsvd::Rsvd;
+pub use shifted::{BasisMethod, ShiftedRsvd, SmallSvdMethod};
+
+use crate::linalg::{gemm, Dense};
+
+/// A rank-k factorization `X̄ ≈ U·diag(s)·Vᵀ`.
+#[derive(Debug, Clone)]
+pub struct Factorization {
+    /// Left singular vectors, m×k.
+    pub u: Dense,
+    /// Singular values, descending.
+    pub s: Vec<f64>,
+    /// Right singular vectors, n×k.
+    pub v: Dense,
+}
+
+impl Factorization {
+    pub fn rank(&self) -> usize {
+        self.s.len()
+    }
+
+    /// Dense reconstruction `U·diag(s)·Vᵀ` (m×n — tests/small inputs).
+    pub fn reconstruct(&self) -> Dense {
+        gemm::matmul(&self.u.scale_cols(&self.s), &self.v.transpose())
+    }
+
+    /// Truncate to the leading `k` factors.
+    pub fn truncate(&self, k: usize) -> Factorization {
+        assert!(k <= self.rank());
+        Factorization {
+            u: self.u.truncate_cols(k),
+            s: self.s[..k].to_vec(),
+            v: self.v.truncate_cols(k),
+        }
+    }
+
+    /// Mean squared column reconstruction error against an explicit
+    /// target matrix (the paper's MSE; target is `X̄`).
+    pub fn mse_against(&self, target: &Dense) -> f64 {
+        let d = crate::linalg::fro_diff(&self.reconstruct(), target);
+        d * d / target.cols() as f64
+    }
+}
+
+/// Which execution engine a factorization request should use.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SvdEngine {
+    /// Native rust implementation (any shape).
+    Native,
+    /// AOT-compiled HLO artifact via the PJRT runtime (grid shapes only).
+    Artifact,
+}
+
+/// Configuration shared by RSVD and S-RSVD.
+#[derive(Debug, Clone, Copy)]
+pub struct SvdConfig {
+    /// Target rank k.
+    pub k: usize,
+    /// Oversampling: the sampling parameter is `K = k + oversample`.
+    /// The paper uses K = 2k, i.e. `oversample = k`.
+    pub oversample: usize,
+    /// Power-iteration count q.
+    pub power_iters: usize,
+    /// How the shifted basis is obtained (Alg. 1 L4-6).
+    pub basis: BasisMethod,
+    /// Backend for the small projected SVD (Alg. 1 L13).
+    pub small_svd: SmallSvdMethod,
+}
+
+impl Default for SvdConfig {
+    fn default() -> Self {
+        SvdConfig {
+            k: 10,
+            oversample: 10,
+            power_iters: 0,
+            basis: BasisMethod::Direct,
+            small_svd: SmallSvdMethod::Jacobi,
+        }
+    }
+}
+
+impl SvdConfig {
+    /// The paper's parameterization: K = 2k, q = 0.
+    pub fn paper(k: usize) -> Self {
+        SvdConfig { k, oversample: k, ..Default::default() }
+    }
+
+    /// The sampling width K.
+    pub fn sample_width(&self) -> usize {
+        self.k + self.oversample
+    }
+
+    pub fn with_power(mut self, q: usize) -> Self {
+        self.power_iters = q;
+        self
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Xoshiro256pp;
+
+    #[test]
+    fn factorization_truncate_and_reconstruct() {
+        let mut rng = Xoshiro256pp::seed_from_u64(0);
+        let x = Dense::gaussian(20, 30, &mut rng);
+        let f = deterministic_svd(&x, 10);
+        let t = f.truncate(4);
+        assert_eq!(t.rank(), 4);
+        assert_eq!(t.u.shape(), (20, 4));
+        assert_eq!(t.v.shape(), (30, 4));
+        // Truncation can only increase error.
+        assert!(t.mse_against(&x) >= f.mse_against(&x) - 1e-12);
+    }
+
+    #[test]
+    fn paper_config_uses_double_k() {
+        let c = SvdConfig::paper(25);
+        assert_eq!(c.sample_width(), 50);
+        assert_eq!(c.power_iters, 0);
+    }
+}

@@ -1,0 +1,139 @@
+//! Operator abstraction: everything Algorithm 1 needs from the data
+//! matrix, implemented by [`Dense`] and [`Csr`].
+//!
+//! The abstraction is the point of the paper: the algorithm only ever
+//! multiplies against `X` (plus rank-1 corrections), so a sparse matrix
+//! stays sparse end-to-end.
+
+use crate::linalg::{gemm, Csr, Dense};
+
+/// Products and reductions against the (un-shifted) data matrix.
+pub trait MatVecOps: Sync {
+    fn shape(&self) -> (usize, usize);
+
+    /// `X · B`.
+    fn mm(&self, b: &Dense) -> Dense;
+
+    /// `Xᵀ · B`.
+    fn tmm(&self, b: &Dense) -> Dense;
+
+    /// `X·B − u·vᵀ` fused (`u` len m, `v` len b.cols()).
+    fn mm_rank1(&self, b: &Dense, u: &[f64], v: &[f64]) -> Dense;
+
+    /// `Xᵀ·B − u·vᵀ` fused (`u` len n, `v` len b.cols()).
+    fn tmm_rank1(&self, b: &Dense, u: &[f64], v: &[f64]) -> Dense;
+
+    /// Per-row means (the PCA shifting vector).
+    fn row_means(&self) -> Vec<f64>;
+
+    /// Squared Frobenius norm of X.
+    fn sq_fro(&self) -> f64;
+
+    /// Number of stored entries (m·n for dense).
+    fn stored_entries(&self) -> usize;
+}
+
+impl MatVecOps for Dense {
+    fn shape(&self) -> (usize, usize) {
+        Dense::shape(self)
+    }
+
+    fn mm(&self, b: &Dense) -> Dense {
+        gemm::matmul(self, b)
+    }
+
+    fn tmm(&self, b: &Dense) -> Dense {
+        gemm::tmatmul(self, b)
+    }
+
+    fn mm_rank1(&self, b: &Dense, u: &[f64], v: &[f64]) -> Dense {
+        gemm::matmul_rank1(self, b, u, v)
+    }
+
+    fn tmm_rank1(&self, b: &Dense, u: &[f64], v: &[f64]) -> Dense {
+        gemm::tmatmul_rank1(self, b, u, v)
+    }
+
+    fn row_means(&self) -> Vec<f64> {
+        Dense::row_means(self)
+    }
+
+    fn sq_fro(&self) -> f64 {
+        self.data().iter().map(|x| x * x).sum()
+    }
+
+    fn stored_entries(&self) -> usize {
+        self.rows() * self.cols()
+    }
+}
+
+impl MatVecOps for Csr {
+    fn shape(&self) -> (usize, usize) {
+        Csr::shape(self)
+    }
+
+    fn mm(&self, b: &Dense) -> Dense {
+        self.matmul_dense(b)
+    }
+
+    fn tmm(&self, b: &Dense) -> Dense {
+        self.tmatmul_dense(b)
+    }
+
+    fn mm_rank1(&self, b: &Dense, u: &[f64], v: &[f64]) -> Dense {
+        Csr::matmul_rank1(self, b, u, v)
+    }
+
+    fn tmm_rank1(&self, b: &Dense, u: &[f64], v: &[f64]) -> Dense {
+        Csr::tmatmul_rank1(self, b, u, v)
+    }
+
+    fn row_means(&self) -> Vec<f64> {
+        Csr::row_means(self)
+    }
+
+    fn sq_fro(&self) -> f64 {
+        let mut s = 0.0;
+        for i in 0..self.rows() {
+            for (_, v) in self.row_iter(i) {
+                s += v * v;
+            }
+        }
+        s
+    }
+
+    fn stored_entries(&self) -> usize {
+        self.nnz()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::{Rng, Xoshiro256pp};
+
+    #[test]
+    fn dense_and_sparse_agree_through_the_trait() {
+        let mut rng = Xoshiro256pp::seed_from_u64(0);
+        let sp = Csr::random(25, 60, 0.08, &mut rng, |r| r.next_uniform() + 0.2);
+        let de = sp.to_dense();
+        let b = Dense::gaussian(60, 5, &mut rng);
+        let bt = Dense::gaussian(25, 5, &mut rng);
+        let u_m: Vec<f64> = (0..25).map(|_| rng.next_gaussian()).collect();
+        let u_n: Vec<f64> = (0..60).map(|_| rng.next_gaussian()).collect();
+        let v5: Vec<f64> = (0..5).map(|_| rng.next_gaussian()).collect();
+
+        let pairs = [
+            (MatVecOps::mm(&sp, &b), MatVecOps::mm(&de, &b)),
+            (MatVecOps::tmm(&sp, &bt), MatVecOps::tmm(&de, &bt)),
+            (sp.mm_rank1(&b, &u_m, &v5), de.mm_rank1(&b, &u_m, &v5)),
+            (sp.tmm_rank1(&bt, &u_n, &v5), de.tmm_rank1(&bt, &u_n, &v5)),
+        ];
+        for (a, b) in &pairs {
+            assert!(crate::linalg::fro_diff(a, b) < 1e-10);
+        }
+        assert!((MatVecOps::sq_fro(&sp) - MatVecOps::sq_fro(&de)).abs() < 1e-10);
+        assert_eq!(MatVecOps::row_means(&sp), MatVecOps::row_means(&de));
+        assert!(sp.stored_entries() < de.stored_entries());
+    }
+}

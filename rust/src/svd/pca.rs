@@ -1,0 +1,199 @@
+//! PCA built on the shifted factorization (paper §2): fit, transform,
+//! reconstruct, and the error metrics of §5 (MSE, per-column errors for
+//! win-rates and the H₀² t-test).
+
+use crate::linalg::{gemm, Csr, Dense};
+use crate::rng::Rng;
+use crate::util::Result;
+
+use super::{Factorization, MatVecOps, ShiftedRsvd, SvdConfig};
+
+/// A fitted PCA model: the shifting vector and the principal axes.
+#[derive(Debug, Clone)]
+pub struct Pca {
+    /// Mean vector μ (length m).
+    pub mean: Vec<f64>,
+    /// Principal axes U (m×k, columns = eigenvectors of the covariance).
+    pub components: Dense,
+    /// Singular values of X̄ (scale of each component).
+    pub singular_values: Vec<f64>,
+}
+
+impl Pca {
+    /// Fit by S-RSVD on the implicitly centered matrix (one pass, no
+    /// densification).
+    pub fn fit(x: &dyn MatVecOps, config: SvdConfig, rng: &mut dyn Rng) -> Result<Pca> {
+        let mu = x.row_means();
+        let f = ShiftedRsvd::new(config).factorize(x, &mu, rng)?;
+        Ok(Pca { mean: mu, components: f.u, singular_values: f.s })
+    }
+
+    pub fn k(&self) -> usize {
+        self.singular_values.len()
+    }
+
+    /// Project new columns: `Y = Uᵀ(X − μ1ᵀ)` (paper Eq. 1/3), computed
+    /// through the rank-1 trick — `X` itself is never centered.
+    pub fn transform(&self, x: &dyn MatVecOps) -> Dense {
+        // Y = UᵀX − (Uᵀμ)1ᵀ. Compute transposed: Yᵀ = XᵀU − 1(μᵀU).
+        let (_, n) = x.shape();
+        let mtu = self.components.tmatvec(&self.mean);
+        let yt = x.tmm_rank1(&self.components, &vec![1.0; n], &mtu);
+        yt.transpose()
+    }
+
+    /// Reconstruct columns from scores: `X̂ = U·Y + μ1ᵀ` (m×n dense).
+    pub fn inverse_transform(&self, y: &Dense) -> Dense {
+        let mut rec = gemm::matmul(&self.components, y);
+        for i in 0..rec.rows() {
+            let m = self.mean[i];
+            for v in rec.row_mut(i) {
+                *v += m;
+            }
+        }
+        rec
+    }
+
+    /// Mean squared column reconstruction error on `x` (dense path).
+    pub fn mse(&self, x: &Dense) -> f64 {
+        let errs = self.column_errors_dense(x);
+        errs.iter().sum::<f64>() / errs.len() as f64
+    }
+
+    /// Per-column squared reconstruction errors ‖x̄ⱼ − UUᵀx̄ⱼ‖² (dense).
+    pub fn column_errors_dense(&self, x: &Dense) -> Vec<f64> {
+        let xbar = x.subtract_column(&self.mean);
+        let y = gemm::tmatmul(&self.components, &xbar); // k×n scores
+        let rec = gemm::matmul(&self.components, &y);
+        (0..x.cols())
+            .map(|j| {
+                (0..x.rows())
+                    .map(|i| {
+                        let d = xbar[(i, j)] - rec[(i, j)];
+                        d * d
+                    })
+                    .sum()
+            })
+            .collect()
+    }
+
+    /// Per-column squared errors for a sparse input, O(nnz·k + nk²):
+    /// ‖x̄ⱼ − UUᵀx̄ⱼ‖² = ‖x̄ⱼ‖² − ‖Uᵀx̄ⱼ‖² (U orthonormal).
+    pub fn column_errors_sparse(&self, x: &Csr) -> Vec<f64> {
+        let (m, n) = x.shape();
+        let k = self.k();
+        // Scores Yᵀ = XᵀU − 1(μᵀU): n×k.
+        let mtu = self.components.tmatvec(&self.mean);
+        let yt = x.tmm_rank1(&self.components, &vec![1.0; n], &mtu);
+        // ‖x̄ⱼ‖² = ‖xⱼ‖² − 2 μᵀxⱼ + ‖μ‖².
+        let mu_sq: f64 = self.mean.iter().map(|v| v * v).sum();
+        let mut col_sq = vec![0.0; n];
+        let mut mu_dot = vec![0.0; n];
+        for i in 0..m {
+            let mi = self.mean[i];
+            for (j, v) in x.row_iter(i) {
+                col_sq[j] += v * v;
+                mu_dot[j] += mi * v;
+            }
+        }
+        (0..n)
+            .map(|j| {
+                let xbar_sq = col_sq[j] - 2.0 * mu_dot[j] + mu_sq;
+                let proj_sq: f64 = (0..k).map(|l| yt[(j, l)] * yt[(j, l)]).sum();
+                (xbar_sq - proj_sq).max(0.0)
+            })
+            .collect()
+    }
+}
+
+/// Per-column squared errors of an arbitrary factorization against the
+/// centered matrix — used to score RSVD (whose U spans the *uncentered*
+/// range) under the paper's PCA protocol.
+pub fn column_errors(x: &Dense, mu: &[f64], f: &Factorization) -> Vec<f64> {
+    let xbar = x.subtract_column(mu);
+    let y = gemm::tmatmul(&f.u, &xbar);
+    let rec = gemm::matmul(&f.u, &y);
+    (0..x.cols())
+        .map(|j| {
+            (0..x.rows())
+                .map(|i| {
+                    let d = xbar[(i, j)] - rec[(i, j)];
+                    d * d
+                })
+                .sum()
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Xoshiro256pp;
+    use crate::svd::deterministic::optimal_mse;
+
+    fn uniform(m: usize, n: usize, seed: u64) -> Dense {
+        let mut rng = Xoshiro256pp::seed_from_u64(seed);
+        Dense::from_fn(m, n, |_, _| rng.next_uniform())
+    }
+
+    #[test]
+    fn fit_transform_reconstruct_cycle() {
+        let x = uniform(20, 120, 0);
+        let cfg = SvdConfig { k: 6, oversample: 6, power_iters: 2, ..Default::default() };
+        let mut rng = Xoshiro256pp::seed_from_u64(1);
+        let pca = Pca::fit(&x, cfg, &mut rng).unwrap();
+        let y = pca.transform(&x);
+        assert_eq!(y.shape(), (6, 120));
+        let rec = pca.inverse_transform(&y);
+        // Reconstruction error ≈ MSE·n; both near the k=6 optimum.
+        let mse = pca.mse(&x);
+        let opt = optimal_mse(&x.subtract_column(&x.row_means()), 6);
+        assert!(mse <= 1.3 * opt + 1e-12, "mse {mse} opt {opt}");
+        let err = crate::linalg::fro_diff(&rec, &x);
+        assert!((err * err / 120.0 - mse).abs() < 1e-8);
+    }
+
+    #[test]
+    fn mse_is_mean_of_column_errors() {
+        let x = uniform(15, 60, 2);
+        let cfg = SvdConfig::paper(4);
+        let mut rng = Xoshiro256pp::seed_from_u64(3);
+        let pca = Pca::fit(&x, cfg, &mut rng).unwrap();
+        let errs = pca.column_errors_dense(&x);
+        assert_eq!(errs.len(), 60);
+        let mse = pca.mse(&x);
+        assert!((mse - errs.iter().sum::<f64>() / 60.0).abs() < 1e-12);
+        assert!(errs.iter().all(|&e| e >= 0.0));
+    }
+
+    #[test]
+    fn sparse_column_errors_match_dense() {
+        let mut rng = Xoshiro256pp::seed_from_u64(4);
+        let sp = Csr::random(20, 70, 0.15, &mut rng, |r| r.next_uniform() + 0.3);
+        let de = sp.to_dense();
+        let cfg = SvdConfig { k: 4, oversample: 4, power_iters: 1, ..Default::default() };
+        let pca = Pca::fit(&sp, cfg, &mut Xoshiro256pp::seed_from_u64(5)).unwrap();
+        let es = pca.column_errors_sparse(&sp);
+        let ed = pca.column_errors_dense(&de);
+        for (a, b) in es.iter().zip(&ed) {
+            assert!((a - b).abs() < 1e-8 * b.max(1.0), "{a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn column_errors_for_external_factorization() {
+        let x = uniform(18, 50, 6);
+        let mu = x.row_means();
+        let cfg = SvdConfig::paper(4);
+        let f = crate::svd::Rsvd::new(cfg)
+            .factorize(&x, &mut Xoshiro256pp::seed_from_u64(7))
+            .unwrap();
+        let errs = column_errors(&x, &mu, &f);
+        assert_eq!(errs.len(), 50);
+        // The centered model must beat the uncentered one on average.
+        let pca = Pca::fit(&x, cfg, &mut Xoshiro256pp::seed_from_u64(8)).unwrap();
+        let errs_pca = pca.column_errors_dense(&x);
+        let mean = |v: &[f64]| v.iter().sum::<f64>() / v.len() as f64;
+        assert!(mean(&errs_pca) < mean(&errs));
+    }
+}

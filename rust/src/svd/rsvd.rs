@@ -1,0 +1,108 @@
+//! The RSVD baseline (Halko, Martinsson & Tropp 2011) — the comparator
+//! in every experiment.
+//!
+//! Implemented as S-RSVD with μ = 0 (the paper notes the reduction is
+//! exact), plus the *explicit centering* entry point that demonstrates
+//! what the shifted algorithm avoids: `factorize_centered` really
+//! subtracts the mean — densifying a sparse input — before factorizing.
+
+use crate::linalg::{Csr, Dense};
+use crate::rng::Rng;
+use crate::util::Result;
+
+use super::{Factorization, MatVecOps, ShiftedRsvd, SvdConfig};
+
+/// The randomized SVD of Halko et al. (2011).
+#[derive(Debug, Clone, Copy)]
+pub struct Rsvd {
+    pub config: SvdConfig,
+}
+
+impl Rsvd {
+    pub fn new(config: SvdConfig) -> Self {
+        Rsvd { config }
+    }
+
+    /// Plain RSVD of `x` (no shift — the off-center factorization the
+    /// paper's experiments compare against).
+    pub fn factorize(&self, x: &dyn MatVecOps, rng: &mut dyn Rng) -> Result<Factorization> {
+        let (m, _) = x.shape();
+        ShiftedRsvd::new(self.config).factorize(x, &vec![0.0; m], rng)
+    }
+
+    /// RSVD of the **explicitly** mean-centered dense matrix: materialize
+    /// `X̄ = X − μ1ᵀ`, then factorize. This is the baseline protocol in
+    /// Fig. 1d and the efficiency comparison of §4 — O(mn) memory.
+    pub fn factorize_centered_dense(
+        &self,
+        x: &Dense,
+        rng: &mut dyn Rng,
+    ) -> Result<Factorization> {
+        let mu = x.row_means();
+        let xbar = x.subtract_column(&mu);
+        self.factorize(&xbar, rng)
+    }
+
+    /// RSVD of an explicitly centered *sparse* matrix: densify first
+    /// (the memory blow-up S-RSVD exists to avoid), then factorize.
+    /// Kept deliberately: the efficiency bench measures exactly this.
+    pub fn factorize_centered_sparse(
+        &self,
+        x: &Csr,
+        rng: &mut dyn Rng,
+    ) -> Result<Factorization> {
+        let mu = x.row_means();
+        let dense = x.to_dense().subtract_column(&mu);
+        self.factorize(&dense, rng)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::fro_diff;
+    use crate::rng::Xoshiro256pp;
+    use crate::svd::deterministic::optimal_residual;
+
+    #[test]
+    fn rsvd_near_optimal_with_power_iterations() {
+        let mut rng = Xoshiro256pp::seed_from_u64(0);
+        let x = Dense::from_fn(40, 200, |_, _| rng.next_uniform());
+        let cfg = SvdConfig { k: 8, oversample: 8, power_iters: 2, ..Default::default() };
+        let f = Rsvd::new(cfg).factorize(&x, &mut rng).unwrap();
+        let err = fro_diff(&f.reconstruct(), &x);
+        assert!(err <= 1.15 * optimal_residual(&x, 8));
+    }
+
+    #[test]
+    fn centered_dense_matches_shifted_with_same_seed() {
+        let mut rng = Xoshiro256pp::seed_from_u64(1);
+        let x = Dense::from_fn(30, 90, |_, _| rng.next_uniform());
+        let cfg = SvdConfig::paper(5);
+        let f_rsvd = Rsvd::new(cfg)
+            .factorize_centered_dense(&x, &mut Xoshiro256pp::seed_from_u64(2))
+            .unwrap();
+        let f_srsvd = ShiftedRsvd::new(cfg)
+            .factorize_mean_centered(&x, &mut Xoshiro256pp::seed_from_u64(2))
+            .unwrap();
+        for (a, b) in f_rsvd.s.iter().zip(&f_srsvd.s) {
+            assert!((a - b).abs() < 1e-9 * f_rsvd.s[0].max(1.0));
+        }
+    }
+
+    #[test]
+    fn centered_sparse_densifies_but_agrees() {
+        let mut rng = Xoshiro256pp::seed_from_u64(3);
+        let sp = crate::linalg::Csr::random(25, 80, 0.1, &mut rng, |r| r.next_uniform());
+        let cfg = SvdConfig::paper(4);
+        let f1 = Rsvd::new(cfg)
+            .factorize_centered_sparse(&sp, &mut Xoshiro256pp::seed_from_u64(4))
+            .unwrap();
+        let f2 = ShiftedRsvd::new(cfg)
+            .factorize_mean_centered(&sp, &mut Xoshiro256pp::seed_from_u64(4))
+            .unwrap();
+        for (a, b) in f1.s.iter().zip(&f2.s) {
+            assert!((a - b).abs() < 1e-8);
+        }
+    }
+}

@@ -1,0 +1,336 @@
+//! S-RSVD — the paper's Algorithm 1.
+//!
+//! Rank-k SVD of `X̄ = X − μ·1ᵀ` without materializing `X̄`:
+//!
+//! ```text
+//! 1. Ω ~ N(0,1)^{n×K}
+//! 2. basis Q of X̄Ω            (L2-7: sample + QR, shift via rank-1)
+//! 3. q power iterations        (L8-11: Q ← qr(X̄ qr(X̄ᵀQ)))
+//! 4. Y = QᵀX̄                  (L12: projection, shift via rank-1)
+//! 5. Y = U₁ΣVᵀ, U = QU₁       (L13-14: small SVD + back-projection)
+//! ```
+//!
+//! Every product against `X̄` is a product against `X` plus a rank-1
+//! downdate (Eqs. 7/8/10), dispatched through [`MatVecOps`] so sparse
+//! inputs stay sparse — the complexity drops from O(mnk) to
+//! O(nnz·k + (m+n)k²) (paper Eq. 15).
+
+use crate::linalg::{
+    gemm, householder_qr, jacobi_svd, qr_rank1_update, sym_jacobi_eig, Dense, JacobiOpts,
+};
+use crate::rng::Rng;
+use crate::util::Result;
+
+use super::{Factorization, MatVecOps, SvdConfig};
+
+/// How the basis of the shifted sample matrix is computed (Alg. 1 L4-6).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum BasisMethod {
+    /// Fuse the shift into the sampling product and QR once:
+    /// `Q = qr(XΩ − μ(1ᵀΩ))`. Mathematically the exact shifted sample;
+    /// O(mK²). This is the default.
+    Direct,
+    /// The paper's literal Line 4-6: `Q₁R₁ = qr(XΩ)` then rank-1
+    /// QR-update with `u = −μ, v = 1` (K ones). Note `XΩ − μ1ᵀ` is not
+    /// exactly `X̄Ω`; both bases contain span{μ} so accuracy matches —
+    /// quantified by the `ablation_qr_update` bench.
+    QrUpdatePaper,
+    /// QR-update with the exact right factor `v = Ωᵀ1` (column sums),
+    /// making the updated factorization exactly `qr(X̄Ω)`.
+    QrUpdateExact,
+}
+
+/// Backend for the small K×n SVD (Alg. 1 L13).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SmallSvdMethod {
+    /// One-sided Jacobi on Yᵀ (n×K): accurate, O(nK²·sweeps).
+    Jacobi,
+    /// Eigendecomposition of the K×K Gram matrix YYᵀ: faster for large
+    /// n, squares the condition number (fine for top-k factors).
+    GramEig,
+}
+
+/// The shifted randomized SVD engine.
+#[derive(Debug, Clone, Copy)]
+pub struct ShiftedRsvd {
+    pub config: SvdConfig,
+}
+
+impl ShiftedRsvd {
+    pub fn new(config: SvdConfig) -> Self {
+        ShiftedRsvd { config }
+    }
+
+    /// Factorize `X − μ·1ᵀ`. `mu` may be any m-vector; zeros reduce the
+    /// algorithm to plain RSVD on `X` (Halko et al. 2011).
+    pub fn factorize(
+        &self,
+        x: &dyn MatVecOps,
+        mu: &[f64],
+        rng: &mut dyn Rng,
+    ) -> Result<Factorization> {
+        let (m, n) = x.shape();
+        crate::ensure!(mu.len() == m, "mu length {} != m {}", mu.len(), m);
+        let k = self.config.k;
+        let kk = self.config.sample_width().min(m).min(n);
+        crate::ensure!(k >= 1, "rank k must be >= 1");
+        crate::ensure!(k <= kk, "k {} exceeds sample width {}", k, kk);
+
+        let shifted = mu.iter().any(|&v| v != 0.0);
+        let ones_n = vec![1.0; n];
+
+        // ---- Stage 1: basis of X̄Ω (L2-7) --------------------------------
+        let omega = Dense::gaussian(n, kk, rng);
+        let mut q = match (self.config.basis, shifted) {
+            (_, false) => {
+                // mu = 0: plain RSVD sampling.
+                householder_qr(&x.mm(&omega)).0
+            }
+            (BasisMethod::Direct, true) => {
+                let colsum: Vec<f64> = colsums(&omega);
+                householder_qr(&x.mm_rank1(&omega, mu, &colsum)).0
+            }
+            (BasisMethod::QrUpdatePaper, true) => {
+                let (q1, r1) = householder_qr(&x.mm(&omega));
+                let neg_mu: Vec<f64> = mu.iter().map(|v| -v).collect();
+                let v1 = vec![1.0; kk]; // the paper's v = 1
+                qr_rank1_update(&q1, &r1, &neg_mu, &v1).q
+            }
+            (BasisMethod::QrUpdateExact, true) => {
+                let (q1, r1) = householder_qr(&x.mm(&omega));
+                let neg_mu: Vec<f64> = mu.iter().map(|v| -v).collect();
+                let v1 = colsums(&omega); // exact: v = Ωᵀ1
+                qr_rank1_update(&q1, &r1, &neg_mu, &v1).q
+            }
+        };
+
+        // ---- Power iteration (L8-11) -------------------------------------
+        for _ in 0..self.config.power_iters {
+            // Q' = qr(X̄ᵀQ) = qr(XᵀQ − 1(μᵀQ))
+            let mtq = q.tmatvec(mu); // μᵀQ, length kk
+            let qp = householder_qr(&x.tmm_rank1(&q, &ones_n, &mtq)).0;
+            // Q = qr(X̄Q') = qr(XQ' − μ(1ᵀQ'))
+            let colsum_qp = colsums(&qp);
+            q = householder_qr(&x.mm_rank1(&qp, mu, &colsum_qp)).0;
+        }
+
+        // ---- Stage 2: project (L12) ---------------------------------------
+        // Yᵀ = X̄ᵀQ (n×K) — computed transposed so the sparse path streams
+        // CSR rows once; Y itself is never formed.
+        let mtq = q.tmatvec(mu);
+        let yt = x.tmm_rank1(&q, &ones_n, &mtq);
+
+        // ---- Stage 3: small SVD + back-projection (L13-14) ----------------
+        let (u1, s, v) = match self.config.small_svd {
+            SmallSvdMethod::Jacobi => {
+                // Yᵀ = U_t Σ V_tᵀ → Y = V_t Σ U_tᵀ: left factors V_t (K×K),
+                // right factors U_t (n×K).
+                let (ut, s, vt) = jacobi_svd(&yt, JacobiOpts::default());
+                (vt, s, ut)
+            }
+            SmallSvdMethod::GramEig => {
+                // G = YYᵀ = YtᵀYt (K×K) = U₁ Σ² U₁ᵀ; V = Yt U₁ Σ⁻¹.
+                let g = gemm::tmatmul(&yt, &yt);
+                let (evecs, evals) = sym_jacobi_eig(&g, JacobiOpts::default());
+                let s: Vec<f64> = evals.iter().map(|&l| l.max(0.0).sqrt()).collect();
+                let inv: Vec<f64> = s
+                    .iter()
+                    .map(|&x| if x > 1e-300 { 1.0 / x } else { 0.0 })
+                    .collect();
+                let v = gemm::matmul(&yt, &evecs).scale_cols(&inv);
+                (evecs, s, v)
+            }
+        };
+
+        let u = gemm::matmul(&q, &u1); // m×K
+        Ok(Factorization {
+            u: u.truncate_cols(k),
+            s: s[..k].to_vec(),
+            v: v.truncate_cols(k),
+        })
+    }
+
+    /// Convenience: factorize the mean-centered matrix (μ = row means) —
+    /// the PCA use case of §2.
+    pub fn factorize_mean_centered(
+        &self,
+        x: &dyn MatVecOps,
+        rng: &mut dyn Rng,
+    ) -> Result<Factorization> {
+        let mu = x.row_means();
+        self.factorize(x, &mu, rng)
+    }
+}
+
+fn colsums(b: &Dense) -> Vec<f64> {
+    let (rows, cols) = b.shape();
+    let mut out = vec![0.0; cols];
+    for i in 0..rows {
+        for (o, &x) in out.iter_mut().zip(b.row(i)) {
+            *o += x;
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::{fro_diff, Csr};
+    use crate::rng::Xoshiro256pp;
+    use crate::svd::deterministic::optimal_residual;
+
+    fn uniform(m: usize, n: usize, seed: u64) -> Dense {
+        let mut rng = Xoshiro256pp::seed_from_u64(seed);
+        Dense::from_fn(m, n, |_, _| rng.next_uniform())
+    }
+
+    #[test]
+    fn near_optimal_on_centered_target() {
+        let x = uniform(50, 300, 0);
+        let mu = x.row_means();
+        let xbar = x.subtract_column(&mu);
+        let cfg = SvdConfig { k: 8, oversample: 8, power_iters: 2, ..Default::default() };
+        let mut rng = Xoshiro256pp::seed_from_u64(1);
+        let f = ShiftedRsvd::new(cfg).factorize(&x, &mu, &mut rng).unwrap();
+        let err = fro_diff(&f.reconstruct(), &xbar);
+        let opt = optimal_residual(&xbar, 8);
+        assert!(err <= 1.15 * opt, "err {err} vs opt {opt}");
+    }
+
+    #[test]
+    fn zero_mu_is_plain_rsvd() {
+        let x = uniform(40, 120, 2);
+        let cfg = SvdConfig { k: 6, oversample: 6, power_iters: 2, ..Default::default() };
+        let mut rng = Xoshiro256pp::seed_from_u64(3);
+        let f = ShiftedRsvd::new(cfg)
+            .factorize(&x, &vec![0.0; 40], &mut rng)
+            .unwrap();
+        let err = fro_diff(&f.reconstruct(), &x);
+        let opt = optimal_residual(&x, 6);
+        assert!(err <= 1.15 * opt, "err {err} vs opt {opt}");
+    }
+
+    #[test]
+    fn all_basis_methods_are_accurate() {
+        let x = uniform(40, 150, 4);
+        let mu = x.row_means();
+        let xbar = x.subtract_column(&mu);
+        let opt = optimal_residual(&xbar, 6);
+        for basis in [
+            BasisMethod::Direct,
+            BasisMethod::QrUpdatePaper,
+            BasisMethod::QrUpdateExact,
+        ] {
+            let cfg = SvdConfig {
+                k: 6,
+                oversample: 6,
+                power_iters: 2,
+                basis,
+                ..Default::default()
+            };
+            let mut rng = Xoshiro256pp::seed_from_u64(5);
+            let f = ShiftedRsvd::new(cfg).factorize(&x, &mu, &mut rng).unwrap();
+            let err = fro_diff(&f.reconstruct(), &xbar);
+            assert!(err <= 1.2 * opt, "{basis:?}: err {err} vs opt {opt}");
+        }
+    }
+
+    #[test]
+    fn gram_eig_matches_jacobi_backend() {
+        let x = uniform(30, 200, 6);
+        let mu = x.row_means();
+        for method in [SmallSvdMethod::Jacobi, SmallSvdMethod::GramEig] {
+            let cfg = SvdConfig {
+                k: 5,
+                oversample: 5,
+                power_iters: 1,
+                small_svd: method,
+                ..Default::default()
+            };
+            // Same seed → same Ω → same basis: the two backends must agree
+            // on singular values tightly.
+            let mut rng = Xoshiro256pp::seed_from_u64(7);
+            let f = ShiftedRsvd::new(cfg).factorize(&x, &mu, &mut rng).unwrap();
+            let mut rng2 = Xoshiro256pp::seed_from_u64(7);
+            let f2 = ShiftedRsvd::new(SvdConfig {
+                small_svd: SmallSvdMethod::Jacobi,
+                ..cfg
+            })
+            .factorize(&x, &mu, &mut rng2)
+            .unwrap();
+            for (a, b) in f.s.iter().zip(&f2.s) {
+                assert!((a - b).abs() < 1e-6 * f2.s[0], "{method:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn sparse_path_matches_dense_path_exactly() {
+        // Same Ω (same seed) ⇒ bitwise-comparable results modulo float
+        // associativity; they must agree to ~1e-10.
+        let mut rng = Xoshiro256pp::seed_from_u64(8);
+        let sp = Csr::random(40, 200, 0.05, &mut rng, |r| r.next_uniform() + 0.5);
+        let de = sp.to_dense();
+        let mu = MatVecOps::row_means(&sp);
+        let cfg = SvdConfig { k: 5, oversample: 5, power_iters: 1, ..Default::default() };
+        let f_sp = ShiftedRsvd::new(cfg)
+            .factorize(&sp, &mu, &mut Xoshiro256pp::seed_from_u64(9))
+            .unwrap();
+        let f_de = ShiftedRsvd::new(cfg)
+            .factorize(&de, &mu, &mut Xoshiro256pp::seed_from_u64(9))
+            .unwrap();
+        for (a, b) in f_sp.s.iter().zip(&f_de.s) {
+            assert!((a - b).abs() < 1e-8, "sv {a} vs {b}");
+        }
+        assert!(fro_diff(&f_sp.reconstruct(), &f_de.reconstruct()) < 1e-7);
+    }
+
+    #[test]
+    fn implicit_equals_explicit_centering() {
+        // Fig. 1d: S-RSVD(X, μ) ≈ RSVD(X̄ explicit) with the same Ω.
+        let x = uniform(30, 100, 10);
+        let mu = x.row_means();
+        let xbar = x.subtract_column(&mu);
+        let cfg = SvdConfig { k: 5, oversample: 5, power_iters: 1, ..Default::default() };
+        let f_implicit = ShiftedRsvd::new(cfg)
+            .factorize(&x, &mu, &mut Xoshiro256pp::seed_from_u64(11))
+            .unwrap();
+        let f_explicit = ShiftedRsvd::new(cfg)
+            .factorize(&xbar, &vec![0.0; 30], &mut Xoshiro256pp::seed_from_u64(11))
+            .unwrap();
+        for (a, b) in f_implicit.s.iter().zip(&f_explicit.s) {
+            assert!((a - b).abs() < 1e-9 * f_explicit.s[0].max(1.0));
+        }
+        assert!(
+            fro_diff(&f_implicit.reconstruct(), &f_explicit.reconstruct()) < 1e-8
+        );
+    }
+
+    #[test]
+    fn invalid_configs_error() {
+        let x = uniform(10, 20, 12);
+        let mut rng = Xoshiro256pp::seed_from_u64(0);
+        // mu wrong length.
+        assert!(ShiftedRsvd::new(SvdConfig::paper(2))
+            .factorize(&x, &[0.0; 3], &mut rng)
+            .is_err());
+        // k = 0.
+        let bad = SvdConfig { k: 0, ..Default::default() };
+        assert!(ShiftedRsvd::new(bad)
+            .factorize(&x, &vec![0.0; 10], &mut rng)
+            .is_err());
+    }
+
+    #[test]
+    fn rank_capped_by_matrix_size() {
+        // K = k + oversample > min(m, n) must clamp, not panic.
+        let x = uniform(8, 12, 13);
+        let cfg = SvdConfig { k: 6, oversample: 20, ..Default::default() };
+        let mut rng = Xoshiro256pp::seed_from_u64(1);
+        let f = ShiftedRsvd::new(cfg)
+            .factorize_mean_centered(&x, &mut rng)
+            .unwrap();
+        assert_eq!(f.rank(), 6);
+    }
+}

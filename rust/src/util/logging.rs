@@ -1,0 +1,62 @@
+//! Minimal `log` backend writing to stderr with a level filter.
+//!
+//! The offline crate cache has `log` but no `env_logger`; this is the
+//! ~60-line subset we need: `SRSVD_LOG=debug cargo run ...`.
+
+use std::sync::atomic::{AtomicBool, Ordering};
+
+use log::{Level, LevelFilter, Metadata, Record};
+
+struct StderrLogger;
+
+static LOGGER: StderrLogger = StderrLogger;
+static INSTALLED: AtomicBool = AtomicBool::new(false);
+
+impl log::Log for StderrLogger {
+    fn enabled(&self, metadata: &Metadata) -> bool {
+        metadata.level() <= log::max_level()
+    }
+
+    fn log(&self, record: &Record) {
+        if !self.enabled(record.metadata()) {
+            return;
+        }
+        let lvl = match record.level() {
+            Level::Error => "ERROR",
+            Level::Warn => "WARN ",
+            Level::Info => "INFO ",
+            Level::Debug => "DEBUG",
+            Level::Trace => "TRACE",
+        };
+        eprintln!("[{lvl}] {}: {}", record.target(), record.args());
+    }
+
+    fn flush(&self) {}
+}
+
+/// Install the stderr logger once; level from `SRSVD_LOG` (default `info`).
+pub fn init() {
+    if INSTALLED.swap(true, Ordering::SeqCst) {
+        return;
+    }
+    let level = match std::env::var("SRSVD_LOG").as_deref() {
+        Ok("trace") => LevelFilter::Trace,
+        Ok("debug") => LevelFilter::Debug,
+        Ok("warn") => LevelFilter::Warn,
+        Ok("error") => LevelFilter::Error,
+        Ok("off") => LevelFilter::Off,
+        _ => LevelFilter::Info,
+    };
+    let _ = log::set_logger(&LOGGER);
+    log::set_max_level(level);
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn init_is_idempotent() {
+        super::init();
+        super::init();
+        log::info!("logging smoke");
+    }
+}

@@ -1,0 +1,50 @@
+//! Small shared utilities: errors, timing, logging, JSON.
+
+pub mod json;
+pub mod logging;
+pub mod timer;
+
+use thiserror::Error;
+
+/// Library-wide error type.
+#[derive(Debug, Error)]
+pub enum Error {
+    #[error("shape mismatch: {0}")]
+    Shape(String),
+    #[error("invalid argument: {0}")]
+    Invalid(String),
+    #[error("numerical failure: {0}")]
+    Numerical(String),
+    #[error("artifact error: {0}")]
+    Artifact(String),
+    #[error("runtime error: {0}")]
+    Runtime(String),
+    #[error("service error: {0}")]
+    Service(String),
+    #[error("io error: {0}")]
+    Io(#[from] std::io::Error),
+    #[error("json error: {0}")]
+    Json(String),
+}
+
+pub type Result<T> = std::result::Result<T, Error>;
+
+/// `assert!`-style helper returning [`Error::Shape`].
+#[macro_export]
+macro_rules! ensure_shape {
+    ($cond:expr, $($fmt:tt)*) => {
+        if !$cond {
+            return Err($crate::util::Error::Shape(format!($($fmt)*)));
+        }
+    };
+}
+
+/// `assert!`-style helper returning [`Error::Invalid`].
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr, $($fmt:tt)*) => {
+        if !$cond {
+            return Err($crate::util::Error::Invalid(format!($($fmt)*)));
+        }
+    };
+}

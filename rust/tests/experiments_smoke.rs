@@ -1,0 +1,91 @@
+//! Smoke tests for every experiment runner: each figure/table runner
+//! must execute at reduced scale and reproduce the paper's *qualitative*
+//! claim (who wins, direction of trends). The full-scale numbers live in
+//! the benches and EXPERIMENTS.md.
+
+use srsvd::experiments::{efficiency, fig1, table1};
+
+#[test]
+fn fig1a_gap_shrinks_with_k() {
+    let rows = fig1::fig1a(&[1, 10, 50], 42);
+    // S-RSVD wins at every k.
+    for &(k, s, r) in &rows {
+        assert!(s <= r * 1.001, "k={k}: {s} vs {r}");
+    }
+    // And the relative gap shrinks as k grows.
+    let gap = |i: usize| rows[i].2 / rows[i].1;
+    assert!(gap(0) > gap(2), "gap(k=1)={} gap(k=50)={}", gap(0), gap(2));
+}
+
+#[test]
+fn fig1b_srsvd_wins_at_every_sample_size() {
+    for (n, s, r) in fig1::fig1b(&[200, 800], &[1, 3, 8, 20], 42) {
+        assert!(s < r, "n={n}: {s} vs {r}");
+    }
+}
+
+#[test]
+fn fig1c_srsvd_wins_for_every_distribution() {
+    for (dist, s, r) in fig1::fig1c(&[1, 3, 8, 20], 42) {
+        assert!(s < r, "{dist}: {s} vs {r}");
+    }
+}
+
+#[test]
+fn fig1d_implicit_explicit_identical() {
+    for (k, i, e) in fig1::fig1d(&[1, 4, 16], 42) {
+        assert!((i - e).abs() < 1e-9 * e.max(1.0), "k={k}: {i} vs {e}");
+    }
+}
+
+#[test]
+fn fig1e_power_iteration_narrows_gap() {
+    let ks = [1, 3, 8, 20];
+    let rows = fig1::fig1e(&[0, 2], &ks, 42);
+    let gap_q0 = rows[0].2 - rows[0].1; // rsvd - srsvd at q=0
+    let gap_q2 = rows[1].2 - rows[1].1;
+    assert!(gap_q0 > 0.0, "srsvd must win at q=0");
+    assert!(gap_q2 < gap_q0, "power iteration should narrow the gap");
+    assert!(gap_q2 > -1e-9, "srsvd should not lose at q=2: {gap_q2}");
+}
+
+#[test]
+fn fig1f_never_positive() {
+    for (dist, series) in fig1::fig1f(&[0, 1], &[1, 3, 8], 42) {
+        for (q, d) in series {
+            assert!(d < 1e-9, "{dist} q={q}: diff {d} > 0");
+        }
+    }
+}
+
+#[test]
+fn table1_images_reproduce_winners() {
+    let digits = table1::digits_stats(300, 5, 42);
+    assert!(digits.mse_srsvd < digits.mse_rsvd);
+    assert!(digits.p2 < 0.05);
+    let faces = table1::faces_stats(
+        srsvd::data::FacesSpec { side: 16, count: 100, rank: 10, noise: 5.0 },
+        5,
+        42,
+    );
+    assert!(faces.mse_srsvd < faces.mse_rsvd);
+    assert!(faces.wr_srsvd > 0.6, "faces wr {}", faces.wr_srsvd);
+}
+
+#[test]
+fn table1_words_reproduce_winner() {
+    let s = table1::words_stats(600, 50_000, 24, 4, 42);
+    assert!(s.mse_srsvd < s.mse_rsvd, "{s:?}");
+    assert!(s.wr_srsvd >= 0.5, "{s:?}");
+}
+
+#[test]
+fn efficiency_sparse_beats_densified() {
+    // Strict monotonic growth in n is asserted only at bench scale
+    // (single-shot timings at this size are too noisy); here we check
+    // the headline inequality holds with margin at both points.
+    let rows = efficiency::sweep(150, &[(1000, 0.01), (6000, 0.004)], 6, 42);
+    for r in &rows {
+        assert!(r.speedup() > 1.5, "sparse path should win clearly: {r:?}");
+    }
+}

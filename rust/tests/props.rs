@@ -1,0 +1,302 @@
+//! Property-based tests over the whole stack, via the in-tree `prop`
+//! mini-framework (see DESIGN.md — proptest is unavailable offline).
+//!
+//! Linalg invariants, algorithm identities, and coordinator state
+//! machine properties (routing, accounting, backpressure).
+
+use srsvd::coordinator::{
+    router, Coordinator, EnginePreference, JobSpec, MatrixInput, ShiftSpec,
+};
+use srsvd::linalg::{
+    fro_diff, gemm, householder_qr, jacobi_svd, matmul, qr_rank1_update, Csr, Dense, JacobiOpts,
+};
+use srsvd::prop::forall;
+use srsvd::svd::{MatVecOps, ShiftedRsvd, SvdConfig};
+
+fn gaussian(g: &mut srsvd::prop::Gen, m: usize, n: usize) -> Dense {
+    Dense::from_fn(m, n, |_, _| g.gaussian())
+}
+
+#[test]
+fn prop_matmul_rank1_equals_composition() {
+    forall("matmul_rank1 == matmul - outer", 40, |g| {
+        let m = g.usize_in(1, 40);
+        let n = g.usize_in(1, 40);
+        let p = g.usize_in(1, 12);
+        let a = gaussian(g, m, n);
+        let b = gaussian(g, n, p);
+        let u: Vec<f64> = (0..m).map(|_| g.gaussian()).collect();
+        let v: Vec<f64> = (0..p).map(|_| g.gaussian()).collect();
+        let fused = gemm::matmul_rank1(&a, &b, &u, &v);
+        let mut want = matmul(&a, &b);
+        for i in 0..m {
+            for j in 0..p {
+                want[(i, j)] -= u[i] * v[j];
+            }
+        }
+        let err = fro_diff(&fused, &want);
+        if err > 1e-9 * (m * p) as f64 + 1e-12 {
+            return Err(format!("{m}x{n}x{p}: err {err}"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_qr_reconstructs_and_orthonormal() {
+    forall("householder QR invariants", 30, |g| {
+        let m = g.usize_in(2, 80);
+        let k = g.usize_in(1, m.min(16));
+        let a = gaussian(g, m, k);
+        let (q, r) = householder_qr(&a);
+        let resid = srsvd::linalg::qr::orthonormality_residual(&q);
+        if resid > 1e-10 {
+            return Err(format!("orthonormality {resid}"));
+        }
+        let err = fro_diff(&matmul(&q, &r), &a);
+        if err > 1e-9 * m as f64 {
+            return Err(format!("reconstruction {err}"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_qr_update_matches_refactorization() {
+    forall("rank-1 QR update == refactorize", 25, |g| {
+        let m = g.usize_in(3, 60);
+        let k = g.usize_in(1, m.min(10));
+        let a = gaussian(g, m, k);
+        let (q, r) = householder_qr(&a);
+        let u: Vec<f64> = (0..m).map(|_| g.gaussian()).collect();
+        let v: Vec<f64> = (0..k).map(|_| g.gaussian()).collect();
+        let upd = qr_rank1_update(&q, &r, &u, &v);
+        let mut want = a.clone();
+        for i in 0..m {
+            for j in 0..k {
+                want[(i, j)] += u[i] * v[j];
+            }
+        }
+        let err = fro_diff(&matmul(&upd.q, &upd.r), &want);
+        if err > 1e-8 * (m as f64) {
+            return Err(format!("{m}x{k}: err {err}"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_jacobi_svd_invariants() {
+    forall("jacobi SVD invariants", 25, |g| {
+        let n = g.usize_in(2, 60);
+        let k = g.usize_in(1, n.min(10));
+        let w = gaussian(g, n, k);
+        let (u, s, v) = jacobi_svd(&w, JacobiOpts::default());
+        if !s.windows(2).all(|p| p[0] >= p[1] - 1e-12) || s.iter().any(|&x| x < 0.0) {
+            return Err(format!("bad spectrum {s:?}"));
+        }
+        let rec = matmul(&u.scale_cols(&s), &v.transpose());
+        let err = fro_diff(&rec, &w);
+        if err > 1e-8 * (n as f64).max(1.0) {
+            return Err(format!("{n}x{k}: reconstruction {err}"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_shifted_factorization_identity() {
+    // S-RSVD(X, mu) with the same seed equals S-RSVD(X - mu 1^T, 0):
+    // the paper's Eq. 11 as an executable property.
+    forall("implicit == explicit shift", 15, |g| {
+        let m = g.usize_in(4, 30);
+        let n = g.usize_in(m, 80);
+        let x = Dense::from_fn(m, n, |_, _| g.uniform());
+        let mu = x.row_means();
+        let k = g.usize_in(1, (m / 2).max(1));
+        let cfg = SvdConfig { k, oversample: k.max(2), power_iters: 1, ..Default::default() };
+        let seed = g.case_seed;
+        let f1 = ShiftedRsvd::new(cfg)
+            .factorize(&x, &mu, &mut srsvd::rng::Xoshiro256pp::seed_from_u64(seed))
+            .map_err(|e| e.to_string())?;
+        let xbar = x.subtract_column(&mu);
+        let f2 = ShiftedRsvd::new(cfg)
+            .factorize(&xbar, &vec![0.0; m], &mut srsvd::rng::Xoshiro256pp::seed_from_u64(seed))
+            .map_err(|e| e.to_string())?;
+        for (a, b) in f1.s.iter().zip(&f2.s) {
+            if (a - b).abs() > 1e-7 * f2.s[0].max(1e-9) {
+                return Err(format!("singular values diverge: {a} vs {b}"));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_sparse_dense_paths_agree() {
+    forall("sparse path == dense path", 12, |g| {
+        let m = g.usize_in(5, 30);
+        let n = g.usize_in(m, 80);
+        let mut rng = g.derived_rng();
+        let sp = Csr::random(m, n, 0.2, &mut rng, |r| r.next_uniform() + 0.1);
+        let de = sp.to_dense();
+        let mu = MatVecOps::row_means(&sp);
+        let k = g.usize_in(1, (m / 2).max(1));
+        let cfg = SvdConfig { k, oversample: k.max(2), ..Default::default() };
+        let seed = g.case_seed ^ 0x5;
+        let fs = ShiftedRsvd::new(cfg)
+            .factorize(&sp, &mu, &mut srsvd::rng::Xoshiro256pp::seed_from_u64(seed))
+            .map_err(|e| e.to_string())?;
+        let fd = ShiftedRsvd::new(cfg)
+            .factorize(&de, &mu, &mut srsvd::rng::Xoshiro256pp::seed_from_u64(seed))
+            .map_err(|e| e.to_string())?;
+        for (a, b) in fs.s.iter().zip(&fd.s) {
+            if (a - b).abs() > 1e-7 * fd.s[0].max(1e-9) {
+                return Err(format!("{a} vs {b}"));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_router_total_and_consistent() {
+    let manifest = {
+        let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        srsvd::runtime::Manifest::load(&dir).ok()
+    };
+    forall("router totality", 50, |g| {
+        let m = g.usize_in(2, 200);
+        let n = g.usize_in(m, 2000);
+        let k = g.usize_in(1, (m / 2).max(1));
+        let pref = *g.choose(&[EnginePreference::Auto, EnginePreference::Native]);
+        let spec = JobSpec {
+            input: MatrixInput::Dense(Dense::zeros(m, n)),
+            config: SvdConfig::paper(k),
+            shift: ShiftSpec::MeanCenter,
+            engine: pref,
+            seed: 0,
+            score: false,
+        };
+        let route = router::route(&spec, manifest.as_ref()).map_err(|e| e.to_string())?;
+        if pref == EnginePreference::Native && route != router::Route::Native {
+            return Err("native preference not honored".into());
+        }
+        if let router::Route::Artifact { name } = &route {
+            let man = manifest.as_ref().ok_or("artifact route without manifest")?;
+            let art = man.find(name).ok_or("routed to unknown artifact")?;
+            if art.m != m || art.n != n || art.k != k {
+                return Err(format!("mismatched artifact {name}"));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_coordinator_accounting_balances() {
+    // For any batch of jobs (some invalid), every handle resolves and
+    // failures equal the invalid count; metrics balance at the end.
+    let coord = Coordinator::start_native_only(2).unwrap();
+    forall("coordinator accounting", 6, |g| {
+        let jobs = g.usize_in(1, 8);
+        let mut bad = 0usize;
+        let mut handles = Vec::new();
+        for j in 0..jobs {
+            let m = g.usize_in(3, 20);
+            let n = g.usize_in(m, 50);
+            let invalid = g.bool();
+            let shift = if invalid {
+                bad += 1;
+                ShiftSpec::Vector(vec![0.0; m + 1]) // wrong length -> error
+            } else {
+                ShiftSpec::MeanCenter
+            };
+            let spec = JobSpec {
+                input: MatrixInput::Dense(Dense::from_fn(m, n, |_, _| g.uniform())),
+                config: SvdConfig { k: 2, oversample: 2, ..Default::default() },
+                shift,
+                engine: EnginePreference::Native,
+                seed: g.case_seed ^ j as u64,
+                score: false,
+            };
+            handles.push(coord.submit(spec).map_err(|e| e.to_string())?);
+        }
+        let mut failed = 0usize;
+        for h in handles {
+            let r = h.wait().map_err(|e| e.to_string())?;
+            if r.outcome.is_err() {
+                failed += 1;
+            }
+        }
+        if failed != bad {
+            return Err(format!("expected {bad} failures, saw {failed}"));
+        }
+        Ok(())
+    });
+    let m = coord.metrics();
+    assert_eq!(m.submitted, m.completed);
+    assert_eq!(m.queue_depth, 0);
+    coord.shutdown();
+}
+
+#[test]
+fn prop_pca_errors_nonnegative_and_roughly_monotone() {
+    forall("PCA error monotone in k", 10, |g| {
+        let m = g.usize_in(6, 30);
+        let n = g.usize_in(m, 80);
+        let x = Dense::from_fn(m, n, |_, _| g.uniform());
+        let seed = g.case_seed;
+        let mse_at = |k: usize| -> Result<f64, String> {
+            let cfg = SvdConfig { k, oversample: k, power_iters: 2, ..Default::default() };
+            let pca = srsvd::svd::Pca::fit(
+                &x,
+                cfg,
+                &mut srsvd::rng::Xoshiro256pp::seed_from_u64(seed),
+            )
+            .map_err(|e| e.to_string())?;
+            Ok(pca.mse(&x))
+        };
+        let k1 = g.usize_in(1, (m / 3).max(1));
+        let k2 = (k1 + 2).min(m / 2).max(k1);
+        let e1 = mse_at(k1)?;
+        let e2 = mse_at(k2)?;
+        if e1 < 0.0 || e2 < 0.0 {
+            return Err("negative error".into());
+        }
+        // Randomized noise allowance: larger k must not be much worse.
+        if k2 > k1 && e2 > e1 * 1.25 + 1e-9 {
+            return Err(format!("k={k1}: {e1} vs k={k2}: {e2}"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_json_roundtrip() {
+    use srsvd::util::json::Json;
+    forall("json write/parse roundtrip", 40, |g| {
+        // Generate a random JSON tree.
+        fn gen_value(g: &mut srsvd::prop::Gen, depth: usize) -> Json {
+            match if depth == 0 { g.usize_in(0, 3) } else { g.usize_in(0, 5) } {
+                0 => Json::Null,
+                1 => Json::Bool(g.bool()),
+                2 => Json::Num((g.gaussian() * 100.0 * 8.0).round() / 8.0),
+                3 => Json::Str(format!("s{}-\"q\"\n", g.usize_in(0, 999))),
+                4 => Json::arr((0..g.usize_in(0, 4)).map(|_| gen_value(g, depth - 1))),
+                _ => Json::Obj(
+                    (0..g.usize_in(0, 4))
+                        .map(|i| (format!("k{i}"), gen_value(g, depth - 1)))
+                        .collect(),
+                ),
+            }
+        }
+        let v = gen_value(g, 3);
+        let compact = Json::parse(&v.to_string()).map_err(|e| e.to_string())?;
+        let pretty = Json::parse(&v.to_string_pretty()).map_err(|e| e.to_string())?;
+        if compact != v || pretty != v {
+            return Err(format!("roundtrip mismatch for {v:?}"));
+        }
+        Ok(())
+    });
+}
