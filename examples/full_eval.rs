@@ -24,7 +24,11 @@ fn main() {
     print!("{}", fig1::render_k_table("(100x1000 uniform)", &rows));
 
     println!("\n== Fig 1b: MSE-SUM vs sample size ==");
-    let ns: &[usize] = if quick { &[200, 1000, 5000] } else { &[100, 200, 500, 1000, 2000, 5000, 10000] };
+    let ns: &[usize] = if quick {
+        &[200, 1000, 5000]
+    } else {
+        &[100, 200, 500, 1000, 2000, 5000, 10000]
+    };
     let mut t = srsvd::bench::Table::new(&["n", "S-RSVD", "RSVD"]);
     for (n, s, r) in fig1::fig1b(ns, &ks, seed) {
         t.row(&[n.to_string(), format!("{s:.3}"), format!("{r:.3}")]);

@@ -28,6 +28,15 @@ use srsvd::util::timer::fmt_duration;
 
 fn main() {
     srsvd::util::logging::init();
+    if !cfg!(feature = "pjrt") {
+        eprintln!(
+            "this driver needs the PJRT artifact engine: the default build \
+             ships a stub Executor. Enabling the `pjrt` feature additionally \
+             requires vendoring the external `xla` PJRT wrapper crate (not \
+             available in the offline environment — see runtime/executor.rs)."
+        );
+        std::process::exit(1);
+    }
     let artifact_dir = std::path::PathBuf::from("artifacts");
     if !artifact_dir.join("manifest.json").exists() {
         eprintln!("artifacts not built — run `make artifacts` first");
@@ -38,6 +47,7 @@ fn main() {
         native_workers: 2,
         queue_capacity: 64,
         artifact_dir: Some(artifact_dir),
+        pool_threads: None, // shared linalg pool: SRSVD_THREADS / all cores
     })
     .expect("coordinator");
 

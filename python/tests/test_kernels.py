@@ -8,6 +8,8 @@ fused rank-1 downdate is exact.
 import numpy as np
 import jax.numpy as jnp
 import pytest
+
+pytest.importorskip("hypothesis", reason="hypothesis not installed (optional extra)")
 from hypothesis import given, settings, strategies as st
 
 from compile.kernels import (

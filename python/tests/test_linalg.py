@@ -3,6 +3,8 @@
 import numpy as np
 import jax.numpy as jnp
 import pytest
+
+pytest.importorskip("hypothesis", reason="hypothesis not installed (optional extra)")
 from hypothesis import given, settings, strategies as st
 
 from compile.linalg import mgs_qr, jacobi_svd, svd_small

@@ -1,24 +1,148 @@
 //! Perf microbenches: the hot paths behind every experiment —
-//! blocked GEMM (with plan sweep), the fused rank-1 product, sparse
-//! SpMM, Householder QR, Jacobi SVD, and the artifact engine's
-//! end-to-end execute. Drives the EXPERIMENTS.md §Perf log.
+//! blocked GEMM (with plan sweep), the parallel threads × size axis
+//! (emits `BENCH_gemm.json` for the perf trajectory), the fused rank-1
+//! product, sparse SpMM, Householder QR, Jacobi SVD, and the artifact
+//! engine's end-to-end execute. Drives the EXPERIMENTS.md §Perf log.
 //!
 //! Run: `cargo bench --bench perf_micro`.
+//! Env: `SRSVD_BENCH_QUICK=1` (CI smoke), `SRSVD_BENCH_JSON=<path>`
+//! (default `BENCH_gemm.json`).
+
+use std::sync::Arc;
 
 use srsvd::bench::{Bencher, Table};
 use srsvd::linalg::{
     gemm, householder_qr, jacobi_svd, matmul, Csr, Dense, JacobiOpts, MatmulPlan,
 };
+use srsvd::parallel::ThreadPool;
 use srsvd::rng::{Rng, Xoshiro256pp};
+use srsvd::util::json::Json;
 use srsvd::util::timer::fmt_duration;
 
 fn gflops(flops: f64, secs: f64) -> String {
     format!("{:.2}", flops / secs / 1e9)
 }
 
+/// The parallel-execution axis: threads × matrix size for `matmul` and
+/// the fused `matmul_rank1`, pinned to explicit pools. Verifies bitwise
+/// thread-count invariance on the fly and emits the JSON rows that seed
+/// the bench trajectory (uploaded as a CI artifact).
+fn parallel_axis(b: &Bencher, quick: bool) -> Json {
+    let sizes: &[usize] = if quick { &[512, 1024] } else { &[256, 512, 1024] };
+    let threads: &[usize] = &[1, 2, 4, 8];
+    let mut rows: Vec<Json> = Vec::new();
+
+    println!("== parallel GEMM: threads x size (f64, square) ==");
+    let mut t = Table::new(&["op", "n", "threads", "time", "GFLOP/s", "speedup"]);
+    for &n in sizes {
+        let mut rng = Xoshiro256pp::seed_from_u64(n as u64);
+        let a = Dense::gaussian(n, n, &mut rng);
+        let c = Dense::gaussian(n, n, &mut rng);
+        let u: Vec<f64> = (0..n).map(|_| rng.next_gaussian()).collect();
+        let v: Vec<f64> = (0..n).map(|_| rng.next_gaussian()).collect();
+        let flops = 2.0 * (n as f64).powi(3);
+        for op in ["matmul", "matmul_rank1"] {
+            let mut base_mean = 0.0;
+            let reference = {
+                let p1 = ThreadPool::new(1);
+                match op {
+                    "matmul" => gemm::matmul_with_plan_pool(&a, &c, MatmulPlan::default(), &p1),
+                    _ => gemm::matmul_rank1_with_plan_pool(
+                        &a,
+                        &c,
+                        &u,
+                        &v,
+                        MatmulPlan::default(),
+                        &p1,
+                    ),
+                }
+            };
+            for &nt in threads {
+                let pool = Arc::new(ThreadPool::new(nt));
+                let stats = b.run(&format!("{op} n={n} t={nt}"), || match op {
+                    "matmul" => gemm::matmul_with_plan_pool(&a, &c, MatmulPlan::default(), &pool),
+                    _ => gemm::matmul_rank1_with_plan_pool(
+                        &a,
+                        &c,
+                        &u,
+                        &v,
+                        MatmulPlan::default(),
+                        &pool,
+                    ),
+                });
+                if nt == 1 {
+                    base_mean = stats.mean_s;
+                }
+                let speedup = base_mean / stats.mean_s.max(1e-12);
+                // Thread-count invariance is part of the contract.
+                let check = match op {
+                    "matmul" => gemm::matmul_with_plan_pool(&a, &c, MatmulPlan::default(), &pool),
+                    _ => gemm::matmul_rank1_with_plan_pool(
+                        &a,
+                        &c,
+                        &u,
+                        &v,
+                        MatmulPlan::default(),
+                        &pool,
+                    ),
+                };
+                let bit_identical = reference
+                    .data()
+                    .iter()
+                    .zip(check.data())
+                    .all(|(x, y)| x.to_bits() == y.to_bits());
+                assert!(bit_identical, "{op} n={n} t={nt}: thread-count variance!");
+                t.row(&[
+                    op.to_string(),
+                    n.to_string(),
+                    nt.to_string(),
+                    fmt_duration(stats.mean_s),
+                    gflops(flops, stats.mean_s),
+                    format!("{speedup:.2}x"),
+                ]);
+                rows.push(Json::obj(vec![
+                    ("op", Json::str(op)),
+                    ("n", Json::num(n as f64)),
+                    ("threads", Json::num(nt as f64)),
+                    ("mean_s", Json::num(stats.mean_s)),
+                    ("p95_s", Json::num(stats.p95_s)),
+                    ("gflops", Json::num(flops / stats.mean_s / 1e9)),
+                    ("speedup_vs_1", Json::num(speedup)),
+                    ("bit_identical", Json::Bool(bit_identical)),
+                ]));
+            }
+        }
+    }
+    print!("{}", t.render());
+
+    Json::obj(vec![
+        ("bench", Json::str("gemm_parallel")),
+        ("quick", Json::Bool(quick)),
+        (
+            "host_parallelism",
+            Json::num(
+                std::thread::available_parallelism()
+                    .map(|p| p.get())
+                    .unwrap_or(1) as f64,
+            ),
+        ),
+        ("cases", Json::Arr(rows)),
+    ])
+}
+
 fn main() {
     let b = Bencher::from_env();
+    let quick = std::env::var("SRSVD_BENCH_QUICK").as_deref() == Ok("1");
     let mut rng = Xoshiro256pp::seed_from_u64(0);
+
+    // Threads × size axis first: it feeds the committed JSON trajectory.
+    let report = parallel_axis(&b, quick);
+    let json_path = std::env::var("SRSVD_BENCH_JSON").unwrap_or_else(|_| "BENCH_gemm.json".into());
+    match std::fs::write(&json_path, report.to_string_pretty()) {
+        Ok(()) => println!("\nwrote {json_path}"),
+        Err(e) => eprintln!("\ncould not write {json_path}: {e}"),
+    }
+    println!();
 
     println!("== GEMM plan sweep (512x512x512 f64) ==");
     let a = Dense::gaussian(512, 512, &mut rng);
@@ -95,9 +219,10 @@ fn main() {
     }
     print!("{}", t.render());
 
-    // Artifact engine end-to-end (compile once, execute many).
+    // Artifact engine end-to-end (compile once, execute many). Needs
+    // the `pjrt` feature: the default build's stub Executor can't run.
     let dir = std::path::Path::new("artifacts");
-    if dir.join("manifest.json").exists() {
+    if cfg!(feature = "pjrt") && dir.join("manifest.json").exists() {
         println!("\n== artifact engine: srsvd_scored 100x1000 k=10 q=0 ==");
         let mut ex = srsvd::runtime::Executor::new(dir).unwrap();
         let spec = ex.manifest().find_srsvd(100, 1000, 10, 0).unwrap().clone();

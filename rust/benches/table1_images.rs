@@ -29,5 +29,7 @@ fn main() {
     let s = b.run("digits pair", || table1::digits_stats(digit_count, 1, 7));
     println!("  digits: {}", srsvd::util::timer::fmt_duration(s.mean_s));
 
-    println!("\npaper: digits 415.7 vs 430.6 (WR 66/34), faces 15.3e7 vs 16.1e7 (WR 82/18), all p=0.00");
+    println!(
+        "\npaper: digits 415.7 vs 430.6 (WR 66/34), faces 15.3e7 vs 16.1e7 (WR 82/18), all p=0.00"
+    );
 }

@@ -143,19 +143,25 @@ impl Args {
     pub fn get_usize(&self, name: &str) -> Result<usize> {
         self.get(name)
             .parse()
-            .map_err(|_| Error::Invalid(format!("--{name}: expected integer, got {:?}", self.get(name))))
+            .map_err(|_| {
+                Error::Invalid(format!("--{name}: expected integer, got {:?}", self.get(name)))
+            })
     }
 
     pub fn get_u64(&self, name: &str) -> Result<u64> {
         self.get(name)
             .parse()
-            .map_err(|_| Error::Invalid(format!("--{name}: expected integer, got {:?}", self.get(name))))
+            .map_err(|_| {
+                Error::Invalid(format!("--{name}: expected integer, got {:?}", self.get(name)))
+            })
     }
 
     pub fn get_f64(&self, name: &str) -> Result<f64> {
         self.get(name)
             .parse()
-            .map_err(|_| Error::Invalid(format!("--{name}: expected number, got {:?}", self.get(name))))
+            .map_err(|_| {
+                Error::Invalid(format!("--{name}: expected number, got {:?}", self.get(name)))
+            })
     }
 
     pub fn has_flag(&self, name: &str) -> bool {

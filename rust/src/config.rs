@@ -12,6 +12,10 @@
 //! queue_capacity = 256
 //! artifact_dir   = artifacts
 //!
+//! [parallel]
+//! threads = 8              # shared linalg pool; 0/unset = auto
+//!                          # (SRSVD_THREADS env overrides auto-sizing)
+//!
 //! [svd]
 //! k           = 10
 //! oversample  = 10
@@ -98,6 +102,10 @@ impl RawConfig {
             Some("off") | Some("none") => cfg.artifact_dir = None,
             Some(dir) => cfg.artifact_dir = Some(PathBuf::from(dir)),
             None => {}
+        }
+        // [parallel] threads: 0 (or unset) keeps auto-sizing.
+        if let Some(t) = self.get_usize("parallel", "threads")? {
+            cfg.pool_threads = if t == 0 { None } else { Some(t) };
         }
         Ok(cfg)
     }
@@ -188,6 +196,20 @@ small_svd = gram
     fn artifact_dir_off() {
         let raw = RawConfig::parse("[service]\nartifact_dir = off\n").unwrap();
         assert_eq!(raw.coordinator().unwrap().artifact_dir, None);
+    }
+
+    #[test]
+    fn parallel_threads_knob() {
+        let raw = RawConfig::parse("[parallel]\nthreads = 6\n").unwrap();
+        assert_eq!(raw.coordinator().unwrap().pool_threads, Some(6));
+        // 0 and unset both mean auto.
+        let raw = RawConfig::parse("[parallel]\nthreads = 0\n").unwrap();
+        assert_eq!(raw.coordinator().unwrap().pool_threads, None);
+        let raw = RawConfig::parse("").unwrap();
+        assert_eq!(raw.coordinator().unwrap().pool_threads, None);
+        // Non-integer errors.
+        let raw = RawConfig::parse("[parallel]\nthreads = many\n").unwrap();
+        assert!(raw.coordinator().is_err());
     }
 
     #[test]

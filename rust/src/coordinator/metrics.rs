@@ -32,6 +32,9 @@ impl Metrics {
         self.max_exec_ns.fetch_max(ns, Ordering::Relaxed);
     }
 
+    /// Snapshot the job counters. The pool fields are zero here; the
+    /// coordinator overlays its shared pool's stats (it owns the pool,
+    /// the raw `Metrics` struct deliberately does not).
     pub fn snapshot(&self) -> MetricsSnapshot {
         let completed = self.completed.load(Ordering::Relaxed);
         let exec_ns = self.exec_ns.load(Ordering::Relaxed);
@@ -54,11 +57,16 @@ impl Metrics {
                 0.0
             },
             max_exec_s: self.max_exec_ns.load(Ordering::Relaxed) as f64 / 1e9,
+            pool_threads: 0,
+            pool_parallel_ops: 0,
+            pool_serial_ops: 0,
+            pool_chunks: 0,
         }
     }
 }
 
-/// Point-in-time view of the service counters.
+/// Point-in-time view of the service counters, including the shared
+/// linalg pool (filled in by [`crate::coordinator::Coordinator::metrics`]).
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct MetricsSnapshot {
     pub submitted: u64,
@@ -70,6 +78,14 @@ pub struct MetricsSnapshot {
     pub mean_exec_s: f64,
     pub mean_queue_s: f64,
     pub max_exec_s: f64,
+    /// Size of the shared linalg thread pool.
+    pub pool_threads: usize,
+    /// Linalg operations the pool dispatched across threads.
+    pub pool_parallel_ops: u64,
+    /// Linalg operations the pool ran inline (small inputs / size-1 pool).
+    pub pool_serial_ops: u64,
+    /// Total chunks executed by parallel operations.
+    pub pool_chunks: u64,
 }
 
 impl std::fmt::Display for MetricsSnapshot {
@@ -77,7 +93,8 @@ impl std::fmt::Display for MetricsSnapshot {
         write!(
             f,
             "submitted={} completed={} failed={} native={} artifact={} \
-             depth={} mean_exec={:.3}ms mean_queue={:.3}ms max_exec={:.3}ms",
+             depth={} mean_exec={:.3}ms mean_queue={:.3}ms max_exec={:.3}ms \
+             pool[threads={} par_ops={} serial_ops={} chunks={}]",
             self.submitted,
             self.completed,
             self.failed,
@@ -87,6 +104,10 @@ impl std::fmt::Display for MetricsSnapshot {
             self.mean_exec_s * 1e3,
             self.mean_queue_s * 1e3,
             self.max_exec_s * 1e3,
+            self.pool_threads,
+            self.pool_parallel_ops,
+            self.pool_serial_ops,
+            self.pool_chunks,
         )
     }
 }

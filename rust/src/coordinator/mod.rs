@@ -40,6 +40,7 @@ use std::sync::mpsc::{sync_channel, Receiver, RecvTimeoutError, SyncSender};
 use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
 
+use crate::parallel::{self, ThreadPool};
 use crate::runtime::Manifest;
 use crate::svd::SvdEngine;
 use crate::util::{Error, Result};
@@ -54,6 +55,10 @@ pub struct CoordinatorConfig {
     /// Artifact directory; `None` disables the artifact engine,
     /// `Some(dir)` requires a valid manifest there.
     pub artifact_dir: Option<PathBuf>,
+    /// Size of the shared linalg thread pool the native workers execute
+    /// on (`[parallel] threads` in srsvd.conf). `None` = the process
+    /// global pool (`SRSVD_THREADS` / all cores).
+    pub pool_threads: Option<usize>,
 }
 
 impl Default for CoordinatorConfig {
@@ -62,6 +67,7 @@ impl Default for CoordinatorConfig {
             native_workers: worker_default(),
             queue_capacity: 256,
             artifact_dir: default_artifact_dir(),
+            pool_threads: None,
         }
     }
 }
@@ -119,6 +125,8 @@ pub struct Coordinator {
     artifact_tx: Option<SyncSender<WorkItem>>,
     manifest: Option<Manifest>,
     metrics: Arc<Metrics>,
+    /// Shared linalg pool the native workers execute on.
+    pool: Arc<ThreadPool>,
     next_id: AtomicU64,
     native_handles: Vec<std::thread::JoinHandle<()>>,
     actor_handle: Option<std::thread::JoinHandle<()>>,
@@ -131,17 +139,26 @@ impl Coordinator {
         crate::ensure!(config.native_workers >= 1, "need at least one worker");
         let metrics = Arc::new(Metrics::default());
 
-        // Native pool: shared bounded queue behind a mutexed receiver.
+        // The shared linalg pool: every native worker installs it as its
+        // thread pool, so jobs run panel-parallel GEMM / row-parallel
+        // CSR kernels on one pool instead of each job being serial.
+        let pool = match config.pool_threads {
+            Some(t) => Arc::new(ThreadPool::new(t)),
+            None => parallel::global(),
+        };
+
+        // Native workers: shared bounded queue behind a mutexed receiver.
         let (native_tx, native_rx) = sync_channel::<WorkItem>(config.queue_capacity);
         let native_rx = Arc::new(Mutex::new(native_rx));
         let mut native_handles = Vec::new();
         for w in 0..config.native_workers {
             let rx = Arc::clone(&native_rx);
             let mx = Arc::clone(&metrics);
+            let pl = Arc::clone(&pool);
             native_handles.push(
                 std::thread::Builder::new()
                     .name(format!("srsvd-native-{w}"))
-                    .spawn(move || native_loop(rx, mx))
+                    .spawn(move || native_loop(rx, mx, pl))
                     .map_err(|e| Error::Service(format!("spawn worker: {e}")))?,
             );
         }
@@ -162,9 +179,10 @@ impl Coordinator {
             None => (None, None, None),
         };
 
-        log::info!(
-            "coordinator: {} native workers, artifact engine: {}",
+        crate::log_info!(
+            "coordinator: {} native workers on a {}-thread linalg pool, artifact engine: {}",
             config.native_workers,
+            pool.threads(),
             if artifact_tx.is_some() { "on" } else { "off" }
         );
         Ok(Coordinator {
@@ -172,6 +190,7 @@ impl Coordinator {
             artifact_tx,
             manifest,
             metrics,
+            pool,
             next_id: AtomicU64::new(1),
             native_handles,
             actor_handle,
@@ -184,11 +203,19 @@ impl Coordinator {
             native_workers: workers,
             queue_capacity: 256,
             artifact_dir: None,
+            pool_threads: None,
         })
     }
 
+    /// Service counters plus the shared pool's stats.
     pub fn metrics(&self) -> MetricsSnapshot {
-        self.metrics.snapshot()
+        let mut s = self.metrics.snapshot();
+        let ps = self.pool.stats();
+        s.pool_threads = ps.threads;
+        s.pool_parallel_ops = ps.parallel_ops;
+        s.pool_serial_ops = ps.serial_ops;
+        s.pool_chunks = ps.chunks;
+        s
     }
 
     pub fn manifest(&self) -> Option<&Manifest> {
@@ -269,7 +296,10 @@ impl Drop for Coordinator {
     }
 }
 
-fn native_loop(rx: Arc<Mutex<Receiver<WorkItem>>>, metrics: Arc<Metrics>) {
+fn native_loop(rx: Arc<Mutex<Receiver<WorkItem>>>, metrics: Arc<Metrics>, pool: Arc<ThreadPool>) {
+    // Every linalg hot path this worker executes dispatches onto the
+    // coordinator's shared pool instead of running serial.
+    parallel::set_thread_pool(Some(pool));
     loop {
         let item = {
             let guard = rx.lock().expect("queue mutex poisoned");
@@ -379,6 +409,7 @@ mod tests {
             native_workers: 1,
             queue_capacity: 1,
             artifact_dir: None,
+            pool_threads: None,
         })
         .unwrap();
         let mut handles = Vec::new();
@@ -415,5 +446,22 @@ mod tests {
             r.outcome.unwrap().mse.unwrap()
         };
         assert_eq!(r1, r4);
+    }
+
+    #[test]
+    fn pool_threads_knob_sizes_the_shared_pool() {
+        let coord = Coordinator::start(CoordinatorConfig {
+            native_workers: 2,
+            queue_capacity: 16,
+            artifact_dir: None,
+            pool_threads: Some(3),
+        })
+        .unwrap();
+        let r = coord.submit_blocking(dense_spec(11)).unwrap();
+        assert!(r.outcome.is_ok());
+        let m = coord.metrics();
+        assert_eq!(m.pool_threads, 3);
+        assert!(format!("{m}").contains("pool[threads=3"));
+        coord.shutdown();
     }
 }

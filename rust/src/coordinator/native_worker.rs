@@ -1,5 +1,10 @@
 //! Native-engine execution: what a worker thread actually does with a
 //! job routed to [`crate::svd::ShiftedRsvd`].
+//!
+//! Worker threads install the coordinator's shared [`crate::parallel`]
+//! pool before entering their loop (see `native_loop` in the parent
+//! module), so the GEMM / CSR kernels inside a job run panel-parallel
+//! on one process-wide pool rather than each job being serial.
 
 use crate::linalg::Dense;
 use crate::rng::Xoshiro256pp;

@@ -26,7 +26,7 @@ pub(super) fn actor_loop(dir: PathBuf, rx: Receiver<super::WorkItem>, metrics: A
         Ok(e) => e,
         Err(e) => {
             // Fail every queued job with a clear error, then exit.
-            log::error!("runtime actor failed to start: {e}");
+            crate::log_error!("runtime actor failed to start: {e}");
             for item in rx.iter() {
                 metrics.queue_depth.fetch_sub(1, Ordering::Relaxed);
                 let _ = item.reply.send(JobResult {

@@ -18,6 +18,7 @@ use crate::rng::Rng;
 
 /// 8×8 digit stencils, rows top-to-bottom, `#` = full ink. Deliberately
 /// blocky — the UCI set is 8×8 downsampled handwriting.
+#[rustfmt::skip]
 const STENCILS: [[&str; 8]; 10] = [
     [" ####   ", "##  ##  ", "##  ##  ", "##  ##  ", "##  ##  ", "##  ##  ", " ####   ", "        "],
     ["  ##    ", " ###    ", "  ##    ", "  ##    ", "  ##    ", "  ##    ", " ####   ", "        "],

@@ -12,6 +12,13 @@
 //! * [`linalg`] — from-scratch dense & sparse linear algebra: blocked
 //!   GEMM, Householder/MGS QR, rank-1 QR-update, one-sided Jacobi SVD,
 //!   CSR sparse kernels. No BLAS/LAPACK dependency.
+//! * [`parallel`] — the execution subsystem: a chunked, self-scheduling
+//!   thread pool (std threads + channels only) shared process-wide.
+//!   Sized by the `SRSVD_THREADS` env var or the `[parallel] threads`
+//!   config knob (default: all cores). The GEMM / rank-1 / CSR hot
+//!   paths partition their *output rows* over it, which keeps results
+//!   bit-identical across every pool size — seeded experiments stay
+//!   reproducible no matter the machine.
 //! * [`svd`] — the paper's algorithms: deterministic SVD oracle,
 //!   the RSVD baseline, and [`svd::ShiftedRsvd`] (Algorithm 1) with
 //!   dense and sparse paths.
@@ -22,7 +29,11 @@
 //! * [`stats`] — paired t-tests (Student-t CDF via incomplete beta),
 //!   win-rates, descriptive statistics.
 //! * [`runtime`] — PJRT executor: loads the AOT HLO artifacts produced
-//!   by `python/compile/aot.py` and runs them on the CPU client.
+//!   by `python/compile/aot.py` and runs them on the CPU client. The
+//!   PJRT bindings need the external `xla` wrapper crate, so the real
+//!   executor sits behind the off-by-default `pjrt` cargo feature; the
+//!   default (zero-dependency) build ships a stub that reports the
+//!   runtime as unavailable and the service runs native-only.
 //! * [`coordinator`] — the factorization service: job queue, worker
 //!   pool, config router (artifact vs native engine), metrics.
 //! * [`experiments`] — one runner per paper figure/table, shared by
@@ -49,6 +60,7 @@ pub mod coordinator;
 pub mod data;
 pub mod experiments;
 pub mod linalg;
+pub mod parallel;
 pub mod prop;
 pub mod rng;
 pub mod runtime;

@@ -8,11 +8,24 @@
 //! Design: classic cache-blocked i-k-j loop order over row-major data.
 //! The inner kernel is a j-vectorizable AXPY (`c_row += a_ik * b_row`),
 //! which LLVM auto-vectorizes well; panels are sized so a block of B
-//! and a row-strip of C stay L1/L2 resident. Single-threaded by design
-//! — the benchmark machine exposes one core (see DESIGN.md §Perf), and
-//! the coordinator parallelizes across *jobs* instead.
+//! and a row-strip of C stay L1/L2 resident.
+//!
+//! **Parallelism.** Large products are panel-parallel over rows of C on
+//! the shared [`crate::parallel`] pool (sized by `SRSVD_THREADS` / the
+//! `[parallel] threads` config knob): each task runs the identical
+//! serial k-blocked kernel on a disjoint row strip, so every output row
+//! is accumulated in exactly the serial order and results are
+//! **bit-identical for every thread count** — required, since every
+//! experiment is seeded. `Aᵀ·B` products partition the *output* rows
+//! (columns of A) the same way. Products below [`PAR_MIN_FLOPS`] run
+//! inline; the `*_pool` entry points let benches pin an explicit pool.
 
 use super::Dense;
+use crate::parallel::{self, par_row_chunks_min, ThreadPool};
+
+/// Below this many multiply-adds a product runs inline — dispatch
+/// overhead would swamp the win. (≈1M flops ≈ 100µs serial.)
+const PAR_MIN_FLOPS: usize = 1 << 20;
 
 /// Tuning knobs for the blocked GEMM (exposed for the perf bench).
 #[derive(Debug, Clone, Copy)]
@@ -31,17 +44,22 @@ impl Default for MatmulPlan {
     }
 }
 
-/// `C = A · B` (blocked).
+/// `C = A · B` (blocked, parallel over row panels when large).
 pub fn matmul(a: &Dense, b: &Dense) -> Dense {
     matmul_with_plan(a, b, MatmulPlan::default())
 }
 
 pub fn matmul_with_plan(a: &Dense, b: &Dense, plan: MatmulPlan) -> Dense {
+    parallel::with_current(|pool| matmul_with_plan_pool(a, b, plan, pool))
+}
+
+/// `C = A · B` on an explicit pool (benches / determinism tests).
+pub fn matmul_with_plan_pool(a: &Dense, b: &Dense, plan: MatmulPlan, pool: &ThreadPool) -> Dense {
     assert_eq!(a.cols(), b.rows(), "matmul shape mismatch");
     let (m, _k) = a.shape();
     let n = b.cols();
     let mut c = Dense::zeros(m, n);
-    gemm_into(a, b, &mut c, plan);
+    gemm_into(a, b, &mut c, plan, pool);
     c
 }
 
@@ -57,6 +75,18 @@ pub fn matmul_rank1_with_plan(
     v: &[f64],
     plan: MatmulPlan,
 ) -> Dense {
+    parallel::with_current(|pool| matmul_rank1_with_plan_pool(a, b, u, v, plan, pool))
+}
+
+/// `C = A · B − u·vᵀ` on an explicit pool.
+pub fn matmul_rank1_with_plan_pool(
+    a: &Dense,
+    b: &Dense,
+    u: &[f64],
+    v: &[f64],
+    plan: MatmulPlan,
+    pool: &ThreadPool,
+) -> Dense {
     assert_eq!(a.cols(), b.rows(), "matmul shape mismatch");
     let (m, _) = a.shape();
     let n = b.cols();
@@ -64,7 +94,8 @@ pub fn matmul_rank1_with_plan(
     assert_eq!(v.len(), n, "v length");
     let mut c = Dense::zeros(m, n);
     // Fused epilogue: seed C with the downdate, then accumulate A·B on
-    // top — one pass over C total.
+    // top — one pass over C total. The O(mn) seed is cheap next to the
+    // O(mnk) product, so it stays serial.
     for i in 0..m {
         let ui = u[i];
         if ui != 0.0 {
@@ -73,24 +104,43 @@ pub fn matmul_rank1_with_plan(
             }
         }
     }
-    gemm_into(a, b, &mut c, plan);
+    gemm_into(a, b, &mut c, plan, pool);
     c
 }
 
-/// Accumulating core: `C += A · B`, cache-blocked.
-fn gemm_into(a: &Dense, b: &Dense, c: &mut Dense, plan: MatmulPlan) {
+/// Accumulating core: `C += A · B`, cache-blocked, row-panel parallel.
+fn gemm_into(a: &Dense, b: &Dense, c: &mut Dense, plan: MatmulPlan, pool: &ThreadPool) {
     let (m, kdim) = a.shape();
+    let n = b.cols();
+    let work = m.saturating_mul(n).saturating_mul(kdim);
+    par_row_chunks_min(pool, work, PAR_MIN_FLOPS, c.data_mut(), m, n, |row0, nrows, chunk| {
+        gemm_rows(a, b, row0, nrows, chunk, plan);
+    });
+}
+
+/// The serial kernel on rows `row0 .. row0 + nrows` of C; `c_rows` is
+/// that strip of C (`nrows * n` elements). Every parallel path funnels
+/// here, so per-row accumulation order never depends on the pool size.
+fn gemm_rows(
+    a: &Dense,
+    b: &Dense,
+    row0: usize,
+    nrows: usize,
+    c_rows: &mut [f64],
+    plan: MatmulPlan,
+) {
+    let (_, kdim) = a.shape();
     let n = b.cols();
     let mc = plan.mc.max(1);
     let kc = plan.kc.max(1);
 
     for k0 in (0..kdim).step_by(kc) {
         let k1 = (k0 + kc).min(kdim);
-        for i0 in (0..m).step_by(mc) {
-            let i1 = (i0 + mc).min(m);
+        for i0 in (0..nrows).step_by(mc) {
+            let i1 = (i0 + mc).min(nrows);
             for i in i0..i1 {
-                let a_row = &a.row(i)[k0..k1];
-                let c_row = c.row_mut(i);
+                let a_row = &a.row(row0 + i)[k0..k1];
+                let c_row = &mut c_rows[i * n..(i + 1) * n];
                 // 4-way k-unroll: quarters the number of passes over
                 // c_row, the dominant memory traffic for wide C.
                 // (Perf log: 2-way = 10.3 GFLOP/s, 4-way = see
@@ -128,35 +178,73 @@ fn gemm_into(a: &Dense, b: &Dense, c: &mut Dense, plan: MatmulPlan) {
 /// `C = Aᵀ · B` without forming Aᵀ (A is m×n, B is m×k → C is n×k).
 ///
 /// Used for the `X̄ᵀQ` products: row-major X is traversed row-wise and
-/// scattered into C, which is the cache-friendly direction.
+/// scattered into C. Parallelism partitions the *output* rows of C
+/// (columns of A): each task scans all of A but reads only its column
+/// window, so contributions to one output row always accumulate in
+/// serial `i` order — thread-count invariant.
 pub fn tmatmul(a: &Dense, b: &Dense) -> Dense {
+    parallel::with_current(|pool| tmatmul_pool(a, b, pool))
+}
+
+/// `C = Aᵀ · B` on an explicit pool.
+pub fn tmatmul_pool(a: &Dense, b: &Dense, pool: &ThreadPool) -> Dense {
     assert_eq!(a.rows(), b.rows(), "tmatmul shape mismatch");
-    let (m, n) = a.shape();
+    let (_, n) = a.shape();
     let k = b.cols();
     let mut c = Dense::zeros(n, k);
+    tmatmul_into(a, b, &mut c, pool);
+    c
+}
+
+/// Accumulate `C += Aᵀ · B`, partitioned over output rows (A-columns).
+fn tmatmul_into(a: &Dense, b: &Dense, c: &mut Dense, pool: &ThreadPool) {
+    let (m, n) = a.shape();
+    let k = b.cols();
+    let work = m.saturating_mul(n).saturating_mul(k);
+    par_row_chunks_min(pool, work, PAR_MIN_FLOPS, c.data_mut(), n, k, |j0, ncols, chunk| {
+        tmatmul_cols(a, b, j0, ncols, chunk);
+    });
+}
+
+/// Serial Aᵀ·B restricted to output rows (A-columns) `j0 .. j0 + ncols`;
+/// `c_rows` is that strip of C (`ncols * k` elements).
+fn tmatmul_cols(a: &Dense, b: &Dense, j0: usize, ncols: usize, c_rows: &mut [f64]) {
+    let m = a.rows();
+    let k = b.cols();
     for i in 0..m {
-        let a_row = a.row(i);
+        let a_win = &a.row(i)[j0..j0 + ncols];
         let b_row = b.row(i);
-        for (jj, &aij) in a_row.iter().enumerate() {
+        for (jj, &aij) in a_win.iter().enumerate() {
             if aij != 0.0 {
-                let c_row = c.row_mut(jj);
+                let c_row = &mut c_rows[jj * k..(jj + 1) * k];
                 for l in 0..k {
                     c_row[l] += aij * b_row[l];
                 }
             }
         }
     }
-    c
 }
 
 /// `C = Aᵀ·B − u·vᵀ` fused (u has length n = a.cols()).
 pub fn tmatmul_rank1(a: &Dense, b: &Dense, u: &[f64], v: &[f64]) -> Dense {
+    parallel::with_current(|pool| tmatmul_rank1_pool(a, b, u, v, pool))
+}
+
+/// `C = Aᵀ·B − u·vᵀ` on an explicit pool.
+pub fn tmatmul_rank1_pool(
+    a: &Dense,
+    b: &Dense,
+    u: &[f64],
+    v: &[f64],
+    pool: &ThreadPool,
+) -> Dense {
     let (m, n) = a.shape();
     assert_eq!(m, b.rows());
     let k = b.cols();
     assert_eq!(u.len(), n);
     assert_eq!(v.len(), k);
     let mut c = Dense::zeros(n, k);
+    // Seed with the downdate (cheap O(nk)), then accumulate Aᵀ·B.
     for j in 0..n {
         let uj = u[j];
         if uj != 0.0 {
@@ -165,18 +253,7 @@ pub fn tmatmul_rank1(a: &Dense, b: &Dense, u: &[f64], v: &[f64]) -> Dense {
             }
         }
     }
-    for i in 0..m {
-        let a_row = a.row(i);
-        let b_row = b.row(i);
-        for (jj, &aij) in a_row.iter().enumerate() {
-            if aij != 0.0 {
-                let c_row = c.row_mut(jj);
-                for l in 0..k {
-                    c_row[l] += aij * b_row[l];
-                }
-            }
-        }
-    }
+    tmatmul_into(a, b, &mut c, pool);
     c
 }
 
@@ -212,6 +289,34 @@ mod tests {
         for (mc, kc) in [(1, 1), (7, 13), (64, 256), (1000, 1000)] {
             let got = matmul_with_plan(&a, &b, MatmulPlan { mc, kc });
             assert!(fro_diff(&got, &base) < 1e-10);
+        }
+    }
+
+    #[test]
+    fn pool_size_invariance_is_bitwise() {
+        // Large enough to clear PAR_MIN_FLOPS (160*96*120 ≈ 1.8M).
+        let mut rng = Xoshiro256pp::seed_from_u64(7);
+        let a = Dense::gaussian(160, 120, &mut rng);
+        let b = Dense::gaussian(120, 96, &mut rng);
+        let u: Vec<f64> = (0..160).map(|_| rng.next_gaussian()).collect();
+        let v: Vec<f64> = (0..96).map(|_| rng.next_gaussian()).collect();
+        let p1 = ThreadPool::new(1);
+        let base = matmul_with_plan_pool(&a, &b, MatmulPlan::default(), &p1);
+        let base_r1 = matmul_rank1_with_plan_pool(&a, &b, &u, &v, MatmulPlan::default(), &p1);
+        let base_t = tmatmul_pool(&a, &b, &p1);
+        for threads in [2, 3, 8] {
+            let p = ThreadPool::new(threads);
+            let got = matmul_with_plan_pool(&a, &b, MatmulPlan::default(), &p);
+            let got_r1 = matmul_rank1_with_plan_pool(&a, &b, &u, &v, MatmulPlan::default(), &p);
+            let got_t = tmatmul_pool(&a, &b, &p);
+            for (x, y) in [(&base, &got), (&base_r1, &got_r1), (&base_t, &got_t)] {
+                let same = x
+                    .data()
+                    .iter()
+                    .zip(y.data())
+                    .all(|(a, b)| a.to_bits() == b.to_bits());
+                assert!(same, "threads {threads}: outputs must be bit-identical");
+            }
         }
     }
 

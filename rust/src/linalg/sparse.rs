@@ -5,9 +5,20 @@
 //! is dense — O(mn) memory and O(mnk) factorization. The shifted
 //! products below touch only `nnz` entries plus the rank-1 correction,
 //! so S-RSVD runs in `O(nnz·k + (m+n)k²)` (paper Eq. 15).
+//!
+//! Large products run row-parallel on the shared [`crate::parallel`]
+//! pool: `X·B` partitions CSR rows (one output row per CSR row), and
+//! `Xᵀ·B` partitions *output* rows (CSR columns) — each task binary-
+//! searches its column window inside every CSR row, so contributions to
+//! one output row always land in serial row order and results are
+//! bit-identical for every pool size.
 
 use super::{Dense, gemm};
+use crate::parallel::{self, par_row_chunks_min, ThreadPool};
 use crate::rng::Rng;
+
+/// Below this many multiply-adds (≈ nnz·k) a sparse product runs inline.
+const PAR_MIN_WORK: usize = 1 << 20;
 
 /// COO builder: accumulate (row, col, value) triplets, then seal to CSR.
 #[derive(Debug, Clone, Default)]
@@ -146,39 +157,86 @@ impl Csr {
             .collect()
     }
 
-    /// `X · B` for dense `B` (n×k) → dense (m×k), O(nnz·k).
+    /// `X · B` for dense `B` (n×k) → dense (m×k), O(nnz·k);
+    /// CSR-row-parallel when large.
     pub fn matmul_dense(&self, b: &Dense) -> Dense {
+        parallel::with_current(|pool| self.matmul_dense_pool(b, pool))
+    }
+
+    /// `X · B` on an explicit pool (benches / determinism tests).
+    pub fn matmul_dense_pool(&self, b: &Dense, pool: &ThreadPool) -> Dense {
         assert_eq!(self.cols, b.rows(), "spmm shape mismatch");
         let k = b.cols();
         let mut c = Dense::zeros(self.rows, k);
-        for i in 0..self.rows {
-            let c_row = c.row_mut(i);
-            for (j, v) in self.row_iter(i) {
+        let work = self.nnz().saturating_mul(k);
+        let rows = self.rows;
+        par_row_chunks_min(pool, work, PAR_MIN_WORK, c.data_mut(), rows, k, |r0, nr, chunk| {
+            self.spmm_rows(b, r0, nr, chunk);
+        });
+        c
+    }
+
+    /// Serial `X·B` on CSR rows `r0 .. r0 + nrows`; `c_rows` is that
+    /// strip of the output (`nrows * k` elements).
+    fn spmm_rows(&self, b: &Dense, r0: usize, nrows: usize, c_rows: &mut [f64]) {
+        let k = b.cols();
+        for local in 0..nrows {
+            let c_row = &mut c_rows[local * k..(local + 1) * k];
+            for (j, v) in self.row_iter(r0 + local) {
                 let b_row = b.row(j);
                 for l in 0..k {
                     c_row[l] += v * b_row[l];
                 }
             }
         }
-        c
     }
 
     /// `Xᵀ · B` for dense `B` (m×k) → dense (n×k), O(nnz·k); CSR rows
-    /// scatter into the output, no transpose materialized.
+    /// scatter into the output, no transpose materialized. Parallel
+    /// tasks own disjoint output-row (CSR-column) windows.
     pub fn tmatmul_dense(&self, b: &Dense) -> Dense {
+        parallel::with_current(|pool| self.tmatmul_dense_pool(b, pool))
+    }
+
+    /// `Xᵀ · B` on an explicit pool.
+    pub fn tmatmul_dense_pool(&self, b: &Dense, pool: &ThreadPool) -> Dense {
         assert_eq!(self.rows, b.rows(), "spmm^T shape mismatch");
         let k = b.cols();
         let mut c = Dense::zeros(self.cols, k);
+        let work = self.nnz().saturating_mul(k);
+        let cols = self.cols;
+        par_row_chunks_min(pool, work, PAR_MIN_WORK, c.data_mut(), cols, k, |j0, nc, chunk| {
+            self.tspmm_cols(b, j0, nc, chunk);
+        });
+        c
+    }
+
+    /// Serial `Xᵀ·B` restricted to output rows (CSR columns)
+    /// `j0 .. j0 + ncols`. Column indices are sorted within each CSR
+    /// row (guaranteed by [`Triplets::to_csr`]), so the window is found
+    /// by binary search — O(nnz_window + rows·log nnz_row) per task.
+    fn tspmm_cols(&self, b: &Dense, j0: usize, ncols: usize, c_rows: &mut [f64]) {
+        let k = b.cols();
+        let j1 = j0 + ncols;
         for i in 0..self.rows {
+            let lo = self.indptr[i];
+            let hi = self.indptr[i + 1];
+            let idx = &self.indices[lo..hi];
+            let start = idx.partition_point(|&j| (j as usize) < j0);
+            let end = idx.partition_point(|&j| (j as usize) < j1);
+            if start == end {
+                continue;
+            }
             let b_row = b.row(i);
-            for (j, v) in self.row_iter(i) {
-                let c_row = c.row_mut(j);
+            for t in start..end {
+                let j = idx[t] as usize;
+                let v = self.values[lo + t];
+                let c_row = &mut c_rows[(j - j0) * k..(j - j0 + 1) * k];
                 for l in 0..k {
                     c_row[l] += v * b_row[l];
                 }
             }
         }
-        c
     }
 
     /// `(X − u·vᵀ_sel)·B` fused: `X·B − u·(vᵀB)`-style downdate where the
@@ -366,6 +424,31 @@ mod tests {
             (got - want).abs() < 1e-8 * want.max(1.0),
             "got {got} want {want}"
         );
+    }
+
+    #[test]
+    fn pool_size_invariance_is_bitwise() {
+        // nnz·k must clear PAR_MIN_WORK: ~60k nnz × 24 ≈ 1.4M.
+        let mut rng = Xoshiro256pp::seed_from_u64(7);
+        let x = Csr::random(600, 4000, 0.025, &mut rng, |r| r.next_uniform() + 0.1);
+        let b = Dense::gaussian(4000, 24, &mut rng);
+        let bt = Dense::gaussian(600, 24, &mut rng);
+        let p1 = crate::parallel::ThreadPool::new(1);
+        let base = x.matmul_dense_pool(&b, &p1);
+        let base_t = x.tmatmul_dense_pool(&bt, &p1);
+        for threads in [2, 8] {
+            let p = crate::parallel::ThreadPool::new(threads);
+            let got = x.matmul_dense_pool(&b, &p);
+            let got_t = x.tmatmul_dense_pool(&bt, &p);
+            for (want, have) in [(&base, &got), (&base_t, &got_t)] {
+                let same = want
+                    .data()
+                    .iter()
+                    .zip(have.data())
+                    .all(|(a, b)| a.to_bits() == b.to_bits());
+                assert!(same, "threads {threads}: CSR products must be bit-identical");
+            }
+        }
     }
 
     #[test]

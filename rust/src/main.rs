@@ -61,7 +61,8 @@ fn print_root_help() {
          COMMANDS:\n\
          \x20 factorize   one-shot PCA of a generated matrix\n\
          \x20 serve       run the factorization service on a synthetic job stream\n\
-         \x20 experiment  regenerate a paper figure/table (fig1a..fig1f, table1-images, table1-words)\n\
+         \x20 experiment  regenerate a paper figure/table\n\
+         \x20             (fig1a..fig1f, table1-images, table1-words)\n\
          \x20 artifacts   list the compiled AOT artifacts\n\n\
          Run `srsvd <command> --help` for options."
     );
@@ -88,7 +89,8 @@ fn cmd_factorize(args: &[String]) -> Result<()> {
         .opt("basis", "direct", "direct | qr-update-paper | qr-update-exact")
         .opt("small-svd", "jacobi", "jacobi | gram")
         .opt("seed", "0", "rng seed")
-        .opt("engine", "auto", "auto | native | artifact");
+        .opt("engine", "auto", "auto | native | artifact")
+        .opt("threads", "0", "linalg pool threads (0 = auto / SRSVD_THREADS)");
     let a = spec.parse(args)?;
     if a.help {
         print!("{}", spec.usage("srsvd factorize"));
@@ -114,7 +116,11 @@ fn cmd_factorize(args: &[String]) -> Result<()> {
         seed: seed ^ 0xFA,
         score: true,
     };
-    let coord = Coordinator::start(CoordinatorConfig::default())?;
+    let mut svc = CoordinatorConfig::default();
+    if a.get_usize("threads")? > 0 {
+        svc.pool_threads = Some(a.get_usize("threads")?);
+    }
+    let coord = Coordinator::start(svc)?;
     let r = coord.submit_blocking(job)?;
     let out = r.outcome?;
     println!(
@@ -134,6 +140,7 @@ fn cmd_serve(args: &[String]) -> Result<()> {
         .opt("jobs", "32", "number of jobs to submit")
         .opt("workers", "0", "native workers (0 = auto)")
         .opt("queue", "64", "queue capacity")
+        .opt("threads", "0", "linalg pool threads (0 = auto / SRSVD_THREADS)")
         .opt("config", "", "optional srsvd.conf path")
         .opt("seed", "0", "rng seed")
         .flag("native-only", "disable the artifact engine");
@@ -149,6 +156,9 @@ fn cmd_serve(args: &[String]) -> Result<()> {
     };
     if a.get_usize("workers")? > 0 {
         cfg.native_workers = a.get_usize("workers")?;
+    }
+    if a.get_usize("threads")? > 0 {
+        cfg.pool_threads = Some(a.get_usize("threads")?);
     }
     cfg.queue_capacity = a.get_usize("queue")?;
     if a.has_flag("native-only") {
@@ -185,7 +195,11 @@ fn cmd_serve(args: &[String]) -> Result<()> {
 
 fn cmd_experiment(args: &[String]) -> Result<()> {
     let spec = ArgSpec::new("Regenerate a paper figure/table")
-        .req("id", "fig1a | fig1b | fig1c | fig1d | fig1e | fig1f | table1-images | table1-words | efficiency")
+        .req(
+            "id",
+            "fig1a | fig1b | fig1c | fig1d | fig1e | fig1f | table1-images | \
+             table1-words | efficiency",
+        )
         .opt("seed", "42", "rng seed")
         .opt("runs", "10", "repetitions for table1 statistics")
         .flag("quick", "thin the sweep grids (~8x faster)");
@@ -204,7 +218,11 @@ fn cmd_experiment(args: &[String]) -> Result<()> {
             print!("{}", fig1::render_k_table("Fig 1a: MSE vs #components", &rows));
         }
         "fig1b" => {
-            let ns: &[usize] = if quick { &[200, 1000, 5000] } else { &[100, 200, 500, 1000, 2000, 5000, 10000] };
+            let ns: &[usize] = if quick {
+                &[200, 1000, 5000]
+            } else {
+                &[100, 200, 500, 1000, 2000, 5000, 10000]
+            };
             let mut t = srsvd::bench::Table::new(&["n", "MSE-SUM S-RSVD", "MSE-SUM RSVD"]);
             for (n, s, r) in fig1::fig1b(ns, &ks, seed) {
                 t.row(&[n.to_string(), format!("{s:.3}"), format!("{r:.3}")]);
@@ -212,7 +230,8 @@ fn cmd_experiment(args: &[String]) -> Result<()> {
             print!("{}", t.render());
         }
         "fig1c" => {
-            let mut t = srsvd::bench::Table::new(&["distribution", "MSE-SUM S-RSVD", "MSE-SUM RSVD"]);
+            let mut t =
+                srsvd::bench::Table::new(&["distribution", "MSE-SUM S-RSVD", "MSE-SUM RSVD"]);
             for (d, s, r) in fig1::fig1c(&ks, seed) {
                 t.row(&[d.to_string(), format!("{s:.3}"), format!("{r:.3}")]);
             }
@@ -220,7 +239,8 @@ fn cmd_experiment(args: &[String]) -> Result<()> {
         }
         "fig1d" => {
             let rows = fig1::fig1d(&ks, seed);
-            let mut t = srsvd::bench::Table::new(&["k", "implicit (S-RSVD)", "explicit (RSVD on Xbar)"]);
+            let mut t =
+                srsvd::bench::Table::new(&["k", "implicit (S-RSVD)", "explicit (RSVD on Xbar)"]);
             for (k, i, e) in rows {
                 t.row(&[k.to_string(), format!("{i:.5}"), format!("{e:.5}")]);
             }
@@ -257,10 +277,13 @@ fn cmd_experiment(args: &[String]) -> Result<()> {
             print!("{}", table1::render(&[digits, faces]));
         }
         "table1-words" => {
-            let ns: &[usize] = if quick { &[1000, 4000] } else { &[1000, 10_000, 100_000, 300_000] };
+            let ns: &[usize] =
+                if quick { &[1000, 4000] } else { &[1000, 10_000, 100_000, 300_000] };
             let stats: Vec<_> = ns
                 .iter()
-                .map(|&n| table1::words_stats(n, (n * 50).min(4_000_000), 100.min(n / 4), runs, seed))
+                .map(|&n| {
+                    table1::words_stats(n, (n * 50).min(4_000_000), 100.min(n / 4), runs, seed)
+                })
                 .collect();
             print!("{}", table1::render(&stats));
         }
@@ -281,7 +304,8 @@ fn cmd_experiment(args: &[String]) -> Result<()> {
 }
 
 fn cmd_artifacts(args: &[String]) -> Result<()> {
-    let spec = ArgSpec::new("List the compiled AOT artifacts").opt("dir", "artifacts", "artifact directory");
+    let spec = ArgSpec::new("List the compiled AOT artifacts")
+        .opt("dir", "artifacts", "artifact directory");
     let a = spec.parse(args)?;
     if a.help {
         print!("{}", spec.usage("srsvd artifacts"));

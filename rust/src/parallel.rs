@@ -1,0 +1,486 @@
+//! The parallel execution subsystem: a small chunked thread pool built
+//! on std threads + channels (the offline environment has no rayon),
+//! shared process-wide and threaded through every linalg hot path.
+//!
+//! ## Design
+//!
+//! * **Chunked self-scheduling.** A parallel operation is split into
+//!   contiguous output chunks; workers (plus the calling thread) claim
+//!   chunk indices from a shared atomic counter, so fast threads steal
+//!   the chunks slow threads never reach. Dynamic load balance without
+//!   per-task queues.
+//! * **Deterministic by construction.** Chunks always partition the
+//!   *output*: each output row is produced entirely by one task running
+//!   the exact serial inner-loop order. No cross-thread reductions, so
+//!   results are bit-identical for every pool size (including 1) — a
+//!   hard requirement, since every experiment is seeded.
+//! * **Process-wide handle.** [`global()`] lazily builds one pool sized
+//!   from `SRSVD_THREADS` (else the machine's available parallelism).
+//!   The coordinator can size its own pool from the `[parallel]
+//!   threads` config knob; worker threads install it with
+//!   [`set_thread_pool`] so every job shares one pool instead of each
+//!   job running serial.
+//! * **No nested parallelism.** A parallel op issued from inside a pool
+//!   worker runs inline — the pool can never deadlock on itself.
+//!
+//! The only `unsafe` lives here: one lifetime erasure for the scoped
+//! closure (sound because `run_chunks` blocks until every helper has
+//! finished) and the disjoint row-slice split in [`par_row_chunks`].
+
+use std::cell::{Cell, RefCell};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::{Arc, Mutex, OnceLock};
+
+type Job = Box<dyn FnOnce() + Send + 'static>;
+
+/// Counters a pool keeps about its own usage (read via
+/// [`ThreadPool::stats`] and surfaced in the coordinator metrics).
+#[derive(Debug, Default)]
+pub struct PoolStats {
+    /// Parallel operations dispatched across threads.
+    parallel_ops: AtomicU64,
+    /// Operations executed inline (pool size 1, single chunk, or issued
+    /// from inside a worker).
+    serial_ops: AtomicU64,
+    /// Total chunks executed by parallel operations.
+    chunks: AtomicU64,
+}
+
+/// Point-in-time view of a pool's counters.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct PoolStatsSnapshot {
+    pub threads: usize,
+    pub parallel_ops: u64,
+    pub serial_ops: u64,
+    pub chunks: u64,
+}
+
+impl std::fmt::Display for PoolStatsSnapshot {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "threads={} par_ops={} serial_ops={} chunks={}",
+            self.threads, self.parallel_ops, self.serial_ops, self.chunks
+        )
+    }
+}
+
+/// A fixed-size pool of `threads - 1` worker threads; the caller of a
+/// parallel operation is the remaining participant.
+pub struct ThreadPool {
+    threads: usize,
+    tx: Option<Sender<Job>>,
+    handles: Vec<std::thread::JoinHandle<()>>,
+    stats: PoolStats,
+}
+
+impl std::fmt::Debug for ThreadPool {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("ThreadPool")
+            .field("threads", &self.threads)
+            .finish()
+    }
+}
+
+thread_local! {
+    /// Per-thread pool override (set on coordinator worker threads and
+    /// inside [`with_pool`] scopes); `None` means use the global pool.
+    static CURRENT: RefCell<Option<Arc<ThreadPool>>> = const { RefCell::new(None) };
+    /// True on pool worker threads: parallel ops issued there run inline.
+    static IN_WORKER: Cell<bool> = const { Cell::new(false) };
+}
+
+static GLOBAL: OnceLock<Arc<ThreadPool>> = OnceLock::new();
+
+/// Pool size from the environment: `SRSVD_THREADS` if set to a positive
+/// integer, else the machine's available parallelism, else 1.
+pub fn default_threads() -> usize {
+    if let Ok(s) = std::env::var("SRSVD_THREADS") {
+        if let Ok(n) = s.trim().parse::<usize>() {
+            if n >= 1 {
+                return n;
+            }
+        }
+    }
+    std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(1)
+}
+
+/// The process-wide pool, built on first use with [`default_threads`].
+pub fn global() -> Arc<ThreadPool> {
+    GLOBAL
+        .get_or_init(|| Arc::new(ThreadPool::new(default_threads())))
+        .clone()
+}
+
+/// Size the global pool explicitly (e.g. from a config file) before its
+/// first use. Returns `false` if the global pool already exists, in
+/// which case the existing pool is kept.
+pub fn init_global(threads: usize) -> bool {
+    GLOBAL.set(Arc::new(ThreadPool::new(threads))).is_ok()
+}
+
+/// Install (or clear) this thread's pool override. Coordinator worker
+/// threads call this once at startup so jobs share the service pool.
+pub fn set_thread_pool(pool: Option<Arc<ThreadPool>>) {
+    CURRENT.with(|c| *c.borrow_mut() = pool);
+}
+
+/// Run `f` against the calling thread's effective pool: the thread-local
+/// override when one is installed, else the global pool.
+pub fn with_current<R>(f: impl FnOnce(&ThreadPool) -> R) -> R {
+    let cur = CURRENT.with(|c| c.borrow().clone());
+    match cur {
+        Some(p) => f(&p),
+        None => f(&global()),
+    }
+}
+
+/// Run `f` with `pool` installed as this thread's pool override,
+/// restoring the previous override afterwards (even on panic). Used by
+/// benches and the determinism tests to pin an exact pool size.
+pub fn with_pool<R>(pool: &Arc<ThreadPool>, f: impl FnOnce() -> R) -> R {
+    struct Restore(Option<Arc<ThreadPool>>);
+    impl Drop for Restore {
+        fn drop(&mut self) {
+            let old = self.0.take();
+            CURRENT.with(|c| *c.borrow_mut() = old);
+        }
+    }
+    let old = CURRENT.with(|c| c.replace(Some(Arc::clone(pool))));
+    let _restore = Restore(old);
+    f()
+}
+
+impl ThreadPool {
+    /// Build a pool with `threads` total participants (`threads - 1`
+    /// spawned workers; the caller of each operation is the last one).
+    /// `threads = 1` is a valid, fully inline pool.
+    pub fn new(threads: usize) -> ThreadPool {
+        let threads = threads.max(1);
+        if threads == 1 {
+            return ThreadPool {
+                threads,
+                tx: None,
+                handles: Vec::new(),
+                stats: PoolStats::default(),
+            };
+        }
+        let (tx, rx) = channel::<Job>();
+        let rx = Arc::new(Mutex::new(rx));
+        let mut handles = Vec::with_capacity(threads - 1);
+        for w in 0..threads - 1 {
+            let rx = Arc::clone(&rx);
+            let h = std::thread::Builder::new()
+                .name(format!("srsvd-pool-{w}"))
+                .spawn(move || worker_loop(rx))
+                .expect("spawn pool worker");
+            handles.push(h);
+        }
+        ThreadPool { threads, tx: Some(tx), handles, stats: PoolStats::default() }
+    }
+
+    /// Total participants (workers + caller) of a parallel operation.
+    pub fn threads(&self) -> usize {
+        self.threads
+    }
+
+    pub fn stats(&self) -> PoolStatsSnapshot {
+        PoolStatsSnapshot {
+            threads: self.threads,
+            parallel_ops: self.stats.parallel_ops.load(Ordering::Relaxed),
+            serial_ops: self.stats.serial_ops.load(Ordering::Relaxed),
+            chunks: self.stats.chunks.load(Ordering::Relaxed),
+        }
+    }
+
+    /// Execute `f(0), f(1), ..., f(chunks - 1)`, distributing chunk
+    /// indices over the pool. Blocks until every chunk has run. Chunks
+    /// must touch disjoint data (the callers in `linalg` partition
+    /// output rows). Panics in `f` are propagated to the caller after
+    /// all tasks have finished, so the pool stays usable.
+    pub fn run_chunks(&self, chunks: usize, f: &(dyn Fn(usize) + Sync)) {
+        if chunks == 0 {
+            return;
+        }
+        let nested = IN_WORKER.with(|w| w.get());
+        if self.threads == 1 || chunks == 1 || nested || self.tx.is_none() {
+            self.stats.serial_ops.fetch_add(1, Ordering::Relaxed);
+            for i in 0..chunks {
+                f(i);
+            }
+            return;
+        }
+        self.stats.parallel_ops.fetch_add(1, Ordering::Relaxed);
+        self.stats.chunks.fetch_add(chunks as u64, Ordering::Relaxed);
+
+        let next = Arc::new(AtomicUsize::new(0));
+        let panicked = Arc::new(AtomicBool::new(false));
+        let (done_tx, done_rx) = channel::<()>();
+        // SAFETY: the helpers only call `f` before sending on `done_tx`,
+        // and we receive exactly `helpers` messages below before
+        // returning — so the erased borrow never outlives this call.
+        let f_static = unsafe {
+            std::mem::transmute::<&(dyn Fn(usize) + Sync), &'static (dyn Fn(usize) + Sync)>(f)
+        };
+        let helpers = (self.threads - 1).min(chunks - 1);
+        let tx = self.tx.as_ref().expect("pool queue");
+        for _ in 0..helpers {
+            let next = Arc::clone(&next);
+            let panicked = Arc::clone(&panicked);
+            let done = done_tx.clone();
+            let job: Job = Box::new(move || {
+                let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| loop {
+                    let i = next.fetch_add(1, Ordering::Relaxed);
+                    if i >= chunks {
+                        break;
+                    }
+                    f_static(i);
+                }));
+                if result.is_err() {
+                    panicked.store(true, Ordering::SeqCst);
+                }
+                let _ = done.send(());
+            });
+            tx.send(job).expect("pool queue closed");
+        }
+        drop(done_tx);
+
+        // The caller is a full participant.
+        let caller = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| loop {
+            let i = next.fetch_add(1, Ordering::Relaxed);
+            if i >= chunks {
+                break;
+            }
+            f(i);
+        }));
+        // Wait for every helper before the borrow of `f` can end.
+        for _ in 0..helpers {
+            let _ = done_rx.recv();
+        }
+        if let Err(p) = caller {
+            std::panic::resume_unwind(p);
+        }
+        if panicked.load(Ordering::SeqCst) {
+            panic!("srsvd parallel task panicked (see stderr for the worker backtrace)");
+        }
+    }
+}
+
+impl Drop for ThreadPool {
+    fn drop(&mut self) {
+        // Closing the channel makes every worker's recv() fail -> exit.
+        self.tx.take();
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+fn worker_loop(rx: Arc<Mutex<Receiver<Job>>>) {
+    IN_WORKER.with(|w| w.set(true));
+    loop {
+        // Jobs catch panics internally, so the lock is never poisoned by
+        // a task; recv() itself cannot panic.
+        let job = {
+            let guard = rx.lock().expect("pool queue mutex");
+            guard.recv()
+        };
+        match job {
+            Ok(job) => job(),
+            Err(_) => return, // pool dropped
+        }
+    }
+}
+
+/// Raw pointer wrapper so disjoint sub-slices can be formed inside
+/// `Sync` closures. Soundness is the caller's obligation (disjoint
+/// ranges only) — both uses below partition by non-overlapping rows.
+struct SendPtr<T>(*mut T);
+unsafe impl<T> Send for SendPtr<T> {}
+unsafe impl<T> Sync for SendPtr<T> {}
+
+/// Partition the `rows` rows (each `stride` elements, row-major) of
+/// `data` into contiguous chunks and run `f(first_row, n_rows,
+/// chunk_slice)` on each, in parallel on `pool`.
+///
+/// Each output row belongs to exactly one chunk, so as long as `f`
+/// computes rows independently (every caller in `linalg` does), the
+/// result is bit-identical for every pool size.
+pub fn par_row_chunks(
+    pool: &ThreadPool,
+    data: &mut [f64],
+    rows: usize,
+    stride: usize,
+    f: impl Fn(usize, usize, &mut [f64]) + Sync,
+) {
+    assert_eq!(data.len(), rows * stride, "par_row_chunks shape");
+    if rows == 0 {
+        return;
+    }
+    // ~4 chunks per thread: enough slack for dynamic balance, few
+    // enough that per-chunk overhead stays negligible.
+    let target = pool.threads().max(1) * 4;
+    let chunk_rows = ((rows + target - 1) / target).max(1);
+    let chunks = (rows + chunk_rows - 1) / chunk_rows;
+    let base = SendPtr(data.as_mut_ptr());
+    pool.run_chunks(chunks, &|ci| {
+        let r0 = ci * chunk_rows;
+        let r1 = (r0 + chunk_rows).min(rows);
+        // SAFETY: chunk `ci` covers rows [r0, r1) and chunks are
+        // disjoint; `data` outlives `run_chunks`, which blocks until
+        // every chunk has run.
+        let slice = unsafe {
+            std::slice::from_raw_parts_mut(base.0.add(r0 * stride), (r1 - r0) * stride)
+        };
+        f(r0, r1 - r0, slice);
+    });
+}
+
+/// The standard dispatch for a row-partitioned kernel: run `f` once
+/// over the whole range when the pool is size one or the operation is
+/// too small (`work < min_work`) to amortize dispatch; otherwise fan
+/// out via [`par_row_chunks`]. Serial and parallel paths invoke the
+/// *same* `f`, so this changes scheduling only, never results.
+pub fn par_row_chunks_min(
+    pool: &ThreadPool,
+    work: usize,
+    min_work: usize,
+    data: &mut [f64],
+    rows: usize,
+    stride: usize,
+    f: impl Fn(usize, usize, &mut [f64]) + Sync,
+) {
+    assert_eq!(data.len(), rows * stride, "par_row_chunks_min shape");
+    if pool.threads() <= 1 || rows < 2 || work < min_work {
+        pool.stats.serial_ops.fetch_add(1, Ordering::Relaxed);
+        f(0, rows, data);
+        return;
+    }
+    par_row_chunks(pool, data, rows, stride, f);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn run_chunks_covers_every_index_once() {
+        for threads in [1, 2, 4, 8] {
+            let pool = ThreadPool::new(threads);
+            let hits: Vec<AtomicUsize> = (0..37).map(|_| AtomicUsize::new(0)).collect();
+            pool.run_chunks(37, &|i| {
+                hits[i].fetch_add(1, Ordering::Relaxed);
+            });
+            for (i, h) in hits.iter().enumerate() {
+                assert_eq!(h.load(Ordering::Relaxed), 1, "chunk {i} (threads {threads})");
+            }
+        }
+    }
+
+    #[test]
+    fn par_row_chunks_matches_serial_bitwise() {
+        let rows = 53;
+        let stride = 17;
+        let fill = |r0: usize, _nrows: usize, chunk: &mut [f64]| {
+            for (local, row) in chunk.chunks_mut(stride).enumerate() {
+                let i = r0 + local;
+                for (j, x) in row.iter_mut().enumerate() {
+                    // Non-trivial float math so bit-equality means something.
+                    *x = ((i * 31 + j) as f64).sin() * 1e3 + (j as f64).sqrt();
+                }
+            }
+        };
+        let mut want = vec![0.0; rows * stride];
+        par_row_chunks(&ThreadPool::new(1), &mut want, rows, stride, fill);
+        for threads in [2, 3, 8] {
+            let mut got = vec![0.0; rows * stride];
+            par_row_chunks(&ThreadPool::new(threads), &mut got, rows, stride, fill);
+            let same = want
+                .iter()
+                .zip(&got)
+                .all(|(a, b)| a.to_bits() == b.to_bits());
+            assert!(same, "threads {threads}");
+        }
+    }
+
+    #[test]
+    fn par_row_chunks_min_serial_and_parallel_agree() {
+        let rows = 40;
+        let stride = 8;
+        let fill = |r0: usize, _n: usize, chunk: &mut [f64]| {
+            for (local, row) in chunk.chunks_mut(stride).enumerate() {
+                for (j, x) in row.iter_mut().enumerate() {
+                    *x = ((r0 + local) * stride + j) as f64 * 0.5;
+                }
+            }
+        };
+        let pool = ThreadPool::new(4);
+        let mut small = vec![0.0; rows * stride];
+        // work below min_work -> serial path.
+        par_row_chunks_min(&pool, 0, 1, &mut small, rows, stride, fill);
+        let mut big = vec![0.0; rows * stride];
+        // work above min_work -> parallel path.
+        par_row_chunks_min(&pool, usize::MAX, 1, &mut big, rows, stride, fill);
+        assert_eq!(small, big);
+    }
+
+    #[test]
+    fn panic_propagates_and_pool_survives() {
+        let pool = ThreadPool::new(4);
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            pool.run_chunks(16, &|i| {
+                if i == 7 {
+                    panic!("boom");
+                }
+            });
+        }));
+        assert!(result.is_err(), "panic must propagate");
+        // Pool still works afterwards.
+        let count = AtomicUsize::new(0);
+        pool.run_chunks(8, &|_| {
+            count.fetch_add(1, Ordering::Relaxed);
+        });
+        assert_eq!(count.load(Ordering::Relaxed), 8);
+    }
+
+    #[test]
+    fn with_pool_overrides_and_restores() {
+        let two = Arc::new(ThreadPool::new(2));
+        let seen = with_pool(&two, || with_current(|p| p.threads()));
+        assert_eq!(seen, 2);
+        // Outside the scope the override is gone (global or None again).
+        let after = CURRENT.with(|c| c.borrow().clone());
+        assert!(after.is_none());
+    }
+
+    #[test]
+    fn stats_count_parallel_and_serial_ops() {
+        let pool = ThreadPool::new(2);
+        pool.run_chunks(1, &|_| {}); // single chunk -> inline
+        pool.run_chunks(6, &|_| {});
+        let s = pool.stats();
+        assert_eq!(s.threads, 2);
+        assert_eq!(s.serial_ops, 1);
+        assert_eq!(s.parallel_ops, 1);
+        assert_eq!(s.chunks, 6);
+        assert!(format!("{s}").contains("threads=2"));
+    }
+
+    #[test]
+    fn single_thread_pool_is_inline() {
+        let pool = ThreadPool::new(1);
+        let mut touched = vec![false; 9];
+        // Closure needs Sync access; use the slice through a RefCell-free
+        // trick: run_chunks with threads=1 executes inline on this
+        // thread, so a Mutex is enough and uncontended.
+        let cells = Mutex::new(&mut touched);
+        pool.run_chunks(9, &|i| {
+            cells.lock().unwrap()[i] = true;
+        });
+        assert!(touched.iter().all(|&t| t));
+        assert_eq!(pool.stats().parallel_ops, 0);
+    }
+}

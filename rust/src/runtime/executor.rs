@@ -1,13 +1,19 @@
 //! The PJRT executor: compile HLO-text artifacts once, execute many
 //! times. Thread-confined (PJRT wrappers are not `Send`); the
 //! coordinator hosts one executor inside a dedicated actor thread.
-
-use std::collections::HashMap;
+//!
+//! The real implementation needs the external `xla` PJRT wrapper crate,
+//! which the zero-dependency offline build does not have — so it lives
+//! behind the off-by-default `pjrt` cargo feature. The default build
+//! compiles the stub at the bottom of this file: same API, but
+//! [`Executor::new`] reports the runtime as unavailable, and the
+//! coordinator degrades gracefully to native-only execution
+//! (`coordinator::runtime_actor` fails artifact jobs with a clear
+//! error; the router only picks artifacts when a manifest exists).
 
 use crate::linalg::Dense;
-use crate::runtime::manifest::{ArtifactSpec, Manifest};
+use crate::runtime::manifest::ArtifactSpec;
 use crate::svd::Factorization;
-use crate::util::{Error, Result};
 
 /// Outputs of one `srsvd_scored` artifact execution.
 #[derive(Debug, Clone)]
@@ -18,156 +24,247 @@ pub struct SrsvdOutput {
     pub mse: f64,
 }
 
-/// Compiles and runs AOT artifacts on the PJRT CPU client.
-pub struct Executor {
-    client: xla::PjRtClient,
-    manifest: Manifest,
-    cache: HashMap<String, xla::PjRtLoadedExecutable>,
-}
+#[cfg(feature = "pjrt")]
+mod pjrt_impl {
+    use std::collections::HashMap;
 
-fn xerr(context: &str, e: xla::Error) -> Error {
-    Error::Runtime(format!("{context}: {e}"))
-}
+    use super::SrsvdOutput;
+    use crate::linalg::Dense;
+    use crate::runtime::manifest::{ArtifactSpec, Manifest};
+    use crate::svd::Factorization;
+    use crate::util::{Error, Result};
 
-impl Executor {
-    /// Create a CPU PJRT client and parse the manifest in `dir`.
-    pub fn new(dir: &std::path::Path) -> Result<Executor> {
-        let manifest = Manifest::load(dir)?;
-        manifest.validate_files()?;
-        let client = xla::PjRtClient::cpu().map_err(|e| xerr("PjRtClient::cpu", e))?;
-        log::info!(
-            "runtime: platform={} devices={} artifacts={}",
-            client.platform_name(),
-            client.device_count(),
-            manifest.artifacts.len()
-        );
-        Ok(Executor { client, manifest, cache: HashMap::new() })
+    /// Compiles and runs AOT artifacts on the PJRT CPU client.
+    pub struct Executor {
+        client: xla::PjRtClient,
+        manifest: Manifest,
+        cache: HashMap<String, xla::PjRtLoadedExecutable>,
     }
 
-    pub fn manifest(&self) -> &Manifest {
-        &self.manifest
+    fn xerr(context: &str, e: xla::Error) -> Error {
+        Error::Runtime(format!("{context}: {e}"))
     }
 
-    /// Compile (and cache) the named artifact. Returns compile seconds.
-    pub fn ensure_compiled(&mut self, name: &str) -> Result<f64> {
-        if self.cache.contains_key(name) {
-            return Ok(0.0);
+    impl Executor {
+        /// Create a CPU PJRT client and parse the manifest in `dir`.
+        pub fn new(dir: &std::path::Path) -> Result<Executor> {
+            let manifest = Manifest::load(dir)?;
+            manifest.validate_files()?;
+            let client = xla::PjRtClient::cpu().map_err(|e| xerr("PjRtClient::cpu", e))?;
+            crate::log_info!(
+                "runtime: platform={} devices={} artifacts={}",
+                client.platform_name(),
+                client.device_count(),
+                manifest.artifacts.len()
+            );
+            Ok(Executor { client, manifest, cache: HashMap::new() })
         }
-        let spec = self
-            .manifest
-            .find(name)
-            .ok_or_else(|| Error::Artifact(format!("unknown artifact {name:?}")))?
-            .clone();
-        let path = self.manifest.path_of(&spec);
-        let t = crate::util::timer::Timer::start();
-        let proto = xla::HloModuleProto::from_text_file(
-            path.to_str()
-                .ok_or_else(|| Error::Artifact("non-utf8 artifact path".into()))?,
-        )
-        .map_err(|e| xerr("HloModuleProto::from_text_file", e))?;
-        let comp = xla::XlaComputation::from_proto(&proto);
-        let exe = self
-            .client
-            .compile(&comp)
-            .map_err(|e| xerr(&format!("compile {name}"), e))?;
-        let secs = t.elapsed_secs();
-        log::debug!("compiled artifact {name} in {:.2}s", secs);
-        self.cache.insert(name.to_string(), exe);
-        Ok(secs)
-    }
 
-    /// Execute an artifact with row-major f32 inputs; returns the output
-    /// tuple elements as flat f32 vectors (in manifest output order).
-    pub fn run_raw(&mut self, name: &str, inputs: &[(Vec<f32>, Vec<usize>)]) -> Result<Vec<Vec<f32>>> {
-        self.ensure_compiled(name)?;
-        let spec = self.manifest.find(name).unwrap().clone();
-        if inputs.len() != spec.inputs.len() {
-            return Err(Error::Invalid(format!(
-                "artifact {name}: expected {} inputs, got {}",
-                spec.inputs.len(),
-                inputs.len()
-            )));
+        pub fn manifest(&self) -> &Manifest {
+            &self.manifest
         }
-        let mut literals = Vec::with_capacity(inputs.len());
-        for ((data, shape), ispec) in inputs.iter().zip(&spec.inputs) {
-            if *shape != ispec.shape {
-                return Err(Error::Shape(format!(
-                    "artifact {name} input {}: expected {:?}, got {:?}",
-                    ispec.name, ispec.shape, shape
+
+        /// Compile (and cache) the named artifact. Returns compile seconds.
+        pub fn ensure_compiled(&mut self, name: &str) -> Result<f64> {
+            if self.cache.contains_key(name) {
+                return Ok(0.0);
+            }
+            let spec = self
+                .manifest
+                .find(name)
+                .ok_or_else(|| Error::Artifact(format!("unknown artifact {name:?}")))?
+                .clone();
+            let path = self.manifest.path_of(&spec);
+            let t = crate::util::timer::Timer::start();
+            let proto = xla::HloModuleProto::from_text_file(
+                path.to_str()
+                    .ok_or_else(|| Error::Artifact("non-utf8 artifact path".into()))?,
+            )
+            .map_err(|e| xerr("HloModuleProto::from_text_file", e))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = self
+                .client
+                .compile(&comp)
+                .map_err(|e| xerr(&format!("compile {name}"), e))?;
+            let secs = t.elapsed_secs();
+            crate::log_debug!("compiled artifact {name} in {:.2}s", secs);
+            self.cache.insert(name.to_string(), exe);
+            Ok(secs)
+        }
+
+        /// Execute an artifact with row-major f32 inputs; returns the output
+        /// tuple elements as flat f32 vectors (in manifest output order).
+        pub fn run_raw(
+            &mut self,
+            name: &str,
+            inputs: &[(Vec<f32>, Vec<usize>)],
+        ) -> Result<Vec<Vec<f32>>> {
+            self.ensure_compiled(name)?;
+            let spec = self.manifest.find(name).unwrap().clone();
+            if inputs.len() != spec.inputs.len() {
+                return Err(Error::Invalid(format!(
+                    "artifact {name}: expected {} inputs, got {}",
+                    spec.inputs.len(),
+                    inputs.len()
                 )));
             }
-            let lit = xla::Literal::vec1(data);
-            let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
-            let lit = if dims.is_empty() {
-                lit.reshape(&[]).map_err(|e| xerr("reshape scalar", e))?
-            } else {
-                lit.reshape(&dims).map_err(|e| xerr("reshape input", e))?
-            };
-            literals.push(lit);
+            let mut literals = Vec::with_capacity(inputs.len());
+            for ((data, shape), ispec) in inputs.iter().zip(&spec.inputs) {
+                if *shape != ispec.shape {
+                    return Err(Error::Shape(format!(
+                        "artifact {name} input {}: expected {:?}, got {:?}",
+                        ispec.name, ispec.shape, shape
+                    )));
+                }
+                let lit = xla::Literal::vec1(data);
+                let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+                let lit = if dims.is_empty() {
+                    lit.reshape(&[]).map_err(|e| xerr("reshape scalar", e))?
+                } else {
+                    lit.reshape(&dims).map_err(|e| xerr("reshape input", e))?
+                };
+                literals.push(lit);
+            }
+            let exe = self.cache.get(name).unwrap();
+            let result = exe
+                .execute::<xla::Literal>(&literals)
+                .map_err(|e| xerr(&format!("execute {name}"), e))?;
+            let tuple = result[0][0]
+                .to_literal_sync()
+                .map_err(|e| xerr("to_literal_sync", e))?;
+            // aot.py lowers with return_tuple=True: always a tuple, even 1-ary.
+            let parts = tuple.to_tuple().map_err(|e| xerr("to_tuple", e))?;
+            if parts.len() != spec.outputs.len() {
+                return Err(Error::Runtime(format!(
+                    "artifact {name}: expected {} outputs, got {}",
+                    spec.outputs.len(),
+                    parts.len()
+                )));
+            }
+            parts
+                .into_iter()
+                .map(|p| p.to_vec::<f32>().map_err(|e| xerr("to_vec", e)))
+                .collect()
         }
-        let exe = self.cache.get(name).unwrap();
-        let result = exe
-            .execute::<xla::Literal>(&literals)
-            .map_err(|e| xerr(&format!("execute {name}"), e))?;
-        let tuple = result[0][0]
-            .to_literal_sync()
-            .map_err(|e| xerr("to_literal_sync", e))?;
-        // aot.py lowers with return_tuple=True: always a tuple, even 1-ary.
-        let parts = tuple.to_tuple().map_err(|e| xerr("to_tuple", e))?;
-        if parts.len() != spec.outputs.len() {
-            return Err(Error::Runtime(format!(
-                "artifact {name}: expected {} outputs, got {}",
-                spec.outputs.len(),
-                parts.len()
-            )));
+
+        /// Execute an `srsvd_scored` artifact: factorize `X − μ1ᵀ` with the
+        /// supplied Gaussian test matrix Ω (generated rust-side for seed
+        /// control).
+        pub fn run_srsvd(
+            &mut self,
+            spec: &ArtifactSpec,
+            x: &Dense,
+            mu: &[f64],
+            omega: &Dense,
+        ) -> Result<SrsvdOutput> {
+            let (m, n, k, kk) = (spec.m, spec.n, spec.k, spec.kk);
+            crate::ensure_shape!(x.shape() == (m, n), "x must be {m}x{n}");
+            crate::ensure_shape!(mu.len() == m, "mu must have length {m}");
+            crate::ensure_shape!(omega.shape() == (n, kk), "omega must be {n}x{kk}");
+
+            let mu32: Vec<f32> = mu.iter().map(|&v| v as f32).collect();
+            let outs = self.run_raw(
+                &spec.name,
+                &[
+                    (x.to_f32(), vec![m, n]),
+                    (mu32, vec![m]),
+                    (omega.to_f32(), vec![n, kk]),
+                ],
+            )?;
+            let u = Dense::from_f32(m, k, &outs[0]);
+            let s: Vec<f64> = outs[1].iter().map(|&v| v as f64).collect();
+            let v = Dense::from_f32(n, k, &outs[2]);
+            let mse = outs[3][0] as f64;
+            Ok(SrsvdOutput { factorization: Factorization { u, s, v }, mse })
         }
-        parts
-            .into_iter()
-            .map(|p| p.to_vec::<f32>().map_err(|e| xerr("to_vec", e)))
-            .collect()
-    }
 
-    /// Execute an `srsvd_scored` artifact: factorize `X − μ1ᵀ` with the
-    /// supplied Gaussian test matrix Ω (generated rust-side for seed
-    /// control).
-    pub fn run_srsvd(
-        &mut self,
-        spec: &ArtifactSpec,
-        x: &Dense,
-        mu: &[f64],
-        omega: &Dense,
-    ) -> Result<SrsvdOutput> {
-        let (m, n, k, kk) = (spec.m, spec.n, spec.k, spec.kk);
-        crate::ensure_shape!(x.shape() == (m, n), "x must be {m}x{n}");
-        crate::ensure_shape!(mu.len() == m, "mu must have length {m}");
-        crate::ensure_shape!(omega.shape() == (n, kk), "omega must be {n}x{kk}");
-
-        let mu32: Vec<f32> = mu.iter().map(|&v| v as f32).collect();
-        let outs = self.run_raw(
-            &spec.name,
-            &[
-                (x.to_f32(), vec![m, n]),
-                (mu32, vec![m]),
-                (omega.to_f32(), vec![n, kk]),
-            ],
-        )?;
-        let u = Dense::from_f32(m, k, &outs[0]);
-        let s: Vec<f64> = outs[1].iter().map(|&v| v as f64).collect();
-        let v = Dense::from_f32(n, k, &outs[2]);
-        let mse = outs[3][0] as f64;
-        Ok(SrsvdOutput { factorization: Factorization { u, s, v }, mse })
-    }
-
-    /// Execute a `row_mean` artifact.
-    pub fn run_row_mean(&mut self, spec: &ArtifactSpec, x: &Dense) -> Result<Vec<f64>> {
-        let (m, n) = (spec.m, spec.n);
-        crate::ensure_shape!(x.shape() == (m, n), "x must be {m}x{n}");
-        let outs = self.run_raw(&spec.name, &[(x.to_f32(), vec![m, n])])?;
-        Ok(outs[0].iter().map(|&v| v as f64).collect())
+        /// Execute a `row_mean` artifact.
+        pub fn run_row_mean(&mut self, spec: &ArtifactSpec, x: &Dense) -> Result<Vec<f64>> {
+            let (m, n) = (spec.m, spec.n);
+            crate::ensure_shape!(x.shape() == (m, n), "x must be {m}x{n}");
+            let outs = self.run_raw(&spec.name, &[(x.to_f32(), vec![m, n])])?;
+            Ok(outs[0].iter().map(|&v| v as f64).collect())
+        }
     }
 }
 
-#[cfg(test)]
+#[cfg(feature = "pjrt")]
+pub use pjrt_impl::Executor;
+
+#[cfg(not(feature = "pjrt"))]
+mod stub_impl {
+    use super::{ArtifactSpec, Dense, SrsvdOutput};
+    use crate::runtime::manifest::Manifest;
+    use crate::util::{Error, Result};
+
+    /// Uninhabited: a stub `Executor` can never be constructed, which
+    /// lets every method body type-check as `match self.void {}`.
+    enum Void {}
+
+    /// Stub executor for the default (no-`pjrt`) build: construction
+    /// always fails with a clear error and the coordinator runs
+    /// native-only.
+    pub struct Executor {
+        void: Void,
+    }
+
+    impl Executor {
+        pub fn new(dir: &std::path::Path) -> Result<Executor> {
+            Err(Error::Runtime(format!(
+                "PJRT runtime unavailable: srsvd was built without the `pjrt` \
+                 feature (artifact dir {}); artifact jobs run native-only",
+                dir.display()
+            )))
+        }
+
+        pub fn manifest(&self) -> &Manifest {
+            match self.void {}
+        }
+
+        pub fn ensure_compiled(&mut self, _name: &str) -> Result<f64> {
+            match self.void {}
+        }
+
+        pub fn run_raw(
+            &mut self,
+            _name: &str,
+            _inputs: &[(Vec<f32>, Vec<usize>)],
+        ) -> Result<Vec<Vec<f32>>> {
+            match self.void {}
+        }
+
+        pub fn run_srsvd(
+            &mut self,
+            _spec: &ArtifactSpec,
+            _x: &Dense,
+            _mu: &[f64],
+            _omega: &Dense,
+        ) -> Result<SrsvdOutput> {
+            match self.void {}
+        }
+
+        pub fn run_row_mean(&mut self, _spec: &ArtifactSpec, _x: &Dense) -> Result<Vec<f64>> {
+            match self.void {}
+        }
+    }
+}
+
+#[cfg(not(feature = "pjrt"))]
+pub use stub_impl::Executor;
+
+#[cfg(all(test, not(feature = "pjrt")))]
+mod stub_tests {
+    use super::*;
+
+    #[test]
+    fn stub_executor_reports_unavailable() {
+        let err = Executor::new(std::path::Path::new("artifacts")).unwrap_err();
+        let msg = format!("{err}");
+        assert!(msg.contains("pjrt"), "{msg}");
+    }
+}
+
+#[cfg(all(test, feature = "pjrt"))]
 mod tests {
     use super::*;
     use std::path::Path;

@@ -36,7 +36,8 @@ pub fn paired_t_test(a: &[f64], b: &[f64]) -> TTestResult {
     if sd == 0.0 {
         // All differences identical: p = 1 if exactly zero, else ~0.
         let p = if md == 0.0 { 1.0 } else { 0.0 };
-        return TTestResult { t: if md == 0.0 { 0.0 } else { f64::INFINITY }, df, p, mean_diff: md, n };
+        let t = if md == 0.0 { 0.0 } else { f64::INFINITY };
+        return TTestResult { t, df, p, mean_diff: md, n };
     }
     let t = md / (sd / (n as f64).sqrt());
     TTestResult { t, df, p: t_two_sided_p(t, df), mean_diff: md, n }

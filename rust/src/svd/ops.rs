@@ -4,6 +4,12 @@
 //! The abstraction is the point of the paper: the algorithm only ever
 //! multiplies against `X` (plus rank-1 corrections), so a sparse matrix
 //! stays sparse end-to-end.
+//!
+//! It is also the parallelism seam: both impls route through the
+//! pool-aware kernels in [`crate::linalg`] (panel-parallel GEMM,
+//! row-parallel CSR), so every S-RSVD stage — sampling, power
+//! iteration, projection — runs on the shared [`crate::parallel`] pool
+//! with thread-count-invariant (bit-identical) results.
 
 use crate::linalg::{gemm, Csr, Dense};
 

@@ -5,6 +5,11 @@
 //! exact), plus the *explicit centering* entry point that demonstrates
 //! what the shifted algorithm avoids: `factorize_centered` really
 //! subtracts the mean — densifying a sparse input — before factorizing.
+//!
+//! Like S-RSVD, every product runs through the pool-aware [`MatVecOps`]
+//! kernels, so the baseline is parallelized identically (same shared
+//! pool, same bit-exact thread-count invariance) and timing comparisons
+//! between the two algorithms stay apples-to-apples.
 
 use crate::linalg::{Csr, Dense};
 use crate::rng::Rng;

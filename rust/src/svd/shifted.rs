@@ -14,6 +14,12 @@
 //! downdate (Eqs. 7/8/10), dispatched through [`MatVecOps`] so sparse
 //! inputs stay sparse — the complexity drops from O(mnk) to
 //! O(nnz·k + (m+n)k²) (paper Eq. 15).
+//!
+//! All those products — the sampling pass, each power-iteration leg
+//! (L8-11) and the projection (L12) — execute on the shared
+//! [`crate::parallel`] pool via the pool-aware [`MatVecOps`] kernels.
+//! The parallel kernels partition output rows, so a factorization is
+//! bit-identical for every pool size: seeded runs replay exactly.
 
 use crate::linalg::{
     gemm, householder_qr, jacobi_svd, qr_rank1_update, sym_jacobi_eig, Dense, JacobiOpts,

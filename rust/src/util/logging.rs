@@ -1,62 +1,146 @@
-//! Minimal `log` backend writing to stderr with a level filter.
+//! Minimal leveled stderr logger — self-contained (the crate builds
+//! with zero external dependencies, so there is no `log` facade).
 //!
-//! The offline crate cache has `log` but no `env_logger`; this is the
-//! ~60-line subset we need: `SRSVD_LOG=debug cargo run ...`.
+//! Call sites use the crate-level macros:
+//!
+//! ```no_run
+//! srsvd::util::logging::init();
+//! srsvd::log_info!("coordinator: {} workers", 4);
+//! ```
+//!
+//! The level comes from `SRSVD_LOG` (`trace|debug|info|warn|error|off`,
+//! default `info`), parsed once by [`init`].
 
-use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 
-use log::{Level, LevelFilter, Metadata, Record};
+/// Log severity, most severe first.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Level {
+    Error = 0,
+    Warn = 1,
+    Info = 2,
+    Debug = 3,
+    Trace = 4,
+}
 
-struct StderrLogger;
-
-static LOGGER: StderrLogger = StderrLogger;
-static INSTALLED: AtomicBool = AtomicBool::new(false);
-
-impl log::Log for StderrLogger {
-    fn enabled(&self, metadata: &Metadata) -> bool {
-        metadata.level() <= log::max_level()
-    }
-
-    fn log(&self, record: &Record) {
-        if !self.enabled(record.metadata()) {
-            return;
-        }
-        let lvl = match record.level() {
+impl Level {
+    fn tag(self) -> &'static str {
+        match self {
             Level::Error => "ERROR",
             Level::Warn => "WARN ",
             Level::Info => "INFO ",
             Level::Debug => "DEBUG",
             Level::Trace => "TRACE",
-        };
-        eprintln!("[{lvl}] {}: {}", record.target(), record.args());
+        }
     }
-
-    fn flush(&self) {}
 }
 
-/// Install the stderr logger once; level from `SRSVD_LOG` (default `info`).
+/// Numeric max level (`Level as usize`); records at or below it are
+/// emitted. `OFF` disables everything. Pre-`init` default is Info.
+static MAX_LEVEL: AtomicUsize = AtomicUsize::new(Level::Info as usize);
+const OFF: usize = usize::MAX;
+static INSTALLED: AtomicBool = AtomicBool::new(false);
+
+/// Parse `SRSVD_LOG` once; idempotent.
 pub fn init() {
     if INSTALLED.swap(true, Ordering::SeqCst) {
         return;
     }
     let level = match std::env::var("SRSVD_LOG").as_deref() {
-        Ok("trace") => LevelFilter::Trace,
-        Ok("debug") => LevelFilter::Debug,
-        Ok("warn") => LevelFilter::Warn,
-        Ok("error") => LevelFilter::Error,
-        Ok("off") => LevelFilter::Off,
-        _ => LevelFilter::Info,
+        Ok("trace") => Level::Trace as usize,
+        Ok("debug") => Level::Debug as usize,
+        Ok("warn") => Level::Warn as usize,
+        Ok("error") => Level::Error as usize,
+        Ok("off") => OFF,
+        _ => Level::Info as usize,
     };
-    let _ = log::set_logger(&LOGGER);
-    log::set_max_level(level);
+    MAX_LEVEL.store(level, Ordering::SeqCst);
+}
+
+/// Whether a message at `level` would currently be emitted.
+pub fn enabled(level: Level) -> bool {
+    let max = MAX_LEVEL.load(Ordering::Relaxed);
+    max != OFF && (level as usize) <= max
+}
+
+/// Emit one record (used via the `log_*!` macros).
+pub fn log(level: Level, target: &str, args: std::fmt::Arguments<'_>) {
+    if enabled(level) {
+        eprintln!("[{}] {}: {}", level.tag(), target, args);
+    }
+}
+
+/// `log_error!("...")` — formatted record at Error level.
+#[macro_export]
+macro_rules! log_error {
+    ($($arg:tt)*) => {
+        $crate::util::logging::log(
+            $crate::util::logging::Level::Error,
+            module_path!(),
+            format_args!($($arg)*),
+        )
+    };
+}
+
+/// `log_warn!("...")` — formatted record at Warn level.
+#[macro_export]
+macro_rules! log_warn {
+    ($($arg:tt)*) => {
+        $crate::util::logging::log(
+            $crate::util::logging::Level::Warn,
+            module_path!(),
+            format_args!($($arg)*),
+        )
+    };
+}
+
+/// `log_info!("...")` — formatted record at Info level.
+#[macro_export]
+macro_rules! log_info {
+    ($($arg:tt)*) => {
+        $crate::util::logging::log(
+            $crate::util::logging::Level::Info,
+            module_path!(),
+            format_args!($($arg)*),
+        )
+    };
+}
+
+/// `log_debug!("...")` — formatted record at Debug level.
+#[macro_export]
+macro_rules! log_debug {
+    ($($arg:tt)*) => {
+        $crate::util::logging::log(
+            $crate::util::logging::Level::Debug,
+            module_path!(),
+            format_args!($($arg)*),
+        )
+    };
+}
+
+/// `log_trace!("...")` — formatted record at Trace level.
+#[macro_export]
+macro_rules! log_trace {
+    ($($arg:tt)*) => {
+        $crate::util::logging::log(
+            $crate::util::logging::Level::Trace,
+            module_path!(),
+            format_args!($($arg)*),
+        )
+    };
 }
 
 #[cfg(test)]
 mod tests {
+    use super::*;
+
     #[test]
-    fn init_is_idempotent() {
-        super::init();
-        super::init();
-        log::info!("logging smoke");
+    fn init_is_idempotent_and_macros_format() {
+        init();
+        init();
+        crate::log_info!("logging smoke {}", 42);
+        crate::log_debug!("hidden at default level");
+        assert!(enabled(Level::Error));
+        assert!(Level::Error < Level::Trace);
     }
 }

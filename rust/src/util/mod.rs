@@ -4,27 +4,50 @@ pub mod json;
 pub mod logging;
 pub mod timer;
 
-use thiserror::Error;
-
 /// Library-wide error type.
-#[derive(Debug, Error)]
+///
+/// Display/Error are hand-written: the crate builds with zero external
+/// dependencies (no `thiserror` in the offline environment).
+#[derive(Debug)]
 pub enum Error {
-    #[error("shape mismatch: {0}")]
     Shape(String),
-    #[error("invalid argument: {0}")]
     Invalid(String),
-    #[error("numerical failure: {0}")]
     Numerical(String),
-    #[error("artifact error: {0}")]
     Artifact(String),
-    #[error("runtime error: {0}")]
     Runtime(String),
-    #[error("service error: {0}")]
     Service(String),
-    #[error("io error: {0}")]
-    Io(#[from] std::io::Error),
-    #[error("json error: {0}")]
+    Io(std::io::Error),
     Json(String),
+}
+
+impl std::fmt::Display for Error {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            Error::Shape(m) => write!(f, "shape mismatch: {m}"),
+            Error::Invalid(m) => write!(f, "invalid argument: {m}"),
+            Error::Numerical(m) => write!(f, "numerical failure: {m}"),
+            Error::Artifact(m) => write!(f, "artifact error: {m}"),
+            Error::Runtime(m) => write!(f, "runtime error: {m}"),
+            Error::Service(m) => write!(f, "service error: {m}"),
+            Error::Io(e) => write!(f, "io error: {e}"),
+            Error::Json(m) => write!(f, "json error: {m}"),
+        }
+    }
+}
+
+impl std::error::Error for Error {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            Error::Io(e) => Some(e),
+            _ => None,
+        }
+    }
+}
+
+impl From<std::io::Error> for Error {
+    fn from(e: std::io::Error) -> Error {
+        Error::Io(e)
+    }
 }
 
 pub type Result<T> = std::result::Result<T, Error>;

@@ -1,0 +1,157 @@
+//! Determinism under parallelism: the whole point of the chunked pool
+//! design is that results are **bit-identical** for every pool size,
+//! because every parallel kernel partitions output rows and each row is
+//! accumulated in the exact serial order. These tests pin that contract
+//! at the `Factorization` level (u, s, v compared bit-for-bit) for pool
+//! sizes 1, 2 and 8, on both dense and CSR inputs, plus the coordinator
+//! path end-to-end.
+
+use std::sync::Arc;
+
+use srsvd::coordinator::{
+    Coordinator, CoordinatorConfig, EnginePreference, JobSpec, MatrixInput, ShiftSpec,
+};
+use srsvd::linalg::{Csr, Dense};
+use srsvd::parallel::{with_pool, ThreadPool};
+use srsvd::rng::{Rng, Xoshiro256pp};
+use srsvd::svd::{Factorization, ShiftedRsvd, SvdConfig};
+
+fn dense_bits(x: &Dense) -> Vec<u64> {
+    x.data().iter().map(|v| v.to_bits()).collect()
+}
+
+fn fact_bits(f: &Factorization) -> (Vec<u64>, Vec<u64>, Vec<u64>) {
+    (
+        dense_bits(&f.u),
+        f.s.iter().map(|v| v.to_bits()).collect(),
+        dense_bits(&f.v),
+    )
+}
+
+fn assert_identical(a: &Factorization, b: &Factorization, what: &str) {
+    let (au, as_, av) = fact_bits(a);
+    let (bu, bs, bv) = fact_bits(b);
+    assert_eq!(au, bu, "{what}: u bytes differ");
+    assert_eq!(as_, bs, "{what}: s bytes differ");
+    assert_eq!(av, bv, "{what}: v bytes differ");
+}
+
+/// Big enough that the internal products clear the parallel threshold
+/// (m·n·K ≈ 150·900·24 ≈ 3.2M flops for the sampling pass alone).
+fn dense_input() -> Dense {
+    let mut rng = Xoshiro256pp::seed_from_u64(0xD15E);
+    Dense::from_fn(150, 900, |_, _| rng.next_uniform())
+}
+
+fn sparse_input() -> Csr {
+    let mut rng = Xoshiro256pp::seed_from_u64(0x5BA6);
+    Csr::random(500, 4000, 0.06, &mut rng, |r| r.next_uniform() + 0.1)
+}
+
+#[test]
+fn dense_factorization_identical_for_pool_sizes_1_2_8() {
+    let x = dense_input();
+    let cfg = SvdConfig { k: 12, oversample: 12, power_iters: 1, ..Default::default() };
+    let run = |threads: usize| -> Factorization {
+        let pool = Arc::new(ThreadPool::new(threads));
+        with_pool(&pool, || {
+            let mut rng = Xoshiro256pp::seed_from_u64(42);
+            ShiftedRsvd::new(cfg)
+                .factorize_mean_centered(&x, &mut rng)
+                .expect("factorize")
+        })
+    };
+    let base = run(1);
+    for threads in [2, 8] {
+        let got = run(threads);
+        assert_identical(&base, &got, &format!("dense, {threads} threads"));
+    }
+}
+
+#[test]
+fn sparse_factorization_identical_for_pool_sizes_1_2_8() {
+    let x = sparse_input();
+    let cfg = SvdConfig { k: 10, oversample: 10, power_iters: 1, ..Default::default() };
+    let run = |threads: usize| -> Factorization {
+        let pool = Arc::new(ThreadPool::new(threads));
+        with_pool(&pool, || {
+            let mut rng = Xoshiro256pp::seed_from_u64(43);
+            ShiftedRsvd::new(cfg)
+                .factorize_mean_centered(&x, &mut rng)
+                .expect("factorize")
+        })
+    };
+    let base = run(1);
+    for threads in [2, 8] {
+        let got = run(threads);
+        assert_identical(&base, &got, &format!("sparse, {threads} threads"));
+    }
+}
+
+#[test]
+fn raw_kernels_identical_across_pools_on_awkward_shapes() {
+    // Odd, non-chunk-aligned shapes; sizes above the parallel threshold.
+    let mut rng = Xoshiro256pp::seed_from_u64(7);
+    let a = Dense::gaussian(131, 517, &mut rng);
+    let b = Dense::gaussian(517, 67, &mut rng);
+    let bt = Dense::gaussian(131, 67, &mut rng);
+    let u: Vec<f64> = (0..131).map(|_| rng.next_gaussian()).collect();
+    let v: Vec<f64> = (0..67).map(|_| rng.next_gaussian()).collect();
+
+    let run = |threads: usize| -> Vec<Vec<u64>> {
+        let pool = Arc::new(ThreadPool::new(threads));
+        with_pool(&pool, || {
+            vec![
+                dense_bits(&srsvd::linalg::matmul(&a, &b)),
+                dense_bits(&srsvd::linalg::matmul_rank1(&a, &b, &u, &v)),
+                dense_bits(&srsvd::linalg::gemm::tmatmul(&a, &bt)),
+            ]
+        })
+    };
+    let base = run(1);
+    for threads in [2, 3, 8] {
+        assert_eq!(base, run(threads), "{threads} threads");
+    }
+}
+
+/// End-to-end through the service: two coordinators with different
+/// shared-pool sizes must produce byte-identical factorizations for the
+/// same seeded job.
+#[test]
+fn coordinator_factorizations_identical_across_pool_sizes() {
+    let job = || {
+        let mut rng = Xoshiro256pp::seed_from_u64(0xC0DE);
+        JobSpec {
+            input: MatrixInput::Dense(Dense::from_fn(120, 700, |_, _| rng.next_uniform())),
+            config: SvdConfig { k: 8, oversample: 8, power_iters: 1, ..Default::default() },
+            shift: ShiftSpec::MeanCenter,
+            engine: EnginePreference::Native,
+            seed: 99,
+            score: true,
+        }
+    };
+    let run = |pool_threads: usize| {
+        let coord = Coordinator::start(CoordinatorConfig {
+            native_workers: 2,
+            queue_capacity: 8,
+            artifact_dir: None,
+            pool_threads: Some(pool_threads),
+        })
+        .expect("coordinator");
+        let r = coord.submit_blocking(job()).expect("submit");
+        let out = r.outcome.expect("job");
+        coord.shutdown();
+        out
+    };
+    let base = run(1);
+    for threads in [2, 8] {
+        let got = run(threads);
+        assert_identical(
+            &base.factorization,
+            &got.factorization,
+            &format!("coordinator, pool {threads}"),
+        );
+        // MSE is computed from identical factors — must match exactly.
+        assert_eq!(base.mse, got.mse);
+    }
+}
