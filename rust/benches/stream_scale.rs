@@ -1,0 +1,121 @@
+//! Streaming-scale bench: in-memory vs out-of-core factorization
+//! throughput per block size, emitting `BENCH_stream.json` for the perf
+//! trajectory (uploaded as a CI artifact next to `BENCH_gemm.json`).
+//!
+//! Three legs per block size:
+//!   * `dense`      — the in-memory [`srsvd::linalg::Dense`] baseline;
+//!   * `stream-mem` — `Streamed<InMemorySource>`: pure sweep overhead;
+//!   * `stream-file`— `Streamed<FileSource>`: sweep + disk IO.
+//!
+//! Every streamed run is checked byte-identical to the dense baseline
+//! (the module contract) before its timing is reported.
+//!
+//! Run: `cargo bench --bench stream_scale`.
+//! Env: `SRSVD_BENCH_QUICK=1` (CI smoke), `SRSVD_BENCH_STREAM_JSON=<path>`
+//! (default `BENCH_stream.json`).
+
+use srsvd::bench::{Bencher, Table};
+use srsvd::data::Distribution;
+use srsvd::linalg::stream::{
+    spill_to_file, GeneratorSource, InMemorySource, MatrixSource, Streamed,
+};
+use srsvd::rng::Xoshiro256pp;
+use srsvd::svd::{Factorization, ShiftedRsvd, SvdConfig};
+use srsvd::util::json::Json;
+use srsvd::util::timer::fmt_duration;
+
+fn identical(a: &Factorization, b: &Factorization) -> bool {
+    a.s.iter().zip(&b.s).all(|(x, y)| x.to_bits() == y.to_bits())
+        && a.u.data().iter().zip(b.u.data()).all(|(x, y)| x.to_bits() == y.to_bits())
+        && a.v.data().iter().zip(b.v.data()).all(|(x, y)| x.to_bits() == y.to_bits())
+}
+
+fn main() {
+    let b = Bencher::from_env();
+    let quick = std::env::var("SRSVD_BENCH_QUICK").as_deref() == Ok("1");
+    let (m, n, k) = if quick { (600, 500, 6) } else { (2400, 1600, 10) };
+    let block_sizes: &[usize] = if quick { &[64, 600] } else { &[64, 256, 1024, 2400] };
+    let cfg = SvdConfig::paper(k).with_power(1);
+    let seed = 42u64;
+
+    let gen = GeneratorSource::new(m, n, Distribution::Uniform, seed).unwrap();
+    let dense = gen.materialize().unwrap();
+    let path = std::env::temp_dir().join(format!("srsvd_stream_scale_{m}x{n}.bin"));
+    let file = spill_to_file(&gen, &path, 256).unwrap();
+
+    let factorize = |x: &dyn srsvd::svd::MatVecOps| {
+        let mut rng = Xoshiro256pp::seed_from_u64(seed ^ 0xFA);
+        ShiftedRsvd::new(cfg).factorize_mean_centered(x, &mut rng).unwrap()
+    };
+
+    println!("== stream scale: {m}x{n} uniform, k={k} q=1 ==");
+    let baseline = factorize(&dense);
+    let s_dense = b.run("dense in-memory", || factorize(&dense));
+
+    let mut rows: Vec<Json> = Vec::new();
+    rows.push(Json::obj(vec![
+        ("leg", Json::str("dense")),
+        ("block_rows", Json::num(m as f64)),
+        ("mean_s", Json::num(s_dense.mean_s)),
+        ("p95_s", Json::num(s_dense.p95_s)),
+        ("slowdown_vs_dense", Json::num(1.0)),
+        ("bit_identical", Json::Bool(true)),
+    ]));
+
+    let mut t = Table::new(&["leg", "block_rows", "time", "vs dense", "bit-identical"]);
+    t.row(&[
+        "dense".into(),
+        m.to_string(),
+        fmt_duration(s_dense.mean_s),
+        "1.00x".into(),
+        "-".into(),
+    ]);
+
+    let mem_src = InMemorySource::new(dense.clone());
+    for &bl in block_sizes {
+        let bl = bl.min(m);
+        let mem = Streamed::with_block_rows(&mem_src, bl);
+        let fil = Streamed::with_block_rows(&file, bl);
+        let legs: [(&str, &dyn srsvd::svd::MatVecOps); 2] =
+            [("stream-mem", &mem), ("stream-file", &fil)];
+        for (leg, x) in legs {
+            let fact_now = factorize(x);
+            let ok = identical(&baseline, &fact_now);
+            assert!(ok, "{leg} bl={bl}: streamed factors diverged from dense");
+            let stats = b.run(&format!("{leg} bl={bl}"), || factorize(x));
+            let slowdown = stats.mean_s / s_dense.mean_s.max(1e-12);
+            t.row(&[
+                leg.into(),
+                bl.to_string(),
+                fmt_duration(stats.mean_s),
+                format!("{slowdown:.2}x"),
+                ok.to_string(),
+            ]);
+            rows.push(Json::obj(vec![
+                ("leg", Json::str(leg)),
+                ("block_rows", Json::num(bl as f64)),
+                ("mean_s", Json::num(stats.mean_s)),
+                ("p95_s", Json::num(stats.p95_s)),
+                ("slowdown_vs_dense", Json::num(slowdown)),
+                ("bit_identical", Json::Bool(ok)),
+            ]));
+        }
+    }
+    print!("{}", t.render());
+
+    let report = Json::obj(vec![
+        ("bench", Json::str("stream_scale")),
+        ("quick", Json::Bool(quick)),
+        ("m", Json::num(m as f64)),
+        ("n", Json::num(n as f64)),
+        ("k", Json::num(k as f64)),
+        ("cases", Json::Arr(rows)),
+    ]);
+    let json_path = std::env::var("SRSVD_BENCH_STREAM_JSON")
+        .unwrap_or_else(|_| "BENCH_stream.json".into());
+    match std::fs::write(&json_path, report.to_string_pretty()) {
+        Ok(()) => println!("\nwrote {json_path}"),
+        Err(e) => eprintln!("\ncould not write {json_path}: {e}"),
+    }
+    let _ = std::fs::remove_file(&path);
+}

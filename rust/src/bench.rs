@@ -19,11 +19,17 @@ use crate::stats::{mean, median, quantile, std_dev};
 /// Timing statistics for one benchmark case.
 #[derive(Debug, Clone)]
 pub struct BenchStats {
+    /// Case name as passed to [`Bencher::run`].
     pub name: String,
+    /// Measured iterations (after warmup).
     pub iters: usize,
+    /// Mean seconds per iteration.
     pub mean_s: f64,
+    /// Median seconds per iteration.
     pub median_s: f64,
+    /// 95th-percentile seconds per iteration.
     pub p95_s: f64,
+    /// Standard deviation of the per-iteration seconds.
     pub std_s: f64,
 }
 
@@ -115,6 +121,7 @@ pub struct Table {
 }
 
 impl Table {
+    /// Start a table with the given column headers.
     pub fn new(header: &[&str]) -> Table {
         Table {
             header: header.iter().map(|s| s.to_string()).collect(),
@@ -122,6 +129,7 @@ impl Table {
         }
     }
 
+    /// Append a row (must match the header arity).
     pub fn row(&mut self, cells: &[String]) {
         assert_eq!(cells.len(), self.header.len(), "table arity");
         self.rows.push(cells.to_vec());

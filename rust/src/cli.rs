@@ -11,30 +11,37 @@ use crate::util::{Error, Result};
 /// One declared option.
 #[derive(Debug, Clone)]
 pub struct OptSpec {
+    /// Option name (matched as `--name`).
     pub name: &'static str,
+    /// Help text shown in `--help` output.
     pub help: &'static str,
     /// `true` for boolean flags (no value).
     pub is_flag: bool,
+    /// Default value; `None` makes the option required.
     pub default: Option<&'static str>,
 }
 
 /// A declarative argument parser.
 #[derive(Debug, Clone, Default)]
 pub struct ArgSpec {
+    /// One-line tool description shown at the top of `--help`.
     pub about: &'static str,
     opts: Vec<OptSpec>,
 }
 
 impl ArgSpec {
+    /// Start a spec with the given description.
     pub fn new(about: &'static str) -> ArgSpec {
         ArgSpec { about, opts: Vec::new() }
     }
 
+    /// Declare a boolean flag (`--name`, no value).
     pub fn flag(mut self, name: &'static str, help: &'static str) -> Self {
         self.opts.push(OptSpec { name, help, is_flag: true, default: None });
         self
     }
 
+    /// Declare a valued option with a default.
     pub fn opt(mut self, name: &'static str, default: &'static str, help: &'static str) -> Self {
         self.opts
             .push(OptSpec { name, help, is_flag: false, default: Some(default) });
@@ -47,6 +54,7 @@ impl ArgSpec {
         self
     }
 
+    /// Render the `--help` text for `prog`.
     pub fn usage(&self, prog: &str) -> String {
         let mut out = format!("{}\n\nUSAGE: {prog} [OPTIONS]\n\nOPTIONS:\n", self.about);
         for o in &self.opts {
@@ -129,17 +137,22 @@ impl ArgSpec {
 pub struct Args {
     values: BTreeMap<String, String>,
     flags: Vec<String>,
+    /// Positional (non-option) arguments, in order.
     pub positional: Vec<String>,
+    /// `true` when `--help`/`-h` was seen (parsing short-circuits).
     pub help: bool,
 }
 
 impl Args {
+    /// Raw string value of a declared option (panics on undeclared names
+    /// — that is a programming error in the spec, not user input).
     pub fn get(&self, name: &str) -> &str {
         self.values
             .get(name)
             .unwrap_or_else(|| panic!("option {name} not declared"))
     }
 
+    /// Parse an option's value as `usize`.
     pub fn get_usize(&self, name: &str) -> Result<usize> {
         self.get(name)
             .parse()
@@ -148,6 +161,7 @@ impl Args {
             })
     }
 
+    /// Parse an option's value as `u64`.
     pub fn get_u64(&self, name: &str) -> Result<u64> {
         self.get(name)
             .parse()
@@ -156,6 +170,7 @@ impl Args {
             })
     }
 
+    /// Parse an option's value as `f64`.
     pub fn get_f64(&self, name: &str) -> Result<f64> {
         self.get(name)
             .parse()
@@ -164,6 +179,7 @@ impl Args {
             })
     }
 
+    /// Whether a declared flag was present.
     pub fn has_flag(&self, name: &str) -> bool {
         self.flags.iter().any(|f| f == name)
     }

@@ -16,6 +16,10 @@
 //! threads = 8              # shared linalg pool; 0/unset = auto
 //!                          # (SRSVD_THREADS env overrides auto-sizing)
 //!
+//! [stream]
+//! block_rows = 0           # rows per resident block; 0 = derive from budget
+//! budget_mb  = 64          # resident-block budget (MiB) when block_rows = 0
+//!
 //! [svd]
 //! k           = 10
 //! oversample  = 10
@@ -28,6 +32,7 @@ use std::collections::BTreeMap;
 use std::path::PathBuf;
 
 use crate::coordinator::CoordinatorConfig;
+use crate::linalg::stream::StreamConfig;
 use crate::svd::{BasisMethod, SmallSvdMethod, SvdConfig};
 use crate::util::{Error, Result};
 
@@ -71,10 +76,12 @@ impl RawConfig {
         Ok(out)
     }
 
+    /// Parse the file at `path`.
     pub fn load(path: &std::path::Path) -> Result<RawConfig> {
         RawConfig::parse(&std::fs::read_to_string(path)?)
     }
 
+    /// Raw string value of `section.key`, if present.
     pub fn get(&self, section: &str, key: &str) -> Option<&str> {
         self.sections.get(section)?.get(key).map(|s| s.as_str())
     }
@@ -110,6 +117,19 @@ impl RawConfig {
         Ok(cfg)
     }
 
+    /// Build the out-of-core streaming config (defaults where unset):
+    /// `[stream] block_rows` / `budget_mb`.
+    pub fn stream(&self) -> Result<StreamConfig> {
+        let mut cfg = StreamConfig::default();
+        if let Some(b) = self.get_usize("stream", "block_rows")? {
+            cfg.block_rows = b;
+        }
+        if let Some(mb) = self.get_usize("stream", "budget_mb")? {
+            cfg.budget_mb = mb.max(1);
+        }
+        Ok(cfg)
+    }
+
     /// Build the SVD config (defaults where unset).
     pub fn svd(&self) -> Result<SvdConfig> {
         let mut cfg = SvdConfig::default();
@@ -132,6 +152,7 @@ impl RawConfig {
     }
 }
 
+/// Parse a basis-method name (`direct | qr-update-paper | qr-update-exact`).
 pub fn parse_basis(s: &str) -> Result<BasisMethod> {
     match s {
         "direct" => Ok(BasisMethod::Direct),
@@ -143,6 +164,7 @@ pub fn parse_basis(s: &str) -> Result<BasisMethod> {
     }
 }
 
+/// Parse a small-SVD backend name (`jacobi | gram`).
 pub fn parse_small_svd(s: &str) -> Result<SmallSvdMethod> {
     match s {
         "jacobi" => Ok(SmallSvdMethod::Jacobi),
@@ -210,6 +232,20 @@ small_svd = gram
         // Non-integer errors.
         let raw = RawConfig::parse("[parallel]\nthreads = many\n").unwrap();
         assert!(raw.coordinator().is_err());
+    }
+
+    #[test]
+    fn stream_section_knobs() {
+        let raw = RawConfig::parse("[stream]\nblock_rows = 512\nbudget_mb = 16\n").unwrap();
+        let s = raw.stream().unwrap();
+        assert_eq!(s.block_rows, 512);
+        assert_eq!(s.budget_mb, 16);
+        // Defaults when missing.
+        let s = RawConfig::parse("").unwrap().stream().unwrap();
+        assert_eq!(s, StreamConfig::default());
+        // Non-integer errors.
+        let raw = RawConfig::parse("[stream]\nblock_rows = lots\n").unwrap();
+        assert!(raw.stream().is_err());
     }
 
     #[test]

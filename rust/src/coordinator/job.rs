@@ -1,5 +1,6 @@
 //! Job types for the factorization service.
 
+use crate::linalg::stream::{MatrixSource, SharedSource, StreamConfig, Streamed};
 use crate::linalg::{Csr, Dense};
 use crate::svd::{Factorization, SvdConfig, SvdEngine};
 use crate::util::Result;
@@ -17,29 +18,48 @@ impl std::fmt::Display for JobId {
 /// The data matrix of a job.
 #[derive(Debug, Clone)]
 pub enum MatrixInput {
+    /// A resident dense matrix.
     Dense(Dense),
+    /// A resident CSR sparse matrix.
     Sparse(Csr),
+    /// An out-of-core source swept block-at-a-time under a memory
+    /// budget (see [`crate::linalg::stream`]); always runs native.
+    Streamed(Streamed<SharedSource>),
 }
 
 impl MatrixInput {
+    /// Wrap any [`MatrixSource`] as a streamed, type-erased job input
+    /// under the given memory policy.
+    pub fn streamed<S: MatrixSource + 'static>(source: S, config: &StreamConfig) -> MatrixInput {
+        let shared: SharedSource = std::sync::Arc::new(source);
+        MatrixInput::Streamed(Streamed::new(shared, config))
+    }
+
+    /// Matrix dimensions `(m, n)`.
     pub fn shape(&self) -> (usize, usize) {
         match self {
             MatrixInput::Dense(x) => x.shape(),
             MatrixInput::Sparse(x) => x.shape(),
+            MatrixInput::Streamed(x) => crate::svd::MatVecOps::shape(x),
         }
     }
 
+    /// Stored entry count: m·n for dense and streamed (logical size —
+    /// a streamed input keeps only one block resident), nnz for sparse.
     pub fn stored_entries(&self) -> usize {
         match self {
             MatrixInput::Dense(x) => x.rows() * x.cols(),
             MatrixInput::Sparse(x) => x.nnz(),
+            MatrixInput::Streamed(x) => crate::svd::MatVecOps::stored_entries(x),
         }
     }
 
+    /// The operator view every engine consumes.
     pub fn as_ops(&self) -> &dyn crate::svd::MatVecOps {
         match self {
             MatrixInput::Dense(x) => x,
             MatrixInput::Sparse(x) => x,
+            MatrixInput::Streamed(x) => x,
         }
     }
 }
@@ -56,14 +76,13 @@ pub enum ShiftSpec {
 }
 
 impl ShiftSpec {
+    /// Concrete μ for `input`: zeros, its row means (one streaming pass
+    /// for [`MatrixInput::Streamed`]), or the supplied vector.
     pub fn resolve(&self, input: &MatrixInput) -> Result<Vec<f64>> {
         let (m, _) = input.shape();
         match self {
             ShiftSpec::None => Ok(vec![0.0; m]),
-            ShiftSpec::MeanCenter => Ok(match input {
-                MatrixInput::Dense(x) => x.row_means(),
-                MatrixInput::Sparse(x) => x.row_means(),
-            }),
+            ShiftSpec::MeanCenter => Ok(input.as_ops().row_means()),
             ShiftSpec::Vector(v) => {
                 crate::ensure!(v.len() == m, "shift vector length {} != m {}", v.len(), m);
                 Ok(v.clone())
@@ -86,9 +105,13 @@ pub enum EnginePreference {
 /// A factorization request.
 #[derive(Debug, Clone)]
 pub struct JobSpec {
+    /// The data matrix (dense, sparse, or streamed).
     pub input: MatrixInput,
+    /// Rank / oversampling / power-iteration configuration.
     pub config: SvdConfig,
+    /// What to shift by (Alg. 1's μ).
     pub shift: ShiftSpec,
+    /// Engine routing preference.
     pub engine: EnginePreference,
     /// Seed for Ω (deterministic replay).
     pub seed: u64,
@@ -113,6 +136,7 @@ impl JobSpec {
 /// Successful job output.
 #[derive(Debug, Clone)]
 pub struct JobOutput {
+    /// The rank-k factors.
     pub factorization: Factorization,
     /// The paper's MSE (present when `score` was requested).
     pub mse: Option<f64>,
@@ -121,7 +145,9 @@ pub struct JobOutput {
 /// Completed job envelope.
 #[derive(Debug)]
 pub struct JobResult {
+    /// The identifier handed out at submit time.
     pub id: JobId,
+    /// The factors (or the error that stopped them).
     pub outcome: Result<JobOutput>,
     /// Engine that actually ran the job.
     pub engine: SvdEngine,

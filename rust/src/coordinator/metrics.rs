@@ -5,11 +5,17 @@ use std::sync::atomic::{AtomicU64, Ordering};
 /// Shared counters, updated by workers and the submitter.
 #[derive(Debug, Default)]
 pub struct Metrics {
+    /// Jobs accepted by `submit`/`try_submit`.
     pub submitted: AtomicU64,
+    /// Jobs that finished executing (ok or failed).
     pub completed: AtomicU64,
+    /// Jobs whose outcome was an error.
     pub failed: AtomicU64,
+    /// Jobs routed to the native engine.
     pub native_jobs: AtomicU64,
+    /// Jobs routed to the artifact engine.
     pub artifact_jobs: AtomicU64,
+    /// Jobs currently queued (submitted − picked up).
     pub queue_depth: AtomicU64,
     /// Total execution time, nanoseconds.
     pub exec_ns: AtomicU64,
@@ -20,6 +26,7 @@ pub struct Metrics {
 }
 
 impl Metrics {
+    /// Record one executed job's timings and outcome.
     pub fn record_exec(&self, exec_s: f64, queue_s: f64, ok: bool) {
         self.completed.fetch_add(1, Ordering::Relaxed);
         if !ok {
@@ -69,14 +76,23 @@ impl Metrics {
 /// linalg pool (filled in by [`crate::coordinator::Coordinator::metrics`]).
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct MetricsSnapshot {
+    /// Jobs accepted by `submit`/`try_submit`.
     pub submitted: u64,
+    /// Jobs that finished executing (ok or failed).
     pub completed: u64,
+    /// Jobs whose outcome was an error.
     pub failed: u64,
+    /// Jobs routed to the native engine.
     pub native_jobs: u64,
+    /// Jobs routed to the artifact engine.
     pub artifact_jobs: u64,
+    /// Jobs currently queued.
     pub queue_depth: u64,
+    /// Mean seconds spent executing, over completed jobs.
     pub mean_exec_s: f64,
+    /// Mean seconds spent queued, over completed jobs.
     pub mean_queue_s: f64,
+    /// Longest single-job execution, seconds.
     pub max_exec_s: f64,
     /// Size of the shared linalg thread pool.
     pub pool_threads: usize,

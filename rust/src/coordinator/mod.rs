@@ -6,7 +6,7 @@
 //! the executor is confined to its actor). Jobs are routed at submit
 //! time ([`router`]): dense, grid-shaped jobs go to the compiled
 //! artifact; everything else — arbitrary shapes, sparse inputs,
-//! ablation variants — runs natively.
+//! streamed (out-of-core) sources, ablation variants — runs natively.
 //!
 //! Backpressure: both queues are bounded (`queue_capacity`); `submit`
 //! blocks when full, `try_submit` returns `Error::Service` instead.
@@ -96,6 +96,7 @@ struct WorkItem {
 
 /// Handle to an in-flight job.
 pub struct JobHandle {
+    /// The identifier assigned at submit time.
     pub id: JobId,
     rx: Receiver<JobResult>,
 }
@@ -218,6 +219,7 @@ impl Coordinator {
         s
     }
 
+    /// The loaded artifact manifest, when the artifact engine is on.
     pub fn manifest(&self) -> Option<&Manifest> {
         self.manifest.as_ref()
     }
@@ -309,7 +311,17 @@ fn native_loop(rx: Arc<Mutex<Receiver<WorkItem>>>, metrics: Arc<Metrics>, pool: 
         metrics.queue_depth.fetch_sub(1, Ordering::Relaxed);
         let queue_s = item.enqueued.elapsed().as_secs_f64();
         let t = Instant::now();
-        let outcome = native_worker::execute_native(&item.spec);
+        // Panic isolation: a panicking job (e.g. a streamed source whose
+        // backing file fails mid-sweep) must fail *that job*, not kill
+        // the worker and strand everything queued behind it.
+        let outcome = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            native_worker::execute_native(&item.spec)
+        }))
+        .unwrap_or_else(|payload| {
+            let msg = panic_message(payload.as_ref());
+            crate::log_error!("{}: job panicked: {msg}", item.id);
+            Err(Error::Service(format!("job panicked: {msg}")))
+        });
         let exec_s = t.elapsed().as_secs_f64();
         metrics.record_exec(exec_s, queue_s, outcome.is_ok());
         let _ = item.reply.send(JobResult {
@@ -319,6 +331,17 @@ fn native_loop(rx: Arc<Mutex<Receiver<WorkItem>>>, metrics: Arc<Metrics>, pool: 
             exec_s,
             queue_s,
         });
+    }
+}
+
+/// Best-effort text of a caught panic payload.
+fn panic_message(payload: &(dyn std::any::Any + Send)) -> String {
+    if let Some(s) = payload.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else if let Some(s) = payload.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "non-string panic payload".to_string()
     }
 }
 

@@ -29,7 +29,9 @@ pub fn execute_native(spec: &JobSpec) -> Result<JobOutput> {
 
 /// The paper's MSE metric, dispatched by input kind: dense computes the
 /// residual directly; sparse uses the O(nnz·k) expansion that never
-/// densifies.
+/// densifies; streamed uses the generic [`crate::svd::shifted_low_rank_mse`]
+/// expansion, which touches the source in two block sweeps and never
+/// materializes it.
 fn score(spec: &JobSpec, mu: &[f64], fact: &crate::svd::Factorization) -> f64 {
     match &spec.input {
         MatrixInput::Dense(x) => {
@@ -37,6 +39,9 @@ fn score(spec: &JobSpec, mu: &[f64], fact: &crate::svd::Factorization) -> f64 {
             fact.mse_against(&xbar)
         }
         MatrixInput::Sparse(x) => x.shifted_mse(mu, &fact.u, &fact.s, &fact.v),
+        MatrixInput::Streamed(x) => {
+            crate::svd::shifted_low_rank_mse(x, mu, &fact.u, &fact.s, &fact.v)
+        }
     }
 }
 

@@ -1,12 +1,13 @@
 //! Routing: decide which engine executes a job.
 //!
-//! A job can run on a compiled artifact only if (a) the input is dense
-//! (artifacts take a dense f32 operand), (b) the manifest has an
-//! `srsvd_scored` entry whose static shape/rank/power match the job
-//! config exactly, and (c) the job uses the default Direct basis — the
-//! AOT pipeline implements the fused (exact) shift. Everything else
-//! runs on the native engine, which handles arbitrary shapes and
-//! sparse inputs.
+//! A job can run on a compiled artifact only if (a) the input is a
+//! resident dense matrix (artifacts take a dense f32 operand), (b) the
+//! manifest has an `srsvd_scored` entry whose static shape/rank/power
+//! match the job config exactly, and (c) the job uses the default
+//! Direct basis — the AOT pipeline implements the fused (exact) shift.
+//! Everything else — arbitrary shapes, sparse inputs, ablation
+//! variants, and streamed (out-of-core) inputs, whose matrices never
+//! exist as a single operand — runs on the native engine.
 
 use crate::runtime::Manifest;
 use crate::svd::{BasisMethod, SvdEngine};
@@ -17,11 +18,17 @@ use super::job::{EnginePreference, JobSpec, MatrixInput};
 /// Route decision with the artifact name when applicable.
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub enum Route {
+    /// Run on the native rust engine.
     Native,
-    Artifact { name: String },
+    /// Run the named compiled artifact on the PJRT runtime.
+    Artifact {
+        /// Artifact name in the manifest.
+        name: String,
+    },
 }
 
 impl Route {
+    /// The engine this route executes on.
     pub fn engine(&self) -> SvdEngine {
         match self {
             Route::Native => SvdEngine::Native,
@@ -134,6 +141,33 @@ mod tests {
             score: false,
         };
         assert_eq!(route(&spec, Some(&m)).unwrap(), Route::Native);
+    }
+
+    #[test]
+    fn streamed_inputs_never_route_to_artifacts() {
+        // Even an artifact-grid shape routes native when streamed — the
+        // matrix never exists as a single dense operand.
+        let src = crate::linalg::GeneratorSource::new(
+            100,
+            1000,
+            crate::data::Distribution::Uniform,
+            3,
+        )
+        .unwrap();
+        let spec = JobSpec {
+            input: MatrixInput::streamed(src, &crate::linalg::StreamConfig::default()),
+            config: SvdConfig::paper(10),
+            shift: ShiftSpec::MeanCenter,
+            engine: EnginePreference::Auto,
+            seed: 0,
+            score: false,
+        };
+        let m = manifest();
+        assert_eq!(route(&spec, m.as_ref()).unwrap(), Route::Native);
+        // ArtifactOnly must error, not silently fall back.
+        let mut only = spec;
+        only.engine = EnginePreference::ArtifactOnly;
+        assert!(route(&only, m.as_ref()).is_err());
     }
 
     #[test]

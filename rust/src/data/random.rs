@@ -26,6 +26,7 @@ pub enum Distribution {
 }
 
 impl Distribution {
+    /// Every supported distribution, in display order.
     pub const ALL: [Distribution; 4] = [
         Distribution::Uniform,
         Distribution::Normal,
@@ -33,6 +34,7 @@ impl Distribution {
         Distribution::Zipf,
     ];
 
+    /// Stable lowercase name (CLI/config token).
     pub fn name(&self) -> &'static str {
         match self {
             Distribution::Uniform => "uniform",
@@ -42,6 +44,7 @@ impl Distribution {
         }
     }
 
+    /// Inverse of [`Distribution::name`].
     pub fn parse(s: &str) -> Option<Distribution> {
         Self::ALL.iter().copied().find(|d| d.name() == s)
     }
@@ -51,8 +54,11 @@ impl Distribution {
 /// samples).
 #[derive(Debug, Clone, Copy)]
 pub struct DataSpec {
+    /// Rows (features).
     pub m: usize,
+    /// Columns (samples).
     pub n: usize,
+    /// Entry distribution.
     pub dist: Distribution,
 }
 

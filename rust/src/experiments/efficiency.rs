@@ -16,7 +16,9 @@ use crate::util::timer::Timer;
 /// Timing row for one (n, density) point.
 #[derive(Debug, Clone)]
 pub struct EffRow {
+    /// Column count of this sweep point.
     pub n: usize,
+    /// Stored entries of the sparse input.
     pub nnz: usize,
     /// Seconds: S-RSVD on sparse X with implicit mean shift.
     pub srsvd_sparse_s: f64,
@@ -29,6 +31,7 @@ pub struct EffRow {
 }
 
 impl EffRow {
+    /// S-RSVD speedup over the densify-then-RSVD baseline.
     pub fn speedup(&self) -> f64 {
         self.rsvd_densified_s / self.srsvd_sparse_s.max(1e-12)
     }

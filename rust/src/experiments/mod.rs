@@ -111,7 +111,9 @@ pub fn mse_sum(
 /// Which algorithm an experiment leg runs.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum Algo {
+    /// Shifted RSVD (the paper's Algorithm 1).
     Srsvd,
+    /// The plain RSVD baseline.
     Rsvd,
 }
 

@@ -16,8 +16,11 @@ use super::RunMetrics;
 /// One Table-1 cell: aggregate statistics over `runs` repetitions.
 #[derive(Debug, Clone)]
 pub struct Table1Stats {
+    /// Dataset label (table row name).
     pub name: String,
+    /// Mean MSE of S-RSVD over the runs.
     pub mse_srsvd: f64,
+    /// Mean MSE of RSVD over the runs.
     pub mse_rsvd: f64,
     /// H₀¹ p-value: paired t-test on the per-run MSE pairs.
     pub p1: f64,
@@ -25,10 +28,12 @@ pub struct Table1Stats {
     pub p2: f64,
     /// Win-rate of S-RSVD over columns (final run).
     pub wr_srsvd: f64,
+    /// Number of repetitions aggregated.
     pub runs: usize,
 }
 
 impl Table1Stats {
+    /// RSVD's complementary win-rate.
     pub fn wr_rsvd(&self) -> f64 {
         1.0 - self.wr_srsvd
     }

@@ -11,7 +11,12 @@
 //!
 //! * [`linalg`] — from-scratch dense & sparse linear algebra: blocked
 //!   GEMM, Householder/MGS QR, rank-1 QR-update, one-sided Jacobi SVD,
-//!   CSR sparse kernels. No BLAS/LAPACK dependency.
+//!   CSR sparse kernels. No BLAS/LAPACK dependency. Includes
+//!   [`linalg::stream`], the out-of-core layer: a [`linalg::MatrixSource`]
+//!   yields row blocks on demand (on-disk file, chunked generator, or
+//!   in-memory adapter) and [`linalg::Streamed`] runs every product
+//!   block-at-a-time under a `[stream]` memory budget with results
+//!   byte-identical to the in-memory path.
 //! * [`parallel`] — the execution subsystem: a chunked, self-scheduling
 //!   thread pool (std threads + channels only) shared process-wide.
 //!   Sized by the `SRSVD_THREADS` env var or the `[parallel] threads`
@@ -52,6 +57,29 @@
 //! let fact = ShiftedRsvd::new(cfg).factorize_mean_centered(&x, &mut rng).unwrap();
 //! println!("top singular values: {:?}", &fact.s[..5]);
 //! ```
+//!
+//! For matrices that do not fit in RAM, swap the [`linalg::Dense`] input
+//! for a [`linalg::Streamed`] source — same API, same (byte-identical)
+//! results:
+//!
+//! ```no_run
+//! use srsvd::prelude::*;
+//!
+//! let src = GeneratorSource::new(200_000, 4_096, Distribution::Uniform, 0).unwrap();
+//! let x = Streamed::new(src, &StreamConfig { block_rows: 0, budget_mb: 64 });
+//! let mut rng = Xoshiro256pp::seed_from_u64(0);
+//! let fact = ShiftedRsvd::new(SvdConfig::paper(10))
+//!     .factorize_mean_centered(&x, &mut rng)
+//!     .unwrap();
+//! println!("top singular values: {:?}", &fact.s[..5]);
+//! ```
+//!
+//! The repository-level companion documents — `README.md` for the tour
+//! and `docs/ARCHITECTURE.md` for the layer-by-layer manual (L0 kernels
+//! → L1 algorithms → L2 runtime → L3 service, the job lifecycle, and
+//! the determinism guarantee) — are the places to start reading.
+
+#![warn(missing_docs)]
 
 pub mod bench;
 pub mod cli;
@@ -72,8 +100,11 @@ pub mod util;
 pub mod prelude {
     pub use crate::data::{DataSpec, Distribution};
     pub use crate::linalg::{Dense, Csr};
+    pub use crate::linalg::stream::{
+        FileSource, GeneratorSource, InMemorySource, MatrixSource, StreamConfig, Streamed,
+    };
     pub use crate::rng::{Rng, Xoshiro256pp};
     pub use crate::svd::{
-        Factorization, Pca, Rsvd, ShiftedRsvd, SvdConfig, SvdEngine,
+        Factorization, MatVecOps, Pca, Rsvd, ShiftedRsvd, SvdConfig, SvdEngine,
     };
 }

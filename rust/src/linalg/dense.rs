@@ -51,22 +51,27 @@ impl Dense {
         Dense::from_fn(rows, cols, |_, _| rng.next_gaussian())
     }
 
+    /// Number of rows.
     pub fn rows(&self) -> usize {
         self.rows
     }
 
+    /// Number of columns.
     pub fn cols(&self) -> usize {
         self.cols
     }
 
+    /// `(rows, cols)`.
     pub fn shape(&self) -> (usize, usize) {
         (self.rows, self.cols)
     }
 
+    /// Borrow the row-major buffer.
     pub fn data(&self) -> &[f64] {
         &self.data
     }
 
+    /// Mutably borrow the row-major buffer.
     pub fn data_mut(&mut self) -> &mut [f64] {
         &mut self.data
     }
@@ -77,6 +82,7 @@ impl Dense {
         &self.data[i * self.cols..(i + 1) * self.cols]
     }
 
+    /// Mutably borrow row `i` as a slice.
     #[inline]
     pub fn row_mut(&mut self, i: usize) -> &mut [f64] {
         &mut self.data[i * self.cols..(i + 1) * self.cols]
@@ -87,6 +93,7 @@ impl Dense {
         (0..self.rows).map(|i| self[(i, j)]).collect()
     }
 
+    /// Overwrite column `j` with `v` (length must equal `rows`).
     pub fn set_col(&mut self, j: usize, v: &[f64]) {
         assert_eq!(v.len(), self.rows);
         for i in 0..self.rows {
@@ -201,6 +208,13 @@ impl Dense {
     /// Maximum absolute entry.
     pub fn max_abs(&self) -> f64 {
         self.data.iter().fold(0.0f64, |m, x| m.max(x.abs()))
+    }
+
+    /// Consume the matrix and return its row-major buffer (zero-copy).
+    /// The inverse of [`Dense::from_vec`]; the streaming layer uses the
+    /// pair to recycle one block buffer across a whole sweep.
+    pub fn into_vec(self) -> Vec<f64> {
+        self.data
     }
 }
 

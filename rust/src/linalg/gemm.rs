@@ -17,7 +17,7 @@
 //! is accumulated in exactly the serial order and results are
 //! **bit-identical for every thread count** — required, since every
 //! experiment is seeded. `Aᵀ·B` products partition the *output* rows
-//! (columns of A) the same way. Products below [`PAR_MIN_FLOPS`] run
+//! (columns of A) the same way. Products below `PAR_MIN_FLOPS` run
 //! inline; the `*_pool` entry points let benches pin an explicit pool.
 
 use super::Dense;
@@ -49,6 +49,7 @@ pub fn matmul(a: &Dense, b: &Dense) -> Dense {
     matmul_with_plan(a, b, MatmulPlan::default())
 }
 
+/// `C = A · B` with explicit blocking (the perf bench's plan sweep).
 pub fn matmul_with_plan(a: &Dense, b: &Dense, plan: MatmulPlan) -> Dense {
     parallel::with_current(|pool| matmul_with_plan_pool(a, b, plan, pool))
 }
@@ -68,6 +69,7 @@ pub fn matmul_rank1(a: &Dense, b: &Dense, u: &[f64], v: &[f64]) -> Dense {
     matmul_rank1_with_plan(a, b, u, v, MatmulPlan::default())
 }
 
+/// `C = A · B − u·vᵀ` with explicit blocking.
 pub fn matmul_rank1_with_plan(
     a: &Dense,
     b: &Dense,
@@ -96,7 +98,19 @@ pub fn matmul_rank1_with_plan_pool(
     // Fused epilogue: seed C with the downdate, then accumulate A·B on
     // top — one pass over C total. The O(mn) seed is cheap next to the
     // O(mnk) product, so it stays serial.
-    for i in 0..m {
+    seed_downdate(&mut c, u, v);
+    gemm_into(a, b, &mut c, plan, pool);
+    c
+}
+
+/// Seed `C = −u·vᵀ` — the fused-downdate epilogue shared by both rank-1
+/// kernels and the streaming path ([`crate::linalg::Streamed`]). Kept in
+/// one place because the streamed byte-identical contract depends on the
+/// seed being computed exactly the same way everywhere.
+pub(crate) fn seed_downdate(c: &mut Dense, u: &[f64], v: &[f64]) {
+    debug_assert_eq!(u.len(), c.rows());
+    debug_assert_eq!(v.len(), c.cols());
+    for i in 0..c.rows() {
         let ui = u[i];
         if ui != 0.0 {
             for (cx, &vx) in c.row_mut(i).iter_mut().zip(v) {
@@ -104,8 +118,6 @@ pub fn matmul_rank1_with_plan_pool(
             }
         }
     }
-    gemm_into(a, b, &mut c, plan, pool);
-    c
 }
 
 /// Accumulating core: `C += A · B`, cache-blocked, row-panel parallel.
@@ -225,6 +237,24 @@ fn tmatmul_cols(a: &Dense, b: &Dense, j0: usize, ncols: usize, c_rows: &mut [f64
     }
 }
 
+/// Accumulate `C += Aᵀ·B` into an existing `C` (a.cols() × b.cols()) on
+/// the calling thread's pool.
+///
+/// This is the out-of-core building block: summing the contributions of
+/// consecutive row blocks `Aᵢ` (ascending, each paired with the matching
+/// rows `Bᵢ`) reproduces the one-shot [`tmatmul`] result **bit-for-bit**,
+/// because every output element accumulates its `i`-terms in the same
+/// serial order the in-memory kernel uses.
+pub fn tmatmul_acc(a: &Dense, b: &Dense, c: &mut Dense) {
+    assert_eq!(a.rows(), b.rows(), "tmatmul_acc shape mismatch");
+    assert_eq!(
+        c.shape(),
+        (a.cols(), b.cols()),
+        "tmatmul_acc output shape mismatch"
+    );
+    parallel::with_current(|pool| tmatmul_into(a, b, c, pool));
+}
+
 /// `C = Aᵀ·B − u·vᵀ` fused (u has length n = a.cols()).
 pub fn tmatmul_rank1(a: &Dense, b: &Dense, u: &[f64], v: &[f64]) -> Dense {
     parallel::with_current(|pool| tmatmul_rank1_pool(a, b, u, v, pool))
@@ -245,14 +275,7 @@ pub fn tmatmul_rank1_pool(
     assert_eq!(v.len(), k);
     let mut c = Dense::zeros(n, k);
     // Seed with the downdate (cheap O(nk)), then accumulate Aᵀ·B.
-    for j in 0..n {
-        let uj = u[j];
-        if uj != 0.0 {
-            for (cx, &vx) in c.row_mut(j).iter_mut().zip(v) {
-                *cx = -uj * vx;
-            }
-        }
-    }
+    seed_downdate(&mut c, u, v);
     tmatmul_into(a, b, &mut c, pool);
     c
 }
@@ -353,6 +376,32 @@ mod tests {
         let b = Dense::gaussian(19, 7, &mut rng);
         let want = matmul(&a.transpose(), &b);
         assert!(fro_diff(&tmatmul(&a, &b), &want) < 1e-10);
+    }
+
+    #[test]
+    fn tmatmul_acc_blockwise_matches_one_shot_bitwise() {
+        // The streaming contract: summing ascending row-block
+        // contributions reproduces the one-shot product exactly.
+        let mut rng = Xoshiro256pp::seed_from_u64(8);
+        let a = Dense::gaussian(137, 61, &mut rng);
+        let b = Dense::gaussian(137, 23, &mut rng);
+        let want = tmatmul(&a, &b);
+        let mut c = Dense::zeros(61, 23);
+        let mut row0 = 0;
+        for bl in [40usize, 50, 30, 17] {
+            let nr = bl.min(137 - row0);
+            let ablock = Dense::from_fn(nr, 61, |i, j| a[(row0 + i, j)]);
+            let bblock = Dense::from_fn(nr, 23, |i, j| b[(row0 + i, j)]);
+            tmatmul_acc(&ablock, &bblock, &mut c);
+            row0 += nr;
+        }
+        assert_eq!(row0, 137);
+        let same = want
+            .data()
+            .iter()
+            .zip(c.data())
+            .all(|(x, y)| x.to_bits() == y.to_bits());
+        assert!(same, "block-accumulated tmatmul must be bit-identical");
     }
 
     #[test]

@@ -4,8 +4,10 @@
 //! claims are about *how* the factorization touches memory — so the
 //! substrate is explicit here: a row-major dense type with a blocked
 //! GEMM, Householder/MGS QR, the rank-1 QR-update the paper leans on
-//! (Golub & Van Loan §12.5.1), one-sided Jacobi SVD, and CSR sparse
-//! kernels whose shifted products never densify.
+//! (Golub & Van Loan §12.5.1), one-sided Jacobi SVD, CSR sparse
+//! kernels whose shifted products never densify, and the out-of-core
+//! [`stream`] layer that runs the same kernels block-at-a-time over
+//! matrices that never fit in RAM.
 
 pub mod dense;
 pub mod gemm;
@@ -13,6 +15,7 @@ pub mod jacobi;
 pub mod qr;
 pub mod qr_update;
 pub mod sparse;
+pub mod stream;
 
 pub use dense::Dense;
 pub use gemm::{matmul, matmul_rank1, MatmulPlan};
@@ -20,6 +23,10 @@ pub use jacobi::{jacobi_svd, sym_jacobi_eig, JacobiOpts};
 pub use qr::{householder_qr, mgs_qr};
 pub use qr_update::qr_rank1_update;
 pub use sparse::{Csr, Triplets};
+pub use stream::{
+    CsrRowSource, FileSource, FileWriter, GeneratorSource, InMemorySource, MatrixSource,
+    SharedSource, StreamConfig, Streamed,
+};
 
 /// Frobenius norm of the difference of two equally-shaped matrices.
 pub fn fro_diff(a: &Dense, b: &Dense) -> f64 {

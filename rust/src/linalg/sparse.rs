@@ -29,10 +29,12 @@ pub struct Triplets {
 }
 
 impl Triplets {
+    /// Empty builder for an m×n matrix.
     pub fn new(rows: usize, cols: usize) -> Self {
         Triplets { rows, cols, entries: Vec::new() }
     }
 
+    /// Record one entry (zeros are dropped; duplicates sum at seal time).
     pub fn push(&mut self, i: usize, j: usize, v: f64) {
         assert!(i < self.rows && j < self.cols, "triplet out of bounds");
         if v != 0.0 {
@@ -40,10 +42,12 @@ impl Triplets {
         }
     }
 
+    /// Number of recorded triplets (before duplicate merging).
     pub fn len(&self) -> usize {
         self.entries.len()
     }
 
+    /// Whether no triplets have been recorded.
     pub fn is_empty(&self) -> bool {
         self.entries.is_empty()
     }
@@ -88,22 +92,27 @@ pub struct Csr {
 }
 
 impl Csr {
+    /// Number of rows.
     pub fn rows(&self) -> usize {
         self.rows
     }
 
+    /// Number of columns.
     pub fn cols(&self) -> usize {
         self.cols
     }
 
+    /// `(rows, cols)`.
     pub fn shape(&self) -> (usize, usize) {
         (self.rows, self.cols)
     }
 
+    /// Number of stored (non-zero) entries.
     pub fn nnz(&self) -> usize {
         self.values.len()
     }
 
+    /// `nnz / (rows·cols)`.
     pub fn density(&self) -> f64 {
         self.nnz() as f64 / (self.rows as f64 * self.cols as f64)
     }

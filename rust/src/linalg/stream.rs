@@ -1,0 +1,827 @@
+//! Out-of-core streaming: factorize matrices that never fit in RAM.
+//!
+//! The paper's algorithm only ever *multiplies against* `X` — it never
+//! needs the matrix resident. This module makes that operational: a
+//! [`MatrixSource`] yields row blocks on demand, and [`Streamed`]
+//! implements the full [`MatVecOps`] contract by sweeping those blocks
+//! through the pool-aware GEMM kernels one at a time, under a
+//! configurable memory budget ([`StreamConfig`]). Following Halko,
+//! Martinsson, Shkolnisky & Tygert (arXiv:1007.5510), every operation —
+//! sampling, power iteration, projection, row means, norms — is a
+//! single pass over the row blocks.
+//!
+//! ## Bit-exactness
+//!
+//! Streamed results are **byte-identical** to the in-memory [`Dense`]
+//! path for every block size and every thread-pool size:
+//!
+//! * `X·B` partitions rows of the output: each output row is produced by
+//!   the same serial kernel ([`gemm`]) on the same row data, so block
+//!   boundaries cannot change it.
+//! * `Xᵀ·B` accumulates row-block contributions in ascending row order
+//!   via [`gemm::tmatmul_acc`]; every output element receives its
+//!   `i`-terms in exactly the serial order of the one-shot kernel.
+//! * `sq_fro` / `row_means` continue one accumulator across blocks in
+//!   the same element order the dense reductions use.
+//!
+//! The contract is pinned by `rust/tests/stream.rs`, which compares
+//! whole factorizations (u/s/v) bit-for-bit at pools 1/2/8 across block
+//! sizes.
+//!
+//! ## Sources
+//!
+//! * [`FileSource`] / [`FileWriter`] — an on-disk binary format (24-byte
+//!   header + row-major little-endian f64 payload) read block-wise.
+//! * [`GeneratorSource`] — synthetic matrices ([`Distribution`])
+//!   generated row-by-row from per-row seeds; nothing materializes.
+//! * [`CsrRowSource`] — adapts a sparse [`Csr`] (e.g. the corpus
+//!   generator's co-occurrence matrix), densifying one block at a time.
+//! * [`InMemorySource`] — wraps a resident [`Dense`]; the parity-test
+//!   adapter.
+//!
+//! IO failures *after* construction (a file truncated mid-sweep) panic
+//! with context rather than silently corrupting a factorization — the
+//! [`MatVecOps`] signatures are infallible by design. Sources validate
+//! everything they can (magic, version, payload length) at `open` time.
+
+use std::fmt;
+use std::fs;
+use std::io::{BufWriter, Read, Seek, SeekFrom, Write};
+use std::path::{Path, PathBuf};
+use std::sync::{Arc, Mutex};
+
+use super::{gemm, Csr, Dense};
+use crate::data::Distribution;
+use crate::rng::{Rng, SplitMix64, Xoshiro256pp};
+use crate::svd::MatVecOps;
+use crate::util::{Error, Result};
+
+/// A matrix exposed as on-demand row blocks.
+///
+/// Implementors are cheap handles (a file descriptor, a seed, a borrow)
+/// — the matrix itself stays wherever it lives. `Send + Sync` so a
+/// source can be shared across coordinator workers; `Debug` so job
+/// types containing sources stay debuggable.
+pub trait MatrixSource: Send + Sync + fmt::Debug {
+    /// Matrix dimensions `(rows, cols)`.
+    fn shape(&self) -> (usize, usize);
+
+    /// Fill `out` (row-major, exactly `nrows * cols` elements) with rows
+    /// `row0 .. row0 + nrows`. Implementations must overwrite the whole
+    /// slice and must be deterministic: the same rows yield the same
+    /// bytes regardless of block boundaries.
+    fn read_rows(&self, row0: usize, nrows: usize, out: &mut [f64]) -> Result<()>;
+
+    /// Materialize the whole matrix as a [`Dense`] (tests / small
+    /// inputs — this is exactly the allocation streaming avoids).
+    fn materialize(&self) -> Result<Dense> {
+        let (m, n) = self.shape();
+        let mut data = vec![0.0; m * n];
+        if m > 0 {
+            self.read_rows(0, m, &mut data)?;
+        }
+        Ok(Dense::from_vec(m, n, data))
+    }
+}
+
+impl<'a, S: MatrixSource + ?Sized> MatrixSource for &'a S {
+    fn shape(&self) -> (usize, usize) {
+        (**self).shape()
+    }
+
+    fn read_rows(&self, row0: usize, nrows: usize, out: &mut [f64]) -> Result<()> {
+        (**self).read_rows(row0, nrows, out)
+    }
+}
+
+/// Shared, type-erased source handle — what [`crate::coordinator::job`]
+/// stores so job specs stay cheaply cloneable.
+pub type SharedSource = Arc<dyn MatrixSource>;
+
+impl MatrixSource for SharedSource {
+    fn shape(&self) -> (usize, usize) {
+        (**self).shape()
+    }
+
+    fn read_rows(&self, row0: usize, nrows: usize, out: &mut [f64]) -> Result<()> {
+        (**self).read_rows(row0, nrows, out)
+    }
+}
+
+fn check_block_bounds(shape: (usize, usize), row0: usize, nrows: usize, out_len: usize) {
+    let (m, n) = shape;
+    assert!(
+        row0 + nrows <= m,
+        "block rows {row0}..{} out of bounds for {m} rows",
+        row0 + nrows
+    );
+    assert_eq!(out_len, nrows * n, "block buffer length mismatch");
+}
+
+// ---------------------------------------------------------------------------
+// In-memory adapter
+// ---------------------------------------------------------------------------
+
+/// A [`MatrixSource`] over a resident [`Dense`] — the adapter that lets
+/// parity tests run the streaming code path against in-memory truth.
+#[derive(Debug, Clone)]
+pub struct InMemorySource {
+    matrix: Dense,
+}
+
+impl InMemorySource {
+    /// Wrap a resident matrix.
+    pub fn new(matrix: Dense) -> InMemorySource {
+        InMemorySource { matrix }
+    }
+
+    /// Borrow the wrapped matrix.
+    pub fn matrix(&self) -> &Dense {
+        &self.matrix
+    }
+}
+
+impl MatrixSource for InMemorySource {
+    fn shape(&self) -> (usize, usize) {
+        self.matrix.shape()
+    }
+
+    fn read_rows(&self, row0: usize, nrows: usize, out: &mut [f64]) -> Result<()> {
+        check_block_bounds(self.shape(), row0, nrows, out.len());
+        let n = self.matrix.cols();
+        out.copy_from_slice(&self.matrix.data()[row0 * n..(row0 + nrows) * n]);
+        Ok(())
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Sparse adapter
+// ---------------------------------------------------------------------------
+
+/// A [`MatrixSource`] over a [`Csr`] matrix: densifies one row block at
+/// a time (never the whole matrix), so e.g. the corpus generator's
+/// co-occurrence matrix can feed dense-only consumers out-of-core.
+///
+/// Note that for *factorization* the native sparse [`MatVecOps`] path is
+/// strictly better (O(nnz) products); this adapter exists for spilling
+/// sparse data to the dense on-disk format and for mixed pipelines.
+#[derive(Debug, Clone)]
+pub struct CsrRowSource {
+    matrix: Csr,
+}
+
+impl CsrRowSource {
+    /// Wrap a sparse matrix.
+    pub fn new(matrix: Csr) -> CsrRowSource {
+        CsrRowSource { matrix }
+    }
+}
+
+impl MatrixSource for CsrRowSource {
+    fn shape(&self) -> (usize, usize) {
+        self.matrix.shape()
+    }
+
+    fn read_rows(&self, row0: usize, nrows: usize, out: &mut [f64]) -> Result<()> {
+        check_block_bounds(self.shape(), row0, nrows, out.len());
+        let n = self.matrix.cols();
+        out.fill(0.0);
+        for local in 0..nrows {
+            let base = local * n;
+            for (j, v) in self.matrix.row_iter(row0 + local) {
+                out[base + j] = v;
+            }
+        }
+        Ok(())
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Generator source
+// ---------------------------------------------------------------------------
+
+/// A synthetic random matrix generated row-by-row: each row draws from a
+/// per-row seed, so any block partition yields the same matrix and
+/// nothing is ever materialized.
+///
+/// Supports the i.i.d. entry distributions of [`Distribution`]
+/// (`Uniform`, `Normal`, `Exponential`). `Zipf` is column-coupled (each
+/// column is a normalized histogram) and cannot be generated
+/// row-streamed — [`GeneratorSource::new`] rejects it; spill a
+/// [`crate::data::random_matrix`] through [`FileWriter`] instead.
+///
+/// The matrix *family* matches `data/random.rs` (same entry
+/// distributions) but the RNG stream layout differs, so for a given seed
+/// this is a different — equally deterministic — matrix than
+/// [`crate::data::random_matrix`] produces.
+#[derive(Debug, Clone, Copy)]
+pub struct GeneratorSource {
+    rows: usize,
+    cols: usize,
+    dist: Distribution,
+    seed: u64,
+}
+
+impl GeneratorSource {
+    /// Describe an m×n matrix of i.i.d. `dist` entries under `seed`.
+    /// Errors for [`Distribution::Zipf`] (column-coupled; see type docs).
+    pub fn new(rows: usize, cols: usize, dist: Distribution, seed: u64) -> Result<GeneratorSource> {
+        crate::ensure!(
+            dist != Distribution::Zipf,
+            "GeneratorSource cannot stream the Zipf distribution (each column \
+             is a normalized histogram over all rows); materialize via \
+             data::random_matrix and spill through stream::FileWriter instead"
+        );
+        Ok(GeneratorSource { rows, cols, dist, seed })
+    }
+
+    /// The seed a given row's RNG starts from (SplitMix64-scrambled so
+    /// neighboring rows get unrelated streams).
+    fn row_seed(&self, row: usize) -> u64 {
+        let mut sm = SplitMix64::new(
+            self.seed ^ (row as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15),
+        );
+        sm.next_u64()
+    }
+}
+
+impl MatrixSource for GeneratorSource {
+    fn shape(&self) -> (usize, usize) {
+        (self.rows, self.cols)
+    }
+
+    fn read_rows(&self, row0: usize, nrows: usize, out: &mut [f64]) -> Result<()> {
+        check_block_bounds(self.shape(), row0, nrows, out.len());
+        let n = self.cols;
+        for local in 0..nrows {
+            let mut rng = Xoshiro256pp::seed_from_u64(self.row_seed(row0 + local));
+            for x in &mut out[local * n..(local + 1) * n] {
+                *x = match self.dist {
+                    Distribution::Uniform => rng.next_uniform(),
+                    Distribution::Normal => 1.0 + rng.next_gaussian(),
+                    Distribution::Exponential => rng.next_exponential(),
+                    // Rejected by the constructor.
+                    Distribution::Zipf => unreachable!("Zipf is not row-streamable"),
+                };
+            }
+        }
+        Ok(())
+    }
+}
+
+// ---------------------------------------------------------------------------
+// On-disk binary format
+// ---------------------------------------------------------------------------
+
+/// File magic of the on-disk matrix format (`SRSV`).
+const FILE_MAGIC: [u8; 4] = *b"SRSV";
+/// Current format version.
+const FILE_VERSION: u32 = 1;
+/// Header length in bytes: magic (4) + version (4) + rows (8) + cols (8).
+const HEADER_LEN: u64 = 24;
+
+/// Incremental writer for the on-disk matrix format: declare the shape,
+/// append row blocks in order, [`FileWriter::finish`]. Lets a matrix
+/// larger than RAM be spilled block-by-block (see
+/// `examples/out_of_core.rs`).
+///
+/// Format: `SRSV` magic, u32 LE version, u64 LE rows, u64 LE cols, then
+/// `rows*cols` f64 LE values row-major.
+#[derive(Debug)]
+pub struct FileWriter {
+    path: PathBuf,
+    out: BufWriter<fs::File>,
+    rows: usize,
+    cols: usize,
+    written_rows: usize,
+}
+
+impl FileWriter {
+    /// Create (truncate) `path` and write the header for an m×n matrix.
+    pub fn create(path: &Path, rows: usize, cols: usize) -> Result<FileWriter> {
+        let mut out = BufWriter::new(fs::File::create(path)?);
+        out.write_all(&FILE_MAGIC)?;
+        out.write_all(&FILE_VERSION.to_le_bytes())?;
+        out.write_all(&(rows as u64).to_le_bytes())?;
+        out.write_all(&(cols as u64).to_le_bytes())?;
+        Ok(FileWriter {
+            path: path.to_path_buf(),
+            out,
+            rows,
+            cols,
+            written_rows: 0,
+        })
+    }
+
+    /// Append whole rows (`data.len()` must be a multiple of the column
+    /// count; rows are appended in order).
+    pub fn append_rows(&mut self, data: &[f64]) -> Result<()> {
+        crate::ensure!(
+            self.cols > 0 && data.len() % self.cols == 0,
+            "append_rows: {} values is not a whole number of {}-column rows",
+            data.len(),
+            self.cols
+        );
+        let nrows = data.len() / self.cols;
+        crate::ensure!(
+            self.written_rows + nrows <= self.rows,
+            "append_rows: {} rows exceed the declared {} (already wrote {})",
+            nrows,
+            self.rows,
+            self.written_rows
+        );
+        for &x in data {
+            self.out.write_all(&x.to_le_bytes())?;
+        }
+        self.written_rows += nrows;
+        Ok(())
+    }
+
+    /// Flush, verify every declared row was written, and reopen the file
+    /// as a [`FileSource`].
+    pub fn finish(mut self) -> Result<FileSource> {
+        crate::ensure!(
+            self.written_rows == self.rows,
+            "finish: wrote {} of {} declared rows",
+            self.written_rows,
+            self.rows
+        );
+        self.out.flush()?;
+        let path = self.path.clone();
+        drop(self);
+        FileSource::open(&path)
+    }
+}
+
+/// Write a resident [`Dense`] to `path` in the on-disk format.
+pub fn write_matrix(path: &Path, x: &Dense) -> Result<FileSource> {
+    let mut w = FileWriter::create(path, x.rows(), x.cols())?;
+    w.append_rows(x.data())?;
+    w.finish()
+}
+
+/// Spill any [`MatrixSource`] to the on-disk format, `block_rows` rows
+/// at a time (bounded memory even for sources larger than RAM).
+pub fn spill_to_file<S: MatrixSource>(
+    src: &S,
+    path: &Path,
+    block_rows: usize,
+) -> Result<FileSource> {
+    let (m, n) = src.shape();
+    let bl = block_rows.clamp(1, m.max(1));
+    let mut w = FileWriter::create(path, m, n)?;
+    let mut buf = vec![0.0; bl * n];
+    let mut row0 = 0;
+    while row0 < m {
+        let nr = bl.min(m - row0);
+        src.read_rows(row0, nr, &mut buf[..nr * n])?;
+        w.append_rows(&buf[..nr * n])?;
+        row0 += nr;
+    }
+    w.finish()
+}
+
+/// A [`MatrixSource`] reading row blocks from the on-disk format written
+/// by [`FileWriter`]. Header and payload length are validated at open
+/// time; block reads seek + read behind a mutex (sources are shared
+/// across coordinator workers).
+#[derive(Debug)]
+pub struct FileSource {
+    path: PathBuf,
+    rows: usize,
+    cols: usize,
+    file: Mutex<fs::File>,
+}
+
+impl FileSource {
+    /// Open and validate an on-disk matrix.
+    pub fn open(path: &Path) -> Result<FileSource> {
+        let mut f = fs::File::open(path)?;
+        let mut header = [0u8; HEADER_LEN as usize];
+        f.read_exact(&mut header).map_err(|e| {
+            Error::Invalid(format!("{}: not an srsvd matrix file: {e}", path.display()))
+        })?;
+        crate::ensure!(
+            header[..4] == FILE_MAGIC,
+            "{}: bad magic (not an srsvd matrix file)",
+            path.display()
+        );
+        let version = u32::from_le_bytes(header[4..8].try_into().unwrap());
+        crate::ensure!(
+            version == FILE_VERSION,
+            "{}: unsupported format version {version} (expected {FILE_VERSION})",
+            path.display()
+        );
+        let rows = u64::from_le_bytes(header[8..16].try_into().unwrap()) as usize;
+        let cols = u64::from_le_bytes(header[16..24].try_into().unwrap()) as usize;
+        let expect = (rows as u64)
+            .checked_mul(cols as u64)
+            .and_then(|e| e.checked_mul(8))
+            .and_then(|e| e.checked_add(HEADER_LEN))
+            .ok_or_else(|| Error::Invalid(format!("{}: shape overflows", path.display())))?;
+        let actual = f.metadata()?.len();
+        crate::ensure!(
+            actual == expect,
+            "{}: payload is {actual} bytes, header {rows}x{cols} implies {expect}",
+            path.display()
+        );
+        Ok(FileSource {
+            path: path.to_path_buf(),
+            rows,
+            cols,
+            file: Mutex::new(f),
+        })
+    }
+
+    /// The backing file's path.
+    pub fn path(&self) -> &Path {
+        &self.path
+    }
+}
+
+impl MatrixSource for FileSource {
+    fn shape(&self) -> (usize, usize) {
+        (self.rows, self.cols)
+    }
+
+    fn read_rows(&self, row0: usize, nrows: usize, out: &mut [f64]) -> Result<()> {
+        check_block_bounds(self.shape(), row0, nrows, out.len());
+        let nbytes = out.len() * 8;
+        let mut bytes = vec![0u8; nbytes];
+        {
+            let mut f = self
+                .file
+                .lock()
+                .map_err(|_| Error::Service("file source mutex poisoned".into()))?;
+            f.seek(SeekFrom::Start(
+                HEADER_LEN + (row0 as u64) * (self.cols as u64) * 8,
+            ))?;
+            f.read_exact(&mut bytes)?;
+        }
+        for (x, chunk) in out.iter_mut().zip(bytes.chunks_exact(8)) {
+            *x = f64::from_le_bytes(chunk.try_into().unwrap());
+        }
+        Ok(())
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Streaming configuration
+// ---------------------------------------------------------------------------
+
+/// Memory policy for a streamed sweep — the `[stream]` config section
+/// (`block_rows`, `budget_mb`) and the `--stream-block` /
+/// `--stream-budget-mb` CLI flags.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct StreamConfig {
+    /// Rows per resident block. `0` (the default) derives the block
+    /// height from `budget_mb`.
+    pub block_rows: usize,
+    /// Approximate budget for the resident row block, in MiB (used when
+    /// `block_rows` is 0). The budget governs the f64 block buffer; the
+    /// sweep's small outputs (block × K products) are extra.
+    pub budget_mb: usize,
+}
+
+impl Default for StreamConfig {
+    fn default() -> Self {
+        StreamConfig { block_rows: 0, budget_mb: 64 }
+    }
+}
+
+impl StreamConfig {
+    /// The block height this policy yields for an m×n matrix: explicit
+    /// `block_rows` clamped to `[1, m]`, else `budget_mb` divided by the
+    /// f64 row footprint.
+    pub fn resolve_block_rows(&self, m: usize, n: usize) -> usize {
+        let cap = m.max(1);
+        if self.block_rows > 0 {
+            self.block_rows.min(cap)
+        } else {
+            let bytes = self.budget_mb.max(1).saturating_mul(1 << 20);
+            (bytes / (8 * n.max(1))).clamp(1, cap)
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// The MatVecOps wrapper
+// ---------------------------------------------------------------------------
+
+/// Out-of-core [`MatVecOps`]: computes every product and reduction the
+/// SVD algorithms need in one block-at-a-time sweep over a
+/// [`MatrixSource`], dispatching each resident block through the
+/// pool-aware GEMM kernels.
+///
+/// Results are byte-identical to the in-memory [`Dense`] path for every
+/// `block_rows` and every pool size (see the module docs for why), so a
+/// streamed factorization replays a seeded in-memory run exactly.
+///
+/// IO errors during a sweep panic with context (see the module docs).
+#[derive(Debug, Clone)]
+pub struct Streamed<S> {
+    source: S,
+    block_rows: usize,
+}
+
+impl<S: MatrixSource> Streamed<S> {
+    /// Wrap `source` under the given memory policy.
+    pub fn new(source: S, config: &StreamConfig) -> Streamed<S> {
+        let (m, n) = source.shape();
+        let block_rows = config.resolve_block_rows(m, n);
+        Streamed { source, block_rows }
+    }
+
+    /// Wrap `source` with an explicit block height (clamped to `[1, m]`).
+    pub fn with_block_rows(source: S, block_rows: usize) -> Streamed<S> {
+        let (m, _) = source.shape();
+        Streamed { source, block_rows: block_rows.clamp(1, m.max(1)) }
+    }
+
+    /// Rows per resident block.
+    pub fn block_rows(&self) -> usize {
+        self.block_rows
+    }
+
+    /// Borrow the underlying source.
+    pub fn source(&self) -> &S {
+        &self.source
+    }
+
+    /// One pass over the matrix: `f(row0, block)` for consecutive row
+    /// blocks in ascending order. A single buffer is recycled across
+    /// blocks, so peak residency is one `block_rows × n` block.
+    fn sweep(&self, mut f: impl FnMut(usize, &Dense)) {
+        let (m, n) = self.source.shape();
+        let mut buf: Vec<f64> = Vec::new();
+        let mut row0 = 0;
+        while row0 < m {
+            let nr = self.block_rows.min(m - row0);
+            buf.resize(nr * n, 0.0);
+            if let Err(e) = self.source.read_rows(row0, nr, &mut buf) {
+                panic!(
+                    "matrix source failed reading rows {row0}..{} of {m}: {e}",
+                    row0 + nr
+                );
+            }
+            let block = Dense::from_vec(nr, n, std::mem::take(&mut buf));
+            f(row0, &block);
+            buf = block.into_vec();
+            row0 += nr;
+        }
+    }
+}
+
+impl<S: MatrixSource> MatVecOps for Streamed<S> {
+    fn shape(&self) -> (usize, usize) {
+        self.source.shape()
+    }
+
+    fn mm(&self, b: &Dense) -> Dense {
+        let (m, n) = self.shape();
+        assert_eq!(n, b.rows(), "streamed mm shape mismatch");
+        let k = b.cols();
+        let mut c = Dense::zeros(m, k);
+        self.sweep(|row0, block| {
+            let cb = gemm::matmul(block, b);
+            c.data_mut()[row0 * k..(row0 + block.rows()) * k].copy_from_slice(cb.data());
+        });
+        c
+    }
+
+    fn tmm(&self, b: &Dense) -> Dense {
+        let (m, n) = self.shape();
+        assert_eq!(m, b.rows(), "streamed tmm shape mismatch");
+        let k = b.cols();
+        let mut c = Dense::zeros(n, k);
+        self.sweep(|row0, block| {
+            let nr = block.rows();
+            let b_rows = Dense::from_vec(nr, k, b.data()[row0 * k..(row0 + nr) * k].to_vec());
+            gemm::tmatmul_acc(block, &b_rows, &mut c);
+        });
+        c
+    }
+
+    fn mm_rank1(&self, b: &Dense, u: &[f64], v: &[f64]) -> Dense {
+        let (m, n) = self.shape();
+        assert_eq!(n, b.rows(), "streamed mm_rank1 shape mismatch");
+        let k = b.cols();
+        assert_eq!(u.len(), m, "u length");
+        assert_eq!(v.len(), k, "v length");
+        let mut c = Dense::zeros(m, k);
+        self.sweep(|row0, block| {
+            let nr = block.rows();
+            let cb = gemm::matmul_rank1(block, b, &u[row0..row0 + nr], v);
+            c.data_mut()[row0 * k..(row0 + nr) * k].copy_from_slice(cb.data());
+        });
+        c
+    }
+
+    fn tmm_rank1(&self, b: &Dense, u: &[f64], v: &[f64]) -> Dense {
+        let (m, n) = self.shape();
+        assert_eq!(m, b.rows(), "streamed tmm_rank1 shape mismatch");
+        let k = b.cols();
+        assert_eq!(u.len(), n, "u length");
+        assert_eq!(v.len(), k, "v length");
+        let mut c = Dense::zeros(n, k);
+        // Seed with the downdate via the one-shot kernel's own epilogue
+        // (shared helper — the two paths cannot drift apart), then
+        // accumulate block contributions on top.
+        gemm::seed_downdate(&mut c, u, v);
+        self.sweep(|row0, block| {
+            let nr = block.rows();
+            let b_rows = Dense::from_vec(nr, k, b.data()[row0 * k..(row0 + nr) * k].to_vec());
+            gemm::tmatmul_acc(block, &b_rows, &mut c);
+        });
+        c
+    }
+
+    fn row_means(&self) -> Vec<f64> {
+        let (m, _) = self.shape();
+        let mut mu = Vec::with_capacity(m);
+        self.sweep(|_, block| mu.extend(block.row_means()));
+        mu
+    }
+
+    fn sq_fro(&self) -> f64 {
+        // One accumulator carried across blocks: the exact element order
+        // of the dense reduction, hence bit-identical.
+        let mut s = 0.0;
+        self.sweep(|_, block| {
+            for &x in block.data() {
+                s += x * x;
+            }
+        });
+        s
+    }
+
+    fn stored_entries(&self) -> usize {
+        // Logical dense size; the *resident* footprint is block_rows·n.
+        let (m, n) = self.shape();
+        m * n
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Xoshiro256pp;
+
+    fn bits(x: &Dense) -> Vec<u64> {
+        x.data().iter().map(|v| v.to_bits()).collect()
+    }
+
+    #[test]
+    fn in_memory_source_round_trips() {
+        let mut rng = Xoshiro256pp::seed_from_u64(0);
+        let x = Dense::gaussian(13, 7, &mut rng);
+        let src = InMemorySource::new(x.clone());
+        assert_eq!(src.shape(), (13, 7));
+        let back = src.materialize().unwrap();
+        assert_eq!(bits(&back), bits(&x));
+        let mut two = vec![0.0; 2 * 7];
+        src.read_rows(5, 2, &mut two).unwrap();
+        assert_eq!(&two[..7], x.row(5));
+        assert_eq!(&two[7..], x.row(6));
+    }
+
+    #[test]
+    fn generator_source_is_block_invariant() {
+        let src = GeneratorSource::new(23, 11, Distribution::Uniform, 42).unwrap();
+        let whole = src.materialize().unwrap();
+        // Any partition reproduces the same rows.
+        for bl in [1usize, 4, 10, 23] {
+            let streamed = Streamed::with_block_rows(src, bl);
+            let mut rebuilt = Vec::new();
+            streamed.sweep(|_, block| rebuilt.extend_from_slice(block.data()));
+            let same = whole
+                .data()
+                .iter()
+                .zip(&rebuilt)
+                .all(|(a, b)| a.to_bits() == b.to_bits());
+            assert!(same, "block size {bl} changed the generated matrix");
+        }
+    }
+
+    #[test]
+    fn generator_rejects_zipf() {
+        assert!(GeneratorSource::new(4, 4, Distribution::Zipf, 0).is_err());
+    }
+
+    #[test]
+    fn csr_source_matches_to_dense() {
+        let mut rng = Xoshiro256pp::seed_from_u64(1);
+        let sp = Csr::random(19, 33, 0.2, &mut rng, |r| r.next_uniform() + 0.1);
+        let src = CsrRowSource::new(sp.clone());
+        assert_eq!(bits(&src.materialize().unwrap()), bits(&sp.to_dense()));
+    }
+
+    #[test]
+    fn streamed_ops_match_dense_bitwise() {
+        let mut rng = Xoshiro256pp::seed_from_u64(2);
+        let x = Dense::from_fn(37, 53, |_, _| rng.next_uniform());
+        let b = Dense::gaussian(53, 6, &mut rng);
+        let bt = Dense::gaussian(37, 6, &mut rng);
+        let u_m: Vec<f64> = (0..37).map(|_| rng.next_gaussian()).collect();
+        let u_n: Vec<f64> = (0..53).map(|_| rng.next_gaussian()).collect();
+        let v6: Vec<f64> = (0..6).map(|_| rng.next_gaussian()).collect();
+        for bl in [1usize, 5, 16, 37] {
+            let s = Streamed::with_block_rows(InMemorySource::new(x.clone()), bl);
+            assert_eq!(bits(&s.mm(&b)), bits(&MatVecOps::mm(&x, &b)), "mm bl={bl}");
+            assert_eq!(
+                bits(&s.tmm(&bt)),
+                bits(&MatVecOps::tmm(&x, &bt)),
+                "tmm bl={bl}"
+            );
+            assert_eq!(
+                bits(&s.mm_rank1(&b, &u_m, &v6)),
+                bits(&x.mm_rank1(&b, &u_m, &v6)),
+                "mm_rank1 bl={bl}"
+            );
+            assert_eq!(
+                bits(&s.tmm_rank1(&bt, &u_n, &v6)),
+                bits(&x.tmm_rank1(&bt, &u_n, &v6)),
+                "tmm_rank1 bl={bl}"
+            );
+            assert_eq!(MatVecOps::row_means(&s), Dense::row_means(&x), "bl={bl}");
+            assert_eq!(
+                MatVecOps::sq_fro(&s).to_bits(),
+                MatVecOps::sq_fro(&x).to_bits(),
+                "sq_fro bl={bl}"
+            );
+            assert_eq!(s.stored_entries(), 37 * 53);
+        }
+    }
+
+    #[test]
+    fn stream_config_resolution() {
+        // Explicit block_rows wins and clamps.
+        assert_eq!(
+            StreamConfig { block_rows: 10, budget_mb: 1 }.resolve_block_rows(100, 50),
+            10
+        );
+        assert_eq!(
+            StreamConfig { block_rows: 500, budget_mb: 1 }.resolve_block_rows(100, 50),
+            100
+        );
+        // Budget-derived: 1 MiB / (8 B × 1024 cols) = 128 rows.
+        assert_eq!(
+            StreamConfig { block_rows: 0, budget_mb: 1 }.resolve_block_rows(10_000, 1024),
+            128
+        );
+        // Never below 1 row, even for absurdly wide matrices.
+        assert_eq!(
+            StreamConfig { block_rows: 0, budget_mb: 1 }.resolve_block_rows(10, 1 << 30),
+            1
+        );
+    }
+
+    #[test]
+    fn file_round_trip_bitwise() {
+        let mut rng = Xoshiro256pp::seed_from_u64(3);
+        let x = Dense::gaussian(29, 17, &mut rng);
+        let path = std::env::temp_dir().join("srsvd_stream_test_roundtrip.bin");
+        let src = write_matrix(&path, &x).unwrap();
+        assert_eq!(src.shape(), (29, 17));
+        assert_eq!(bits(&src.materialize().unwrap()), bits(&x));
+        // Partial block read.
+        let mut rows = vec![0.0; 3 * 17];
+        src.read_rows(11, 3, &mut rows).unwrap();
+        assert_eq!(&rows[..17], x.row(11));
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn file_writer_enforces_shape() {
+        let path = std::env::temp_dir().join("srsvd_stream_test_shape.bin");
+        let mut w = FileWriter::create(&path, 2, 3).unwrap();
+        // Not a whole row.
+        assert!(w.append_rows(&[1.0, 2.0]).is_err());
+        w.append_rows(&[1.0, 2.0, 3.0]).unwrap();
+        // Too many rows.
+        assert!(w.append_rows(&[0.0; 6]).is_err());
+        // finish() before all rows are written fails.
+        assert!(w.finish().is_err());
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn open_rejects_garbage() {
+        let path = std::env::temp_dir().join("srsvd_stream_test_garbage.bin");
+        std::fs::write(&path, b"definitely not a matrix").unwrap();
+        assert!(FileSource::open(&path).is_err());
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn spill_streams_any_source() {
+        let src = GeneratorSource::new(31, 9, Distribution::Exponential, 7).unwrap();
+        let path = std::env::temp_dir().join("srsvd_stream_test_spill.bin");
+        let file = spill_to_file(&src, &path, 8).unwrap();
+        assert_eq!(
+            bits(&file.materialize().unwrap()),
+            bits(&src.materialize().unwrap())
+        );
+        let _ = std::fs::remove_file(&path);
+    }
+}

@@ -2,6 +2,7 @@
 //!
 //! ```text
 //! srsvd factorize --dist uniform --m 100 --n 1000 --k 10 ...   one-shot PCA
+//!                 [--stream --stream-budget-mb 16]              out-of-core input
 //! srsvd serve     --jobs 32 --workers 2 ...                    run the service demo
 //! srsvd experiment --id fig1a ...                              regenerate a paper artifact
 //! srsvd artifacts [--dir artifacts]                            inspect the AOT manifest
@@ -14,7 +15,7 @@ use srsvd::coordinator::{
 };
 use srsvd::data::{random_matrix, DataSpec, Distribution};
 use srsvd::experiments::{fig1, k_grid, table1};
-use srsvd::linalg::Dense;
+use srsvd::linalg::{Dense, GeneratorSource, StreamConfig};
 use srsvd::rng::Xoshiro256pp;
 use srsvd::runtime::Manifest;
 use srsvd::svd::SvdConfig;
@@ -90,7 +91,10 @@ fn cmd_factorize(args: &[String]) -> Result<()> {
         .opt("small-svd", "jacobi", "jacobi | gram")
         .opt("seed", "0", "rng seed")
         .opt("engine", "auto", "auto | native | artifact")
-        .opt("threads", "0", "linalg pool threads (0 = auto / SRSVD_THREADS)");
+        .opt("threads", "0", "linalg pool threads (0 = auto / SRSVD_THREADS)")
+        .flag("stream", "generate row blocks on demand (out-of-core; not zipf)")
+        .opt("stream-block", "0", "streamed block rows (0 = derive from budget)")
+        .opt("stream-budget-mb", "64", "streamed resident-block budget, MiB");
     let a = spec.parse(args)?;
     if a.help {
         print!("{}", spec.usage("srsvd factorize"));
@@ -100,16 +104,36 @@ fn cmd_factorize(args: &[String]) -> Result<()> {
         .ok_or_else(|| srsvd::util::Error::Invalid(format!("unknown dist {:?}", a.get("dist"))))?;
     let (m, n) = (a.get_usize("m")?, a.get_usize("n")?);
     let seed = a.get_u64("seed")?;
-    let mut rng = Xoshiro256pp::seed_from_u64(seed);
-    let x = random_matrix(DataSpec { m, n, dist }, &mut rng);
     let engine = match a.get("engine") {
         "auto" => EnginePreference::Auto,
         "native" => EnginePreference::Native,
         "artifact" => EnginePreference::ArtifactOnly,
         e => return Err(srsvd::util::Error::Invalid(format!("unknown engine {e:?}"))),
     };
+    let input = if a.has_flag("stream") {
+        // Out-of-core: the matrix is generated row-block-wise and never
+        // resident. (A different deterministic matrix than the dense
+        // path below — GeneratorSource draws per-row seeds.)
+        let stream_cfg = StreamConfig {
+            block_rows: a.get_usize("stream-block")?,
+            budget_mb: a.get_usize("stream-budget-mb")?.max(1),
+        };
+        let src = GeneratorSource::new(m, n, dist, seed)?;
+        println!(
+            "streaming {}x{} {} matrix: block_rows={} (dense would be {:.1} MiB)",
+            m,
+            n,
+            dist.name(),
+            stream_cfg.resolve_block_rows(m, n),
+            (m * n * 8) as f64 / (1 << 20) as f64
+        );
+        MatrixInput::streamed(src, &stream_cfg)
+    } else {
+        let mut rng = Xoshiro256pp::seed_from_u64(seed);
+        MatrixInput::Dense(random_matrix(DataSpec { m, n, dist }, &mut rng))
+    };
     let job = JobSpec {
-        input: MatrixInput::Dense(x),
+        input,
         config: svd_config_from(&a)?,
         shift: ShiftSpec::MeanCenter,
         engine,

@@ -50,9 +50,13 @@ pub struct PoolStats {
 /// Point-in-time view of a pool's counters.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct PoolStatsSnapshot {
+    /// Total participants (workers + caller) of a parallel operation.
     pub threads: usize,
+    /// Operations dispatched across threads.
     pub parallel_ops: u64,
+    /// Operations executed inline (small input / size-1 pool / nested).
     pub serial_ops: u64,
+    /// Total chunks executed by parallel operations.
     pub chunks: u64,
 }
 
@@ -187,6 +191,7 @@ impl ThreadPool {
         self.threads
     }
 
+    /// Snapshot this pool's usage counters.
     pub fn stats(&self) -> PoolStatsSnapshot {
         PoolStatsSnapshot {
             threads: self.threads,

@@ -21,6 +21,7 @@ use crate::rng::{Rng, SplitMix64, Xoshiro256pp};
 /// seed so any failure is replayable.
 pub struct Gen {
     rng: Xoshiro256pp,
+    /// The seed this case derives every draw from (printed on failure).
     pub case_seed: u64,
     /// Shrink level 0 = full-size cases; higher levels should generate
     /// smaller inputs. Generators honor it through the sizing helpers.
@@ -49,18 +50,22 @@ impl Gen {
         (lo64 + self.rng.next_below(shrunk_span)) as usize
     }
 
+    /// Uniform f64 in `[lo, hi)`.
     pub fn f64_in(&mut self, lo: f64, hi: f64) -> f64 {
         self.rng.next_range(lo, hi)
     }
 
+    /// Standard normal draw.
     pub fn gaussian(&mut self) -> f64 {
         self.rng.next_gaussian()
     }
 
+    /// Uniform f64 in `[0, 1)`.
     pub fn uniform(&mut self) -> f64 {
         self.rng.next_uniform()
     }
 
+    /// Fair coin flip.
     pub fn bool(&mut self) -> bool {
         self.rng.next_u64() & 1 == 1
     }

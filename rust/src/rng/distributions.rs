@@ -19,6 +19,7 @@ pub struct ZipfSampler {
 }
 
 impl ZipfSampler {
+    /// Precompute the sampler for ranks `{1, ..., n}` with exponent `s`.
     pub fn new(n: u64, s: f64) -> Self {
         assert!(n >= 1, "Zipf needs n >= 1");
         assert!(s > 0.0, "Zipf needs s > 0");

@@ -10,6 +10,7 @@ pub struct SplitMix64 {
 }
 
 impl SplitMix64 {
+    /// Start a stream at `seed`.
     pub fn new(seed: u64) -> Self {
         SplitMix64 { state: seed }
     }

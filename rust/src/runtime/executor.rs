@@ -18,6 +18,7 @@ use crate::svd::Factorization;
 /// Outputs of one `srsvd_scored` artifact execution.
 #[derive(Debug, Clone)]
 pub struct SrsvdOutput {
+    /// The rank-k factors (f32 artifact outputs widened to f64).
     pub factorization: Factorization,
     /// The paper's MSE metric, computed in-graph by the fused Pallas
     /// scorer (f32).
@@ -60,6 +61,7 @@ mod pjrt_impl {
             Ok(Executor { client, manifest, cache: HashMap::new() })
         }
 
+        /// The manifest parsed at construction.
         pub fn manifest(&self) -> &Manifest {
             &self.manifest
         }
@@ -209,6 +211,7 @@ mod stub_impl {
     }
 
     impl Executor {
+        /// Always fails: this build has no PJRT runtime.
         pub fn new(dir: &std::path::Path) -> Result<Executor> {
             Err(Error::Runtime(format!(
                 "PJRT runtime unavailable: srsvd was built without the `pjrt` \
@@ -217,14 +220,17 @@ mod stub_impl {
             )))
         }
 
+        /// Unreachable on the stub (no instance can exist).
         pub fn manifest(&self) -> &Manifest {
             match self.void {}
         }
 
+        /// Unreachable on the stub (no instance can exist).
         pub fn ensure_compiled(&mut self, _name: &str) -> Result<f64> {
             match self.void {}
         }
 
+        /// Unreachable on the stub (no instance can exist).
         pub fn run_raw(
             &mut self,
             _name: &str,
@@ -233,6 +239,7 @@ mod stub_impl {
             match self.void {}
         }
 
+        /// Unreachable on the stub (no instance can exist).
         pub fn run_srsvd(
             &mut self,
             _spec: &ArtifactSpec,
@@ -243,6 +250,7 @@ mod stub_impl {
             match self.void {}
         }
 
+        /// Unreachable on the stub (no instance can exist).
         pub fn run_row_mean(&mut self, _spec: &ArtifactSpec, _x: &Dense) -> Result<Vec<f64>> {
             match self.void {}
         }

@@ -9,11 +9,14 @@ use crate::util::{Error, Result};
 /// Shape/name of one input or output tensor.
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub struct TensorSpec {
+    /// Tensor name in the HLO signature.
     pub name: String,
+    /// Static shape, outermost dimension first.
     pub shape: Vec<usize>,
 }
 
 impl TensorSpec {
+    /// Total element count (1 for scalars).
     pub fn elements(&self) -> usize {
         self.shape.iter().product::<usize>().max(1)
     }
@@ -22,28 +25,42 @@ impl TensorSpec {
 /// One compiled pipeline configuration.
 #[derive(Debug, Clone)]
 pub struct ArtifactSpec {
+    /// Unique artifact name (manifest key).
     pub name: String,
+    /// HLO text file, relative to the manifest directory.
     pub file: String,
     /// Operation kind: `srsvd_scored`, `row_mean`, `matmul_rank1`, ...
     pub op: String,
+    /// Static row count of the data operand.
     pub m: usize,
+    /// Static column count of the data operand.
     pub n: usize,
+    /// Target rank k.
     pub k: usize,
     /// Sampling width K.
     pub kk: usize,
+    /// Power-iteration count baked into the pipeline.
     pub q: usize,
+    /// Jacobi sweep count baked into the small SVD.
     pub sweeps: usize,
+    /// Compilation method tag (from the python AOT pipeline).
     pub method: String,
+    /// Input tensor signatures, in call order.
     pub inputs: Vec<TensorSpec>,
+    /// Output tensor signatures, in result order.
     pub outputs: Vec<TensorSpec>,
+    /// SHA-256 of the HLO text (integrity check).
     pub sha256: String,
 }
 
 /// The parsed manifest.
 #[derive(Debug, Clone)]
 pub struct Manifest {
+    /// Manifest schema version.
     pub version: usize,
+    /// Directory the manifest (and artifact files) live in.
     pub dir: PathBuf,
+    /// Every compiled artifact, in manifest order.
     pub artifacts: Vec<ArtifactSpec>,
 }
 
@@ -112,6 +129,7 @@ impl Manifest {
             .unwrap_or_else(|_| PathBuf::from("artifacts"))
     }
 
+    /// Look an artifact up by name.
     pub fn find(&self, name: &str) -> Option<&ArtifactSpec> {
         self.artifacts.iter().find(|a| a.name == name)
     }

@@ -6,7 +6,7 @@
 //! `HloModuleProto::from_text_file`. The PJRT wrapper types are not
 //! `Send`, so [`Executor`] is confined to whichever thread created it;
 //! the coordinator wraps it in a dedicated actor thread
-//! ([`crate::coordinator::runtime_actor`]).
+//! (`coordinator::runtime_actor`).
 
 pub mod executor;
 pub mod manifest;

@@ -24,6 +24,7 @@ pub fn variance(xs: &[f64]) -> f64 {
     xs.iter().map(|x| (x - m) * (x - m)).sum::<f64>() / (xs.len() - 1) as f64
 }
 
+/// Sample standard deviation (square root of [`variance`]).
 pub fn std_dev(xs: &[f64]) -> f64 {
     variance(xs).sqrt()
 }

@@ -21,6 +21,7 @@ pub struct TTestResult {
     /// Mean difference (negative ⇒ `a` smaller, i.e. `a` more accurate
     /// when the measurements are errors).
     pub mean_diff: f64,
+    /// Number of pairs.
     pub n: usize,
 }
 

@@ -10,7 +10,7 @@ pub mod rsvd;
 pub mod shifted;
 
 pub use deterministic::deterministic_svd;
-pub use ops::MatVecOps;
+pub use ops::{shifted_low_rank_mse, MatVecOps};
 pub use pca::{column_errors, Pca};
 pub use rsvd::Rsvd;
 pub use shifted::{BasisMethod, ShiftedRsvd, SmallSvdMethod};
@@ -29,6 +29,7 @@ pub struct Factorization {
 }
 
 impl Factorization {
+    /// Number of retained factors k.
     pub fn rank(&self) -> usize {
         self.s.len()
     }
@@ -104,6 +105,7 @@ impl SvdConfig {
         self.k + self.oversample
     }
 
+    /// Builder-style override of the power-iteration count q.
     pub fn with_power(mut self, q: usize) -> Self {
         self.power_iters = q;
         self

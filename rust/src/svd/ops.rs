@@ -1,9 +1,11 @@
 //! Operator abstraction: everything Algorithm 1 needs from the data
-//! matrix, implemented by [`Dense`] and [`Csr`].
+//! matrix, implemented by [`Dense`], [`Csr`], and the out-of-core
+//! [`crate::linalg::Streamed`] wrapper.
 //!
 //! The abstraction is the point of the paper: the algorithm only ever
 //! multiplies against `X` (plus rank-1 corrections), so a sparse matrix
-//! stays sparse end-to-end.
+//! stays sparse end-to-end — and a streamed matrix never needs to be
+//! resident at all.
 //!
 //! It is also the parallelism seam: both impls route through the
 //! pool-aware kernels in [`crate::linalg`] (panel-parallel GEMM,
@@ -15,6 +17,7 @@ use crate::linalg::{gemm, Csr, Dense};
 
 /// Products and reductions against the (un-shifted) data matrix.
 pub trait MatVecOps: Sync {
+    /// Matrix dimensions `(m, n)`.
     fn shape(&self) -> (usize, usize);
 
     /// `X · B`.
@@ -113,6 +116,65 @@ impl MatVecOps for Csr {
     }
 }
 
+/// The paper's MSE of a rank-k factorization `U·diag(s)·Vᵀ` against the
+/// implicitly shifted matrix `X̄ = X − μ·1ᵀ`, computed from [`MatVecOps`]
+/// products only — `X̄` is never formed and `X` itself is touched in two
+/// sweeps (row sums/norm + one k-column product), so it works for
+/// streamed sources larger than RAM as well as dense and sparse inputs.
+///
+/// Same expansion as [`Csr::shifted_mse`]:
+/// `‖X̄ − R‖² = ‖X‖² − 2⟨X, M⟩ + ‖M‖²` with `M = μ1ᵀ + R`.
+pub fn shifted_low_rank_mse(
+    x: &dyn MatVecOps,
+    mu: &[f64],
+    u: &Dense,
+    s: &[f64],
+    v: &Dense,
+) -> f64 {
+    let (m, n) = x.shape();
+    let k = s.len();
+    assert_eq!(u.shape(), (m, k), "U shape");
+    assert_eq!(v.shape(), (n, k), "V shape");
+    assert_eq!(mu.len(), m, "mu length");
+
+    // ‖X‖²
+    let x_sq = x.sq_fro();
+
+    // us = U·diag(s)
+    let us = u.scale_cols(s);
+
+    // ⟨X, μ1ᵀ⟩ = Σᵢ μᵢ·rowsumᵢ = n · Σᵢ μᵢ·rowmeanᵢ
+    let means = x.row_means();
+    let x_dot_shift: f64 =
+        mu.iter().zip(&means).map(|(a, b)| a * b).sum::<f64>() * n as f64;
+
+    // ⟨X, R⟩ = Σⱼₗ (XᵀUS)ⱼₗ · Vⱼₗ — one streamed k-column product.
+    let w = x.tmm(&us); // n×k
+    let x_dot_r: f64 = w
+        .data()
+        .iter()
+        .zip(v.data())
+        .map(|(a, b)| a * b)
+        .sum();
+
+    // ‖M‖² = ‖μ1ᵀ‖² + 2⟨μ1ᵀ, R⟩ + ‖R‖² — all small dense ops.
+    let mu_sq: f64 = mu.iter().map(|x| x * x).sum::<f64>() * n as f64;
+    let mu_us = us.tmatvec(mu); // k
+    let v_colsum: Vec<f64> = (0..k).map(|l| (0..n).map(|j| v[(j, l)]).sum()).collect();
+    let cross: f64 = mu_us.iter().zip(&v_colsum).map(|(a, b)| a * b).sum();
+    let ug = gemm::tmatmul(&us, &us); // k×k
+    let vg = gemm::tmatmul(v, v); // k×k
+    let mut r_sq = 0.0;
+    for i in 0..k {
+        for j in 0..k {
+            r_sq += ug[(i, j)] * vg[(i, j)];
+        }
+    }
+
+    let total = x_sq - 2.0 * (x_dot_shift + x_dot_r) + mu_sq + 2.0 * cross + r_sq;
+    total.max(0.0) / n as f64
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -141,5 +203,29 @@ mod tests {
         assert!((MatVecOps::sq_fro(&sp) - MatVecOps::sq_fro(&de)).abs() < 1e-10);
         assert_eq!(MatVecOps::row_means(&sp), MatVecOps::row_means(&de));
         assert!(sp.stored_entries() < de.stored_entries());
+    }
+
+    #[test]
+    fn generic_mse_matches_dense_and_sparse_scorers() {
+        let mut rng = Xoshiro256pp::seed_from_u64(1);
+        let sp = Csr::random(30, 90, 0.15, &mut rng, |r| r.next_uniform() + 0.2);
+        let de = sp.to_dense();
+        let mu = Csr::row_means(&sp);
+        let cfg = crate::svd::SvdConfig { k: 4, oversample: 4, ..Default::default() };
+        let f = crate::svd::ShiftedRsvd::new(cfg)
+            .factorize(&de, &mu, &mut Xoshiro256pp::seed_from_u64(2))
+            .unwrap();
+        // Dense reference: explicit centering + reconstruction.
+        let want = f.mse_against(&de.subtract_column(&mu));
+        let got_dense = shifted_low_rank_mse(&de, &mu, &f.u, &f.s, &f.v);
+        let got_sparse_scorer = sp.shifted_mse(&mu, &f.u, &f.s, &f.v);
+        assert!(
+            (got_dense - want).abs() < 1e-8 * want.max(1.0),
+            "generic {got_dense} vs dense {want}"
+        );
+        assert!(
+            (got_dense - got_sparse_scorer).abs() < 1e-8 * want.max(1.0),
+            "generic {got_dense} vs sparse scorer {got_sparse_scorer}"
+        );
     }
 }

@@ -28,6 +28,7 @@ impl Pca {
         Ok(Pca { mean: mu, components: f.u, singular_values: f.s })
     }
 
+    /// Number of fitted components.
     pub fn k(&self) -> usize {
         self.singular_values.len()
     }

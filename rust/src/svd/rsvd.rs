@@ -20,10 +20,12 @@ use super::{Factorization, MatVecOps, ShiftedRsvd, SvdConfig};
 /// The randomized SVD of Halko et al. (2011).
 #[derive(Debug, Clone, Copy)]
 pub struct Rsvd {
+    /// Rank / oversampling / power-iteration configuration.
     pub config: SvdConfig,
 }
 
 impl Rsvd {
+    /// Build an engine with the given configuration.
     pub fn new(config: SvdConfig) -> Self {
         Rsvd { config }
     }

@@ -59,10 +59,12 @@ pub enum SmallSvdMethod {
 /// The shifted randomized SVD engine.
 #[derive(Debug, Clone, Copy)]
 pub struct ShiftedRsvd {
+    /// Rank / oversampling / power-iteration configuration.
     pub config: SvdConfig,
 }
 
 impl ShiftedRsvd {
+    /// Build an engine with the given configuration.
     pub fn new(config: SvdConfig) -> Self {
         ShiftedRsvd { config }
     }

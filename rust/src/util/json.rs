@@ -15,15 +15,22 @@ use crate::util::{Error, Result};
 /// A JSON value. Object keys are ordered (BTreeMap) so output is stable.
 #[derive(Debug, Clone, PartialEq)]
 pub enum Json {
+    /// `null`.
     Null,
+    /// `true` / `false`.
     Bool(bool),
+    /// A number (all JSON numbers are f64 here).
     Num(f64),
+    /// A string.
     Str(String),
+    /// An array.
     Arr(Vec<Json>),
+    /// An object with ordered keys.
     Obj(BTreeMap<String, Json>),
 }
 
 impl Json {
+    /// Parse a complete JSON document (trailing garbage is an error).
     pub fn parse(text: &str) -> Result<Json> {
         let mut p = Parser { b: text.as_bytes(), i: 0 };
         p.skip_ws();
@@ -37,6 +44,7 @@ impl Json {
 
     // ----- typed accessors ------------------------------------------------
 
+    /// Borrow as an object, or a typed error.
     pub fn as_obj(&self) -> Result<&BTreeMap<String, Json>> {
         match self {
             Json::Obj(m) => Ok(m),
@@ -44,6 +52,7 @@ impl Json {
         }
     }
 
+    /// Borrow as an array, or a typed error.
     pub fn as_arr(&self) -> Result<&[Json]> {
         match self {
             Json::Arr(v) => Ok(v),
@@ -51,6 +60,7 @@ impl Json {
         }
     }
 
+    /// Borrow as a string, or a typed error.
     pub fn as_str(&self) -> Result<&str> {
         match self {
             Json::Str(s) => Ok(s),
@@ -58,6 +68,7 @@ impl Json {
         }
     }
 
+    /// Read as a number, or a typed error.
     pub fn as_f64(&self) -> Result<f64> {
         match self {
             Json::Num(x) => Ok(*x),
@@ -65,6 +76,7 @@ impl Json {
         }
     }
 
+    /// Read as a non-negative integer, or a typed error.
     pub fn as_usize(&self) -> Result<usize> {
         let x = self.as_f64()?;
         if x < 0.0 || x.fract() != 0.0 {
@@ -82,18 +94,22 @@ impl Json {
 
     // ----- construction helpers -------------------------------------------
 
+    /// Build an object from (key, value) pairs.
     pub fn obj(pairs: Vec<(&str, Json)>) -> Json {
         Json::Obj(pairs.into_iter().map(|(k, v)| (k.to_string(), v)).collect())
     }
 
+    /// Build an array from any iterator of values.
     pub fn arr<I: IntoIterator<Item = Json>>(items: I) -> Json {
         Json::Arr(items.into_iter().collect())
     }
 
+    /// Build a number.
     pub fn num(x: f64) -> Json {
         Json::Num(x)
     }
 
+    /// Build a string.
     pub fn str(s: &str) -> Json {
         Json::Str(s.to_string())
     }

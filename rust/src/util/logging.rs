@@ -16,10 +16,15 @@ use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 /// Log severity, most severe first.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
 pub enum Level {
+    /// Unrecoverable or user-visible failures.
     Error = 0,
+    /// Degraded-but-continuing conditions.
     Warn = 1,
+    /// Lifecycle events (default level).
     Info = 2,
+    /// Per-operation detail.
     Debug = 3,
+    /// Inner-loop detail.
     Trace = 4,
 }
 

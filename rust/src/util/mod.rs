@@ -10,13 +10,21 @@ pub mod timer;
 /// dependencies (no `thiserror` in the offline environment).
 #[derive(Debug)]
 pub enum Error {
+    /// Matrix/vector dimensions do not line up.
     Shape(String),
+    /// Invalid argument or configuration.
     Invalid(String),
+    /// A numerical procedure failed (non-convergence, singularity).
     Numerical(String),
+    /// A compiled AOT artifact is missing or malformed.
     Artifact(String),
+    /// The PJRT runtime failed (or is unavailable in this build).
     Runtime(String),
+    /// Coordinator/service failure (queues, workers, backpressure).
     Service(String),
+    /// An underlying IO failure.
     Io(std::io::Error),
+    /// JSON parsing or schema mismatch.
     Json(String),
 }
 
@@ -50,6 +58,7 @@ impl From<std::io::Error> for Error {
     }
 }
 
+/// Library-wide result alias over [`Error`].
 pub type Result<T> = std::result::Result<T, Error>;
 
 /// `assert!`-style helper returning [`Error::Shape`].

@@ -69,6 +69,33 @@ fn dense_factorization_identical_for_pool_sizes_1_2_8() {
 }
 
 #[test]
+fn streamed_factorization_identical_for_pool_sizes_1_2_8() {
+    // The out-of-core path shares the determinism contract: block
+    // sweeps reuse the same pool-aware kernels (full parity suite with
+    // block-size sweeps lives in tests/stream.rs).
+    let x = dense_input();
+    let cfg = SvdConfig { k: 12, oversample: 12, power_iters: 1, ..Default::default() };
+    let run = |threads: usize| -> Factorization {
+        let pool = Arc::new(ThreadPool::new(threads));
+        with_pool(&pool, || {
+            let s = srsvd::linalg::Streamed::with_block_rows(
+                srsvd::linalg::InMemorySource::new(x.clone()),
+                37,
+            );
+            let mut rng = Xoshiro256pp::seed_from_u64(42);
+            ShiftedRsvd::new(cfg)
+                .factorize_mean_centered(&s, &mut rng)
+                .expect("factorize")
+        })
+    };
+    let base = run(1);
+    for threads in [2, 8] {
+        let got = run(threads);
+        assert_identical(&base, &got, &format!("streamed, {threads} threads"));
+    }
+}
+
+#[test]
 fn sparse_factorization_identical_for_pool_sizes_1_2_8() {
     let x = sparse_input();
     let cfg = SvdConfig { k: 10, oversample: 10, power_iters: 1, ..Default::default() };

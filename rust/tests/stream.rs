@@ -1,0 +1,242 @@
+//! Out-of-core parity: a `Streamed` factorization must be
+//! **byte-identical** to the in-memory `Dense` path — for every block
+//! size, every thread-pool size (1/2/8), and every source kind — plus a
+//! file-source round-trip (write header+blocks, read back, factorize)
+//! and the coordinator end-to-end.
+
+use std::sync::Arc;
+
+use srsvd::coordinator::{
+    Coordinator, CoordinatorConfig, EnginePreference, JobSpec, MatrixInput, ShiftSpec,
+};
+use srsvd::data::Distribution;
+use srsvd::linalg::stream::{
+    spill_to_file, FileSource, GeneratorSource, InMemorySource, MatrixSource, StreamConfig,
+    Streamed,
+};
+use srsvd::linalg::Dense;
+use srsvd::parallel::{with_pool, ThreadPool};
+use srsvd::rng::Xoshiro256pp;
+use srsvd::svd::{Factorization, ShiftedRsvd, SvdConfig};
+
+fn dense_bits(x: &Dense) -> Vec<u64> {
+    x.data().iter().map(|v| v.to_bits()).collect()
+}
+
+fn assert_identical(a: &Factorization, b: &Factorization, what: &str) {
+    assert_eq!(dense_bits(&a.u), dense_bits(&b.u), "{what}: u bytes differ");
+    assert_eq!(
+        a.s.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+        b.s.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+        "{what}: s bytes differ"
+    );
+    assert_eq!(dense_bits(&a.v), dense_bits(&b.v), "{what}: v bytes differ");
+}
+
+/// Big enough that the sampling product clears the parallel threshold
+/// (150·900·24 ≈ 3.2M flops), matching tests/determinism.rs.
+fn input_matrix() -> Dense {
+    let mut rng = Xoshiro256pp::seed_from_u64(0x57E4);
+    Dense::from_fn(150, 900, |_, _| rng.next_uniform())
+}
+
+fn cfg() -> SvdConfig {
+    SvdConfig { k: 12, oversample: 12, power_iters: 1, ..Default::default() }
+}
+
+fn factorize(x: &dyn srsvd::svd::MatVecOps, seed: u64) -> Factorization {
+    let mut rng = Xoshiro256pp::seed_from_u64(seed);
+    ShiftedRsvd::new(cfg())
+        .factorize_mean_centered(x, &mut rng)
+        .expect("factorize")
+}
+
+#[test]
+fn streamed_matches_dense_across_block_sizes_and_pools_1_2_8() {
+    let x = input_matrix();
+    for threads in [1usize, 2, 8] {
+        let pool = Arc::new(ThreadPool::new(threads));
+        with_pool(&pool, || {
+            let base = factorize(&x, 42);
+            for block_rows in [1usize, 7, 64, 150] {
+                let s = Streamed::with_block_rows(InMemorySource::new(x.clone()), block_rows);
+                let got = factorize(&s, 42);
+                assert_identical(
+                    &base,
+                    &got,
+                    &format!("streamed bl={block_rows}, pool={threads}"),
+                );
+            }
+        });
+    }
+}
+
+#[test]
+fn streamed_pool_sizes_agree_with_each_other() {
+    // The streamed path itself must be pool-size invariant (not just
+    // equal to dense within one pool).
+    let x = input_matrix();
+    let run = |threads: usize| {
+        let pool = Arc::new(ThreadPool::new(threads));
+        with_pool(&pool, || {
+            let s = Streamed::with_block_rows(InMemorySource::new(x.clone()), 33);
+            factorize(&s, 43)
+        })
+    };
+    let base = run(1);
+    for threads in [2, 8] {
+        assert_identical(&base, &run(threads), &format!("pool {threads}"));
+    }
+}
+
+#[test]
+fn file_source_round_trip_and_factorization() {
+    let x = input_matrix();
+    let path = std::env::temp_dir().join("srsvd_test_stream_roundtrip.bin");
+    let file = srsvd::linalg::stream::write_matrix(&path, &x).expect("write");
+    // Bytes survive the disk round trip exactly.
+    assert_eq!(dense_bits(&file.materialize().expect("read")), dense_bits(&x));
+    // And so does the factorization, at an awkward block size.
+    let base = factorize(&x, 44);
+    let got = factorize(&Streamed::with_block_rows(file, 41), 44);
+    assert_identical(&base, &got, "file-source factorization");
+    let _ = std::fs::remove_file(&path);
+}
+
+#[test]
+fn generator_spill_and_stream_agree() {
+    // Generator → direct streaming and generator → spill-to-disk →
+    // streaming must produce identical factors.
+    let gen = GeneratorSource::new(140, 700, Distribution::Normal, 9).expect("gen");
+    let path = std::env::temp_dir().join("srsvd_test_stream_spill.bin");
+    let file: FileSource = spill_to_file(&gen, &path, 37).expect("spill");
+    let direct = factorize(&Streamed::with_block_rows(gen, 53), 45);
+    let spilled = factorize(&Streamed::with_block_rows(file, 29), 45);
+    assert_identical(&direct, &spilled, "generator vs spilled file");
+    // Both equal the fully materialized dense path.
+    let dense = gen.materialize().expect("materialize");
+    let base = factorize(&dense, 45);
+    assert_identical(&base, &direct, "generator vs dense");
+    let _ = std::fs::remove_file(&path);
+}
+
+#[test]
+fn coordinator_streamed_job_matches_dense_job() {
+    let x = input_matrix();
+    let run = |input: MatrixInput, pool_threads: usize| {
+        let coord = Coordinator::start(CoordinatorConfig {
+            native_workers: 2,
+            queue_capacity: 8,
+            artifact_dir: None,
+            pool_threads: Some(pool_threads),
+        })
+        .expect("coordinator");
+        let r = coord
+            .submit_blocking(JobSpec {
+                input,
+                config: cfg(),
+                shift: ShiftSpec::MeanCenter,
+                engine: EnginePreference::Auto,
+                seed: 99,
+                score: true,
+            })
+            .expect("submit");
+        let out = r.outcome.expect("job");
+        coord.shutdown();
+        out
+    };
+    let stream_cfg = StreamConfig { block_rows: 48, budget_mb: 64 };
+    let dense_out = run(MatrixInput::Dense(x.clone()), 2);
+    for pool_threads in [1usize, 2, 8] {
+        let streamed_out = run(
+            MatrixInput::streamed(InMemorySource::new(x.clone()), &stream_cfg),
+            pool_threads,
+        );
+        assert_identical(
+            &dense_out.factorization,
+            &streamed_out.factorization,
+            &format!("coordinator streamed vs dense, pool {pool_threads}"),
+        );
+        // The streamed scorer must agree with the dense scorer tightly
+        // (different expansion of the same quantity).
+        let (md, ms) = (dense_out.mse.unwrap(), streamed_out.mse.unwrap());
+        assert!(
+            (md - ms).abs() < 1e-8 * md.max(1.0),
+            "mse dense {md} vs streamed {ms}"
+        );
+    }
+}
+
+/// A source that starts failing after a given row — simulates a backing
+/// file truncated mid-sweep.
+#[derive(Debug)]
+struct FlakySource {
+    inner: InMemorySource,
+    fail_after_row: usize,
+}
+
+impl MatrixSource for FlakySource {
+    fn shape(&self) -> (usize, usize) {
+        self.inner.shape()
+    }
+
+    fn read_rows(&self, row0: usize, nrows: usize, out: &mut [f64]) -> srsvd::util::Result<()> {
+        if row0 + nrows > self.fail_after_row {
+            return Err(srsvd::util::Error::Io(std::io::Error::new(
+                std::io::ErrorKind::UnexpectedEof,
+                "simulated mid-sweep IO failure",
+            )));
+        }
+        self.inner.read_rows(row0, nrows, out)
+    }
+}
+
+#[test]
+fn failing_streamed_source_fails_the_job_not_the_worker() {
+    let x = input_matrix();
+    let coord = Coordinator::start(CoordinatorConfig {
+        native_workers: 1,
+        queue_capacity: 8,
+        artifact_dir: None,
+        pool_threads: Some(2),
+    })
+    .expect("coordinator");
+    let bad = FlakySource { inner: InMemorySource::new(x.clone()), fail_after_row: 60 };
+    let job = |input| JobSpec {
+        input,
+        config: cfg(),
+        shift: ShiftSpec::MeanCenter,
+        engine: EnginePreference::Auto,
+        seed: 1,
+        score: false,
+    };
+    let r = coord
+        .submit_blocking(job(MatrixInput::streamed(
+            bad,
+            &StreamConfig { block_rows: 48, budget_mb: 64 },
+        )))
+        .expect("submit");
+    let err = r.outcome.expect_err("mid-sweep IO failure must fail the job");
+    assert!(format!("{err}").contains("panicked"), "{err}");
+    // The (single) worker must survive and take the next job.
+    let ok = coord
+        .submit_blocking(job(MatrixInput::Dense(x)))
+        .expect("submit after failure");
+    assert!(ok.outcome.is_ok(), "worker must outlive a failing job");
+    assert_eq!(coord.metrics().failed, 1);
+    coord.shutdown();
+}
+
+#[test]
+fn budget_derived_blocks_change_nothing() {
+    let x = input_matrix();
+    let base = factorize(&x, 46);
+    // 1 MiB budget on 900 columns → 145 rows/block; 64 MiB → whole matrix.
+    for budget_mb in [1usize, 64] {
+        let scfg = StreamConfig { block_rows: 0, budget_mb };
+        let s = Streamed::new(InMemorySource::new(x.clone()), &scfg);
+        assert!(s.block_rows() >= 1 && s.block_rows() <= 150);
+        let got = factorize(&s, 46);
+        assert_identical(&base, &got, &format!("budget {budget_mb} MiB"));
+    }
+}
