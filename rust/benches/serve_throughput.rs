@@ -1,0 +1,145 @@
+//! Service throughput bench: jobs/sec through the full network stack
+//! (client → HTTP parse → JSON wire → coordinator → factorize → JSON
+//! response) as a function of the HTTP connection-worker count,
+//! emitting `BENCH_serve.json` for the perf trajectory (uploaded as a
+//! CI artifact next to the gemm/stream trajectories).
+//!
+//! Jobs are deliberately small so the wire + dispatch overhead is what
+//! moves: the interesting number is how throughput scales when more
+//! connection workers drain concurrent keep-alive clients. Every
+//! response is checked byte-identical to an in-process baseline before
+//! its leg is reported (the server must never change the math).
+//!
+//! Run: `cargo bench --bench serve_throughput`.
+//! Env: `SRSVD_BENCH_QUICK=1` (CI smoke),
+//! `SRSVD_BENCH_SERVE_JSON=<path>` (default `BENCH_serve.json`).
+
+use std::sync::Arc;
+
+use srsvd::bench::Table;
+use srsvd::coordinator::{Coordinator, CoordinatorConfig, EnginePreference};
+use srsvd::linalg::stream::StreamConfig;
+use srsvd::linalg::Dense;
+use srsvd::rng::{Rng, Xoshiro256pp};
+use srsvd::server::protocol::{dense_input, JobRequest};
+use srsvd::server::{Client, Server, ServerConfig};
+use srsvd::svd::{Factorization, ShiftedRsvd, SvdConfig};
+use srsvd::util::json::Json;
+use srsvd::util::timer::Timer;
+
+fn identical(a: &Factorization, b: &srsvd::server::protocol::WireOutput) -> bool {
+    a.s.iter().zip(&b.s).all(|(x, y)| x.to_bits() == y.to_bits())
+        && a.u.data().iter().zip(b.u.data()).all(|(x, y)| x.to_bits() == y.to_bits())
+        && a.v.data().iter().zip(b.v.data()).all(|(x, y)| x.to_bits() == y.to_bits())
+}
+
+fn main() {
+    let quick = std::env::var("SRSVD_BENCH_QUICK").as_deref() == Ok("1");
+    let worker_counts: &[usize] = if quick { &[1, 2] } else { &[1, 2, 4, 8] };
+    let clients = if quick { 2 } else { 4 };
+    let jobs_per_client = if quick { 8 } else { 40 };
+    let (m, n, k) = (48, 128, 4);
+    let seed = 42u64;
+
+    // The job every client submits, and the in-process truth it must
+    // reproduce bit-for-bit.
+    let mut rng = Xoshiro256pp::seed_from_u64(seed);
+    let x = Dense::from_fn(m, n, |_, _| rng.next_uniform());
+    let cfg = SvdConfig::paper(k);
+    let baseline = {
+        let mut rng = Xoshiro256pp::seed_from_u64(seed ^ 0xFA);
+        ShiftedRsvd::new(cfg).factorize_mean_centered(&x, &mut rng).unwrap()
+    };
+    let baseline = Arc::new(baseline);
+
+    println!(
+        "== serve throughput: {clients} clients x {jobs_per_client} jobs of {m}x{n} k={k} ==",
+    );
+    let mut t = Table::new(&["conn workers", "jobs", "wall", "jobs/s"]);
+    let mut rows: Vec<Json> = Vec::new();
+
+    for &workers in worker_counts {
+        let coord = Arc::new(
+            Coordinator::start(CoordinatorConfig {
+                native_workers: 4,
+                queue_capacity: 256,
+                artifact_dir: None,
+                pool_threads: Some(1),
+            })
+            .unwrap(),
+        );
+        let server = Server::bind(
+            Arc::clone(&coord),
+            &ServerConfig {
+                addr: "127.0.0.1:0".into(),
+                workers,
+                ..Default::default()
+            },
+            StreamConfig::default(),
+        )
+        .unwrap();
+        let addr = server.local_addr().to_string();
+
+        let timer = Timer::start();
+        let mut handles = Vec::new();
+        for c in 0..clients {
+            let addr = addr.clone();
+            let x = x.clone();
+            let baseline = Arc::clone(&baseline);
+            handles.push(std::thread::spawn(move || {
+                let mut client = Client::connect(&addr).unwrap();
+                let mut req = JobRequest::new(dense_input(&x), k);
+                req.config = cfg;
+                req.engine = EnginePreference::Native;
+                req.seed = seed ^ 0xFA;
+                for j in 0..jobs_per_client {
+                    let wire = client.submit_wait(&req).unwrap();
+                    let out = wire.outcome.expect("job failed");
+                    assert!(
+                        identical(&baseline, &out),
+                        "client {c} job {j}: wire factors diverged from in-process"
+                    );
+                }
+            }));
+        }
+        for h in handles {
+            h.join().expect("client thread panicked");
+        }
+        let wall = timer.elapsed_secs();
+        let total = clients * jobs_per_client;
+        let rate = total as f64 / wall;
+        t.row(&[
+            workers.to_string(),
+            total.to_string(),
+            format!("{wall:.3}s"),
+            format!("{rate:.1}"),
+        ]);
+        rows.push(Json::obj(vec![
+            ("conn_workers", Json::num(workers as f64)),
+            ("clients", Json::num(clients as f64)),
+            ("jobs", Json::num(total as f64)),
+            ("wall_s", Json::num(wall)),
+            ("jobs_per_s", Json::num(rate)),
+            ("bit_identical", Json::Bool(true)),
+        ]));
+        let metrics = coord.metrics();
+        println!("workers={workers}: {metrics}");
+        server.shutdown();
+    }
+    print!("{}", t.render());
+
+    let report = Json::obj(vec![
+        ("bench", Json::str("serve_throughput")),
+        ("quick", Json::Bool(quick)),
+        ("m", Json::num(m as f64)),
+        ("n", Json::num(n as f64)),
+        ("k", Json::num(k as f64)),
+        ("cases", Json::Arr(rows)),
+    ]);
+    let json_path = std::env::var("SRSVD_BENCH_SERVE_JSON")
+        .unwrap_or_else(|_| "BENCH_serve.json".into());
+    match std::fs::write(&json_path, report.to_string_pretty()) {
+        Ok(()) => println!("\nwrote {json_path}"),
+        Err(e) => eprintln!("\ncould not write {json_path}: {e}"),
+    }
+}

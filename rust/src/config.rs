@@ -20,6 +20,12 @@
 //! block_rows = 0           # rows per resident block; 0 = derive from budget
 //! budget_mb  = 64          # resident-block budget (MiB) when block_rows = 0
 //!
+//! [server]
+//! addr              = 127.0.0.1:7878   # listen address for `serve --listen`
+//! max_body_mb       = 64               # request body cap (413 beyond)
+//! workers           = 4                # HTTP connection workers
+//! request_timeout_s = 30               # per-request / blocking-GET timeout
+//!
 //! [svd]
 //! k           = 10
 //! oversample  = 10
@@ -126,6 +132,25 @@ impl RawConfig {
         }
         if let Some(mb) = self.get_usize("stream", "budget_mb")? {
             cfg.budget_mb = mb.max(1);
+        }
+        Ok(cfg)
+    }
+
+    /// Build the network service config (defaults where unset):
+    /// `[server] addr` / `max_body_mb` / `workers` / `request_timeout_s`.
+    pub fn server(&self) -> Result<crate::server::ServerConfig> {
+        let mut cfg = crate::server::ServerConfig::default();
+        if let Some(addr) = self.get("server", "addr") {
+            cfg.addr = addr.to_string();
+        }
+        if let Some(mb) = self.get_usize("server", "max_body_mb")? {
+            cfg.max_body_bytes = mb.max(1) << 20;
+        }
+        if let Some(w) = self.get_usize("server", "workers")? {
+            cfg.workers = w.max(1);
+        }
+        if let Some(t) = self.get_usize("server", "request_timeout_s")? {
+            cfg.request_timeout_s = (t as u64).max(1);
         }
         Ok(cfg)
     }
@@ -246,6 +271,30 @@ small_svd = gram
         // Non-integer errors.
         let raw = RawConfig::parse("[stream]\nblock_rows = lots\n").unwrap();
         assert!(raw.stream().is_err());
+    }
+
+    #[test]
+    fn server_section_knobs() {
+        let raw = RawConfig::parse(
+            "[server]\naddr = 0.0.0.0:9000\nmax_body_mb = 8\nworkers = 2\nrequest_timeout_s = 5\n",
+        )
+        .unwrap();
+        let s = raw.server().unwrap();
+        assert_eq!(s.addr, "0.0.0.0:9000");
+        assert_eq!(s.max_body_bytes, 8 << 20);
+        assert_eq!(s.workers, 2);
+        assert_eq!(s.request_timeout_s, 5);
+        // Defaults when missing.
+        let d = RawConfig::parse("").unwrap().server().unwrap();
+        assert_eq!(d.addr, crate::server::ServerConfig::default().addr);
+        // Floors: zero workers / timeout are clamped, not accepted.
+        let raw = RawConfig::parse("[server]\nworkers = 0\nrequest_timeout_s = 0\n").unwrap();
+        let s = raw.server().unwrap();
+        assert_eq!(s.workers, 1);
+        assert_eq!(s.request_timeout_s, 1);
+        // Non-integer errors.
+        let raw = RawConfig::parse("[server]\nworkers = many\n").unwrap();
+        assert!(raw.server().is_err());
     }
 
     #[test]

@@ -17,6 +17,16 @@ pub struct Metrics {
     pub artifact_jobs: AtomicU64,
     /// Jobs currently queued (submitted − picked up).
     pub queue_depth: AtomicU64,
+    /// Jobs currently executing on a worker (picked up − completed).
+    pub in_flight: AtomicU64,
+    /// HTTP jobs accepted by the network service layer.
+    pub http_accepted: AtomicU64,
+    /// HTTP jobs rejected with 503 (queue full — backpressure).
+    pub http_rejected: AtomicU64,
+    /// Request bytes read by the network service layer.
+    pub http_bytes_in: AtomicU64,
+    /// Response bytes written by the network service layer.
+    pub http_bytes_out: AtomicU64,
     /// Total execution time, nanoseconds.
     pub exec_ns: AtomicU64,
     /// Total queueing time, nanoseconds.
@@ -53,6 +63,11 @@ impl Metrics {
             native_jobs: self.native_jobs.load(Ordering::Relaxed),
             artifact_jobs: self.artifact_jobs.load(Ordering::Relaxed),
             queue_depth: self.queue_depth.load(Ordering::Relaxed),
+            in_flight: self.in_flight.load(Ordering::Relaxed),
+            http_accepted: self.http_accepted.load(Ordering::Relaxed),
+            http_rejected: self.http_rejected.load(Ordering::Relaxed),
+            http_bytes_in: self.http_bytes_in.load(Ordering::Relaxed),
+            http_bytes_out: self.http_bytes_out.load(Ordering::Relaxed),
             mean_exec_s: if completed > 0 {
                 exec_ns as f64 / completed as f64 / 1e9
             } else {
@@ -88,6 +103,16 @@ pub struct MetricsSnapshot {
     pub artifact_jobs: u64,
     /// Jobs currently queued.
     pub queue_depth: u64,
+    /// Jobs currently executing on a worker.
+    pub in_flight: u64,
+    /// HTTP jobs accepted by the network service layer.
+    pub http_accepted: u64,
+    /// HTTP jobs rejected with 503 (queue full — backpressure).
+    pub http_rejected: u64,
+    /// Request bytes read by the network service layer.
+    pub http_bytes_in: u64,
+    /// Response bytes written by the network service layer.
+    pub http_bytes_out: u64,
     /// Mean seconds spent executing, over completed jobs.
     pub mean_exec_s: f64,
     /// Mean seconds spent queued, over completed jobs.
@@ -109,14 +134,16 @@ impl std::fmt::Display for MetricsSnapshot {
         write!(
             f,
             "submitted={} completed={} failed={} native={} artifact={} \
-             depth={} mean_exec={:.3}ms mean_queue={:.3}ms max_exec={:.3}ms \
-             pool[threads={} par_ops={} serial_ops={} chunks={}]",
+             depth={} inflight={} mean_exec={:.3}ms mean_queue={:.3}ms max_exec={:.3}ms \
+             pool[threads={} par_ops={} serial_ops={} chunks={}] \
+             http[accepted={} rejected={} in={}B out={}B]",
             self.submitted,
             self.completed,
             self.failed,
             self.native_jobs,
             self.artifact_jobs,
             self.queue_depth,
+            self.in_flight,
             self.mean_exec_s * 1e3,
             self.mean_queue_s * 1e3,
             self.max_exec_s * 1e3,
@@ -124,6 +151,10 @@ impl std::fmt::Display for MetricsSnapshot {
             self.pool_parallel_ops,
             self.pool_serial_ops,
             self.pool_chunks,
+            self.http_accepted,
+            self.http_rejected,
+            self.http_bytes_in,
+            self.http_bytes_out,
         )
     }
 }
@@ -145,5 +176,24 @@ mod tests {
         assert!((s.mean_exec_s - 0.020).abs() < 1e-6);
         assert!((s.max_exec_s - 0.030).abs() < 1e-6);
         assert!(format!("{s}").contains("completed=2"));
+    }
+
+    #[test]
+    fn gauges_and_http_counters_snapshot() {
+        let m = Metrics::default();
+        m.queue_depth.fetch_add(2, Ordering::Relaxed);
+        m.in_flight.fetch_add(1, Ordering::Relaxed);
+        m.http_accepted.fetch_add(5, Ordering::Relaxed);
+        m.http_rejected.fetch_add(1, Ordering::Relaxed);
+        m.http_bytes_in.fetch_add(100, Ordering::Relaxed);
+        m.http_bytes_out.fetch_add(300, Ordering::Relaxed);
+        let s = m.snapshot();
+        assert_eq!(s.queue_depth, 2);
+        assert_eq!(s.in_flight, 1);
+        assert_eq!(s.http_accepted, 5);
+        assert_eq!(s.http_rejected, 1);
+        let text = format!("{s}");
+        assert!(text.contains("inflight=1"), "{text}");
+        assert!(text.contains("http[accepted=5 rejected=1 in=100B out=300B]"), "{text}");
     }
 }

@@ -9,7 +9,8 @@
 //! streamed (out-of-core) sources, ablation variants — runs natively.
 //!
 //! Backpressure: both queues are bounded (`queue_capacity`); `submit`
-//! blocks when full, `try_submit` returns `Error::Service` instead.
+//! blocks when full, `try_submit` returns [`crate::util::Error::Busy`]
+//! instead (the network layer's 503 signal).
 //!
 //! ```no_run
 //! use srsvd::coordinator::{Coordinator, CoordinatorConfig};
@@ -109,10 +110,12 @@ impl JobHandle {
             .map_err(|_| Error::Service("worker dropped without reply".into()))
     }
 
-    /// Block with a timeout.
+    /// Block with a timeout. Expiry is the typed [`Error::Timeout`]
+    /// (the job keeps running; wait again), distinct from a dead
+    /// worker's [`Error::Service`].
     pub fn wait_timeout(&self, dur: Duration) -> Result<JobResult> {
         self.rx.recv_timeout(dur).map_err(|e| match e {
-            RecvTimeoutError::Timeout => Error::Service("job timed out".into()),
+            RecvTimeoutError::Timeout => Error::Timeout("job still running".into()),
             RecvTimeoutError::Disconnected => {
                 Error::Service("worker dropped without reply".into())
             }
@@ -224,6 +227,13 @@ impl Coordinator {
         self.manifest.as_ref()
     }
 
+    /// The shared raw counters — the network service layer
+    /// ([`crate::server`]) records its accepted/rejected/byte counts
+    /// here so `/metrics` is one coherent snapshot.
+    pub(crate) fn metrics_shared(&self) -> Arc<Metrics> {
+        Arc::clone(&self.metrics)
+    }
+
     /// Submit a job; blocks when the target queue is full (backpressure).
     pub fn submit(&self, spec: JobSpec) -> Result<JobHandle> {
         self.submit_inner(spec, true)
@@ -245,20 +255,18 @@ impl Coordinator {
                 Error::Service("artifact route chosen but engine is off".into())
             })?,
         };
-        match route {
-            Route::Native => self.metrics.native_jobs.fetch_add(1, Ordering::Relaxed),
-            Route::Artifact { .. } => {
-                self.metrics.artifact_jobs.fetch_add(1, Ordering::Relaxed)
-            }
-        };
-        self.metrics.submitted.fetch_add(1, Ordering::Relaxed);
+        // queue_depth must be visible before the item can be dequeued
+        // (a worker decrements it), so bump it first and roll back on a
+        // failed send. The cumulative counters are only ever read, so
+        // they count *accepted* submissions after the send succeeds —
+        // a 503-rejected try_submit must not inflate them.
         self.metrics.queue_depth.fetch_add(1, Ordering::Relaxed);
         let send_result = if block {
             tx.send(item).map_err(|_| Error::Service("queue closed".into()))
         } else {
             tx.try_send(item).map_err(|e| match e {
                 std::sync::mpsc::TrySendError::Full(_) => {
-                    Error::Service("queue full (backpressure)".into())
+                    Error::Busy("queue full".into())
                 }
                 std::sync::mpsc::TrySendError::Disconnected(_) => {
                     Error::Service("queue closed".into())
@@ -269,6 +277,13 @@ impl Coordinator {
             self.metrics.queue_depth.fetch_sub(1, Ordering::Relaxed);
             return Err(e);
         }
+        match route {
+            Route::Native => self.metrics.native_jobs.fetch_add(1, Ordering::Relaxed),
+            Route::Artifact { .. } => {
+                self.metrics.artifact_jobs.fetch_add(1, Ordering::Relaxed)
+            }
+        };
+        self.metrics.submitted.fetch_add(1, Ordering::Relaxed);
         Ok(JobHandle { id, rx: reply_rx })
     }
 
@@ -309,6 +324,7 @@ fn native_loop(rx: Arc<Mutex<Receiver<WorkItem>>>, metrics: Arc<Metrics>, pool: 
         };
         let Ok(item) = item else { return };
         metrics.queue_depth.fetch_sub(1, Ordering::Relaxed);
+        metrics.in_flight.fetch_add(1, Ordering::Relaxed);
         let queue_s = item.enqueued.elapsed().as_secs_f64();
         let t = Instant::now();
         // Panic isolation: a panicking job (e.g. a streamed source whose
@@ -324,6 +340,7 @@ fn native_loop(rx: Arc<Mutex<Receiver<WorkItem>>>, metrics: Arc<Metrics>, pool: 
         });
         let exec_s = t.elapsed().as_secs_f64();
         metrics.record_exec(exec_s, queue_s, outcome.is_ok());
+        metrics.in_flight.fetch_sub(1, Ordering::Relaxed);
         let _ = item.reply.send(JobResult {
             id: item.id,
             outcome,
@@ -448,9 +465,14 @@ mod tests {
             }
         }
         assert!(saw_full, "expected backpressure with capacity 1");
+        let accepted = handles.len() as u64;
         for h in handles {
             let _ = h.wait();
         }
+        // Rejected submissions must not inflate the cumulative counters.
+        let m = coord.metrics();
+        assert_eq!(m.submitted, accepted);
+        assert_eq!(m.native_jobs, accepted);
         coord.shutdown();
     }
 

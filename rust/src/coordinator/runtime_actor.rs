@@ -44,11 +44,13 @@ pub(super) fn actor_loop(dir: PathBuf, rx: Receiver<super::WorkItem>, metrics: A
 
     for item in rx.iter() {
         metrics.queue_depth.fetch_sub(1, Ordering::Relaxed);
+        metrics.in_flight.fetch_add(1, Ordering::Relaxed);
         let queue_s = item.enqueued.elapsed().as_secs_f64();
         let t = Instant::now();
         let outcome = execute_artifact(&mut executor, &item.spec);
         let exec_s = t.elapsed().as_secs_f64();
         metrics.record_exec(exec_s, queue_s, outcome.is_ok());
+        metrics.in_flight.fetch_sub(1, Ordering::Relaxed);
         let _ = item.reply.send(JobResult {
             id: item.id,
             outcome,

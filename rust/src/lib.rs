@@ -41,6 +41,12 @@
 //!   runtime as unavailable and the service runs native-only.
 //! * [`coordinator`] — the factorization service: job queue, worker
 //!   pool, config router (artifact vs native engine), metrics.
+//! * [`server`] — the network service layer: a zero-dependency
+//!   HTTP/1.1 server (`std::net` + the in-tree JSON) in front of the
+//!   coordinator, plus the blocking client. Clients ship compact job
+//!   *specs* — generator seeds, server-side file paths, CSR skeletons —
+//!   because S-RSVD never needs the shifted matrix materialized;
+//!   queue-full maps to `503` backpressure. `srsvd serve --listen`.
 //! * [`experiments`] — one runner per paper figure/table, shared by
 //!   `examples/` and `benches/`.
 //! * [`bench`] / [`prop`] — mini criterion / proptest substitutes
@@ -92,6 +98,7 @@ pub mod parallel;
 pub mod prop;
 pub mod rng;
 pub mod runtime;
+pub mod server;
 pub mod stats;
 pub mod svd;
 pub mod util;

@@ -3,7 +3,8 @@
 //! ```text
 //! srsvd factorize --dist uniform --m 100 --n 1000 --k 10 ...   one-shot PCA
 //!                 [--stream --stream-budget-mb 16]              out-of-core input
-//! srsvd serve     --jobs 32 --workers 2 ...                    run the service demo
+//! srsvd serve     --listen 127.0.0.1:7878 ...                  run the HTTP service
+//! srsvd serve     --jobs 32 --workers 2 ...                    synthetic in-process demo
 //! srsvd experiment --id fig1a ...                              regenerate a paper artifact
 //! srsvd artifacts [--dir artifacts]                            inspect the AOT manifest
 //! ```
@@ -18,6 +19,7 @@ use srsvd::experiments::{fig1, k_grid, table1};
 use srsvd::linalg::{Dense, GeneratorSource, StreamConfig};
 use srsvd::rng::Xoshiro256pp;
 use srsvd::runtime::Manifest;
+use srsvd::server::Server;
 use srsvd::svd::SvdConfig;
 use srsvd::util::Result;
 
@@ -61,7 +63,8 @@ fn print_root_help() {
         "srsvd — Shifted Randomized SVD (Basirat 2019) reproduction\n\n\
          COMMANDS:\n\
          \x20 factorize   one-shot PCA of a generated matrix\n\
-         \x20 serve       run the factorization service on a synthetic job stream\n\
+         \x20 serve       run the factorization service: --listen ADDR for the\n\
+         \x20             HTTP server, or a synthetic in-process job stream\n\
          \x20 experiment  regenerate a paper figure/table\n\
          \x20             (fig1a..fig1f, table1-images, table1-words)\n\
          \x20 artifacts   list the compiled AOT artifacts\n\n\
@@ -160,24 +163,32 @@ fn cmd_factorize(args: &[String]) -> Result<()> {
 }
 
 fn cmd_serve(args: &[String]) -> Result<()> {
-    let spec = ArgSpec::new("Run the factorization service on a synthetic job stream")
-        .opt("jobs", "32", "number of jobs to submit")
-        .opt("workers", "0", "native workers (0 = auto)")
-        .opt("queue", "64", "queue capacity")
-        .opt("threads", "0", "linalg pool threads (0 = auto / SRSVD_THREADS)")
-        .opt("config", "", "optional srsvd.conf path")
-        .opt("seed", "0", "rng seed")
-        .flag("native-only", "disable the artifact engine");
+    let spec = ArgSpec::new(
+        "Run the factorization service: an HTTP server (--listen) or a \
+         synthetic in-process job stream (default)",
+    )
+    .opt("listen", "", "bind the HTTP server on host:port (empty = demo mode)")
+    .opt("http-workers", "0", "HTTP connection workers (0 = config/default)")
+    .opt("max-body-mb", "0", "request body cap, MiB (0 = config/default)")
+    .opt("request-timeout-s", "0", "per-request timeout, seconds (0 = config/default)")
+    .opt("jobs", "32", "demo mode: number of jobs to submit")
+    .opt("workers", "0", "native workers (0 = auto)")
+    .opt("queue", "64", "queue capacity")
+    .opt("threads", "0", "linalg pool threads (0 = auto / SRSVD_THREADS)")
+    .opt("config", "", "optional srsvd.conf path")
+    .opt("seed", "0", "rng seed")
+    .flag("native-only", "disable the artifact engine");
     let a = spec.parse(args)?;
     if a.help {
         print!("{}", spec.usage("srsvd serve"));
         return Ok(());
     }
-    let mut cfg = if a.get("config").is_empty() {
-        CoordinatorConfig::default()
+    let raw = if a.get("config").is_empty() {
+        RawConfig::default()
     } else {
-        RawConfig::load(std::path::Path::new(a.get("config")))?.coordinator()?
+        RawConfig::load(std::path::Path::new(a.get("config")))?
     };
+    let mut cfg = raw.coordinator()?;
     if a.get_usize("workers")? > 0 {
         cfg.native_workers = a.get_usize("workers")?;
     }
@@ -188,6 +199,11 @@ fn cmd_serve(args: &[String]) -> Result<()> {
     if a.has_flag("native-only") {
         cfg.artifact_dir = None;
     }
+
+    if !a.get("listen").is_empty() {
+        return serve_http(&a, raw, cfg);
+    }
+
     let jobs = a.get_usize("jobs")?;
     let seed = a.get_u64("seed")?;
 
@@ -214,6 +230,32 @@ fn cmd_serve(args: &[String]) -> Result<()> {
         jobs as f64 / wall
     );
     coord.shutdown();
+    Ok(())
+}
+
+/// `serve --listen`: the real HTTP service in front of a coordinator.
+/// Runs until the process is killed.
+fn serve_http(a: &srsvd::cli::Args, raw: RawConfig, cfg: CoordinatorConfig) -> Result<()> {
+    let mut scfg = raw.server()?;
+    scfg.addr = a.get("listen").to_string();
+    if a.get_usize("http-workers")? > 0 {
+        scfg.workers = a.get_usize("http-workers")?;
+    }
+    if a.get_usize("max-body-mb")? > 0 {
+        scfg.max_body_bytes = a.get_usize("max-body-mb")? << 20;
+    }
+    if a.get_usize("request-timeout-s")? > 0 {
+        scfg.request_timeout_s = a.get_usize("request-timeout-s")? as u64;
+    }
+    let stream_defaults = raw.stream()?;
+    let coord = std::sync::Arc::new(Coordinator::start(cfg)?);
+    let server = Server::bind(coord, &scfg, stream_defaults)?;
+    println!("srsvd service listening on http://{}", server.local_addr());
+    println!("  POST /v1/jobs        submit a job spec (dense | csr | generator | file)");
+    println!("  GET  /v1/jobs/{{id}}   block for a submitted job's result");
+    println!("  GET  /metrics        service counters as JSON");
+    println!("  GET  /healthz        liveness probe");
+    server.join();
     Ok(())
 }
 

@@ -1,0 +1,273 @@
+//! A std-only blocking HTTP client for the factorization service.
+//!
+//! Used by the CLI, the loopback tests (`rust/tests/server.rs`),
+//! `examples/remote_jobs.rs` and `benches/serve_throughput.rs` — no
+//! external HTTP crate exists in the offline environment. One
+//! [`Client`] owns one keep-alive connection; a stale connection
+//! (server idle-limit, restart) is re-established transparently with a
+//! single retry.
+
+use std::io::{Read, Write};
+use std::net::TcpStream;
+use std::time::Duration;
+
+use crate::util::json::Json;
+use crate::util::{Error, Result};
+
+use super::http::read_line_raw;
+use super::protocol::{parse_result, JobRequest, WireResult};
+
+/// Maximum header/status line the client accepts from a server.
+const MAX_LINE: usize = 8 << 10;
+
+/// What a non-waiting submit yielded.
+#[derive(Debug)]
+pub enum SubmitOutcome {
+    /// Accepted (`202`): fetch the result later with [`Client::wait`].
+    Queued(u64),
+    /// The server answered with the finished result (`"wait": true`).
+    Done(WireResult),
+}
+
+/// What a blocking `GET /v1/jobs/{id}` yielded.
+#[derive(Debug)]
+pub enum WaitOutcome {
+    /// The finished result; the server forgot the id.
+    Done(WireResult),
+    /// Still running when the wait timed out — call again.
+    Running,
+}
+
+/// Blocking JSON-over-HTTP client with one keep-alive connection.
+#[derive(Debug)]
+pub struct Client {
+    addr: String,
+    stream: Option<TcpStream>,
+    /// Requests already served on the current connection — when > 0 a
+    /// transport failure is plausibly a server-side idle close of the
+    /// keep-alive connection rather than a real fault.
+    served_on_stream: u64,
+    /// Socket read/write timeout.
+    timeout: Duration,
+    /// Largest response body the client will buffer.
+    max_body_bytes: usize,
+}
+
+impl Client {
+    /// Connect to `host:port` (eagerly, so a bad address fails here).
+    pub fn connect(addr: &str) -> Result<Client> {
+        Client::with_timeout(addr, Duration::from_secs(60))
+    }
+
+    /// [`Client::connect`] with an explicit socket timeout. Keep it
+    /// above the server's request timeout: a blocking `GET` is answered
+    /// (`202 running`) when the *server* side expires.
+    pub fn with_timeout(addr: &str, timeout: Duration) -> Result<Client> {
+        let mut c = Client {
+            addr: addr.to_string(),
+            stream: None,
+            served_on_stream: 0,
+            timeout,
+            max_body_bytes: 1 << 30,
+        };
+        c.reconnect()?;
+        Ok(c)
+    }
+
+    fn reconnect(&mut self) -> Result<()> {
+        let stream = TcpStream::connect(self.addr.as_str())
+            .map_err(|e| Error::Service(format!("connect {}: {e}", self.addr)))?;
+        stream
+            .set_read_timeout(Some(self.timeout))
+            .and_then(|()| stream.set_write_timeout(Some(self.timeout)))
+            .map_err(|e| Error::Service(format!("socket timeout: {e}")))?;
+        let _ = stream.set_nodelay(true);
+        self.stream = Some(stream);
+        self.served_on_stream = 0;
+        Ok(())
+    }
+
+    /// One request/response exchange; returns `(status, parsed body)`.
+    ///
+    /// Retry policy: only an idempotent (`GET`) request is retried,
+    /// and only when the failure hit a keep-alive connection that had
+    /// already served traffic (the server may have idle-closed it). A
+    /// failed `POST` is **never** resubmitted automatically — the
+    /// server may have accepted the job before the connection died,
+    /// and a blind resubmit would run it twice; the caller decides.
+    pub fn request(&mut self, method: &str, path: &str, body: Option<&Json>) -> Result<(u16, Json)> {
+        let maybe_stale = self.stream.is_some() && self.served_on_stream > 0;
+        match self.request_once(method, path, body) {
+            Ok(r) => Ok(r),
+            Err(e) => {
+                self.stream = None;
+                if maybe_stale && method == "GET" {
+                    self.request_once(method, path, body)
+                } else {
+                    Err(e)
+                }
+            }
+        }
+    }
+
+    fn request_once(
+        &mut self,
+        method: &str,
+        path: &str,
+        body: Option<&Json>,
+    ) -> Result<(u16, Json)> {
+        let addr = self.addr.clone();
+        let max_body = self.max_body_bytes;
+        let payload = body.map(|j| j.to_string()).unwrap_or_default();
+        if self.stream.is_none() {
+            self.reconnect()?;
+        }
+        let stream = self.stream.as_mut().expect("stream just established");
+        let head = format!(
+            "{method} {path} HTTP/1.1\r\nhost: {addr}\r\ncontent-type: application/json\r\n\
+             content-length: {}\r\nconnection: keep-alive\r\n\r\n",
+            payload.len()
+        );
+        let io = |e: std::io::Error| Error::Service(format!("{method} {path}: {e}"));
+        stream.write_all(head.as_bytes()).map_err(io)?;
+        stream.write_all(payload.as_bytes()).map_err(io)?;
+        stream.flush().map_err(io)?;
+
+        let (status, body, keep) = read_response(stream, max_body).map_err(io)?;
+        self.served_on_stream += 1;
+        if !keep {
+            self.stream = None;
+        }
+        let text = String::from_utf8(body)
+            .map_err(|_| Error::Service(format!("{method} {path}: non-UTF-8 response")))?;
+        let json = if text.is_empty() {
+            Json::Null
+        } else {
+            Json::parse(&text)
+                .map_err(|e| Error::Service(format!("{method} {path}: bad response JSON: {e}")))?
+        };
+        Ok((status, json))
+    }
+
+    // ----- endpoint wrappers -----------------------------------------------
+
+    /// `GET /healthz`; `Ok` when the service answers 200.
+    pub fn health(&mut self) -> Result<()> {
+        let (status, body) = self.request("GET", "/healthz", None)?;
+        crate::ensure!(status == 200, "healthz: http {status}: {}", error_text(&body));
+        Ok(())
+    }
+
+    /// `GET /metrics`: the service counters as JSON.
+    pub fn metrics(&mut self) -> Result<Json> {
+        let (status, body) = self.request("GET", "/metrics", None)?;
+        crate::ensure!(status == 200, "metrics: http {status}: {}", error_text(&body));
+        Ok(body)
+    }
+
+    /// `POST /v1/jobs`. Queue-full surfaces as an `Err` whose message
+    /// carries `http 503` (the server's backpressure signal).
+    pub fn submit(&mut self, job: &JobRequest) -> Result<SubmitOutcome> {
+        let (status, body) = self.request("POST", "/v1/jobs", Some(&job.to_json()))?;
+        match status {
+            200 => Ok(SubmitOutcome::Done(parse_result(&body)?)),
+            202 => Ok(SubmitOutcome::Queued(body.get("id")?.as_u64()?)),
+            _ => Err(Error::Service(format!(
+                "submit: http {status}: {}",
+                error_text(&body)
+            ))),
+        }
+    }
+
+    /// Submit with `"wait": true` and insist on a finished result,
+    /// retrying the blocking `GET` if the server's per-request timeout
+    /// expires first.
+    pub fn submit_wait(&mut self, job: &JobRequest) -> Result<WireResult> {
+        let mut job = job.clone();
+        job.wait = true;
+        match self.submit(&job)? {
+            SubmitOutcome::Done(r) => Ok(r),
+            SubmitOutcome::Queued(id) => loop {
+                if let WaitOutcome::Done(r) = self.wait(id)? {
+                    return Ok(r);
+                }
+            },
+        }
+    }
+
+    /// Blocking `GET /v1/jobs/{id}` (server-side request timeout).
+    pub fn wait(&mut self, id: u64) -> Result<WaitOutcome> {
+        self.wait_path(&format!("/v1/jobs/{id}"))
+    }
+
+    /// [`Client::wait`] with an explicit `?timeout_s=` (seconds, capped
+    /// by the server's request timeout).
+    pub fn wait_timeout(&mut self, id: u64, seconds: f64) -> Result<WaitOutcome> {
+        self.wait_path(&format!("/v1/jobs/{id}?timeout_s={seconds}"))
+    }
+
+    fn wait_path(&mut self, path: &str) -> Result<WaitOutcome> {
+        let (status, body) = self.request("GET", path, None)?;
+        match status {
+            200 => Ok(WaitOutcome::Done(parse_result(&body)?)),
+            202 => Ok(WaitOutcome::Running),
+            _ => Err(Error::Service(format!(
+                "wait: http {status}: {}",
+                error_text(&body)
+            ))),
+        }
+    }
+}
+
+fn error_text(body: &Json) -> String {
+    body.get("error")
+        .and_then(|e| e.as_str().map(str::to_string))
+        .unwrap_or_else(|_| body.to_string())
+}
+
+/// Parse one HTTP response: `(status, body, keep_alive)`.
+fn read_response(
+    stream: &mut TcpStream,
+    max_body: usize,
+) -> std::io::Result<(u16, Vec<u8>, bool)> {
+    let bad = |msg: &str| std::io::Error::new(std::io::ErrorKind::InvalidData, msg.to_string());
+    let status_line = read_line_raw(stream, MAX_LINE, None)?
+        .ok_or_else(|| bad("connection closed before the status line"))?;
+    let status_line = String::from_utf8(status_line).map_err(|_| bad("non-UTF-8 status line"))?;
+    let mut parts = status_line.split_whitespace();
+    let (version, status) = match (parts.next(), parts.next()) {
+        (Some(v), Some(s)) => (v, s),
+        _ => return Err(bad("malformed status line")),
+    };
+    if !version.starts_with("HTTP/1.") {
+        return Err(bad("not an HTTP response"));
+    }
+    let status: u16 = status.parse().map_err(|_| bad("bad status code"))?;
+
+    let mut content_length: Option<usize> = None;
+    let mut keep_alive = true;
+    loop {
+        let line = read_line_raw(stream, MAX_LINE, None)?.ok_or_else(|| bad("eof in headers"))?;
+        if line.is_empty() {
+            break;
+        }
+        let line = String::from_utf8(line).map_err(|_| bad("non-UTF-8 header"))?;
+        let Some((name, value)) = line.split_once(':') else {
+            return Err(bad("malformed header"));
+        };
+        let name = name.trim().to_ascii_lowercase();
+        let value = value.trim();
+        if name == "content-length" {
+            content_length = Some(value.parse().map_err(|_| bad("bad content-length"))?);
+        } else if name == "connection" && value.eq_ignore_ascii_case("close") {
+            keep_alive = false;
+        }
+    }
+    let len = content_length.ok_or_else(|| bad("response without content-length"))?;
+    if len > max_body {
+        return Err(bad("response body too large"));
+    }
+    let mut body = vec![0u8; len];
+    stream.read_exact(&mut body)?;
+    Ok((status, body, keep_alive))
+}

@@ -1,0 +1,561 @@
+//! Minimal HTTP/1.1 over `std::net` (no hyper/tokio — the crate is
+//! zero-dependency by policy).
+//!
+//! This is the subset the factorization service needs, hardened as a
+//! network attack surface:
+//!
+//! * request line + headers are read byte-wise with hard caps on line
+//!   length and header count (no unbounded buffering on hostile input);
+//! * bodies require `Content-Length` and are capped by
+//!   [`HttpLimits::max_body_bytes`] (an oversized request is answered
+//!   with `413` without reading the payload);
+//! * `Transfer-Encoding` is not implemented and answered with `501`
+//!   rather than misparsed;
+//! * the caller supplies a whole-exchange deadline: reads run under a
+//!   short per-read socket timeout and re-check the deadline on every
+//!   slow slice, so a byte-trickling client gets `408` when the
+//!   deadline passes instead of pinning a connection worker (see
+//!   `server/mod.rs` for the idle-poll scheme);
+//! * keep-alive follows HTTP/1.1 defaults (`Connection: close` /
+//!   HTTP/1.0 opt-in honored).
+//!
+//! Parsing is transport-agnostic (`impl Read`/`impl Write`), so the
+//! unit tests drive it from in-memory cursors and the client
+//! ([`crate::server::client`]) reuses the line reader for responses.
+
+use std::io::{ErrorKind, Read, Write};
+use std::time::Instant;
+
+use crate::util::json::Json;
+
+/// Hard limits applied while parsing one request.
+#[derive(Debug, Clone, Copy)]
+pub struct HttpLimits {
+    /// Maximum accepted `Content-Length`; larger bodies get `413`.
+    pub max_body_bytes: usize,
+    /// Maximum length of one header (or request) line, bytes.
+    pub max_line_bytes: usize,
+    /// Maximum number of headers.
+    pub max_headers: usize,
+}
+
+impl Default for HttpLimits {
+    fn default() -> Self {
+        HttpLimits {
+            max_body_bytes: 64 << 20,
+            max_line_bytes: 8 << 10,
+            max_headers: 64,
+        }
+    }
+}
+
+/// One parsed request.
+#[derive(Debug)]
+pub struct Request {
+    /// Method verb, uppercase (`GET`, `POST`, ...).
+    pub method: String,
+    /// Path component of the target (no query string).
+    pub path: String,
+    /// Raw query string (without the `?`), empty when absent.
+    pub query: String,
+    /// Headers in arrival order; names lowercased, values trimmed.
+    pub headers: Vec<(String, String)>,
+    /// The body (empty unless `Content-Length` was given).
+    pub body: Vec<u8>,
+    /// Whether the connection should stay open after the response.
+    pub keep_alive: bool,
+    /// Bytes consumed off the wire by this request (for metrics).
+    pub bytes_read: u64,
+}
+
+impl Request {
+    /// First header value with the given (lowercase) name.
+    pub fn header(&self, name: &str) -> Option<&str> {
+        self.headers
+            .iter()
+            .find(|(n, _)| n == name)
+            .map(|(_, v)| v.as_str())
+    }
+}
+
+/// What reading a request yielded.
+#[derive(Debug)]
+pub enum ReadOutcome {
+    /// A complete request.
+    Request(Request),
+    /// The peer closed the connection before sending anything.
+    Closed,
+}
+
+/// Why a request could not be read.
+#[derive(Debug)]
+pub enum HttpError {
+    /// Protocol-level problem: answer with this status, then close.
+    Respond {
+        /// HTTP status to answer with.
+        status: u16,
+        /// Human-readable reason (becomes the JSON error body).
+        msg: String,
+    },
+    /// Transport-level problem: drop the connection silently.
+    Drop(String),
+}
+
+impl HttpError {
+    fn respond(status: u16, msg: impl Into<String>) -> HttpError {
+        HttpError::Respond { status, msg: msg.into() }
+    }
+}
+
+/// On a short-timeout read error: keep going while a whole-exchange
+/// `deadline` lies ahead, fail with `TimedOut` once it has passed (or
+/// immediately when no deadline was given).
+fn timeout_gate(deadline: Option<Instant>) -> std::io::Result<()> {
+    match deadline {
+        Some(d) if Instant::now() < d => Ok(()),
+        _ => Err(std::io::Error::new(
+            ErrorKind::TimedOut,
+            "request deadline exceeded",
+        )),
+    }
+}
+
+/// Read one line (terminated by `\n`, `\r` stripped) byte-wise.
+/// `Ok(None)` means clean EOF before any byte. Only header-sized data
+/// comes through here — bodies use [`read_full`] below. The server
+/// passes a short per-read socket timeout plus a whole-exchange
+/// `deadline`: each slow read slice re-checks the deadline, so a
+/// byte-trickling client cannot pin a connection worker past it.
+pub(crate) fn read_line_raw<R: Read>(
+    r: &mut R,
+    max_len: usize,
+    deadline: Option<Instant>,
+) -> std::io::Result<Option<Vec<u8>>> {
+    let mut line = Vec::new();
+    let mut byte = [0u8; 1];
+    loop {
+        match r.read(&mut byte) {
+            Ok(0) => {
+                if line.is_empty() {
+                    return Ok(None);
+                }
+                return Err(std::io::Error::new(
+                    ErrorKind::UnexpectedEof,
+                    "eof mid-line",
+                ));
+            }
+            Ok(_) => {
+                if byte[0] == b'\n' {
+                    if line.last() == Some(&b'\r') {
+                        line.pop();
+                    }
+                    return Ok(Some(line));
+                }
+                line.push(byte[0]);
+                if line.len() > max_len {
+                    return Err(std::io::Error::new(
+                        ErrorKind::InvalidData,
+                        "line too long",
+                    ));
+                }
+            }
+            Err(e) if e.kind() == ErrorKind::Interrupted => continue,
+            Err(e) if is_timeout(&e) => timeout_gate(deadline)?,
+            Err(e) => return Err(e),
+        }
+    }
+}
+
+/// Fill `buf` completely (deadline-aware `read_exact`).
+fn read_full<R: Read>(
+    r: &mut R,
+    buf: &mut [u8],
+    deadline: Option<Instant>,
+) -> std::io::Result<()> {
+    let mut filled = 0;
+    while filled < buf.len() {
+        match r.read(&mut buf[filled..]) {
+            Ok(0) => {
+                return Err(std::io::Error::new(ErrorKind::UnexpectedEof, "eof in body"))
+            }
+            Ok(n) => filled += n,
+            Err(e) if e.kind() == ErrorKind::Interrupted => continue,
+            Err(e) if is_timeout(&e) => timeout_gate(deadline)?,
+            Err(e) => return Err(e),
+        }
+    }
+    Ok(())
+}
+
+/// Whether an IO error is a (socket) timeout rather than a real fault.
+/// Shared with the connection handler's idle poll in `server/mod.rs`.
+pub(crate) fn is_timeout(e: &std::io::Error) -> bool {
+    matches!(e.kind(), ErrorKind::WouldBlock | ErrorKind::TimedOut)
+}
+
+fn line_err(e: std::io::Error, what: &str) -> HttpError {
+    if is_timeout(&e) {
+        HttpError::respond(408, format!("timed out reading {what}"))
+    } else if e.kind() == ErrorKind::InvalidData {
+        HttpError::respond(431, format!("{what} line too long"))
+    } else {
+        HttpError::Drop(format!("reading {what}: {e}"))
+    }
+}
+
+/// Read and parse one request. The caller owns the socket's (short,
+/// per-read) timeout; `deadline` bounds the **whole exchange** — once
+/// it passes, the next slow read fails and maps to `408`. `None` makes
+/// any single read timeout immediately fatal.
+pub fn read_request<R: Read>(
+    r: &mut R,
+    limits: &HttpLimits,
+    deadline: Option<Instant>,
+) -> Result<ReadOutcome, HttpError> {
+    let mut bytes_read: u64 = 0;
+
+    // Request line.
+    let line = match read_line_raw(r, limits.max_line_bytes, deadline) {
+        Ok(None) => return Ok(ReadOutcome::Closed),
+        Ok(Some(l)) => l,
+        Err(e) => return Err(line_err(e, "request")),
+    };
+    bytes_read += line.len() as u64 + 2;
+    let line = String::from_utf8(line)
+        .map_err(|_| HttpError::respond(400, "request line is not UTF-8"))?;
+    let mut parts = line.split_whitespace();
+    let (method, target, version) = match (parts.next(), parts.next(), parts.next()) {
+        (Some(m), Some(t), Some(v)) if parts.next().is_none() => {
+            (m.to_string(), t.to_string(), v.to_string())
+        }
+        _ => {
+            return Err(HttpError::respond(
+                400,
+                format!("malformed request line {line:?}"),
+            ))
+        }
+    };
+    if version != "HTTP/1.1" && version != "HTTP/1.0" {
+        return Err(HttpError::respond(
+            505,
+            format!("unsupported version {version:?}"),
+        ));
+    }
+    let (path, query) = match target.split_once('?') {
+        Some((p, q)) => (p.to_string(), q.to_string()),
+        None => (target, String::new()),
+    };
+
+    // Headers.
+    let mut headers: Vec<(String, String)> = Vec::new();
+    loop {
+        let line = match read_line_raw(r, limits.max_line_bytes, deadline) {
+            Ok(None) => return Err(HttpError::Drop("eof in headers".into())),
+            Ok(Some(l)) => l,
+            Err(e) => return Err(line_err(e, "header")),
+        };
+        bytes_read += line.len() as u64 + 2;
+        if line.is_empty() {
+            break;
+        }
+        if headers.len() >= limits.max_headers {
+            return Err(HttpError::respond(431, "too many headers"));
+        }
+        let line = String::from_utf8(line)
+            .map_err(|_| HttpError::respond(400, "header is not UTF-8"))?;
+        let Some((name, value)) = line.split_once(':') else {
+            return Err(HttpError::respond(400, format!("malformed header {line:?}")));
+        };
+        headers.push((name.trim().to_ascii_lowercase(), value.trim().to_string()));
+    }
+
+    // Keep-alive: HTTP/1.1 defaults on, HTTP/1.0 defaults off.
+    let mut keep_alive = version == "HTTP/1.1";
+    if let Some(c) = headers.iter().find(|(n, _)| n == "connection") {
+        match c.1.to_ascii_lowercase().as_str() {
+            "close" => keep_alive = false,
+            "keep-alive" => keep_alive = true,
+            _ => {}
+        }
+    }
+
+    // Body.
+    let header_of = |name: &str| {
+        headers
+            .iter()
+            .find(|(n, _)| n == name)
+            .map(|(_, v)| v.clone())
+    };
+    if header_of("transfer-encoding").is_some() {
+        return Err(HttpError::respond(501, "transfer-encoding not supported"));
+    }
+    let mut body = Vec::new();
+    match header_of("content-length") {
+        Some(v) => {
+            let len: usize = v
+                .parse()
+                .map_err(|_| HttpError::respond(400, format!("bad content-length {v:?}")))?;
+            if len > limits.max_body_bytes {
+                return Err(HttpError::respond(
+                    413,
+                    format!(
+                        "body of {len} bytes exceeds the {}-byte limit",
+                        limits.max_body_bytes
+                    ),
+                ));
+            }
+            body.resize(len, 0);
+            if let Err(e) = read_full(r, &mut body, deadline) {
+                return Err(if is_timeout(&e) {
+                    HttpError::respond(408, "timed out reading body")
+                } else {
+                    HttpError::Drop(format!("reading body: {e}"))
+                });
+            }
+            bytes_read += len as u64;
+        }
+        None => {
+            if method == "POST" || method == "PUT" {
+                return Err(HttpError::respond(411, "content-length required"));
+            }
+        }
+    }
+
+    Ok(ReadOutcome::Request(Request {
+        method,
+        path,
+        query,
+        headers,
+        body,
+        keep_alive,
+        bytes_read,
+    }))
+}
+
+/// A response ready to serialize.
+#[derive(Debug)]
+pub struct Response {
+    /// HTTP status code.
+    pub status: u16,
+    /// Response payload.
+    pub body: Vec<u8>,
+    /// `Content-Type` header value.
+    pub content_type: &'static str,
+}
+
+impl Response {
+    /// A JSON response.
+    pub fn json(status: u16, v: &Json) -> Response {
+        Response {
+            status,
+            body: v.to_string().into_bytes(),
+            content_type: "application/json",
+        }
+    }
+
+    /// A JSON error envelope `{"error": msg}`.
+    pub fn error(status: u16, msg: &str) -> Response {
+        Response::json(status, &Json::obj(vec![("error", Json::str(msg))]))
+    }
+
+    /// Serialize status line, headers and body; returns bytes written.
+    pub fn write_to<W: Write>(&self, w: &mut W, keep_alive: bool) -> std::io::Result<u64> {
+        let head = format!(
+            "HTTP/1.1 {} {}\r\ncontent-type: {}\r\ncontent-length: {}\r\nconnection: {}\r\n\r\n",
+            self.status,
+            reason(self.status),
+            self.content_type,
+            self.body.len(),
+            if keep_alive { "keep-alive" } else { "close" },
+        );
+        w.write_all(head.as_bytes())?;
+        w.write_all(&self.body)?;
+        w.flush()?;
+        Ok((head.len() + self.body.len()) as u64)
+    }
+}
+
+/// Reason phrase for the status codes this server emits.
+pub fn reason(status: u16) -> &'static str {
+    match status {
+        200 => "OK",
+        202 => "Accepted",
+        400 => "Bad Request",
+        404 => "Not Found",
+        405 => "Method Not Allowed",
+        408 => "Request Timeout",
+        411 => "Length Required",
+        413 => "Payload Too Large",
+        431 => "Request Header Fields Too Large",
+        500 => "Internal Server Error",
+        501 => "Not Implemented",
+        503 => "Service Unavailable",
+        505 => "HTTP Version Not Supported",
+        _ => "Status",
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Cursor;
+
+    fn parse(text: &str) -> Result<ReadOutcome, HttpError> {
+        read_request(
+            &mut Cursor::new(text.as_bytes().to_vec()),
+            &HttpLimits::default(),
+            None,
+        )
+    }
+
+    fn request(text: &str) -> Request {
+        match parse(text).unwrap() {
+            ReadOutcome::Request(r) => r,
+            other => panic!("expected a request, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn parses_get() {
+        let r = request("GET /v1/jobs/7?timeout_s=2 HTTP/1.1\r\nHost: x\r\n\r\n");
+        assert_eq!(r.method, "GET");
+        assert_eq!(r.path, "/v1/jobs/7");
+        assert_eq!(r.query, "timeout_s=2");
+        assert_eq!(r.header("host"), Some("x"));
+        assert!(r.keep_alive);
+        assert!(r.body.is_empty());
+    }
+
+    #[test]
+    fn parses_post_with_body() {
+        let r = request("POST /v1/jobs HTTP/1.1\r\nContent-Length: 4\r\n\r\nabcd");
+        assert_eq!(r.method, "POST");
+        assert_eq!(r.body, b"abcd");
+        assert!(r.bytes_read >= 4);
+    }
+
+    #[test]
+    fn keep_alive_rules() {
+        assert!(request("GET / HTTP/1.1\r\n\r\n").keep_alive);
+        assert!(!request("GET / HTTP/1.1\r\nConnection: close\r\n\r\n").keep_alive);
+        assert!(!request("GET / HTTP/1.0\r\n\r\n").keep_alive);
+        assert!(request("GET / HTTP/1.0\r\nConnection: keep-alive\r\n\r\n").keep_alive);
+    }
+
+    fn respond_status(r: Result<ReadOutcome, HttpError>) -> u16 {
+        match r {
+            Err(HttpError::Respond { status, .. }) => status,
+            other => panic!("expected Respond, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn rejects_malformed() {
+        assert_eq!(respond_status(parse("GARBAGE\r\n\r\n")), 400);
+        assert_eq!(respond_status(parse("GET / SMTP/9\r\n\r\n")), 505);
+        assert_eq!(respond_status(parse("GET / HTTP/1.1\r\nnocolon\r\n\r\n")), 400);
+        assert_eq!(respond_status(parse("POST / HTTP/1.1\r\n\r\n")), 411);
+        assert_eq!(
+            respond_status(parse("POST / HTTP/1.1\r\nTransfer-Encoding: chunked\r\n\r\n")),
+            501
+        );
+    }
+
+    #[test]
+    fn caps_body_size() {
+        let limits = HttpLimits { max_body_bytes: 8, ..Default::default() };
+        let text = "POST / HTTP/1.1\r\nContent-Length: 9\r\n\r\n123456789";
+        let err = read_request(&mut Cursor::new(text.as_bytes().to_vec()), &limits, None);
+        assert_eq!(respond_status(err), 413);
+    }
+
+    #[test]
+    fn caps_header_line_and_count() {
+        let long = format!("GET /{} HTTP/1.1\r\n\r\n", "x".repeat(100_000));
+        assert_eq!(respond_status(parse(&long)), 431);
+        let many: String = (0..100).map(|i| format!("h{i}: v\r\n")).collect();
+        let text = format!("GET / HTTP/1.1\r\n{many}\r\n");
+        assert_eq!(respond_status(parse(&text)), 431);
+    }
+
+    #[test]
+    fn clean_eof_is_closed() {
+        assert!(matches!(parse("").unwrap(), ReadOutcome::Closed));
+    }
+
+    /// Yields its bytes one at a time, then stalls with `WouldBlock`
+    /// forever — a byte-trickling (slow-loris) client.
+    struct Trickle {
+        data: Vec<u8>,
+        pos: usize,
+        stall_between: bool,
+        stalled: bool,
+    }
+
+    impl Read for Trickle {
+        fn read(&mut self, buf: &mut [u8]) -> std::io::Result<usize> {
+            if self.stall_between && !self.stalled {
+                self.stalled = true;
+                return Err(std::io::Error::new(ErrorKind::WouldBlock, "stall"));
+            }
+            self.stalled = false;
+            if self.pos < self.data.len() {
+                buf[0] = self.data[self.pos];
+                self.pos += 1;
+                Ok(1)
+            } else {
+                Err(std::io::Error::new(ErrorKind::WouldBlock, "stall"))
+            }
+        }
+    }
+
+    #[test]
+    fn expired_deadline_stops_a_trickling_request() {
+        // Partial request line, then an endless stall: the first slow
+        // slice after the deadline maps to 408 — the parser never spins.
+        let mut r = Trickle {
+            data: b"GET / HT".to_vec(),
+            pos: 0,
+            stall_between: false,
+            stalled: false,
+        };
+        let err = read_request(&mut r, &HttpLimits::default(), Some(Instant::now()));
+        assert_eq!(respond_status(err), 408);
+    }
+
+    #[test]
+    fn future_deadline_rides_out_slow_slices() {
+        // A timeout slice between every byte is fine while the
+        // whole-exchange deadline lies ahead.
+        let mut r = Trickle {
+            data: b"POST /v1/jobs HTTP/1.1\r\nContent-Length: 2\r\n\r\nok".to_vec(),
+            pos: 0,
+            stall_between: true,
+            stalled: false,
+        };
+        let deadline = Instant::now() + std::time::Duration::from_secs(60);
+        match read_request(&mut r, &HttpLimits::default(), Some(deadline)).unwrap() {
+            ReadOutcome::Request(req) => assert_eq!(req.body, b"ok"),
+            other => panic!("expected a request, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn response_serializes() {
+        let mut out = Vec::new();
+        let n = Response::json(200, &Json::obj(vec![("ok", Json::Bool(true))]))
+            .write_to(&mut out, true)
+            .unwrap();
+        let text = String::from_utf8(out).unwrap();
+        assert!(text.starts_with("HTTP/1.1 200 OK\r\n"), "{text}");
+        assert!(text.contains("content-length: 11"), "{text}");
+        assert!(text.contains("connection: keep-alive"), "{text}");
+        assert!(text.ends_with("{\"ok\":true}"), "{text}");
+        assert_eq!(n, text.len() as u64);
+        let mut out = Vec::new();
+        Response::error(503, "queue full").write_to(&mut out, false).unwrap();
+        let text = String::from_utf8(out).unwrap();
+        assert!(text.starts_with("HTTP/1.1 503 Service Unavailable\r\n"), "{text}");
+        assert!(text.contains("connection: close"), "{text}");
+    }
+}

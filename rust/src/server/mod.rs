@@ -1,0 +1,483 @@
+//! The network service layer — HTTP in front of the
+//! [`Coordinator`](crate::coordinator::Coordinator).
+//!
+//! `srsvd serve --listen ADDR` turns the in-process factorization
+//! service into a wire service: clients `POST` compact job specs
+//! (dense payloads, CSR skeletons, generator seeds, or server-side
+//! file paths — see [`protocol`]) and read factors back as JSON. The
+//! stack is std-only ([`std::net::TcpListener`] + the in-tree
+//! [`crate::util::json`]), matching the crate's zero-dependency policy.
+//!
+//! ## Architecture
+//!
+//! One **accept thread** pushes connections into a bounded channel; a
+//! small pool of **connection workers** (the `[server] workers` knob)
+//! drains it, mirroring the shared-queue pattern of
+//! [`crate::parallel`]. Each worker speaks HTTP/1.1 with keep-alive
+//! ([`http`]), polling between requests so shutdown and idle limits
+//! are enforced without interrupting an in-flight exchange.
+//!
+//! ## Endpoints
+//!
+//! | Method | Path | Meaning |
+//! |--------|------|---------|
+//! | `POST` | `/v1/jobs` | Submit a job spec. `"wait": true` answers with the finished result; otherwise `202` + id. |
+//! | `GET` | `/v1/jobs/{id}` | Block (up to the request timeout, or `?timeout_s=`) for a submitted job's result. |
+//! | `GET` | `/metrics` | Service counters + gauges as JSON ([`protocol::metrics_to_json`]). |
+//! | `GET` | `/healthz` | Liveness probe. |
+//!
+//! ## Backpressure
+//!
+//! Admission control is the coordinator's own bounded queue: the
+//! server submits with
+//! [`try_submit`](crate::coordinator::Coordinator::try_submit) and maps
+//! queue-full to **`503 Service Unavailable`** — a saturated service
+//! sheds load immediately instead of stacking blocked connections. The
+//! `queue_depth`/`in_flight` gauges in `/metrics` expose the same
+//! signal to pollers.
+//!
+//! ## Shutdown
+//!
+//! [`Server::shutdown`] stops accepting, lets every in-flight request
+//! finish (responses are written before the connection closes), then
+//! joins all threads. Queued-but-unclaimed job handles are dropped;
+//! the coordinator still completes those jobs.
+
+pub mod client;
+pub mod http;
+pub mod protocol;
+
+pub use client::Client;
+
+use std::collections::HashMap;
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::mpsc::{sync_channel, Receiver, SyncSender};
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+use crate::coordinator::{Coordinator, JobHandle, Metrics};
+use crate::linalg::stream::StreamConfig;
+use crate::util::json::Json;
+use crate::util::{Error, Result};
+
+use http::{HttpError, HttpLimits, ReadOutcome, Request, Response};
+
+/// How often idle connections poll for data / shutdown.
+const IDLE_POLL: Duration = Duration::from_millis(200);
+
+/// Network service configuration — the `[server]` config section.
+#[derive(Debug, Clone)]
+pub struct ServerConfig {
+    /// Listen address (`host:port`; port 0 picks a free port).
+    pub addr: String,
+    /// Maximum accepted request body, bytes (`[server] max_body_mb`).
+    pub max_body_bytes: usize,
+    /// Connection worker threads.
+    pub workers: usize,
+    /// Per-request timeout in seconds: reading a request, waiting on a
+    /// blocking `GET`, and the keep-alive idle limit.
+    pub request_timeout_s: u64,
+}
+
+impl Default for ServerConfig {
+    fn default() -> Self {
+        ServerConfig {
+            addr: "127.0.0.1:7878".into(),
+            max_body_bytes: 64 << 20,
+            workers: 4,
+            request_timeout_s: 30,
+        }
+    }
+}
+
+struct Shared {
+    coord: Arc<Coordinator>,
+    metrics: Arc<Metrics>,
+    /// Handles of accepted-but-unclaimed jobs, keyed by id, awaiting a
+    /// blocking `GET /v1/jobs/{id}`.
+    pending: Mutex<HashMap<u64, JobHandle>>,
+    shutdown: AtomicBool,
+    limits: HttpLimits,
+    request_timeout: Duration,
+    stream_defaults: StreamConfig,
+}
+
+/// A running HTTP server bound to a socket.
+pub struct Server {
+    local_addr: SocketAddr,
+    shared: Arc<Shared>,
+    accept_handle: Option<std::thread::JoinHandle<()>>,
+    worker_handles: Vec<std::thread::JoinHandle<()>>,
+}
+
+impl Server {
+    /// Bind `config.addr` and start the accept loop plus connection
+    /// workers in front of `coord`. `stream_defaults` (the `[stream]`
+    /// config section) governs generator/file jobs that don't pin their
+    /// own block policy.
+    pub fn bind(
+        coord: Arc<Coordinator>,
+        config: &ServerConfig,
+        stream_defaults: StreamConfig,
+    ) -> Result<Server> {
+        crate::util::logging::init();
+        let listener = TcpListener::bind(config.addr.as_str())
+            .map_err(|e| Error::Service(format!("bind {}: {e}", config.addr)))?;
+        let local_addr = listener
+            .local_addr()
+            .map_err(|e| Error::Service(format!("local_addr: {e}")))?;
+        let metrics = coord.metrics_shared();
+        let shared = Arc::new(Shared {
+            coord,
+            metrics,
+            pending: Mutex::new(HashMap::new()),
+            shutdown: AtomicBool::new(false),
+            limits: HttpLimits {
+                max_body_bytes: config.max_body_bytes,
+                ..Default::default()
+            },
+            request_timeout: Duration::from_secs(config.request_timeout_s.max(1)),
+            stream_defaults,
+        });
+
+        let workers = config.workers.max(1);
+        let (conn_tx, conn_rx) = sync_channel::<TcpStream>(workers * 2);
+        let conn_rx = Arc::new(Mutex::new(conn_rx));
+        let mut worker_handles = Vec::with_capacity(workers);
+        for w in 0..workers {
+            let rx = Arc::clone(&conn_rx);
+            let sh = Arc::clone(&shared);
+            worker_handles.push(
+                std::thread::Builder::new()
+                    .name(format!("srsvd-http-{w}"))
+                    .spawn(move || worker_loop(rx, sh))
+                    .map_err(|e| Error::Service(format!("spawn http worker: {e}")))?,
+            );
+        }
+        let sh = Arc::clone(&shared);
+        let accept_handle = std::thread::Builder::new()
+            .name("srsvd-http-accept".into())
+            .spawn(move || accept_loop(listener, conn_tx, sh))
+            .map_err(|e| Error::Service(format!("spawn accept loop: {e}")))?;
+
+        crate::log_info!("server: listening on http://{local_addr} ({workers} connection workers)");
+        Ok(Server {
+            local_addr,
+            shared,
+            accept_handle: Some(accept_handle),
+            worker_handles,
+        })
+    }
+
+    /// The bound address (with the actual port when `addr` used port 0).
+    pub fn local_addr(&self) -> SocketAddr {
+        self.local_addr
+    }
+
+    /// Graceful shutdown: stop accepting, finish every in-flight
+    /// request, join all threads.
+    pub fn shutdown(mut self) {
+        self.shutdown_inner();
+    }
+
+    /// Block until the server stops (another thread calling
+    /// [`Server::shutdown`], or a fatal listener error). Used by
+    /// `srsvd serve --listen`, which runs until killed.
+    pub fn join(mut self) {
+        if let Some(h) = self.accept_handle.take() {
+            let _ = h.join();
+        }
+        for h in self.worker_handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+
+    fn shutdown_inner(&mut self) {
+        if self.accept_handle.is_none() {
+            return;
+        }
+        self.shared.shutdown.store(true, Ordering::SeqCst);
+        // Wake the blocked accept() with a throwaway connection.
+        let _ = TcpStream::connect(self.local_addr);
+        if let Some(h) = self.accept_handle.take() {
+            let _ = h.join();
+        }
+        // The accept thread owned the connection sender; its exit closes
+        // the channel, so workers drain what was queued and stop.
+        for h in self.worker_handles.drain(..) {
+            let _ = h.join();
+        }
+        self.shared.pending.lock().expect("pending jobs mutex").clear();
+    }
+}
+
+impl Drop for Server {
+    fn drop(&mut self) {
+        self.shutdown_inner();
+    }
+}
+
+fn accept_loop(listener: TcpListener, tx: SyncSender<TcpStream>, shared: Arc<Shared>) {
+    for stream in listener.incoming() {
+        if shared.shutdown.load(Ordering::SeqCst) {
+            break;
+        }
+        match stream {
+            // A full worker channel blocks here; the OS accept backlog
+            // absorbs the burst.
+            Ok(s) => {
+                if tx.send(s).is_err() {
+                    break;
+                }
+            }
+            Err(e) => {
+                // Back off briefly: a persistent accept error (e.g.
+                // EMFILE under fd exhaustion) must not become a hot
+                // spin + log flood.
+                crate::log_warn!("server accept: {e}");
+                std::thread::sleep(Duration::from_millis(50));
+            }
+        }
+    }
+}
+
+fn worker_loop(rx: Arc<Mutex<Receiver<TcpStream>>>, shared: Arc<Shared>) {
+    loop {
+        let stream = {
+            let guard = rx.lock().expect("connection queue mutex");
+            guard.recv()
+        };
+        let Ok(stream) = stream else { return };
+        handle_connection(&shared, stream);
+    }
+}
+
+/// Serve one connection: keep-alive request loop with an idle-poll
+/// phase (so shutdown is honored between requests, never during one).
+/// All reads run under the short [`IDLE_POLL`] socket timeout; during
+/// a request the parser re-checks a whole-exchange deadline on every
+/// slow slice, so a byte-trickling client is cut off with `408` after
+/// `request_timeout` no matter how it paces its bytes.
+fn handle_connection(shared: &Shared, mut stream: TcpStream) {
+    let _ = stream.set_nodelay(true);
+    let _ = stream.set_read_timeout(Some(IDLE_POLL));
+    let _ = stream.set_write_timeout(Some(shared.request_timeout));
+    'conn: loop {
+        // Idle phase: wait for the next request's first byte in short
+        // slices, checking the shutdown flag between slices.
+        let mut idled = Duration::ZERO;
+        let mut probe = [0u8; 1];
+        loop {
+            if shared.shutdown.load(Ordering::SeqCst) {
+                break 'conn;
+            }
+            match stream.peek(&mut probe) {
+                Ok(0) => break 'conn, // peer closed
+                Ok(_) => break,
+                Err(e) if http::is_timeout(&e) => {
+                    idled += IDLE_POLL;
+                    if idled >= shared.request_timeout {
+                        break 'conn; // keep-alive idle limit
+                    }
+                }
+                Err(_) => break 'conn,
+            }
+        }
+
+        // Request phase: one hard deadline for the whole exchange.
+        let deadline = Some(std::time::Instant::now() + shared.request_timeout);
+        match http::read_request(&mut stream, &shared.limits, deadline) {
+            Ok(ReadOutcome::Closed) => break,
+            Ok(ReadOutcome::Request(req)) => {
+                shared
+                    .metrics
+                    .http_bytes_in
+                    .fetch_add(req.bytes_read, Ordering::Relaxed);
+                let response = route(shared, &req);
+                // Stop reusing connections once shutdown begins, but
+                // only after the in-flight response is written.
+                let keep = req.keep_alive && !shared.shutdown.load(Ordering::SeqCst);
+                match response.write_to(&mut stream, keep) {
+                    Ok(n) => {
+                        shared.metrics.http_bytes_out.fetch_add(n, Ordering::Relaxed);
+                        if !keep {
+                            break;
+                        }
+                    }
+                    Err(_) => break,
+                }
+            }
+            Err(HttpError::Respond { status, msg }) => {
+                let response = Response::error(status, &msg);
+                if let Ok(n) = response.write_to(&mut stream, false) {
+                    shared.metrics.http_bytes_out.fetch_add(n, Ordering::Relaxed);
+                }
+                break;
+            }
+            Err(HttpError::Drop(_)) => break,
+        }
+    }
+}
+
+/// Value of `key` in a raw query string (`a=1&b=2`).
+fn query_param<'a>(query: &'a str, key: &str) -> Option<&'a str> {
+    query
+        .split('&')
+        .filter_map(|kv| kv.split_once('='))
+        .find(|(k, _)| *k == key)
+        .map(|(_, v)| v)
+}
+
+/// Whether a submit error is the coordinator's queue-full signal
+/// (`try_submit` backpressure) rather than a bad request.
+fn is_backpressure(e: &Error) -> bool {
+    matches!(e, Error::Busy(_))
+}
+
+fn route(shared: &Shared, req: &Request) -> Response {
+    match (req.method.as_str(), req.path.as_str()) {
+        ("GET", "/healthz") => {
+            Response::json(200, &Json::obj(vec![("status", Json::str("ok"))]))
+        }
+        ("GET", "/metrics") => {
+            Response::json(200, &protocol::metrics_to_json(&shared.coord.metrics()))
+        }
+        ("POST", "/v1/jobs") => submit_job(shared, req),
+        ("GET", path) if path.strip_prefix("/v1/jobs/").is_some() => wait_job(shared, req),
+        (_, "/healthz" | "/metrics" | "/v1/jobs") => {
+            Response::error(405, "method not allowed")
+        }
+        (_, path) if path.strip_prefix("/v1/jobs/").is_some() => {
+            Response::error(405, "method not allowed")
+        }
+        _ => Response::error(404, "no such endpoint"),
+    }
+}
+
+fn submit_job(shared: &Shared, req: &Request) -> Response {
+    let Ok(text) = std::str::from_utf8(&req.body) else {
+        return Response::error(400, "body is not UTF-8");
+    };
+    let parsed =
+        Json::parse(text).and_then(|j| protocol::parse_submit(&j, &shared.stream_defaults));
+    let sub = match parsed {
+        Ok(s) => s,
+        Err(e) => return Response::error(400, &format!("{e}")),
+    };
+    let handle = match shared.coord.try_submit(sub.spec) {
+        Ok(h) => h,
+        Err(e) if is_backpressure(&e) => {
+            shared.metrics.http_rejected.fetch_add(1, Ordering::Relaxed);
+            return Response::error(503, &format!("{e}"));
+        }
+        Err(e) => return Response::error(400, &format!("{e}")),
+    };
+    shared.metrics.http_accepted.fetch_add(1, Ordering::Relaxed);
+    let id = handle.id.0;
+    if sub.wait {
+        finish_wait(shared, id, handle)
+    } else {
+        shared
+            .pending
+            .lock()
+            .expect("pending jobs mutex")
+            .insert(id, handle);
+        Response::json(
+            202,
+            &Json::obj(vec![
+                ("id", Json::num(id as f64)),
+                ("status", Json::str("queued")),
+            ]),
+        )
+    }
+}
+
+fn wait_job(shared: &Shared, req: &Request) -> Response {
+    let id_text = req.path.strip_prefix("/v1/jobs/").unwrap_or("");
+    let Ok(id) = id_text.parse::<u64>() else {
+        return Response::error(400, &format!("bad job id {id_text:?}"));
+    };
+    let handle = shared
+        .pending
+        .lock()
+        .expect("pending jobs mutex")
+        .remove(&id);
+    let Some(handle) = handle else {
+        return Response::error(404, &format!("unknown (or already claimed) job {id}"));
+    };
+    // An explicit ?timeout_s= can only shorten the server-wide cap.
+    // (The range guard also keeps Duration::from_secs_f64 panic-free on
+    // hostile values like 1e300 or NaN.)
+    let timeout = match query_param(&req.query, "timeout_s").map(str::parse::<f64>) {
+        Some(Ok(s)) if (0.0..=86_400.0).contains(&s) => {
+            shared.request_timeout.min(Duration::from_secs_f64(s))
+        }
+        Some(_) => return Response::error(400, "bad timeout_s"),
+        None => shared.request_timeout,
+    };
+    finish_wait_with(shared, id, handle, timeout)
+}
+
+fn finish_wait(shared: &Shared, id: u64, handle: JobHandle) -> Response {
+    finish_wait_with(shared, id, handle, shared.request_timeout)
+}
+
+/// Block on a job handle; on timeout the handle goes (back) into the
+/// pending map and the client gets `202 running` to retry the `GET`.
+///
+/// Known limitation (tracked in ROADMAP): once a result is claimed,
+/// a failed response *write* drops it — re-parking would need a
+/// completed-result cache with a TTL; today the client must resubmit.
+fn finish_wait_with(shared: &Shared, id: u64, handle: JobHandle, timeout: Duration) -> Response {
+    match handle.wait_timeout(timeout) {
+        Ok(result) => Response::json(200, &protocol::job_result_to_json(&result)),
+        Err(Error::Timeout(_)) => {
+            shared
+                .pending
+                .lock()
+                .expect("pending jobs mutex")
+                .insert(id, handle);
+            Response::json(
+                202,
+                &Json::obj(vec![
+                    ("id", Json::num(id as f64)),
+                    ("status", Json::str("running")),
+                ]),
+            )
+        }
+        Err(e) => Response::error(500, &format!("{e}")),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn query_param_lookup() {
+        assert_eq!(query_param("timeout_s=2.5&x=1", "timeout_s"), Some("2.5"));
+        assert_eq!(query_param("x=1", "timeout_s"), None);
+        assert_eq!(query_param("", "timeout_s"), None);
+        assert_eq!(query_param("timeout_s", "timeout_s"), None);
+    }
+
+    #[test]
+    fn backpressure_detection() {
+        assert!(is_backpressure(&Error::Busy("queue full".into())));
+        assert!(!is_backpressure(&Error::Service("worker died".into())));
+        assert!(!is_backpressure(&Error::Timeout("job still running".into())));
+        assert!(!is_backpressure(&Error::Invalid("k must be >= 1".into())));
+        // The Display text is part of the wire contract (clients grep
+        // for it in 503 bodies) — pinned here.
+        assert!(format!("{}", Error::Busy("queue full".into())).contains("backpressure"));
+    }
+
+    #[test]
+    fn default_config_is_sane() {
+        let c = ServerConfig::default();
+        assert!(c.workers >= 1);
+        assert!(c.max_body_bytes >= 1 << 20);
+        assert!(c.request_timeout_s >= 1);
+    }
+}

@@ -1,0 +1,749 @@
+//! The JSON wire schema of the factorization service, built on the
+//! in-tree [`Json`] value (no serde — the crate is zero-dependency).
+//!
+//! The paper's point makes this protocol thin: S-RSVD factorizes the
+//! shifted matrix *without constructing it*, so a client ships a
+//! compact job **spec** — a generator seed, a server-side file path, a
+//! sparse CSR skeleton — rather than a dense payload. Only the
+//! `"dense"` input kind carries the matrix itself.
+//!
+//! ## Submit request (`POST /v1/jobs`)
+//!
+//! ```json
+//! {
+//!   "input":       {"kind": "dense", "m": 2, "n": 3, "data": [..6 numbers..]},
+//!   "k": 10,
+//!   "oversample":  10,            // optional, default k  (paper: K = 2k)
+//!   "power_iters": 0,             // optional, default 0
+//!   "basis":       "direct",      // optional: direct | qr-update-paper | qr-update-exact
+//!   "small_svd":   "jacobi",      // optional: jacobi | gram
+//!   "shift":       "mean-center", // optional: "none" | "mean-center" | [mu_0, ..]
+//!   "engine":      "auto",        // optional: auto | native | artifact
+//!   "seed": 0,                    // optional, default 0 (u64 below 2^53)
+//!   "score": true,                // optional, default true (compute MSE)
+//!   "wait": false                 // optional: answer with the finished result
+//! }
+//! ```
+//!
+//! Input kinds:
+//!
+//! * `dense` — `m`, `n`, `data` (row-major, `m·n` numbers);
+//! * `csr` — `m`, `n`, `indptr` (`m+1`), `indices`, `values`;
+//! * `generator` — `m`, `n`, `dist` (`uniform|normal|exponential`),
+//!   `seed`, and optional `block_rows`/`budget_mb`: an out-of-core
+//!   [`GeneratorSource`] job, nothing is ever materialized;
+//! * `file` — `path` (resolved **server-side**, never densified) plus
+//!   optional `block_rows`/`budget_mb`: an out-of-core [`FileSource`]
+//!   job over the `SRSV` on-disk format.
+//!
+//! Unknown fields are rejected (strict schema: a typo fails loudly with
+//! `400` instead of silently running a default).
+//!
+//! ## Result (`200` from a waited submit or `GET /v1/jobs/{id}`)
+//!
+//! ```json
+//! {"id": 1, "engine": "native", "exec_s": 0.01, "queue_s": 0.001,
+//!  "ok": true,
+//!  "output": {"m": 2, "n": 3, "k": 1, "u": [..], "s": [..], "v": [..],
+//!             "mse": 0.5}}
+//! ```
+//!
+//! `u`/`s`/`v` travel as JSON numbers; render → parse reproduces the
+//! exact `f64` bits (shortest-repr `Display`, correctly-rounded parse —
+//! pinned by `rust/tests/props.rs`), so a factorization fetched over
+//! the wire is **byte-identical** to the same spec run in-process
+//! (pinned by `rust/tests/server.rs`).
+
+use crate::config::{parse_basis, parse_small_svd};
+use crate::coordinator::{EnginePreference, JobResult, JobSpec, MatrixInput, ShiftSpec};
+use crate::data::Distribution;
+use crate::linalg::stream::{FileSource, GeneratorSource, StreamConfig};
+use crate::linalg::{Csr, Dense, Triplets};
+use crate::svd::{BasisMethod, SmallSvdMethod, SvdConfig, SvdEngine};
+use crate::util::json::Json;
+use crate::util::{Error, Result};
+
+/// A parsed submit request: the job plus the submit mode.
+#[derive(Debug)]
+pub struct SubmitRequest {
+    /// The job to run.
+    pub spec: JobSpec,
+    /// `true`: answer the `POST` with the finished result;
+    /// `false`: answer `202` with the id for a later blocking `GET`.
+    pub wait: bool,
+}
+
+fn unknown_keys(obj: &Json, allowed: &[&str], what: &str) -> Result<()> {
+    for key in obj.as_obj()?.keys() {
+        if !allowed.contains(&key.as_str()) {
+            return Err(Error::Json(format!("unknown {what} field {key:?}")));
+        }
+    }
+    Ok(())
+}
+
+fn get_usize_or(obj: &Json, key: &str, default: usize) -> Result<usize> {
+    match obj.as_obj()?.get(key) {
+        Some(v) => v.as_usize(),
+        None => Ok(default),
+    }
+}
+
+fn f64_array(v: &Json, what: &str) -> Result<Vec<f64>> {
+    v.as_arr()?
+        .iter()
+        .map(|x| x.as_f64())
+        .collect::<Result<Vec<f64>>>()
+        .map_err(|e| Error::Json(format!("{what}: {e}")))
+}
+
+fn usize_array(v: &Json, what: &str) -> Result<Vec<usize>> {
+    v.as_arr()?
+        .iter()
+        .map(|x| x.as_usize())
+        .collect::<Result<Vec<usize>>>()
+        .map_err(|e| Error::Json(format!("{what}: {e}")))
+}
+
+/// Parse the `input` object into a [`MatrixInput`]. Streamed kinds take
+/// their default block policy from `stream_defaults` (the `[stream]`
+/// config section), overridable per job via `block_rows`/`budget_mb`.
+fn parse_input(input: &Json, stream_defaults: &StreamConfig) -> Result<MatrixInput> {
+    let kind = input.get("kind")?.as_str()?;
+    let stream_config = |input: &Json| -> Result<StreamConfig> {
+        Ok(StreamConfig {
+            block_rows: get_usize_or(input, "block_rows", stream_defaults.block_rows)?,
+            budget_mb: get_usize_or(input, "budget_mb", stream_defaults.budget_mb)?.max(1),
+        })
+    };
+    match kind {
+        "dense" => {
+            unknown_keys(input, &["kind", "m", "n", "data"], "dense input")?;
+            let m = input.get("m")?.as_usize()?;
+            let n = input.get("n")?.as_usize()?;
+            let len = m
+                .checked_mul(n)
+                .ok_or_else(|| Error::Json(format!("dense shape {m}x{n} overflows")))?;
+            let data = f64_array(input.get("data")?, "dense data")?;
+            crate::ensure!(
+                data.len() == len,
+                "dense data has {} values, shape {m}x{n} needs {len}",
+                data.len()
+            );
+            Ok(MatrixInput::Dense(Dense::from_vec(m, n, data)))
+        }
+        "csr" => {
+            unknown_keys(
+                input,
+                &["kind", "m", "n", "indptr", "indices", "values"],
+                "csr input",
+            )?;
+            let m = input.get("m")?.as_usize()?;
+            let n = input.get("n")?.as_usize()?;
+            crate::ensure!(
+                m < u32::MAX as usize && n < u32::MAX as usize,
+                "csr shape {m}x{n} exceeds u32 indices"
+            );
+            let indptr = usize_array(input.get("indptr")?, "csr indptr")?;
+            let indices = usize_array(input.get("indices")?, "csr indices")?;
+            let values = f64_array(input.get("values")?, "csr values")?;
+            crate::ensure!(
+                indptr.len() == m + 1,
+                "csr indptr has {} entries, need m+1 = {}",
+                indptr.len(),
+                m + 1
+            );
+            crate::ensure!(
+                indices.len() == values.len(),
+                "csr indices/values lengths differ ({} vs {})",
+                indices.len(),
+                values.len()
+            );
+            crate::ensure!(
+                indptr.first() == Some(&0) && indptr.last() == Some(&values.len()),
+                "csr indptr must start at 0 and end at nnz {}",
+                values.len()
+            );
+            let mut t = Triplets::new(m, n);
+            for i in 0..m {
+                crate::ensure!(
+                    indptr[i] <= indptr[i + 1],
+                    "csr indptr not monotone at row {i}"
+                );
+                for idx in indptr[i]..indptr[i + 1] {
+                    crate::ensure!(
+                        indices[idx] < n,
+                        "csr column {} out of bounds for n = {n}",
+                        indices[idx]
+                    );
+                    t.push(i, indices[idx], values[idx]);
+                }
+            }
+            Ok(MatrixInput::Sparse(t.to_csr()))
+        }
+        "generator" => {
+            unknown_keys(
+                input,
+                &["kind", "m", "n", "dist", "seed", "block_rows", "budget_mb"],
+                "generator input",
+            )?;
+            let m = input.get("m")?.as_usize()?;
+            let n = input.get("n")?.as_usize()?;
+            let dist_name = input.get("dist")?.as_str()?;
+            let dist = Distribution::parse(dist_name)
+                .ok_or_else(|| Error::Json(format!("unknown dist {dist_name:?}")))?;
+            let seed = match input.as_obj()?.get("seed") {
+                Some(v) => v.as_u64()?,
+                None => 0,
+            };
+            let src = GeneratorSource::new(m, n, dist, seed)?;
+            Ok(MatrixInput::streamed(src, &stream_config(input)?))
+        }
+        "file" => {
+            unknown_keys(input, &["kind", "path", "block_rows", "budget_mb"], "file input")?;
+            // The path is resolved on the server: the client names data
+            // the service can already reach; the matrix never crosses
+            // the wire and is never densified.
+            let path = input.get("path")?.as_str()?;
+            let src = FileSource::open(std::path::Path::new(path))?;
+            Ok(MatrixInput::streamed(src, &stream_config(input)?))
+        }
+        other => Err(Error::Json(format!(
+            "unknown input kind {other:?} (dense | csr | generator | file)"
+        ))),
+    }
+}
+
+fn parse_shift(v: &Json) -> Result<ShiftSpec> {
+    match v {
+        Json::Str(s) => match s.as_str() {
+            "none" => Ok(ShiftSpec::None),
+            "mean-center" => Ok(ShiftSpec::MeanCenter),
+            other => Err(Error::Json(format!(
+                "unknown shift {other:?} (none | mean-center | [numbers])"
+            ))),
+        },
+        Json::Arr(_) => Ok(ShiftSpec::Vector(f64_array(v, "shift vector")?)),
+        other => Err(Error::Json(format!("bad shift {other:?}"))),
+    }
+}
+
+fn parse_engine(s: &str) -> Result<EnginePreference> {
+    match s {
+        "auto" => Ok(EnginePreference::Auto),
+        "native" => Ok(EnginePreference::Native),
+        "artifact" => Ok(EnginePreference::ArtifactOnly),
+        other => Err(Error::Json(format!(
+            "unknown engine {other:?} (auto | native | artifact)"
+        ))),
+    }
+}
+
+/// Parse a submit body into a [`SubmitRequest`]. Every error is a
+/// client error (the server answers `400`).
+pub fn parse_submit(body: &Json, stream_defaults: &StreamConfig) -> Result<SubmitRequest> {
+    unknown_keys(
+        body,
+        &[
+            "input", "k", "oversample", "power_iters", "basis", "small_svd", "shift",
+            "engine", "seed", "score", "wait",
+        ],
+        "job",
+    )?;
+    let obj = body.as_obj()?;
+    let input = parse_input(body.get("input")?, stream_defaults)?;
+    let k = body.get("k")?.as_usize()?;
+    crate::ensure!(k >= 1, "k must be >= 1");
+    let config = SvdConfig {
+        k,
+        oversample: get_usize_or(body, "oversample", k)?,
+        power_iters: get_usize_or(body, "power_iters", 0)?,
+        basis: match obj.get("basis") {
+            Some(v) => parse_basis(v.as_str()?)?,
+            None => BasisMethod::Direct,
+        },
+        small_svd: match obj.get("small_svd") {
+            Some(v) => parse_small_svd(v.as_str()?)?,
+            None => SmallSvdMethod::Jacobi,
+        },
+    };
+    let shift = match obj.get("shift") {
+        Some(v) => parse_shift(v)?,
+        None => ShiftSpec::MeanCenter,
+    };
+    let engine = match obj.get("engine") {
+        Some(v) => parse_engine(v.as_str()?)?,
+        None => EnginePreference::Auto,
+    };
+    let seed = match obj.get("seed") {
+        Some(v) => v.as_u64()?,
+        None => 0,
+    };
+    let score = match obj.get("score") {
+        Some(v) => v.as_bool()?,
+        None => true,
+    };
+    let wait = match obj.get("wait") {
+        Some(v) => v.as_bool()?,
+        None => false,
+    };
+    Ok(SubmitRequest {
+        spec: JobSpec { input, config, shift, engine, seed, score },
+        wait,
+    })
+}
+
+// ---------------------------------------------------------------------------
+// Request builders (client side)
+// ---------------------------------------------------------------------------
+
+/// Client-side job description; renders the submit body with
+/// [`JobRequest::to_json`]. Mirrors [`JobSpec`] field-for-field so the
+/// loopback tests can build both from the same parameters.
+#[derive(Debug, Clone)]
+pub struct JobRequest {
+    /// The `input` object (see the input builders below).
+    pub input: Json,
+    /// Rank / oversampling / power-iteration configuration.
+    pub config: SvdConfig,
+    /// What to shift by.
+    pub shift: ShiftSpec,
+    /// Engine routing preference.
+    pub engine: EnginePreference,
+    /// Seed for Ω (deterministic replay).
+    pub seed: u64,
+    /// Also compute the paper's MSE metric.
+    pub score: bool,
+    /// Submit-and-wait in one round trip.
+    pub wait: bool,
+}
+
+impl JobRequest {
+    /// A request with the paper's defaults (K = 2k, q = 0, mean-center).
+    pub fn new(input: Json, k: usize) -> JobRequest {
+        JobRequest {
+            input,
+            config: SvdConfig::paper(k),
+            shift: ShiftSpec::MeanCenter,
+            engine: EnginePreference::Auto,
+            seed: 0,
+            score: true,
+            wait: false,
+        }
+    }
+
+    /// Render the submit body.
+    pub fn to_json(&self) -> Json {
+        let shift = match &self.shift {
+            ShiftSpec::None => Json::str("none"),
+            ShiftSpec::MeanCenter => Json::str("mean-center"),
+            ShiftSpec::Vector(v) => Json::arr(v.iter().map(|&x| Json::num(x))),
+        };
+        let engine = match self.engine {
+            EnginePreference::Auto => "auto",
+            EnginePreference::Native => "native",
+            EnginePreference::ArtifactOnly => "artifact",
+        };
+        let basis = match self.config.basis {
+            BasisMethod::Direct => "direct",
+            BasisMethod::QrUpdatePaper => "qr-update-paper",
+            BasisMethod::QrUpdateExact => "qr-update-exact",
+        };
+        let small_svd = match self.config.small_svd {
+            SmallSvdMethod::Jacobi => "jacobi",
+            SmallSvdMethod::GramEig => "gram",
+        };
+        Json::obj(vec![
+            ("input", self.input.clone()),
+            ("k", Json::num(self.config.k as f64)),
+            ("oversample", Json::num(self.config.oversample as f64)),
+            ("power_iters", Json::num(self.config.power_iters as f64)),
+            ("basis", Json::str(basis)),
+            ("small_svd", Json::str(small_svd)),
+            ("shift", shift),
+            ("engine", Json::str(engine)),
+            ("seed", Json::num(self.seed as f64)),
+            ("score", Json::Bool(self.score)),
+            ("wait", Json::Bool(self.wait)),
+        ])
+    }
+}
+
+/// `input` object for a resident dense matrix (the only kind that
+/// ships the data itself).
+pub fn dense_input(x: &Dense) -> Json {
+    Json::obj(vec![
+        ("kind", Json::str("dense")),
+        ("m", Json::num(x.rows() as f64)),
+        ("n", Json::num(x.cols() as f64)),
+        ("data", Json::arr(x.data().iter().map(|&v| Json::num(v)))),
+    ])
+}
+
+/// `input` object for a sparse CSR matrix.
+pub fn csr_input(x: &Csr) -> Json {
+    let (m, n) = x.shape();
+    let mut indptr = Vec::with_capacity(m + 1);
+    let mut indices = Vec::new();
+    let mut values = Vec::new();
+    indptr.push(Json::num(0.0));
+    for i in 0..m {
+        for (j, v) in x.row_iter(i) {
+            indices.push(Json::num(j as f64));
+            values.push(Json::num(v));
+        }
+        indptr.push(Json::num(indices.len() as f64));
+    }
+    Json::obj(vec![
+        ("kind", Json::str("csr")),
+        ("m", Json::num(m as f64)),
+        ("n", Json::num(n as f64)),
+        ("indptr", Json::Arr(indptr)),
+        ("indices", Json::Arr(indices)),
+        ("values", Json::Arr(values)),
+    ])
+}
+
+/// `input` object for a server-generated streamed matrix: the job is a
+/// seed, not a payload.
+pub fn generator_input(
+    m: usize,
+    n: usize,
+    dist: Distribution,
+    seed: u64,
+    block_rows: Option<usize>,
+    budget_mb: Option<usize>,
+) -> Json {
+    let mut pairs = vec![
+        ("kind", Json::str("generator")),
+        ("m", Json::num(m as f64)),
+        ("n", Json::num(n as f64)),
+        ("dist", Json::str(dist.name())),
+        ("seed", Json::num(seed as f64)),
+    ];
+    if let Some(b) = block_rows {
+        pairs.push(("block_rows", Json::num(b as f64)));
+    }
+    if let Some(b) = budget_mb {
+        pairs.push(("budget_mb", Json::num(b as f64)));
+    }
+    Json::obj(pairs)
+}
+
+/// `input` object for a server-side matrix file (`SRSV` format),
+/// streamed block-at-a-time — never shipped, never densified.
+pub fn file_input(path: &str, block_rows: Option<usize>, budget_mb: Option<usize>) -> Json {
+    let mut pairs = vec![("kind", Json::str("file")), ("path", Json::str(path))];
+    if let Some(b) = block_rows {
+        pairs.push(("block_rows", Json::num(b as f64)));
+    }
+    if let Some(b) = budget_mb {
+        pairs.push(("budget_mb", Json::num(b as f64)));
+    }
+    Json::obj(pairs)
+}
+
+// ---------------------------------------------------------------------------
+// Result rendering (server side) and parsing (client side)
+// ---------------------------------------------------------------------------
+
+/// Render a completed job as the wire result object.
+pub fn job_result_to_json(r: &JobResult) -> Json {
+    let engine = match r.engine {
+        SvdEngine::Native => "native",
+        SvdEngine::Artifact => "artifact",
+    };
+    let mut pairs = vec![
+        ("id", Json::num(r.id.0 as f64)),
+        ("engine", Json::str(engine)),
+        ("exec_s", Json::num(r.exec_s)),
+        ("queue_s", Json::num(r.queue_s)),
+        ("ok", Json::Bool(r.outcome.is_ok())),
+    ];
+    match &r.outcome {
+        Ok(out) => {
+            let f = &out.factorization;
+            pairs.push((
+                "output",
+                Json::obj(vec![
+                    ("m", Json::num(f.u.rows() as f64)),
+                    ("n", Json::num(f.v.rows() as f64)),
+                    ("k", Json::num(f.rank() as f64)),
+                    ("u", Json::arr(f.u.data().iter().map(|&x| Json::num(x)))),
+                    ("s", Json::arr(f.s.iter().map(|&x| Json::num(x)))),
+                    ("v", Json::arr(f.v.data().iter().map(|&x| Json::num(x)))),
+                    (
+                        "mse",
+                        match out.mse {
+                            Some(m) => Json::num(m),
+                            None => Json::Null,
+                        },
+                    ),
+                ]),
+            ));
+        }
+        Err(e) => pairs.push(("error", Json::str(&format!("{e}")))),
+    }
+    Json::obj(pairs)
+}
+
+/// The factors of a wire result, reassembled client-side.
+#[derive(Debug, Clone)]
+pub struct WireOutput {
+    /// Left singular vectors, m×k.
+    pub u: Dense,
+    /// Singular values, descending.
+    pub s: Vec<f64>,
+    /// Right singular vectors, n×k.
+    pub v: Dense,
+    /// The paper's MSE, when scoring was requested.
+    pub mse: Option<f64>,
+}
+
+/// A completed job as seen by the client.
+#[derive(Debug, Clone)]
+pub struct WireResult {
+    /// Job id assigned at submit time.
+    pub id: u64,
+    /// Engine that ran the job (`"native"` / `"artifact"`).
+    pub engine: String,
+    /// Seconds spent executing.
+    pub exec_s: f64,
+    /// Seconds spent queued.
+    pub queue_s: f64,
+    /// The factors, or the server-reported job error.
+    pub outcome: std::result::Result<WireOutput, String>,
+}
+
+/// Parse a wire result object (the client half of
+/// [`job_result_to_json`]).
+pub fn parse_result(body: &Json) -> Result<WireResult> {
+    let id = body.get("id")?.as_u64()?;
+    let engine = body.get("engine")?.as_str()?.to_string();
+    let exec_s = body.get("exec_s")?.as_f64()?;
+    let queue_s = body.get("queue_s")?.as_f64()?;
+    let outcome = if body.get("ok")?.as_bool()? {
+        let out = body.get("output")?;
+        let m = out.get("m")?.as_usize()?;
+        let n = out.get("n")?.as_usize()?;
+        let k = out.get("k")?.as_usize()?;
+        let u = f64_array(out.get("u")?, "u")?;
+        let s = f64_array(out.get("s")?, "s")?;
+        let v = f64_array(out.get("v")?, "v")?;
+        crate::ensure!(
+            u.len() == m * k && v.len() == n * k && s.len() == k,
+            "factor shapes disagree with m={m} n={n} k={k}"
+        );
+        let mse = match out.get("mse")? {
+            Json::Null => None,
+            other => Some(other.as_f64()?),
+        };
+        Ok(WireOutput {
+            u: Dense::from_vec(m, k, u),
+            s,
+            v: Dense::from_vec(n, k, v),
+            mse,
+        })
+    } else {
+        Err(body.get("error")?.as_str()?.to_string())
+    };
+    Ok(WireResult { id, engine, exec_s, queue_s, outcome })
+}
+
+/// Render a metrics snapshot for `GET /metrics`.
+pub fn metrics_to_json(m: &crate::coordinator::MetricsSnapshot) -> Json {
+    Json::obj(vec![
+        ("submitted", Json::num(m.submitted as f64)),
+        ("completed", Json::num(m.completed as f64)),
+        ("failed", Json::num(m.failed as f64)),
+        ("native_jobs", Json::num(m.native_jobs as f64)),
+        ("artifact_jobs", Json::num(m.artifact_jobs as f64)),
+        ("queue_depth", Json::num(m.queue_depth as f64)),
+        ("in_flight", Json::num(m.in_flight as f64)),
+        ("http_accepted", Json::num(m.http_accepted as f64)),
+        ("http_rejected", Json::num(m.http_rejected as f64)),
+        ("http_bytes_in", Json::num(m.http_bytes_in as f64)),
+        ("http_bytes_out", Json::num(m.http_bytes_out as f64)),
+        ("mean_exec_s", Json::num(m.mean_exec_s)),
+        ("mean_queue_s", Json::num(m.mean_queue_s)),
+        ("max_exec_s", Json::num(m.max_exec_s)),
+        ("pool_threads", Json::num(m.pool_threads as f64)),
+        ("pool_parallel_ops", Json::num(m.pool_parallel_ops as f64)),
+        ("pool_serial_ops", Json::num(m.pool_serial_ops as f64)),
+        ("pool_chunks", Json::num(m.pool_chunks as f64)),
+    ])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::{Rng, Xoshiro256pp};
+    use crate::svd::MatVecOps;
+
+    fn defaults() -> StreamConfig {
+        StreamConfig::default()
+    }
+
+    #[test]
+    fn dense_submit_round_trips() {
+        let mut rng = Xoshiro256pp::seed_from_u64(0);
+        let x = Dense::from_fn(4, 6, |_, _| rng.next_uniform());
+        let mut req = JobRequest::new(dense_input(&x), 2);
+        req.seed = 9;
+        req.wait = true;
+        let parsed = parse_submit(&req.to_json(), &defaults()).unwrap();
+        assert!(parsed.wait);
+        assert_eq!(parsed.spec.seed, 9);
+        assert_eq!(parsed.spec.config.k, 2);
+        assert_eq!(parsed.spec.config.sample_width(), 4);
+        let MatrixInput::Dense(back) = &parsed.spec.input else {
+            panic!("expected dense input");
+        };
+        let same = back
+            .data()
+            .iter()
+            .zip(x.data())
+            .all(|(a, b)| a.to_bits() == b.to_bits());
+        assert!(same, "dense payload changed across the wire");
+    }
+
+    #[test]
+    fn csr_submit_round_trips() {
+        let mut rng = Xoshiro256pp::seed_from_u64(1);
+        let sp = Csr::random(8, 12, 0.3, &mut rng, |r| r.next_uniform() + 0.1);
+        let req = JobRequest::new(csr_input(&sp), 3);
+        let parsed = parse_submit(&req.to_json(), &defaults()).unwrap();
+        let MatrixInput::Sparse(back) = &parsed.spec.input else {
+            panic!("expected sparse input");
+        };
+        assert_eq!(back.shape(), sp.shape());
+        assert_eq!(back.nnz(), sp.nnz());
+        let bits = |x: &Dense| -> Vec<u64> { x.data().iter().map(|v| v.to_bits()).collect() };
+        assert_eq!(bits(&back.to_dense()), bits(&sp.to_dense()));
+    }
+
+    #[test]
+    fn generator_submit_builds_streamed() {
+        let req = JobRequest::new(
+            generator_input(40, 30, Distribution::Uniform, 5, Some(7), None),
+            2,
+        );
+        let parsed = parse_submit(&req.to_json(), &defaults()).unwrap();
+        let MatrixInput::Streamed(s) = &parsed.spec.input else {
+            panic!("expected streamed input");
+        };
+        assert_eq!(MatVecOps::shape(s), (40, 30));
+        assert_eq!(s.block_rows(), 7);
+    }
+
+    #[test]
+    fn generator_defaults_come_from_stream_config() {
+        let req = JobRequest::new(
+            generator_input(100, 10, Distribution::Normal, 1, None, None),
+            2,
+        );
+        let tight = StreamConfig { block_rows: 13, budget_mb: 64 };
+        let parsed = parse_submit(&req.to_json(), &tight).unwrap();
+        let MatrixInput::Streamed(s) = &parsed.spec.input else {
+            panic!("expected streamed input");
+        };
+        assert_eq!(s.block_rows(), 13);
+    }
+
+    #[test]
+    fn strict_schema_rejects_unknowns_and_garbage() {
+        let ok = JobRequest::new(generator_input(4, 4, Distribution::Uniform, 0, None, None), 1)
+            .to_json();
+        assert!(parse_submit(&ok, &defaults()).is_ok());
+        // Unknown top-level field.
+        let mut bad = ok.as_obj().unwrap().clone();
+        bad.insert("rank".into(), Json::num(3.0));
+        assert!(parse_submit(&Json::Obj(bad), &defaults()).is_err());
+        // Missing input / k.
+        assert!(parse_submit(&Json::obj(vec![("k", Json::num(1.0))]), &defaults()).is_err());
+        // Unknown input kind, bad dist, zipf (not streamable).
+        for (kind, extra) in [
+            ("teleport", vec![]),
+            ("generator", vec![("dist", Json::str("cauchy"))]),
+            ("generator", vec![("dist", Json::str("zipf"))]),
+        ] {
+            let mut input = vec![
+                ("kind", Json::str(kind)),
+                ("m", Json::num(4.0)),
+                ("n", Json::num(4.0)),
+            ];
+            input.extend(extra);
+            let req = JobRequest::new(Json::obj(input), 1);
+            assert!(parse_submit(&req.to_json(), &defaults()).is_err(), "{kind}");
+        }
+        // Dense payload length mismatch.
+        let input = Json::obj(vec![
+            ("kind", Json::str("dense")),
+            ("m", Json::num(2.0)),
+            ("n", Json::num(2.0)),
+            ("data", Json::arr([1.0, 2.0].map(Json::num))),
+        ]);
+        assert!(parse_submit(&JobRequest::new(input, 1).to_json(), &defaults()).is_err());
+        // Broken CSR skeleton: indptr end != nnz.
+        let input = Json::obj(vec![
+            ("kind", Json::str("csr")),
+            ("m", Json::num(2.0)),
+            ("n", Json::num(2.0)),
+            ("indptr", Json::arr([0.0, 1.0, 3.0].map(Json::num))),
+            ("indices", Json::arr([0.0, 1.0].map(Json::num))),
+            ("values", Json::arr([1.0, 2.0].map(Json::num))),
+        ]);
+        assert!(parse_submit(&JobRequest::new(input, 1).to_json(), &defaults()).is_err());
+    }
+
+    #[test]
+    fn result_round_trips_bitwise() {
+        let mut rng = Xoshiro256pp::seed_from_u64(3);
+        let fact = crate::svd::deterministic_svd(&Dense::gaussian(6, 9, &mut rng), 3);
+        let r = JobResult {
+            id: crate::coordinator::JobId(11),
+            outcome: Ok(crate::coordinator::JobOutput {
+                factorization: fact.clone(),
+                mse: Some(0.125),
+            }),
+            engine: SvdEngine::Native,
+            exec_s: 0.5,
+            queue_s: 0.25,
+        };
+        // Through text: exactly what the server writes and the client reads.
+        let text = job_result_to_json(&r).to_string();
+        let back = parse_result(&Json::parse(&text).unwrap()).unwrap();
+        assert_eq!(back.id, 11);
+        assert_eq!(back.engine, "native");
+        let out = back.outcome.unwrap();
+        assert_eq!(out.mse, Some(0.125));
+        let bits = |x: &Dense| -> Vec<u64> { x.data().iter().map(|v| v.to_bits()).collect() };
+        assert_eq!(bits(&out.u), bits(&fact.u));
+        assert_eq!(bits(&out.v), bits(&fact.v));
+        assert_eq!(
+            out.s.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+            fact.s.iter().map(|x| x.to_bits()).collect::<Vec<_>>()
+        );
+
+        // Failed jobs carry the error text.
+        let r = JobResult {
+            id: crate::coordinator::JobId(12),
+            outcome: Err(Error::Invalid("bad shift".into())),
+            engine: SvdEngine::Native,
+            exec_s: 0.0,
+            queue_s: 0.0,
+        };
+        let back =
+            parse_result(&Json::parse(&job_result_to_json(&r).to_string()).unwrap()).unwrap();
+        assert!(back.outcome.unwrap_err().contains("bad shift"));
+    }
+
+    #[test]
+    fn metrics_render() {
+        let m = crate::coordinator::Metrics::default();
+        let j = metrics_to_json(&m.snapshot());
+        assert_eq!(j.get("submitted").unwrap().as_usize().unwrap(), 0);
+        assert!(j.get("http_rejected").is_ok());
+        assert!(j.get("in_flight").is_ok());
+    }
+}

@@ -2,15 +2,29 @@
 //!
 //! The offline crate cache has no `serde`/`serde_json`; this module is
 //! the subset we need: parsing `artifacts/manifest.json` (written by
-//! `python/compile/aot.py`) and emitting experiment reports. It is a
-//! complete RFC 8259 parser for the constructs we produce (objects,
-//! arrays, strings with escapes, numbers, booleans, null) with precise
-//! error offsets.
+//! `python/compile/aot.py`), the network wire protocol of
+//! [`crate::server`], and emitting experiment reports. It is a complete
+//! RFC 8259 parser for the constructs we produce (objects, arrays,
+//! strings with escapes including surrogate pairs, numbers, booleans,
+//! null) with precise error offsets.
+//!
+//! Since the parser reads bytes straight off a socket it is hardened as
+//! an attack surface: trailing garbage after the top-level value is an
+//! error, nesting depth is capped ([`MAX_DEPTH`] — a flood of `[`s
+//! cannot overflow the parse stack), `\u` escapes must be exactly four
+//! hex digits, and rendering a parsed value round-trips bit-exactly for
+//! finite numbers (Rust's shortest-repr `Display` for `f64`), which the
+//! property tests in `rust/tests/props.rs` pin.
 
 use std::collections::BTreeMap;
 use std::fmt::Write as _;
 
 use crate::util::{Error, Result};
+
+/// Maximum container nesting depth the parser accepts. Deeper documents
+/// error instead of recursing toward a stack overflow — the parser
+/// reads untrusted network bytes (see [`crate::server`]).
+pub const MAX_DEPTH: usize = 128;
 
 /// A JSON value. Object keys are ordered (BTreeMap) so output is stable.
 #[derive(Debug, Clone, PartialEq)]
@@ -32,7 +46,7 @@ pub enum Json {
 impl Json {
     /// Parse a complete JSON document (trailing garbage is an error).
     pub fn parse(text: &str) -> Result<Json> {
-        let mut p = Parser { b: text.as_bytes(), i: 0 };
+        let mut p = Parser { b: text.as_bytes(), i: 0, depth: 0 };
         p.skip_ws();
         let v = p.value()?;
         p.skip_ws();
@@ -74,6 +88,27 @@ impl Json {
             Json::Num(x) => Ok(*x),
             _ => Err(Error::Json(format!("expected number, got {self:?}"))),
         }
+    }
+
+    /// Read as a boolean, or a typed error.
+    pub fn as_bool(&self) -> Result<bool> {
+        match self {
+            Json::Bool(b) => Ok(*b),
+            _ => Err(Error::Json(format!("expected boolean, got {self:?}"))),
+        }
+    }
+
+    /// Read as a non-negative integer `u64`, or a typed error. JSON
+    /// numbers are `f64`, so values above 2⁵³ cannot be represented
+    /// exactly and are rejected.
+    pub fn as_u64(&self) -> Result<u64> {
+        let x = self.as_f64()?;
+        if x < 0.0 || x.fract() != 0.0 || x >= 9.007_199_254_740_992e15 {
+            return Err(Error::Json(format!(
+                "expected non-negative integer below 2^53, got {x}"
+            )));
+        }
+        Ok(x as u64)
     }
 
     /// Read as a non-negative integer, or a typed error.
@@ -143,9 +178,18 @@ impl Json {
             Json::Null => out.push_str("null"),
             Json::Bool(b) => out.push_str(if *b { "true" } else { "false" }),
             Json::Num(x) => {
-                if x.fract() == 0.0 && x.abs() < 9e15 {
+                if !x.is_finite() {
+                    // JSON has no NaN/±inf spelling; `null` is the only
+                    // valid rendering (the typed accessors then surface
+                    // a clean error instead of invalid JSON).
+                    out.push_str("null");
+                } else if x.fract() == 0.0 && x.abs() < 9e15 && (*x != 0.0 || x.is_sign_positive())
+                {
                     let _ = write!(out, "{}", *x as i64);
                 } else {
+                    // Shortest-repr Display: round-trips every finite
+                    // f64 (including -0.0, which renders as "-0") to
+                    // the exact same bits.
                     let _ = write!(out, "{x}");
                 }
             }
@@ -216,6 +260,7 @@ fn write_escaped(out: &mut String, s: &str) {
 struct Parser<'a> {
     b: &'a [u8],
     i: usize,
+    depth: usize,
 }
 
 impl<'a> Parser<'a> {
@@ -244,8 +289,15 @@ impl<'a> Parser<'a> {
 
     fn value(&mut self) -> Result<Json> {
         match self.peek().ok_or_else(|| self.err("unexpected end"))? {
-            b'{' => self.object(),
-            b'[' => self.array(),
+            c @ (b'{' | b'[') => {
+                if self.depth >= MAX_DEPTH {
+                    return Err(self.err("nesting too deep"));
+                }
+                self.depth += 1;
+                let v = if c == b'{' { self.object() } else { self.array() };
+                self.depth -= 1;
+                v
+            }
             b'"' => Ok(Json::Str(self.string()?)),
             b't' => self.lit("true", Json::Bool(true)),
             b'f' => self.lit("false", Json::Bool(false)),
@@ -315,15 +367,35 @@ impl<'a> Parser<'a> {
                         b'b' => out.push('\u{8}'),
                         b'f' => out.push('\u{c}'),
                         b'u' => {
-                            if self.i + 4 >= self.b.len() {
-                                return Err(self.err("short \\u escape"));
-                            }
-                            let hex = std::str::from_utf8(&self.b[self.i + 1..self.i + 5])
-                                .map_err(|_| self.err("bad \\u escape"))?;
-                            let cp = u32::from_str_radix(hex, 16)
-                                .map_err(|_| self.err("bad \\u escape"))?;
-                            out.push(char::from_u32(cp).unwrap_or('\u{fffd}'));
-                            self.i += 4;
+                            let cp = self.u_escape_digits()?;
+                            let c = if (0xD800..=0xDBFF).contains(&cp) {
+                                // High surrogate: a following low
+                                // surrogate escape forms one
+                                // supplementary code point (RFC 8259
+                                // §7); a lone surrogate is U+FFFD.
+                                let paired = self.b.get(self.i + 1) == Some(&b'\\')
+                                    && self.b.get(self.i + 2) == Some(&b'u');
+                                if paired {
+                                    let save = self.i;
+                                    self.i += 2;
+                                    let lo = self.u_escape_digits()?;
+                                    if (0xDC00..=0xDFFF).contains(&lo) {
+                                        let sup =
+                                            0x10000 + ((cp - 0xD800) << 10) + (lo - 0xDC00);
+                                        char::from_u32(sup).unwrap_or('\u{fffd}')
+                                    } else {
+                                        // Not a low surrogate: leave it
+                                        // to be parsed as its own escape.
+                                        self.i = save;
+                                        '\u{fffd}'
+                                    }
+                                } else {
+                                    '\u{fffd}'
+                                }
+                            } else {
+                                char::from_u32(cp).unwrap_or('\u{fffd}')
+                            };
+                            out.push(c);
                         }
                         c => return Err(self.err(&format!("bad escape \\{}", c as char))),
                     }
@@ -339,6 +411,23 @@ impl<'a> Parser<'a> {
                 }
             }
         }
+    }
+
+    /// Parse the four hex digits of a `\uXXXX` escape: enters with
+    /// `self.i` on the `u`, leaves it on the last digit. Exactly four
+    /// ASCII hex digits are required (no signs, no shortfall).
+    fn u_escape_digits(&mut self) -> Result<u32> {
+        if self.i + 4 >= self.b.len() {
+            return Err(self.err("short \\u escape"));
+        }
+        let digits = &self.b[self.i + 1..self.i + 5];
+        if !digits.iter().all(|d| d.is_ascii_hexdigit()) {
+            return Err(self.err("bad \\u escape"));
+        }
+        let hex = std::str::from_utf8(digits).map_err(|_| self.err("bad \\u escape"))?;
+        let cp = u32::from_str_radix(hex, 16).map_err(|_| self.err("bad \\u escape"))?;
+        self.i += 4;
+        Ok(cp)
     }
 
     fn array(&mut self) -> Result<Json> {
@@ -424,6 +513,62 @@ mod tests {
     }
 
     #[test]
+    fn decodes_surrogate_pairs() {
+        // \ud83d\ude00 is the surrogate pair for U+1F600.
+        let v = Json::parse(r#""\ud83d\ude00!""#).unwrap();
+        assert_eq!(v.as_str().unwrap(), "\u{1f600}!");
+        // Lone high surrogate -> replacement character.
+        let v = Json::parse(r#""\ud83dx""#).unwrap();
+        assert_eq!(v.as_str().unwrap(), "\u{fffd}x");
+        // High surrogate followed by a non-surrogate escape: the second
+        // escape survives as its own character.
+        let v = Json::parse(r#""\ud83d\n""#).unwrap();
+        assert_eq!(v.as_str().unwrap(), "\u{fffd}\n");
+        // Malformed second escape is still an error.
+        assert!(Json::parse(r#""\ud83d\uzzzz""#).is_err());
+        assert!(Json::parse(r#""\u+123""#).is_err());
+    }
+
+    #[test]
+    fn escape_sequences_round_trip() {
+        for s in [
+            "plain",
+            "tab\there\nnewline\rcr",
+            "quote\" backslash\\ slash/",
+            "control\u{1}\u{1f}",
+            "unicode é 漢 😀 \u{fffd}",
+            "",
+        ] {
+            let v = Json::Str(s.to_string());
+            assert_eq!(Json::parse(&v.to_string()).unwrap(), v, "{s:?}");
+            assert_eq!(Json::parse(&v.to_string_pretty()).unwrap(), v, "{s:?}");
+        }
+    }
+
+    #[test]
+    fn depth_is_capped() {
+        // Within the cap parses fine…
+        let ok = format!("{}1{}", "[".repeat(100), "]".repeat(100));
+        assert!(Json::parse(&ok).is_ok());
+        // …a flood of opening brackets errors instead of overflowing.
+        let deep = "[".repeat(100_000);
+        let err = Json::parse(&deep).unwrap_err();
+        assert!(format!("{err}").contains("nesting too deep"), "{err}");
+        let deep_obj = "{\"a\":".repeat(100_000);
+        assert!(Json::parse(&deep_obj).is_err());
+    }
+
+    #[test]
+    fn bool_and_u64_accessors() {
+        assert!(Json::parse("true").unwrap().as_bool().unwrap());
+        assert!(Json::parse("1").unwrap().as_bool().is_err());
+        assert_eq!(Json::parse("7").unwrap().as_u64().unwrap(), 7);
+        assert!(Json::parse("-1").unwrap().as_u64().is_err());
+        assert!(Json::parse("1.5").unwrap().as_u64().is_err());
+        assert!(Json::parse("1e300").unwrap().as_u64().is_err());
+    }
+
+    #[test]
     fn usize_accessor_validates() {
         assert_eq!(Json::parse("42").unwrap().as_usize().unwrap(), 42);
         assert!(Json::parse("4.5").unwrap().as_usize().is_err());
@@ -434,6 +579,20 @@ mod tests {
     fn integer_formatting_stays_integral() {
         assert_eq!(Json::Num(3.0).to_string(), "3");
         assert_eq!(Json::Num(3.25).to_string(), "3.25");
+    }
+
+    #[test]
+    fn non_finite_renders_null_and_neg_zero_round_trips() {
+        // Never emit invalid JSON, whatever the computation produced.
+        assert_eq!(Json::Num(f64::NAN).to_string(), "null");
+        assert_eq!(Json::Num(f64::INFINITY).to_string(), "null");
+        assert_eq!(Json::Num(f64::NEG_INFINITY).to_string(), "null");
+        // -0.0 must not take the integer fast path ("0" would lose the
+        // sign bit and break the bit-exact wire contract).
+        assert_eq!(Json::Num(-0.0).to_string(), "-0");
+        let back = Json::parse("-0").unwrap().as_f64().unwrap();
+        assert_eq!(back.to_bits(), (-0.0f64).to_bits());
+        assert_eq!(Json::Num(0.0).to_string(), "0");
     }
 
     #[test]

@@ -20,8 +20,14 @@ pub enum Error {
     Artifact(String),
     /// The PJRT runtime failed (or is unavailable in this build).
     Runtime(String),
-    /// Coordinator/service failure (queues, workers, backpressure).
+    /// Coordinator/service failure (queues, workers).
     Service(String),
+    /// The service's bounded queue is full (`try_submit` admission
+    /// control); retry later. The network layer maps this to HTTP 503.
+    Busy(String),
+    /// A bounded wait expired before the job completed (the job keeps
+    /// running). The network layer maps this to HTTP 202 "running".
+    Timeout(String),
     /// An underlying IO failure.
     Io(std::io::Error),
     /// JSON parsing or schema mismatch.
@@ -37,6 +43,8 @@ impl std::fmt::Display for Error {
             Error::Artifact(m) => write!(f, "artifact error: {m}"),
             Error::Runtime(m) => write!(f, "runtime error: {m}"),
             Error::Service(m) => write!(f, "service error: {m}"),
+            Error::Busy(m) => write!(f, "service busy (backpressure): {m}"),
+            Error::Timeout(m) => write!(f, "timed out: {m}"),
             Error::Io(e) => write!(f, "io error: {e}"),
             Error::Json(m) => write!(f, "json error: {m}"),
         }

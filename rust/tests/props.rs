@@ -300,3 +300,65 @@ fn prop_json_roundtrip() {
         Ok(())
     });
 }
+
+#[test]
+fn prop_json_string_escape_roundtrip() {
+    use srsvd::util::json::Json;
+    // The wire protocol ships arbitrary user strings (paths, error
+    // text); every Unicode scalar — control characters, quotes,
+    // backslashes, astral-plane characters — must survive
+    // render -> parse exactly, compact and pretty.
+    forall("json string escape roundtrip", 60, |g| {
+        let len = g.usize_in(0, 40);
+        let mut s = String::new();
+        for _ in 0..len {
+            let c = match g.usize_in(0, 3) {
+                // Printable ASCII, escape-heavy ASCII, controls, any scalar.
+                0 => char::from_u32(g.usize_in(0x20, 0x7e) as u32).unwrap(),
+                1 => *g.choose(&['"', '\\', '/', '\n', '\r', '\t']),
+                2 => char::from_u32(g.usize_in(0x00, 0x1f) as u32).unwrap(),
+                _ => loop {
+                    if let Some(c) = char::from_u32(g.usize_in(0, 0x10FFFF) as u32) {
+                        break c;
+                    }
+                },
+            };
+            s.push(c);
+        }
+        let v = Json::Str(s.clone());
+        for text in [v.to_string(), v.to_string_pretty()] {
+            let back = Json::parse(&text).map_err(|e| format!("{s:?}: {e}"))?;
+            if back != v {
+                return Err(format!("string roundtrip mismatch for {s:?} via {text:?}"));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_json_number_roundtrip_bitexact() {
+    use srsvd::util::json::Json;
+    // Factors travel over HTTP as JSON numbers; the server's
+    // byte-identical contract needs render -> parse to reproduce the
+    // exact f64 bits for every finite double (Rust's shortest-repr
+    // Display + correctly-rounded parse; -0.0 renders as "-0" and
+    // non-finite values as null — pinned by unit tests in json.rs).
+    forall("json number roundtrip bitexact", 200, |g| {
+        let mag = 10f64.powi(g.usize_in(0, 600) as i32 - 300);
+        let mut x = g.gaussian() * mag;
+        if g.bool() {
+            x = -x; // exercise both signs, including the -0.0 region
+        }
+        if !x.is_finite() {
+            return Ok(());
+        }
+        let v = Json::Num(x);
+        let back = Json::parse(&v.to_string()).map_err(|e| format!("{x:?}: {e}"))?;
+        let y = back.as_f64().map_err(|e| e.to_string())?;
+        if y.to_bits() != x.to_bits() {
+            return Err(format!("{x:?} ({:#x}) -> {y:?} ({:#x})", x.to_bits(), y.to_bits()));
+        }
+        Ok(())
+    });
+}

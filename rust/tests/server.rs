@@ -1,0 +1,402 @@
+//! Integration tests for the network service layer: a real
+//! `TcpListener` on a loopback port, the std-only blocking client, and
+//! the full request lifecycle against a live coordinator.
+//!
+//! The headline contract: a factorization submitted over HTTP is
+//! **byte-identical** to the same `JobSpec` submitted in-process — for
+//! dense payloads and for streamed (generator / server-side file)
+//! inputs — because the wire protocol round-trips every `f64` exactly.
+//! Also pinned: queue saturation yields `503` (never a hang or panic),
+//! malformed requests yield `400` (never a panic), and graceful
+//! shutdown drains in-flight requests.
+
+use std::io::{Read, Write};
+use std::net::TcpStream;
+use std::sync::Arc;
+use std::time::Duration;
+
+use srsvd::coordinator::{
+    Coordinator, CoordinatorConfig, EnginePreference, JobSpec, MatrixInput, ShiftSpec,
+};
+use srsvd::data::Distribution;
+use srsvd::linalg::stream::{spill_to_file, FileSource, GeneratorSource, StreamConfig};
+use srsvd::linalg::Dense;
+use srsvd::rng::{Rng, Xoshiro256pp};
+use srsvd::server::client::{SubmitOutcome, WaitOutcome};
+use srsvd::server::protocol::{
+    dense_input, file_input, generator_input, JobRequest, WireOutput,
+};
+use srsvd::server::{Client, Server, ServerConfig};
+use srsvd::svd::{Factorization, SvdConfig};
+
+fn start_service(
+    native_workers: usize,
+    queue_capacity: usize,
+    http_workers: usize,
+) -> (Arc<Coordinator>, Server) {
+    let coord = Arc::new(
+        Coordinator::start(CoordinatorConfig {
+            native_workers,
+            queue_capacity,
+            artifact_dir: None,
+            pool_threads: Some(2),
+        })
+        .unwrap(),
+    );
+    let server = Server::bind(
+        Arc::clone(&coord),
+        &ServerConfig {
+            addr: "127.0.0.1:0".into(),
+            max_body_bytes: 64 << 20,
+            workers: http_workers,
+            request_timeout_s: 30,
+        },
+        StreamConfig::default(),
+    )
+    .unwrap();
+    (coord, server)
+}
+
+fn client_for(server: &Server) -> Client {
+    Client::connect(&server.local_addr().to_string()).unwrap()
+}
+
+/// u/s/v (and MSE) byte-equality between a wire result and an
+/// in-process factorization.
+fn assert_identical(wire: &WireOutput, local: &Factorization, local_mse: Option<f64>, what: &str) {
+    let bits = |x: &Dense| -> Vec<u64> { x.data().iter().map(|v| v.to_bits()).collect() };
+    assert_eq!(
+        wire.s.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+        local.s.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+        "{what}: singular values diverged"
+    );
+    assert_eq!(bits(&wire.u), bits(&local.u), "{what}: U diverged");
+    assert_eq!(bits(&wire.v), bits(&local.v), "{what}: V diverged");
+    assert_eq!(
+        wire.mse.map(f64::to_bits),
+        local_mse.map(f64::to_bits),
+        "{what}: MSE diverged"
+    );
+}
+
+#[test]
+fn dense_job_over_loopback_is_byte_identical_to_in_process() {
+    let (coord, server) = start_service(2, 64, 2);
+    let mut client = client_for(&server);
+    client.health().unwrap();
+
+    let mut rng = Xoshiro256pp::seed_from_u64(1);
+    let x = Dense::from_fn(30, 80, |_, _| rng.next_uniform());
+
+    let mut req = JobRequest::new(dense_input(&x), 4);
+    req.engine = EnginePreference::Native;
+    req.seed = 7;
+    let wire = client.submit_wait(&req).unwrap();
+    assert_eq!(wire.engine, "native");
+    let wire_out = wire.outcome.expect("wire job failed");
+
+    let local = coord
+        .submit_blocking(JobSpec {
+            input: MatrixInput::Dense(x),
+            config: SvdConfig::paper(4),
+            shift: ShiftSpec::MeanCenter,
+            engine: EnginePreference::Native,
+            seed: 7,
+            score: true,
+        })
+        .unwrap()
+        .outcome
+        .expect("local job failed");
+
+    assert_identical(&wire_out, &local.factorization, local.mse, "dense");
+    server.shutdown();
+}
+
+#[test]
+fn generator_streamed_job_over_loopback_is_byte_identical() {
+    let (coord, server) = start_service(2, 64, 2);
+    let mut client = client_for(&server);
+
+    // The wire job is a seed, not a payload: the server builds the
+    // GeneratorSource and sweeps it out-of-core.
+    let mut req = JobRequest::new(
+        generator_input(50, 40, Distribution::Uniform, 5, Some(7), None),
+        3,
+    );
+    req.engine = EnginePreference::Native;
+    req.seed = 11;
+    let wire = client.submit_wait(&req).unwrap();
+    let wire_out = wire.outcome.expect("wire job failed");
+
+    let src = GeneratorSource::new(50, 40, Distribution::Uniform, 5).unwrap();
+    let stream_cfg = StreamConfig { block_rows: 7, ..Default::default() };
+    let local = coord
+        .submit_blocking(JobSpec {
+            input: MatrixInput::streamed(src, &stream_cfg),
+            config: SvdConfig::paper(3),
+            shift: ShiftSpec::MeanCenter,
+            engine: EnginePreference::Native,
+            seed: 11,
+            score: true,
+        })
+        .unwrap()
+        .outcome
+        .expect("local job failed");
+
+    assert_identical(&wire_out, &local.factorization, local.mse, "generator");
+    server.shutdown();
+}
+
+#[test]
+fn file_streamed_job_resolves_path_server_side() {
+    let (coord, server) = start_service(2, 64, 2);
+    let mut client = client_for(&server);
+
+    let gen = GeneratorSource::new(60, 30, Distribution::Exponential, 9).unwrap();
+    let path = std::env::temp_dir().join("srsvd_server_test_file_job.bin");
+    spill_to_file(&gen, &path, 16).unwrap();
+    let path_text = path.to_str().unwrap().to_string();
+
+    let mut req = JobRequest::new(file_input(&path_text, None, Some(4)), 3);
+    req.engine = EnginePreference::Native;
+    req.seed = 13;
+    let wire = client.submit_wait(&req).unwrap();
+    assert_eq!(wire.engine, "native");
+    let wire_out = wire.outcome.expect("wire job failed");
+
+    let src = FileSource::open(&path).unwrap();
+    let stream_cfg = StreamConfig { block_rows: 0, budget_mb: 4 };
+    let local = coord
+        .submit_blocking(JobSpec {
+            input: MatrixInput::streamed(src, &stream_cfg),
+            config: SvdConfig::paper(3),
+            shift: ShiftSpec::MeanCenter,
+            engine: EnginePreference::Native,
+            seed: 13,
+            score: true,
+        })
+        .unwrap()
+        .outcome
+        .expect("local job failed");
+
+    assert_identical(&wire_out, &local.factorization, local.mse, "file");
+
+    // A bogus server-side path is a client error, not a panic.
+    let req = JobRequest::new(file_input("/definitely/not/here.bin", None, None), 2);
+    let err = client.submit(&req).unwrap_err();
+    assert!(format!("{err}").contains("400"), "{err}");
+
+    server.shutdown();
+    let _ = std::fs::remove_file(&path);
+}
+
+#[test]
+fn queue_saturation_returns_503_and_drains() {
+    // 1 native worker, queue capacity 1: a burst must hit 503.
+    let (_coord, server) = start_service(1, 1, 2);
+    let mut client = client_for(&server);
+
+    let mut req = JobRequest::new(
+        generator_input(300, 500, Distribution::Uniform, 3, None, None),
+        16,
+    );
+    req.config.power_iters = 2;
+    req.engine = EnginePreference::Native;
+
+    let mut queued = Vec::new();
+    let mut saw_503 = false;
+    for _ in 0..60 {
+        match client.submit(&req) {
+            Ok(SubmitOutcome::Queued(id)) => queued.push(id),
+            Ok(SubmitOutcome::Done(_)) => panic!("wait=false submit answered with a result"),
+            Err(e) => {
+                let text = format!("{e}");
+                assert!(text.contains("503"), "unexpected error: {text}");
+                assert!(text.contains("backpressure"), "unexpected error: {text}");
+                saw_503 = true;
+                break;
+            }
+        }
+    }
+    assert!(saw_503, "never saw 503 with queue capacity 1");
+    assert!(!queued.is_empty(), "nothing was accepted before saturation");
+
+    // Everything accepted still completes; the service never wedges.
+    for id in queued {
+        loop {
+            match client.wait(id).unwrap() {
+                WaitOutcome::Done(r) => {
+                    r.outcome.expect("queued job failed");
+                    break;
+                }
+                WaitOutcome::Running => {}
+            }
+        }
+    }
+
+    let m = client.metrics().unwrap();
+    assert!(m.get("http_rejected").unwrap().as_usize().unwrap() >= 1);
+    assert!(m.get("http_accepted").unwrap().as_usize().unwrap() >= 1);
+    server.shutdown();
+}
+
+/// Send raw bytes, read until the server closes, return the response
+/// text. Only for exchanges where the server closes the connection
+/// (error paths and `Connection: close` requests).
+fn raw_exchange(addr: &str, payload: &[u8]) -> String {
+    let mut s = TcpStream::connect(addr).unwrap();
+    s.set_read_timeout(Some(Duration::from_secs(20))).unwrap();
+    s.write_all(payload).unwrap();
+    let mut buf = Vec::new();
+    let _ = s.read_to_end(&mut buf);
+    String::from_utf8_lossy(&buf).into_owned()
+}
+
+#[test]
+fn malformed_requests_get_400_not_a_panic() {
+    let (_coord, server) = start_service(1, 16, 2);
+    let addr = server.local_addr().to_string();
+    let mut client = client_for(&server);
+
+    // Garbage request line.
+    let resp = raw_exchange(&addr, b"GARBAGE\r\n\r\n");
+    assert!(resp.starts_with("HTTP/1.1 400"), "{resp}");
+
+    // Truncated JSON body.
+    let resp = raw_exchange(
+        &addr,
+        b"POST /v1/jobs HTTP/1.1\r\nconnection: close\r\ncontent-length: 1\r\n\r\n{",
+    );
+    assert!(resp.starts_with("HTTP/1.1 400"), "{resp}");
+
+    // Valid JSON, invalid schema.
+    let resp = raw_exchange(
+        &addr,
+        b"POST /v1/jobs HTTP/1.1\r\nconnection: close\r\ncontent-length: 9\r\n\r\n{\"k\": 2 }",
+    );
+    assert!(resp.starts_with("HTTP/1.1 400"), "{resp}");
+
+    // Oversized body is refused up front.
+    let resp = raw_exchange(
+        &addr,
+        b"POST /v1/jobs HTTP/1.1\r\nconnection: close\r\ncontent-length: 999999999999\r\n\r\n",
+    );
+    assert!(resp.starts_with("HTTP/1.1 413"), "{resp}");
+
+    // Unknown endpoint / wrong method, via the keep-alive client.
+    let (status, _) = client
+        .request("GET", "/nope", None)
+        .unwrap();
+    assert_eq!(status, 404);
+    let (status, _) = client.request("DELETE", "/metrics", None).unwrap();
+    assert_eq!(status, 405);
+
+    // After all that abuse the service still answers.
+    client.health().unwrap();
+    let mut rng = Xoshiro256pp::seed_from_u64(2);
+    let x = Dense::from_fn(10, 20, |_, _| rng.next_uniform());
+    let wire = client
+        .submit_wait(&JobRequest::new(dense_input(&x), 2))
+        .unwrap();
+    assert!(wire.outcome.is_ok());
+    server.shutdown();
+}
+
+#[test]
+fn queued_jobs_are_claimed_by_blocking_get() {
+    let (_coord, server) = start_service(1, 16, 2);
+    let mut client = client_for(&server);
+
+    // A slow job so the zero-timeout poll sees it still running.
+    let mut slow = JobRequest::new(
+        generator_input(300, 500, Distribution::Uniform, 4, None, None),
+        16,
+    );
+    slow.config.power_iters = 2;
+    let SubmitOutcome::Queued(id) = client.submit(&slow).unwrap() else {
+        panic!("wait=false submit must queue");
+    };
+    // Zero-second poll: almost certainly still running -> 202.
+    let mut polls = 0;
+    loop {
+        match client.wait_timeout(id, 0.0).unwrap() {
+            WaitOutcome::Running => {
+                polls += 1;
+                assert!(polls < 10_000, "job never finished");
+            }
+            WaitOutcome::Done(r) => {
+                r.outcome.expect("job failed");
+                break;
+            }
+        }
+    }
+    // The id is forgotten once claimed.
+    let err = client.wait(id).unwrap_err();
+    assert!(format!("{err}").contains("404"), "{err}");
+    // Unknown ids are 404 too.
+    let err = client.wait(424242).unwrap_err();
+    assert!(format!("{err}").contains("404"), "{err}");
+    server.shutdown();
+}
+
+#[test]
+fn graceful_shutdown_drains_in_flight_requests() {
+    let (coord, server) = start_service(1, 16, 2);
+    let addr = server.local_addr().to_string();
+
+    // A deliberately slow job submitted with wait=true from another
+    // thread; shutdown must let its response finish.
+    let handle = std::thread::spawn(move || {
+        let mut client = Client::connect(&addr).unwrap();
+        let mut req = JobRequest::new(
+            generator_input(500, 600, Distribution::Uniform, 8, None, None),
+            20,
+        );
+        req.config.power_iters = 3;
+        req.engine = EnginePreference::Native;
+        client.submit_wait(&req)
+    });
+
+    // Wait until the request has actually been accepted (no blind
+    // sleep: CI machines can be slow), then shut down mid-flight.
+    let deadline = std::time::Instant::now() + Duration::from_secs(10);
+    while coord.metrics().submitted == 0 {
+        assert!(std::time::Instant::now() < deadline, "request never arrived");
+        std::thread::sleep(Duration::from_millis(5));
+    }
+    let addr = server.local_addr();
+    server.shutdown();
+
+    // The in-flight request completed with a full response…
+    let wire = handle.join().unwrap().expect("in-flight request was dropped");
+    assert!(wire.outcome.is_ok());
+    // …and the listener is really gone.
+    assert!(Client::connect(&addr.to_string()).is_err());
+}
+
+#[test]
+fn metrics_endpoint_reports_service_counters() {
+    let (coord, server) = start_service(2, 16, 2);
+    let mut client = client_for(&server);
+    let mut rng = Xoshiro256pp::seed_from_u64(6);
+    let x = Dense::from_fn(12, 24, |_, _| rng.next_uniform());
+    for _ in 0..2 {
+        client
+            .submit_wait(&JobRequest::new(dense_input(&x), 2))
+            .unwrap()
+            .outcome
+            .unwrap();
+    }
+    let m = client.metrics().unwrap();
+    assert_eq!(m.get("http_accepted").unwrap().as_usize().unwrap(), 2);
+    assert_eq!(m.get("http_rejected").unwrap().as_usize().unwrap(), 0);
+    assert!(m.get("completed").unwrap().as_usize().unwrap() >= 2);
+    assert!(m.get("http_bytes_in").unwrap().as_usize().unwrap() > 0);
+    assert!(m.get("http_bytes_out").unwrap().as_usize().unwrap() > 0);
+    // The HTTP counters and the coordinator snapshot are one view.
+    let snap = coord.metrics();
+    assert_eq!(snap.http_accepted, 2);
+    assert_eq!(snap.queue_depth, 0);
+    assert_eq!(snap.in_flight, 0);
+    server.shutdown();
+}
