@@ -1,14 +1,20 @@
 //! Streaming-scale bench: in-memory vs out-of-core factorization
-//! throughput per block size, emitting `BENCH_stream.json` for the perf
-//! trajectory (uploaded as a CI artifact next to `BENCH_gemm.json`).
+//! throughput per block size, pass policy (exact vs fused) and prefetch
+//! (on vs off), emitting `BENCH_stream.json` for the perf trajectory
+//! (uploaded as a CI artifact next to `BENCH_gemm.json`).
 //!
-//! Three legs per block size:
-//!   * `dense`      — the in-memory [`srsvd::linalg::Dense`] baseline;
+//! Legs per (block size × policy × prefetch) cell:
 //!   * `stream-mem` — `Streamed<InMemorySource>`: pure sweep overhead;
-//!   * `stream-file`— `Streamed<FileSource>`: sweep + disk IO.
+//!   * `stream-file`— `Streamed<FileSource>`: sweep + disk IO;
+//! plus the in-memory [`srsvd::linalg::Dense`] baseline (`dense`).
 //!
-//! Every streamed run is checked byte-identical to the dense baseline
-//! (the module contract) before its timing is reported.
+//! Every `exact` streamed run is checked byte-identical to the dense
+//! baseline (the module contract) before its timing is reported. For
+//! `fused` runs byte-identity is out of contract (accuracy is pinned in
+//! `rust/tests/stream.rs`); each row instead carries the measured
+//! source-pass count (`passes`: `2 + 2q` exact vs `q + 2` fused — the
+//! wall-clock lever for file-backed runs, where every pass is a disk
+//! sweep).
 //!
 //! Run: `cargo bench --bench stream_scale`.
 //! Env: `SRSVD_BENCH_QUICK=1` (CI smoke), `SRSVD_BENCH_STREAM_JSON=<path>`
@@ -20,7 +26,7 @@ use srsvd::linalg::stream::{
     spill_to_file, GeneratorSource, InMemorySource, MatrixSource, Streamed,
 };
 use srsvd::rng::Xoshiro256pp;
-use srsvd::svd::{Factorization, ShiftedRsvd, SvdConfig};
+use srsvd::svd::{Factorization, PassPolicy, ShiftedRsvd, SvdConfig};
 use srsvd::util::json::Json;
 use srsvd::util::timer::fmt_duration;
 
@@ -30,12 +36,54 @@ fn identical(a: &Factorization, b: &Factorization) -> bool {
         && a.v.data().iter().zip(b.v.data()).all(|(x, y)| x.to_bits() == y.to_bits())
 }
 
+struct LegStats {
+    passes: u64,
+    mean_s: f64,
+    p95_s: f64,
+    /// `Some` for exact legs (asserted true); `None` for fused legs.
+    bit_identical: Option<bool>,
+}
+
+/// Time one streamed leg: parity/pass-count check on a first run, then
+/// the measured repetitions. μ is precomputed by the caller so
+/// `passes` reads exactly the factorization schedule (`2 + 2q` exact,
+/// `q + 2` fused) with no mean-centering sweep folded in.
+#[allow(clippy::too_many_arguments)]
+fn run_leg<S: MatrixSource>(
+    b: &Bencher,
+    label: &str,
+    src: &S,
+    bl: usize,
+    prefetch: bool,
+    cfg: SvdConfig,
+    mu: &[f64],
+    seed: u64,
+    baseline: &Factorization,
+) -> LegStats {
+    let factorize = |w: &Streamed<&S>| {
+        let mut rng = Xoshiro256pp::seed_from_u64(seed ^ 0xFA);
+        ShiftedRsvd::new(cfg).factorize(w, mu, &mut rng).unwrap()
+    };
+    let w = Streamed::with_block_rows(src, bl).with_prefetch(prefetch);
+    let fact = factorize(&w);
+    let passes = w.stats().passes; // exactly one factorization's schedule
+    let bit_identical = match cfg.pass_policy {
+        PassPolicy::Exact => {
+            let ok = identical(baseline, &fact);
+            assert!(ok, "{label}: exact streamed factors diverged from dense");
+            Some(ok)
+        }
+        PassPolicy::Fused => None,
+    };
+    let stats = b.run(label, || factorize(&w));
+    LegStats { passes, mean_s: stats.mean_s, p95_s: stats.p95_s, bit_identical }
+}
+
 fn main() {
     let b = Bencher::from_env();
     let quick = std::env::var("SRSVD_BENCH_QUICK").as_deref() == Ok("1");
     let (m, n, k) = if quick { (600, 500, 6) } else { (2400, 1600, 10) };
     let block_sizes: &[usize] = if quick { &[64, 600] } else { &[64, 256, 1024, 2400] };
-    let cfg = SvdConfig::paper(k).with_power(1);
     let seed = 42u64;
 
     let gen = GeneratorSource::new(m, n, Distribution::Uniform, seed).unwrap();
@@ -43,62 +91,91 @@ fn main() {
     let path = std::env::temp_dir().join(format!("srsvd_stream_scale_{m}x{n}.bin"));
     let file = spill_to_file(&gen, &path, 256).unwrap();
 
-    let factorize = |x: &dyn srsvd::svd::MatVecOps| {
-        let mut rng = Xoshiro256pp::seed_from_u64(seed ^ 0xFA);
-        ShiftedRsvd::new(cfg).factorize_mean_centered(x, &mut rng).unwrap()
-    };
-
+    let exact_cfg = SvdConfig::paper(k).with_power(1);
     println!("== stream scale: {m}x{n} uniform, k={k} q=1 ==");
-    let baseline = factorize(&dense);
-    let s_dense = b.run("dense in-memory", || factorize(&dense));
+    // μ once, up front: every leg then runs the pure factorization
+    // schedule (streamed row_means is byte-identical to this anyway).
+    let mu = dense.row_means();
+    let baseline = {
+        let mut rng = Xoshiro256pp::seed_from_u64(seed ^ 0xFA);
+        ShiftedRsvd::new(exact_cfg).factorize(&dense, &mu, &mut rng).unwrap()
+    };
+    let s_dense = b.run("dense in-memory", || {
+        let mut rng = Xoshiro256pp::seed_from_u64(seed ^ 0xFA);
+        ShiftedRsvd::new(exact_cfg).factorize(&dense, &mu, &mut rng).unwrap()
+    });
 
     let mut rows: Vec<Json> = Vec::new();
     rows.push(Json::obj(vec![
         ("leg", Json::str("dense")),
         ("block_rows", Json::num(m as f64)),
+        ("pass_policy", Json::str("exact")),
+        ("prefetch", Json::Bool(false)),
+        ("passes", Json::Null),
         ("mean_s", Json::num(s_dense.mean_s)),
         ("p95_s", Json::num(s_dense.p95_s)),
         ("slowdown_vs_dense", Json::num(1.0)),
         ("bit_identical", Json::Bool(true)),
     ]));
 
-    let mut t = Table::new(&["leg", "block_rows", "time", "vs dense", "bit-identical"]);
+    let mut t = Table::new(&[
+        "leg", "policy", "prefetch", "block_rows", "passes", "time", "vs dense",
+    ]);
     t.row(&[
         "dense".into(),
+        "exact".into(),
+        "-".into(),
         m.to_string(),
+        "-".into(),
         fmt_duration(s_dense.mean_s),
         "1.00x".into(),
-        "-".into(),
     ]);
 
     let mem_src = InMemorySource::new(dense.clone());
     for &bl in block_sizes {
         let bl = bl.min(m);
-        let mem = Streamed::with_block_rows(&mem_src, bl);
-        let fil = Streamed::with_block_rows(&file, bl);
-        let legs: [(&str, &dyn srsvd::svd::MatVecOps); 2] =
-            [("stream-mem", &mem), ("stream-file", &fil)];
-        for (leg, x) in legs {
-            let fact_now = factorize(x);
-            let ok = identical(&baseline, &fact_now);
-            assert!(ok, "{leg} bl={bl}: streamed factors diverged from dense");
-            let stats = b.run(&format!("{leg} bl={bl}"), || factorize(x));
-            let slowdown = stats.mean_s / s_dense.mean_s.max(1e-12);
-            t.row(&[
-                leg.into(),
-                bl.to_string(),
-                fmt_duration(stats.mean_s),
-                format!("{slowdown:.2}x"),
-                ok.to_string(),
-            ]);
-            rows.push(Json::obj(vec![
-                ("leg", Json::str(leg)),
-                ("block_rows", Json::num(bl as f64)),
-                ("mean_s", Json::num(stats.mean_s)),
-                ("p95_s", Json::num(stats.p95_s)),
-                ("slowdown_vs_dense", Json::num(slowdown)),
-                ("bit_identical", Json::Bool(ok)),
-            ]));
+        for policy in [PassPolicy::Exact, PassPolicy::Fused] {
+            let cfg = exact_cfg.with_pass_policy(policy);
+            for prefetch in [true, false] {
+                for leg in ["stream-mem", "stream-file"] {
+                    let label = format!(
+                        "{leg} {} prefetch={prefetch} bl={bl}",
+                        policy.name()
+                    );
+                    let r = if leg == "stream-mem" {
+                        run_leg(&b, &label, &mem_src, bl, prefetch, cfg, &mu, seed, &baseline)
+                    } else {
+                        run_leg(&b, &label, &file, bl, prefetch, cfg, &mu, seed, &baseline)
+                    };
+                    let slowdown = r.mean_s / s_dense.mean_s.max(1e-12);
+                    t.row(&[
+                        leg.into(),
+                        policy.name().into(),
+                        prefetch.to_string(),
+                        bl.to_string(),
+                        r.passes.to_string(),
+                        fmt_duration(r.mean_s),
+                        format!("{slowdown:.2}x"),
+                    ]);
+                    rows.push(Json::obj(vec![
+                        ("leg", Json::str(leg)),
+                        ("block_rows", Json::num(bl as f64)),
+                        ("pass_policy", Json::str(policy.name())),
+                        ("prefetch", Json::Bool(prefetch)),
+                        ("passes", Json::num(r.passes as f64)),
+                        ("mean_s", Json::num(r.mean_s)),
+                        ("p95_s", Json::num(r.p95_s)),
+                        ("slowdown_vs_dense", Json::num(slowdown)),
+                        (
+                            "bit_identical",
+                            match r.bit_identical {
+                                Some(v) => Json::Bool(v),
+                                None => Json::Null,
+                            },
+                        ),
+                    ]));
+                }
+            }
         }
     }
     print!("{}", t.render());

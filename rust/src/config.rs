@@ -19,6 +19,9 @@
 //! [stream]
 //! block_rows = 0           # rows per resident block; 0 = derive from budget
 //! budget_mb  = 64          # resident-block budget (MiB) when block_rows = 0
+//! prefetch   = on          # double-buffered background block reads (on|off)
+//! pass_policy = exact      # source-pass schedule: exact (2+2q passes,
+//!                          # byte-identical to dense) | fused (<= q+2 passes)
 //!
 //! [server]
 //! addr              = 127.0.0.1:7878   # listen address for `serve --listen`
@@ -39,7 +42,7 @@ use std::path::PathBuf;
 
 use crate::coordinator::CoordinatorConfig;
 use crate::linalg::stream::StreamConfig;
-use crate::svd::{BasisMethod, SmallSvdMethod, SvdConfig};
+use crate::svd::{BasisMethod, PassPolicy, SmallSvdMethod, SvdConfig};
 use crate::util::{Error, Result};
 
 /// Raw parsed file: section -> key -> value.
@@ -124,7 +127,7 @@ impl RawConfig {
     }
 
     /// Build the out-of-core streaming config (defaults where unset):
-    /// `[stream] block_rows` / `budget_mb`.
+    /// `[stream] block_rows` / `budget_mb` / `prefetch`.
     pub fn stream(&self) -> Result<StreamConfig> {
         let mut cfg = StreamConfig::default();
         if let Some(b) = self.get_usize("stream", "block_rows")? {
@@ -132,6 +135,11 @@ impl RawConfig {
         }
         if let Some(mb) = self.get_usize("stream", "budget_mb")? {
             cfg.budget_mb = mb.max(1);
+        }
+        if let Some(p) = self.get("stream", "prefetch") {
+            cfg.prefetch = parse_switch(p).ok_or_else(|| {
+                Error::Invalid(format!("stream.prefetch: not a boolean: {p:?}"))
+            })?;
         }
         Ok(cfg)
     }
@@ -173,7 +181,22 @@ impl RawConfig {
         if let Some(s) = self.get("svd", "small_svd") {
             cfg.small_svd = parse_small_svd(s)?;
         }
+        // The pass schedule lives in the [stream] section — it is the
+        // out-of-core wall-clock knob — but lands on SvdConfig, which
+        // is what the sweep stages read.
+        if let Some(p) = self.get("stream", "pass_policy") {
+            cfg.pass_policy = parse_pass_policy(p)?;
+        }
         Ok(cfg)
+    }
+}
+
+/// Parse an on/off switch (`1|true|on|yes` / `0|false|off|no`).
+fn parse_switch(s: &str) -> Option<bool> {
+    match s.to_ascii_lowercase().as_str() {
+        "1" | "true" | "on" | "yes" => Some(true),
+        "0" | "false" | "off" | "no" => Some(false),
+        _ => None,
     }
 }
 
@@ -195,6 +218,19 @@ pub fn parse_small_svd(s: &str) -> Result<SmallSvdMethod> {
         "jacobi" => Ok(SmallSvdMethod::Jacobi),
         "gram" => Ok(SmallSvdMethod::GramEig),
         _ => Err(Error::Invalid(format!("unknown small_svd {s:?} (jacobi | gram)"))),
+    }
+}
+
+/// Parse a source-pass schedule name (`exact | fused`) — the
+/// `[stream] pass_policy` knob, the `--pass-policy` CLI flag, and the
+/// wire protocol's `pass_policy` field.
+pub fn parse_pass_policy(s: &str) -> Result<PassPolicy> {
+    match s {
+        "exact" => Ok(PassPolicy::Exact),
+        "fused" => Ok(PassPolicy::Fused),
+        _ => Err(Error::Invalid(format!(
+            "unknown pass_policy {s:?} (exact | fused)"
+        ))),
     }
 }
 
@@ -261,16 +297,35 @@ small_svd = gram
 
     #[test]
     fn stream_section_knobs() {
-        let raw = RawConfig::parse("[stream]\nblock_rows = 512\nbudget_mb = 16\n").unwrap();
+        let raw = RawConfig::parse(
+            "[stream]\nblock_rows = 512\nbudget_mb = 16\nprefetch = off\n",
+        )
+        .unwrap();
         let s = raw.stream().unwrap();
         assert_eq!(s.block_rows, 512);
         assert_eq!(s.budget_mb, 16);
-        // Defaults when missing.
+        assert!(!s.prefetch);
+        // Defaults when missing (prefetch on).
         let s = RawConfig::parse("").unwrap().stream().unwrap();
         assert_eq!(s, StreamConfig::default());
-        // Non-integer errors.
+        assert!(s.prefetch);
+        // Non-integer / non-boolean errors.
         let raw = RawConfig::parse("[stream]\nblock_rows = lots\n").unwrap();
         assert!(raw.stream().is_err());
+        let raw = RawConfig::parse("[stream]\nprefetch = sometimes\n").unwrap();
+        assert!(raw.stream().is_err());
+    }
+
+    #[test]
+    fn stream_pass_policy_feeds_svd_config() {
+        let raw = RawConfig::parse("[stream]\npass_policy = fused\n").unwrap();
+        assert_eq!(raw.svd().unwrap().pass_policy, PassPolicy::Fused);
+        let raw = RawConfig::parse("").unwrap();
+        assert_eq!(raw.svd().unwrap().pass_policy, PassPolicy::Exact);
+        let raw = RawConfig::parse("[stream]\npass_policy = warp\n").unwrap();
+        assert!(raw.svd().is_err());
+        assert!(parse_pass_policy("bogus").is_err());
+        assert_eq!(parse_pass_policy("exact").unwrap(), PassPolicy::Exact);
     }
 
     #[test]

@@ -27,6 +27,10 @@ pub struct Metrics {
     pub http_bytes_in: AtomicU64,
     /// Response bytes written by the network service layer.
     pub http_bytes_out: AtomicU64,
+    /// Source passes (full sweeps) performed by streamed jobs.
+    pub stream_passes: AtomicU64,
+    /// Payload bytes read from streamed sources.
+    pub stream_bytes_read: AtomicU64,
     /// Total execution time, nanoseconds.
     pub exec_ns: AtomicU64,
     /// Total queueing time, nanoseconds.
@@ -68,6 +72,8 @@ impl Metrics {
             http_rejected: self.http_rejected.load(Ordering::Relaxed),
             http_bytes_in: self.http_bytes_in.load(Ordering::Relaxed),
             http_bytes_out: self.http_bytes_out.load(Ordering::Relaxed),
+            stream_passes: self.stream_passes.load(Ordering::Relaxed),
+            stream_bytes_read: self.stream_bytes_read.load(Ordering::Relaxed),
             mean_exec_s: if completed > 0 {
                 exec_ns as f64 / completed as f64 / 1e9
             } else {
@@ -113,6 +119,12 @@ pub struct MetricsSnapshot {
     pub http_bytes_in: u64,
     /// Response bytes written by the network service layer.
     pub http_bytes_out: u64,
+    /// Source passes (full sweeps) performed by streamed jobs — the
+    /// pass-efficiency signal (`PassPolicy::Fused` cuts it roughly in
+    /// half on power-iterated workloads).
+    pub stream_passes: u64,
+    /// Payload bytes read from streamed sources.
+    pub stream_bytes_read: u64,
     /// Mean seconds spent executing, over completed jobs.
     pub mean_exec_s: f64,
     /// Mean seconds spent queued, over completed jobs.
@@ -136,6 +148,7 @@ impl std::fmt::Display for MetricsSnapshot {
             "submitted={} completed={} failed={} native={} artifact={} \
              depth={} inflight={} mean_exec={:.3}ms mean_queue={:.3}ms max_exec={:.3}ms \
              pool[threads={} par_ops={} serial_ops={} chunks={}] \
+             stream[passes={} read={}B] \
              http[accepted={} rejected={} in={}B out={}B]",
             self.submitted,
             self.completed,
@@ -151,6 +164,8 @@ impl std::fmt::Display for MetricsSnapshot {
             self.pool_parallel_ops,
             self.pool_serial_ops,
             self.pool_chunks,
+            self.stream_passes,
+            self.stream_bytes_read,
             self.http_accepted,
             self.http_rejected,
             self.http_bytes_in,
@@ -187,13 +202,18 @@ mod tests {
         m.http_rejected.fetch_add(1, Ordering::Relaxed);
         m.http_bytes_in.fetch_add(100, Ordering::Relaxed);
         m.http_bytes_out.fetch_add(300, Ordering::Relaxed);
+        m.stream_passes.fetch_add(4, Ordering::Relaxed);
+        m.stream_bytes_read.fetch_add(4096, Ordering::Relaxed);
         let s = m.snapshot();
         assert_eq!(s.queue_depth, 2);
         assert_eq!(s.in_flight, 1);
         assert_eq!(s.http_accepted, 5);
         assert_eq!(s.http_rejected, 1);
+        assert_eq!(s.stream_passes, 4);
+        assert_eq!(s.stream_bytes_read, 4096);
         let text = format!("{s}");
         assert!(text.contains("inflight=1"), "{text}");
+        assert!(text.contains("stream[passes=4 read=4096B]"), "{text}");
         assert!(text.contains("http[accepted=5 rejected=1 in=100B out=300B]"), "{text}");
     }
 }

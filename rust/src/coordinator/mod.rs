@@ -244,7 +244,14 @@ impl Coordinator {
         self.submit_inner(spec, false)
     }
 
-    fn submit_inner(&self, spec: JobSpec, block: bool) -> Result<JobHandle> {
+    fn submit_inner(&self, mut spec: JobSpec, block: bool) -> Result<JobHandle> {
+        // Streamed inputs get private I/O counters per submission:
+        // `SourceStats` handles are shared across clones of a spec, and
+        // two such jobs running concurrently would interleave their
+        // per-job metric deltas otherwise.
+        if let MatrixInput::Streamed(s) = &mut spec.input {
+            *s = s.fresh_stats();
+        }
         let route = router::route(&spec, self.manifest.as_ref())?;
         let id = JobId(self.next_id.fetch_add(1, Ordering::Relaxed));
         let (reply_tx, reply_rx) = std::sync::mpsc::channel();
@@ -340,6 +347,16 @@ fn native_loop(rx: Arc<Mutex<Receiver<WorkItem>>>, metrics: Arc<Metrics>, pool: 
         });
         let exec_s = t.elapsed().as_secs_f64();
         metrics.record_exec(exec_s, queue_s, outcome.is_ok());
+        // Streamed jobs carry private per-submission I/O counters
+        // (zeroed in `submit_inner`), so the totals ARE this job's
+        // delta — including partial sweeps of a panicked job.
+        if let MatrixInput::Streamed(s) = &item.spec.input {
+            let io = s.stats();
+            metrics.stream_passes.fetch_add(io.passes, Ordering::Relaxed);
+            metrics
+                .stream_bytes_read
+                .fetch_add(io.bytes_read, Ordering::Relaxed);
+        }
         metrics.in_flight.fetch_sub(1, Ordering::Relaxed);
         let _ = item.reply.send(JobResult {
             id: item.id,

@@ -10,7 +10,7 @@
 //! exist as a single operand — runs on the native engine.
 
 use crate::runtime::Manifest;
-use crate::svd::{BasisMethod, SvdEngine};
+use crate::svd::{BasisMethod, PassPolicy, SvdEngine};
 use crate::util::{Error, Result};
 
 use super::job::{EnginePreference, JobSpec, MatrixInput};
@@ -62,6 +62,9 @@ fn find_artifact(spec: &JobSpec, manifest: Option<&Manifest>) -> Option<String> 
     }
     if spec.config.basis != BasisMethod::Direct {
         return None; // ablation variants are native-only
+    }
+    if spec.config.pass_policy != PassPolicy::Exact {
+        return None; // the AOT pipeline compiles the exact pass schedule
     }
     let (m, n) = spec.input.shape();
     let a = manifest.find_srsvd(m, n, spec.config.k, spec.config.power_iters)?;

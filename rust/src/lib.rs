@@ -16,7 +16,10 @@
 //!   yields row blocks on demand (on-disk file, chunked generator, or
 //!   in-memory adapter) and [`linalg::Streamed`] runs every product
 //!   block-at-a-time under a `[stream]` memory budget with results
-//!   byte-identical to the in-memory path.
+//!   byte-identical to the in-memory path — with a double-buffered
+//!   prefetch pipeline (reads overlap the GEMM) and, under
+//!   [`svd::PassPolicy::Fused`], a fused Gram sweep that cuts a
+//!   factorization from `2 + 2q` source passes to `q + 2`.
 //! * [`parallel`] — the execution subsystem: a chunked, self-scheduling
 //!   thread pool (std threads + channels only) shared process-wide.
 //!   Sized by the `SRSVD_THREADS` env var or the `[parallel] threads`
@@ -72,7 +75,7 @@
 //! use srsvd::prelude::*;
 //!
 //! let src = GeneratorSource::new(200_000, 4_096, Distribution::Uniform, 0).unwrap();
-//! let x = Streamed::new(src, &StreamConfig { block_rows: 0, budget_mb: 64 });
+//! let x = Streamed::new(src, &StreamConfig { block_rows: 0, budget_mb: 64, prefetch: true });
 //! let mut rng = Xoshiro256pp::seed_from_u64(0);
 //! let fact = ShiftedRsvd::new(SvdConfig::paper(10))
 //!     .factorize_mean_centered(&x, &mut rng)
@@ -112,6 +115,6 @@ pub mod prelude {
     };
     pub use crate::rng::{Rng, Xoshiro256pp};
     pub use crate::svd::{
-        Factorization, MatVecOps, Pca, Rsvd, ShiftedRsvd, SvdConfig, SvdEngine,
+        Factorization, MatVecOps, PassPolicy, Pca, Rsvd, ShiftedRsvd, SvdConfig, SvdEngine,
     };
 }

@@ -25,7 +25,7 @@ pub use qr_update::qr_rank1_update;
 pub use sparse::{Csr, Triplets};
 pub use stream::{
     CsrRowSource, FileSource, FileWriter, GeneratorSource, InMemorySource, MatrixSource,
-    SharedSource, StreamConfig, Streamed,
+    SharedSource, SourceStats, SourceStatsSnapshot, StreamConfig, Streamed,
 };
 
 /// Frobenius norm of the difference of two equally-shaped matrices.

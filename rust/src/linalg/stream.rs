@@ -8,12 +8,17 @@
 //! configurable memory budget ([`StreamConfig`]). Following Halko,
 //! Martinsson, Shkolnisky & Tygert (arXiv:1007.5510), every operation —
 //! sampling, power iteration, projection, row means, norms — is a
-//! single pass over the row blocks.
+//! single pass over the row blocks, and the fused Gram sweep
+//! ([`MatVecOps::gram_sweep`]) services a whole power-iteration leg
+//! (`X̄ᵀ(X̄·W)`) from **one** block read per block — the
+//! `PassPolicy::Fused` schedule that drops a factorization from
+//! `2 + 2q` source passes to `q + 2`.
 //!
 //! ## Bit-exactness
 //!
-//! Streamed results are **byte-identical** to the in-memory [`Dense`]
-//! path for every block size and every thread-pool size:
+//! Streamed results under the default `PassPolicy::Exact` schedule are
+//! **byte-identical** to the in-memory [`Dense`] path for every block
+//! size, every thread-pool size, and with prefetch on or off:
 //!
 //! * `X·B` partitions rows of the output: each output row is produced by
 //!   the same serial kernel ([`gemm`]) on the same row data, so block
@@ -23,10 +28,35 @@
 //!   `i`-terms in exactly the serial order of the one-shot kernel.
 //! * `sq_fro` / `row_means` continue one accumulator across blocks in
 //!   the same element order the dense reductions use.
+//! * The prefetch pipeline (below) only moves the *reads* to a
+//!   background thread; blocks are still consumed in ascending order on
+//!   the calling thread, so accumulation order never changes.
 //!
 //! The contract is pinned by `rust/tests/stream.rs`, which compares
 //! whole factorizations (u/s/v) bit-for-bit at pools 1/2/8 across block
-//! sizes.
+//! sizes with prefetch on and off. (`PassPolicy::Fused` trades that
+//! byte-identity for the pass budget; its accuracy bound is pinned by
+//! the same suite.)
+//!
+//! ## Prefetch
+//!
+//! Each sweep can run **double-buffered** ([`StreamConfig::prefetch`],
+//! default on): a scoped reader thread fills block `i+1` while the
+//! caller runs the pool-parallel GEMM on block `i`, with two recycled
+//! block buffers circulating between them. Disk latency and compute
+//! overlap instead of alternating, and [`FileSource`] keeps a small
+//! pool of positioned file handles so concurrent readers (the prefetch
+//! thread, parallel jobs sharing one source) never serialize behind a
+//! single locked seek+read.
+//!
+//! ## Observability
+//!
+//! Every [`Streamed`] wrapper counts its I/O in a shared
+//! [`SourceStats`]: full passes over the source, blocks read, payload
+//! bytes. The coordinator aggregates them per job into the service
+//! metrics (`stream_passes` / `stream_bytes_read` in `GET /metrics`),
+//! and `rust/tests/stream.rs` asserts the `Fused` ≤ `q + 2` pass budget
+//! against them.
 //!
 //! ## Sources
 //!
@@ -48,7 +78,8 @@ use std::fmt;
 use std::fs;
 use std::io::{BufWriter, Read, Seek, SeekFrom, Write};
 use std::path::{Path, PathBuf};
-use std::sync::{Arc, Mutex};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{mpsc, Arc, Mutex};
 
 use super::{gemm, Csr, Dense};
 use crate::data::Distribution;
@@ -381,16 +412,24 @@ pub fn spill_to_file<S: MatrixSource>(
     w.finish()
 }
 
+/// Idle [`FileSource`] handles kept for reuse; beyond this, extra
+/// concurrent readers open (and then drop) their own descriptor.
+const MAX_IDLE_HANDLES: usize = 8;
+
 /// A [`MatrixSource`] reading row blocks from the on-disk format written
 /// by [`FileWriter`]. Header and payload length are validated at open
-/// time; block reads seek + read behind a mutex (sources are shared
-/// across coordinator workers).
+/// time. Block reads take a *private* positioned handle from a small
+/// pool (opening a fresh one when the pool is empty) and seek + read
+/// without holding any lock, so concurrent readers — the prefetch
+/// pipeline, several coordinator jobs sharing one source — never
+/// serialize behind a single `Mutex<File>` seek+read.
 #[derive(Debug)]
 pub struct FileSource {
     path: PathBuf,
     rows: usize,
     cols: usize,
-    file: Mutex<fs::File>,
+    /// Idle handles; the lock is held only to pop/push, never during IO.
+    handles: Mutex<Vec<fs::File>>,
 }
 
 impl FileSource {
@@ -429,7 +468,7 @@ impl FileSource {
             path: path.to_path_buf(),
             rows,
             cols,
-            file: Mutex::new(f),
+            handles: Mutex::new(vec![f]),
         })
     }
 
@@ -448,15 +487,21 @@ impl MatrixSource for FileSource {
         check_block_bounds(self.shape(), row0, nrows, out.len());
         let nbytes = out.len() * 8;
         let mut bytes = vec![0u8; nbytes];
-        {
-            let mut f = self
-                .file
-                .lock()
-                .map_err(|_| Error::Service("file source mutex poisoned".into()))?;
-            f.seek(SeekFrom::Start(
-                HEADER_LEN + (row0 as u64) * (self.cols as u64) * 8,
-            ))?;
-            f.read_exact(&mut bytes)?;
+        // Pop an idle handle (or open a private one); IO happens with no
+        // lock held, so concurrent block reads proceed in parallel.
+        let pooled = self.handles.lock().ok().and_then(|mut g| g.pop());
+        let mut f = match pooled {
+            Some(f) => f,
+            None => fs::File::open(&self.path)?,
+        };
+        f.seek(SeekFrom::Start(
+            HEADER_LEN + (row0 as u64) * (self.cols as u64) * 8,
+        ))?;
+        f.read_exact(&mut bytes)?;
+        if let Ok(mut g) = self.handles.lock() {
+            if g.len() < MAX_IDLE_HANDLES {
+                g.push(f);
+            }
         }
         for (x, chunk) in out.iter_mut().zip(bytes.chunks_exact(8)) {
             *x = f64::from_le_bytes(chunk.try_into().unwrap());
@@ -469,9 +514,9 @@ impl MatrixSource for FileSource {
 // Streaming configuration
 // ---------------------------------------------------------------------------
 
-/// Memory policy for a streamed sweep — the `[stream]` config section
-/// (`block_rows`, `budget_mb`) and the `--stream-block` /
-/// `--stream-budget-mb` CLI flags.
+/// Memory and pipelining policy for a streamed sweep — the `[stream]`
+/// config section (`block_rows`, `budget_mb`, `prefetch`) and the
+/// `--stream-block` / `--stream-budget-mb` / `--no-prefetch` CLI flags.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct StreamConfig {
     /// Rows per resident block. `0` (the default) derives the block
@@ -479,13 +524,18 @@ pub struct StreamConfig {
     pub block_rows: usize,
     /// Approximate budget for the resident row block, in MiB (used when
     /// `block_rows` is 0). The budget governs the f64 block buffer; the
-    /// sweep's small outputs (block × K products) are extra.
+    /// sweep's small outputs (block × K products) are extra. With
+    /// prefetch on, two block buffers circulate instead of one.
     pub budget_mb: usize,
+    /// Double-buffered background reads: a reader thread fills block
+    /// `i+1` while block `i` is in the GEMM (default on). Never changes
+    /// results — blocks are consumed in the same ascending order.
+    pub prefetch: bool,
 }
 
 impl Default for StreamConfig {
     fn default() -> Self {
-        StreamConfig { block_rows: 0, budget_mb: 64 }
+        StreamConfig { block_rows: 0, budget_mb: 64, prefetch: true }
     }
 }
 
@@ -505,37 +555,116 @@ impl StreamConfig {
 }
 
 // ---------------------------------------------------------------------------
+// I/O observability
+// ---------------------------------------------------------------------------
+
+/// Cumulative I/O counters of a [`Streamed`] wrapper: full passes
+/// (sweeps) over the source, row blocks read, and payload bytes pulled.
+/// Shared across clones of one wrapper (the handle is an `Arc`), read
+/// with [`Streamed::stats`]; the coordinator aggregates them per job
+/// into the service metrics (`stream_passes` / `stream_bytes_read`).
+#[derive(Debug, Default)]
+pub struct SourceStats {
+    passes: AtomicU64,
+    blocks: AtomicU64,
+    bytes_read: AtomicU64,
+}
+
+impl SourceStats {
+    /// Point-in-time snapshot of the counters.
+    pub fn snapshot(&self) -> SourceStatsSnapshot {
+        SourceStatsSnapshot {
+            passes: self.passes.load(Ordering::Relaxed),
+            blocks: self.blocks.load(Ordering::Relaxed),
+            bytes_read: self.bytes_read.load(Ordering::Relaxed),
+        }
+    }
+}
+
+/// Point-in-time view of [`SourceStats`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct SourceStatsSnapshot {
+    /// Full sweeps over the source (one per product/reduction; the
+    /// pass-budget currency: `2 + 2q` per Exact factorization, `≤ q + 2`
+    /// per Fused one).
+    pub passes: u64,
+    /// Row blocks read.
+    pub blocks: u64,
+    /// Payload bytes read (`rows × cols × 8` per block).
+    pub bytes_read: u64,
+}
+
+// ---------------------------------------------------------------------------
 // The MatVecOps wrapper
 // ---------------------------------------------------------------------------
 
 /// Out-of-core [`MatVecOps`]: computes every product and reduction the
 /// SVD algorithms need in one block-at-a-time sweep over a
 /// [`MatrixSource`], dispatching each resident block through the
-/// pool-aware GEMM kernels.
+/// pool-aware GEMM kernels. Sweeps run double-buffered by default — a
+/// background reader fills the next block while the current one is in
+/// the GEMM (see the module docs).
 ///
 /// Results are byte-identical to the in-memory [`Dense`] path for every
-/// `block_rows` and every pool size (see the module docs for why), so a
-/// streamed factorization replays a seeded in-memory run exactly.
+/// `block_rows`, every pool size, and with prefetch on or off (see the
+/// module docs for why), so a streamed factorization replays a seeded
+/// in-memory run exactly.
 ///
 /// IO errors during a sweep panic with context (see the module docs).
 #[derive(Debug, Clone)]
 pub struct Streamed<S> {
     source: S,
     block_rows: usize,
+    prefetch: bool,
+    stats: Arc<SourceStats>,
 }
 
 impl<S: MatrixSource> Streamed<S> {
-    /// Wrap `source` under the given memory policy.
+    /// Wrap `source` under the given memory/pipelining policy.
     pub fn new(source: S, config: &StreamConfig) -> Streamed<S> {
         let (m, n) = source.shape();
         let block_rows = config.resolve_block_rows(m, n);
-        Streamed { source, block_rows }
+        Streamed {
+            source,
+            block_rows,
+            prefetch: config.prefetch,
+            stats: Arc::new(SourceStats::default()),
+        }
     }
 
-    /// Wrap `source` with an explicit block height (clamped to `[1, m]`).
+    /// Wrap `source` with an explicit block height (clamped to `[1, m]`)
+    /// and prefetch on.
     pub fn with_block_rows(source: S, block_rows: usize) -> Streamed<S> {
         let (m, _) = source.shape();
-        Streamed { source, block_rows: block_rows.clamp(1, m.max(1)) }
+        Streamed {
+            source,
+            block_rows: block_rows.clamp(1, m.max(1)),
+            prefetch: true,
+            stats: Arc::new(SourceStats::default()),
+        }
+    }
+
+    /// Builder-style prefetch override (e.g. `--no-prefetch`).
+    pub fn with_prefetch(mut self, prefetch: bool) -> Streamed<S> {
+        self.prefetch = prefetch;
+        self
+    }
+
+    /// This wrapper with a fresh, zeroed [`SourceStats`] handle (same
+    /// source and policy). Clones of a wrapper share one counter
+    /// handle; the coordinator re-wraps each submission so per-job
+    /// metric deltas from concurrently running cloned specs cannot
+    /// interleave.
+    pub fn fresh_stats(&self) -> Streamed<S>
+    where
+        S: Clone,
+    {
+        Streamed {
+            source: self.source.clone(),
+            block_rows: self.block_rows,
+            prefetch: self.prefetch,
+            stats: Arc::new(SourceStats::default()),
+        }
     }
 
     /// Rows per resident block.
@@ -543,16 +672,36 @@ impl<S: MatrixSource> Streamed<S> {
         self.block_rows
     }
 
+    /// Whether sweeps run the double-buffered prefetch pipeline.
+    pub fn prefetch(&self) -> bool {
+        self.prefetch
+    }
+
     /// Borrow the underlying source.
     pub fn source(&self) -> &S {
         &self.source
     }
 
+    /// Snapshot of the cumulative I/O counters (shared across clones of
+    /// this wrapper).
+    pub fn stats(&self) -> SourceStatsSnapshot {
+        self.stats.snapshot()
+    }
+
     /// One pass over the matrix: `f(row0, block)` for consecutive row
-    /// blocks in ascending order. A single buffer is recycled across
-    /// blocks, so peak residency is one `block_rows × n` block.
+    /// blocks in ascending order — prefetched on a background reader
+    /// thread when enabled, serial otherwise. Either way `f` observes
+    /// the same blocks in the same order on the calling thread, so
+    /// accumulation order (the byte-identity contract) never changes.
     fn sweep(&self, mut f: impl FnMut(usize, &Dense)) {
         let (m, n) = self.source.shape();
+        self.stats.passes.fetch_add(1, Ordering::Relaxed);
+        if self.prefetch && self.block_rows < m {
+            self.sweep_prefetched(m, n, &mut f);
+            return;
+        }
+        // Serial sweep: one buffer recycled across blocks, so peak
+        // residency is one `block_rows × n` block.
         let mut buf: Vec<f64> = Vec::new();
         let mut row0 = 0;
         while row0 < m {
@@ -564,11 +713,69 @@ impl<S: MatrixSource> Streamed<S> {
                     row0 + nr
                 );
             }
+            self.stats.blocks.fetch_add(1, Ordering::Relaxed);
+            self.stats
+                .bytes_read
+                .fetch_add((nr * n * 8) as u64, Ordering::Relaxed);
             let block = Dense::from_vec(nr, n, std::mem::take(&mut buf));
             f(row0, &block);
             buf = block.into_vec();
             row0 += nr;
         }
+    }
+
+    /// Double-buffered sweep: a scoped reader thread fills block `i+1`
+    /// while the caller consumes block `i`. Two buffers circulate — one
+    /// in flight, one in the GEMM — so peak residency is two blocks. A
+    /// reader-side IO failure panics with the same context as the
+    /// serial path (re-raised on the calling thread).
+    fn sweep_prefetched(&self, m: usize, n: usize, f: &mut impl FnMut(usize, &Dense)) {
+        let block_rows = self.block_rows;
+        let source = &self.source;
+        std::thread::scope(|scope| {
+            let (full_tx, full_rx) = mpsc::sync_channel::<(usize, Dense)>(1);
+            let (empty_tx, empty_rx) = mpsc::channel::<Vec<f64>>();
+            for _ in 0..2 {
+                let _ = empty_tx.send(Vec::new());
+            }
+            let reader = scope.spawn(move || {
+                let mut row0 = 0;
+                while row0 < m {
+                    let nr = block_rows.min(m - row0);
+                    // A missing recycled buffer (consumer gone) just
+                    // means a fresh allocation for the final read.
+                    let mut buf = empty_rx.recv().unwrap_or_default();
+                    buf.resize(nr * n, 0.0);
+                    if let Err(e) = source.read_rows(row0, nr, &mut buf) {
+                        panic!(
+                            "matrix source failed reading rows {row0}..{} of {m}: {e}",
+                            row0 + nr
+                        );
+                    }
+                    if full_tx.send((row0, Dense::from_vec(nr, n, buf))).is_err() {
+                        return; // consumer stopped; no one wants more blocks
+                    }
+                    row0 += nr;
+                }
+            });
+            let mut next_row = 0;
+            while next_row < m {
+                // A closed channel means the reader panicked mid-sweep;
+                // fall through to the join below to re-raise it.
+                let Ok((row0, block)) = full_rx.recv() else { break };
+                self.stats.blocks.fetch_add(1, Ordering::Relaxed);
+                self.stats
+                    .bytes_read
+                    .fetch_add((block.rows() * n * 8) as u64, Ordering::Relaxed);
+                f(row0, &block);
+                next_row = row0 + block.rows();
+                let _ = empty_tx.send(block.into_vec());
+            }
+            if let Err(payload) = reader.join() {
+                // Preserve the reader's panic message (source + rows).
+                std::panic::resume_unwind(payload);
+            }
+        });
     }
 }
 
@@ -634,6 +841,57 @@ impl<S: MatrixSource> MatVecOps for Streamed<S> {
             gemm::tmatmul_acc(block, &b_rows, &mut c);
         });
         c
+    }
+
+    /// The fused power-iteration leg: `Z = X̄ᵀ(X̄·W)` in **one** pass
+    /// over the source. Per block `i` the resident rows service both
+    /// products — `Yᵢ = X̄ᵢ·W` (rank-1 shift fused via the shared
+    /// [`gemm::matmul_rank1`] epilogue) immediately feeds
+    /// `Z += XᵢᵀYᵢ`, with the left shift term `1·(μᵀY)` accumulated
+    /// alongside and subtracted once at the end. This halves the data
+    /// passes of the default two-product implementation and is what
+    /// makes the `PassPolicy::Fused` `q + 2` budget possible.
+    fn gram_sweep(&self, w: &Dense, mu: &[f64]) -> Dense {
+        let (m, n) = self.shape();
+        assert_eq!(w.rows(), n, "streamed gram_sweep shape mismatch");
+        assert_eq!(mu.len(), m, "streamed gram_sweep mu length");
+        let l = w.cols();
+        let shifted = mu.iter().any(|&v| v != 0.0);
+        let colsum_w: Vec<f64> = if shifted {
+            crate::svd::ops::colsums(w)
+        } else {
+            Vec::new()
+        };
+        let mut z = Dense::zeros(n, l);
+        let mut muy = vec![0.0; l]; // running μᵀY
+        self.sweep(|row0, block| {
+            let nr = block.rows();
+            let y = if shifted {
+                gemm::matmul_rank1(block, w, &mu[row0..row0 + nr], &colsum_w)
+            } else {
+                gemm::matmul(block, w)
+            };
+            gemm::tmatmul_acc(block, &y, &mut z);
+            if shifted {
+                for (local, &mi) in mu[row0..row0 + nr].iter().enumerate() {
+                    if mi != 0.0 {
+                        for (acc, &yv) in muy.iter_mut().zip(y.row(local)) {
+                            *acc += mi * yv;
+                        }
+                    }
+                }
+            }
+        });
+        if shifted {
+            // Z = XᵀY − 1·(μᵀY): subtract the accumulated row vector
+            // from every output row.
+            for i in 0..n {
+                for (zx, &s) in z.row_mut(i).iter_mut().zip(&muy) {
+                    *zx -= s;
+                }
+            }
+        }
+        z
     }
 
     fn row_means(&self) -> Vec<f64> {
@@ -755,25 +1013,77 @@ mod tests {
 
     #[test]
     fn stream_config_resolution() {
+        let cfg = |block_rows, budget_mb| StreamConfig { block_rows, budget_mb, prefetch: true };
         // Explicit block_rows wins and clamps.
-        assert_eq!(
-            StreamConfig { block_rows: 10, budget_mb: 1 }.resolve_block_rows(100, 50),
-            10
-        );
-        assert_eq!(
-            StreamConfig { block_rows: 500, budget_mb: 1 }.resolve_block_rows(100, 50),
-            100
-        );
+        assert_eq!(cfg(10, 1).resolve_block_rows(100, 50), 10);
+        assert_eq!(cfg(500, 1).resolve_block_rows(100, 50), 100);
         // Budget-derived: 1 MiB / (8 B × 1024 cols) = 128 rows.
-        assert_eq!(
-            StreamConfig { block_rows: 0, budget_mb: 1 }.resolve_block_rows(10_000, 1024),
-            128
-        );
+        assert_eq!(cfg(0, 1).resolve_block_rows(10_000, 1024), 128);
         // Never below 1 row, even for absurdly wide matrices.
-        assert_eq!(
-            StreamConfig { block_rows: 0, budget_mb: 1 }.resolve_block_rows(10, 1 << 30),
-            1
+        assert_eq!(cfg(0, 1).resolve_block_rows(10, 1 << 30), 1);
+        // Prefetch defaults on and threads through the constructor.
+        assert!(StreamConfig::default().prefetch);
+        let s = Streamed::new(
+            InMemorySource::new(Dense::zeros(4, 3)),
+            &StreamConfig { block_rows: 2, budget_mb: 1, prefetch: false },
         );
+        assert!(!s.prefetch());
+        assert!(s.with_prefetch(true).prefetch());
+    }
+
+    #[test]
+    fn prefetched_sweep_matches_serial_bitwise_and_counts_io() {
+        let mut rng = Xoshiro256pp::seed_from_u64(9);
+        let x = Dense::from_fn(41, 13, |_, _| rng.next_uniform());
+        for bl in [1usize, 5, 40, 41] {
+            let serial =
+                Streamed::with_block_rows(InMemorySource::new(x.clone()), bl).with_prefetch(false);
+            let pre = Streamed::with_block_rows(InMemorySource::new(x.clone()), bl);
+            let mut got_serial = Vec::new();
+            serial.sweep(|_, block| got_serial.extend_from_slice(block.data()));
+            let mut got_pre = Vec::new();
+            pre.sweep(|_, block| got_pre.extend_from_slice(block.data()));
+            let same = got_serial
+                .iter()
+                .zip(&got_pre)
+                .all(|(a, b)| a.to_bits() == b.to_bits());
+            assert!(same && got_pre.len() == 41 * 13, "bl={bl}");
+            // Both account identically: 1 pass, same blocks and bytes.
+            let (s, p) = (serial.stats(), pre.stats());
+            assert_eq!(s, p, "bl={bl}");
+            assert_eq!(s.passes, 1);
+            assert_eq!(s.blocks as usize, 41usize.div_ceil(bl));
+            assert_eq!(s.bytes_read, (41 * 13 * 8) as u64);
+        }
+    }
+
+    #[test]
+    fn gram_sweep_override_matches_default_expansion() {
+        let mut rng = Xoshiro256pp::seed_from_u64(10);
+        let x = Dense::from_fn(37, 29, |_, _| rng.next_uniform());
+        let w = Dense::gaussian(29, 5, &mut rng);
+        let mu = x.row_means();
+        // Reference: the trait's default two-product expansion on Dense.
+        let want = MatVecOps::gram_sweep(&x, &w, &mu);
+        for bl in [1usize, 7, 37] {
+            for prefetch in [false, true] {
+                let s = Streamed::with_block_rows(InMemorySource::new(x.clone()), bl)
+                    .with_prefetch(prefetch);
+                let got = MatVecOps::gram_sweep(&s, &w, &mu);
+                assert!(
+                    crate::linalg::fro_diff(&got, &want) < 1e-9,
+                    "bl={bl} prefetch={prefetch}"
+                );
+                // The whole point: one source pass, not two.
+                assert_eq!(s.stats().passes, 1, "bl={bl} prefetch={prefetch}");
+            }
+        }
+        // Unshifted gram sweep equals Xᵀ(XW).
+        let zero = vec![0.0; 37];
+        let s = Streamed::with_block_rows(InMemorySource::new(x.clone()), 11);
+        let got = MatVecOps::gram_sweep(&s, &w, &zero);
+        let want = MatVecOps::tmm(&x, &MatVecOps::mm(&x, &w));
+        assert!(crate::linalg::fro_diff(&got, &want) < 1e-10);
     }
 
     #[test]

@@ -10,7 +10,7 @@
 //! ```
 
 use srsvd::cli::ArgSpec;
-use srsvd::config::{parse_basis, parse_small_svd, RawConfig};
+use srsvd::config::{parse_basis, parse_pass_policy, parse_small_svd, RawConfig};
 use srsvd::coordinator::{
     Coordinator, CoordinatorConfig, EnginePreference, JobSpec, MatrixInput, ShiftSpec,
 };
@@ -79,6 +79,7 @@ fn svd_config_from(a: &srsvd::cli::Args) -> Result<SvdConfig> {
         power_iters: a.get_usize("q")?,
         basis: parse_basis(a.get("basis"))?,
         small_svd: parse_small_svd(a.get("small-svd"))?,
+        pass_policy: parse_pass_policy(a.get("pass-policy"))?,
     })
 }
 
@@ -92,12 +93,19 @@ fn cmd_factorize(args: &[String]) -> Result<()> {
         .opt("q", "0", "power iterations")
         .opt("basis", "direct", "direct | qr-update-paper | qr-update-exact")
         .opt("small-svd", "jacobi", "jacobi | gram")
+        .opt(
+            "pass-policy",
+            "exact",
+            "source-pass schedule: exact (2+2q passes, byte-identical to \
+             dense) | fused (<= q+2 passes)",
+        )
         .opt("seed", "0", "rng seed")
         .opt("engine", "auto", "auto | native | artifact")
         .opt("threads", "0", "linalg pool threads (0 = auto / SRSVD_THREADS)")
         .flag("stream", "generate row blocks on demand (out-of-core; not zipf)")
         .opt("stream-block", "0", "streamed block rows (0 = derive from budget)")
-        .opt("stream-budget-mb", "64", "streamed resident-block budget, MiB");
+        .opt("stream-budget-mb", "64", "streamed resident-block budget, MiB")
+        .flag("no-prefetch", "disable the double-buffered streamed block prefetch");
     let a = spec.parse(args)?;
     if a.help {
         print!("{}", spec.usage("srsvd factorize"));
@@ -120,14 +128,18 @@ fn cmd_factorize(args: &[String]) -> Result<()> {
         let stream_cfg = StreamConfig {
             block_rows: a.get_usize("stream-block")?,
             budget_mb: a.get_usize("stream-budget-mb")?.max(1),
+            prefetch: !a.has_flag("no-prefetch"),
         };
         let src = GeneratorSource::new(m, n, dist, seed)?;
         println!(
-            "streaming {}x{} {} matrix: block_rows={} (dense would be {:.1} MiB)",
+            "streaming {}x{} {} matrix: block_rows={} prefetch={} pass_policy={} \
+             (dense would be {:.1} MiB)",
             m,
             n,
             dist.name(),
             stream_cfg.resolve_block_rows(m, n),
+            stream_cfg.prefetch,
+            a.get("pass-policy"),
             (m * n * 8) as f64 / (1 << 20) as f64
         );
         MatrixInput::streamed(src, &stream_cfg)

@@ -341,21 +341,40 @@ pub struct Response {
     pub body: Vec<u8>,
     /// `Content-Type` header value.
     pub content_type: &'static str,
+    /// When set, this response carries the claimed result of job `id`:
+    /// if the write fails, the connection handler re-parks the body so
+    /// a retried `GET /v1/jobs/{id}` can claim it again instead of the
+    /// result being dropped.
+    pub repark_id: Option<u64>,
 }
 
 impl Response {
     /// A JSON response.
     pub fn json(status: u16, v: &Json) -> Response {
+        Response::json_bytes(status, v.to_string().into_bytes())
+    }
+
+    /// A JSON response from pre-rendered body bytes (re-parked results
+    /// are stored rendered).
+    pub fn json_bytes(status: u16, body: Vec<u8>) -> Response {
         Response {
             status,
-            body: v.to_string().into_bytes(),
+            body,
             content_type: "application/json",
+            repark_id: None,
         }
     }
 
     /// A JSON error envelope `{"error": msg}`.
     pub fn error(status: u16, msg: &str) -> Response {
         Response::json(status, &Json::obj(vec![("error", Json::str(msg))]))
+    }
+
+    /// Mark this response as carrying claimed job result `id` (see
+    /// [`Response::repark_id`]).
+    pub fn with_repark(mut self, id: u64) -> Response {
+        self.repark_id = Some(id);
+        self
     }
 
     /// Serialize status line, headers and body; returns bytes written.

@@ -22,7 +22,7 @@
 //! | Method | Path | Meaning |
 //! |--------|------|---------|
 //! | `POST` | `/v1/jobs` | Submit a job spec. `"wait": true` answers with the finished result; otherwise `202` + id. |
-//! | `GET` | `/v1/jobs/{id}` | Block (up to the request timeout, or `?timeout_s=`) for a submitted job's result. |
+//! | `GET` | `/v1/jobs/{id}` | Block (up to the request timeout, or `?timeout_s=`) for a submitted job's result. Retryable: a claimed result whose response write fails is re-parked, not dropped. |
 //! | `GET` | `/metrics` | Service counters + gauges as JSON ([`protocol::metrics_to_json`]). |
 //! | `GET` | `/healthz` | Liveness probe. |
 //!
@@ -91,12 +91,22 @@ impl Default for ServerConfig {
     }
 }
 
+/// A parked entry awaiting a claiming `GET /v1/jobs/{id}`.
+enum Pending {
+    /// Still executing (or queued): the live job handle.
+    Running(JobHandle),
+    /// Completed, but the claiming response write failed: the rendered
+    /// result body, re-parked so the GET is safely retryable.
+    Done(Vec<u8>),
+}
+
 struct Shared {
     coord: Arc<Coordinator>,
     metrics: Arc<Metrics>,
-    /// Handles of accepted-but-unclaimed jobs, keyed by id, awaiting a
-    /// blocking `GET /v1/jobs/{id}`.
-    pending: Mutex<HashMap<u64, JobHandle>>,
+    /// Accepted-but-unclaimed jobs, keyed by id, awaiting a blocking
+    /// `GET /v1/jobs/{id}` — live handles, plus completed results whose
+    /// claiming write failed ([`Pending::Done`]).
+    pending: Mutex<HashMap<u64, Pending>>,
     shutdown: AtomicBool,
     limits: HttpLimits,
     request_timeout: Duration,
@@ -305,7 +315,12 @@ fn handle_connection(shared: &Shared, mut stream: TcpStream) {
                             break;
                         }
                     }
-                    Err(_) => break,
+                    Err(_) => {
+                        // A claimed result must survive a failed write:
+                        // re-park it so the GET can be retried.
+                        repark_failed_write(shared, response);
+                        break;
+                    }
                 }
             }
             Err(HttpError::Respond { status, msg }) => {
@@ -317,6 +332,21 @@ fn handle_connection(shared: &Shared, mut stream: TcpStream) {
             }
             Err(HttpError::Drop(_)) => break,
         }
+    }
+}
+
+/// Put a claimed-but-undelivered result back into the pending map (as
+/// rendered bytes). Closes the ROADMAP gap where a response-write
+/// failure dropped the result: the claiming `GET /v1/jobs/{id}` is now
+/// safely retryable. Entries live until claimed or shutdown, like any
+/// other parked job.
+fn repark_failed_write(shared: &Shared, response: Response) {
+    if let Some(id) = response.repark_id {
+        shared
+            .pending
+            .lock()
+            .expect("pending jobs mutex")
+            .insert(id, Pending::Done(response.body));
     }
 }
 
@@ -376,13 +406,16 @@ fn submit_job(shared: &Shared, req: &Request) -> Response {
     shared.metrics.http_accepted.fetch_add(1, Ordering::Relaxed);
     let id = handle.id.0;
     if sub.wait {
-        finish_wait(shared, id, handle)
+        // wait=true responses are not re-parked on a failed write: the
+        // client never learned the id, so it resubmits (seeded jobs
+        // replay exactly) instead of fishing for an orphaned entry.
+        finish_wait_with(shared, id, handle, shared.request_timeout, false)
     } else {
         shared
             .pending
             .lock()
             .expect("pending jobs mutex")
-            .insert(id, handle);
+            .insert(id, Pending::Running(handle));
         Response::json(
             202,
             &Json::obj(vec![
@@ -398,13 +431,19 @@ fn wait_job(shared: &Shared, req: &Request) -> Response {
     let Ok(id) = id_text.parse::<u64>() else {
         return Response::error(400, &format!("bad job id {id_text:?}"));
     };
-    let handle = shared
+    let entry = shared
         .pending
         .lock()
         .expect("pending jobs mutex")
         .remove(&id);
-    let Some(handle) = handle else {
-        return Response::error(404, &format!("unknown (or already claimed) job {id}"));
+    let handle = match entry {
+        None => {
+            return Response::error(404, &format!("unknown (or already claimed) job {id}"))
+        }
+        // A result re-parked after a failed write: serve it as-is (and
+        // keep it retryable should this write fail too).
+        Some(Pending::Done(body)) => return Response::json_bytes(200, body).with_repark(id),
+        Some(Pending::Running(handle)) => handle,
     };
     // An explicit ?timeout_s= can only shorten the server-wide cap.
     // (The range guard also keeps Duration::from_secs_f64 panic-free on
@@ -416,28 +455,37 @@ fn wait_job(shared: &Shared, req: &Request) -> Response {
         Some(_) => return Response::error(400, "bad timeout_s"),
         None => shared.request_timeout,
     };
-    finish_wait_with(shared, id, handle, timeout)
-}
-
-fn finish_wait(shared: &Shared, id: u64, handle: JobHandle) -> Response {
-    finish_wait_with(shared, id, handle, shared.request_timeout)
+    finish_wait_with(shared, id, handle, timeout, true)
 }
 
 /// Block on a job handle; on timeout the handle goes (back) into the
 /// pending map and the client gets `202 running` to retry the `GET`.
 ///
-/// Known limitation (tracked in ROADMAP): once a result is claimed,
-/// a failed response *write* drops it — re-parking would need a
-/// completed-result cache with a TTL; today the client must resubmit.
-fn finish_wait_with(shared: &Shared, id: u64, handle: JobHandle, timeout: Duration) -> Response {
+/// With `repark` set (the claiming-GET path), a completed result is
+/// tagged with its id so a failed response write re-parks the rendered
+/// body ([`repark_failed_write`]) instead of dropping it.
+fn finish_wait_with(
+    shared: &Shared,
+    id: u64,
+    handle: JobHandle,
+    timeout: Duration,
+    repark: bool,
+) -> Response {
     match handle.wait_timeout(timeout) {
-        Ok(result) => Response::json(200, &protocol::job_result_to_json(&result)),
+        Ok(result) => {
+            let response = Response::json(200, &protocol::job_result_to_json(&result));
+            if repark {
+                response.with_repark(id)
+            } else {
+                response
+            }
+        }
         Err(Error::Timeout(_)) => {
             shared
                 .pending
                 .lock()
                 .expect("pending jobs mutex")
-                .insert(id, handle);
+                .insert(id, Pending::Running(handle));
             Response::json(
                 202,
                 &Json::obj(vec![

@@ -17,6 +17,8 @@
 //!   "power_iters": 0,             // optional, default 0
 //!   "basis":       "direct",      // optional: direct | qr-update-paper | qr-update-exact
 //!   "small_svd":   "jacobi",      // optional: jacobi | gram
+//!   "pass_policy": "exact",       // optional: exact | fused (source-pass schedule;
+//!                                 //   fused caps streamed jobs at q+2 passes)
 //!   "shift":       "mean-center", // optional: "none" | "mean-center" | [mu_0, ..]
 //!   "engine":      "auto",        // optional: auto | native | artifact
 //!   "seed": 0,                    // optional, default 0 (u64 below 2^53)
@@ -54,12 +56,12 @@
 //! the wire is **byte-identical** to the same spec run in-process
 //! (pinned by `rust/tests/server.rs`).
 
-use crate::config::{parse_basis, parse_small_svd};
+use crate::config::{parse_basis, parse_pass_policy, parse_small_svd};
 use crate::coordinator::{EnginePreference, JobResult, JobSpec, MatrixInput, ShiftSpec};
 use crate::data::Distribution;
 use crate::linalg::stream::{FileSource, GeneratorSource, StreamConfig};
 use crate::linalg::{Csr, Dense, Triplets};
-use crate::svd::{BasisMethod, SmallSvdMethod, SvdConfig, SvdEngine};
+use crate::svd::{BasisMethod, PassPolicy, SmallSvdMethod, SvdConfig, SvdEngine};
 use crate::util::json::Json;
 use crate::util::{Error, Result};
 
@@ -114,6 +116,10 @@ fn parse_input(input: &Json, stream_defaults: &StreamConfig) -> Result<MatrixInp
         Ok(StreamConfig {
             block_rows: get_usize_or(input, "block_rows", stream_defaults.block_rows)?,
             budget_mb: get_usize_or(input, "budget_mb", stream_defaults.budget_mb)?.max(1),
+            // Pipelining is a server deployment choice ([stream]
+            // prefetch), not a per-job wire field — it cannot change
+            // results, only how reads overlap compute.
+            prefetch: stream_defaults.prefetch,
         })
     };
     match kind {
@@ -245,8 +251,8 @@ pub fn parse_submit(body: &Json, stream_defaults: &StreamConfig) -> Result<Submi
     unknown_keys(
         body,
         &[
-            "input", "k", "oversample", "power_iters", "basis", "small_svd", "shift",
-            "engine", "seed", "score", "wait",
+            "input", "k", "oversample", "power_iters", "basis", "small_svd", "pass_policy",
+            "shift", "engine", "seed", "score", "wait",
         ],
         "job",
     )?;
@@ -265,6 +271,10 @@ pub fn parse_submit(body: &Json, stream_defaults: &StreamConfig) -> Result<Submi
         small_svd: match obj.get("small_svd") {
             Some(v) => parse_small_svd(v.as_str()?)?,
             None => SmallSvdMethod::Jacobi,
+        },
+        pass_policy: match obj.get("pass_policy") {
+            Some(v) => parse_pass_policy(v.as_str()?)?,
+            None => PassPolicy::Exact,
         },
     };
     let shift = match obj.get("shift") {
@@ -360,6 +370,7 @@ impl JobRequest {
             ("power_iters", Json::num(self.config.power_iters as f64)),
             ("basis", Json::str(basis)),
             ("small_svd", Json::str(small_svd)),
+            ("pass_policy", Json::str(self.config.pass_policy.name())),
             ("shift", shift),
             ("engine", Json::str(engine)),
             ("seed", Json::num(self.seed as f64)),
@@ -564,6 +575,8 @@ pub fn metrics_to_json(m: &crate::coordinator::MetricsSnapshot) -> Json {
         ("http_rejected", Json::num(m.http_rejected as f64)),
         ("http_bytes_in", Json::num(m.http_bytes_in as f64)),
         ("http_bytes_out", Json::num(m.http_bytes_out as f64)),
+        ("stream_passes", Json::num(m.stream_passes as f64)),
+        ("stream_bytes_read", Json::num(m.stream_bytes_read as f64)),
         ("mean_exec_s", Json::num(m.mean_exec_s)),
         ("mean_queue_s", Json::num(m.mean_queue_s)),
         ("max_exec_s", Json::num(m.max_exec_s)),
@@ -642,12 +655,35 @@ mod tests {
             generator_input(100, 10, Distribution::Normal, 1, None, None),
             2,
         );
-        let tight = StreamConfig { block_rows: 13, budget_mb: 64 };
+        let tight = StreamConfig { block_rows: 13, ..Default::default() };
         let parsed = parse_submit(&req.to_json(), &tight).unwrap();
         let MatrixInput::Streamed(s) = &parsed.spec.input else {
             panic!("expected streamed input");
         };
         assert_eq!(s.block_rows(), 13);
+    }
+
+    #[test]
+    fn pass_policy_round_trips_and_rejects_unknowns() {
+        let mut req = JobRequest::new(
+            generator_input(8, 8, Distribution::Uniform, 0, None, None),
+            2,
+        );
+        // Default: exact.
+        let parsed = parse_submit(&req.to_json(), &defaults()).unwrap();
+        assert_eq!(parsed.spec.config.pass_policy, PassPolicy::Exact);
+        // Fused survives the wire.
+        req.config.pass_policy = PassPolicy::Fused;
+        let parsed = parse_submit(&req.to_json(), &defaults()).unwrap();
+        assert_eq!(parsed.spec.config.pass_policy, PassPolicy::Fused);
+        // An unknown value is a 400-class error, not a silent default.
+        let mut bad = req.to_json().as_obj().unwrap().clone();
+        bad.insert("pass_policy".into(), Json::str("warp"));
+        assert!(parse_submit(&Json::Obj(bad), &defaults()).is_err());
+        // A non-string value is rejected too.
+        let mut bad = req.to_json().as_obj().unwrap().clone();
+        bad.insert("pass_policy".into(), Json::num(1.0));
+        assert!(parse_submit(&Json::Obj(bad), &defaults()).is_err());
     }
 
     #[test]
@@ -745,5 +781,7 @@ mod tests {
         assert_eq!(j.get("submitted").unwrap().as_usize().unwrap(), 0);
         assert!(j.get("http_rejected").is_ok());
         assert!(j.get("in_flight").is_ok());
+        assert!(j.get("stream_passes").is_ok());
+        assert!(j.get("stream_bytes_read").is_ok());
     }
 }

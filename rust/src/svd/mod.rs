@@ -13,7 +13,7 @@ pub use deterministic::deterministic_svd;
 pub use ops::{shifted_low_rank_mse, MatVecOps};
 pub use pca::{column_errors, Pca};
 pub use rsvd::Rsvd;
-pub use shifted::{BasisMethod, ShiftedRsvd, SmallSvdMethod};
+pub use shifted::{BasisMethod, PassPolicy, ShiftedRsvd, SmallSvdMethod};
 
 use crate::linalg::{gemm, Dense};
 
@@ -80,6 +80,11 @@ pub struct SvdConfig {
     pub basis: BasisMethod,
     /// Backend for the small projected SVD (Alg. 1 L13).
     pub small_svd: SmallSvdMethod,
+    /// Source-pass schedule of the sweep stages: `Exact` (2 + 2q
+    /// passes, streamed results byte-identical to dense) or `Fused`
+    /// (Gram-chain power passes, ≤ q + 2 passes). The wall-clock lever
+    /// for out-of-core inputs.
+    pub pass_policy: PassPolicy,
 }
 
 impl Default for SvdConfig {
@@ -90,6 +95,7 @@ impl Default for SvdConfig {
             power_iters: 0,
             basis: BasisMethod::Direct,
             small_svd: SmallSvdMethod::Jacobi,
+            pass_policy: PassPolicy::Exact,
         }
     }
 }
@@ -108,6 +114,12 @@ impl SvdConfig {
     /// Builder-style override of the power-iteration count q.
     pub fn with_power(mut self, q: usize) -> Self {
         self.power_iters = q;
+        self
+    }
+
+    /// Builder-style override of the source-pass schedule.
+    pub fn with_pass_policy(mut self, policy: PassPolicy) -> Self {
+        self.pass_policy = policy;
         self
     }
 }

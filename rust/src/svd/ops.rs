@@ -32,6 +32,32 @@ pub trait MatVecOps: Sync {
     /// `Xᵀ·B − u·vᵀ` fused (`u` len n, `v` len b.cols()).
     fn tmm_rank1(&self, b: &Dense, u: &[f64], v: &[f64]) -> Dense;
 
+    /// One fused power-iteration leg: `Z = X̄ᵀ·(X̄·W)` with the μ-shift
+    /// folded in as rank-1 downdates (`X̄ = X − μ·1ᵀ`; `W` is n×l, `Z`
+    /// is n×l). This is the unit the `PassPolicy::Fused` schedule
+    /// iterates — see [`crate::svd::shifted`].
+    ///
+    /// The default implementation composes the two trait products
+    /// (`mm_rank1` then `tmm_rank1`), which costs **two** passes for an
+    /// out-of-core input; [`crate::linalg::Streamed`] overrides it with
+    /// a single fused sweep where each resident block services both
+    /// products. All implementations agree mathematically but not
+    /// bit-for-bit (different accumulation orders).
+    fn gram_sweep(&self, w: &Dense, mu: &[f64]) -> Dense {
+        let (m, n) = self.shape();
+        assert_eq!(w.rows(), n, "gram_sweep shape mismatch");
+        assert_eq!(mu.len(), m, "gram_sweep mu length");
+        if mu.iter().any(|&v| v != 0.0) {
+            let colsum = colsums(w);
+            let y = self.mm_rank1(w, mu, &colsum); // X̄·W (m×l)
+            let muy = y.tmatvec(mu); // μᵀY (l)
+            let ones_n = vec![1.0; n];
+            self.tmm_rank1(&y, &ones_n, &muy) // X̄ᵀ·Y (n×l)
+        } else {
+            self.tmm(&self.mm(w))
+        }
+    }
+
     /// Per-row means (the PCA shifting vector).
     fn row_means(&self) -> Vec<f64>;
 
@@ -114,6 +140,21 @@ impl MatVecOps for Csr {
     fn stored_entries(&self) -> usize {
         self.nnz()
     }
+}
+
+/// Column sums of a dense matrix (`Bᵀ·1`), in the fixed row-major
+/// accumulation order every shift epilogue shares — the byte-identity
+/// contract between the one-shot and streamed paths depends on this
+/// being computed exactly one way everywhere.
+pub(crate) fn colsums(b: &Dense) -> Vec<f64> {
+    let (rows, cols) = b.shape();
+    let mut out = vec![0.0; cols];
+    for i in 0..rows {
+        for (o, &x) in out.iter_mut().zip(b.row(i)) {
+            *o += x;
+        }
+    }
+    out
 }
 
 /// The paper's MSE of a rank-k factorization `U·diag(s)·Vᵀ` against the
@@ -203,6 +244,30 @@ mod tests {
         assert!((MatVecOps::sq_fro(&sp) - MatVecOps::sq_fro(&de)).abs() < 1e-10);
         assert_eq!(MatVecOps::row_means(&sp), MatVecOps::row_means(&de));
         assert!(sp.stored_entries() < de.stored_entries());
+    }
+
+    #[test]
+    fn gram_sweep_default_matches_explicit_centering() {
+        let mut rng = Xoshiro256pp::seed_from_u64(2);
+        let sp = Csr::random(20, 50, 0.2, &mut rng, |r| r.next_uniform() + 0.1);
+        let de = sp.to_dense();
+        let w = Dense::gaussian(50, 4, &mut rng);
+        let mu = Csr::row_means(&sp);
+        // Reference: materialize X̄ and apply the Gram chain explicitly.
+        let xbar = de.subtract_column(&mu);
+        let want = gemm::tmatmul(&xbar, &gemm::matmul(&xbar, &w));
+        let cases: [(&dyn MatVecOps, &str); 2] = [(&sp, "sparse"), (&de, "dense")];
+        for (ops, what) in cases {
+            let got = ops.gram_sweep(&w, &mu);
+            assert!(
+                crate::linalg::fro_diff(&got, &want) < 1e-9,
+                "{what} gram_sweep diverged"
+            );
+        }
+        // μ = 0 reduces to Xᵀ(XW).
+        let want0 = gemm::tmatmul(&de, &gemm::matmul(&de, &w));
+        let got0 = MatVecOps::gram_sweep(&de, &w, &vec![0.0; 20]);
+        assert!(crate::linalg::fro_diff(&got0, &want0) < 1e-10);
     }
 
     #[test]

@@ -20,6 +20,30 @@
 //! [`crate::parallel`] pool via the pool-aware [`MatVecOps`] kernels.
 //! The parallel kernels partition output rows, so a factorization is
 //! bit-identical for every pool size: seeded runs replay exactly.
+//!
+//! ## Sweep stages and the pass schedule
+//!
+//! The engine is organized as explicit sweep stages, each of which
+//! touches the data matrix a known number of times — the currency that
+//! matters for out-of-core ([`crate::linalg::Streamed`]) inputs, where
+//! every product is a full disk sweep:
+//!
+//! | Stage | [`PassPolicy::Exact`] | [`PassPolicy::Fused`] |
+//! |-------|-----------------------|------------------------|
+//! | sampling basis (L2-7)    | 1 | — (folded into range capture) |
+//! | power iteration ×q (L8-11) | 2 per iteration | 1 per iteration ([`MatVecOps::gram_sweep`]) |
+//! | range capture            | — | 1 (`H = X̄W`, then QR) |
+//! | projection (L12)         | 1 | 1 |
+//! | **total source passes**  | **2 + 2q** | **q + 2** |
+//!
+//! `Exact` runs the paper's literal chain (`Q ← qr(X̄·qr(X̄ᵀQ))`) and is
+//! byte-identical to the in-memory path for streamed sources. `Fused`
+//! runs the Gram-chain variant of Halko et al. (arXiv:1007.5510 §4.5 /
+//! Li et al. arXiv:1412.3510): each iteration computes `X̄ᵀ(X̄·W)` in
+//! one pass and renormalizes with an n×K Householder QR — which needs
+//! no data pass at all — so the subspace is mathematically the same
+//! (`range((X̄X̄ᵀ)^q X̄Ω)` either way) but the factors are not
+//! bit-identical to `Exact`.
 
 use crate::linalg::{
     gemm, householder_qr, jacobi_svd, qr_rank1_update, sym_jacobi_eig, Dense, JacobiOpts,
@@ -27,6 +51,7 @@ use crate::linalg::{
 use crate::rng::Rng;
 use crate::util::Result;
 
+use super::ops::colsums;
 use super::{Factorization, MatVecOps, SvdConfig};
 
 /// How the basis of the shifted sample matrix is computed (Alg. 1 L4-6).
@@ -44,6 +69,39 @@ pub enum BasisMethod {
     /// QR-update with the exact right factor `v = Ωᵀ1` (column sums),
     /// making the updated factorization exactly `qr(X̄Ω)`.
     QrUpdateExact,
+}
+
+/// Source-pass schedule of the sweep stages: how many passes over the
+/// data matrix one factorization performs. The dominant wall-clock
+/// lever for out-of-core inputs, where every pass is a disk sweep.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PassPolicy {
+    /// One sweep per product — sampling, two per power iteration,
+    /// projection: `2 + 2q` passes. Streamed factorizations stay
+    /// **byte-identical** to the in-memory [`Dense`] path (the
+    /// `rust/tests/stream.rs` contract). The default.
+    Exact,
+    /// Fused Gram-chain power passes: each iteration computes
+    /// `X̄ᵀ(X̄·W)` in one sweep ([`MatVecOps::gram_sweep`]) with an n×K
+    /// Householder QR renormalization between passes (no data pass),
+    /// for `q + 2` passes total. Same subspace in exact arithmetic and
+    /// the same accuracy bound in tests, but *not* bit-identical to
+    /// `Exact`. [`BasisMethod`] is not consulted — the fused schedule
+    /// has no separate sampling QR to rank-1-update (its capture pass
+    /// is always the exact shifted product).
+    Fused,
+}
+
+impl PassPolicy {
+    /// Canonical lowercase name (`"exact"` / `"fused"`) — the inverse
+    /// of [`crate::config::parse_pass_policy`], shared by the wire
+    /// protocol and the bench JSON schema so they cannot desynchronize.
+    pub fn name(&self) -> &'static str {
+        match self {
+            PassPolicy::Exact => "exact",
+            PassPolicy::Fused => "fused",
+        }
+    }
 }
 
 /// Backend for the small K×n SVD (Alg. 1 L13).
@@ -87,48 +145,26 @@ impl ShiftedRsvd {
         let shifted = mu.iter().any(|&v| v != 0.0);
         let ones_n = vec![1.0; n];
 
-        // ---- Stage 1: basis of X̄Ω (L2-7) --------------------------------
+        // ---- Stage 1+2: range finding (L2-11) -----------------------------
+        // Sampling + power schedule, dispatched on the pass policy. The
+        // Exact stages replay the original operation sequence verbatim,
+        // so streamed byte-identity is preserved.
         let omega = Dense::gaussian(n, kk, rng);
-        let mut q = match (self.config.basis, shifted) {
-            (_, false) => {
-                // mu = 0: plain RSVD sampling.
-                householder_qr(&x.mm(&omega)).0
+        let q = match self.config.pass_policy {
+            PassPolicy::Exact => {
+                let q0 = self.exact_basis(x, mu, &omega, shifted, kk);
+                self.exact_power(x, mu, q0, &ones_n)
             }
-            (BasisMethod::Direct, true) => {
-                let colsum: Vec<f64> = colsums(&omega);
-                householder_qr(&x.mm_rank1(&omega, mu, &colsum)).0
-            }
-            (BasisMethod::QrUpdatePaper, true) => {
-                let (q1, r1) = householder_qr(&x.mm(&omega));
-                let neg_mu: Vec<f64> = mu.iter().map(|v| -v).collect();
-                let v1 = vec![1.0; kk]; // the paper's v = 1
-                qr_rank1_update(&q1, &r1, &neg_mu, &v1).q
-            }
-            (BasisMethod::QrUpdateExact, true) => {
-                let (q1, r1) = householder_qr(&x.mm(&omega));
-                let neg_mu: Vec<f64> = mu.iter().map(|v| -v).collect();
-                let v1 = colsums(&omega); // exact: v = Ωᵀ1
-                qr_rank1_update(&q1, &r1, &neg_mu, &v1).q
-            }
+            PassPolicy::Fused => self.fused_range(x, mu, omega, shifted),
         };
 
-        // ---- Power iteration (L8-11) -------------------------------------
-        for _ in 0..self.config.power_iters {
-            // Q' = qr(X̄ᵀQ) = qr(XᵀQ − 1(μᵀQ))
-            let mtq = q.tmatvec(mu); // μᵀQ, length kk
-            let qp = householder_qr(&x.tmm_rank1(&q, &ones_n, &mtq)).0;
-            // Q = qr(X̄Q') = qr(XQ' − μ(1ᵀQ'))
-            let colsum_qp = colsums(&qp);
-            q = householder_qr(&x.mm_rank1(&qp, mu, &colsum_qp)).0;
-        }
-
-        // ---- Stage 2: project (L12) ---------------------------------------
+        // ---- Stage 3: project (L12) ---------------------------------------
         // Yᵀ = X̄ᵀQ (n×K) — computed transposed so the sparse path streams
         // CSR rows once; Y itself is never formed.
         let mtq = q.tmatvec(mu);
         let yt = x.tmm_rank1(&q, &ones_n, &mtq);
 
-        // ---- Stage 3: small SVD + back-projection (L13-14) ----------------
+        // ---- Stage 4: small SVD + back-projection (L13-14) ----------------
         let (u1, s, v) = match self.config.small_svd {
             SmallSvdMethod::Jacobi => {
                 // Yᵀ = U_t Σ V_tᵀ → Y = V_t Σ U_tᵀ: left factors V_t (K×K),
@@ -158,6 +194,75 @@ impl ShiftedRsvd {
         })
     }
 
+    /// Exact sampling stage (L2-7): basis of `X̄Ω`, one source pass.
+    /// Replays the pre-stage-refactor operation sequence verbatim (the
+    /// streamed byte-identity contract pins this).
+    fn exact_basis(
+        &self,
+        x: &dyn MatVecOps,
+        mu: &[f64],
+        omega: &Dense,
+        shifted: bool,
+        kk: usize,
+    ) -> Dense {
+        match (self.config.basis, shifted) {
+            (_, false) => {
+                // mu = 0: plain RSVD sampling.
+                householder_qr(&x.mm(omega)).0
+            }
+            (BasisMethod::Direct, true) => {
+                let colsum: Vec<f64> = colsums(omega);
+                householder_qr(&x.mm_rank1(omega, mu, &colsum)).0
+            }
+            (BasisMethod::QrUpdatePaper, true) => {
+                let (q1, r1) = householder_qr(&x.mm(omega));
+                let neg_mu: Vec<f64> = mu.iter().map(|v| -v).collect();
+                let v1 = vec![1.0; kk]; // the paper's v = 1
+                qr_rank1_update(&q1, &r1, &neg_mu, &v1).q
+            }
+            (BasisMethod::QrUpdateExact, true) => {
+                let (q1, r1) = householder_qr(&x.mm(omega));
+                let neg_mu: Vec<f64> = mu.iter().map(|v| -v).collect();
+                let v1 = colsums(omega); // exact: v = Ωᵀ1
+                qr_rank1_update(&q1, &r1, &neg_mu, &v1).q
+            }
+        }
+    }
+
+    /// Exact power stage (L8-11): `Q ← qr(X̄·qr(X̄ᵀQ))`, two source
+    /// passes per iteration.
+    fn exact_power(&self, x: &dyn MatVecOps, mu: &[f64], mut q: Dense, ones_n: &[f64]) -> Dense {
+        for _ in 0..self.config.power_iters {
+            // Q' = qr(X̄ᵀQ) = qr(XᵀQ − 1(μᵀQ))
+            let mtq = q.tmatvec(mu); // μᵀQ, length K
+            let qp = householder_qr(&x.tmm_rank1(&q, ones_n, &mtq)).0;
+            // Q = qr(X̄Q') = qr(XQ' − μ(1ᵀQ'))
+            let colsum_qp = colsums(&qp);
+            q = householder_qr(&x.mm_rank1(&qp, mu, &colsum_qp)).0;
+        }
+        q
+    }
+
+    /// Fused range finding: `q` Gram sweeps (`W ← qr(X̄ᵀ(X̄·W))`, one
+    /// source pass each — the between-pass QR is an n×K Householder
+    /// factorization that touches no data), then one capture pass
+    /// `Q = qr(X̄·W)`. Total `q + 1` source passes; with the projection
+    /// stage the whole factorization does `q + 2` (vs `2 + 2q` Exact).
+    fn fused_range(&self, x: &dyn MatVecOps, mu: &[f64], omega: Dense, shifted: bool) -> Dense {
+        let mut w = omega; // n×K, the evolving right-side sample
+        for _ in 0..self.config.power_iters {
+            let z = x.gram_sweep(&w, mu);
+            w = householder_qr(&z).0; // renormalize: no data pass
+        }
+        let h = if shifted {
+            let colsum = colsums(&w);
+            x.mm_rank1(&w, mu, &colsum) // H = X̄·W, one pass
+        } else {
+            x.mm(&w)
+        };
+        householder_qr(&h).0
+    }
+
     /// Convenience: factorize the mean-centered matrix (μ = row means) —
     /// the PCA use case of §2.
     pub fn factorize_mean_centered(
@@ -168,17 +273,6 @@ impl ShiftedRsvd {
         let mu = x.row_means();
         self.factorize(x, &mu, rng)
     }
-}
-
-fn colsums(b: &Dense) -> Vec<f64> {
-    let (rows, cols) = b.shape();
-    let mut out = vec![0.0; cols];
-    for i in 0..rows {
-        for (o, &x) in out.iter_mut().zip(b.row(i)) {
-            *o += x;
-        }
-    }
-    out
 }
 
 #[cfg(test)]
@@ -312,6 +406,56 @@ mod tests {
         }
         assert!(
             fro_diff(&f_implicit.reconstruct(), &f_explicit.reconstruct()) < 1e-8
+        );
+    }
+
+    #[test]
+    fn fused_pass_policy_is_accurate() {
+        let x = uniform(50, 300, 14);
+        let mu = x.row_means();
+        let xbar = x.subtract_column(&mu);
+        let opt = optimal_residual(&xbar, 8);
+        for q in [1usize, 2] {
+            let cfg = SvdConfig {
+                k: 8,
+                oversample: 8,
+                power_iters: q,
+                pass_policy: PassPolicy::Fused,
+                ..Default::default()
+            };
+            let mut rng = Xoshiro256pp::seed_from_u64(15);
+            let f = ShiftedRsvd::new(cfg).factorize(&x, &mu, &mut rng).unwrap();
+            let err = fro_diff(&f.reconstruct(), &xbar);
+            assert!(err <= 1.15 * opt, "q={q}: err {err} vs opt {opt}");
+        }
+    }
+
+    #[test]
+    fn fused_with_zero_power_iters_equals_exact_direct_bitwise() {
+        // With q = 0 the fused schedule degenerates to exactly the
+        // Exact/Direct operation sequence: capture pass + projection.
+        let x = uniform(40, 120, 16);
+        let mu = x.row_means();
+        let run = |pass_policy| {
+            let cfg = SvdConfig {
+                k: 5,
+                oversample: 5,
+                power_iters: 0,
+                pass_policy,
+                ..Default::default()
+            };
+            ShiftedRsvd::new(cfg)
+                .factorize(&x, &mu, &mut Xoshiro256pp::seed_from_u64(17))
+                .unwrap()
+        };
+        let e = run(PassPolicy::Exact);
+        let f = run(PassPolicy::Fused);
+        let bits = |d: &Dense| d.data().iter().map(|v| v.to_bits()).collect::<Vec<_>>();
+        assert_eq!(bits(&e.u), bits(&f.u));
+        assert_eq!(bits(&e.v), bits(&f.v));
+        assert_eq!(
+            e.s.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+            f.s.iter().map(|v| v.to_bits()).collect::<Vec<_>>()
         );
     }
 

@@ -27,7 +27,7 @@ use srsvd::server::protocol::{
     dense_input, file_input, generator_input, JobRequest, WireOutput,
 };
 use srsvd::server::{Client, Server, ServerConfig};
-use srsvd::svd::{Factorization, SvdConfig};
+use srsvd::svd::{Factorization, PassPolicy, SvdConfig};
 
 fn start_service(
     native_workers: usize,
@@ -165,7 +165,7 @@ fn file_streamed_job_resolves_path_server_side() {
     let wire_out = wire.outcome.expect("wire job failed");
 
     let src = FileSource::open(&path).unwrap();
-    let stream_cfg = StreamConfig { block_rows: 0, budget_mb: 4 };
+    let stream_cfg = StreamConfig { block_rows: 0, budget_mb: 4, prefetch: true };
     let local = coord
         .submit_blocking(JobSpec {
             input: MatrixInput::streamed(src, &stream_cfg),
@@ -188,6 +188,146 @@ fn file_streamed_job_resolves_path_server_side() {
 
     server.shutdown();
     let _ = std::fs::remove_file(&path);
+}
+
+#[test]
+fn fused_pass_policy_round_trips_over_the_wire() {
+    let (coord, server) = start_service(2, 64, 2);
+    let mut client = client_for(&server);
+
+    let mut req = JobRequest::new(
+        generator_input(60, 40, Distribution::Uniform, 2, Some(16), None),
+        4,
+    );
+    req.config.power_iters = 1;
+    req.config.pass_policy = PassPolicy::Fused;
+    req.engine = EnginePreference::Native;
+    req.seed = 21;
+    let wire = client.submit_wait(&req).unwrap();
+    let wire_out = wire.outcome.expect("wire job failed");
+
+    let src = GeneratorSource::new(60, 40, Distribution::Uniform, 2).unwrap();
+    let stream_cfg = StreamConfig { block_rows: 16, ..Default::default() };
+    let local = coord
+        .submit_blocking(JobSpec {
+            input: MatrixInput::streamed(src, &stream_cfg),
+            config: SvdConfig {
+                k: 4,
+                oversample: 4,
+                power_iters: 1,
+                pass_policy: PassPolicy::Fused,
+                ..Default::default()
+            },
+            shift: ShiftSpec::MeanCenter,
+            engine: EnginePreference::Native,
+            seed: 21,
+            score: true,
+        })
+        .unwrap()
+        .outcome
+        .expect("local job failed");
+
+    assert_identical(&wire_out, &local.factorization, local.mse, "fused");
+
+    // The streamed job's I/O shows up in the service counters.
+    let m = client.metrics().unwrap();
+    assert!(m.get("stream_passes").unwrap().as_usize().unwrap() >= 1);
+    assert!(m.get("stream_bytes_read").unwrap().as_usize().unwrap() > 0);
+    server.shutdown();
+}
+
+/// A claimed result whose response write fails must be re-parked, not
+/// dropped: the claiming `GET /v1/jobs/{id}` is retryable.
+#[test]
+fn claimed_result_surviving_failed_write_is_retryable() {
+    // Short request timeout: the stalled response write below fails
+    // after ~1 s instead of pinning a connection worker.
+    let coord = Arc::new(
+        Coordinator::start(CoordinatorConfig {
+            native_workers: 1,
+            queue_capacity: 16,
+            artifact_dir: None,
+            pool_threads: Some(2),
+        })
+        .unwrap(),
+    );
+    let server = Server::bind(
+        Arc::clone(&coord),
+        &ServerConfig {
+            addr: "127.0.0.1:0".into(),
+            max_body_bytes: 64 << 20,
+            workers: 2,
+            request_timeout_s: 1,
+        },
+        StreamConfig::default(),
+    )
+    .unwrap();
+    let mut client = client_for(&server);
+
+    // A job whose result body (~35 MB of factor JSON: u is 120000x16)
+    // cannot fit in the loopback socket buffers, so an unread response
+    // write reliably stalls and then fails.
+    let mut req = JobRequest::new(
+        generator_input(120_000, 32, Distribution::Uniform, 1, None, None),
+        16,
+    );
+    req.engine = EnginePreference::Native;
+    req.score = false;
+    let SubmitOutcome::Queued(id) = client.submit(&req).unwrap() else {
+        panic!("wait=false submit must queue");
+    };
+
+    // Let the job finish server-side before claiming it.
+    let deadline = std::time::Instant::now() + Duration::from_secs(120);
+    loop {
+        let m = client.metrics().unwrap();
+        if m.get("completed").unwrap().as_usize().unwrap() >= 1 {
+            break;
+        }
+        assert!(std::time::Instant::now() < deadline, "job never completed");
+        std::thread::sleep(Duration::from_millis(20));
+    }
+
+    // Claim the result but never read the response: the server's write
+    // stalls on the full socket buffers and errors at its write
+    // timeout. Pre-fix, the result was dropped here.
+    {
+        let mut s = TcpStream::connect(server.local_addr()).unwrap();
+        s.write_all(
+            format!("GET /v1/jobs/{id} HTTP/1.1\r\nhost: t\r\nconnection: close\r\n\r\n")
+                .as_bytes(),
+        )
+        .unwrap();
+        std::thread::sleep(Duration::from_secs(3));
+        // Dropped with the response unread.
+    }
+
+    // The retried GET claims the re-parked result in full. A 404 here
+    // (result dropped) is the regression this test pins.
+    let deadline = std::time::Instant::now() + Duration::from_secs(60);
+    let wire = loop {
+        match client.wait_timeout(id, 0.0) {
+            Ok(WaitOutcome::Done(r)) => break r,
+            Ok(WaitOutcome::Running) => std::thread::sleep(Duration::from_millis(50)),
+            Err(e) => {
+                // 404 is expected only while the failed write is still
+                // in flight; it must turn into a 200 once re-parked.
+                assert!(format!("{e}").contains("404"), "{e}");
+                assert!(
+                    std::time::Instant::now() < deadline,
+                    "claimed result was dropped, not re-parked"
+                );
+                std::thread::sleep(Duration::from_millis(100));
+            }
+        }
+    };
+    let out = wire.outcome.expect("re-parked job result must be intact");
+    assert_eq!(out.u.shape(), (120_000, 16));
+    assert_eq!(out.s.len(), 16);
+    // Once claimed successfully, the id is forgotten again.
+    let err = client.wait(id).unwrap_err();
+    assert!(format!("{err}").contains("404"), "{err}");
+    server.shutdown();
 }
 
 #[test]
@@ -282,6 +422,20 @@ fn malformed_requests_get_400_not_a_panic() {
         b"POST /v1/jobs HTTP/1.1\r\nconnection: close\r\ncontent-length: 999999999999\r\n\r\n",
     );
     assert!(resp.starts_with("HTTP/1.1 413"), "{resp}");
+
+    // Unknown pass_policy value: strict 400, not a silent default.
+    let body = r#"{"input":{"kind":"generator","m":4,"n":4,"dist":"uniform"},"k":1,"pass_policy":"warp"}"#;
+    let resp = raw_exchange(
+        &addr,
+        format!(
+            "POST /v1/jobs HTTP/1.1\r\nconnection: close\r\ncontent-length: {}\r\n\r\n{}",
+            body.len(),
+            body
+        )
+        .as_bytes(),
+    );
+    assert!(resp.starts_with("HTTP/1.1 400"), "{resp}");
+    assert!(resp.contains("pass_policy"), "{resp}");
 
     // Unknown endpoint / wrong method, via the keep-alive client.
     let (status, _) = client

@@ -1,8 +1,12 @@
-//! Out-of-core parity: a `Streamed` factorization must be
-//! **byte-identical** to the in-memory `Dense` path — for every block
-//! size, every thread-pool size (1/2/8), and every source kind — plus a
-//! file-source round-trip (write header+blocks, read back, factorize)
-//! and the coordinator end-to-end.
+//! Out-of-core parity: a `Streamed` factorization under
+//! `PassPolicy::Exact` must be **byte-identical** to the in-memory
+//! `Dense` path — for every block size, every thread-pool size (1/2/8),
+//! with prefetch on and off, and every source kind — plus a file-source
+//! round-trip (write header+blocks, read back, factorize) and the
+//! coordinator end-to-end. `PassPolicy::Fused` trades byte-identity for
+//! the pass budget: this suite pins its `≤ q + 2` source-pass count
+//! (vs `2 + 2q` Exact, asserted on the `SourceStats` counters) and its
+//! accuracy (≤ 1.15× the optimal rank-k residual) on every source kind.
 
 use std::sync::Arc;
 
@@ -11,13 +15,14 @@ use srsvd::coordinator::{
 };
 use srsvd::data::Distribution;
 use srsvd::linalg::stream::{
-    spill_to_file, FileSource, GeneratorSource, InMemorySource, MatrixSource, StreamConfig,
-    Streamed,
+    spill_to_file, CsrRowSource, FileSource, GeneratorSource, InMemorySource, MatrixSource,
+    StreamConfig, Streamed,
 };
-use srsvd::linalg::Dense;
+use srsvd::linalg::{fro_diff, Csr, Dense};
 use srsvd::parallel::{with_pool, ThreadPool};
-use srsvd::rng::Xoshiro256pp;
-use srsvd::svd::{Factorization, ShiftedRsvd, SvdConfig};
+use srsvd::rng::{Rng, Xoshiro256pp};
+use srsvd::svd::deterministic::optimal_residual;
+use srsvd::svd::{Factorization, MatVecOps, PassPolicy, ShiftedRsvd, SvdConfig};
 
 fn dense_bits(x: &Dense) -> Vec<u64> {
     x.data().iter().map(|v| v.to_bits()).collect()
@@ -53,19 +58,25 @@ fn factorize(x: &dyn srsvd::svd::MatVecOps, seed: u64) -> Factorization {
 
 #[test]
 fn streamed_matches_dense_across_block_sizes_and_pools_1_2_8() {
+    // Prefetch on (the default) and off are both byte-identical to the
+    // dense path: the pipeline only moves reads off-thread, never the
+    // accumulation order.
     let x = input_matrix();
     for threads in [1usize, 2, 8] {
         let pool = Arc::new(ThreadPool::new(threads));
         with_pool(&pool, || {
             let base = factorize(&x, 42);
             for block_rows in [1usize, 7, 64, 150] {
-                let s = Streamed::with_block_rows(InMemorySource::new(x.clone()), block_rows);
-                let got = factorize(&s, 42);
-                assert_identical(
-                    &base,
-                    &got,
-                    &format!("streamed bl={block_rows}, pool={threads}"),
-                );
+                for prefetch in [true, false] {
+                    let s = Streamed::with_block_rows(InMemorySource::new(x.clone()), block_rows)
+                        .with_prefetch(prefetch);
+                    let got = factorize(&s, 42);
+                    assert_identical(
+                        &base,
+                        &got,
+                        &format!("streamed bl={block_rows}, pool={threads}, prefetch={prefetch}"),
+                    );
+                }
             }
         });
     }
@@ -145,7 +156,7 @@ fn coordinator_streamed_job_matches_dense_job() {
         coord.shutdown();
         out
     };
-    let stream_cfg = StreamConfig { block_rows: 48, budget_mb: 64 };
+    let stream_cfg = StreamConfig { block_rows: 48, budget_mb: 64, prefetch: true };
     let dense_out = run(MatrixInput::Dense(x.clone()), 2);
     for pool_threads in [1usize, 2, 8] {
         let streamed_out = run(
@@ -213,7 +224,7 @@ fn failing_streamed_source_fails_the_job_not_the_worker() {
     let r = coord
         .submit_blocking(job(MatrixInput::streamed(
             bad,
-            &StreamConfig { block_rows: 48, budget_mb: 64 },
+            &StreamConfig { block_rows: 48, budget_mb: 64, prefetch: true },
         )))
         .expect("submit");
     let err = r.outcome.expect_err("mid-sweep IO failure must fail the job");
@@ -233,10 +244,149 @@ fn budget_derived_blocks_change_nothing() {
     let base = factorize(&x, 46);
     // 1 MiB budget on 900 columns → 145 rows/block; 64 MiB → whole matrix.
     for budget_mb in [1usize, 64] {
-        let scfg = StreamConfig { block_rows: 0, budget_mb };
+        let scfg = StreamConfig { block_rows: 0, budget_mb, prefetch: true };
         let s = Streamed::new(InMemorySource::new(x.clone()), &scfg);
         assert!(s.block_rows() >= 1 && s.block_rows() <= 150);
         let got = factorize(&s, 46);
         assert_identical(&base, &got, &format!("budget {budget_mb} MiB"));
     }
+}
+
+/// The pass-budget proof: `SourceStats.passes` shows Exact doing
+/// `2 + 2q` source passes and Fused `≤ q + 2` for the same job.
+#[test]
+fn pass_counters_exact_2_plus_2q_fused_at_most_q_plus_2() {
+    let x = input_matrix();
+    let mu = x.row_means(); // explicit μ: the factorization passes only
+    let payload = (150 * 900 * 8) as u64;
+    for q in [0usize, 1, 2] {
+        let run = |pass_policy| {
+            let cfg = SvdConfig {
+                k: 8,
+                oversample: 8,
+                power_iters: q,
+                pass_policy,
+                ..Default::default()
+            };
+            let s = Streamed::with_block_rows(InMemorySource::new(x.clone()), 64);
+            let mut rng = Xoshiro256pp::seed_from_u64(7);
+            ShiftedRsvd::new(cfg)
+                .factorize(&s, &mu, &mut rng)
+                .expect("factorize");
+            s.stats()
+        };
+        let exact = run(PassPolicy::Exact);
+        assert_eq!(exact.passes as usize, 2 + 2 * q, "exact q={q}");
+        assert_eq!(exact.bytes_read, exact.passes * payload, "exact q={q}");
+        let fused = run(PassPolicy::Fused);
+        assert!(
+            fused.passes as usize <= q + 2,
+            "fused q={q}: {} passes exceed the q+2 budget",
+            fused.passes
+        );
+        assert_eq!(fused.passes as usize, q + 2, "fused q={q}");
+        assert_eq!(fused.bytes_read, fused.passes * payload, "fused q={q}");
+        if q >= 1 {
+            assert!(fused.passes < exact.passes, "q={q}");
+        }
+    }
+}
+
+/// Fused reconstruction stays within 1.15× of the optimal rank-k
+/// residual (the `rsvd.rs`-style harness bound) on every source kind.
+#[test]
+fn fused_policy_accuracy_on_all_source_kinds() {
+    let cfg = SvdConfig {
+        k: 8,
+        oversample: 8,
+        power_iters: 2,
+        pass_policy: PassPolicy::Fused,
+        ..Default::default()
+    };
+
+    // One uniform target shared by the dense / in-memory / generator /
+    // file paths (the generator is the ground truth for all four).
+    let gen = GeneratorSource::new(120, 400, Distribution::Uniform, 3).expect("gen");
+    let x = gen.materialize().expect("materialize");
+    let mu = x.row_means();
+    let xbar = x.subtract_column(&mu);
+    let opt = optimal_residual(&xbar, 8);
+    let path = std::env::temp_dir().join("srsvd_test_stream_fused_acc.bin");
+    let file: FileSource = spill_to_file(&gen, &path, 33).expect("spill");
+
+    let check = |ops: &dyn MatVecOps, what: &str| {
+        let mut rng = Xoshiro256pp::seed_from_u64(11);
+        let f = ShiftedRsvd::new(cfg).factorize(ops, &mu, &mut rng).expect(what);
+        let err = fro_diff(&f.reconstruct(), &xbar);
+        assert!(err <= 1.15 * opt, "{what}: err {err} vs optimal {opt}");
+    };
+    check(&x, "dense");
+    check(
+        &Streamed::with_block_rows(InMemorySource::new(x.clone()), 23),
+        "stream-mem",
+    );
+    check(&Streamed::with_block_rows(gen, 31), "stream-generator");
+    check(&Streamed::with_block_rows(file, 41), "stream-file");
+    let _ = std::fs::remove_file(&path);
+
+    // CSR-row source against its own sparse target.
+    let mut rng = Xoshiro256pp::seed_from_u64(5);
+    let sp = Csr::random(100, 300, 0.15, &mut rng, |r| r.next_uniform() + 0.2);
+    let de = sp.to_dense();
+    let mu_sp = de.row_means();
+    let xbar_sp = de.subtract_column(&mu_sp);
+    let opt_sp = optimal_residual(&xbar_sp, 8);
+    let s = Streamed::with_block_rows(CsrRowSource::new(sp), 19);
+    let mut rng = Xoshiro256pp::seed_from_u64(13);
+    let f = ShiftedRsvd::new(cfg).factorize(&s, &mu_sp, &mut rng).expect("csr");
+    let err = fro_diff(&f.reconstruct(), &xbar_sp);
+    assert!(err <= 1.15 * opt_sp, "stream-csr: err {err} vs optimal {opt_sp}");
+}
+
+/// The coordinator aggregates per-job `SourceStats` into the service
+/// metrics (`stream_passes` / `stream_bytes_read`, also on `/metrics`).
+#[test]
+fn coordinator_surfaces_stream_pass_and_byte_counters() {
+    let x = input_matrix();
+    let coord = Coordinator::start(CoordinatorConfig {
+        native_workers: 1,
+        queue_capacity: 8,
+        artifact_dir: None,
+        pool_threads: Some(2),
+    })
+    .expect("coordinator");
+    let r = coord
+        .submit_blocking(JobSpec {
+            input: MatrixInput::streamed(
+                InMemorySource::new(x.clone()),
+                &StreamConfig { block_rows: 48, budget_mb: 64, prefetch: true },
+            ),
+            config: cfg(), // k=12, q=1
+            shift: ShiftSpec::MeanCenter,
+            engine: EnginePreference::Auto,
+            seed: 3,
+            score: false,
+        })
+        .expect("submit");
+    r.outcome.expect("job");
+    let m = coord.metrics();
+    // MeanCenter resolve (1 pass) + exact schedule 2 + 2q with q=1 (4).
+    assert_eq!(m.stream_passes, 5, "{m}");
+    assert_eq!(m.stream_bytes_read, 5 * (150 * 900 * 8) as u64, "{m}");
+    assert!(format!("{m}").contains("stream[passes=5"), "{m}");
+
+    // Dense jobs contribute nothing to the stream counters.
+    let r = coord
+        .submit_blocking(JobSpec {
+            input: MatrixInput::Dense(x),
+            config: cfg(),
+            shift: ShiftSpec::MeanCenter,
+            engine: EnginePreference::Native,
+            seed: 3,
+            score: false,
+        })
+        .expect("submit");
+    r.outcome.expect("job");
+    assert_eq!(coord.metrics().stream_passes, 5);
+    coord.shutdown();
 }
