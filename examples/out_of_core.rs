@@ -81,7 +81,7 @@ fn run(a: &srsvd::cli::Args) -> srsvd::util::Result<()> {
     // 2. Factorize out-of-core under both pass schedules: every product
     //    is a (prefetched) block sweep; the fused schedule services a
     //    whole power-iteration leg from one sweep.
-    let cfg = SvdConfig::paper(k).with_power(1);
+    let cfg = SvdConfig::paper(k).with_fixed_power(1);
     let x = Streamed::new(file, &stream_cfg);
     let t = Timer::start();
     let mut rng = Xoshiro256pp::seed_from_u64(seed ^ 0xFA);
@@ -122,6 +122,29 @@ fn run(a: &srsvd::cli::Args) -> srsvd::util::Result<()> {
         fact.s[0]
     );
     println!("top singular values: {:?}", &fact.s[..k.min(5)]);
+
+    // 2b. Accuracy control: the tolerance criterion lets the
+    //     dynamic-shift loop pick the sweep count instead of q.
+    let x_adaptive = Streamed::new(FileSource::open(&path)?, &stream_cfg);
+    let mu = MatVecOps::row_means(&x_adaptive);
+    let adaptive_cfg = SvdConfig::paper(k).with_tolerance(1e-3, 32);
+    let t = Timer::start();
+    let mut rng = Xoshiro256pp::seed_from_u64(seed ^ 0xFA);
+    let (fact_adaptive, report) =
+        ShiftedRsvd::new(adaptive_cfg).factorize_with_report(&x_adaptive, &mu, &mut rng)?;
+    println!(
+        "adaptive streamed factorization (k={k}, pve_tol=1e-3) in {}: \
+         fixed q=1 ran 1 sweep, accuracy control ran {} (achieved pve {}); \
+         {} source passes, top sv {:.4}",
+        fmt_duration(t.elapsed_secs()),
+        report.sweeps_used,
+        report
+            .achieved_pve
+            .map(|p| format!("{p:.4}"))
+            .unwrap_or_else(|| "n/a".into()),
+        x_adaptive.stats().passes,
+        fact_adaptive.s[0]
+    );
 
     // 3. Parity: the exact-schedule streamed factors must be
     //    byte-identical to the in-memory dense path on the same seed.

@@ -37,7 +37,7 @@ fn main() {
     }
 
     // 3. The same factorization through the public engine API.
-    let cfg = SvdConfig::paper(10).with_power(1);
+    let cfg = SvdConfig::paper(10).with_fixed_power(1);
     let engine = srsvd::svd::ShiftedRsvd::new(cfg);
     let mut rng = Xoshiro256pp::seed_from_u64(2);
     let fact = engine.factorize_mean_centered(&x, &mut rng).unwrap();

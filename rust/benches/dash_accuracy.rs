@@ -1,0 +1,187 @@
+//! Bench: fixed-q vs dynamic-shift accuracy control (the dashSVD-style
+//! `StopCriterion::Tolerance`, arXiv:2404.09276) on the paper's fig1 /
+//! table1 workloads, emitting `BENCH_dash.json` for the CI trajectory.
+//!
+//! Per workload (uniform / normal / exponential fig1 matrices, the
+//! table1 digits images), the bench runs:
+//!
+//! * fixed-q **Fused** legs at q ∈ {1, 2, 4, 8} — the hand-tuned sweep
+//!   counts a client would pick today;
+//! * adaptive legs at pve_tol ∈ {1e-3, 1e-5} — the accuracy-control
+//!   path, which reports its own `sweeps_used` + `achieved_pve`.
+//!
+//! Every row carries MSE (scored against the centered `X̄`, the
+//! paper's metric), sweep count and wall-clock. Each adaptive row also
+//! records its MSE ratio against the conservative fixed q = 8 baseline
+//! and whether it matched that accuracy in strictly fewer sweeps —
+//! the headline claim evaluated from the artifact.
+//!
+//! Run: `cargo bench --bench dash_accuracy`.
+//! Env: `SRSVD_BENCH_QUICK=1` (CI smoke), `SRSVD_BENCH_DASH_JSON=<path>`
+//! (default `BENCH_dash.json`).
+
+use srsvd::bench::{fmt_sci, Bencher, Table};
+use srsvd::data::{digits_matrix, random_matrix, DataSpec, DigitsSpec, Distribution};
+use srsvd::linalg::{fro_diff, Dense};
+use srsvd::rng::Xoshiro256pp;
+use srsvd::svd::{PassPolicy, ShiftedRsvd, SvdConfig};
+use srsvd::util::json::Json;
+use srsvd::util::timer::fmt_duration;
+
+const FIXED_QS: [usize; 4] = [1, 2, 4, 8];
+const BASELINE_Q: usize = 8;
+const TOLERANCES: [f64; 2] = [1e-3, 1e-5];
+const MAX_SWEEPS: usize = 32;
+
+/// Paper MSE of a factorization of `X̄`: `‖X̄ − UΣVᵀ‖²F / n`.
+fn mse_against(xbar: &Dense, f: &srsvd::svd::Factorization) -> f64 {
+    let d = fro_diff(&f.reconstruct(), xbar);
+    d * d / xbar.cols() as f64
+}
+
+struct Leg {
+    label: String,
+    mse: f64,
+    sweeps: usize,
+    pve: Option<f64>,
+    mean_s: f64,
+}
+
+fn main() {
+    let b = Bencher::from_env();
+    let quick = std::env::var("SRSVD_BENCH_QUICK").as_deref() == Ok("1");
+    let seed = 42u64;
+    let k = 10usize;
+
+    // fig1 workloads (100×1000 random, each distribution) + the table1
+    // digits images (64 × count, one vectorized image per column).
+    let mut workloads: Vec<(&str, Dense)> = Vec::new();
+    let (m, n) = if quick { (60, 400) } else { (100, 1000) };
+    for dist in [
+        Distribution::Uniform,
+        Distribution::Normal,
+        Distribution::Exponential,
+    ] {
+        let mut rng = Xoshiro256pp::seed_from_u64(seed);
+        let name = match dist {
+            Distribution::Uniform => "fig1-uniform",
+            Distribution::Normal => "fig1-normal",
+            _ => "fig1-exponential",
+        };
+        workloads.push((name, random_matrix(DataSpec { m, n, dist }, &mut rng)));
+    }
+    {
+        let count = if quick { 400 } else { 1979 };
+        let mut rng = Xoshiro256pp::seed_from_u64(seed ^ 0xD1);
+        let spec = DigitsSpec { count, ..Default::default() };
+        workloads.push(("table1-digits", digits_matrix(spec, &mut rng)));
+    }
+
+    let mut cases: Vec<Json> = Vec::new();
+    for (name, x) in &workloads {
+        let mu = x.row_means();
+        let xbar = x.subtract_column(&mu);
+        println!("== {name}: {}x{} k={k} K={} ==", x.rows(), x.cols(), 2 * k);
+
+        let mut legs: Vec<Leg> = Vec::new();
+        for q in FIXED_QS {
+            let cfg = SvdConfig::paper(k)
+                .with_fixed_power(q)
+                .with_pass_policy(PassPolicy::Fused);
+            let label = format!("{name} fixed q={q}");
+            let fact = {
+                let mut rng = Xoshiro256pp::seed_from_u64(seed ^ 0xFA);
+                ShiftedRsvd::new(cfg).factorize(x, &mu, &mut rng).unwrap()
+            };
+            let stats = b.run(&label, || {
+                let mut rng = Xoshiro256pp::seed_from_u64(seed ^ 0xFA);
+                ShiftedRsvd::new(cfg).factorize(x, &mu, &mut rng).unwrap()
+            });
+            legs.push(Leg {
+                label: format!("fixed q={q}"),
+                mse: mse_against(&xbar, &fact),
+                sweeps: q,
+                pve: None,
+                mean_s: stats.mean_s,
+            });
+        }
+        for tol in TOLERANCES {
+            let cfg = SvdConfig::paper(k).with_tolerance(tol, MAX_SWEEPS);
+            let label = format!("{name} adaptive tol={tol:e}");
+            let (fact, report) = {
+                let mut rng = Xoshiro256pp::seed_from_u64(seed ^ 0xFA);
+                ShiftedRsvd::new(cfg)
+                    .factorize_with_report(x, &mu, &mut rng)
+                    .unwrap()
+            };
+            let stats = b.run(&label, || {
+                let mut rng = Xoshiro256pp::seed_from_u64(seed ^ 0xFA);
+                ShiftedRsvd::new(cfg)
+                    .factorize_with_report(x, &mu, &mut rng)
+                    .unwrap()
+            });
+            legs.push(Leg {
+                label: format!("adaptive tol={tol:e}"),
+                mse: mse_against(&xbar, &fact),
+                sweeps: report.sweeps_used,
+                pve: report.achieved_pve,
+                mean_s: stats.mean_s,
+            });
+        }
+
+        let baseline_mse = legs
+            .iter()
+            .find(|l| l.label == format!("fixed q={BASELINE_Q}"))
+            .map(|l| l.mse)
+            .unwrap();
+        let mut t = Table::new(&["leg", "sweeps", "mse", "pve", "time", "vs q=8 mse"]);
+        for leg in &legs {
+            let ratio = leg.mse / baseline_mse.max(1e-300);
+            let wins = leg.pve.is_some() && leg.sweeps < BASELINE_Q && ratio <= 1.0 + 1e-6;
+            t.row(&[
+                leg.label.clone(),
+                leg.sweeps.to_string(),
+                fmt_sci(leg.mse),
+                leg.pve.map(|p| format!("{p:.4}")).unwrap_or_else(|| "-".into()),
+                fmt_duration(leg.mean_s),
+                format!("{ratio:.4}x"),
+            ]);
+            cases.push(Json::obj(vec![
+                ("workload", Json::str(name)),
+                ("leg", Json::str(&leg.label)),
+                ("sweeps", Json::num(leg.sweeps as f64)),
+                ("mse", Json::num(leg.mse)),
+                (
+                    "achieved_pve",
+                    match leg.pve {
+                        Some(p) => Json::num(p),
+                        None => Json::Null,
+                    },
+                ),
+                ("mean_s", Json::num(leg.mean_s)),
+                ("mse_vs_fixed_q8", Json::num(ratio)),
+                (
+                    "matches_q8_in_fewer_sweeps",
+                    if leg.pve.is_some() { Json::Bool(wins) } else { Json::Null },
+                ),
+            ]));
+        }
+        print!("{}", t.render());
+        println!();
+    }
+
+    let report = Json::obj(vec![
+        ("bench", Json::str("dash_accuracy")),
+        ("quick", Json::Bool(quick)),
+        ("k", Json::num(k as f64)),
+        ("baseline_q", Json::num(BASELINE_Q as f64)),
+        ("max_sweeps", Json::num(MAX_SWEEPS as f64)),
+        ("cases", Json::Arr(cases)),
+    ]);
+    let json_path = std::env::var("SRSVD_BENCH_DASH_JSON")
+        .unwrap_or_else(|_| "BENCH_dash.json".into());
+    match std::fs::write(&json_path, report.to_string_pretty()) {
+        Ok(()) => println!("wrote {json_path}"),
+        Err(e) => eprintln!("could not write {json_path}: {e}"),
+    }
+}

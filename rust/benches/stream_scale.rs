@@ -91,7 +91,7 @@ fn main() {
     let path = std::env::temp_dir().join(format!("srsvd_stream_scale_{m}x{n}.bin"));
     let file = spill_to_file(&gen, &path, 256).unwrap();
 
-    let exact_cfg = SvdConfig::paper(k).with_power(1);
+    let exact_cfg = SvdConfig::paper(k).with_fixed_power(1);
     println!("== stream scale: {m}x{n} uniform, k={k} q=1 ==");
     // μ once, up front: every leg then runs the pure factorization
     // schedule (streamed row_means is byte-identical to this anyway).

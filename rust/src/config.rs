@@ -32,17 +32,24 @@
 //! [svd]
 //! k           = 10
 //! oversample  = 10
-//! power_iters = 0
+//! power_iters = 0             # fixed sweep count (StopCriterion::FixedPower)
+//! # pve_tol    = 1e-3         # adaptive dashSVD accuracy control instead:
+//! # max_sweeps = 32           #   mutually exclusive with power_iters
 //! basis       = direct        # direct | qr-update-paper | qr-update-exact
 //! small_svd   = jacobi        # jacobi | gram
 //! ```
+//!
+//! All stopping-criterion spellings — `[svd] power_iters`/`pve_tol`/
+//! `max_sweeps`, the `--q`/`--pve-tol`/`--max-sweeps` CLI flags, and
+//! the wire protocol's submit fields — funnel through one conversion
+//! point, [`stop_criterion`], so the validation rules cannot drift.
 
 use std::collections::BTreeMap;
 use std::path::PathBuf;
 
 use crate::coordinator::CoordinatorConfig;
 use crate::linalg::stream::StreamConfig;
-use crate::svd::{BasisMethod, PassPolicy, SmallSvdMethod, SvdConfig};
+use crate::svd::{BasisMethod, PassPolicy, SmallSvdMethod, StopCriterion, SvdConfig};
 use crate::util::{Error, Result};
 
 /// Raw parsed file: section -> key -> value.
@@ -102,6 +109,16 @@ impl RawConfig {
                 .parse::<usize>()
                 .map(Some)
                 .map_err(|_| Error::Invalid(format!("{section}.{key}: not an integer: {v:?}"))),
+        }
+    }
+
+    fn get_f64(&self, section: &str, key: &str) -> Result<Option<f64>> {
+        match self.get(section, key) {
+            None => Ok(None),
+            Some(v) => v
+                .parse::<f64>()
+                .map(Some)
+                .map_err(|_| Error::Invalid(format!("{section}.{key}: not a number: {v:?}"))),
         }
     }
 
@@ -172,9 +189,11 @@ impl RawConfig {
         if let Some(o) = self.get_usize("svd", "oversample")? {
             cfg.oversample = o;
         }
-        if let Some(q) = self.get_usize("svd", "power_iters")? {
-            cfg.power_iters = q;
-        }
+        cfg.stop = stop_criterion(
+            self.get_usize("svd", "power_iters")?,
+            self.get_f64("svd", "pve_tol")?,
+            self.get_usize("svd", "max_sweeps")?,
+        )?;
         if let Some(b) = self.get("svd", "basis") {
             cfg.basis = parse_basis(b)?;
         }
@@ -188,6 +207,46 @@ impl RawConfig {
             cfg.pass_policy = parse_pass_policy(p)?;
         }
         Ok(cfg)
+    }
+}
+
+/// The single conversion point from the scattered stopping-criterion
+/// spellings (config keys, CLI flags, wire fields) to the typed
+/// [`StopCriterion`]. `power_iters` and `pve_tol` are mutually
+/// exclusive; `max_sweeps` only makes sense with `pve_tol` (defaulting
+/// to [`StopCriterion::DEFAULT_MAX_SWEEPS`] when omitted); nothing set
+/// means the back-compat fixed `q = 0`.
+pub fn stop_criterion(
+    power_iters: Option<usize>,
+    pve_tol: Option<f64>,
+    max_sweeps: Option<usize>,
+) -> Result<StopCriterion> {
+    match (power_iters, pve_tol) {
+        (Some(_), Some(_)) => Err(Error::Invalid(
+            "power_iters and pve_tol are mutually exclusive: pick a fixed sweep \
+             count or dashSVD accuracy control, not both"
+                .into(),
+        )),
+        (_, Some(tol)) => {
+            if !(tol.is_finite() && tol > 0.0) {
+                return Err(Error::Invalid(format!(
+                    "pve_tol must be a finite positive number, got {tol}"
+                )));
+            }
+            let max_sweeps = max_sweeps.unwrap_or(StopCriterion::DEFAULT_MAX_SWEEPS);
+            if max_sweeps == 0 {
+                return Err(Error::Invalid("max_sweeps must be >= 1".into()));
+            }
+            Ok(StopCriterion::Tolerance { pve_tol: tol, max_sweeps })
+        }
+        (q, None) => {
+            if max_sweeps.is_some() {
+                return Err(Error::Invalid(
+                    "max_sweeps requires pve_tol (it caps the adaptive loop)".into(),
+                ));
+            }
+            Ok(StopCriterion::FixedPower { q: q.unwrap_or(0) })
+        }
     }
 }
 
@@ -263,7 +322,7 @@ small_svd = gram
         let svd = raw.svd().unwrap();
         assert_eq!(svd.k, 25);
         assert_eq!(svd.sample_width(), 50);
-        assert_eq!(svd.power_iters, 2);
+        assert_eq!(svd.stop, StopCriterion::FixedPower { q: 2 });
         assert_eq!(svd.basis, BasisMethod::QrUpdateExact);
         assert_eq!(svd.small_svd, SmallSvdMethod::GramEig);
     }
@@ -273,6 +332,55 @@ small_svd = gram
         let raw = RawConfig::parse("").unwrap();
         let svd = raw.svd().unwrap();
         assert_eq!(svd.k, SvdConfig::default().k);
+        // Back-compat: nothing set means the fixed q = 0 of every
+        // pre-redesign deployment.
+        assert_eq!(svd.stop, StopCriterion::FixedPower { q: 0 });
+    }
+
+    #[test]
+    fn svd_tolerance_keys() {
+        let raw = RawConfig::parse("[svd]\npve_tol = 1e-3\nmax_sweeps = 12\n").unwrap();
+        assert_eq!(
+            raw.svd().unwrap().stop,
+            StopCriterion::Tolerance { pve_tol: 1e-3, max_sweeps: 12 }
+        );
+        // max_sweeps defaults when only the tolerance is given.
+        let raw = RawConfig::parse("[svd]\npve_tol = 1e-2\n").unwrap();
+        assert_eq!(
+            raw.svd().unwrap().stop,
+            StopCriterion::Tolerance {
+                pve_tol: 1e-2,
+                max_sweeps: StopCriterion::DEFAULT_MAX_SWEEPS
+            }
+        );
+    }
+
+    #[test]
+    fn stop_criterion_conversion_rules() {
+        // Mutually exclusive spellings.
+        assert!(stop_criterion(Some(2), Some(1e-3), None).is_err());
+        // max_sweeps without a tolerance is meaningless.
+        assert!(stop_criterion(Some(2), None, Some(8)).is_err());
+        assert!(stop_criterion(None, None, Some(8)).is_err());
+        // Tolerance must be a positive finite number; the cap >= 1.
+        assert!(stop_criterion(None, Some(0.0), None).is_err());
+        assert!(stop_criterion(None, Some(-1.0), None).is_err());
+        assert!(stop_criterion(None, Some(f64::NAN), None).is_err());
+        assert!(stop_criterion(None, Some(1e-3), Some(0)).is_err());
+        // The happy paths.
+        assert_eq!(
+            stop_criterion(Some(3), None, None).unwrap(),
+            StopCriterion::FixedPower { q: 3 }
+        );
+        assert_eq!(
+            stop_criterion(None, None, None).unwrap(),
+            StopCriterion::FixedPower { q: 0 }
+        );
+        // Config-level errors surface through svd().
+        let raw = RawConfig::parse("[svd]\npower_iters = 1\npve_tol = 1e-3\n").unwrap();
+        assert!(raw.svd().is_err());
+        let raw = RawConfig::parse("[svd]\npve_tol = soon\n").unwrap();
+        assert!(raw.svd().is_err());
     }
 
     #[test]

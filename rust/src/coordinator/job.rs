@@ -140,6 +140,14 @@ pub struct JobOutput {
     pub factorization: Factorization,
     /// The paper's MSE (present when `score` was requested).
     pub mse: Option<f64>,
+    /// Power sweeps the engine executed: the fixed `q` under
+    /// [`crate::svd::StopCriterion::FixedPower`], the run-time count
+    /// under the adaptive tolerance mode.
+    pub sweeps_used: usize,
+    /// Achieved proportion of variance explained — only reported by
+    /// the adaptive tolerance mode (see
+    /// [`crate::svd::SweepReport::achieved_pve`]).
+    pub achieved_pve: Option<f64>,
 }
 
 /// Completed job envelope.

@@ -31,6 +31,14 @@ pub struct Metrics {
     pub stream_passes: AtomicU64,
     /// Payload bytes read from streamed sources.
     pub stream_bytes_read: AtomicU64,
+    /// Power sweeps executed across completed jobs (fixed `q` or the
+    /// adaptive count — the accuracy-control savings signal).
+    pub sweeps_used: AtomicU64,
+    /// Jobs that reported an achieved PVE (adaptive tolerance mode).
+    pub pve_jobs: AtomicU64,
+    /// Sum of achieved PVE over those jobs, in micro-units (PVE ∈
+    /// [0, 1] scaled by 1e6 so a lock-free integer can carry it).
+    pub pve_sum_micro: AtomicU64,
     /// Total execution time, nanoseconds.
     pub exec_ns: AtomicU64,
     /// Total queueing time, nanoseconds.
@@ -40,6 +48,18 @@ pub struct Metrics {
 }
 
 impl Metrics {
+    /// Record a completed job's sweep report (see
+    /// [`crate::coordinator::JobOutput`]).
+    pub fn record_sweeps(&self, sweeps_used: usize, achieved_pve: Option<f64>) {
+        self.sweeps_used
+            .fetch_add(sweeps_used as u64, Ordering::Relaxed);
+        if let Some(pve) = achieved_pve {
+            self.pve_jobs.fetch_add(1, Ordering::Relaxed);
+            self.pve_sum_micro
+                .fetch_add((pve.clamp(0.0, 1.0) * 1e6) as u64, Ordering::Relaxed);
+        }
+    }
+
     /// Record one executed job's timings and outcome.
     pub fn record_exec(&self, exec_s: f64, queue_s: f64, ok: bool) {
         self.completed.fetch_add(1, Ordering::Relaxed);
@@ -74,6 +94,15 @@ impl Metrics {
             http_bytes_out: self.http_bytes_out.load(Ordering::Relaxed),
             stream_passes: self.stream_passes.load(Ordering::Relaxed),
             stream_bytes_read: self.stream_bytes_read.load(Ordering::Relaxed),
+            sweeps_used: self.sweeps_used.load(Ordering::Relaxed),
+            mean_achieved_pve: {
+                let jobs = self.pve_jobs.load(Ordering::Relaxed);
+                if jobs > 0 {
+                    self.pve_sum_micro.load(Ordering::Relaxed) as f64 / 1e6 / jobs as f64
+                } else {
+                    0.0
+                }
+            },
             mean_exec_s: if completed > 0 {
                 exec_ns as f64 / completed as f64 / 1e9
             } else {
@@ -125,6 +154,11 @@ pub struct MetricsSnapshot {
     pub stream_passes: u64,
     /// Payload bytes read from streamed sources.
     pub stream_bytes_read: u64,
+    /// Power sweeps executed across completed jobs.
+    pub sweeps_used: u64,
+    /// Mean achieved PVE over jobs that reported one (adaptive
+    /// tolerance mode); 0 when no job has.
+    pub mean_achieved_pve: f64,
     /// Mean seconds spent executing, over completed jobs.
     pub mean_exec_s: f64,
     /// Mean seconds spent queued, over completed jobs.
@@ -149,7 +183,8 @@ impl std::fmt::Display for MetricsSnapshot {
              depth={} inflight={} mean_exec={:.3}ms mean_queue={:.3}ms max_exec={:.3}ms \
              pool[threads={} par_ops={} serial_ops={} chunks={}] \
              stream[passes={} read={}B] \
-             http[accepted={} rejected={} in={}B out={}B]",
+             http[accepted={} rejected={} in={}B out={}B] \
+             sweeps[used={} mean_pve={:.4}]",
             self.submitted,
             self.completed,
             self.failed,
@@ -170,6 +205,8 @@ impl std::fmt::Display for MetricsSnapshot {
             self.http_rejected,
             self.http_bytes_in,
             self.http_bytes_out,
+            self.sweeps_used,
+            self.mean_achieved_pve,
         )
     }
 }
@@ -204,6 +241,9 @@ mod tests {
         m.http_bytes_out.fetch_add(300, Ordering::Relaxed);
         m.stream_passes.fetch_add(4, Ordering::Relaxed);
         m.stream_bytes_read.fetch_add(4096, Ordering::Relaxed);
+        m.record_sweeps(2, None);
+        m.record_sweeps(3, Some(0.75));
+        m.record_sweeps(5, Some(0.25));
         let s = m.snapshot();
         assert_eq!(s.queue_depth, 2);
         assert_eq!(s.in_flight, 1);
@@ -211,9 +251,12 @@ mod tests {
         assert_eq!(s.http_rejected, 1);
         assert_eq!(s.stream_passes, 4);
         assert_eq!(s.stream_bytes_read, 4096);
+        assert_eq!(s.sweeps_used, 10);
+        assert!((s.mean_achieved_pve - 0.5).abs() < 1e-9);
         let text = format!("{s}");
         assert!(text.contains("inflight=1"), "{text}");
         assert!(text.contains("stream[passes=4 read=4096B]"), "{text}");
         assert!(text.contains("http[accepted=5 rejected=1 in=100B out=300B]"), "{text}");
+        assert!(text.contains("sweeps[used=10 mean_pve=0.5000]"), "{text}");
     }
 }

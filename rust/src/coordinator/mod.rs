@@ -347,6 +347,9 @@ fn native_loop(rx: Arc<Mutex<Receiver<WorkItem>>>, metrics: Arc<Metrics>, pool: 
         });
         let exec_s = t.elapsed().as_secs_f64();
         metrics.record_exec(exec_s, queue_s, outcome.is_ok());
+        if let Ok(out) = &outcome {
+            metrics.record_sweeps(out.sweeps_used, out.achieved_pve);
+        }
         // Streamed jobs carry private per-submission I/O counters
         // (zeroed in `submit_inner`), so the totals ARE this job's
         // delta — including partial sweeps of a panicked job.

@@ -18,13 +18,18 @@ pub fn execute_native(spec: &JobSpec) -> Result<JobOutput> {
     let mu = spec.shift.resolve(&spec.input)?;
     let mut rng = Xoshiro256pp::seed_from_u64(spec.seed);
     let engine = ShiftedRsvd::new(spec.config);
-    let fact = engine.factorize(spec.input.as_ops(), &mu, &mut rng)?;
+    let (fact, report) = engine.factorize_with_report(spec.input.as_ops(), &mu, &mut rng)?;
     let mse = if spec.score {
         Some(score(spec, &mu, &fact))
     } else {
         None
     };
-    Ok(JobOutput { factorization: fact, mse })
+    Ok(JobOutput {
+        factorization: fact,
+        mse,
+        sweeps_used: report.sweeps_used,
+        achieved_pve: report.achieved_pve,
+    })
 }
 
 /// The paper's MSE metric, dispatched by input kind: dense computes the
@@ -74,6 +79,27 @@ mod tests {
         let out = execute_native(&spec).unwrap();
         assert_eq!(out.factorization.rank(), 5);
         assert!(out.mse.unwrap() > 0.0);
+        // Fixed-q jobs report the static sweep count and no PVE.
+        assert_eq!(out.sweeps_used, 0);
+        assert_eq!(out.achieved_pve, None);
+    }
+
+    #[test]
+    fn adaptive_job_reports_sweeps_and_pve() {
+        let mut rng = Xoshiro256pp::seed_from_u64(4);
+        let x = Dense::from_fn(30, 100, |_, _| rng.next_uniform());
+        let spec = JobSpec {
+            input: MatrixInput::Dense(x),
+            config: SvdConfig::paper(5).with_tolerance(1e-3, 16),
+            shift: ShiftSpec::MeanCenter,
+            engine: EnginePreference::Native,
+            seed: 5,
+            score: true,
+        };
+        let out = execute_native(&spec).unwrap();
+        assert!(out.sweeps_used >= 1 && out.sweeps_used <= 16);
+        let pve = out.achieved_pve.expect("adaptive mode reports PVE");
+        assert!(pve > 0.0 && pve <= 1.0 + 1e-12, "pve {pve}");
     }
 
     #[test]

@@ -38,41 +38,87 @@ impl Route {
 }
 
 /// Compute the route for `spec` under `manifest` (None = no runtime).
+///
+/// When `engine = ArtifactOnly` and nothing matches, the error carries
+/// the router's *specific* refusal reason (streamed input, fused pass
+/// policy, adaptive stop criterion, shape miss, …) as
+/// [`Error::Invalid`] — the HTTP layer maps that to a 400 whose body
+/// tells the client exactly which knob to change.
 pub fn route(spec: &JobSpec, manifest: Option<&Manifest>) -> Result<Route> {
     let artifact = find_artifact(spec, manifest);
     match (spec.engine, artifact) {
         (EnginePreference::Native, _) => Ok(Route::Native),
-        (EnginePreference::Auto, Some(name)) => Ok(Route::Artifact { name }),
-        (EnginePreference::Auto, None) => Ok(Route::Native),
-        (EnginePreference::ArtifactOnly, Some(name)) => Ok(Route::Artifact { name }),
-        (EnginePreference::ArtifactOnly, None) => Err(Error::Service(format!(
-            "no compiled artifact matches job (shape {:?}, k={}, q={}) and \
-             engine=ArtifactOnly was requested",
-            spec.input.shape(),
-            spec.config.k,
-            spec.config.power_iters,
+        (EnginePreference::Auto, Ok(name)) => Ok(Route::Artifact { name }),
+        (EnginePreference::Auto, Err(_)) => Ok(Route::Native),
+        (EnginePreference::ArtifactOnly, Ok(name)) => Ok(Route::Artifact { name }),
+        (EnginePreference::ArtifactOnly, Err(reason)) => Err(Error::Invalid(format!(
+            "engine=artifact was requested but the job cannot run on a \
+             compiled artifact: {reason}"
         ))),
     }
 }
 
-fn find_artifact(spec: &JobSpec, manifest: Option<&Manifest>) -> Option<String> {
-    let manifest = manifest?;
-    if !matches!(spec.input, MatrixInput::Dense(_)) {
-        return None; // sparse inputs always run native (that's the point)
+/// The artifact name matching `spec`, or the specific reason no
+/// artifact can run it.
+fn find_artifact(spec: &JobSpec, manifest: Option<&Manifest>) -> std::result::Result<String, String> {
+    // Job-intrinsic refusals come first so the reason names the
+    // offending knob even on a service running without artifacts.
+    match spec.input {
+        MatrixInput::Dense(_) => {}
+        MatrixInput::Sparse(_) => {
+            // Sparse inputs always run native (that's the point).
+            return Err("sparse inputs run native only (artifacts take a dense operand)".into());
+        }
+        MatrixInput::Streamed(_) => {
+            return Err(
+                "streamed (out-of-core) inputs run native only: the matrix never \
+                 exists as a single dense operand"
+                    .into(),
+            );
+        }
     }
     if spec.config.basis != BasisMethod::Direct {
-        return None; // ablation variants are native-only
+        return Err(format!(
+            "basis {:?} is native-only (artifacts compile the Direct basis)",
+            spec.config.basis
+        ));
     }
     if spec.config.pass_policy != PassPolicy::Exact {
-        return None; // the AOT pipeline compiles the exact pass schedule
+        return Err(format!(
+            "pass_policy={} is native-only: the AOT pipeline compiles the exact \
+             pass schedule",
+            spec.config.pass_policy.name()
+        ));
     }
+    // Artifacts are compiled for a fixed q; the adaptive tolerance mode
+    // decides its sweep count at run time.
+    let Some(q) = spec.config.stop.fixed_q() else {
+        return Err(
+            "the adaptive stop criterion (pve_tol) is native-only: artifacts are \
+             compiled for a fixed power_iters"
+                .into(),
+        );
+    };
+    let Some(manifest) = manifest else {
+        return Err("no artifact manifest is loaded (artifact_dir off or missing)".into());
+    };
     let (m, n) = spec.input.shape();
-    let a = manifest.find_srsvd(m, n, spec.config.k, spec.config.power_iters)?;
+    let Some(a) = manifest.find_srsvd(m, n, spec.config.k, q) else {
+        return Err(format!(
+            "no compiled artifact matches shape {m}x{n} k={} q={q}",
+            spec.config.k
+        ));
+    };
     // The artifact's sampling width must match the job's.
     if a.kk != spec.config.sample_width() {
-        return None;
+        return Err(format!(
+            "artifact {} was compiled for sampling width K={} but the job asks K={}",
+            a.name,
+            a.kk,
+            spec.config.sample_width()
+        ));
     }
-    Some(a.name.clone())
+    Ok(a.name.clone())
 }
 
 #[cfg(test)]
@@ -126,7 +172,36 @@ mod tests {
     fn artifact_only_errors_when_unmatched() {
         let Some(m) = manifest() else { return };
         let r = route(&dense_job(33, 77, 4, EnginePreference::ArtifactOnly), Some(&m));
-        assert!(r.is_err());
+        let msg = format!("{}", r.unwrap_err());
+        assert!(msg.contains("33x77"), "reason should name the shape: {msg}");
+    }
+
+    #[test]
+    fn artifact_only_refusals_carry_specific_reasons() {
+        // Each refusal path names the offending knob so a 400 response
+        // tells the client what to change. No manifest at all is its own
+        // reason.
+        let r = route(&dense_job(100, 1000, 10, EnginePreference::ArtifactOnly), None);
+        assert!(format!("{}", r.unwrap_err()).contains("manifest"));
+
+        // Job-intrinsic refusals name the offending knob even when the
+        // service runs without artifacts at all.
+        let mut fused = dense_job(100, 1000, 10, EnginePreference::ArtifactOnly);
+        fused.config = fused.config.with_pass_policy(PassPolicy::Fused);
+        let msg = format!("{}", route(&fused, None).unwrap_err());
+        assert!(msg.contains("pass_policy=fused"), "{msg}");
+
+        let mut adaptive = dense_job(100, 1000, 10, EnginePreference::ArtifactOnly);
+        adaptive.config = adaptive.config.with_tolerance(1e-3, 8);
+        let msg = format!("{}", route(&adaptive, None).unwrap_err());
+        assert!(msg.contains("pve_tol"), "{msg}");
+
+        // Auto still silently falls back native for the same specs.
+        let m = manifest();
+        fused.engine = EnginePreference::Auto;
+        adaptive.engine = EnginePreference::Auto;
+        assert_eq!(route(&fused, m.as_ref()).unwrap(), Route::Native);
+        assert_eq!(route(&adaptive, m.as_ref()).unwrap(), Route::Native);
     }
 
     #[test]

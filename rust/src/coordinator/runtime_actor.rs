@@ -50,6 +50,9 @@ pub(super) fn actor_loop(dir: PathBuf, rx: Receiver<super::WorkItem>, metrics: A
         let outcome = execute_artifact(&mut executor, &item.spec);
         let exec_s = t.elapsed().as_secs_f64();
         metrics.record_exec(exec_s, queue_s, outcome.is_ok());
+        if let Ok(out) = &outcome {
+            metrics.record_sweeps(out.sweeps_used, out.achieved_pve);
+        }
         metrics.in_flight.fetch_sub(1, Ordering::Relaxed);
         let _ = item.reply.send(JobResult {
             id: item.id,
@@ -68,13 +71,18 @@ fn execute_artifact(executor: &mut Executor, spec: &JobSpec) -> Result<JobOutput
         ));
     };
     let (m, n) = x.shape();
+    // The router only sends fixed-q jobs here (artifacts are compiled
+    // for a static sweep count).
+    let q = spec.config.stop.fixed_q().ok_or_else(|| {
+        Error::Service("artifact engine requires a fixed power_iters (router bug)".into())
+    })?;
     let art = executor
         .manifest()
-        .find_srsvd(m, n, spec.config.k, spec.config.power_iters)
+        .find_srsvd(m, n, spec.config.k, q)
         .ok_or_else(|| {
             Error::Service(format!(
-                "no artifact for shape {m}x{n} k={} q={} (router bug)",
-                spec.config.k, spec.config.power_iters
+                "no artifact for shape {m}x{n} k={} q={q} (router bug)",
+                spec.config.k
             ))
         })?
         .clone();
@@ -86,6 +94,8 @@ fn execute_artifact(executor: &mut Executor, spec: &JobSpec) -> Result<JobOutput
     Ok(JobOutput {
         factorization: out.factorization,
         mse: spec.score.then_some(out.mse),
+        sweeps_used: q,
+        achieved_pve: None,
     })
 }
 

@@ -99,7 +99,7 @@ pub fn mse_sum(
 ) -> f64 {
     ks.iter()
         .map(|&k| {
-            let cfg = SvdConfig::paper(k).with_power(q);
+            let cfg = SvdConfig::paper(k).with_fixed_power(q);
             match algo {
                 Algo::Srsvd => run_srsvd(x, cfg, seed ^ (k as u64) << 17).mse,
                 Algo::Rsvd => run_rsvd(x, cfg, seed ^ (k as u64) << 17).mse,

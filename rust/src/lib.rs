@@ -62,9 +62,26 @@
 //!
 //! let mut rng = Xoshiro256pp::seed_from_u64(0);
 //! let x = Dense::from_fn(100, 1000, |_, _| rng.next_uniform());
-//! let cfg = SvdConfig { k: 10, oversample: 10, power_iters: 1, ..Default::default() };
+//! let cfg = SvdConfig::paper(10).with_fixed_power(1);
 //! let fact = ShiftedRsvd::new(cfg).factorize_mean_centered(&x, &mut rng).unwrap();
 //! println!("top singular values: {:?}", &fact.s[..5]);
+//! ```
+//!
+//! Prefer accuracy over a hand-picked sweep count? Swap the fixed `q`
+//! for the adaptive stopping criterion and let the dynamic-shift loop
+//! decide when the spectrum has settled:
+//!
+//! ```no_run
+//! use srsvd::prelude::*;
+//!
+//! let mut rng = Xoshiro256pp::seed_from_u64(0);
+//! let x = Dense::from_fn(100, 1000, |_, _| rng.next_uniform());
+//! let cfg = SvdConfig::paper(10).with_tolerance(1e-3, 32);
+//! let (fact, report) = ShiftedRsvd::new(cfg)
+//!     .factorize_with_report(&x, &x.row_means(), &mut rng)
+//!     .unwrap();
+//! println!("{} sweeps, pve {:?}", report.sweeps_used, report.achieved_pve);
+//! # let _ = fact;
 //! ```
 //!
 //! For matrices that do not fit in RAM, swap the [`linalg::Dense`] input
@@ -115,6 +132,7 @@ pub mod prelude {
     };
     pub use crate::rng::{Rng, Xoshiro256pp};
     pub use crate::svd::{
-        Factorization, MatVecOps, PassPolicy, Pca, Rsvd, ShiftedRsvd, SvdConfig, SvdEngine,
+        Factorization, MatVecOps, PassPolicy, Pca, Rsvd, ShiftedRsvd, StopCriterion, SvdConfig,
+        SvdEngine, SweepReport,
     };
 }

@@ -913,6 +913,26 @@ impl<S: MatrixSource> MatVecOps for Streamed<S> {
         s
     }
 
+    fn sq_fro_shifted(&self, mu: &[f64]) -> f64 {
+        // One fused source sweep (vs two for the trait default), with a
+        // single accumulator carried across blocks in the dense
+        // row-major element order — bit-identical to the in-memory
+        // `Dense` override for every block size and prefetch setting.
+        let (m, _) = self.shape();
+        assert_eq!(mu.len(), m, "sq_fro_shifted mu length");
+        let mut s = 0.0;
+        self.sweep(|row0, block| {
+            for local in 0..block.rows() {
+                let mi = mu[row0 + local];
+                for &x in block.row(local) {
+                    let d = x - mi;
+                    s += d * d;
+                }
+            }
+        });
+        s
+    }
+
     fn stored_entries(&self) -> usize {
         // Logical dense size; the *resident* footprint is block_rows·n.
         let (m, n) = self.shape();
@@ -1084,6 +1104,29 @@ mod tests {
         let got = MatVecOps::gram_sweep(&s, &w, &zero);
         let want = MatVecOps::tmm(&x, &MatVecOps::mm(&x, &w));
         assert!(crate::linalg::fro_diff(&got, &want) < 1e-10);
+    }
+
+    #[test]
+    fn sq_fro_shifted_matches_dense_bitwise_in_one_pass() {
+        let mut rng = Xoshiro256pp::seed_from_u64(11);
+        let x = Dense::from_fn(31, 23, |_, _| rng.next_uniform());
+        let mu = x.row_means();
+        let want = MatVecOps::sq_fro_shifted(&x, &mu);
+        for bl in [1usize, 6, 31] {
+            for prefetch in [false, true] {
+                let s = Streamed::with_block_rows(InMemorySource::new(x.clone()), bl)
+                    .with_prefetch(prefetch);
+                let got = s.sq_fro_shifted(&mu);
+                // Same carried-accumulator element order → bit-identical.
+                assert_eq!(
+                    got.to_bits(),
+                    want.to_bits(),
+                    "bl={bl} prefetch={prefetch}"
+                );
+                // One fused pass, not the default's two.
+                assert_eq!(s.stats().passes, 1, "bl={bl} prefetch={prefetch}");
+            }
+        }
     }
 
     #[test]

@@ -10,7 +10,7 @@
 //! ```
 
 use srsvd::cli::ArgSpec;
-use srsvd::config::{parse_basis, parse_pass_policy, parse_small_svd, RawConfig};
+use srsvd::config::{parse_basis, parse_pass_policy, parse_small_svd, stop_criterion, RawConfig};
 use srsvd::coordinator::{
     Coordinator, CoordinatorConfig, EnginePreference, JobSpec, MatrixInput, ShiftSpec,
 };
@@ -73,10 +73,26 @@ fn print_root_help() {
 }
 
 fn svd_config_from(a: &srsvd::cli::Args) -> Result<SvdConfig> {
+    // All three stopping flags funnel through the shared conversion
+    // point: empty/zero flags mean "unset" so the defaults and the
+    // mutual-exclusion rules live in `stop_criterion`, not here.
+    let q = a.get_usize("q")?;
+    let pve_tol = match a.get("pve-tol") {
+        "" => None,
+        s => Some(s.parse::<f64>().map_err(|_| {
+            srsvd::util::Error::Invalid(format!("--pve-tol: not a number: {s:?}"))
+        })?),
+    };
+    let max_sweeps = a.get_usize("max-sweeps")?;
+    let stop = stop_criterion(
+        (q > 0).then_some(q),
+        pve_tol,
+        (max_sweeps > 0).then_some(max_sweeps),
+    )?;
     Ok(SvdConfig {
         k: a.get_usize("k")?,
         oversample: a.get_usize("oversample")?,
-        power_iters: a.get_usize("q")?,
+        stop,
         basis: parse_basis(a.get("basis"))?,
         small_svd: parse_small_svd(a.get("small-svd"))?,
         pass_policy: parse_pass_policy(a.get("pass-policy"))?,
@@ -90,7 +106,14 @@ fn cmd_factorize(args: &[String]) -> Result<()> {
         .opt("n", "1000", "columns (samples)")
         .opt("k", "10", "target rank")
         .opt("oversample", "10", "K = k + oversample (paper: oversample = k)")
-        .opt("q", "0", "power iterations")
+        .opt("q", "0", "fixed power iterations (exclusive with --pve-tol)")
+        .opt(
+            "pve-tol",
+            "",
+            "dashSVD accuracy control: stop sweeping when the PVE estimates \
+             move less than this (e.g. 1e-3); exclusive with --q",
+        )
+        .opt("max-sweeps", "0", "adaptive sweep ceiling (0 = default 32; needs --pve-tol)")
         .opt("basis", "direct", "direct | qr-update-paper | qr-update-exact")
         .opt("small-svd", "jacobi", "jacobi | gram")
         .opt(

@@ -14,7 +14,11 @@
 //!   "input":       {"kind": "dense", "m": 2, "n": 3, "data": [..6 numbers..]},
 //!   "k": 10,
 //!   "oversample":  10,            // optional, default k  (paper: K = 2k)
-//!   "power_iters": 0,             // optional, default 0
+//!   "power_iters": 0,             // optional, default 0 (fixed sweep count;
+//!                                 //   exclusive with pve_tol)
+//!   "pve_tol":     1e-3,          // optional: dashSVD accuracy control — sweep
+//!                                 //   until the PVE estimates settle (adaptive)
+//!   "max_sweeps":  32,            // optional: adaptive sweep ceiling (needs pve_tol)
 //!   "basis":       "direct",      // optional: direct | qr-update-paper | qr-update-exact
 //!   "small_svd":   "jacobi",      // optional: jacobi | gram
 //!   "pass_policy": "exact",       // optional: exact | fused (source-pass schedule;
@@ -47,8 +51,11 @@
 //! {"id": 1, "engine": "native", "exec_s": 0.01, "queue_s": 0.001,
 //!  "ok": true,
 //!  "output": {"m": 2, "n": 3, "k": 1, "u": [..], "s": [..], "v": [..],
-//!             "mse": 0.5}}
+//!             "mse": 0.5, "sweeps_used": 4, "achieved_pve": 0.93}}
 //! ```
+//!
+//! `sweeps_used` reports the power sweeps the engine executed;
+//! `achieved_pve` is `null` except under the adaptive tolerance mode.
 //!
 //! `u`/`s`/`v` travel as JSON numbers; render → parse reproduces the
 //! exact `f64` bits (shortest-repr `Display`, correctly-rounded parse —
@@ -56,12 +63,12 @@
 //! the wire is **byte-identical** to the same spec run in-process
 //! (pinned by `rust/tests/server.rs`).
 
-use crate::config::{parse_basis, parse_pass_policy, parse_small_svd};
+use crate::config::{parse_basis, parse_pass_policy, parse_small_svd, stop_criterion};
 use crate::coordinator::{EnginePreference, JobResult, JobSpec, MatrixInput, ShiftSpec};
 use crate::data::Distribution;
 use crate::linalg::stream::{FileSource, GeneratorSource, StreamConfig};
 use crate::linalg::{Csr, Dense, Triplets};
-use crate::svd::{BasisMethod, PassPolicy, SmallSvdMethod, SvdConfig, SvdEngine};
+use crate::svd::{BasisMethod, PassPolicy, SmallSvdMethod, StopCriterion, SvdConfig, SvdEngine};
 use crate::util::json::Json;
 use crate::util::{Error, Result};
 
@@ -251,8 +258,8 @@ pub fn parse_submit(body: &Json, stream_defaults: &StreamConfig) -> Result<Submi
     unknown_keys(
         body,
         &[
-            "input", "k", "oversample", "power_iters", "basis", "small_svd", "pass_policy",
-            "shift", "engine", "seed", "score", "wait",
+            "input", "k", "oversample", "power_iters", "pve_tol", "max_sweeps", "basis",
+            "small_svd", "pass_policy", "shift", "engine", "seed", "score", "wait",
         ],
         "job",
     )?;
@@ -260,10 +267,27 @@ pub fn parse_submit(body: &Json, stream_defaults: &StreamConfig) -> Result<Submi
     let input = parse_input(body.get("input")?, stream_defaults)?;
     let k = body.get("k")?.as_usize()?;
     crate::ensure!(k >= 1, "k must be >= 1");
+    // The three stopping fields share the config/CLI conversion point:
+    // absent fields mean "unset", so omitting all of them keeps the
+    // pre-redesign fixed q = 0 and existing clients are untouched.
+    let stop = stop_criterion(
+        match obj.get("power_iters") {
+            Some(v) => Some(v.as_usize()?),
+            None => None,
+        },
+        match obj.get("pve_tol") {
+            Some(v) => Some(v.as_f64()?),
+            None => None,
+        },
+        match obj.get("max_sweeps") {
+            Some(v) => Some(v.as_usize()?),
+            None => None,
+        },
+    )?;
     let config = SvdConfig {
         k,
         oversample: get_usize_or(body, "oversample", k)?,
-        power_iters: get_usize_or(body, "power_iters", 0)?,
+        stop,
         basis: match obj.get("basis") {
             Some(v) => parse_basis(v.as_str()?)?,
             None => BasisMethod::Direct,
@@ -363,11 +387,24 @@ impl JobRequest {
             SmallSvdMethod::Jacobi => "jacobi",
             SmallSvdMethod::GramEig => "gram",
         };
-        Json::obj(vec![
+        let mut pairs = vec![
             ("input", self.input.clone()),
             ("k", Json::num(self.config.k as f64)),
             ("oversample", Json::num(self.config.oversample as f64)),
-            ("power_iters", Json::num(self.config.power_iters as f64)),
+        ];
+        // Render exactly the fields the criterion owns: a fixed-q request
+        // never mentions pve_tol (and vice versa), so the server's
+        // mutual-exclusion check can stay strict.
+        match self.config.stop {
+            StopCriterion::FixedPower { q } => {
+                pairs.push(("power_iters", Json::num(q as f64)));
+            }
+            StopCriterion::Tolerance { pve_tol, max_sweeps } => {
+                pairs.push(("pve_tol", Json::num(pve_tol)));
+                pairs.push(("max_sweeps", Json::num(max_sweeps as f64)));
+            }
+        }
+        pairs.extend([
             ("basis", Json::str(basis)),
             ("small_svd", Json::str(small_svd)),
             ("pass_policy", Json::str(self.config.pass_policy.name())),
@@ -376,7 +413,8 @@ impl JobRequest {
             ("seed", Json::num(self.seed as f64)),
             ("score", Json::Bool(self.score)),
             ("wait", Json::Bool(self.wait)),
-        ])
+        ]);
+        Json::obj(pairs)
     }
 }
 
@@ -490,6 +528,14 @@ pub fn job_result_to_json(r: &JobResult) -> Json {
                             None => Json::Null,
                         },
                     ),
+                    ("sweeps_used", Json::num(out.sweeps_used as f64)),
+                    (
+                        "achieved_pve",
+                        match out.achieved_pve {
+                            Some(p) => Json::num(p),
+                            None => Json::Null,
+                        },
+                    ),
                 ]),
             ));
         }
@@ -509,6 +555,11 @@ pub struct WireOutput {
     pub v: Dense,
     /// The paper's MSE, when scoring was requested.
     pub mse: Option<f64>,
+    /// Power sweeps the engine executed; `None` when talking to a
+    /// server that predates the stopping-criterion fields.
+    pub sweeps_used: Option<u64>,
+    /// Achieved PVE (adaptive tolerance mode only).
+    pub achieved_pve: Option<f64>,
 }
 
 /// A completed job as seen by the client.
@@ -549,11 +600,23 @@ pub fn parse_result(body: &Json) -> Result<WireResult> {
             Json::Null => None,
             other => Some(other.as_f64()?),
         };
+        // Lenient: absent on results from servers that predate the
+        // stopping-criterion API.
+        let sweeps_used = match out.as_obj()?.get("sweeps_used") {
+            None | Some(Json::Null) => None,
+            Some(v) => Some(v.as_u64()?),
+        };
+        let achieved_pve = match out.as_obj()?.get("achieved_pve") {
+            None | Some(Json::Null) => None,
+            Some(v) => Some(v.as_f64()?),
+        };
         Ok(WireOutput {
             u: Dense::from_vec(m, k, u),
             s,
             v: Dense::from_vec(n, k, v),
             mse,
+            sweeps_used,
+            achieved_pve,
         })
     } else {
         Err(body.get("error")?.as_str()?.to_string())
@@ -577,6 +640,8 @@ pub fn metrics_to_json(m: &crate::coordinator::MetricsSnapshot) -> Json {
         ("http_bytes_out", Json::num(m.http_bytes_out as f64)),
         ("stream_passes", Json::num(m.stream_passes as f64)),
         ("stream_bytes_read", Json::num(m.stream_bytes_read as f64)),
+        ("sweeps_used", Json::num(m.sweeps_used as f64)),
+        ("mean_achieved_pve", Json::num(m.mean_achieved_pve)),
         ("mean_exec_s", Json::num(m.mean_exec_s)),
         ("mean_queue_s", Json::num(m.mean_queue_s)),
         ("max_exec_s", Json::num(m.max_exec_s)),
@@ -741,6 +806,8 @@ mod tests {
             outcome: Ok(crate::coordinator::JobOutput {
                 factorization: fact.clone(),
                 mse: Some(0.125),
+                sweeps_used: 4,
+                achieved_pve: Some(0.5),
             }),
             engine: SvdEngine::Native,
             exec_s: 0.5,
@@ -753,6 +820,8 @@ mod tests {
         assert_eq!(back.engine, "native");
         let out = back.outcome.unwrap();
         assert_eq!(out.mse, Some(0.125));
+        assert_eq!(out.sweeps_used, Some(4));
+        assert_eq!(out.achieved_pve, Some(0.5));
         let bits = |x: &Dense| -> Vec<u64> { x.data().iter().map(|v| v.to_bits()).collect() };
         assert_eq!(bits(&out.u), bits(&fact.u));
         assert_eq!(bits(&out.v), bits(&fact.v));
@@ -783,5 +852,77 @@ mod tests {
         assert!(j.get("in_flight").is_ok());
         assert!(j.get("stream_passes").is_ok());
         assert!(j.get("stream_bytes_read").is_ok());
+        assert!(j.get("sweeps_used").is_ok());
+        assert!(j.get("mean_achieved_pve").is_ok());
+    }
+
+    #[test]
+    fn tolerance_fields_round_trip_and_exclude_power_iters() {
+        let mut req = JobRequest::new(
+            generator_input(8, 8, Distribution::Uniform, 0, None, None),
+            2,
+        );
+        req.config = req.config.with_tolerance(1e-3, 8);
+        let body = req.to_json();
+        // The adaptive request never mentions power_iters on the wire.
+        let obj = body.as_obj().unwrap();
+        assert!(obj.get("power_iters").is_none());
+        let parsed = parse_submit(&body, &defaults()).unwrap();
+        assert_eq!(
+            parsed.spec.config.stop,
+            StopCriterion::Tolerance { pve_tol: 1e-3, max_sweeps: 8 }
+        );
+        // And the fixed-q request never mentions pve_tol.
+        req.config = req.config.with_fixed_power(3);
+        let body = req.to_json();
+        assert!(body.as_obj().unwrap().get("pve_tol").is_none());
+        let parsed = parse_submit(&body, &defaults()).unwrap();
+        assert_eq!(parsed.spec.config.stop, StopCriterion::FixedPower { q: 3 });
+        // Omitting all three keeps the pre-redesign default q = 0.
+        let legacy = JobRequest::new(
+            generator_input(8, 8, Distribution::Uniform, 0, None, None),
+            2,
+        );
+        let mut obj = legacy.to_json().as_obj().unwrap().clone();
+        obj.remove("power_iters");
+        let parsed = parse_submit(&Json::Obj(obj), &defaults()).unwrap();
+        assert_eq!(parsed.spec.config.stop, StopCriterion::FixedPower { q: 0 });
+    }
+
+    #[test]
+    fn contradictory_stop_fields_are_rejected() {
+        let ok = JobRequest::new(generator_input(4, 4, Distribution::Uniform, 0, None, None), 1)
+            .to_json();
+        // power_iters + pve_tol together: mutually exclusive.
+        let mut both = ok.as_obj().unwrap().clone();
+        both.insert("pve_tol".into(), Json::num(1e-3));
+        let err = parse_submit(&Json::Obj(both), &defaults()).unwrap_err();
+        assert!(format!("{err}").contains("mutually exclusive"), "{err}");
+        // max_sweeps without pve_tol is meaningless.
+        let mut orphan = ok.as_obj().unwrap().clone();
+        orphan.remove("power_iters");
+        orphan.insert("max_sweeps".into(), Json::num(8.0));
+        assert!(parse_submit(&Json::Obj(orphan), &defaults()).is_err());
+        // Non-positive tolerance is rejected.
+        let mut bad = ok.as_obj().unwrap().clone();
+        bad.remove("power_iters");
+        bad.insert("pve_tol".into(), Json::num(0.0));
+        assert!(parse_submit(&Json::Obj(bad), &defaults()).is_err());
+    }
+
+    #[test]
+    fn results_from_older_servers_still_parse() {
+        // A result object without sweeps_used / achieved_pve (the
+        // pre-redesign wire shape) must parse; the new fields read None.
+        let text = r#"{"id": 7, "engine": "native", "exec_s": 0.1, "queue_s": 0.0,
+                       "ok": true,
+                       "output": {"m": 2, "n": 2, "k": 1,
+                                  "u": [1.0, 0.0], "s": [2.0], "v": [0.0, 1.0],
+                                  "mse": null}}"#;
+        let back = parse_result(&Json::parse(text).unwrap()).unwrap();
+        let out = back.outcome.unwrap();
+        assert_eq!(out.sweeps_used, None);
+        assert_eq!(out.achieved_pve, None);
+        assert_eq!(out.mse, None);
     }
 }

@@ -13,7 +13,7 @@ pub use deterministic::deterministic_svd;
 pub use ops::{shifted_low_rank_mse, MatVecOps};
 pub use pca::{column_errors, Pca};
 pub use rsvd::Rsvd;
-pub use shifted::{BasisMethod, PassPolicy, ShiftedRsvd, SmallSvdMethod};
+pub use shifted::{BasisMethod, PassPolicy, ShiftedRsvd, SmallSvdMethod, SweepReport};
 
 use crate::linalg::{gemm, Dense};
 
@@ -66,6 +66,75 @@ pub enum SvdEngine {
     Artifact,
 }
 
+/// When the power-sweep loop of a factorization stops.
+///
+/// This is the typed replacement for the former `power_iters: usize`
+/// field that was duplicated across `SvdConfig`, the `[svd]` config
+/// section, the `--q` CLI flag, and the wire protocol's `power_iters`
+/// submit field. All of those surfaces now funnel into this enum
+/// through one conversion point, [`crate::config::stop_criterion`].
+///
+/// ## Migration
+///
+/// | Before (≤ PR 5)                          | Now                                        |
+/// |------------------------------------------|--------------------------------------------|
+/// | `SvdConfig { power_iters: q, .. }`       | `SvdConfig { stop: StopCriterion::FixedPower { q }, .. }` |
+/// | `cfg.with_power(q)` *(deprecated shim)*  | `cfg.with_fixed_power(q)`                  |
+/// | *(no equivalent)*                        | `cfg.with_tolerance(pve_tol, max_sweeps)`  |
+///
+/// `FixedPower` preserves the pre-redesign semantics exactly — same
+/// operation sequence, byte-identical factors.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum StopCriterion {
+    /// Run exactly `q` power sweeps (the legacy `power_iters` knob).
+    /// Deterministic pass budget; no accuracy feedback.
+    FixedPower {
+        /// Power-iteration count q.
+        q: usize,
+    },
+    /// dashSVD-style accuracy control (arXiv 2404.09276): run dynamic-
+    /// shift Gram sweeps until the per-eigenvalue estimates move by at
+    /// most `pve_tol · ‖X̄‖²_F` between consecutive sweeps (the PVE
+    /// stopping rule), or `max_sweeps` is reached. The engine reports
+    /// the sweeps actually used via [`SweepReport`].
+    Tolerance {
+        /// Relative tolerance on the proportion-of-variance-explained
+        /// movement between sweeps (e.g. `1e-2` coarse, `1e-4` tight).
+        pve_tol: f64,
+        /// Hard sweep ceiling; the loop stops here even if the
+        /// tolerance was never met.
+        max_sweeps: usize,
+    },
+}
+
+impl StopCriterion {
+    /// Default sweep ceiling for [`StopCriterion::Tolerance`] when a
+    /// caller supplies only a tolerance.
+    pub const DEFAULT_MAX_SWEEPS: usize = 32;
+
+    /// The fixed sweep count, when this criterion is static.
+    /// `None` for the adaptive [`StopCriterion::Tolerance`] mode —
+    /// used by the artifact router, which can only match compiled
+    /// fixed-`q` pipelines.
+    pub fn fixed_q(&self) -> Option<usize> {
+        match self {
+            StopCriterion::FixedPower { q } => Some(*q),
+            StopCriterion::Tolerance { .. } => None,
+        }
+    }
+
+    /// Whether the sweep count is decided at run time.
+    pub fn is_adaptive(&self) -> bool {
+        matches!(self, StopCriterion::Tolerance { .. })
+    }
+}
+
+impl Default for StopCriterion {
+    fn default() -> Self {
+        StopCriterion::FixedPower { q: 0 }
+    }
+}
+
 /// Configuration shared by RSVD and S-RSVD.
 #[derive(Debug, Clone, Copy)]
 pub struct SvdConfig {
@@ -74,8 +143,11 @@ pub struct SvdConfig {
     /// Oversampling: the sampling parameter is `K = k + oversample`.
     /// The paper uses K = 2k, i.e. `oversample = k`.
     pub oversample: usize,
-    /// Power-iteration count q.
-    pub power_iters: usize,
+    /// When the power-sweep loop stops: a fixed `q` (the paper's knob)
+    /// or a PVE tolerance with dynamic shifts (dashSVD). Replaces the
+    /// former `power_iters: usize` field — see [`StopCriterion`] for
+    /// the migration table.
+    pub stop: StopCriterion,
     /// How the shifted basis is obtained (Alg. 1 L4-6).
     pub basis: BasisMethod,
     /// Backend for the small projected SVD (Alg. 1 L13).
@@ -83,7 +155,9 @@ pub struct SvdConfig {
     /// Source-pass schedule of the sweep stages: `Exact` (2 + 2q
     /// passes, streamed results byte-identical to dense) or `Fused`
     /// (Gram-chain power passes, ≤ q + 2 passes). The wall-clock lever
-    /// for out-of-core inputs.
+    /// for out-of-core inputs. Ignored by the adaptive
+    /// [`StopCriterion::Tolerance`] mode, which always runs the fused
+    /// Gram-sweep schedule (one source pass per sweep).
     pub pass_policy: PassPolicy,
 }
 
@@ -92,7 +166,7 @@ impl Default for SvdConfig {
         SvdConfig {
             k: 10,
             oversample: 10,
-            power_iters: 0,
+            stop: StopCriterion::default(),
             basis: BasisMethod::Direct,
             small_svd: SmallSvdMethod::Jacobi,
             pass_policy: PassPolicy::Exact,
@@ -111,10 +185,29 @@ impl SvdConfig {
         self.k + self.oversample
     }
 
-    /// Builder-style override of the power-iteration count q.
-    pub fn with_power(mut self, q: usize) -> Self {
-        self.power_iters = q;
+    /// Builder-style override of the stopping criterion.
+    pub fn with_stop(mut self, stop: StopCriterion) -> Self {
+        self.stop = stop;
         self
+    }
+
+    /// Builder-style fixed power-iteration count q (the pre-redesign
+    /// `power_iters` semantics, byte-identical factors).
+    pub fn with_fixed_power(self, q: usize) -> Self {
+        self.with_stop(StopCriterion::FixedPower { q })
+    }
+
+    /// Builder-style dashSVD accuracy control: dynamic shifts + PVE
+    /// stopping at `pve_tol`, capped at `max_sweeps` sweeps.
+    pub fn with_tolerance(self, pve_tol: f64, max_sweeps: usize) -> Self {
+        self.with_stop(StopCriterion::Tolerance { pve_tol, max_sweeps })
+    }
+
+    /// Builder-style override of the power-iteration count q.
+    #[deprecated(note = "use `with_fixed_power(q)`, or `with_tolerance(pve_tol, max_sweeps)` \
+                         for dashSVD-style accuracy control")]
+    pub fn with_power(self, q: usize) -> Self {
+        self.with_fixed_power(q)
     }
 
     /// Builder-style override of the source-pass schedule.
@@ -146,6 +239,26 @@ mod tests {
     fn paper_config_uses_double_k() {
         let c = SvdConfig::paper(25);
         assert_eq!(c.sample_width(), 50);
-        assert_eq!(c.power_iters, 0);
+        assert_eq!(c.stop, StopCriterion::FixedPower { q: 0 });
+    }
+
+    #[test]
+    fn stop_criterion_builders_and_accessors() {
+        let c = SvdConfig::paper(5).with_fixed_power(3);
+        assert_eq!(c.stop.fixed_q(), Some(3));
+        assert!(!c.stop.is_adaptive());
+        let c = SvdConfig::paper(5).with_tolerance(1e-3, 12);
+        assert_eq!(c.stop, StopCriterion::Tolerance { pve_tol: 1e-3, max_sweeps: 12 });
+        assert_eq!(c.stop.fixed_q(), None);
+        assert!(c.stop.is_adaptive());
+    }
+
+    #[test]
+    #[allow(deprecated)]
+    fn deprecated_with_power_shim_still_sets_fixed_q() {
+        // The one-release compatibility shim must keep the exact
+        // pre-redesign semantics (a fixed sweep count).
+        let c = SvdConfig::paper(4).with_power(2);
+        assert_eq!(c.stop, StopCriterion::FixedPower { q: 2 });
     }
 }

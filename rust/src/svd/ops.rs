@@ -64,6 +64,28 @@ pub trait MatVecOps: Sync {
     /// Squared Frobenius norm of X.
     fn sq_fro(&self) -> f64;
 
+    /// Squared Frobenius norm of the shifted matrix,
+    /// `‖X̄‖²_F = ‖X − μ·1ᵀ‖²_F` — the normalizer of the PVE stopping
+    /// rule ([`crate::svd::StopCriterion::Tolerance`]).
+    ///
+    /// The default expands the square so no implementation materializes
+    /// `X̄`: `‖X̄‖² = ‖X‖² − 2n·Σᵢ μᵢ·m̄ᵢ + n·Σᵢ μᵢ²` with `m̄` the row
+    /// means. For [`Dense`] that is one data pass (`sq_fro` +
+    /// `row_means` both touch resident memory); [`Csr`] overrides with
+    /// a single stored-entry loop, and [`crate::linalg::Streamed`]
+    /// overrides with one fused source sweep.
+    fn sq_fro_shifted(&self, mu: &[f64]) -> f64 {
+        let (m, n) = self.shape();
+        assert_eq!(mu.len(), m, "sq_fro_shifted mu length");
+        if mu.iter().all(|&v| v == 0.0) {
+            return self.sq_fro();
+        }
+        let means = self.row_means();
+        let cross: f64 = mu.iter().zip(&means).map(|(a, b)| a * b).sum();
+        let mu_sq: f64 = mu.iter().map(|v| v * v).sum();
+        (self.sq_fro() - 2.0 * n as f64 * cross + n as f64 * mu_sq).max(0.0)
+    }
+
     /// Number of stored entries (m·n for dense).
     fn stored_entries(&self) -> usize;
 }
@@ -95,6 +117,22 @@ impl MatVecOps for Dense {
 
     fn sq_fro(&self) -> f64 {
         self.data().iter().map(|x| x * x).sum()
+    }
+
+    fn sq_fro_shifted(&self, mu: &[f64]) -> f64 {
+        // One resident pass in row-major element order — the same
+        // carried-accumulator order the Streamed override replays, so
+        // streamed and in-memory runs agree bit-for-bit.
+        assert_eq!(mu.len(), self.rows(), "sq_fro_shifted mu length");
+        let mut s = 0.0;
+        for i in 0..self.rows() {
+            let m = mu[i];
+            for &x in self.row(i) {
+                let d = x - m;
+                s += d * d;
+            }
+        }
+        s
     }
 
     fn stored_entries(&self) -> usize {
@@ -135,6 +173,24 @@ impl MatVecOps for Csr {
             }
         }
         s
+    }
+
+    fn sq_fro_shifted(&self, mu: &[f64]) -> f64 {
+        // Stored entries contribute (v − μᵢ)²; the (n − nnzᵢ) implicit
+        // zeros of row i each contribute μᵢ². Rearranged to one loop
+        // over stored entries plus an O(m) closed-form term:
+        // Σ_stored((v−μᵢ)² − μᵢ²) + n·Σᵢ μᵢ².
+        assert_eq!(mu.len(), self.rows(), "sq_fro_shifted mu length");
+        let n = self.cols() as f64;
+        let mut s = 0.0;
+        for i in 0..self.rows() {
+            let m = mu[i];
+            for (_, v) in self.row_iter(i) {
+                let d = v - m;
+                s += d * d - m * m;
+            }
+        }
+        s + n * mu.iter().map(|v| v * v).sum::<f64>()
     }
 
     fn stored_entries(&self) -> usize {
@@ -268,6 +324,63 @@ mod tests {
         let want0 = gemm::tmatmul(&de, &gemm::matmul(&de, &w));
         let got0 = MatVecOps::gram_sweep(&de, &w, &vec![0.0; 20]);
         assert!(crate::linalg::fro_diff(&got0, &want0) < 1e-10);
+    }
+
+    #[test]
+    fn sq_fro_shifted_agrees_across_implementations() {
+        let mut rng = Xoshiro256pp::seed_from_u64(5);
+        let sp = Csr::random(25, 70, 0.12, &mut rng, |r| r.next_uniform() + 0.3);
+        let de = sp.to_dense();
+        let mu = Csr::row_means(&sp);
+        // Reference: materialize X̄.
+        let want = MatVecOps::sq_fro(&de.subtract_column(&mu));
+        let got_dense = MatVecOps::sq_fro_shifted(&de, &mu);
+        let got_sparse = sp.sq_fro_shifted(&mu);
+        // The trait default (expand-the-square) on the dense input.
+        struct DefaultOnly<'a>(&'a Dense);
+        impl MatVecOps for DefaultOnly<'_> {
+            fn shape(&self) -> (usize, usize) {
+                self.0.shape()
+            }
+            fn mm(&self, b: &Dense) -> Dense {
+                MatVecOps::mm(self.0, b)
+            }
+            fn tmm(&self, b: &Dense) -> Dense {
+                MatVecOps::tmm(self.0, b)
+            }
+            fn mm_rank1(&self, b: &Dense, u: &[f64], v: &[f64]) -> Dense {
+                self.0.mm_rank1(b, u, v)
+            }
+            fn tmm_rank1(&self, b: &Dense, u: &[f64], v: &[f64]) -> Dense {
+                self.0.tmm_rank1(b, u, v)
+            }
+            fn row_means(&self) -> Vec<f64> {
+                MatVecOps::row_means(self.0)
+            }
+            fn sq_fro(&self) -> f64 {
+                MatVecOps::sq_fro(self.0)
+            }
+            fn stored_entries(&self) -> usize {
+                self.0.stored_entries()
+            }
+        }
+        let got_default = DefaultOnly(&de).sq_fro_shifted(&mu);
+        for (what, got) in [
+            ("dense", got_dense),
+            ("sparse", got_sparse),
+            ("default", got_default),
+        ] {
+            assert!(
+                (got - want).abs() < 1e-8 * want.max(1.0),
+                "{what}: {got} vs {want}"
+            );
+        }
+        // μ = 0 reduces to sq_fro exactly.
+        let zeros = vec![0.0; 25];
+        assert_eq!(
+            MatVecOps::sq_fro_shifted(&de, &zeros).to_bits(),
+            MatVecOps::sq_fro(&de).to_bits()
+        );
     }
 
     #[test]

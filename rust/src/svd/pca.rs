@@ -140,7 +140,7 @@ mod tests {
     #[test]
     fn fit_transform_reconstruct_cycle() {
         let x = uniform(20, 120, 0);
-        let cfg = SvdConfig { k: 6, oversample: 6, power_iters: 2, ..Default::default() };
+        let cfg = SvdConfig::paper(6).with_fixed_power(2);
         let mut rng = Xoshiro256pp::seed_from_u64(1);
         let pca = Pca::fit(&x, cfg, &mut rng).unwrap();
         let y = pca.transform(&x);
@@ -172,7 +172,7 @@ mod tests {
         let mut rng = Xoshiro256pp::seed_from_u64(4);
         let sp = Csr::random(20, 70, 0.15, &mut rng, |r| r.next_uniform() + 0.3);
         let de = sp.to_dense();
-        let cfg = SvdConfig { k: 4, oversample: 4, power_iters: 1, ..Default::default() };
+        let cfg = SvdConfig::paper(4).with_fixed_power(1);
         let pca = Pca::fit(&sp, cfg, &mut Xoshiro256pp::seed_from_u64(5)).unwrap();
         let es = pca.column_errors_sparse(&sp);
         let ed = pca.column_errors_dense(&de);

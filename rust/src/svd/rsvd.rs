@@ -75,7 +75,7 @@ mod tests {
     fn rsvd_near_optimal_with_power_iterations() {
         let mut rng = Xoshiro256pp::seed_from_u64(0);
         let x = Dense::from_fn(40, 200, |_, _| rng.next_uniform());
-        let cfg = SvdConfig { k: 8, oversample: 8, power_iters: 2, ..Default::default() };
+        let cfg = SvdConfig::paper(8).with_fixed_power(2);
         let f = Rsvd::new(cfg).factorize(&x, &mut rng).unwrap();
         let err = fro_diff(&f.reconstruct(), &x);
         assert!(err <= 1.15 * optimal_residual(&x, 8));

@@ -28,13 +28,14 @@
 //! matters for out-of-core ([`crate::linalg::Streamed`]) inputs, where
 //! every product is a full disk sweep:
 //!
-//! | Stage | [`PassPolicy::Exact`] | [`PassPolicy::Fused`] |
-//! |-------|-----------------------|------------------------|
-//! | sampling basis (L2-7)    | 1 | — (folded into range capture) |
-//! | power iteration ×q (L8-11) | 2 per iteration | 1 per iteration ([`MatVecOps::gram_sweep`]) |
-//! | range capture            | — | 1 (`H = X̄W`, then QR) |
-//! | projection (L12)         | 1 | 1 |
-//! | **total source passes**  | **2 + 2q** | **q + 2** |
+//! | Stage | [`PassPolicy::Exact`] | [`PassPolicy::Fused`] | adaptive ([`StopCriterion::Tolerance`]) |
+//! |-------|-----------------------|------------------------|------------------------|
+//! | `‖X̄‖²_F` ([`MatVecOps::sq_fro_shifted`]) | — | — | 1 |
+//! | sampling basis (L2-7)    | 1 | — (folded into range capture) | — (Ω orthonormalized, no data pass) |
+//! | power iteration (L8-11) | 2 per iteration ×q | 1 per iteration ×q ([`MatVecOps::gram_sweep`]) | 1 per sweep, count decided at run time |
+//! | range capture            | — | 1 (`H = X̄W`, then QR) | 1 |
+//! | projection (L12)         | 1 | 1 | 1 |
+//! | **total source passes**  | **2 + 2q** | **q + 2** | **sweeps + 3** |
 //!
 //! `Exact` runs the paper's literal chain (`Q ← qr(X̄·qr(X̄ᵀQ))`) and is
 //! byte-identical to the in-memory path for streamed sources. `Fused`
@@ -44,6 +45,29 @@
 //! no data pass at all — so the subspace is mathematically the same
 //! (`range((X̄X̄ᵀ)^q X̄Ω)` either way) but the factors are not
 //! bit-identical to `Exact`.
+//!
+//! ## Dynamic shifts + accuracy control (dashSVD, arXiv:2404.09276)
+//!
+//! Under [`StopCriterion::Tolerance`] the engine runs *shifted* power
+//! iteration on `X̄ᵀX̄ − αI`: each sweep computes
+//! `Z = gram_sweep(W) − α·W` (the dynamic shift is a rank-K epilogue
+//! composing with the same fused Gram sweep, one source pass), takes a
+//! small deterministic SVD of the n×K `Z` to obtain Ritz estimates
+//! `λ̂_j = s_j(Z) + α` of the eigenvalues of `X̄ᵀX̄`, then updates the
+//! shift to `α ← (α + λ̂_K)/2` — half-way toward the smallest retained
+//! estimate, which damps the unwanted tail of the spectrum and
+//! accelerates convergence of the leading subspace. The loop stops as
+//! soon as `max_{j<k} |λ̂_j − λ̂_j'| ≤ pve_tol · ‖X̄‖²_F` between
+//! consecutive sweeps (the PVE accuracy criterion), or at `max_sweeps`.
+//! Ω is orthonormalized before the first sweep (an n×K Householder QR,
+//! no data pass) so the Ritz bound `λ̂_j ≤ λ_j` holds from sweep one
+//! and the shift can never overshoot the spectrum.
+//!
+//! Every stage is deterministic and accumulates in a fixed order, so
+//! the adaptive path inherits the crate-wide contract: factors are
+//! bit-identical across thread-pool sizes and streamed block sizes.
+//! [`ShiftedRsvd::factorize_with_report`] surfaces the sweeps actually
+//! used and the achieved PVE.
 
 use crate::linalg::{
     gemm, householder_qr, jacobi_svd, qr_rank1_update, sym_jacobi_eig, Dense, JacobiOpts,
@@ -52,7 +76,7 @@ use crate::rng::Rng;
 use crate::util::Result;
 
 use super::ops::colsums;
-use super::{Factorization, MatVecOps, SvdConfig};
+use super::{Factorization, MatVecOps, StopCriterion, SvdConfig};
 
 /// How the basis of the shifted sample matrix is computed (Alg. 1 L4-6).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -114,6 +138,23 @@ pub enum SmallSvdMethod {
     GramEig,
 }
 
+/// What the power-sweep loop of one factorization actually did —
+/// returned by [`ShiftedRsvd::factorize_with_report`] and surfaced
+/// through the coordinator's job results and `GET /metrics`.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct SweepReport {
+    /// Power sweeps executed. Equals `q` under
+    /// [`StopCriterion::FixedPower`]; decided at run time by the PVE
+    /// rule under [`StopCriterion::Tolerance`].
+    pub sweeps_used: usize,
+    /// Proportion of the shifted matrix's variance explained by the
+    /// retained k factors, `Σ_{j<k} s_j² / ‖X̄‖²_F`. Only computed by
+    /// the adaptive mode (it already paid the `‖X̄‖²_F` pass); `None`
+    /// under [`StopCriterion::FixedPower`], which keeps the legacy
+    /// pass budget untouched.
+    pub achieved_pve: Option<f64>,
+}
+
 /// The shifted randomized SVD engine.
 #[derive(Debug, Clone, Copy)]
 pub struct ShiftedRsvd {
@@ -135,6 +176,19 @@ impl ShiftedRsvd {
         mu: &[f64],
         rng: &mut dyn Rng,
     ) -> Result<Factorization> {
+        Ok(self.factorize_with_report(x, mu, rng)?.0)
+    }
+
+    /// Like [`ShiftedRsvd::factorize`], additionally reporting the
+    /// sweeps actually executed and (in adaptive mode) the achieved
+    /// PVE. [`StopCriterion::FixedPower`] runs are unchanged by the
+    /// report — same operation sequence, byte-identical factors.
+    pub fn factorize_with_report(
+        &self,
+        x: &dyn MatVecOps,
+        mu: &[f64],
+        rng: &mut dyn Rng,
+    ) -> Result<(Factorization, SweepReport)> {
         let (m, n) = x.shape();
         crate::ensure!(mu.len() == m, "mu length {} != m {}", mu.len(), m);
         let k = self.config.k;
@@ -146,16 +200,27 @@ impl ShiftedRsvd {
         let ones_n = vec![1.0; n];
 
         // ---- Stage 1+2: range finding (L2-11) -----------------------------
-        // Sampling + power schedule, dispatched on the pass policy. The
-        // Exact stages replay the original operation sequence verbatim,
-        // so streamed byte-identity is preserved.
+        // Sampling + power schedule, dispatched on the stop criterion
+        // and pass policy. The FixedPower stages replay the original
+        // operation sequence verbatim, so streamed byte-identity and
+        // the pre-redesign fixed-q factors are preserved.
         let omega = Dense::gaussian(n, kk, rng);
-        let q = match self.config.pass_policy {
-            PassPolicy::Exact => {
-                let q0 = self.exact_basis(x, mu, &omega, shifted, kk);
-                self.exact_power(x, mu, q0, &ones_n)
+        let (q, sweeps_used, fro2) = match self.config.stop {
+            StopCriterion::FixedPower { q: iters } => {
+                let basis = match self.config.pass_policy {
+                    PassPolicy::Exact => {
+                        let q0 = self.exact_basis(x, mu, &omega, shifted, kk);
+                        self.exact_power(x, mu, q0, &ones_n, iters)
+                    }
+                    PassPolicy::Fused => self.fused_range(x, mu, omega, shifted, iters),
+                };
+                (basis, iters, None)
             }
-            PassPolicy::Fused => self.fused_range(x, mu, omega, shifted),
+            StopCriterion::Tolerance { pve_tol, max_sweeps } => {
+                let (basis, sweeps, fro2) =
+                    self.adaptive_range(x, mu, omega, shifted, pve_tol, max_sweeps);
+                (basis, sweeps, Some(fro2))
+            }
         };
 
         // ---- Stage 3: project (L12) ---------------------------------------
@@ -187,11 +252,27 @@ impl ShiftedRsvd {
         };
 
         let u = gemm::matmul(&q, &u1); // m×K
-        Ok(Factorization {
-            u: u.truncate_cols(k),
-            s: s[..k].to_vec(),
-            v: v.truncate_cols(k),
-        })
+
+        // Achieved PVE from the final singular values of X̄: since
+        // s_j² are the eigenvalues of X̄ᵀX̄, Σ_{j<k} s_j² / ‖X̄‖²_F is
+        // exactly the proportion of variance the retained factors
+        // explain. Only the adaptive mode paid the fro² pass.
+        let achieved_pve = fro2.map(|f2| {
+            if f2 > 0.0 {
+                s[..k].iter().map(|v| v * v).sum::<f64>() / f2
+            } else {
+                0.0
+            }
+        });
+        let report = SweepReport { sweeps_used, achieved_pve };
+        Ok((
+            Factorization {
+                u: u.truncate_cols(k),
+                s: s[..k].to_vec(),
+                v: v.truncate_cols(k),
+            },
+            report,
+        ))
     }
 
     /// Exact sampling stage (L2-7): basis of `X̄Ω`, one source pass.
@@ -231,8 +312,15 @@ impl ShiftedRsvd {
 
     /// Exact power stage (L8-11): `Q ← qr(X̄·qr(X̄ᵀQ))`, two source
     /// passes per iteration.
-    fn exact_power(&self, x: &dyn MatVecOps, mu: &[f64], mut q: Dense, ones_n: &[f64]) -> Dense {
-        for _ in 0..self.config.power_iters {
+    fn exact_power(
+        &self,
+        x: &dyn MatVecOps,
+        mu: &[f64],
+        mut q: Dense,
+        ones_n: &[f64],
+        iters: usize,
+    ) -> Dense {
+        for _ in 0..iters {
             // Q' = qr(X̄ᵀQ) = qr(XᵀQ − 1(μᵀQ))
             let mtq = q.tmatvec(mu); // μᵀQ, length K
             let qp = householder_qr(&x.tmm_rank1(&q, ones_n, &mtq)).0;
@@ -248,19 +336,97 @@ impl ShiftedRsvd {
     /// factorization that touches no data), then one capture pass
     /// `Q = qr(X̄·W)`. Total `q + 1` source passes; with the projection
     /// stage the whole factorization does `q + 2` (vs `2 + 2q` Exact).
-    fn fused_range(&self, x: &dyn MatVecOps, mu: &[f64], omega: Dense, shifted: bool) -> Dense {
+    fn fused_range(
+        &self,
+        x: &dyn MatVecOps,
+        mu: &[f64],
+        omega: Dense,
+        shifted: bool,
+        iters: usize,
+    ) -> Dense {
         let mut w = omega; // n×K, the evolving right-side sample
-        for _ in 0..self.config.power_iters {
+        for _ in 0..iters {
             let z = x.gram_sweep(&w, mu);
             w = householder_qr(&z).0; // renormalize: no data pass
         }
+        self.capture(x, mu, &w, shifted)
+    }
+
+    /// Range capture shared by the fused and adaptive schedules:
+    /// `Q = qr(X̄·W)`, one source pass.
+    fn capture(&self, x: &dyn MatVecOps, mu: &[f64], w: &Dense, shifted: bool) -> Dense {
         let h = if shifted {
-            let colsum = colsums(&w);
-            x.mm_rank1(&w, mu, &colsum) // H = X̄·W, one pass
+            let colsum = colsums(w);
+            x.mm_rank1(w, mu, &colsum) // H = X̄·W, one pass
         } else {
-            x.mm(&w)
+            x.mm(w)
         };
         householder_qr(&h).0
+    }
+
+    /// dashSVD dynamic-shift range finding (arXiv:2404.09276) under
+    /// [`StopCriterion::Tolerance`]: shifted Gram sweeps
+    /// `Z = X̄ᵀ(X̄·W) − α·W` with the shift updated each sweep from the
+    /// current Ritz estimates, stopping when the per-eigenvalue
+    /// movement drops below `pve_tol·‖X̄‖²_F` or at `max_sweeps`.
+    /// Returns the captured basis, the sweeps executed, and `‖X̄‖²_F`.
+    ///
+    /// Pass budget: 1 (`sq_fro_shifted`) + sweeps (`gram_sweep`) +
+    /// 1 (capture) = sweeps + 2 before the projection stage.
+    fn adaptive_range(
+        &self,
+        x: &dyn MatVecOps,
+        mu: &[f64],
+        omega: Dense,
+        shifted: bool,
+        pve_tol: f64,
+        max_sweeps: usize,
+    ) -> (Dense, usize, f64) {
+        let k = self.config.k;
+        let fro2 = x.sq_fro_shifted(mu); // one source pass
+        // Orthonormalize Ω before the first sweep (n×K Householder QR,
+        // no data pass) so the Ritz values are bounded by the true
+        // spectrum and the shift can never overshoot it.
+        let mut w = householder_qr(&omega).0;
+        let mut alpha = 0.0_f64;
+        let mut prev: Option<Vec<f64>> = None;
+        let mut sweeps = 0usize;
+        while sweeps < max_sweeps {
+            let mut z = x.gram_sweep(&w, mu); // one source pass
+            if alpha != 0.0 {
+                // Dynamic shift: Z ← Z − α·W. A rank-K epilogue over
+                // resident n×K buffers — composes with the fused Gram
+                // sweep without touching the source again.
+                for (zv, wv) in z.data_mut().iter_mut().zip(w.data()) {
+                    *zv -= alpha * wv;
+                }
+            }
+            // Ritz step: the SVD of the n×K Z yields s_j(Z) and an
+            // orthonormal range basis in one deterministic kernel; the
+            // eigenvalue estimates of X̄ᵀX̄ are λ̂_j = s_j(Z) + α.
+            let (u, s, _) = jacobi_svd(&z, JacobiOpts::default());
+            sweeps += 1;
+            w = u; // already orthonormal — replaces the QR renorm
+            let lam: Vec<f64> = s.iter().take(k).map(|&v| v + alpha).collect();
+            let converged = fro2 <= 0.0
+                || prev.as_ref().is_some_and(|p| {
+                    lam.iter()
+                        .zip(p)
+                        .map(|(a, b)| (a - b).abs())
+                        .fold(0.0, f64::max)
+                        <= pve_tol * fro2
+                });
+            prev = Some(lam);
+            if converged {
+                break;
+            }
+            // α ← (α + λ̂_K)/2 = α + s_K(Z)/2: half-way toward the
+            // smallest retained estimate (the dashSVD update).
+            if let Some(&tail) = s.last() {
+                alpha += tail / 2.0;
+            }
+        }
+        (self.capture(x, mu, &w, shifted), sweeps, fro2)
     }
 
     /// Convenience: factorize the mean-centered matrix (μ = row means) —
@@ -292,7 +458,7 @@ mod tests {
         let x = uniform(50, 300, 0);
         let mu = x.row_means();
         let xbar = x.subtract_column(&mu);
-        let cfg = SvdConfig { k: 8, oversample: 8, power_iters: 2, ..Default::default() };
+        let cfg = SvdConfig::paper(8).with_fixed_power(2);
         let mut rng = Xoshiro256pp::seed_from_u64(1);
         let f = ShiftedRsvd::new(cfg).factorize(&x, &mu, &mut rng).unwrap();
         let err = fro_diff(&f.reconstruct(), &xbar);
@@ -303,7 +469,7 @@ mod tests {
     #[test]
     fn zero_mu_is_plain_rsvd() {
         let x = uniform(40, 120, 2);
-        let cfg = SvdConfig { k: 6, oversample: 6, power_iters: 2, ..Default::default() };
+        let cfg = SvdConfig::paper(6).with_fixed_power(2);
         let mut rng = Xoshiro256pp::seed_from_u64(3);
         let f = ShiftedRsvd::new(cfg)
             .factorize(&x, &vec![0.0; 40], &mut rng)
@@ -327,7 +493,7 @@ mod tests {
             let cfg = SvdConfig {
                 k: 6,
                 oversample: 6,
-                power_iters: 2,
+                stop: StopCriterion::FixedPower { q: 2 },
                 basis,
                 ..Default::default()
             };
@@ -346,7 +512,7 @@ mod tests {
             let cfg = SvdConfig {
                 k: 5,
                 oversample: 5,
-                power_iters: 1,
+                stop: StopCriterion::FixedPower { q: 1 },
                 small_svd: method,
                 ..Default::default()
             };
@@ -375,7 +541,7 @@ mod tests {
         let sp = Csr::random(40, 200, 0.05, &mut rng, |r| r.next_uniform() + 0.5);
         let de = sp.to_dense();
         let mu = MatVecOps::row_means(&sp);
-        let cfg = SvdConfig { k: 5, oversample: 5, power_iters: 1, ..Default::default() };
+        let cfg = SvdConfig::paper(5).with_fixed_power(1);
         let f_sp = ShiftedRsvd::new(cfg)
             .factorize(&sp, &mu, &mut Xoshiro256pp::seed_from_u64(9))
             .unwrap();
@@ -394,7 +560,7 @@ mod tests {
         let x = uniform(30, 100, 10);
         let mu = x.row_means();
         let xbar = x.subtract_column(&mu);
-        let cfg = SvdConfig { k: 5, oversample: 5, power_iters: 1, ..Default::default() };
+        let cfg = SvdConfig::paper(5).with_fixed_power(1);
         let f_implicit = ShiftedRsvd::new(cfg)
             .factorize(&x, &mu, &mut Xoshiro256pp::seed_from_u64(11))
             .unwrap();
@@ -416,13 +582,9 @@ mod tests {
         let xbar = x.subtract_column(&mu);
         let opt = optimal_residual(&xbar, 8);
         for q in [1usize, 2] {
-            let cfg = SvdConfig {
-                k: 8,
-                oversample: 8,
-                power_iters: q,
-                pass_policy: PassPolicy::Fused,
-                ..Default::default()
-            };
+            let cfg = SvdConfig::paper(8)
+                .with_fixed_power(q)
+                .with_pass_policy(PassPolicy::Fused);
             let mut rng = Xoshiro256pp::seed_from_u64(15);
             let f = ShiftedRsvd::new(cfg).factorize(&x, &mu, &mut rng).unwrap();
             let err = fro_diff(&f.reconstruct(), &xbar);
@@ -437,13 +599,7 @@ mod tests {
         let x = uniform(40, 120, 16);
         let mu = x.row_means();
         let run = |pass_policy| {
-            let cfg = SvdConfig {
-                k: 5,
-                oversample: 5,
-                power_iters: 0,
-                pass_policy,
-                ..Default::default()
-            };
+            let cfg = SvdConfig::paper(5).with_pass_policy(pass_policy);
             ShiftedRsvd::new(cfg)
                 .factorize(&x, &mu, &mut Xoshiro256pp::seed_from_u64(17))
                 .unwrap()
@@ -457,6 +613,81 @@ mod tests {
             e.s.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
             f.s.iter().map(|v| v.to_bits()).collect::<Vec<_>>()
         );
+    }
+
+    #[test]
+    fn fixed_power_report_is_static() {
+        let x = uniform(30, 100, 20);
+        let cfg = SvdConfig::paper(5).with_fixed_power(2);
+        let (_, rep) = ShiftedRsvd::new(cfg)
+            .factorize_with_report(&x, &x.row_means(), &mut Xoshiro256pp::seed_from_u64(21))
+            .unwrap();
+        assert_eq!(rep, SweepReport { sweeps_used: 2, achieved_pve: None });
+    }
+
+    #[test]
+    fn adaptive_tolerance_is_accurate_and_reports() {
+        let x = uniform(50, 300, 22);
+        let mu = x.row_means();
+        let xbar = x.subtract_column(&mu);
+        let cfg = SvdConfig::paper(8).with_tolerance(1e-4, 16);
+        let (f, rep) = ShiftedRsvd::new(cfg)
+            .factorize_with_report(&x, &mu, &mut Xoshiro256pp::seed_from_u64(23))
+            .unwrap();
+        let err = fro_diff(&f.reconstruct(), &xbar);
+        let opt = optimal_residual(&xbar, 8);
+        assert!(err <= 1.15 * opt, "err {err} vs opt {opt}");
+        assert!(rep.sweeps_used >= 1 && rep.sweeps_used <= 16, "{rep:?}");
+        let pve = rep.achieved_pve.expect("adaptive mode reports PVE");
+        assert!(pve > 0.0 && pve <= 1.0 + 1e-12, "pve {pve}");
+    }
+
+    #[test]
+    fn adaptive_converges_before_the_sweep_ceiling() {
+        // A uniform random matrix has a rapidly flattening tail, so a
+        // coarse tolerance must stop well before the cap — the whole
+        // point of accuracy control over a fixed q.
+        let x = uniform(60, 400, 24);
+        let mu = x.row_means();
+        let cfg = SvdConfig::paper(6).with_tolerance(1e-2, 32);
+        let (_, rep) = ShiftedRsvd::new(cfg)
+            .factorize_with_report(&x, &mu, &mut Xoshiro256pp::seed_from_u64(25))
+            .unwrap();
+        assert!(rep.sweeps_used < 32, "never converged: {rep:?}");
+    }
+
+    #[test]
+    fn adaptive_respects_max_sweeps_ceiling() {
+        let x = uniform(30, 90, 26);
+        let mu = x.row_means();
+        let cfg = SvdConfig::paper(4).with_tolerance(0.0, 3);
+        // pve_tol = 0 can only stop on an exact Ritz repeat; the cap
+        // must bound the loop regardless.
+        let (_, rep) = ShiftedRsvd::new(cfg)
+            .factorize_with_report(&x, &mu, &mut Xoshiro256pp::seed_from_u64(27))
+            .unwrap();
+        assert!(rep.sweeps_used <= 3, "{rep:?}");
+    }
+
+    #[test]
+    fn adaptive_ignores_pass_policy() {
+        // Tolerance mode always runs the fused Gram-sweep schedule;
+        // the Exact/Fused knob must not change the factors.
+        let x = uniform(40, 150, 28);
+        let mu = x.row_means();
+        let run = |policy| {
+            let cfg = SvdConfig::paper(5)
+                .with_tolerance(1e-3, 8)
+                .with_pass_policy(policy);
+            ShiftedRsvd::new(cfg)
+                .factorize(&x, &mu, &mut Xoshiro256pp::seed_from_u64(29))
+                .unwrap()
+        };
+        let a = run(PassPolicy::Exact);
+        let b = run(PassPolicy::Fused);
+        let bits = |d: &Dense| d.data().iter().map(|v| v.to_bits()).collect::<Vec<_>>();
+        assert_eq!(bits(&a.u), bits(&b.u));
+        assert_eq!(bits(&a.v), bits(&b.v));
     }
 
     #[test]

@@ -51,7 +51,7 @@ fn sparse_input() -> Csr {
 #[test]
 fn dense_factorization_identical_for_pool_sizes_1_2_8() {
     let x = dense_input();
-    let cfg = SvdConfig { k: 12, oversample: 12, power_iters: 1, ..Default::default() };
+    let cfg = SvdConfig::paper(12).with_fixed_power(1);
     let run = |threads: usize| -> Factorization {
         let pool = Arc::new(ThreadPool::new(threads));
         with_pool(&pool, || {
@@ -74,7 +74,7 @@ fn streamed_factorization_identical_for_pool_sizes_1_2_8() {
     // sweeps reuse the same pool-aware kernels (full parity suite with
     // block-size sweeps lives in tests/stream.rs).
     let x = dense_input();
-    let cfg = SvdConfig { k: 12, oversample: 12, power_iters: 1, ..Default::default() };
+    let cfg = SvdConfig::paper(12).with_fixed_power(1);
     let run = |threads: usize| -> Factorization {
         let pool = Arc::new(ThreadPool::new(threads));
         with_pool(&pool, || {
@@ -98,7 +98,7 @@ fn streamed_factorization_identical_for_pool_sizes_1_2_8() {
 #[test]
 fn sparse_factorization_identical_for_pool_sizes_1_2_8() {
     let x = sparse_input();
-    let cfg = SvdConfig { k: 10, oversample: 10, power_iters: 1, ..Default::default() };
+    let cfg = SvdConfig::paper(10).with_fixed_power(1);
     let run = |threads: usize| -> Factorization {
         let pool = Arc::new(ThreadPool::new(threads));
         with_pool(&pool, || {
@@ -150,7 +150,7 @@ fn coordinator_factorizations_identical_across_pool_sizes() {
         let mut rng = Xoshiro256pp::seed_from_u64(0xC0DE);
         JobSpec {
             input: MatrixInput::Dense(Dense::from_fn(120, 700, |_, _| rng.next_uniform())),
-            config: SvdConfig { k: 8, oversample: 8, power_iters: 1, ..Default::default() },
+            config: SvdConfig::paper(8).with_fixed_power(1),
             shift: ShiftSpec::MeanCenter,
             engine: EnginePreference::Native,
             seed: 99,

@@ -114,7 +114,7 @@ fn prop_shifted_factorization_identity() {
         let x = Dense::from_fn(m, n, |_, _| g.uniform());
         let mu = x.row_means();
         let k = g.usize_in(1, (m / 2).max(1));
-        let cfg = SvdConfig { k, oversample: k.max(2), power_iters: 1, ..Default::default() };
+        let cfg = SvdConfig { k, oversample: k.max(2), ..Default::default() }.with_fixed_power(1);
         let seed = g.case_seed;
         let f1 = ShiftedRsvd::new(cfg)
             .factorize(&x, &mu, &mut srsvd::rng::Xoshiro256pp::seed_from_u64(seed))
@@ -248,7 +248,7 @@ fn prop_pca_errors_nonnegative_and_roughly_monotone() {
         let x = Dense::from_fn(m, n, |_, _| g.uniform());
         let seed = g.case_seed;
         let mse_at = |k: usize| -> Result<f64, String> {
-            let cfg = SvdConfig { k, oversample: k, power_iters: 2, ..Default::default() };
+            let cfg = SvdConfig::paper(k).with_fixed_power(2);
             let pca = srsvd::svd::Pca::fit(
                 &x,
                 cfg,

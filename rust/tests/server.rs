@@ -199,8 +199,7 @@ fn fused_pass_policy_round_trips_over_the_wire() {
         generator_input(60, 40, Distribution::Uniform, 2, Some(16), None),
         4,
     );
-    req.config.power_iters = 1;
-    req.config.pass_policy = PassPolicy::Fused;
+    req.config = req.config.with_fixed_power(1).with_pass_policy(PassPolicy::Fused);
     req.engine = EnginePreference::Native;
     req.seed = 21;
     let wire = client.submit_wait(&req).unwrap();
@@ -211,13 +210,7 @@ fn fused_pass_policy_round_trips_over_the_wire() {
     let local = coord
         .submit_blocking(JobSpec {
             input: MatrixInput::streamed(src, &stream_cfg),
-            config: SvdConfig {
-                k: 4,
-                oversample: 4,
-                power_iters: 1,
-                pass_policy: PassPolicy::Fused,
-                ..Default::default()
-            },
+            config: SvdConfig::paper(4).with_fixed_power(1).with_pass_policy(PassPolicy::Fused),
             shift: ShiftSpec::MeanCenter,
             engine: EnginePreference::Native,
             seed: 21,
@@ -340,7 +333,7 @@ fn queue_saturation_returns_503_and_drains() {
         generator_input(300, 500, Distribution::Uniform, 3, None, None),
         16,
     );
-    req.config.power_iters = 2;
+    req.config = req.config.with_fixed_power(2);
     req.engine = EnginePreference::Native;
 
     let mut queued = Vec::new();
@@ -456,6 +449,58 @@ fn malformed_requests_get_400_not_a_panic() {
     server.shutdown();
 }
 
+/// `engine=artifact` submits the router must refuse come back as 400s
+/// carrying the router's *specific* reason string — the client learns
+/// which knob to change, not a generic "invalid job".
+#[test]
+fn artifact_only_refusals_surface_router_reason_as_400() {
+    let (_coord, server) = start_service(1, 16, 2);
+    let mut client = client_for(&server);
+
+    // Fused pass policy is native-only.
+    let mut rng = Xoshiro256pp::seed_from_u64(9);
+    let x = Dense::from_fn(10, 20, |_, _| rng.next_uniform());
+    let mut req = JobRequest::new(dense_input(&x), 2);
+    req.engine = EnginePreference::ArtifactOnly;
+    req.config = req.config.with_pass_policy(PassPolicy::Fused);
+    let text = format!("{}", client.submit(&req).unwrap_err());
+    assert!(text.contains("400"), "{text}");
+    assert!(text.contains("pass_policy=fused"), "{text}");
+
+    // A server-side file is a streamed input: never an artifact operand.
+    let gen = GeneratorSource::new(12, 8, Distribution::Uniform, 2).unwrap();
+    let path = std::env::temp_dir().join("srsvd_test_server_artifact_file.bin");
+    let _src: FileSource = spill_to_file(&gen, &path, 4).unwrap();
+    let mut req = JobRequest::new(file_input(path.to_str().unwrap(), None, None), 2);
+    req.engine = EnginePreference::ArtifactOnly;
+    let text = format!("{}", client.submit(&req).unwrap_err());
+    assert!(text.contains("400"), "{text}");
+    assert!(text.contains("streamed"), "{text}");
+
+    // The adaptive stop criterion is native-only too.
+    let mut req = JobRequest::new(dense_input(&x), 2);
+    req.engine = EnginePreference::ArtifactOnly;
+    req.config = req.config.with_tolerance(1e-3, 8);
+    let text = format!("{}", client.submit(&req).unwrap_err());
+    assert!(text.contains("400"), "{text}");
+    assert!(text.contains("pve_tol"), "{text}");
+
+    // The service is unharmed: the same jobs run fine on the native
+    // engine, and the adaptive one reports its sweep usage.
+    let mut req = JobRequest::new(dense_input(&x), 2);
+    req.engine = EnginePreference::Native;
+    req.config = req.config.with_tolerance(1e-3, 8);
+    let wire = client.submit_wait(&req).unwrap();
+    let out = wire.outcome.expect("adaptive native job failed");
+    let sweeps = out.sweeps_used.expect("result must carry sweeps_used");
+    assert!((1..=8).contains(&(sweeps as usize)), "sweeps {sweeps}");
+    let pve = out.achieved_pve.expect("adaptive result must carry achieved_pve");
+    assert!(pve > 0.0 && pve <= 1.0, "pve {pve}");
+
+    let _ = std::fs::remove_file(&path);
+    server.shutdown();
+}
+
 #[test]
 fn queued_jobs_are_claimed_by_blocking_get() {
     let (_coord, server) = start_service(1, 16, 2);
@@ -466,7 +511,7 @@ fn queued_jobs_are_claimed_by_blocking_get() {
         generator_input(300, 500, Distribution::Uniform, 4, None, None),
         16,
     );
-    slow.config.power_iters = 2;
+    slow.config = slow.config.with_fixed_power(2);
     let SubmitOutcome::Queued(id) = client.submit(&slow).unwrap() else {
         panic!("wait=false submit must queue");
     };
@@ -506,7 +551,7 @@ fn graceful_shutdown_drains_in_flight_requests() {
             generator_input(500, 600, Distribution::Uniform, 8, None, None),
             20,
         );
-        req.config.power_iters = 3;
+        req.config = req.config.with_fixed_power(3);
         req.engine = EnginePreference::Native;
         client.submit_wait(&req)
     });

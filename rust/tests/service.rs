@@ -87,7 +87,7 @@ fn artifact_matches_native_engine_same_omega() {
 
     // Native run with the SAME omega: replicate by seeding identically.
     let mut rng2 = Xoshiro256pp::seed_from_u64(4);
-    let cfg = SvdConfig { k: 10, oversample: 10, power_iters: 1, ..Default::default() };
+    let cfg = SvdConfig::paper(10).with_fixed_power(1);
     let nat = srsvd::svd::ShiftedRsvd::new(cfg)
         .factorize(&x, &mu, &mut rng2)
         .unwrap();

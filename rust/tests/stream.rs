@@ -46,7 +46,7 @@ fn input_matrix() -> Dense {
 }
 
 fn cfg() -> SvdConfig {
-    SvdConfig { k: 12, oversample: 12, power_iters: 1, ..Default::default() }
+    SvdConfig::paper(12).with_fixed_power(1)
 }
 
 fn factorize(x: &dyn srsvd::svd::MatVecOps, seed: u64) -> Factorization {
@@ -261,13 +261,7 @@ fn pass_counters_exact_2_plus_2q_fused_at_most_q_plus_2() {
     let payload = (150 * 900 * 8) as u64;
     for q in [0usize, 1, 2] {
         let run = |pass_policy| {
-            let cfg = SvdConfig {
-                k: 8,
-                oversample: 8,
-                power_iters: q,
-                pass_policy,
-                ..Default::default()
-            };
+            let cfg = SvdConfig::paper(8).with_fixed_power(q).with_pass_policy(pass_policy);
             let s = Streamed::with_block_rows(InMemorySource::new(x.clone()), 64);
             let mut rng = Xoshiro256pp::seed_from_u64(7);
             ShiftedRsvd::new(cfg)
@@ -296,13 +290,7 @@ fn pass_counters_exact_2_plus_2q_fused_at_most_q_plus_2() {
 /// residual (the `rsvd.rs`-style harness bound) on every source kind.
 #[test]
 fn fused_policy_accuracy_on_all_source_kinds() {
-    let cfg = SvdConfig {
-        k: 8,
-        oversample: 8,
-        power_iters: 2,
-        pass_policy: PassPolicy::Fused,
-        ..Default::default()
-    };
+    let cfg = SvdConfig::paper(8).with_fixed_power(2).with_pass_policy(PassPolicy::Fused);
 
     // One uniform target shared by the dense / in-memory / generator /
     // file paths (the generator is the ground truth for all four).
@@ -389,4 +377,116 @@ fn coordinator_surfaces_stream_pass_and_byte_counters() {
     r.outcome.expect("job");
     assert_eq!(coord.metrics().stream_passes, 5);
     coord.shutdown();
+}
+
+/// The redesigned stopping criterion, adaptive mode: tolerance-driven
+/// factorizations are as deterministic as fixed-q ones — byte-identical
+/// across thread-pool sizes (1/2/8), block sizes, and prefetch settings
+/// (the dynamic-shift loop runs entirely on the order-stable Gram
+/// sweep, so the sweep count itself cannot vary either).
+#[test]
+fn adaptive_tolerance_is_bit_identical_across_pools_and_blocks() {
+    let x = input_matrix();
+    let cfg = SvdConfig::paper(12).with_tolerance(1e-3, 16);
+    let run = |ops: &dyn MatVecOps| {
+        let mut rng = Xoshiro256pp::seed_from_u64(42);
+        ShiftedRsvd::new(cfg)
+            .factorize_mean_centered(ops, &mut rng)
+            .expect("factorize")
+    };
+    let run_pool = |threads: usize| {
+        let pool = Arc::new(ThreadPool::new(threads));
+        with_pool(&pool, || {
+            let base = run(&x);
+            for block_rows in [1usize, 7, 64, 150] {
+                for prefetch in [true, false] {
+                    let s = Streamed::with_block_rows(InMemorySource::new(x.clone()), block_rows)
+                        .with_prefetch(prefetch);
+                    assert_identical(
+                        &base,
+                        &run(&s),
+                        &format!("adaptive bl={block_rows}, pool={threads}, prefetch={prefetch}"),
+                    );
+                }
+            }
+            base
+        })
+    };
+    let base = run_pool(1);
+    for threads in [2, 8] {
+        assert_identical(&base, &run_pool(threads), &format!("adaptive pool {threads}"));
+    }
+}
+
+/// `with_fixed_power(q)` is the drop-in replacement for the deprecated
+/// `with_power(q)`: same criterion, byte-identical factors, so existing
+/// fixed-q clients migrate with zero numerical drift.
+#[test]
+fn fixed_power_reproduces_pre_redesign_factors_byte_for_byte() {
+    let x = input_matrix();
+    let new = {
+        let mut rng = Xoshiro256pp::seed_from_u64(42);
+        ShiftedRsvd::new(SvdConfig::paper(12).with_fixed_power(1))
+            .factorize_mean_centered(&x, &mut rng)
+            .expect("new api")
+    };
+    #[allow(deprecated)]
+    let old = {
+        let mut rng = Xoshiro256pp::seed_from_u64(42);
+        ShiftedRsvd::new(SvdConfig::paper(12).with_power(1))
+            .factorize_mean_centered(&x, &mut rng)
+            .expect("deprecated shim")
+    };
+    assert_identical(&new, &old, "deprecated with_power shim");
+}
+
+/// Adaptive pass budget on streamed sources: `SourceStats.passes` is
+/// exactly `sweeps_used + 3` — one ‖X̄‖²_F pass, one Gram sweep per
+/// power sweep, one capture, one projection — on every source kind
+/// (explicit μ, so no mean-resolve pass).
+#[test]
+fn adaptive_pass_counters_match_reported_sweeps_on_all_source_kinds() {
+    let cfg = SvdConfig::paper(8).with_tolerance(1e-3, 16);
+
+    let gen = GeneratorSource::new(120, 400, Distribution::Uniform, 3).expect("gen");
+    let x = gen.materialize().expect("materialize");
+    let mu = x.row_means();
+    let path = std::env::temp_dir().join("srsvd_test_stream_adaptive_passes.bin");
+    let file: FileSource = spill_to_file(&gen, &path, 33).expect("spill");
+
+    let s = Streamed::with_block_rows(InMemorySource::new(x.clone()), 23);
+    let mut rng = Xoshiro256pp::seed_from_u64(11);
+    let (_, mem_rep) = ShiftedRsvd::new(cfg)
+        .factorize_with_report(&s, &mu, &mut rng)
+        .expect("stream-mem");
+    assert!(
+        mem_rep.sweeps_used >= 1 && mem_rep.sweeps_used <= 16,
+        "sweeps {}",
+        mem_rep.sweeps_used
+    );
+    let pve = mem_rep.achieved_pve.expect("adaptive mode reports a pve");
+    assert!(pve > 0.0 && pve <= 1.0, "pve {pve}");
+    assert_eq!(s.stats().passes as usize, mem_rep.sweeps_used + 3, "stream-mem");
+
+    // Same matrix spilled to a file: same sweep count, same pass budget.
+    let s = Streamed::with_block_rows(file, 41);
+    let mut rng = Xoshiro256pp::seed_from_u64(11);
+    let (_, file_rep) = ShiftedRsvd::new(cfg)
+        .factorize_with_report(&s, &mu, &mut rng)
+        .expect("stream-file");
+    assert_eq!(file_rep.sweeps_used, mem_rep.sweeps_used, "file vs mem sweeps");
+    assert_eq!(s.stats().passes as usize, file_rep.sweeps_used + 3, "stream-file");
+    let _ = std::fs::remove_file(&path);
+
+    // CSR rows, against its own sparse target.
+    let mut rng = Xoshiro256pp::seed_from_u64(5);
+    let sp = Csr::random(100, 300, 0.15, &mut rng, |r| r.next_uniform() + 0.2);
+    let mu_sp = sp.to_dense().row_means();
+    let s = Streamed::with_block_rows(CsrRowSource::new(sp), 19);
+    let mut rng = Xoshiro256pp::seed_from_u64(13);
+    let (_, csr_rep) = ShiftedRsvd::new(cfg)
+        .factorize_with_report(&s, &mu_sp, &mut rng)
+        .expect("stream-csr");
+    assert!(csr_rep.sweeps_used >= 1);
+    assert_eq!(s.stats().passes as usize, csr_rep.sweeps_used + 3, "stream-csr");
 }
