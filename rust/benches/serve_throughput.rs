@@ -73,6 +73,9 @@ fn main() {
             &ServerConfig {
                 addr: "127.0.0.1:0".into(),
                 workers,
+                // Every client submits the same spec; the cold legs must
+                // measure the coordinator, not the result cache.
+                cache_entries: 0,
                 ..Default::default()
             },
             StreamConfig::default(),
@@ -115,6 +118,7 @@ fn main() {
             format!("{rate:.1}"),
         ]);
         rows.push(Json::obj(vec![
+            ("case", Json::str("cold")),
             ("conn_workers", Json::num(workers as f64)),
             ("clients", Json::num(clients as f64)),
             ("jobs", Json::num(total as f64)),
@@ -124,6 +128,66 @@ fn main() {
         ]));
         let metrics = coord.metrics();
         println!("workers={workers}: {metrics}");
+        server.shutdown();
+    }
+
+    // Warm-cache leg: one cold fill, then the identical spec re-submitted
+    // against the content-addressed result cache — responses replay the
+    // cold run's exact bytes without touching the coordinator.
+    {
+        let warm_jobs = if quick { 16 } else { 200 };
+        let coord = Arc::new(
+            Coordinator::start(CoordinatorConfig {
+                native_workers: 4,
+                queue_capacity: 256,
+                artifact_dir: None,
+                pool_threads: Some(1),
+            })
+            .unwrap(),
+        );
+        let server = Server::bind(
+            Arc::clone(&coord),
+            &ServerConfig { addr: "127.0.0.1:0".into(), workers: 2, ..Default::default() },
+            StreamConfig::default(),
+        )
+        .unwrap();
+        let mut client = Client::connect(&server.local_addr().to_string()).unwrap();
+        let mut req = JobRequest::new(dense_input(&x), k);
+        req.config = cfg;
+        req.engine = EnginePreference::Native;
+        req.seed = seed ^ 0xFA;
+        let cold = client.submit_wait(&req).unwrap().outcome.expect("cold fill failed");
+        assert!(identical(&baseline, &cold), "warm leg: cold fill diverged");
+
+        let timer = Timer::start();
+        for j in 0..warm_jobs {
+            let out = client.submit_wait(&req).unwrap().outcome.expect("warm job failed");
+            assert!(identical(&baseline, &out), "warm job {j}: cached factors diverged");
+        }
+        let wall = timer.elapsed_secs();
+        let rate = warm_jobs as f64 / wall;
+        let metrics = client.metrics().unwrap();
+        let hits = metrics.get("cache_hits").unwrap().as_u64().unwrap();
+        let native = metrics.get("native_jobs").unwrap().as_u64().unwrap();
+        assert!(hits >= warm_jobs as u64, "warm jobs must be served from the cache");
+        t.row(&[
+            "2 (warm cache)".to_string(),
+            warm_jobs.to_string(),
+            format!("{wall:.3}s"),
+            format!("{rate:.1}"),
+        ]);
+        rows.push(Json::obj(vec![
+            ("case", Json::str("warm_cache")),
+            ("conn_workers", Json::num(2.0)),
+            ("clients", Json::num(1.0)),
+            ("jobs", Json::num(warm_jobs as f64)),
+            ("wall_s", Json::num(wall)),
+            ("jobs_per_s", Json::num(rate)),
+            ("cache_hits", Json::num(hits as f64)),
+            ("native_jobs", Json::num(native as f64)),
+            ("bit_identical", Json::Bool(true)),
+        ]));
+        println!("warm cache: {rate:.1} jobs/s ({hits} hits, {native} native jobs)");
         server.shutdown();
     }
     print!("{}", t.render());

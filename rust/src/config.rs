@@ -28,6 +28,9 @@
 //! max_body_mb       = 64               # request body cap (413 beyond)
 //! workers           = 4                # HTTP connection workers
 //! request_timeout_s = 30               # per-request / blocking-GET timeout
+//! result_ttl_s      = 600              # unclaimed parked-result lifetime
+//! cache_dir         = off              # persist the result cache here (off|none = memory-only)
+//! cache_entries     = 256              # result-cache capacity (0 disables caching)
 //!
 //! [svd]
 //! k           = 10
@@ -162,7 +165,8 @@ impl RawConfig {
     }
 
     /// Build the network service config (defaults where unset):
-    /// `[server] addr` / `max_body_mb` / `workers` / `request_timeout_s`.
+    /// `[server] addr` / `max_body_mb` / `workers` / `request_timeout_s`
+    /// / `result_ttl_s` / `cache_dir` / `cache_entries`.
     pub fn server(&self) -> Result<crate::server::ServerConfig> {
         let mut cfg = crate::server::ServerConfig::default();
         if let Some(addr) = self.get("server", "addr") {
@@ -176,6 +180,17 @@ impl RawConfig {
         }
         if let Some(t) = self.get_usize("server", "request_timeout_s")? {
             cfg.request_timeout_s = (t as u64).max(1);
+        }
+        if let Some(t) = self.get_usize("server", "result_ttl_s")? {
+            cfg.result_ttl_s = (t as u64).max(1);
+        }
+        match self.get("server", "cache_dir") {
+            Some("off") | Some("none") => cfg.cache_dir = None,
+            Some(dir) => cfg.cache_dir = Some(PathBuf::from(dir)),
+            None => {}
+        }
+        if let Some(c) = self.get_usize("server", "cache_entries")? {
+            cfg.cache_entries = c;
         }
         Ok(cfg)
     }
@@ -458,6 +473,20 @@ small_svd = gram
         // Non-integer errors.
         let raw = RawConfig::parse("[server]\nworkers = many\n").unwrap();
         assert!(raw.server().is_err());
+        // Lifecycle/cache knobs (mirrors [service] artifact_dir: off|none
+        // disables persistence; cache_entries = 0 disables caching).
+        let raw = RawConfig::parse(
+            "[server]\nresult_ttl_s = 45\ncache_dir = /tmp/srsvd-cache\ncache_entries = 0\n",
+        )
+        .unwrap();
+        let s = raw.server().unwrap();
+        assert_eq!(s.result_ttl_s, 45);
+        assert_eq!(s.cache_dir, Some(PathBuf::from("/tmp/srsvd-cache")));
+        assert_eq!(s.cache_entries, 0);
+        let raw = RawConfig::parse("[server]\ncache_dir = off\n").unwrap();
+        assert_eq!(raw.server().unwrap().cache_dir, None);
+        let raw = RawConfig::parse("[server]\nresult_ttl_s = 0\n").unwrap();
+        assert_eq!(raw.server().unwrap().result_ttl_s, 1);
     }
 
     #[test]

@@ -45,6 +45,18 @@ pub struct Metrics {
     pub queue_ns: AtomicU64,
     /// Max single-job execution time, nanoseconds.
     pub max_exec_ns: AtomicU64,
+    /// Jobs cancelled via `DELETE /v1/jobs/{id}` (or evicted while
+    /// still running).
+    pub cancelled: AtomicU64,
+    /// Pending-map entries evicted by the server's result TTL sweep.
+    pub evicted: AtomicU64,
+    /// Submits served from the content-addressed result cache (the
+    /// coordinator never sees these).
+    pub cache_hits: AtomicU64,
+    /// Cacheable submits that missed the result cache.
+    pub cache_misses: AtomicU64,
+    /// Rendered result bytes currently resident in the result cache.
+    pub cache_bytes: AtomicU64,
 }
 
 impl Metrics {
@@ -114,6 +126,11 @@ impl Metrics {
                 0.0
             },
             max_exec_s: self.max_exec_ns.load(Ordering::Relaxed) as f64 / 1e9,
+            cancelled: self.cancelled.load(Ordering::Relaxed),
+            evicted: self.evicted.load(Ordering::Relaxed),
+            cache_hits: self.cache_hits.load(Ordering::Relaxed),
+            cache_misses: self.cache_misses.load(Ordering::Relaxed),
+            cache_bytes: self.cache_bytes.load(Ordering::Relaxed),
             pool_threads: 0,
             pool_parallel_ops: 0,
             pool_serial_ops: 0,
@@ -165,6 +182,16 @@ pub struct MetricsSnapshot {
     pub mean_queue_s: f64,
     /// Longest single-job execution, seconds.
     pub max_exec_s: f64,
+    /// Jobs cancelled via `DELETE /v1/jobs/{id}` (or evicted running).
+    pub cancelled: u64,
+    /// Pending-map entries evicted by the server's result TTL sweep.
+    pub evicted: u64,
+    /// Submits served straight from the content-addressed result cache.
+    pub cache_hits: u64,
+    /// Cacheable submits that missed the result cache.
+    pub cache_misses: u64,
+    /// Rendered result bytes resident in the result cache.
+    pub cache_bytes: u64,
     /// Size of the shared linalg thread pool.
     pub pool_threads: usize,
     /// Linalg operations the pool dispatched across threads.
@@ -184,7 +211,9 @@ impl std::fmt::Display for MetricsSnapshot {
              pool[threads={} par_ops={} serial_ops={} chunks={}] \
              stream[passes={} read={}B] \
              http[accepted={} rejected={} in={}B out={}B] \
-             sweeps[used={} mean_pve={:.4}]",
+             sweeps[used={} mean_pve={:.4}] \
+             cache[hits={} misses={} bytes={}B] \
+             lifecycle[cancelled={} evicted={}]",
             self.submitted,
             self.completed,
             self.failed,
@@ -207,6 +236,11 @@ impl std::fmt::Display for MetricsSnapshot {
             self.http_bytes_out,
             self.sweeps_used,
             self.mean_achieved_pve,
+            self.cache_hits,
+            self.cache_misses,
+            self.cache_bytes,
+            self.cancelled,
+            self.evicted,
         )
     }
 }
@@ -244,6 +278,11 @@ mod tests {
         m.record_sweeps(2, None);
         m.record_sweeps(3, Some(0.75));
         m.record_sweeps(5, Some(0.25));
+        m.cancelled.fetch_add(2, Ordering::Relaxed);
+        m.evicted.fetch_add(1, Ordering::Relaxed);
+        m.cache_hits.fetch_add(7, Ordering::Relaxed);
+        m.cache_misses.fetch_add(3, Ordering::Relaxed);
+        m.cache_bytes.fetch_add(512, Ordering::Relaxed);
         let s = m.snapshot();
         assert_eq!(s.queue_depth, 2);
         assert_eq!(s.in_flight, 1);
@@ -258,5 +297,12 @@ mod tests {
         assert!(text.contains("stream[passes=4 read=4096B]"), "{text}");
         assert!(text.contains("http[accepted=5 rejected=1 in=100B out=300B]"), "{text}");
         assert!(text.contains("sweeps[used=10 mean_pve=0.5000]"), "{text}");
+        assert_eq!(s.cancelled, 2);
+        assert_eq!(s.evicted, 1);
+        assert_eq!(s.cache_hits, 7);
+        assert_eq!(s.cache_misses, 3);
+        assert_eq!(s.cache_bytes, 512);
+        assert!(text.contains("cache[hits=7 misses=3 bytes=512B]"), "{text}");
+        assert!(text.contains("lifecycle[cancelled=2 evicted=1]"), "{text}");
     }
 }

@@ -36,7 +36,7 @@ pub use metrics::{Metrics, MetricsSnapshot};
 pub use router::Route;
 
 use std::path::PathBuf;
-use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::mpsc::{sync_channel, Receiver, RecvTimeoutError, SyncSender};
 use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
@@ -93,6 +93,9 @@ struct WorkItem {
     spec: JobSpec,
     enqueued: Instant,
     reply: std::sync::mpsc::Sender<JobResult>,
+    /// Shared with the [`JobHandle`]: a set flag asks the executing
+    /// worker to abandon the job at its next cooperative checkpoint.
+    cancel: Arc<AtomicBool>,
 }
 
 /// Handle to an in-flight job.
@@ -100,9 +103,19 @@ pub struct JobHandle {
     /// The identifier assigned at submit time.
     pub id: JobId,
     rx: Receiver<JobResult>,
+    cancel: Arc<AtomicBool>,
 }
 
 impl JobHandle {
+    /// Request cooperative cancellation: the flag is checked before
+    /// execution starts and between power sweeps / streamed blocks, so
+    /// a cancelled job resolves (via [`Self::wait`]) with
+    /// [`Error::Cancelled`] as its outcome shortly after. Idempotent;
+    /// a job that already finished is unaffected.
+    pub fn cancel(&self) {
+        self.cancel.store(true, std::sync::atomic::Ordering::Relaxed);
+    }
+
     /// Block until the job completes.
     pub fn wait(self) -> Result<JobResult> {
         self.rx
@@ -255,7 +268,14 @@ impl Coordinator {
         let route = router::route(&spec, self.manifest.as_ref())?;
         let id = JobId(self.next_id.fetch_add(1, Ordering::Relaxed));
         let (reply_tx, reply_rx) = std::sync::mpsc::channel();
-        let item = WorkItem { id, spec, enqueued: Instant::now(), reply: reply_tx };
+        let cancel = Arc::new(AtomicBool::new(false));
+        let item = WorkItem {
+            id,
+            spec,
+            enqueued: Instant::now(),
+            reply: reply_tx,
+            cancel: Arc::clone(&cancel),
+        };
         let tx = match route {
             Route::Native => self.native_tx.as_ref().unwrap(),
             Route::Artifact { .. } => self.artifact_tx.as_ref().ok_or_else(|| {
@@ -291,7 +311,7 @@ impl Coordinator {
             }
         };
         self.metrics.submitted.fetch_add(1, Ordering::Relaxed);
-        Ok(JobHandle { id, rx: reply_rx })
+        Ok(JobHandle { id, rx: reply_rx, cancel })
     }
 
     /// Convenience: submit and wait.
@@ -329,22 +349,32 @@ fn native_loop(rx: Arc<Mutex<Receiver<WorkItem>>>, metrics: Arc<Metrics>, pool: 
             let guard = rx.lock().expect("queue mutex poisoned");
             guard.recv()
         };
-        let Ok(item) = item else { return };
+        let Ok(mut item) = item else { return };
         metrics.queue_depth.fetch_sub(1, Ordering::Relaxed);
         metrics.in_flight.fetch_add(1, Ordering::Relaxed);
         let queue_s = item.enqueued.elapsed().as_secs_f64();
         let t = Instant::now();
+        // Streamed sweeps check the flag between blocks; dense/sparse
+        // jobs check it between power sweeps inside `ShiftedRsvd`.
+        if let MatrixInput::Streamed(s) = &mut item.spec.input {
+            s.set_cancel(Arc::clone(&item.cancel));
+        }
         // Panic isolation: a panicking job (e.g. a streamed source whose
         // backing file fails mid-sweep) must fail *that job*, not kill
         // the worker and strand everything queued behind it.
-        let outcome = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
-            native_worker::execute_native(&item.spec)
-        }))
-        .unwrap_or_else(|payload| {
-            let msg = panic_message(payload.as_ref());
-            crate::log_error!("{}: job panicked: {msg}", item.id);
-            Err(Error::Service(format!("job panicked: {msg}")))
-        });
+        let outcome = if item.cancel.load(Ordering::Relaxed) {
+            // Cancelled while queued: never execute at all.
+            Err(Error::Cancelled("job cancelled before execution".into()))
+        } else {
+            std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                native_worker::execute_native_cancellable(&item.spec, &item.cancel)
+            }))
+            .unwrap_or_else(|payload| {
+                let msg = panic_message(payload.as_ref());
+                crate::log_error!("{}: job panicked: {msg}", item.id);
+                Err(Error::Service(format!("job panicked: {msg}")))
+            })
+        };
         let exec_s = t.elapsed().as_secs_f64();
         metrics.record_exec(exec_s, queue_s, outcome.is_ok());
         if let Ok(out) = &outcome {
@@ -493,6 +523,35 @@ mod tests {
         let m = coord.metrics();
         assert_eq!(m.submitted, accepted);
         assert_eq!(m.native_jobs, accepted);
+        coord.shutdown();
+    }
+
+    #[test]
+    fn cancelled_queued_job_reports_cancelled_without_executing() {
+        // One worker pinned by a slow job; a queued job cancelled
+        // behind it must resolve as Error::Cancelled without running.
+        let coord = Coordinator::start(CoordinatorConfig {
+            native_workers: 1,
+            queue_capacity: 8,
+            artifact_dir: None,
+            pool_threads: Some(1),
+        })
+        .unwrap();
+        let mut slow = dense_spec(1);
+        slow.input = MatrixInput::Dense(Dense::from_fn(200, 800, |i, j| {
+            ((i * 31 + j) % 97) as f64 / 97.0
+        }));
+        slow.config = SvdConfig::paper(16).with_fixed_power(4);
+        let slow_handle = coord.submit(slow).unwrap();
+        let victim = coord.submit(dense_spec(2)).unwrap();
+        victim.cancel();
+        let r = victim.wait().unwrap();
+        assert!(
+            matches!(r.outcome, Err(Error::Cancelled(_))),
+            "expected cancelled outcome, got {:?}",
+            r.outcome.map(|_| ())
+        );
+        assert!(slow_handle.wait().unwrap().outcome.is_ok());
         coord.shutdown();
     }
 

@@ -6,6 +6,8 @@
 //! module), so the GEMM / CSR kernels inside a job run panel-parallel
 //! on one process-wide pool rather than each job being serial.
 
+use std::sync::atomic::AtomicBool;
+
 use crate::linalg::Dense;
 use crate::rng::Xoshiro256pp;
 use crate::svd::ShiftedRsvd;
@@ -15,15 +17,30 @@ use super::job::{JobOutput, JobSpec, MatrixInput};
 
 /// Run one job on the native engine (synchronously, on this thread).
 pub fn execute_native(spec: &JobSpec) -> Result<JobOutput> {
+    execute_native_cancellable(spec, &AtomicBool::new(false))
+}
+
+/// [`execute_native`] with a cooperative cancel flag: a set flag makes
+/// the factorization abandon work at its next between-sweep checkpoint
+/// and the job fail with [`crate::util::Error::Cancelled`].
+pub fn execute_native_cancellable(spec: &JobSpec, cancel: &AtomicBool) -> Result<JobOutput> {
     let mu = spec.shift.resolve(&spec.input)?;
     let mut rng = Xoshiro256pp::seed_from_u64(spec.seed);
     let engine = ShiftedRsvd::new(spec.config);
-    let (fact, report) = engine.factorize_with_report(spec.input.as_ops(), &mu, &mut rng)?;
+    let (fact, report) =
+        engine.factorize_with_report_cancellable(spec.input.as_ops(), &mu, &mut rng, cancel)?;
     let mse = if spec.score {
         Some(score(spec, &mu, &fact))
     } else {
         None
     };
+    // The MSE pass sweeps the source too; a cancel raised during it
+    // leaves a truncated score that must not surface as success.
+    if cancel.load(std::sync::atomic::Ordering::Relaxed) {
+        return Err(crate::util::Error::Cancelled(
+            "job cancelled during scoring".into(),
+        ));
+    }
     Ok(JobOutput {
         factorization: fact,
         mse,

@@ -78,7 +78,7 @@ use std::fmt;
 use std::fs;
 use std::io::{BufWriter, Read, Seek, SeekFrom, Write};
 use std::path::{Path, PathBuf};
-use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{mpsc, Arc, Mutex};
 
 use super::{gemm, Csr, Dense};
@@ -113,6 +113,16 @@ pub trait MatrixSource: Send + Sync + fmt::Debug {
         }
         Ok(Dense::from_vec(m, n, data))
     }
+
+    /// Canonical bytes identifying the matrix *content* for the
+    /// server's content-addressed result cache, or `None` when the
+    /// content cannot be proven stable from the handle alone (the
+    /// default — e.g. a file path, whose bytes may change between
+    /// jobs). Two sources returning the same key must yield the same
+    /// matrix bytes via [`MatrixSource::read_rows`].
+    fn cache_key(&self) -> Option<Vec<u8>> {
+        None
+    }
 }
 
 impl<'a, S: MatrixSource + ?Sized> MatrixSource for &'a S {
@@ -122,6 +132,10 @@ impl<'a, S: MatrixSource + ?Sized> MatrixSource for &'a S {
 
     fn read_rows(&self, row0: usize, nrows: usize, out: &mut [f64]) -> Result<()> {
         (**self).read_rows(row0, nrows, out)
+    }
+
+    fn cache_key(&self) -> Option<Vec<u8>> {
+        (**self).cache_key()
     }
 }
 
@@ -136,6 +150,10 @@ impl MatrixSource for SharedSource {
 
     fn read_rows(&self, row0: usize, nrows: usize, out: &mut [f64]) -> Result<()> {
         (**self).read_rows(row0, nrows, out)
+    }
+
+    fn cache_key(&self) -> Option<Vec<u8>> {
+        (**self).cache_key()
     }
 }
 
@@ -297,6 +315,23 @@ impl MatrixSource for GeneratorSource {
             }
         }
         Ok(())
+    }
+
+    fn cache_key(&self) -> Option<Vec<u8>> {
+        // The generated matrix is a pure function of (shape, dist,
+        // seed), so those bytes identify its content exactly.
+        let mut key = Vec::with_capacity(26);
+        key.push(b'G');
+        key.extend_from_slice(&(self.rows as u64).to_le_bytes());
+        key.extend_from_slice(&(self.cols as u64).to_le_bytes());
+        key.push(match self.dist {
+            Distribution::Uniform => 0,
+            Distribution::Normal => 1,
+            Distribution::Exponential => 2,
+            Distribution::Zipf => 3,
+        });
+        key.extend_from_slice(&self.seed.to_le_bytes());
+        Some(key)
     }
 }
 
@@ -617,6 +652,7 @@ pub struct Streamed<S> {
     block_rows: usize,
     prefetch: bool,
     stats: Arc<SourceStats>,
+    cancel: Option<Arc<AtomicBool>>,
 }
 
 impl<S: MatrixSource> Streamed<S> {
@@ -629,6 +665,7 @@ impl<S: MatrixSource> Streamed<S> {
             block_rows,
             prefetch: config.prefetch,
             stats: Arc::new(SourceStats::default()),
+            cancel: None,
         }
     }
 
@@ -641,6 +678,7 @@ impl<S: MatrixSource> Streamed<S> {
             block_rows: block_rows.clamp(1, m.max(1)),
             prefetch: true,
             stats: Arc::new(SourceStats::default()),
+            cancel: None,
         }
     }
 
@@ -664,7 +702,24 @@ impl<S: MatrixSource> Streamed<S> {
             block_rows: self.block_rows,
             prefetch: self.prefetch,
             stats: Arc::new(SourceStats::default()),
+            cancel: None,
         }
+    }
+
+    /// Attach a cooperative cancel flag (shared with the coordinator's
+    /// job handle). Both sweep paths stop fetching blocks once the flag
+    /// is set, leaving the consumer's accumulator truncated — callers
+    /// must re-check the flag before trusting any sweep result (the
+    /// factorization loop in `svd::shifted` does).
+    pub(crate) fn set_cancel(&mut self, flag: Arc<AtomicBool>) {
+        self.cancel = Some(flag);
+    }
+
+    /// Whether an attached cancel flag is set.
+    fn is_cancelled(&self) -> bool {
+        self.cancel
+            .as_ref()
+            .is_some_and(|c| c.load(Ordering::Relaxed))
     }
 
     /// Rows per resident block.
@@ -705,6 +760,9 @@ impl<S: MatrixSource> Streamed<S> {
         let mut buf: Vec<f64> = Vec::new();
         let mut row0 = 0;
         while row0 < m {
+            if self.is_cancelled() {
+                return;
+            }
             let nr = self.block_rows.min(m - row0);
             buf.resize(nr * n, 0.0);
             if let Err(e) = self.source.read_rows(row0, nr, &mut buf) {
@@ -760,6 +818,9 @@ impl<S: MatrixSource> Streamed<S> {
             });
             let mut next_row = 0;
             while next_row < m {
+                if self.is_cancelled() {
+                    break;
+                }
                 // A closed channel means the reader panicked mid-sweep;
                 // fall through to the join below to re-raise it.
                 let Ok((row0, block)) = full_rx.recv() else { break };
@@ -771,6 +832,9 @@ impl<S: MatrixSource> Streamed<S> {
                 next_row = row0 + block.rows();
                 let _ = empty_tx.send(block.into_vec());
             }
+            // Unblocks a reader mid-`send` after a cancel break (its
+            // send fails and it exits); a no-op on the normal path.
+            drop(full_rx);
             if let Err(payload) = reader.join() {
                 // Preserve the reader's panic message (source + rows).
                 std::panic::resume_unwind(payload);

@@ -206,6 +206,9 @@ fn cmd_serve(args: &[String]) -> Result<()> {
     .opt("http-workers", "0", "HTTP connection workers (0 = config/default)")
     .opt("max-body-mb", "0", "request body cap, MiB (0 = config/default)")
     .opt("request-timeout-s", "0", "per-request timeout, seconds (0 = config/default)")
+    .opt("result-ttl-s", "0", "unclaimed-result lifetime, seconds (0 = config/default)")
+    .opt("cache-dir", "", "persist the result cache here (off|none = memory-only)")
+    .opt("cache-entries", "0", "result-cache capacity (0 = config/default)")
     .opt("jobs", "32", "demo mode: number of jobs to submit")
     .opt("workers", "0", "native workers (0 = auto)")
     .opt("queue", "64", "queue capacity")
@@ -282,12 +285,24 @@ fn serve_http(a: &srsvd::cli::Args, raw: RawConfig, cfg: CoordinatorConfig) -> R
     if a.get_usize("request-timeout-s")? > 0 {
         scfg.request_timeout_s = a.get_usize("request-timeout-s")? as u64;
     }
+    if a.get_usize("result-ttl-s")? > 0 {
+        scfg.result_ttl_s = a.get_usize("result-ttl-s")? as u64;
+    }
+    match a.get("cache-dir") {
+        "" => {}
+        "off" | "none" => scfg.cache_dir = None,
+        dir => scfg.cache_dir = Some(std::path::PathBuf::from(dir)),
+    }
+    if a.get_usize("cache-entries")? > 0 {
+        scfg.cache_entries = a.get_usize("cache-entries")?;
+    }
     let stream_defaults = raw.stream()?;
     let coord = std::sync::Arc::new(Coordinator::start(cfg)?);
     let server = Server::bind(coord, &scfg, stream_defaults)?;
     println!("srsvd service listening on http://{}", server.local_addr());
     println!("  POST /v1/jobs        submit a job spec (dense | csr | generator | file)");
     println!("  GET  /v1/jobs/{{id}}   block for a submitted job's result");
+    println!("  DEL  /v1/jobs/{{id}}   cancel a pending or running job");
     println!("  GET  /metrics        service counters as JSON");
     println!("  GET  /healthz        liveness probe");
     server.join();

@@ -1,0 +1,464 @@
+//! Content-addressed cache of completed job results.
+//!
+//! A job spec that fully determines its output — every input byte plus
+//! every accuracy-relevant knob — is serialized to a **canonical byte
+//! string** ([`canonical_spec_bytes`]) and hashed ([`content_hash`],
+//! SplitMix64-style mixing, no external hasher). The hash keys an LRU
+//! of **rendered result bodies**: a cache hit replays the exact bytes
+//! the cold run wrote, so a hit is byte-identical to recomputing and
+//! never touches the coordinator.
+//!
+//! ## What the key covers — and deliberately omits
+//!
+//! The canonical form covers the matrix content (dense/CSR payload
+//! bits, or a streamed source's [`MatrixSource::cache_key`]), the full
+//! [`SvdConfig`], the shift, the engine preference, the seed, and the
+//! `score` flag. It **excludes** execution policy — `block_rows`,
+//! `budget_mb`, prefetch, pool size — because the engine's
+//! bit-determinism contract (pinned by `rust/tests/stream.rs`)
+//! guarantees those cannot change a single output bit. Sources that
+//! cannot prove their content from the handle alone (server-side
+//! files) return `None` from [`MatrixSource::cache_key`] and are
+//! simply never cached.
+//!
+//! ## Persistence
+//!
+//! With a cache directory configured (`[server] cache_dir`), each body
+//! is written to `<hash>.json` and an index to `cache-manifest.json`,
+//! in the style of the artifact registry's manifest: load-time errors
+//! of any kind (missing file, truncated body, corrupt JSON) silently
+//! drop the affected entries and rebuild from empty — the cache is an
+//! optimization, never a correctness dependency.
+
+use std::collections::HashMap;
+use std::fs;
+use std::path::{Path, PathBuf};
+
+use crate::coordinator::{EnginePreference, JobSpec, MatrixInput, ShiftSpec};
+use crate::linalg::stream::MatrixSource;
+use crate::svd::{BasisMethod, PassPolicy, SmallSvdMethod, StopCriterion};
+use crate::util::json::Json;
+
+/// Name of the index file inside the cache directory.
+const MANIFEST: &str = "cache-manifest.json";
+/// Manifest format version.
+const MANIFEST_VERSION: f64 = 1.0;
+
+fn push_u64(out: &mut Vec<u8>, v: u64) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+/// Canonical byte serialization of a job spec, or `None` when the spec
+/// is not cacheable (a streamed source without a stable
+/// [`MatrixSource::cache_key`]).
+///
+/// The encoding is fixed-order and tag-prefixed, so it is independent
+/// of the JSON field order a submission arrived with; floats are
+/// encoded by their `f64` bit patterns (no text round-trip).
+pub fn canonical_spec_bytes(spec: &JobSpec) -> Option<Vec<u8>> {
+    let mut b = Vec::new();
+    b.extend_from_slice(b"srsvd-job-v1");
+
+    // Input content.
+    match &spec.input {
+        MatrixInput::Dense(x) => {
+            b.push(0);
+            push_u64(&mut b, x.rows() as u64);
+            push_u64(&mut b, x.cols() as u64);
+            for &v in x.data() {
+                push_u64(&mut b, v.to_bits());
+            }
+        }
+        MatrixInput::Sparse(x) => {
+            b.push(1);
+            let (m, n) = x.shape();
+            push_u64(&mut b, m as u64);
+            push_u64(&mut b, n as u64);
+            for i in 0..m {
+                let row: Vec<(usize, f64)> = x.row_iter(i).collect();
+                push_u64(&mut b, row.len() as u64);
+                for (j, v) in row {
+                    push_u64(&mut b, j as u64);
+                    push_u64(&mut b, v.to_bits());
+                }
+            }
+        }
+        // Only the source's content key enters the hash — block size,
+        // memory budget and prefetch are execution policy and cannot
+        // change output bits (the crate's determinism contract).
+        MatrixInput::Streamed(s) => {
+            b.push(2);
+            let key = s.source().cache_key()?;
+            push_u64(&mut b, key.len() as u64);
+            b.extend_from_slice(&key);
+        }
+    }
+
+    // Accuracy-relevant configuration, fixed order.
+    push_u64(&mut b, spec.config.k as u64);
+    push_u64(&mut b, spec.config.oversample as u64);
+    match spec.config.stop {
+        StopCriterion::FixedPower { q } => {
+            b.push(0);
+            push_u64(&mut b, q as u64);
+        }
+        StopCriterion::Tolerance { pve_tol, max_sweeps } => {
+            b.push(1);
+            push_u64(&mut b, pve_tol.to_bits());
+            push_u64(&mut b, max_sweeps as u64);
+        }
+    }
+    b.push(match spec.config.basis {
+        BasisMethod::Direct => 0,
+        BasisMethod::QrUpdatePaper => 1,
+        BasisMethod::QrUpdateExact => 2,
+    });
+    b.push(match spec.config.small_svd {
+        SmallSvdMethod::Jacobi => 0,
+        SmallSvdMethod::GramEig => 1,
+    });
+    b.push(match spec.config.pass_policy {
+        PassPolicy::Exact => 0,
+        PassPolicy::Fused => 1,
+    });
+    match &spec.shift {
+        ShiftSpec::None => b.push(0),
+        ShiftSpec::MeanCenter => b.push(1),
+        ShiftSpec::Vector(v) => {
+            b.push(2);
+            push_u64(&mut b, v.len() as u64);
+            for &x in v {
+                push_u64(&mut b, x.to_bits());
+            }
+        }
+    }
+    b.push(match spec.engine {
+        EnginePreference::Auto => 0,
+        EnginePreference::Native => 1,
+        EnginePreference::ArtifactOnly => 2,
+    });
+    push_u64(&mut b, spec.seed);
+    b.push(spec.score as u8);
+    Some(b)
+}
+
+/// SplitMix64's finalizer (the `rng/` seeding mixer): the avalanche
+/// stage that makes every input bit flip ~half the output bits.
+fn mix(mut z: u64) -> u64 {
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    z ^ (z >> 31)
+}
+
+/// Hash a canonical byte string: SplitMix64-style mixing folded over
+/// 8-byte little-endian chunks, seeded with the length (std-only; not
+/// cryptographic — an in-process cache key, not an integrity check).
+pub fn content_hash(bytes: &[u8]) -> u64 {
+    const GOLDEN: u64 = 0x9E37_79B9_7F4A_7C15;
+    let mut h = mix((bytes.len() as u64).wrapping_add(GOLDEN));
+    for chunk in bytes.chunks(8) {
+        let mut word = [0u8; 8];
+        word[..chunk.len()].copy_from_slice(chunk);
+        h = mix(h.wrapping_add(GOLDEN) ^ u64::from_le_bytes(word));
+    }
+    h
+}
+
+/// [`canonical_spec_bytes`] + [`content_hash`] in one step: the cache
+/// key of a spec, or `None` when the spec is not cacheable.
+pub fn spec_hash(spec: &JobSpec) -> Option<u64> {
+    canonical_spec_bytes(spec).map(|b| content_hash(&b))
+}
+
+struct CacheEntry {
+    body: Vec<u8>,
+    last_used: u64,
+}
+
+/// LRU cache of rendered result bodies keyed by [`spec_hash`], with
+/// optional on-disk persistence (see the module docs).
+pub struct ResultCache {
+    capacity: usize,
+    dir: Option<PathBuf>,
+    entries: HashMap<u64, CacheEntry>,
+    seq: u64,
+    bytes: u64,
+}
+
+impl ResultCache {
+    /// An empty cache holding at most `capacity` bodies; with `dir`
+    /// set, previously persisted entries are reloaded (corrupt or
+    /// partial state is ignored and rebuilt from empty).
+    pub fn new(capacity: usize, dir: Option<PathBuf>) -> ResultCache {
+        let mut cache = ResultCache {
+            capacity,
+            dir: None,
+            entries: HashMap::new(),
+            seq: 0,
+            bytes: 0,
+        };
+        if capacity == 0 {
+            return cache;
+        }
+        if let Some(d) = dir {
+            if let Err(e) = fs::create_dir_all(&d) {
+                crate::log_warn!("result cache: create {}: {e}; persistence off", d.display());
+            } else {
+                cache.dir = Some(d);
+                cache.load();
+            }
+        }
+        cache
+    }
+
+    /// Number of cached bodies.
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    /// Whether the cache holds nothing.
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    /// Total bytes of cached bodies (the `cache_bytes` gauge).
+    pub fn bytes(&self) -> u64 {
+        self.bytes
+    }
+
+    /// The body cached under `hash`, refreshing its recency.
+    pub fn get(&mut self, hash: u64) -> Option<Vec<u8>> {
+        let seq = self.next_seq();
+        let entry = self.entries.get_mut(&hash)?;
+        entry.last_used = seq;
+        Some(entry.body.clone())
+    }
+
+    /// Cache `body` under `hash`, evicting least-recently-used entries
+    /// beyond capacity and persisting when a directory is configured.
+    pub fn insert(&mut self, hash: u64, body: Vec<u8>) {
+        if self.capacity == 0 {
+            return;
+        }
+        let seq = self.next_seq();
+        if let Some(existing) = self.entries.get_mut(&hash) {
+            // Deterministic jobs re-render identical bodies; just
+            // refresh recency.
+            existing.last_used = seq;
+            return;
+        }
+        if let Some(d) = &self.dir {
+            if let Err(e) = fs::write(body_path(d, hash), &body) {
+                crate::log_warn!("result cache: persist {hash:016x}: {e}");
+            }
+        }
+        self.bytes += body.len() as u64;
+        self.entries.insert(hash, CacheEntry { body, last_used: seq });
+        while self.entries.len() > self.capacity {
+            let oldest = self
+                .entries
+                .iter()
+                .min_by_key(|(_, e)| e.last_used)
+                .map(|(&h, _)| h);
+            let Some(h) = oldest else { break };
+            if let Some(e) = self.entries.remove(&h) {
+                self.bytes -= e.body.len() as u64;
+            }
+            if let Some(d) = &self.dir {
+                let _ = fs::remove_file(body_path(d, h));
+            }
+        }
+        self.persist_manifest();
+    }
+
+    fn next_seq(&mut self) -> u64 {
+        self.seq += 1;
+        self.seq
+    }
+
+    /// Best-effort reload from the manifest; any inconsistency drops
+    /// the affected entries (or the whole index) silently.
+    fn load(&mut self) {
+        let Some(d) = self.dir.clone() else { return };
+        let Ok(text) = fs::read_to_string(d.join(MANIFEST)) else {
+            return; // first run, or unreadable: start empty
+        };
+        let Ok(json) = Json::parse(&text) else {
+            crate::log_warn!("result cache: corrupt manifest ignored; rebuilding");
+            return;
+        };
+        let Ok(rows) = json.get("entries").and_then(|e| e.as_arr()) else {
+            crate::log_warn!("result cache: corrupt manifest ignored; rebuilding");
+            return;
+        };
+        for row in rows {
+            let Some((hash, last_used)) = parse_manifest_row(row) else {
+                continue;
+            };
+            let Ok(body) = fs::read(body_path(&d, hash)) else {
+                continue; // body file lost: drop the entry
+            };
+            self.seq = self.seq.max(last_used);
+            self.bytes += body.len() as u64;
+            self.entries.insert(hash, CacheEntry { body, last_used });
+        }
+        // Reloaded state may exceed a shrunken capacity; trim via the
+        // normal LRU path.
+        while self.entries.len() > self.capacity {
+            let oldest = self
+                .entries
+                .iter()
+                .min_by_key(|(_, e)| e.last_used)
+                .map(|(&h, _)| h);
+            let Some(h) = oldest else { break };
+            if let Some(e) = self.entries.remove(&h) {
+                self.bytes -= e.body.len() as u64;
+            }
+            let _ = fs::remove_file(body_path(&d, h));
+        }
+    }
+
+    fn persist_manifest(&self) {
+        let Some(d) = &self.dir else { return };
+        let rows: Vec<Json> = self
+            .entries
+            .iter()
+            .map(|(h, e)| {
+                Json::obj(vec![
+                    ("hash", Json::str(&format!("{h:016x}"))),
+                    ("bytes", Json::num(e.body.len() as f64)),
+                    ("last_used", Json::num(e.last_used as f64)),
+                ])
+            })
+            .collect();
+        let manifest = Json::obj(vec![
+            ("version", Json::num(MANIFEST_VERSION)),
+            ("entries", Json::Arr(rows)),
+        ]);
+        if let Err(e) = fs::write(d.join(MANIFEST), manifest.to_string()) {
+            crate::log_warn!("result cache: write manifest: {e}");
+        }
+    }
+}
+
+fn body_path(dir: &Path, hash: u64) -> PathBuf {
+    dir.join(format!("{hash:016x}.json"))
+}
+
+fn parse_manifest_row(row: &Json) -> Option<(u64, u64)> {
+    let hash = u64::from_str_radix(row.get("hash").ok()?.as_str().ok()?, 16).ok()?;
+    let last_used = row.get("last_used").ok()?.as_u64().ok()?;
+    Some((hash, last_used))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::JobSpec;
+    use crate::data::Distribution;
+    use crate::linalg::stream::{FileWriter, GeneratorSource, StreamConfig};
+    use crate::linalg::Dense;
+    use crate::rng::Xoshiro256pp;
+
+    fn generator_spec(seed: u64, block_rows: usize) -> JobSpec {
+        let src = GeneratorSource::new(40, 30, Distribution::Uniform, seed).unwrap();
+        let cfg = StreamConfig { block_rows, ..Default::default() };
+        JobSpec::pca(MatrixInput::streamed(src, &cfg), 3, 7)
+    }
+
+    #[test]
+    fn block_policy_is_excluded_from_the_key() {
+        // Same content, different execution policy: identical hash (the
+        // determinism contract makes the outputs identical too).
+        let a = spec_hash(&generator_spec(5, 4)).unwrap();
+        let b = spec_hash(&generator_spec(5, 16)).unwrap();
+        assert_eq!(a, b);
+        // Different content: different hash.
+        let c = spec_hash(&generator_spec(6, 4)).unwrap();
+        assert_ne!(a, c);
+    }
+
+    #[test]
+    fn file_sources_are_not_cacheable() {
+        let path = std::env::temp_dir().join("srsvd_cache_test_filesource.bin");
+        let mut w = FileWriter::create(&path, 2, 2).unwrap();
+        w.append_rows(&[1.0, 2.0, 3.0, 4.0]).unwrap();
+        let src = w.finish().unwrap();
+        let spec = JobSpec::pca(
+            MatrixInput::streamed(src, &StreamConfig::default()),
+            1,
+            0,
+        );
+        assert_eq!(spec_hash(&spec), None);
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn every_knob_perturbs_a_dense_hash() {
+        let mut rng = Xoshiro256pp::seed_from_u64(0);
+        let base = JobSpec::pca(MatrixInput::Dense(Dense::gaussian(6, 9, &mut rng)), 2, 3);
+        let h0 = spec_hash(&base).unwrap();
+        let mut seed = base.clone();
+        seed.seed = 4;
+        let mut shift = base.clone();
+        shift.shift = ShiftSpec::None;
+        let mut rank = base.clone();
+        rank.config.k = 3;
+        let mut stop = base.clone();
+        stop.config = stop.config.with_tolerance(1e-3, 8);
+        let mut policy = base.clone();
+        policy.config.pass_policy = PassPolicy::Fused;
+        for (what, spec) in [
+            ("seed", seed),
+            ("shift", shift),
+            ("k", rank),
+            ("stop", stop),
+            ("pass_policy", policy),
+        ] {
+            assert_ne!(spec_hash(&spec).unwrap(), h0, "{what} not in the key");
+        }
+    }
+
+    #[test]
+    fn lru_evicts_the_least_recently_used() {
+        let mut cache = ResultCache::new(2, None);
+        cache.insert(1, b"one".to_vec());
+        cache.insert(2, b"two".to_vec());
+        assert_eq!(cache.get(1), Some(b"one".to_vec())); // 2 is now LRU
+        cache.insert(3, b"three".to_vec());
+        assert_eq!(cache.get(2), None);
+        assert_eq!(cache.get(1), Some(b"one".to_vec()));
+        assert_eq!(cache.get(3), Some(b"three".to_vec()));
+        assert_eq!(cache.len(), 2);
+        assert_eq!(cache.bytes(), 8);
+        // Zero capacity: inserts are no-ops.
+        let mut off = ResultCache::new(0, None);
+        off.insert(1, b"x".to_vec());
+        assert!(off.is_empty());
+    }
+
+    #[test]
+    fn manifest_round_trips_and_corruption_rebuilds() {
+        let dir = std::env::temp_dir().join("srsvd_cache_test_manifest");
+        let _ = fs::remove_dir_all(&dir);
+        {
+            let mut cache = ResultCache::new(4, Some(dir.clone()));
+            cache.insert(10, b"{\"ok\":true}".to_vec());
+            cache.insert(11, b"{\"ok\":false}".to_vec());
+        }
+        let mut back = ResultCache::new(4, Some(dir.clone()));
+        assert_eq!(back.len(), 2);
+        assert_eq!(back.get(10), Some(b"{\"ok\":true}".to_vec()));
+        assert_eq!(back.get(11), Some(b"{\"ok\":false}".to_vec()));
+        // A lost body file drops that entry only.
+        let _ = fs::remove_file(body_path(&dir, 10));
+        let mut partial = ResultCache::new(4, Some(dir.clone()));
+        assert_eq!(partial.get(10), None);
+        assert_eq!(partial.get(11), Some(b"{\"ok\":false}".to_vec()));
+        // A corrupt manifest rebuilds from empty instead of failing.
+        fs::write(dir.join(MANIFEST), "not json{{{").unwrap();
+        let broken = ResultCache::new(4, Some(dir.clone()));
+        assert!(broken.is_empty());
+        let _ = fs::remove_dir_all(&dir);
+    }
+}

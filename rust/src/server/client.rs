@@ -206,6 +206,22 @@ impl Client {
         self.wait_path(&format!("/v1/jobs/{id}?timeout_s={seconds}"))
     }
 
+    /// `DELETE /v1/jobs/{id}`: cancel a parked job. `Ok(true)` when the
+    /// server cancelled it (`200`), `Ok(false)` when the result had
+    /// already been delivered (`409`); an unknown id (`404`) and every
+    /// other status surface as `Err`.
+    pub fn cancel(&mut self, id: u64) -> Result<bool> {
+        let (status, body) = self.request("DELETE", &format!("/v1/jobs/{id}"), None)?;
+        match status {
+            200 => Ok(true),
+            409 => Ok(false),
+            _ => Err(Error::Service(format!(
+                "cancel: http {status}: {}",
+                error_text(&body)
+            ))),
+        }
+    }
+
     fn wait_path(&mut self, path: &str) -> Result<WaitOutcome> {
         let (status, body) = self.request("GET", path, None)?;
         match status {

@@ -193,6 +193,52 @@ pub(crate) fn is_timeout(e: &std::io::Error) -> bool {
     matches!(e.kind(), ErrorKind::WouldBlock | ErrorKind::TimedOut)
 }
 
+/// Outcome of the keep-alive idle phase between requests.
+#[derive(Debug, PartialEq, Eq)]
+pub(crate) enum IdleOutcome {
+    /// The next request's first byte is waiting: go parse it.
+    Ready,
+    /// Close the connection: the peer hung up, an unrecoverable error
+    /// hit the socket, `tick` asked to stop (shutdown), or the
+    /// keep-alive idle limit passed without a byte.
+    Close,
+}
+
+/// The keep-alive idle phase of one connection, factored out of the
+/// socket loop so the slot-release policy is unit-testable without
+/// sleeping: `peek` probes the transport under a short (`poll`) socket
+/// timeout, `tick` runs between slices (shutdown checks, TTL sweeps —
+/// returning `true` closes), and a connection idle past `idle_limit`
+/// is closed so it stops consuming a connection-worker slot.
+///
+/// Time is virtual here — elapsed idle time is `poll` per timed-out
+/// probe, which matches wall time on a real socket and costs nothing
+/// under a test fake.
+pub(crate) fn idle_wait(
+    peek: &mut dyn FnMut() -> std::io::Result<usize>,
+    poll: std::time::Duration,
+    idle_limit: std::time::Duration,
+    tick: &mut dyn FnMut() -> bool,
+) -> IdleOutcome {
+    let mut idled = std::time::Duration::ZERO;
+    loop {
+        if tick() {
+            return IdleOutcome::Close;
+        }
+        match peek() {
+            Ok(0) => return IdleOutcome::Close, // peer closed
+            Ok(_) => return IdleOutcome::Ready,
+            Err(e) if is_timeout(&e) => {
+                idled += poll;
+                if idled >= idle_limit {
+                    return IdleOutcome::Close; // keep-alive idle limit
+                }
+            }
+            Err(_) => return IdleOutcome::Close,
+        }
+    }
+}
+
 fn line_err(e: std::io::Error, what: &str) -> HttpError {
     if is_timeout(&e) {
         HttpError::respond(408, format!("timed out reading {what}"))
@@ -403,6 +449,8 @@ pub fn reason(status: u16) -> &'static str {
         404 => "Not Found",
         405 => "Method Not Allowed",
         408 => "Request Timeout",
+        409 => "Conflict",
+        410 => "Gone",
         411 => "Length Required",
         413 => "Payload Too Large",
         431 => "Request Header Fields Too Large",
@@ -557,6 +605,69 @@ mod tests {
             ReadOutcome::Request(req) => assert_eq!(req.body, b"ok"),
             other => panic!("expected a request, got {other:?}"),
         }
+    }
+
+    #[test]
+    fn idle_past_the_limit_releases_the_slot_without_spinning() {
+        // Regression for the keep-alive gap: a connection that goes
+        // idle and never sends another byte must be closed once the
+        // idle limit passes — not poll forever on a worker slot. The
+        // fake peek stalls like an idle socket; no real time passes.
+        let poll = std::time::Duration::from_millis(200);
+        let limit = std::time::Duration::from_secs(1);
+        let mut probes = 0u32;
+        let out = idle_wait(
+            &mut || {
+                probes += 1;
+                Err(std::io::Error::new(ErrorKind::WouldBlock, "idle"))
+            },
+            poll,
+            limit,
+            &mut || false,
+        );
+        assert_eq!(out, IdleOutcome::Close);
+        // Exactly limit/poll probes: the loop neither spins past the
+        // limit nor gives up early.
+        assert_eq!(probes, 5);
+    }
+
+    #[test]
+    fn idle_wait_ready_shutdown_and_hangup() {
+        let poll = std::time::Duration::from_millis(200);
+        let limit = std::time::Duration::from_secs(1);
+        // A waiting byte wins immediately.
+        let out = idle_wait(&mut || Ok(1), poll, limit, &mut || false);
+        assert_eq!(out, IdleOutcome::Ready);
+        // A shutdown tick closes before the transport is even probed.
+        let mut probed = false;
+        let out = idle_wait(
+            &mut || {
+                probed = true;
+                Ok(1)
+            },
+            poll,
+            limit,
+            &mut || true,
+        );
+        assert_eq!(out, IdleOutcome::Close);
+        assert!(!probed);
+        // Peer hangup (peek reads 0 bytes) closes.
+        let out = idle_wait(&mut || Ok(0), poll, limit, &mut || false);
+        assert_eq!(out, IdleOutcome::Close);
+        // A non-timeout socket error closes.
+        let out = idle_wait(
+            &mut || Err(std::io::Error::new(ErrorKind::ConnectionReset, "rst")),
+            poll,
+            limit,
+            &mut || false,
+        );
+        assert_eq!(out, IdleOutcome::Close);
+    }
+
+    #[test]
+    fn lifecycle_status_reasons() {
+        assert_eq!(reason(409), "Conflict");
+        assert_eq!(reason(410), "Gone");
     }
 
     #[test]

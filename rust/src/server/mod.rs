@@ -23,8 +23,25 @@
 //! |--------|------|---------|
 //! | `POST` | `/v1/jobs` | Submit a job spec. `"wait": true` answers with the finished result; otherwise `202` + id. |
 //! | `GET` | `/v1/jobs/{id}` | Block (up to the request timeout, or `?timeout_s=`) for a submitted job's result. Retryable: a claimed result whose response write fails is re-parked, not dropped. |
+//! | `DELETE` | `/v1/jobs/{id}` | Cancel: `200` for a pending/running job (cooperative — the engine abandons work at its next sweep checkpoint, the job fails with [`Error::Cancelled`], and the claiming `GET` answers `410 Gone`), `404` unknown, `409` already delivered. |
 //! | `GET` | `/metrics` | Service counters + gauges as JSON ([`protocol::metrics_to_json`]). |
 //! | `GET` | `/healthz` | Liveness probe. |
+//!
+//! ## Job lifecycle
+//!
+//! A submitted job is *parked* until claimed: the pending map holds the
+//! live handle (or, after a failed response write, the rendered result
+//! body). Every parked entry carries a deadline — `[server]
+//! result_ttl_s` past its (re-)parking — and the keep-alive idle poll
+//! doubles as the TTL reaper: an abandoned entry is evicted, a
+//! still-running evicted job is cancelled cooperatively, and the
+//! `evicted` counter ticks. All timestamps flow through an injectable
+//! [`Clock`], so the lifecycle tests drive eviction with a fake clock
+//! instead of sleeping. In front of the coordinator sits a
+//! content-addressed **result cache** ([`cache`]): a waited submit
+//! whose canonical spec hash is cached replays the exact cold-run bytes
+//! without touching the coordinator (`cache_hits` vs `native_jobs` in
+//! `/metrics` makes the bypass observable).
 //!
 //! ## Backpressure
 //!
@@ -43,6 +60,7 @@
 //! joins all threads. Queued-but-unclaimed job handles are dropped;
 //! the coordinator still completes those jobs.
 
+pub mod cache;
 pub mod client;
 pub mod http;
 pub mod protocol;
@@ -54,7 +72,7 @@ use std::net::{SocketAddr, TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::mpsc::{sync_channel, Receiver, SyncSender};
 use std::sync::{Arc, Mutex};
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 use crate::coordinator::{Coordinator, JobHandle, Metrics};
 use crate::linalg::stream::StreamConfig;
@@ -78,6 +96,16 @@ pub struct ServerConfig {
     /// Per-request timeout in seconds: reading a request, waiting on a
     /// blocking `GET`, and the keep-alive idle limit.
     pub request_timeout_s: u64,
+    /// Seconds an unclaimed parked entry — a running job handle or a
+    /// re-parked result body — survives before the TTL reaper evicts it
+    /// (`[server] result_ttl_s`).
+    pub result_ttl_s: u64,
+    /// Directory persisting the content-addressed result cache across
+    /// restarts (`[server] cache_dir`); `None` keeps it memory-only.
+    pub cache_dir: Option<std::path::PathBuf>,
+    /// Capacity of the completed-result cache, in entries
+    /// (`[server] cache_entries`); `0` disables caching.
+    pub cache_entries: usize,
 }
 
 impl Default for ServerConfig {
@@ -87,17 +115,60 @@ impl Default for ServerConfig {
             max_body_bytes: 64 << 20,
             workers: 4,
             request_timeout_s: 30,
+            result_ttl_s: 600,
+            cache_dir: None,
+            cache_entries: 256,
         }
+    }
+}
+
+/// Injectable time source for parked-entry TTL bookkeeping. The server
+/// only ever compares differences of [`Clock::now_ms`] values, so any
+/// monotonic origin works — and the lifecycle tests substitute a
+/// hand-advanced fake to exercise eviction without sleeping.
+pub trait Clock: Send + Sync {
+    /// Monotonic milliseconds since an arbitrary fixed origin.
+    fn now_ms(&self) -> u64;
+}
+
+/// The production [`Clock`]: [`Instant`]-based monotonic milliseconds.
+#[derive(Debug)]
+pub struct MonotonicClock {
+    origin: Instant,
+}
+
+impl Default for MonotonicClock {
+    fn default() -> Self {
+        MonotonicClock { origin: Instant::now() }
+    }
+}
+
+impl Clock for MonotonicClock {
+    fn now_ms(&self) -> u64 {
+        self.origin.elapsed().as_millis() as u64
     }
 }
 
 /// A parked entry awaiting a claiming `GET /v1/jobs/{id}`.
 enum Pending {
-    /// Still executing (or queued): the live job handle.
-    Running(JobHandle),
+    /// Still executing (or queued): the live job handle, plus the
+    /// spec's content hash (when cacheable) so the claiming GET can
+    /// feed the result cache.
+    Running {
+        /// The live handle.
+        handle: JobHandle,
+        /// [`cache::spec_hash`] of the submitted spec.
+        hash: Option<u64>,
+    },
     /// Completed, but the claiming response write failed: the rendered
     /// result body, re-parked so the GET is safely retryable.
     Done(Vec<u8>),
+}
+
+/// A [`Pending`] state plus its eviction deadline ([`Clock`] time).
+struct Parked {
+    state: Pending,
+    expires_at_ms: u64,
 }
 
 struct Shared {
@@ -105,11 +176,21 @@ struct Shared {
     metrics: Arc<Metrics>,
     /// Accepted-but-unclaimed jobs, keyed by id, awaiting a blocking
     /// `GET /v1/jobs/{id}` — live handles, plus completed results whose
-    /// claiming write failed ([`Pending::Done`]).
-    pending: Mutex<HashMap<u64, Pending>>,
+    /// claiming write failed ([`Pending::Done`]). Entries expire
+    /// (`result_ttl_s`) and are reaped by [`sweep_expired`].
+    pending: Mutex<HashMap<u64, Parked>>,
+    /// Ids whose result was delivered, kept (until their TTL passes) so
+    /// a late `DELETE` answers `409` instead of an indistinguishable
+    /// `404`. Values are expiry deadlines.
+    delivered: Mutex<HashMap<u64, u64>>,
+    /// Content-addressed cache of rendered completed-result bodies.
+    cache: Mutex<cache::ResultCache>,
     shutdown: AtomicBool,
     limits: HttpLimits,
     request_timeout: Duration,
+    /// Parked-entry lifetime, milliseconds.
+    ttl_ms: u64,
+    clock: Arc<dyn Clock>,
     stream_defaults: StreamConfig,
 }
 
@@ -131,6 +212,23 @@ impl Server {
         config: &ServerConfig,
         stream_defaults: StreamConfig,
     ) -> Result<Server> {
+        Server::bind_with_clock(
+            coord,
+            config,
+            stream_defaults,
+            Arc::new(MonotonicClock::default()),
+        )
+    }
+
+    /// [`Server::bind`] with an explicit [`Clock`] driving parked-entry
+    /// TTLs — the seam the lifecycle tests use to evict without
+    /// sleeping. Production callers want [`Server::bind`].
+    pub fn bind_with_clock(
+        coord: Arc<Coordinator>,
+        config: &ServerConfig,
+        stream_defaults: StreamConfig,
+        clock: Arc<dyn Clock>,
+    ) -> Result<Server> {
         crate::util::logging::init();
         let listener = TcpListener::bind(config.addr.as_str())
             .map_err(|e| Error::Service(format!("bind {}: {e}", config.addr)))?;
@@ -138,16 +236,23 @@ impl Server {
             .local_addr()
             .map_err(|e| Error::Service(format!("local_addr: {e}")))?;
         let metrics = coord.metrics_shared();
+        let result_cache =
+            cache::ResultCache::new(config.cache_entries, config.cache_dir.clone());
+        metrics.cache_bytes.store(result_cache.bytes(), Ordering::Relaxed);
         let shared = Arc::new(Shared {
             coord,
             metrics,
             pending: Mutex::new(HashMap::new()),
+            delivered: Mutex::new(HashMap::new()),
+            cache: Mutex::new(result_cache),
             shutdown: AtomicBool::new(false),
             limits: HttpLimits {
                 max_body_bytes: config.max_body_bytes,
                 ..Default::default()
             },
             request_timeout: Duration::from_secs(config.request_timeout_s.max(1)),
+            ttl_ms: config.result_ttl_s.max(1).saturating_mul(1000),
+            clock,
             stream_defaults,
         });
 
@@ -273,26 +378,22 @@ fn handle_connection(shared: &Shared, mut stream: TcpStream) {
     let _ = stream.set_nodelay(true);
     let _ = stream.set_read_timeout(Some(IDLE_POLL));
     let _ = stream.set_write_timeout(Some(shared.request_timeout));
-    'conn: loop {
-        // Idle phase: wait for the next request's first byte in short
-        // slices, checking the shutdown flag between slices.
-        let mut idled = Duration::ZERO;
+    loop {
+        // Idle phase ([`http::idle_wait`]): wait for the next request's
+        // first byte in short slices; each slice boundary checks the
+        // shutdown flag and runs the TTL reaper over parked entries.
         let mut probe = [0u8; 1];
-        loop {
-            if shared.shutdown.load(Ordering::SeqCst) {
-                break 'conn;
-            }
-            match stream.peek(&mut probe) {
-                Ok(0) => break 'conn, // peer closed
-                Ok(_) => break,
-                Err(e) if http::is_timeout(&e) => {
-                    idled += IDLE_POLL;
-                    if idled >= shared.request_timeout {
-                        break 'conn; // keep-alive idle limit
-                    }
-                }
-                Err(_) => break 'conn,
-            }
+        let idle = http::idle_wait(
+            &mut || stream.peek(&mut probe),
+            IDLE_POLL,
+            shared.request_timeout,
+            &mut || {
+                sweep_expired(shared);
+                shared.shutdown.load(Ordering::SeqCst)
+            },
+        );
+        if idle == http::IdleOutcome::Close {
+            break;
         }
 
         // Request phase: one hard deadline for the whole exchange.
@@ -338,16 +439,65 @@ fn handle_connection(shared: &Shared, mut stream: TcpStream) {
 /// Put a claimed-but-undelivered result back into the pending map (as
 /// rendered bytes). Closes the ROADMAP gap where a response-write
 /// failure dropped the result: the claiming `GET /v1/jobs/{id}` is now
-/// safely retryable. Entries live until claimed or shutdown, like any
-/// other parked job.
+/// safely retryable. The entry gets a fresh TTL, and the premature
+/// delivered record is withdrawn (the peer never got the bytes).
 fn repark_failed_write(shared: &Shared, response: Response) {
     if let Some(id) = response.repark_id {
         shared
-            .pending
+            .delivered
             .lock()
-            .expect("pending jobs mutex")
-            .insert(id, Pending::Done(response.body));
+            .expect("delivered ids mutex")
+            .remove(&id);
+        park(shared, id, Pending::Done(response.body));
     }
+}
+
+/// Insert a pending entry under a fresh `result_ttl_s` deadline.
+fn park(shared: &Shared, id: u64, state: Pending) {
+    let expires_at_ms = shared.clock.now_ms().saturating_add(shared.ttl_ms);
+    shared
+        .pending
+        .lock()
+        .expect("pending jobs mutex")
+        .insert(id, Parked { state, expires_at_ms });
+}
+
+/// Remember that `id`'s result went out, so a late `DELETE` can answer
+/// `409 Conflict` instead of `404`. Records expire like parked entries.
+fn record_delivered(shared: &Shared, id: u64) {
+    let expires = shared.clock.now_ms().saturating_add(shared.ttl_ms);
+    shared
+        .delivered
+        .lock()
+        .expect("delivered ids mutex")
+        .insert(id, expires);
+}
+
+/// The TTL reaper: drop every parked entry and delivered record whose
+/// deadline passed. An evicted still-running job is cancelled
+/// cooperatively (its eventual result has no one left to claim it) and
+/// counted under `evicted`. Runs from every idle-poll slice and before
+/// every routed request, so eviction needs no dedicated thread.
+fn sweep_expired(shared: &Shared) {
+    let now = shared.clock.now_ms();
+    {
+        let mut pending = shared.pending.lock().expect("pending jobs mutex");
+        pending.retain(|_, parked| {
+            if parked.expires_at_ms > now {
+                return true;
+            }
+            if let Pending::Running { handle, .. } = &parked.state {
+                handle.cancel();
+            }
+            shared.metrics.evicted.fetch_add(1, Ordering::Relaxed);
+            false
+        });
+    }
+    shared
+        .delivered
+        .lock()
+        .expect("delivered ids mutex")
+        .retain(|_, expires| *expires > now);
 }
 
 /// Value of `key` in a raw query string (`a=1&b=2`).
@@ -366,6 +516,9 @@ fn is_backpressure(e: &Error) -> bool {
 }
 
 fn route(shared: &Shared, req: &Request) -> Response {
+    // The reaper also runs request-side, so a deployment whose workers
+    // are all mid-request (no idle pollers) still evicts on time.
+    sweep_expired(shared);
     match (req.method.as_str(), req.path.as_str()) {
         ("GET", "/healthz") => {
             Response::json(200, &Json::obj(vec![("status", Json::str("ok"))]))
@@ -375,6 +528,9 @@ fn route(shared: &Shared, req: &Request) -> Response {
         }
         ("POST", "/v1/jobs") => submit_job(shared, req),
         ("GET", path) if path.strip_prefix("/v1/jobs/").is_some() => wait_job(shared, req),
+        ("DELETE", path) if path.strip_prefix("/v1/jobs/").is_some() => {
+            cancel_job(shared, req)
+        }
         (_, "/healthz" | "/metrics" | "/v1/jobs") => {
             Response::error(405, "method not allowed")
         }
@@ -382,6 +538,55 @@ fn route(shared: &Shared, req: &Request) -> Response {
             Response::error(405, "method not allowed")
         }
         _ => Response::error(404, "no such endpoint"),
+    }
+}
+
+/// `DELETE /v1/jobs/{id}`: cancel a parked job. A pending or running
+/// entry answers `200` — the shared cancel flag makes the engine
+/// abandon work at its next between-sweep checkpoint, failing the job
+/// with [`Error::Cancelled`]. The entry stays parked so the claiming
+/// `GET` observes the cancelled outcome as **`410 Gone`** instead of an
+/// indistinguishable `404` (repeat `DELETE`s are idempotent `200`s). A
+/// re-parked finished body is simply discarded. An already-delivered
+/// result answers `409 Conflict`; an unknown id `404`.
+fn cancel_job(shared: &Shared, req: &Request) -> Response {
+    let id_text = req.path.strip_prefix("/v1/jobs/").unwrap_or("");
+    let Ok(id) = id_text.parse::<u64>() else {
+        return Response::error(400, &format!("bad job id {id_text:?}"));
+    };
+    let known = {
+        let mut pending = shared.pending.lock().expect("pending jobs mutex");
+        match pending.get(&id).map(|parked| &parked.state) {
+            Some(Pending::Running { handle, .. }) => {
+                handle.cancel();
+                true
+            }
+            Some(Pending::Done(_)) => {
+                pending.remove(&id);
+                true
+            }
+            None => false,
+        }
+    };
+    if known {
+        shared.metrics.cancelled.fetch_add(1, Ordering::Relaxed);
+        return Response::json(
+            200,
+            &Json::obj(vec![
+                ("id", Json::num(id as f64)),
+                ("status", Json::str("cancelled")),
+            ]),
+        );
+    }
+    if shared
+        .delivered
+        .lock()
+        .expect("delivered ids mutex")
+        .contains_key(&id)
+    {
+        Response::error(409, &format!("job {id} result already delivered"))
+    } else {
+        Response::error(404, &format!("unknown job {id}"))
     }
 }
 
@@ -395,6 +600,22 @@ fn submit_job(shared: &Shared, req: &Request) -> Response {
         Ok(s) => s,
         Err(e) => return Response::error(400, &format!("{e}")),
     };
+    // Content-addressed result cache: a waited submit whose canonical
+    // spec hash is cached replays the cold run's exact bytes and never
+    // touches the coordinator. Fire-and-forget submits skip the lookup
+    // — their contract is `202` + a pollable id. Uncacheable specs
+    // (file-backed sources) hash to None and count neither way.
+    let hash = cache::spec_hash(&sub.spec);
+    if sub.wait {
+        if let Some(h) = hash {
+            let hit = shared.cache.lock().expect("result cache mutex").get(h);
+            if let Some(body) = hit {
+                shared.metrics.cache_hits.fetch_add(1, Ordering::Relaxed);
+                return Response::json_bytes(200, body);
+            }
+            shared.metrics.cache_misses.fetch_add(1, Ordering::Relaxed);
+        }
+    }
     let handle = match shared.coord.try_submit(sub.spec) {
         Ok(h) => h,
         Err(e) if is_backpressure(&e) => {
@@ -409,13 +630,9 @@ fn submit_job(shared: &Shared, req: &Request) -> Response {
         // wait=true responses are not re-parked on a failed write: the
         // client never learned the id, so it resubmits (seeded jobs
         // replay exactly) instead of fishing for an orphaned entry.
-        finish_wait_with(shared, id, handle, shared.request_timeout, false)
+        finish_wait_with(shared, id, handle, hash, shared.request_timeout, false)
     } else {
-        shared
-            .pending
-            .lock()
-            .expect("pending jobs mutex")
-            .insert(id, Pending::Running(handle));
+        park(shared, id, Pending::Running { handle, hash });
         Response::json(
             202,
             &Json::obj(vec![
@@ -436,14 +653,17 @@ fn wait_job(shared: &Shared, req: &Request) -> Response {
         .lock()
         .expect("pending jobs mutex")
         .remove(&id);
-    let handle = match entry {
+    let (handle, hash) = match entry {
         None => {
             return Response::error(404, &format!("unknown (or already claimed) job {id}"))
         }
         // A result re-parked after a failed write: serve it as-is (and
         // keep it retryable should this write fail too).
-        Some(Pending::Done(body)) => return Response::json_bytes(200, body).with_repark(id),
-        Some(Pending::Running(handle)) => handle,
+        Some(Parked { state: Pending::Done(body), .. }) => {
+            record_delivered(shared, id);
+            return Response::json_bytes(200, body).with_repark(id);
+        }
+        Some(Parked { state: Pending::Running { handle, hash }, .. }) => (handle, hash),
     };
     // An explicit ?timeout_s= can only shorten the server-wide cap.
     // (The range guard also keeps Duration::from_secs_f64 panic-free on
@@ -455,37 +675,54 @@ fn wait_job(shared: &Shared, req: &Request) -> Response {
         Some(_) => return Response::error(400, "bad timeout_s"),
         None => shared.request_timeout,
     };
-    finish_wait_with(shared, id, handle, timeout, true)
+    finish_wait_with(shared, id, handle, hash, timeout, true)
 }
 
 /// Block on a job handle; on timeout the handle goes (back) into the
-/// pending map and the client gets `202 running` to retry the `GET`.
+/// pending map — under a fresh TTL — and the client gets `202 running`
+/// to retry the `GET`.
 ///
-/// With `repark` set (the claiming-GET path), a completed result is
+/// A completed result is rendered once: an `ok` outcome feeds the
+/// content-addressed cache (when the spec hashed), a cancelled outcome
+/// goes out as `410 Gone`, and in either case the id is recorded as
+/// delivered so a late `DELETE` answers `409`.
+///
+/// With `repark` set (the claiming-GET path), a delivered `200` is
 /// tagged with its id so a failed response write re-parks the rendered
 /// body ([`repark_failed_write`]) instead of dropping it.
 fn finish_wait_with(
     shared: &Shared,
     id: u64,
     handle: JobHandle,
+    hash: Option<u64>,
     timeout: Duration,
     repark: bool,
 ) -> Response {
     match handle.wait_timeout(timeout) {
         Ok(result) => {
-            let response = Response::json(200, &protocol::job_result_to_json(&result));
-            if repark {
+            let cancelled = matches!(result.outcome, Err(Error::Cancelled(_)));
+            let status = if cancelled { 410 } else { 200 };
+            let body = protocol::job_result_to_json(&result).to_string().into_bytes();
+            if result.outcome.is_ok() {
+                if let Some(h) = hash {
+                    let mut cache = shared.cache.lock().expect("result cache mutex");
+                    cache.insert(h, body.clone());
+                    shared
+                        .metrics
+                        .cache_bytes
+                        .store(cache.bytes(), Ordering::Relaxed);
+                }
+            }
+            record_delivered(shared, id);
+            let response = Response::json_bytes(status, body);
+            if repark && status == 200 {
                 response.with_repark(id)
             } else {
                 response
             }
         }
         Err(Error::Timeout(_)) => {
-            shared
-                .pending
-                .lock()
-                .expect("pending jobs mutex")
-                .insert(id, Pending::Running(handle));
+            park(shared, id, Pending::Running { handle, hash });
             Response::json(
                 202,
                 &Json::obj(vec![
@@ -527,5 +764,30 @@ mod tests {
         assert!(c.workers >= 1);
         assert!(c.max_body_bytes >= 1 << 20);
         assert!(c.request_timeout_s >= 1);
+        assert!(c.result_ttl_s >= 1);
+        assert!(c.cache_entries >= 1);
+        assert!(c.cache_dir.is_none());
+    }
+
+    /// A hand-advanced [`Clock`] (shared with `tests/lifecycle.rs` in
+    /// spirit): `now_ms` is whatever the test last stored.
+    struct FakeClock(std::sync::atomic::AtomicU64);
+
+    impl Clock for FakeClock {
+        fn now_ms(&self) -> u64 {
+            self.0.load(Ordering::Relaxed)
+        }
+    }
+
+    #[test]
+    fn monotonic_clock_advances_and_fake_clock_obeys() {
+        let real = MonotonicClock::default();
+        let a = real.now_ms();
+        let b = real.now_ms();
+        assert!(b >= a);
+        let fake = FakeClock(std::sync::atomic::AtomicU64::new(5));
+        assert_eq!(fake.now_ms(), 5);
+        fake.0.store(1_000, Ordering::Relaxed);
+        assert_eq!(fake.now_ms(), 1_000);
     }
 }

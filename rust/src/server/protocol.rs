@@ -649,6 +649,11 @@ pub fn metrics_to_json(m: &crate::coordinator::MetricsSnapshot) -> Json {
         ("pool_parallel_ops", Json::num(m.pool_parallel_ops as f64)),
         ("pool_serial_ops", Json::num(m.pool_serial_ops as f64)),
         ("pool_chunks", Json::num(m.pool_chunks as f64)),
+        ("cancelled", Json::num(m.cancelled as f64)),
+        ("evicted", Json::num(m.evicted as f64)),
+        ("cache_hits", Json::num(m.cache_hits as f64)),
+        ("cache_misses", Json::num(m.cache_misses as f64)),
+        ("cache_bytes", Json::num(m.cache_bytes as f64)),
     ])
 }
 
@@ -854,6 +859,12 @@ mod tests {
         assert!(j.get("stream_bytes_read").is_ok());
         assert!(j.get("sweeps_used").is_ok());
         assert!(j.get("mean_achieved_pve").is_ok());
+        // Lifecycle + cache counters (tentpole of the job-lifecycle PR).
+        assert!(j.get("cancelled").is_ok());
+        assert!(j.get("evicted").is_ok());
+        assert!(j.get("cache_hits").is_ok());
+        assert!(j.get("cache_misses").is_ok());
+        assert!(j.get("cache_bytes").is_ok());
     }
 
     #[test]

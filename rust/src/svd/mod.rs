@@ -79,7 +79,7 @@ pub enum SvdEngine {
 /// | Before (≤ PR 5)                          | Now                                        |
 /// |------------------------------------------|--------------------------------------------|
 /// | `SvdConfig { power_iters: q, .. }`       | `SvdConfig { stop: StopCriterion::FixedPower { q }, .. }` |
-/// | `cfg.with_power(q)` *(deprecated shim)*  | `cfg.with_fixed_power(q)`                  |
+/// | `cfg.with_power(q)` *(shim, removed)*    | `cfg.with_fixed_power(q)`                  |
 /// | *(no equivalent)*                        | `cfg.with_tolerance(pve_tol, max_sweeps)`  |
 ///
 /// `FixedPower` preserves the pre-redesign semantics exactly — same
@@ -203,13 +203,6 @@ impl SvdConfig {
         self.with_stop(StopCriterion::Tolerance { pve_tol, max_sweeps })
     }
 
-    /// Builder-style override of the power-iteration count q.
-    #[deprecated(note = "use `with_fixed_power(q)`, or `with_tolerance(pve_tol, max_sweeps)` \
-                         for dashSVD-style accuracy control")]
-    pub fn with_power(self, q: usize) -> Self {
-        self.with_fixed_power(q)
-    }
-
     /// Builder-style override of the source-pass schedule.
     pub fn with_pass_policy(mut self, policy: PassPolicy) -> Self {
         self.pass_policy = policy;
@@ -254,11 +247,10 @@ mod tests {
     }
 
     #[test]
-    #[allow(deprecated)]
-    fn deprecated_with_power_shim_still_sets_fixed_q() {
-        // The one-release compatibility shim must keep the exact
-        // pre-redesign semantics (a fixed sweep count).
-        let c = SvdConfig::paper(4).with_power(2);
+    fn with_fixed_power_keeps_power_iters_semantics() {
+        // `with_fixed_power` carries the exact pre-redesign semantics
+        // of the removed `with_power` shim (a fixed sweep count).
+        let c = SvdConfig::paper(4).with_fixed_power(2);
         assert_eq!(c.stop, StopCriterion::FixedPower { q: 2 });
     }
 }

@@ -69,11 +69,13 @@
 //! [`ShiftedRsvd::factorize_with_report`] surfaces the sweeps actually
 //! used and the achieved PVE.
 
+use std::sync::atomic::{AtomicBool, Ordering};
+
 use crate::linalg::{
     gemm, householder_qr, jacobi_svd, qr_rank1_update, sym_jacobi_eig, Dense, JacobiOpts,
 };
 use crate::rng::Rng;
-use crate::util::Result;
+use crate::util::{Error, Result};
 
 use super::ops::colsums;
 use super::{Factorization, MatVecOps, StopCriterion, SvdConfig};
@@ -155,6 +157,17 @@ pub struct SweepReport {
     pub achieved_pve: Option<f64>,
 }
 
+/// Cooperative-cancellation checkpoint: the coordinator's shared flag
+/// is polled between power sweeps (and between streamed blocks inside
+/// [`crate::linalg::Streamed`]); a set flag abandons the factorization.
+fn check_cancel(cancel: &AtomicBool) -> Result<()> {
+    if cancel.load(Ordering::Relaxed) {
+        Err(Error::Cancelled("factorization cancelled".into()))
+    } else {
+        Ok(())
+    }
+}
+
 /// The shifted randomized SVD engine.
 #[derive(Debug, Clone, Copy)]
 pub struct ShiftedRsvd {
@@ -189,6 +202,22 @@ impl ShiftedRsvd {
         mu: &[f64],
         rng: &mut dyn Rng,
     ) -> Result<(Factorization, SweepReport)> {
+        self.factorize_with_report_cancellable(x, mu, rng, &AtomicBool::new(false))
+    }
+
+    /// Like [`ShiftedRsvd::factorize_with_report`], polling a shared
+    /// cancel flag between power sweeps: when the coordinator sets it
+    /// (job cancellation / eviction), the factorization abandons its
+    /// remaining work and fails with [`Error::Cancelled`]. A never-set
+    /// flag leaves the operation sequence — and the factors —
+    /// byte-identical to the plain entry points.
+    pub fn factorize_with_report_cancellable(
+        &self,
+        x: &dyn MatVecOps,
+        mu: &[f64],
+        rng: &mut dyn Rng,
+        cancel: &AtomicBool,
+    ) -> Result<(Factorization, SweepReport)> {
         let (m, n) = x.shape();
         crate::ensure!(mu.len() == m, "mu length {} != m {}", mu.len(), m);
         let k = self.config.k;
@@ -204,30 +233,37 @@ impl ShiftedRsvd {
         // and pass policy. The FixedPower stages replay the original
         // operation sequence verbatim, so streamed byte-identity and
         // the pre-redesign fixed-q factors are preserved.
+        check_cancel(cancel)?;
         let omega = Dense::gaussian(n, kk, rng);
         let (q, sweeps_used, fro2) = match self.config.stop {
             StopCriterion::FixedPower { q: iters } => {
                 let basis = match self.config.pass_policy {
                     PassPolicy::Exact => {
                         let q0 = self.exact_basis(x, mu, &omega, shifted, kk);
-                        self.exact_power(x, mu, q0, &ones_n, iters)
+                        self.exact_power(x, mu, q0, &ones_n, iters, cancel)?
                     }
-                    PassPolicy::Fused => self.fused_range(x, mu, omega, shifted, iters),
+                    PassPolicy::Fused => {
+                        self.fused_range(x, mu, omega, shifted, iters, cancel)?
+                    }
                 };
                 (basis, iters, None)
             }
             StopCriterion::Tolerance { pve_tol, max_sweeps } => {
                 let (basis, sweeps, fro2) =
-                    self.adaptive_range(x, mu, omega, shifted, pve_tol, max_sweeps);
+                    self.adaptive_range(x, mu, omega, shifted, pve_tol, max_sweeps, cancel)?;
                 (basis, sweeps, Some(fro2))
             }
         };
+        check_cancel(cancel)?;
 
         // ---- Stage 3: project (L12) ---------------------------------------
         // Yᵀ = X̄ᵀQ (n×K) — computed transposed so the sparse path streams
         // CSR rows once; Y itself is never formed.
         let mtq = q.tmatvec(mu);
         let yt = x.tmm_rank1(&q, &ones_n, &mtq);
+        // A cancel raised mid-projection leaves `yt` truncated on the
+        // streamed path; re-check before treating it as a result.
+        check_cancel(cancel)?;
 
         // ---- Stage 4: small SVD + back-projection (L13-14) ----------------
         let (u1, s, v) = match self.config.small_svd {
@@ -319,8 +355,10 @@ impl ShiftedRsvd {
         mut q: Dense,
         ones_n: &[f64],
         iters: usize,
-    ) -> Dense {
+        cancel: &AtomicBool,
+    ) -> Result<Dense> {
         for _ in 0..iters {
+            check_cancel(cancel)?;
             // Q' = qr(X̄ᵀQ) = qr(XᵀQ − 1(μᵀQ))
             let mtq = q.tmatvec(mu); // μᵀQ, length K
             let qp = householder_qr(&x.tmm_rank1(&q, ones_n, &mtq)).0;
@@ -328,7 +366,7 @@ impl ShiftedRsvd {
             let colsum_qp = colsums(&qp);
             q = householder_qr(&x.mm_rank1(&qp, mu, &colsum_qp)).0;
         }
-        q
+        Ok(q)
     }
 
     /// Fused range finding: `q` Gram sweeps (`W ← qr(X̄ᵀ(X̄·W))`, one
@@ -343,13 +381,16 @@ impl ShiftedRsvd {
         omega: Dense,
         shifted: bool,
         iters: usize,
-    ) -> Dense {
+        cancel: &AtomicBool,
+    ) -> Result<Dense> {
         let mut w = omega; // n×K, the evolving right-side sample
         for _ in 0..iters {
+            check_cancel(cancel)?;
             let z = x.gram_sweep(&w, mu);
             w = householder_qr(&z).0; // renormalize: no data pass
         }
-        self.capture(x, mu, &w, shifted)
+        check_cancel(cancel)?;
+        Ok(self.capture(x, mu, &w, shifted))
     }
 
     /// Range capture shared by the fused and adaptive schedules:
@@ -373,6 +414,7 @@ impl ShiftedRsvd {
     ///
     /// Pass budget: 1 (`sq_fro_shifted`) + sweeps (`gram_sweep`) +
     /// 1 (capture) = sweeps + 2 before the projection stage.
+    #[allow(clippy::too_many_arguments)]
     fn adaptive_range(
         &self,
         x: &dyn MatVecOps,
@@ -381,7 +423,8 @@ impl ShiftedRsvd {
         shifted: bool,
         pve_tol: f64,
         max_sweeps: usize,
-    ) -> (Dense, usize, f64) {
+        cancel: &AtomicBool,
+    ) -> Result<(Dense, usize, f64)> {
         let k = self.config.k;
         let fro2 = x.sq_fro_shifted(mu); // one source pass
         // Orthonormalize Ω before the first sweep (n×K Householder QR,
@@ -392,6 +435,7 @@ impl ShiftedRsvd {
         let mut prev: Option<Vec<f64>> = None;
         let mut sweeps = 0usize;
         while sweeps < max_sweeps {
+            check_cancel(cancel)?;
             let mut z = x.gram_sweep(&w, mu); // one source pass
             if alpha != 0.0 {
                 // Dynamic shift: Z ← Z − α·W. A rank-K epilogue over
@@ -426,7 +470,8 @@ impl ShiftedRsvd {
                 alpha += tail / 2.0;
             }
         }
-        (self.capture(x, mu, &w, shifted), sweeps, fro2)
+        check_cancel(cancel)?;
+        Ok((self.capture(x, mu, &w, shifted), sweeps, fro2))
     }
 
     /// Convenience: factorize the mean-centered matrix (μ = row means) —
@@ -685,6 +730,50 @@ mod tests {
         };
         let a = run(PassPolicy::Exact);
         let b = run(PassPolicy::Fused);
+        let bits = |d: &Dense| d.data().iter().map(|v| v.to_bits()).collect::<Vec<_>>();
+        assert_eq!(bits(&a.u), bits(&b.u));
+        assert_eq!(bits(&a.v), bits(&b.v));
+    }
+
+    #[test]
+    fn preset_cancel_flag_aborts_factorization() {
+        let x = uniform(30, 100, 30);
+        let mu = x.row_means();
+        for cfg in [
+            SvdConfig::paper(4).with_fixed_power(2),
+            SvdConfig::paper(4).with_fixed_power(2).with_pass_policy(PassPolicy::Fused),
+            SvdConfig::paper(4).with_tolerance(1e-3, 8),
+        ] {
+            let flag = AtomicBool::new(true);
+            let err = ShiftedRsvd::new(cfg)
+                .factorize_with_report_cancellable(
+                    &x,
+                    &mu,
+                    &mut Xoshiro256pp::seed_from_u64(31),
+                    &flag,
+                )
+                .unwrap_err();
+            assert!(matches!(err, Error::Cancelled(_)), "{err}");
+        }
+    }
+
+    #[test]
+    fn unset_cancel_flag_is_byte_identical_to_plain_entry_point() {
+        let x = uniform(30, 100, 32);
+        let mu = x.row_means();
+        let cfg = SvdConfig::paper(4).with_fixed_power(1);
+        let (a, _) = ShiftedRsvd::new(cfg)
+            .factorize_with_report(&x, &mu, &mut Xoshiro256pp::seed_from_u64(33))
+            .unwrap();
+        let flag = AtomicBool::new(false);
+        let (b, _) = ShiftedRsvd::new(cfg)
+            .factorize_with_report_cancellable(
+                &x,
+                &mu,
+                &mut Xoshiro256pp::seed_from_u64(33),
+                &flag,
+            )
+            .unwrap();
         let bits = |d: &Dense| d.data().iter().map(|v| v.to_bits()).collect::<Vec<_>>();
         assert_eq!(bits(&a.u), bits(&b.u));
         assert_eq!(bits(&a.v), bits(&b.v));

@@ -28,6 +28,11 @@ pub enum Error {
     /// A bounded wait expired before the job completed (the job keeps
     /// running). The network layer maps this to HTTP 202 "running".
     Timeout(String),
+    /// The job was cancelled (`DELETE /v1/jobs/{id}` or eviction)
+    /// before or while executing; cooperative checkpoints between
+    /// sweeps/blocks abandon the work. Surfaces as the job's failed
+    /// outcome.
+    Cancelled(String),
     /// An underlying IO failure.
     Io(std::io::Error),
     /// JSON parsing or schema mismatch.
@@ -45,6 +50,7 @@ impl std::fmt::Display for Error {
             Error::Service(m) => write!(f, "service error: {m}"),
             Error::Busy(m) => write!(f, "service busy (backpressure): {m}"),
             Error::Timeout(m) => write!(f, "timed out: {m}"),
+            Error::Cancelled(m) => write!(f, "cancelled: {m}"),
             Error::Io(e) => write!(f, "io error: {e}"),
             Error::Json(m) => write!(f, "json error: {m}"),
         }

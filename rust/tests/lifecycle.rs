@@ -1,0 +1,207 @@
+//! Job-lifecycle integration tests: cancellation, TTL eviction, and
+//! the content-addressed result cache, over a real loopback server.
+//!
+//! Pinned contracts:
+//! - `DELETE /v1/jobs/{id}`: `200` on a pending/running job, whose
+//!   claiming `GET` then surfaces `Error::Cancelled` as `410 Gone`;
+//!   `404` on an unknown id; `409` once the result was delivered.
+//! - Parked entries expire after `result_ttl_s`. Time flows through
+//!   the injectable `Clock`, so eviction is driven by a hand-advanced
+//!   fake — no test sleeps.
+//! - A repeated waited submit replays the cold run's exact bytes from
+//!   the result cache without touching the coordinator (`native_jobs`
+//!   stays flat while `cache_hits` ticks).
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+
+use srsvd::coordinator::{Coordinator, CoordinatorConfig, EnginePreference};
+use srsvd::data::Distribution;
+use srsvd::linalg::stream::StreamConfig;
+use srsvd::server::client::SubmitOutcome;
+use srsvd::server::protocol::{generator_input, JobRequest};
+use srsvd::server::{Client, Clock, Server, ServerConfig};
+use srsvd::util::json::Json;
+
+fn coordinator(native_workers: usize) -> Arc<Coordinator> {
+    Arc::new(
+        Coordinator::start(CoordinatorConfig {
+            native_workers,
+            queue_capacity: 16,
+            artifact_dir: None,
+            pool_threads: Some(2),
+        })
+        .unwrap(),
+    )
+}
+
+fn server_config() -> ServerConfig {
+    ServerConfig {
+        addr: "127.0.0.1:0".into(),
+        workers: 2,
+        ..Default::default()
+    }
+}
+
+fn client_for(server: &Server) -> Client {
+    Client::connect(&server.local_addr().to_string()).unwrap()
+}
+
+fn counter(client: &mut Client, key: &str) -> u64 {
+    client.metrics().unwrap().get(key).unwrap().as_u64().unwrap()
+}
+
+/// A job slow enough that follow-up requests on the same loopback
+/// connection land while it still occupies the single native worker
+/// (same shape the `server.rs` suite uses as its "slow job").
+fn blocker_request() -> JobRequest {
+    let mut req = JobRequest::new(
+        generator_input(300, 500, Distribution::Uniform, 4, None, None),
+        16,
+    );
+    req.config = req.config.with_fixed_power(2);
+    req.engine = EnginePreference::Native;
+    req
+}
+
+/// A small job that queues behind the blocker.
+fn victim_request(seed: u64) -> JobRequest {
+    let mut req = JobRequest::new(generator_input(8, 24, Distribution::Uniform, seed, None, None), 2);
+    req.engine = EnginePreference::Native;
+    req
+}
+
+#[test]
+fn cancel_unknown_id_is_404_and_malformed_id_is_400() {
+    let coord = coordinator(1);
+    let server = Server::bind(Arc::clone(&coord), &server_config(), StreamConfig::default())
+        .unwrap();
+    let mut client = client_for(&server);
+
+    let err = client.cancel(123_456).unwrap_err();
+    let text = format!("{err}");
+    assert!(text.contains("404"), "unknown id must be 404, got: {text}");
+
+    let (status, _) = client.request("DELETE", "/v1/jobs/not-a-number", None).unwrap();
+    assert_eq!(status, 400, "malformed id must be 400");
+
+    server.shutdown();
+}
+
+#[test]
+fn cancelled_pending_job_surfaces_as_410_gone_then_409_on_recancel() {
+    let coord = coordinator(1);
+    let server = Server::bind(Arc::clone(&coord), &server_config(), StreamConfig::default())
+        .unwrap();
+    let mut client = client_for(&server);
+
+    // Occupy the only native worker so the victim stays queued (and its
+    // pre-execution cancel checkpoint is guaranteed to see the flag).
+    let SubmitOutcome::Queued(_blocker) = client.submit(&blocker_request()).unwrap() else {
+        panic!("wait=false submit must queue");
+    };
+    let SubmitOutcome::Queued(victim) = client.submit(&victim_request(7)).unwrap() else {
+        panic!("wait=false submit must queue");
+    };
+
+    assert!(client.cancel(victim).unwrap(), "cancel of a pending job must answer 200");
+    assert!(counter(&mut client, "cancelled") >= 1, "cancelled counter must tick");
+
+    // The claiming GET observes the cooperative failure as 410 Gone
+    // with the Error::Cancelled text in the job result body.
+    let err = client.wait(victim).unwrap_err();
+    let text = format!("{err}");
+    assert!(text.contains("410"), "cancelled result must claim as 410, got: {text}");
+    assert!(text.contains("cancelled"), "410 body must carry the cancel reason, got: {text}");
+
+    // The 410 delivery is a delivery: a late re-cancel answers 409.
+    assert!(!client.cancel(victim).unwrap(), "re-cancel after delivery must answer 409");
+
+    server.shutdown();
+}
+
+/// Hand-advanced [`Clock`]: `now_ms` is whatever the test last stored.
+struct FakeClock(AtomicU64);
+
+impl Clock for FakeClock {
+    fn now_ms(&self) -> u64 {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+#[test]
+fn ttl_eviction_under_the_fake_clock_never_sleeps() {
+    let coord = coordinator(1);
+    let clock = Arc::new(FakeClock(AtomicU64::new(0)));
+    let config = ServerConfig { result_ttl_s: 5, ..server_config() };
+    let server = Server::bind_with_clock(
+        Arc::clone(&coord),
+        &config,
+        StreamConfig::default(),
+        Arc::clone(&clock) as Arc<dyn Clock>,
+    )
+    .unwrap();
+    let mut client = client_for(&server);
+
+    let SubmitOutcome::Queued(_blocker) = client.submit(&blocker_request()).unwrap() else {
+        panic!("wait=false submit must queue");
+    };
+    let SubmitOutcome::Queued(victim) = client.submit(&victim_request(11)).unwrap() else {
+        panic!("wait=false submit must queue");
+    };
+
+    // Zero-timeout poll: still queued behind the blocker, so the server
+    // answers 202 and re-parks the handle under a fresh TTL deadline.
+    match client.wait_timeout(victim, 0.0).unwrap() {
+        srsvd::server::client::WaitOutcome::Running => {}
+        other => panic!("victim must still be running, got {other:?}"),
+    }
+    assert_eq!(counter(&mut client, "evicted"), 0, "nothing may expire at t=0");
+
+    // Advance past the 5 s TTL; the next routed request runs the reaper.
+    clock.0.store(5_001, Ordering::Relaxed);
+    assert!(counter(&mut client, "evicted") >= 1, "expired parked entries must be evicted");
+
+    let err = client.wait(victim).unwrap_err();
+    let text = format!("{err}");
+    assert!(text.contains("404"), "an evicted id must be gone (404), got: {text}");
+
+    server.shutdown();
+}
+
+#[test]
+fn cache_hit_replays_cold_bytes_and_skips_the_coordinator() {
+    let coord = coordinator(2);
+    let server = Server::bind(Arc::clone(&coord), &server_config(), StreamConfig::default())
+        .unwrap();
+    let mut client = client_for(&server);
+
+    let mut req = JobRequest::new(
+        generator_input(40, 120, Distribution::Uniform, 9, None, None),
+        6,
+    );
+    req.engine = EnginePreference::Native;
+    req.seed = 3;
+    req.wait = true;
+    let body = req.to_json();
+
+    let (status, cold) = client.request("POST", "/v1/jobs", Some(&body)).unwrap();
+    assert_eq!(status, 200, "cold waited submit must answer with the result");
+    assert_eq!(cold.get("ok").unwrap(), &Json::Bool(true));
+    assert!(counter(&mut client, "cache_misses") >= 1, "cold run must count a miss");
+    let native_after_cold = counter(&mut client, "native_jobs");
+
+    let (status, warm) = client.request("POST", "/v1/jobs", Some(&body)).unwrap();
+    assert_eq!(status, 200, "warm waited submit must answer with the result");
+    assert_eq!(warm, cold, "cache hit must replay the cold run byte-for-byte");
+
+    assert!(counter(&mut client, "cache_hits") >= 1, "warm run must count a hit");
+    assert!(counter(&mut client, "cache_bytes") > 0, "cached bodies must be accounted");
+    assert_eq!(
+        counter(&mut client, "native_jobs"),
+        native_after_cold,
+        "a cache hit must bypass the coordinator entirely"
+    );
+
+    server.shutdown();
+}

@@ -336,6 +336,109 @@ fn prop_json_string_escape_roundtrip() {
     });
 }
 
+/// Parse a submit body and canonicalize the resulting spec; errors
+/// become property failures.
+fn canon_of(text: &str) -> Result<Vec<u8>, String> {
+    use srsvd::linalg::stream::StreamConfig;
+    let body = srsvd::util::json::Json::parse(text).map_err(|e| e.to_string())?;
+    let sub = srsvd::server::protocol::parse_submit(&body, &StreamConfig::default())
+        .map_err(|e| e.to_string())?;
+    srsvd::server::cache::canonical_spec_bytes(&sub.spec)
+        .ok_or_else(|| format!("uncacheable spec from {text}"))
+}
+
+#[test]
+fn prop_cache_key_ignores_field_order_and_block_policy() {
+    // The result cache's canonical spec bytes must depend on what is
+    // computed, never on how the request was spelled (wire field order)
+    // or executed (block policy — results are byte-identical across
+    // block sizes, so the cache may serve across them).
+    forall("cache key: field order + block policy invariance", 30, |g| {
+        let m = g.usize_in(2, 12);
+        let n = g.usize_in(m, 24);
+        let k = g.usize_in(1, (m / 2).max(1));
+        let q = g.usize_in(0, 3);
+        let seed = g.case_seed & 0xFFFF;
+        let input = |block: usize, budget: usize| {
+            format!(
+                "\"input\":{{\"kind\":\"generator\",\"m\":{m},\"n\":{n},\
+                 \"dist\":\"normal\",\"seed\":{seed},\"block_rows\":{block},\
+                 \"budget_mb\":{budget}}}"
+            )
+        };
+        let fields = [
+            input(0, 64),
+            format!("\"k\":{k}"),
+            format!("\"power_iters\":{q}"),
+            format!("\"seed\":{}", seed ^ 0xAB),
+            "\"score\":true".to_string(),
+            "\"shift\":\"mean-center\"".to_string(),
+        ];
+        let forward = format!("{{{}}}", fields.join(","));
+        let mut rev = fields.clone();
+        rev.reverse();
+        let reversed = format!("{{{}}}", rev.join(","));
+        let mut blocked = fields.clone();
+        blocked[0] = input(g.usize_in(1, 8), g.usize_in(1, 16));
+        let blocked = format!("{{{}}}", blocked.join(","));
+        let a = canon_of(&forward)?;
+        if a != canon_of(&reversed)? {
+            return Err("field order changed the canonical bytes".into());
+        }
+        if a != canon_of(&blocked)? {
+            return Err("block policy leaked into the canonical bytes".into());
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_cache_key_separates_every_submit_knob() {
+    // Conversely: any single semantic knob change must change the
+    // canonical bytes, or the cache would serve a wrong result.
+    forall("cache key: one knob change -> new key", 30, |g| {
+        let m = g.usize_in(2, 12);
+        let n = g.usize_in(m, 24);
+        let k = g.usize_in(1, (m / 2).max(1));
+        let seed = g.case_seed & 0xFFFF;
+        let body = |dist: &str, gen_seed: u64, k: usize, q: usize, job_seed: u64, shift: &str| {
+            format!(
+                "{{\"input\":{{\"kind\":\"generator\",\"m\":{m},\"n\":{n},\
+                 \"dist\":\"{dist}\",\"seed\":{gen_seed}}},\"k\":{k},\
+                 \"power_iters\":{q},\"seed\":{job_seed},\"shift\":\"{shift}\"}}"
+            )
+        };
+        let base = canon_of(&body("uniform", seed, k, 1, seed, "mean-center"))?;
+        let perturbed = [
+            body("normal", seed, k, 1, seed, "mean-center"),
+            body("uniform", seed ^ 1, k, 1, seed, "mean-center"),
+            body("uniform", seed, k + 1, 1, seed, "mean-center"),
+            body("uniform", seed, k, 2, seed, "mean-center"),
+            body("uniform", seed, k, 1, seed ^ 1, "mean-center"),
+            body("uniform", seed, k, 1, seed, "none"),
+        ];
+        for p in &perturbed {
+            if canon_of(p)? == base {
+                return Err(format!("knob change not separated: {p}"));
+            }
+        }
+        // And the hash itself separates them too (no mixing collision
+        // across this family of nearby specs).
+        let mut hashes: Vec<u64> =
+            std::iter::once(srsvd::server::cache::content_hash(&base))
+                .chain(perturbed.iter().map(|p| {
+                    Ok::<u64, String>(srsvd::server::cache::content_hash(&canon_of(p)?))
+                }).collect::<Result<Vec<_>, _>>()?)
+                .collect();
+        hashes.sort_unstable();
+        hashes.dedup();
+        if hashes.len() != perturbed.len() + 1 {
+            return Err("hash collision among nearby specs".into());
+        }
+        Ok(())
+    });
+}
+
 #[test]
 fn prop_json_number_roundtrip_bitexact() {
     use srsvd::util::json::Json;

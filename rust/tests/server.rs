@@ -50,6 +50,7 @@ fn start_service(
             max_body_bytes: 64 << 20,
             workers: http_workers,
             request_timeout_s: 30,
+            ..Default::default()
         },
         StreamConfig::default(),
     )
@@ -251,6 +252,7 @@ fn claimed_result_surviving_failed_write_is_retryable() {
             max_body_bytes: 64 << 20,
             workers: 2,
             request_timeout_s: 1,
+            ..Default::default()
         },
         StreamConfig::default(),
     )

@@ -22,7 +22,7 @@ use srsvd::linalg::{fro_diff, Csr, Dense};
 use srsvd::parallel::{with_pool, ThreadPool};
 use srsvd::rng::{Rng, Xoshiro256pp};
 use srsvd::svd::deterministic::optimal_residual;
-use srsvd::svd::{Factorization, MatVecOps, PassPolicy, ShiftedRsvd, SvdConfig};
+use srsvd::svd::{Factorization, MatVecOps, PassPolicy, ShiftedRsvd, StopCriterion, SvdConfig};
 
 fn dense_bits(x: &Dense) -> Vec<u64> {
     x.data().iter().map(|v| v.to_bits()).collect()
@@ -418,9 +418,10 @@ fn adaptive_tolerance_is_bit_identical_across_pools_and_blocks() {
     }
 }
 
-/// `with_fixed_power(q)` is the drop-in replacement for the deprecated
-/// `with_power(q)`: same criterion, byte-identical factors, so existing
-/// fixed-q clients migrate with zero numerical drift.
+/// `with_fixed_power(q)` replaced the removed `with_power(q)` shim:
+/// same criterion whether spelled through the builder or the enum, and
+/// byte-identical factors, so fixed-q clients migrated with zero
+/// numerical drift.
 #[test]
 fn fixed_power_reproduces_pre_redesign_factors_byte_for_byte() {
     let x = input_matrix();
@@ -430,14 +431,12 @@ fn fixed_power_reproduces_pre_redesign_factors_byte_for_byte() {
             .factorize_mean_centered(&x, &mut rng)
             .expect("new api")
     };
-    #[allow(deprecated)]
     let old = {
         let mut rng = Xoshiro256pp::seed_from_u64(42);
-        ShiftedRsvd::new(SvdConfig::paper(12).with_power(1))
-            .factorize_mean_centered(&x, &mut rng)
-            .expect("deprecated shim")
+        let cfg = SvdConfig { stop: StopCriterion::FixedPower { q: 1 }, ..SvdConfig::paper(12) };
+        ShiftedRsvd::new(cfg).factorize_mean_centered(&x, &mut rng).expect("enum spelling")
     };
-    assert_identical(&new, &old, "deprecated with_power shim");
+    assert_identical(&new, &old, "fixed-power spellings");
 }
 
 /// Adaptive pass budget on streamed sources: `SourceStats.passes` is
