@@ -11,6 +11,8 @@
 use std::sync::Arc;
 
 use srsvd::bench::{Bencher, Table};
+use srsvd::linalg::gemm::kernels::{active_simd, with_precision, with_simd};
+use srsvd::linalg::gemm::{Precision, Simd};
 use srsvd::linalg::{
     gemm, householder_qr, jacobi_svd, matmul, Csr, Dense, JacobiOpts, MatmulPlan,
 };
@@ -23,17 +25,40 @@ fn gflops(flops: f64, secs: f64) -> String {
     format!("{:.2}", flops / secs / 1e9)
 }
 
-/// The parallel-execution axis: threads × matrix size for `matmul` and
-/// the fused `matmul_rank1`, pinned to explicit pools. Verifies bitwise
-/// thread-count invariance on the fly and emits the JSON rows that seed
-/// the bench trajectory (uploaded as a CI artifact).
+fn bits_equal(a: &Dense, b: &Dense) -> bool {
+    a.data()
+        .iter()
+        .zip(b.data())
+        .all(|(x, y)| x.to_bits() == y.to_bits())
+}
+
+/// The parallel-execution axis: simd × precision × threads × size for
+/// `matmul` and the fused `matmul_rank1`, pinned to explicit pools.
+/// Verifies on the fly that every kernel tier is bitwise invariant to
+/// thread count, and that the Exact tier is one bit-equality class
+/// across SIMD modes; emits the JSON rows that seed the bench
+/// trajectory (uploaded as a CI artifact). The `speedup_vs_scalar_1t`
+/// column at `n=1024 t=1` is the acceptance number for the AVX2/FMA
+/// microkernels.
 fn parallel_axis(b: &Bencher, quick: bool) -> Json {
     let sizes: &[usize] = if quick { &[512, 1024] } else { &[256, 512, 1024] };
     let threads: &[usize] = &[1, 2, 4, 8];
+    // Scalar/Fast is omitted: the Fast packed path only differs from
+    // Exact under FMA, so it would re-measure Scalar/Exact.
+    let combos: &[(Simd, Precision)] = &[
+        (Simd::Scalar, Precision::Exact),
+        (Simd::Avx2, Precision::Exact),
+        (Simd::Avx2, Precision::Fast),
+    ];
     let mut rows: Vec<Json> = Vec::new();
 
-    println!("== parallel GEMM: threads x size (f64, square) ==");
-    let mut t = Table::new(&["op", "n", "threads", "time", "GFLOP/s", "speedup"]);
+    println!(
+        "== parallel GEMM: simd x precision x threads x size (f64, square; detected simd: {}) ==",
+        active_simd().name()
+    );
+    let mut t = Table::new(&[
+        "op", "n", "simd", "tier", "threads", "time", "GFLOP/s", "speedup", "vs scalar",
+    ]);
     for &n in sizes {
         let mut rng = Xoshiro256pp::seed_from_u64(n as u64);
         let a = Dense::gaussian(n, n, &mut rng);
@@ -42,74 +67,82 @@ fn parallel_axis(b: &Bencher, quick: bool) -> Json {
         let v: Vec<f64> = (0..n).map(|_| rng.next_gaussian()).collect();
         let flops = 2.0 * (n as f64).powi(3);
         for op in ["matmul", "matmul_rank1"] {
-            let mut base_mean = 0.0;
-            let reference = {
-                let p1 = ThreadPool::new(1);
-                match op {
-                    "matmul" => gemm::matmul_with_plan_pool(&a, &c, MatmulPlan::default(), &p1),
-                    _ => gemm::matmul_rank1_with_plan_pool(
-                        &a,
-                        &c,
-                        &u,
-                        &v,
-                        MatmulPlan::default(),
-                        &p1,
-                    ),
-                }
+            let run_once = |simd: Simd, prec: Precision, pool: &ThreadPool| -> Dense {
+                with_simd(simd, || {
+                    with_precision(prec, || match op {
+                        "matmul" => {
+                            gemm::matmul_with_plan_pool(&a, &c, MatmulPlan::default(), pool)
+                        }
+                        _ => gemm::matmul_rank1_with_plan_pool(
+                            &a,
+                            &c,
+                            &u,
+                            &v,
+                            MatmulPlan::default(),
+                            pool,
+                        ),
+                    })
+                })
             };
-            for &nt in threads {
-                let pool = Arc::new(ThreadPool::new(nt));
-                let stats = b.run(&format!("{op} n={n} t={nt}"), || match op {
-                    "matmul" => gemm::matmul_with_plan_pool(&a, &c, MatmulPlan::default(), &pool),
-                    _ => gemm::matmul_rank1_with_plan_pool(
-                        &a,
-                        &c,
-                        &u,
-                        &v,
-                        MatmulPlan::default(),
-                        &pool,
-                    ),
-                });
-                if nt == 1 {
-                    base_mean = stats.mean_s;
+            let p1 = ThreadPool::new(1);
+            let scalar_ref = run_once(Simd::Scalar, Precision::Exact, &p1);
+            let mut scalar_1t_mean = 0.0;
+            for &(simd, prec) in combos {
+                let reference = run_once(simd, prec, &p1);
+                // The Exact tier is one bit-equality class across SIMD
+                // modes — that's its contract.
+                if prec == Precision::Exact {
+                    assert!(
+                        bits_equal(&scalar_ref, &reference),
+                        "{op} n={n} simd={}: exact tier diverged from scalar!",
+                        simd.name()
+                    );
                 }
-                let speedup = base_mean / stats.mean_s.max(1e-12);
-                // Thread-count invariance is part of the contract.
-                let check = match op {
-                    "matmul" => gemm::matmul_with_plan_pool(&a, &c, MatmulPlan::default(), &pool),
-                    _ => gemm::matmul_rank1_with_plan_pool(
-                        &a,
-                        &c,
-                        &u,
-                        &v,
-                        MatmulPlan::default(),
-                        &pool,
-                    ),
-                };
-                let bit_identical = reference
-                    .data()
-                    .iter()
-                    .zip(check.data())
-                    .all(|(x, y)| x.to_bits() == y.to_bits());
-                assert!(bit_identical, "{op} n={n} t={nt}: thread-count variance!");
-                t.row(&[
-                    op.to_string(),
-                    n.to_string(),
-                    nt.to_string(),
-                    fmt_duration(stats.mean_s),
-                    gflops(flops, stats.mean_s),
-                    format!("{speedup:.2}x"),
-                ]);
-                rows.push(Json::obj(vec![
-                    ("op", Json::str(op)),
-                    ("n", Json::num(n as f64)),
-                    ("threads", Json::num(nt as f64)),
-                    ("mean_s", Json::num(stats.mean_s)),
-                    ("p95_s", Json::num(stats.p95_s)),
-                    ("gflops", Json::num(flops / stats.mean_s / 1e9)),
-                    ("speedup_vs_1", Json::num(speedup)),
-                    ("bit_identical", Json::Bool(bit_identical)),
-                ]));
+                let mut base_mean = 0.0;
+                for &nt in threads {
+                    let pool = Arc::new(ThreadPool::new(nt));
+                    let label =
+                        format!("{op} n={n} {}/{} t={nt}", simd.name(), prec.name());
+                    let stats = b.run(&label, || run_once(simd, prec, &pool));
+                    if nt == 1 {
+                        base_mean = stats.mean_s;
+                        if simd == Simd::Scalar && prec == Precision::Exact {
+                            scalar_1t_mean = stats.mean_s;
+                        }
+                    }
+                    let speedup = base_mean / stats.mean_s.max(1e-12);
+                    let vs_scalar = scalar_1t_mean / stats.mean_s.max(1e-12);
+                    // Thread-count invariance is part of the contract —
+                    // for every tier (Fast is deterministic too, its
+                    // rounding just differs from scalar).
+                    let check = run_once(simd, prec, &pool);
+                    let bit_identical = bits_equal(&reference, &check);
+                    assert!(bit_identical, "{label}: thread-count variance!");
+                    t.row(&[
+                        op.to_string(),
+                        n.to_string(),
+                        simd.name().to_string(),
+                        prec.name().to_string(),
+                        nt.to_string(),
+                        fmt_duration(stats.mean_s),
+                        gflops(flops, stats.mean_s),
+                        format!("{speedup:.2}x"),
+                        format!("{vs_scalar:.2}x"),
+                    ]);
+                    rows.push(Json::obj(vec![
+                        ("op", Json::str(op)),
+                        ("n", Json::num(n as f64)),
+                        ("simd", Json::str(simd.name())),
+                        ("precision", Json::str(prec.name())),
+                        ("threads", Json::num(nt as f64)),
+                        ("mean_s", Json::num(stats.mean_s)),
+                        ("p95_s", Json::num(stats.p95_s)),
+                        ("gflops", Json::num(flops / stats.mean_s / 1e9)),
+                        ("speedup_vs_1", Json::num(speedup)),
+                        ("speedup_vs_scalar_1t", Json::num(vs_scalar)),
+                        ("bit_identical", Json::Bool(bit_identical)),
+                    ]));
+                }
             }
         }
     }
@@ -118,6 +151,7 @@ fn parallel_axis(b: &Bencher, quick: bool) -> Json {
     Json::obj(vec![
         ("bench", Json::str("gemm_parallel")),
         ("quick", Json::Bool(quick)),
+        ("detected_simd", Json::str(active_simd().name())),
         (
             "host_parallelism",
             Json::num(

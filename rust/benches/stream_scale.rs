@@ -178,6 +178,77 @@ fn main() {
             }
         }
     }
+    // Mixed-load leg: a file-backed streamed factorization loops on a
+    // second thread while the dense baseline is re-timed on this one.
+    // The streamed lane's blocking reads sit on the io pool, so the
+    // dense lane keeps its cpu-pool workers — `vs dense` here measures
+    // how much compute the concurrent streamed job actually steals.
+    {
+        let reps = if quick { 2 } else { 4 };
+        let stop = std::sync::atomic::AtomicBool::new(false);
+        let bl = 256.min(m);
+        let mut dense_loaded_mean = 0.0;
+        let mut stream_runs = 0u64;
+        std::thread::scope(|scope| {
+            let streamer = scope.spawn(|| {
+                let mut runs = 0u64;
+                loop {
+                    let w = Streamed::with_block_rows(&file, bl).with_prefetch(true);
+                    let mut rng = Xoshiro256pp::seed_from_u64(seed ^ 0xFA);
+                    let f =
+                        ShiftedRsvd::new(exact_cfg).factorize(&w, &mu, &mut rng).unwrap();
+                    assert!(
+                        identical(&baseline, &f),
+                        "mixed leg: streamed factors diverged under load"
+                    );
+                    runs += 1;
+                    if stop.load(std::sync::atomic::Ordering::Relaxed) {
+                        break;
+                    }
+                }
+                runs
+            });
+            let t0 = std::time::Instant::now();
+            for _ in 0..reps {
+                let mut rng = Xoshiro256pp::seed_from_u64(seed ^ 0xFA);
+                let f = ShiftedRsvd::new(exact_cfg).factorize(&dense, &mu, &mut rng).unwrap();
+                assert!(
+                    identical(&baseline, &f),
+                    "mixed leg: dense factors diverged under load"
+                );
+            }
+            dense_loaded_mean = t0.elapsed().as_secs_f64() / reps as f64;
+            stop.store(true, std::sync::atomic::Ordering::Relaxed);
+            stream_runs = streamer.join().expect("streamed lane panicked");
+        });
+        let slowdown = dense_loaded_mean / s_dense.mean_s.max(1e-12);
+        t.row(&[
+            "dense+stream".into(),
+            "exact".into(),
+            "true".into(),
+            bl.to_string(),
+            "-".into(),
+            fmt_duration(dense_loaded_mean),
+            format!("{slowdown:.2}x"),
+        ]);
+        rows.push(Json::obj(vec![
+            ("leg", Json::str("mixed_load")),
+            ("block_rows", Json::num(bl as f64)),
+            ("pass_policy", Json::str("exact")),
+            ("prefetch", Json::Bool(true)),
+            ("passes", Json::Null),
+            ("mean_s", Json::num(dense_loaded_mean)),
+            ("p95_s", Json::Null),
+            ("slowdown_vs_dense", Json::num(slowdown)),
+            ("concurrent_stream_runs", Json::num(stream_runs as f64)),
+            ("bit_identical", Json::Bool(true)),
+        ]));
+        println!(
+            "mixed load: dense mean {} ({slowdown:.2}x solo) with {stream_runs} concurrent \
+             streamed runs",
+            fmt_duration(dense_loaded_mean)
+        );
+    }
     print!("{}", t.render());
 
     let report = Json::obj(vec![

@@ -13,8 +13,12 @@
 //! artifact_dir   = artifacts
 //!
 //! [parallel]
-//! threads = 8              # shared linalg pool; 0/unset = auto
+//! threads = 8              # cpu (linalg) pool; 0/unset = auto
 //!                          # (SRSVD_THREADS env overrides auto-sizing)
+//! io_threads = 2           # io pool: prefetch readers + connection
+//!                          # workers; 0/unset = auto (SRSVD_IO_THREADS)
+//! simd = on                # runtime SIMD kernel dispatch (on|off);
+//!                          # SRSVD_SIMD=off wins over the config
 //!
 //! [stream]
 //! block_rows = 0           # rows per resident block; 0 = derive from budget
@@ -40,6 +44,8 @@
 //! # max_sweeps = 32           #   mutually exclusive with power_iters
 //! basis       = direct        # direct | qr-update-paper | qr-update-exact
 //! small_svd   = jacobi        # jacobi | gram
+//! precision   = exact         # kernel tier: exact (byte-identical) | fast
+//!                             #   (packed AVX2/FMA, last-ulp differences)
 //! ```
 //!
 //! All stopping-criterion spellings — `[svd] power_iters`/`pve_tol`/
@@ -52,7 +58,7 @@ use std::path::PathBuf;
 
 use crate::coordinator::CoordinatorConfig;
 use crate::linalg::stream::StreamConfig;
-use crate::svd::{BasisMethod, PassPolicy, SmallSvdMethod, StopCriterion, SvdConfig};
+use crate::svd::{BasisMethod, PassPolicy, Precision, SmallSvdMethod, StopCriterion, SvdConfig};
 use crate::util::{Error, Result};
 
 /// Raw parsed file: section -> key -> value.
@@ -139,11 +145,27 @@ impl RawConfig {
             Some(dir) => cfg.artifact_dir = Some(PathBuf::from(dir)),
             None => {}
         }
-        // [parallel] threads: 0 (or unset) keeps auto-sizing.
+        // [parallel] threads / io_threads: 0 (or unset) keeps auto-sizing.
         if let Some(t) = self.get_usize("parallel", "threads")? {
             cfg.pool_threads = if t == 0 { None } else { Some(t) };
         }
+        if let Some(t) = self.get_usize("parallel", "io_threads")? {
+            cfg.io_threads = if t == 0 { None } else { Some(t) };
+        }
         Ok(cfg)
+    }
+
+    /// The `[parallel] simd` switch, if set: `Some(false)` forces the
+    /// portable scalar kernels process-wide (applied by the binary via
+    /// [`crate::linalg::gemm::kernels::set_simd_enabled`]). The
+    /// `SRSVD_SIMD=off` env override wins regardless.
+    pub fn parallel_simd(&self) -> Result<Option<bool>> {
+        match self.get("parallel", "simd") {
+            None => Ok(None),
+            Some(v) => parse_switch(v)
+                .map(Some)
+                .ok_or_else(|| Error::Invalid(format!("parallel.simd: not a boolean: {v:?}"))),
+        }
     }
 
     /// Build the out-of-core streaming config (defaults where unset):
@@ -214,6 +236,9 @@ impl RawConfig {
         }
         if let Some(s) = self.get("svd", "small_svd") {
             cfg.small_svd = parse_small_svd(s)?;
+        }
+        if let Some(p) = self.get("svd", "precision") {
+            cfg.precision = parse_precision(p)?;
         }
         // The pass schedule lives in the [stream] section — it is the
         // out-of-core wall-clock knob — but lands on SvdConfig, which
@@ -305,6 +330,17 @@ pub fn parse_pass_policy(s: &str) -> Result<PassPolicy> {
         _ => Err(Error::Invalid(format!(
             "unknown pass_policy {s:?} (exact | fused)"
         ))),
+    }
+}
+
+/// Parse a kernel arithmetic tier name (`exact | fast`) — the
+/// `[svd] precision` knob, the `--precision` CLI flag, and the wire
+/// protocol's `precision` field.
+pub fn parse_precision(s: &str) -> Result<Precision> {
+    match s {
+        "exact" => Ok(Precision::Exact),
+        "fast" => Ok(Precision::Fast),
+        _ => Err(Error::Invalid(format!("unknown precision {s:?} (exact | fast)"))),
     }
 }
 
@@ -416,6 +452,45 @@ small_svd = gram
         // Non-integer errors.
         let raw = RawConfig::parse("[parallel]\nthreads = many\n").unwrap();
         assert!(raw.coordinator().is_err());
+    }
+
+    #[test]
+    fn parallel_io_threads_knob() {
+        let raw = RawConfig::parse("[parallel]\nio_threads = 3\n").unwrap();
+        assert_eq!(raw.coordinator().unwrap().io_threads, Some(3));
+        // 0 and unset both mean auto (the process-wide io pool).
+        let raw = RawConfig::parse("[parallel]\nio_threads = 0\n").unwrap();
+        assert_eq!(raw.coordinator().unwrap().io_threads, None);
+        let raw = RawConfig::parse("").unwrap();
+        assert_eq!(raw.coordinator().unwrap().io_threads, None);
+        let raw = RawConfig::parse("[parallel]\nio_threads = lots\n").unwrap();
+        assert!(raw.coordinator().is_err());
+    }
+
+    #[test]
+    fn parallel_simd_switch() {
+        let raw = RawConfig::parse("[parallel]\nsimd = off\n").unwrap();
+        assert_eq!(raw.parallel_simd().unwrap(), Some(false));
+        let raw = RawConfig::parse("[parallel]\nsimd = on\n").unwrap();
+        assert_eq!(raw.parallel_simd().unwrap(), Some(true));
+        let raw = RawConfig::parse("").unwrap();
+        assert_eq!(raw.parallel_simd().unwrap(), None);
+        let raw = RawConfig::parse("[parallel]\nsimd = turbo\n").unwrap();
+        assert!(raw.parallel_simd().is_err());
+    }
+
+    #[test]
+    fn svd_precision_knob() {
+        let raw = RawConfig::parse("[svd]\nprecision = fast\n").unwrap();
+        assert_eq!(raw.svd().unwrap().precision, Precision::Fast);
+        let raw = RawConfig::parse("[svd]\nprecision = exact\n").unwrap();
+        assert_eq!(raw.svd().unwrap().precision, Precision::Exact);
+        let raw = RawConfig::parse("").unwrap();
+        assert_eq!(raw.svd().unwrap().precision, Precision::Exact);
+        let raw = RawConfig::parse("[svd]\nprecision = warp\n").unwrap();
+        assert!(raw.svd().is_err());
+        assert!(parse_precision("bogus").is_err());
+        assert_eq!(parse_precision("fast").unwrap(), Precision::Fast);
     }
 
     #[test]

@@ -135,6 +135,12 @@ impl Metrics {
             pool_parallel_ops: 0,
             pool_serial_ops: 0,
             pool_chunks: 0,
+            pool_spawned: 0,
+            io_threads: 0,
+            io_parallel_ops: 0,
+            io_serial_ops: 0,
+            io_chunks: 0,
+            io_spawned: 0,
         }
     }
 }
@@ -192,14 +198,27 @@ pub struct MetricsSnapshot {
     pub cache_misses: u64,
     /// Rendered result bytes resident in the result cache.
     pub cache_bytes: u64,
-    /// Size of the shared linalg thread pool.
+    /// Size of the shared linalg (cpu) thread pool.
     pub pool_threads: usize,
-    /// Linalg operations the pool dispatched across threads.
+    /// Linalg operations the cpu pool dispatched across threads.
     pub pool_parallel_ops: u64,
-    /// Linalg operations the pool ran inline (small inputs / size-1 pool).
+    /// Linalg operations the cpu pool ran inline (small inputs / size-1 pool).
     pub pool_serial_ops: u64,
-    /// Total chunks executed by parallel operations.
+    /// Total chunks executed by the cpu pool's parallel operations.
     pub pool_chunks: u64,
+    /// Fire-and-forget jobs handed to the cpu pool via `spawn`.
+    pub pool_spawned: u64,
+    /// Size of the io thread pool (prefetch readers, connection workers).
+    pub io_threads: usize,
+    /// Operations the io pool dispatched across threads.
+    pub io_parallel_ops: u64,
+    /// Operations the io pool ran inline.
+    pub io_serial_ops: u64,
+    /// Total chunks executed by the io pool's parallel operations.
+    pub io_chunks: u64,
+    /// Fire-and-forget jobs handed to the io pool via `spawn` —
+    /// connection drain loops and scoped prefetch readers land here.
+    pub io_spawned: u64,
 }
 
 impl std::fmt::Display for MetricsSnapshot {
@@ -208,7 +227,8 @@ impl std::fmt::Display for MetricsSnapshot {
             f,
             "submitted={} completed={} failed={} native={} artifact={} \
              depth={} inflight={} mean_exec={:.3}ms mean_queue={:.3}ms max_exec={:.3}ms \
-             pool[threads={} par_ops={} serial_ops={} chunks={}] \
+             pool[threads={} par_ops={} serial_ops={} chunks={} spawned={}] \
+             io[threads={} par_ops={} serial_ops={} chunks={} spawned={}] \
              stream[passes={} read={}B] \
              http[accepted={} rejected={} in={}B out={}B] \
              sweeps[used={} mean_pve={:.4}] \
@@ -228,6 +248,12 @@ impl std::fmt::Display for MetricsSnapshot {
             self.pool_parallel_ops,
             self.pool_serial_ops,
             self.pool_chunks,
+            self.pool_spawned,
+            self.io_threads,
+            self.io_parallel_ops,
+            self.io_serial_ops,
+            self.io_chunks,
+            self.io_spawned,
             self.stream_passes,
             self.stream_bytes_read,
             self.http_accepted,
@@ -304,5 +330,9 @@ mod tests {
         assert_eq!(s.cache_bytes, 512);
         assert!(text.contains("cache[hits=7 misses=3 bytes=512B]"), "{text}");
         assert!(text.contains("lifecycle[cancelled=2 evicted=1]"), "{text}");
+        // The raw snapshot carries zeroed pool segments; the coordinator
+        // overlays both pools' live stats.
+        assert!(text.contains("pool[threads=0 par_ops=0 serial_ops=0 chunks=0 spawned=0]"), "{text}");
+        assert!(text.contains("io[threads=0 par_ops=0 serial_ops=0 chunks=0 spawned=0]"), "{text}");
     }
 }

@@ -60,6 +60,12 @@ pub struct CoordinatorConfig {
     /// on (`[parallel] threads` in srsvd.conf). `None` = the process
     /// global pool (`SRSVD_THREADS` / all cores).
     pub pool_threads: Option<usize>,
+    /// Size of the io pool (`[parallel] io_threads`) that carries
+    /// streamed prefetch readers and server connection workers, kept
+    /// separate from the cpu pool so blocking reads cannot starve
+    /// GEMM/SVD compute. `None` = the process global io pool
+    /// (`SRSVD_IO_THREADS` / a small core-count-derived default).
+    pub io_threads: Option<usize>,
 }
 
 impl Default for CoordinatorConfig {
@@ -69,6 +75,7 @@ impl Default for CoordinatorConfig {
             queue_capacity: 256,
             artifact_dir: default_artifact_dir(),
             pool_threads: None,
+            io_threads: None,
         }
     }
 }
@@ -142,8 +149,11 @@ pub struct Coordinator {
     artifact_tx: Option<SyncSender<WorkItem>>,
     manifest: Option<Manifest>,
     metrics: Arc<Metrics>,
-    /// Shared linalg pool the native workers execute on.
+    /// Shared linalg (cpu) pool the native workers execute on.
     pool: Arc<ThreadPool>,
+    /// Shared io pool: streamed prefetch readers and (when the network
+    /// layer is attached) connection workers run here.
+    io: Arc<ThreadPool>,
     next_id: AtomicU64,
     native_handles: Vec<std::thread::JoinHandle<()>>,
     actor_handle: Option<std::thread::JoinHandle<()>>,
@@ -163,6 +173,13 @@ impl Coordinator {
             Some(t) => Arc::new(ThreadPool::new(t)),
             None => parallel::global(),
         };
+        // The io pool is always `named` (dedicated workers): a size-1 io
+        // pool still runs its jobs off-thread, which is what keeps a
+        // blocking read from pinning a compute worker.
+        let io = match config.io_threads {
+            Some(t) => Arc::new(ThreadPool::named(t, "io")),
+            None => parallel::global_io(),
+        };
 
         // Native workers: shared bounded queue behind a mutexed receiver.
         let (native_tx, native_rx) = sync_channel::<WorkItem>(config.queue_capacity);
@@ -172,10 +189,11 @@ impl Coordinator {
             let rx = Arc::clone(&native_rx);
             let mx = Arc::clone(&metrics);
             let pl = Arc::clone(&pool);
+            let iop = Arc::clone(&io);
             native_handles.push(
                 std::thread::Builder::new()
                     .name(format!("srsvd-native-{w}"))
-                    .spawn(move || native_loop(rx, mx, pl))
+                    .spawn(move || native_loop(rx, mx, pl, iop))
                     .map_err(|e| Error::Service(format!("spawn worker: {e}")))?,
             );
         }
@@ -197,9 +215,11 @@ impl Coordinator {
         };
 
         crate::log_info!(
-            "coordinator: {} native workers on a {}-thread linalg pool, artifact engine: {}",
+            "coordinator: {} native workers on a {}-thread cpu pool + {}-thread io pool, \
+             artifact engine: {}",
             config.native_workers,
             pool.threads(),
+            io.threads(),
             if artifact_tx.is_some() { "on" } else { "off" }
         );
         Ok(Coordinator {
@@ -208,6 +228,7 @@ impl Coordinator {
             manifest,
             metrics,
             pool,
+            io,
             next_id: AtomicU64::new(1),
             native_handles,
             actor_handle,
@@ -221,10 +242,11 @@ impl Coordinator {
             queue_capacity: 256,
             artifact_dir: None,
             pool_threads: None,
+            io_threads: None,
         })
     }
 
-    /// Service counters plus the shared pool's stats.
+    /// Service counters plus both pools' stats.
     pub fn metrics(&self) -> MetricsSnapshot {
         let mut s = self.metrics.snapshot();
         let ps = self.pool.stats();
@@ -232,7 +254,21 @@ impl Coordinator {
         s.pool_parallel_ops = ps.parallel_ops;
         s.pool_serial_ops = ps.serial_ops;
         s.pool_chunks = ps.chunks;
+        s.pool_spawned = ps.spawned;
+        let is = self.io.stats();
+        s.io_threads = is.threads;
+        s.io_parallel_ops = is.parallel_ops;
+        s.io_serial_ops = is.serial_ops;
+        s.io_chunks = is.chunks;
+        s.io_spawned = is.spawned;
         s
+    }
+
+    /// The io pool this coordinator routes blocking work onto — the
+    /// network layer runs its connection workers here so request
+    /// plumbing shares capacity with prefetch readers, not with GEMM.
+    pub fn io_pool(&self) -> Arc<ThreadPool> {
+        Arc::clone(&self.io)
     }
 
     /// The loaded artifact manifest, when the artifact engine is on.
@@ -340,10 +376,17 @@ impl Drop for Coordinator {
     }
 }
 
-fn native_loop(rx: Arc<Mutex<Receiver<WorkItem>>>, metrics: Arc<Metrics>, pool: Arc<ThreadPool>) {
+fn native_loop(
+    rx: Arc<Mutex<Receiver<WorkItem>>>,
+    metrics: Arc<Metrics>,
+    pool: Arc<ThreadPool>,
+    io: Arc<ThreadPool>,
+) {
     // Every linalg hot path this worker executes dispatches onto the
-    // coordinator's shared pool instead of running serial.
+    // coordinator's shared cpu pool instead of running serial; streamed
+    // prefetch readers dispatch onto the io pool.
     parallel::set_thread_pool(Some(pool));
+    parallel::set_io_pool(Some(io));
     loop {
         let item = {
             let guard = rx.lock().expect("queue mutex poisoned");
@@ -500,6 +543,7 @@ mod tests {
             queue_capacity: 1,
             artifact_dir: None,
             pool_threads: None,
+            io_threads: None,
         })
         .unwrap();
         let mut handles = Vec::new();
@@ -535,6 +579,7 @@ mod tests {
             queue_capacity: 8,
             artifact_dir: None,
             pool_threads: Some(1),
+            io_threads: None,
         })
         .unwrap();
         let mut slow = dense_spec(1);
@@ -579,13 +624,17 @@ mod tests {
             queue_capacity: 16,
             artifact_dir: None,
             pool_threads: Some(3),
+            io_threads: Some(2),
         })
         .unwrap();
         let r = coord.submit_blocking(dense_spec(11)).unwrap();
         assert!(r.outcome.is_ok());
         let m = coord.metrics();
         assert_eq!(m.pool_threads, 3);
-        assert!(format!("{m}").contains("pool[threads=3"));
+        assert_eq!(m.io_threads, 2);
+        let text = format!("{m}");
+        assert!(text.contains("pool[threads=3"), "{text}");
+        assert!(text.contains("io[threads=2"), "{text}");
         coord.shutdown();
     }
 }

@@ -10,7 +10,7 @@
 //! exist as a single operand — runs on the native engine.
 
 use crate::runtime::Manifest;
-use crate::svd::{BasisMethod, PassPolicy, SvdEngine};
+use crate::svd::{BasisMethod, PassPolicy, Precision, SvdEngine};
 use crate::util::{Error, Result};
 
 use super::job::{EnginePreference, JobSpec, MatrixInput};
@@ -88,6 +88,13 @@ fn find_artifact(spec: &JobSpec, manifest: Option<&Manifest>) -> std::result::Re
             "pass_policy={} is native-only: the AOT pipeline compiles the exact \
              pass schedule",
             spec.config.pass_policy.name()
+        ));
+    }
+    if spec.config.precision != Precision::Exact {
+        return Err(format!(
+            "precision={} is native-only: artifacts are compiled against the \
+             exact kernel tier",
+            spec.config.precision.name()
         ));
     }
     // Artifacts are compiled for a fixed q; the adaptive tolerance mode
@@ -196,12 +203,19 @@ mod tests {
         let msg = format!("{}", route(&adaptive, None).unwrap_err());
         assert!(msg.contains("pve_tol"), "{msg}");
 
+        let mut fast = dense_job(100, 1000, 10, EnginePreference::ArtifactOnly);
+        fast.config = fast.config.with_precision(Precision::Fast);
+        let msg = format!("{}", route(&fast, None).unwrap_err());
+        assert!(msg.contains("precision=fast"), "{msg}");
+
         // Auto still silently falls back native for the same specs.
         let m = manifest();
         fused.engine = EnginePreference::Auto;
         adaptive.engine = EnginePreference::Auto;
+        fast.engine = EnginePreference::Auto;
         assert_eq!(route(&fused, m.as_ref()).unwrap(), Route::Native);
         assert_eq!(route(&adaptive, m.as_ref()).unwrap(), Route::Native);
+        assert_eq!(route(&fast, m.as_ref()).unwrap(), Route::Native);
     }
 
     #[test]

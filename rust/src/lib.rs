@@ -20,13 +20,21 @@
 //!   prefetch pipeline (reads overlap the GEMM) and, under
 //!   [`svd::PassPolicy::Fused`], a fused Gram sweep that cuts a
 //!   factorization from `2 + 2q` source passes to `q + 2`.
-//! * [`parallel`] — the execution subsystem: a chunked, self-scheduling
-//!   thread pool (std threads + channels only) shared process-wide.
-//!   Sized by the `SRSVD_THREADS` env var or the `[parallel] threads`
-//!   config knob (default: all cores). The GEMM / rank-1 / CSR hot
-//!   paths partition their *output rows* over it, which keeps results
-//!   bit-identical across every pool size — seeded experiments stay
-//!   reproducible no matter the machine.
+//! * [`parallel`] — the execution subsystem: chunked, self-scheduling
+//!   thread pools (std threads + channels only), split into a **cpu
+//!   pool** for compute (`SRSVD_THREADS` / `[parallel] threads`,
+//!   default all cores) and an **io pool** for blocking work —
+//!   streamed-prefetch readers and the server's connection workers
+//!   (`SRSVD_IO_THREADS` / `[parallel] io_threads`). The GEMM /
+//!   rank-1 / CSR hot paths partition their *output rows* over the cpu
+//!   pool, which keeps results bit-identical across every pool size —
+//!   seeded experiments stay reproducible no matter the machine. The
+//!   GEMM inner loops themselves dispatch to runtime-detected SIMD
+//!   microkernels ([`linalg::gemm::kernels`]): the default
+//!   [`svd::Precision::Exact`] tier preserves scalar evaluation order
+//!   exactly, while [`svd::Precision::Fast`] trades last-ulps
+//!   reproducibility for packed AVX2/FMA panels (`SRSVD_SIMD=off`
+//!   forces the portable scalar path).
 //! * [`svd`] — the paper's algorithms: deterministic SVD oracle,
 //!   the RSVD baseline, and [`svd::ShiftedRsvd`] (Algorithm 1) with
 //!   dense and sparse paths.
@@ -132,7 +140,7 @@ pub mod prelude {
     };
     pub use crate::rng::{Rng, Xoshiro256pp};
     pub use crate::svd::{
-        Factorization, MatVecOps, PassPolicy, Pca, Rsvd, ShiftedRsvd, StopCriterion, SvdConfig,
-        SvdEngine, SweepReport,
+        Factorization, MatVecOps, PassPolicy, Pca, Precision, Rsvd, ShiftedRsvd, StopCriterion,
+        SvdConfig, SvdEngine, SweepReport,
     };
 }

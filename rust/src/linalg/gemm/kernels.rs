@@ -1,0 +1,603 @@
+//! Runtime-dispatched SIMD microkernels behind the blocked GEMM.
+//!
+//! The dispatcher picks a [`Kernel`] once per product on the *calling*
+//! thread (pool workers receive the decision by value and never re-read
+//! thread-locals), from three inputs:
+//!
+//! * hardware — `is_x86_feature_detected!("avx2"/"fma")`, probed once
+//!   per process, with the `SRSVD_SIMD=off` env override folded in;
+//! * the `[parallel] simd` config switch ([`set_simd_enabled`]);
+//! * the requested [`Precision`] tier, thread-scoped via
+//!   [`with_precision`] (the svd layer sets it from `SvdConfig`).
+//!
+//! **Exact tier.** The AVX2 kernels mirror the scalar 4-way-unrolled
+//! AXPY *per lane*: `t = a0·b0; t += a1·b1; t += a2·b2; t += a3·b3;
+//! c += t` with plain mul/add — no FMA — which is element-for-element
+//! the scalar expression `c[j] += a0*b0[j] + a1*b1[j] + a2*b2[j] +
+//! a3*b3[j]` left-associated. Exact-tier results are therefore
+//! **bit-identical** to the portable fallback on every host, which is
+//! what lets `tests/determinism.rs` pin factors across simd on/off ×
+//! pool sizes. The win comes from issuing 4 lanes per instruction
+//! (the crate's baseline x86-64 codegen is SSE2-only).
+//!
+//! **Fast tier.** An opt-in packed 4×8 register-blocked microkernel
+//! ([`MR`]×[`NR`] in 8 ymm accumulators) over zero-padded A/B panels,
+//! contracted with `_mm256_fmadd_pd`. FMA skips the intermediate
+//! rounding, so Fast results differ from Exact in the last ulps —
+//! still deterministic and pool-partition invariant (every output row
+//! owns its accumulator lanes and the k order is fixed), but not
+//! bit-equal to the scalar kernel. Accuracy vs Exact is pinned to
+//! ≤1e-12 relative factor error in `tests/determinism.rs`.
+
+use std::cell::Cell;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::OnceLock;
+
+use super::Dense;
+
+/// Kernel arithmetic tier. Carried by `SvdConfig` (`[svd] precision`,
+/// `--precision`, wire field `precision`) and scoped onto the
+/// factorization thread via [`with_precision`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Precision {
+    /// Bit-identical to the portable scalar kernel (default). SIMD may
+    /// still be used, but only in lane arrangements that reproduce the
+    /// scalar accumulation order exactly.
+    Exact,
+    /// Packed-panel FMA microkernels: fastest, deterministic, but the
+    /// contraction rounding differs from the scalar kernel in the last
+    /// ulps, so factors are not byte-comparable across tiers.
+    Fast,
+}
+
+impl Precision {
+    /// Canonical config/wire spelling (`exact` / `fast`).
+    pub fn name(self) -> &'static str {
+        match self {
+            Precision::Exact => "exact",
+            Precision::Fast => "fast",
+        }
+    }
+}
+
+/// SIMD instruction tier the dispatcher may use.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Simd {
+    /// Portable scalar kernels only (LLVM auto-vectorization aside).
+    Scalar,
+    /// AVX2 `std::arch` kernels (+FMA on the Fast tier).
+    Avx2,
+}
+
+impl Simd {
+    /// Display spelling (`scalar` / `avx2`).
+    pub fn name(self) -> &'static str {
+        match self {
+            Simd::Scalar => "scalar",
+            Simd::Avx2 => "avx2",
+        }
+    }
+}
+
+/// `[parallel] simd = off` lands here; `SRSVD_SIMD=off` wins regardless.
+static DISABLED: AtomicBool = AtomicBool::new(false);
+static HW: OnceLock<Simd> = OnceLock::new();
+
+thread_local! {
+    static SIMD_OVERRIDE: Cell<Option<Simd>> = const { Cell::new(None) };
+    static PRECISION: Cell<Precision> = const { Cell::new(Precision::Exact) };
+}
+
+fn hw_simd() -> Simd {
+    #[cfg(target_arch = "x86_64")]
+    {
+        if std::arch::is_x86_feature_detected!("avx2")
+            && std::arch::is_x86_feature_detected!("fma")
+        {
+            return Simd::Avx2;
+        }
+    }
+    Simd::Scalar
+}
+
+/// Hardware tier, probed once per process with the `SRSVD_SIMD` env
+/// override folded in (`off|0|false|no|scalar` forces the portable
+/// kernels before any config is read).
+fn detected() -> Simd {
+    *HW.get_or_init(|| match std::env::var("SRSVD_SIMD") {
+        Ok(v) if matches!(
+            v.trim().to_ascii_lowercase().as_str(),
+            "off" | "0" | "false" | "no" | "scalar"
+        ) =>
+        {
+            Simd::Scalar
+        }
+        _ => hw_simd(),
+    })
+}
+
+/// Enable/disable SIMD dispatch process-wide — the `[parallel] simd`
+/// config knob. The `SRSVD_SIMD=off` environment override wins even
+/// when this is set to `true`.
+pub fn set_simd_enabled(on: bool) {
+    DISABLED.store(!on, Ordering::Relaxed);
+}
+
+/// The SIMD tier dispatch will actually use on this thread right now.
+pub fn active_simd() -> Simd {
+    let base = if DISABLED.load(Ordering::Relaxed) {
+        Simd::Scalar
+    } else {
+        detected()
+    };
+    match SIMD_OVERRIDE.with(|c| c.get()) {
+        Some(Simd::Scalar) => Simd::Scalar,
+        Some(Simd::Avx2) | None => base,
+    }
+}
+
+/// Run `f` with the SIMD tier pinned on this thread (benches and the
+/// determinism suite). [`Simd::Scalar`] forces the portable kernels;
+/// [`Simd::Avx2`] requests the best available and silently degrades to
+/// scalar on hosts without AVX2/FMA (or when SIMD is disabled), so
+/// simd-on/off comparisons pass trivially on any machine.
+pub fn with_simd<T>(mode: Simd, f: impl FnOnce() -> T) -> T {
+    struct Restore(Option<Simd>);
+    impl Drop for Restore {
+        fn drop(&mut self) {
+            SIMD_OVERRIDE.with(|c| c.set(self.0));
+        }
+    }
+    let _restore = Restore(SIMD_OVERRIDE.with(|c| c.replace(Some(mode))));
+    f()
+}
+
+/// Run `f` with the kernel [`Precision`] pinned on this thread. The
+/// factorization core wraps each job in this so every product of that
+/// job dispatches on the job's configured tier.
+pub fn with_precision<T>(p: Precision, f: impl FnOnce() -> T) -> T {
+    struct Restore(Precision);
+    impl Drop for Restore {
+        fn drop(&mut self) {
+            PRECISION.with(|c| c.set(self.0));
+        }
+    }
+    let _restore = Restore(PRECISION.with(|c| c.replace(p)));
+    f()
+}
+
+/// The precision tier scoped onto this thread (default `Exact`).
+pub fn current_precision() -> Precision {
+    PRECISION.with(|c| c.get())
+}
+
+/// Resolved kernel choice, computed once per product on the calling
+/// thread and passed by value into row-chunk closures — pool workers
+/// must not re-read the thread-locals (they would see defaults).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub(crate) enum Kernel {
+    /// Portable fallback; also what both AVX2 variants degrade to on
+    /// hosts without the features.
+    Scalar,
+    /// AVX2 mul/add lanes in the scalar accumulation order.
+    Avx2Exact,
+    /// AVX2+FMA packed microkernel (plus FMA AXPYs for transpose
+    /// products and sub-threshold fall-through).
+    Avx2Fast,
+}
+
+/// Resolve the kernel for the current thread's simd/precision state.
+pub(crate) fn select() -> Kernel {
+    match (active_simd(), current_precision()) {
+        (Simd::Scalar, _) => Kernel::Scalar,
+        (Simd::Avx2, Precision::Exact) => Kernel::Avx2Exact,
+        (Simd::Avx2, Precision::Fast) => Kernel::Avx2Fast,
+    }
+}
+
+// ---- row AXPY kernels (Exact tier + fall-through) --------------------------
+
+/// `c[j] += a0*b0[j] + a1*b1[j] + a2*b2[j] + a3*b3[j]` for a whole row —
+/// the 4-way-unrolled inner AXPY of the blocked GEMM. The AVX2 variant
+/// reproduces the scalar expression per lane (mul/add, no FMA), so
+/// Exact-tier outputs stay bit-identical; a Fast-tier product that
+/// falls through here (below the packing threshold) uses the same exact
+/// arrangement.
+#[inline]
+pub(crate) fn axpy4(
+    kernel: Kernel,
+    c_row: &mut [f64],
+    a: [f64; 4],
+    b0: &[f64],
+    b1: &[f64],
+    b2: &[f64],
+    b3: &[f64],
+) {
+    #[cfg(target_arch = "x86_64")]
+    {
+        if kernel != Kernel::Scalar {
+            // SAFETY: Avx2* kernels are only selected after
+            // `is_x86_feature_detected!("avx2")` succeeded.
+            unsafe { axpy4_avx2(c_row, a, b0, b1, b2, b3) };
+            return;
+        }
+    }
+    #[cfg(not(target_arch = "x86_64"))]
+    let _ = kernel;
+    let [a0, a1, a2, a3] = a;
+    for j in 0..c_row.len() {
+        c_row[j] += a0 * b0[j] + a1 * b1[j] + a2 * b2[j] + a3 * b3[j];
+    }
+}
+
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2")]
+unsafe fn axpy4_avx2(
+    c_row: &mut [f64],
+    a: [f64; 4],
+    b0: &[f64],
+    b1: &[f64],
+    b2: &[f64],
+    b3: &[f64],
+) {
+    use std::arch::x86_64::*;
+    let n = c_row.len();
+    let a0 = _mm256_set1_pd(a[0]);
+    let a1 = _mm256_set1_pd(a[1]);
+    let a2 = _mm256_set1_pd(a[2]);
+    let a3 = _mm256_set1_pd(a[3]);
+    let mut j = 0;
+    while j + 4 <= n {
+        // Per lane this is the scalar expression left-associated:
+        // ((a0*b0 + a1*b1) + a2*b2) + a3*b3, then c += t. Any other
+        // association (or FMA) would break Exact-tier bit-identity.
+        let mut t = _mm256_mul_pd(a0, _mm256_loadu_pd(b0.as_ptr().add(j)));
+        t = _mm256_add_pd(t, _mm256_mul_pd(a1, _mm256_loadu_pd(b1.as_ptr().add(j))));
+        t = _mm256_add_pd(t, _mm256_mul_pd(a2, _mm256_loadu_pd(b2.as_ptr().add(j))));
+        t = _mm256_add_pd(t, _mm256_mul_pd(a3, _mm256_loadu_pd(b3.as_ptr().add(j))));
+        let c = _mm256_add_pd(_mm256_loadu_pd(c_row.as_ptr().add(j)), t);
+        _mm256_storeu_pd(c_row.as_mut_ptr().add(j), c);
+        j += 4;
+    }
+    while j < n {
+        c_row[j] += a[0] * b0[j] + a[1] * b1[j] + a[2] * b2[j] + a[3] * b3[j];
+        j += 1;
+    }
+}
+
+/// `c[l] += a * b[l]` — the single-row AXPY used by the k-remainder and
+/// the transpose-product scatter. Exact AVX2 uses mul+add
+/// (lane-identical to scalar); the Fast tier uses FMA.
+#[inline]
+pub(crate) fn axpy1(kernel: Kernel, c_row: &mut [f64], a: f64, b_row: &[f64]) {
+    #[cfg(target_arch = "x86_64")]
+    {
+        match kernel {
+            Kernel::Scalar => {}
+            Kernel::Avx2Exact => {
+                // SAFETY: selected only after AVX2 detection.
+                unsafe { axpy1_avx2(c_row, a, b_row) };
+                return;
+            }
+            Kernel::Avx2Fast => {
+                // SAFETY: selected only after AVX2+FMA detection.
+                unsafe { axpy1_fma(c_row, a, b_row) };
+                return;
+            }
+        }
+    }
+    #[cfg(not(target_arch = "x86_64"))]
+    let _ = kernel;
+    for (cx, &bx) in c_row.iter_mut().zip(b_row) {
+        *cx += a * bx;
+    }
+}
+
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2")]
+unsafe fn axpy1_avx2(c_row: &mut [f64], a: f64, b_row: &[f64]) {
+    use std::arch::x86_64::*;
+    let n = c_row.len();
+    let av = _mm256_set1_pd(a);
+    let mut j = 0;
+    while j + 4 <= n {
+        let t = _mm256_mul_pd(av, _mm256_loadu_pd(b_row.as_ptr().add(j)));
+        let c = _mm256_add_pd(_mm256_loadu_pd(c_row.as_ptr().add(j)), t);
+        _mm256_storeu_pd(c_row.as_mut_ptr().add(j), c);
+        j += 4;
+    }
+    while j < n {
+        c_row[j] += a * b_row[j];
+        j += 1;
+    }
+}
+
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2", enable = "fma")]
+unsafe fn axpy1_fma(c_row: &mut [f64], a: f64, b_row: &[f64]) {
+    use std::arch::x86_64::*;
+    let n = c_row.len();
+    let av = _mm256_set1_pd(a);
+    let mut j = 0;
+    while j + 4 <= n {
+        let c = _mm256_fmadd_pd(
+            av,
+            _mm256_loadu_pd(b_row.as_ptr().add(j)),
+            _mm256_loadu_pd(c_row.as_ptr().add(j)),
+        );
+        _mm256_storeu_pd(c_row.as_mut_ptr().add(j), c);
+        j += 4;
+    }
+    while j < n {
+        c_row[j] = a.mul_add(b_row[j], c_row[j]);
+        j += 1;
+    }
+}
+
+// ---- Fast-tier packed 4x8 microkernel --------------------------------------
+
+/// Microkernel tile rows (A panel width).
+#[cfg(target_arch = "x86_64")]
+pub(crate) const MR: usize = 4;
+/// Microkernel tile columns (two ymm vectors of f64).
+#[cfg(target_arch = "x86_64")]
+pub(crate) const NR: usize = 8;
+
+/// B packed once per Fast-tier product: for every kc-deep block,
+/// [`NR`]-wide column strips stored k-major and zero-padded, so the
+/// microkernel streams contiguous 8-wide vectors. Shared read-only by
+/// every row chunk of the parallel dispatch.
+#[cfg(target_arch = "x86_64")]
+pub(crate) struct PackedB {
+    data: Vec<f64>,
+    /// Start of each kc-block's strip area in `data` (blocks differ in
+    /// depth, so offsets are cumulative, not a fixed stride).
+    block_offsets: Vec<usize>,
+    kc: usize,
+    k: usize,
+    n: usize,
+}
+
+/// Pack all of `b` for the Fast tier with contraction blocking `kc`.
+#[cfg(target_arch = "x86_64")]
+pub(crate) fn pack_b(b: &Dense, kc: usize) -> PackedB {
+    let (k, n) = b.shape();
+    let kc = kc.max(1);
+    let nstrips = n.div_ceil(NR);
+    let mut data = Vec::new();
+    let mut block_offsets = Vec::new();
+    for k0 in (0..k).step_by(kc) {
+        block_offsets.push(data.len());
+        let kb = (k0 + kc).min(k) - k0;
+        for s in 0..nstrips {
+            let j0 = s * NR;
+            let jw = NR.min(n - j0);
+            for kk in 0..kb {
+                data.extend_from_slice(&b.row(k0 + kk)[j0..j0 + jw]);
+                data.resize(data.len() + (NR - jw), 0.0);
+            }
+        }
+    }
+    PackedB { data, block_offsets, kc, k, n }
+}
+
+/// Pack an A row-strip for one kc-block: [`MR`]-row panels stored
+/// k-major ([`MR`] row-values per k step), zero-padded in the last
+/// panel. `buf` is reused across blocks by the caller.
+#[cfg(target_arch = "x86_64")]
+fn pack_a(a: &Dense, row0: usize, nrows: usize, k0: usize, kb: usize, buf: &mut Vec<f64>) {
+    let npanels = nrows.div_ceil(MR);
+    buf.clear();
+    buf.resize(npanels * kb * MR, 0.0);
+    for p in 0..npanels {
+        let panel = &mut buf[p * kb * MR..(p + 1) * kb * MR];
+        let rvalid = MR.min(nrows - p * MR);
+        for r in 0..rvalid {
+            let a_row = &a.row(row0 + p * MR + r)[k0..k0 + kb];
+            for (kk, &av) in a_row.iter().enumerate() {
+                panel[kk * MR + r] = av;
+            }
+        }
+    }
+}
+
+/// 4×8 register-blocked FMA microkernel: `out = Ap · Bp` over one
+/// kc-block; `out` is a dense [`MR`]×[`NR`] row-major tile. Eight ymm
+/// accumulators + two B vectors + one broadcast A register stay well
+/// inside the 16-register file.
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2", enable = "fma")]
+unsafe fn mkernel_4x8(kb: usize, ap: &[f64], bp: &[f64], out: &mut [f64; MR * NR]) {
+    use std::arch::x86_64::*;
+    debug_assert!(ap.len() >= kb * MR && bp.len() >= kb * NR);
+    let mut c00 = _mm256_setzero_pd();
+    let mut c01 = _mm256_setzero_pd();
+    let mut c10 = _mm256_setzero_pd();
+    let mut c11 = _mm256_setzero_pd();
+    let mut c20 = _mm256_setzero_pd();
+    let mut c21 = _mm256_setzero_pd();
+    let mut c30 = _mm256_setzero_pd();
+    let mut c31 = _mm256_setzero_pd();
+    let app = ap.as_ptr();
+    let bpp = bp.as_ptr();
+    for kk in 0..kb {
+        let b0 = _mm256_loadu_pd(bpp.add(kk * NR));
+        let b1 = _mm256_loadu_pd(bpp.add(kk * NR + 4));
+        let a0 = _mm256_set1_pd(*app.add(kk * MR));
+        c00 = _mm256_fmadd_pd(a0, b0, c00);
+        c01 = _mm256_fmadd_pd(a0, b1, c01);
+        let a1 = _mm256_set1_pd(*app.add(kk * MR + 1));
+        c10 = _mm256_fmadd_pd(a1, b0, c10);
+        c11 = _mm256_fmadd_pd(a1, b1, c11);
+        let a2 = _mm256_set1_pd(*app.add(kk * MR + 2));
+        c20 = _mm256_fmadd_pd(a2, b0, c20);
+        c21 = _mm256_fmadd_pd(a2, b1, c21);
+        let a3 = _mm256_set1_pd(*app.add(kk * MR + 3));
+        c30 = _mm256_fmadd_pd(a3, b0, c30);
+        c31 = _mm256_fmadd_pd(a3, b1, c31);
+    }
+    let op = out.as_mut_ptr();
+    _mm256_storeu_pd(op, c00);
+    _mm256_storeu_pd(op.add(4), c01);
+    _mm256_storeu_pd(op.add(8), c10);
+    _mm256_storeu_pd(op.add(12), c11);
+    _mm256_storeu_pd(op.add(16), c20);
+    _mm256_storeu_pd(op.add(20), c21);
+    _mm256_storeu_pd(op.add(24), c30);
+    _mm256_storeu_pd(op.add(28), c31);
+}
+
+/// Fast-tier row-strip kernel: stream the pre-packed B against
+/// per-strip packed A panels, one kc-block at a time, adding each
+/// finished tile into the C strip. Every output row owns its
+/// accumulator lanes and the k order is fixed, so results are
+/// pool-partition invariant (though not bit-equal to the Exact tier).
+#[cfg(target_arch = "x86_64")]
+pub(crate) fn gemm_rows_fast(
+    a: &Dense,
+    bp: &PackedB,
+    row0: usize,
+    nrows: usize,
+    c_rows: &mut [f64],
+    a_buf: &mut Vec<f64>,
+) {
+    let n = bp.n;
+    if n == 0 || nrows == 0 {
+        return;
+    }
+    let nstrips = n.div_ceil(NR);
+    let npanels = nrows.div_ceil(MR);
+    for (bi, k0) in (0..bp.k).step_by(bp.kc).enumerate() {
+        let kb = (k0 + bp.kc).min(bp.k) - k0;
+        pack_a(a, row0, nrows, k0, kb, a_buf);
+        let block = &bp.data[bp.block_offsets[bi]..];
+        for p in 0..npanels {
+            let ap = &a_buf[p * kb * MR..(p + 1) * kb * MR];
+            let rvalid = MR.min(nrows - p * MR);
+            for s in 0..nstrips {
+                let strip = &block[s * kb * NR..(s + 1) * kb * NR];
+                let mut tile = [0.0; MR * NR];
+                // SAFETY: Avx2Fast is selected only after AVX2+FMA
+                // detection; the panel/strip slices hold kb*MR and
+                // kb*NR elements by construction of pack_a/pack_b.
+                unsafe { mkernel_4x8(kb, ap, strip, &mut tile) };
+                let j0 = s * NR;
+                let jw = NR.min(n - j0);
+                for r in 0..rvalid {
+                    let c0 = (p * MR + r) * n + j0;
+                    for (cx, &tx) in c_rows[c0..c0 + jw].iter_mut().zip(&tile[r * NR..]) {
+                        *cx += tx;
+                    }
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn precision_scope_restores() {
+        assert_eq!(current_precision(), Precision::Exact);
+        let inner = with_precision(Precision::Fast, current_precision);
+        assert_eq!(inner, Precision::Fast);
+        assert_eq!(current_precision(), Precision::Exact);
+        // Nested scopes restore to the enclosing tier, not the default.
+        with_precision(Precision::Fast, || {
+            with_precision(Precision::Exact, || {
+                assert_eq!(current_precision(), Precision::Exact);
+            });
+            assert_eq!(current_precision(), Precision::Fast);
+        });
+    }
+
+    #[test]
+    fn scalar_override_forces_portable_kernel() {
+        with_simd(Simd::Scalar, || {
+            assert_eq!(active_simd(), Simd::Scalar);
+            assert_eq!(select(), Kernel::Scalar);
+            with_precision(Precision::Fast, || {
+                // Fast on scalar hardware is still the portable kernel.
+                assert_eq!(select(), Kernel::Scalar);
+            });
+        });
+    }
+
+    #[test]
+    fn avx2_request_degrades_gracefully() {
+        // On AVX2 hosts this exercises real dispatch; elsewhere (or
+        // under SRSVD_SIMD=off) it must degrade to scalar, not panic.
+        with_simd(Simd::Avx2, || {
+            let k = select();
+            assert!(matches!(k, Kernel::Scalar | Kernel::Avx2Exact));
+        });
+    }
+
+    #[test]
+    fn axpy4_avx2_is_bit_identical_to_scalar() {
+        // Meaningful only where AVX2 dispatch is live; trivially green
+        // on scalar-only hosts.
+        let n = 37; // covers the 4-wide body and a 1-element tail
+        let b: Vec<Vec<f64>> = (0..4)
+            .map(|r| (0..n).map(|j| ((r * n + j) as f64).sin()).collect())
+            .collect();
+        let a = [1.25, -0.5, 3.0e-3, 7.75];
+        let mut c_scalar: Vec<f64> = (0..n).map(|j| (j as f64).cos()).collect();
+        let mut c_simd = c_scalar.clone();
+        axpy4(Kernel::Scalar, &mut c_scalar, a, &b[0], &b[1], &b[2], &b[3]);
+        with_simd(Simd::Avx2, || {
+            let k = select();
+            axpy4(k, &mut c_simd, a, &b[0], &b[1], &b[2], &b[3]);
+        });
+        for (x, y) in c_scalar.iter().zip(&c_simd) {
+            assert_eq!(x.to_bits(), y.to_bits());
+        }
+    }
+
+    #[test]
+    fn axpy1_exact_is_bit_identical_to_scalar() {
+        let n = 23;
+        let b: Vec<f64> = (0..n).map(|j| (j as f64).sqrt() - 2.0).collect();
+        let mut c_scalar: Vec<f64> = (0..n).map(|j| 0.1 * j as f64).collect();
+        let mut c_simd = c_scalar.clone();
+        axpy1(Kernel::Scalar, &mut c_scalar, -1.875, &b);
+        with_simd(Simd::Avx2, || {
+            let k = select();
+            axpy1(k, &mut c_simd, -1.875, &b);
+        });
+        for (x, y) in c_scalar.iter().zip(&c_simd) {
+            assert_eq!(x.to_bits(), y.to_bits());
+        }
+    }
+
+    #[cfg(target_arch = "x86_64")]
+    #[test]
+    fn packed_fast_product_matches_naive() {
+        if hw_simd() != Simd::Avx2 {
+            return; // no FMA hardware to exercise
+        }
+        use crate::rng::{Rng, Xoshiro256pp};
+        let mut rng = Xoshiro256pp::seed_from_u64(11);
+        // Deliberately awkward shapes: panel/strip tails in every dim.
+        for (m, k, n) in [(1, 1, 1), (5, 7, 9), (13, 33, 17), (50, 65, 41)] {
+            let a = Dense::gaussian(m, k, &mut rng);
+            let b = Dense::gaussian(k, n, &mut rng);
+            let packed = pack_b(&b, 16);
+            let mut c = vec![0.0; m * n];
+            let mut a_buf = Vec::new();
+            gemm_rows_fast(&a, &packed, 0, m, &mut c, &mut a_buf);
+            for i in 0..m {
+                for j in 0..n {
+                    let want: f64 = (0..k).map(|l| a[(i, l)] * b[(l, j)]).sum();
+                    assert!(
+                        (c[i * n + j] - want).abs() <= 1e-10 * want.abs().max(1.0),
+                        "({m},{k},{n}) at ({i},{j}): {} vs {want}",
+                        c[i * n + j]
+                    );
+                }
+            }
+        }
+    }
+}

@@ -6,26 +6,56 @@
 //! plain product plus a rank-1 downdate, so the dense `X̄` never exists.
 //!
 //! Design: classic cache-blocked i-k-j loop order over row-major data.
-//! The inner kernel is a j-vectorizable AXPY (`c_row += a_ik * b_row`),
-//! which LLVM auto-vectorizes well; panels are sized so a block of B
-//! and a row-strip of C stay L1/L2 resident.
+//! The inner kernel is a j-vectorizable AXPY (`c_row += a_ik * b_row`)
+//! dispatched at runtime through [`kernels`]: a portable scalar loop, an
+//! AVX2 lane-exact variant (bit-identical to scalar), and an opt-in
+//! packed AVX2+FMA microkernel for the [`Precision::Fast`] tier. Panels
+//! are sized so a block of B and a row-strip of C stay L1/L2 resident.
 //!
 //! **Parallelism.** Large products are panel-parallel over rows of C on
-//! the shared [`crate::parallel`] pool (sized by `SRSVD_THREADS` / the
-//! `[parallel] threads` config knob): each task runs the identical
-//! serial k-blocked kernel on a disjoint row strip, so every output row
-//! is accumulated in exactly the serial order and results are
-//! **bit-identical for every thread count** — required, since every
-//! experiment is seeded. `Aᵀ·B` products partition the *output* rows
-//! (columns of A) the same way. Products below `PAR_MIN_FLOPS` run
-//! inline; the `*_pool` entry points let benches pin an explicit pool.
+//! the *cpu* pool of [`crate::parallel`] (sized by `SRSVD_THREADS` / the
+//! `[parallel] threads` config knob; I/O work lives on the separate io
+//! pool): each task runs the identical serial k-blocked kernel on a
+//! disjoint row strip, so every output row is accumulated in exactly
+//! the serial order and results are **bit-identical for every thread
+//! count** — required, since every experiment is seeded. `Aᵀ·B`
+//! products partition the *output* rows (columns of A) the same way.
+//! Products below the gating thresholds run inline; the `*_pool` entry
+//! points let benches pin an explicit pool.
+
+pub mod kernels;
 
 use super::Dense;
 use crate::parallel::{self, par_row_chunks_min, ThreadPool};
+use kernels::Kernel;
+pub use kernels::{Precision, Simd};
 
-/// Below this many multiply-adds a product runs inline — dispatch
-/// overhead would swamp the win. (≈1M flops ≈ 100µs serial.)
+/// Below this many multiply-adds a plain product runs inline — dispatch
+/// overhead would swamp the win. (≈1M madds ≈ 100µs serial; the
+/// perf_micro grid puts the plain-GEMM crossover between 2^19 and 2^21
+/// depending on shape, EXPERIMENTS.md §Perf.)
 const PAR_MIN_FLOPS: usize = 1 << 20;
+
+/// Transpose products (`tmatmul*`, including the streaming
+/// `tmatmul_acc` blocks) gate an octave earlier: the scatter kernel
+/// re-reads all of A once per output pass and is memory-bound, so
+/// fan-out pays for itself from ≈0.5M madds on (perf_micro crossover).
+/// They previously inherited `PAR_MIN_FLOPS`, which left the mid-size
+/// `X̄ᵀQ` products of every sweep serial.
+const PAR_MIN_TFLOPS: usize = 1 << 19;
+
+/// The rank-1 seed (`C = −u·vᵀ`) is a pure store pass with no reuse, so
+/// splitting it only wins once the output alone overflows a private L2
+/// by a wide margin (≈2M elements ≈ 16 MB). Below this it runs inline
+/// on the calling thread even when the surrounding product fans out.
+const PAR_MIN_SEED: usize = 1 << 21;
+
+/// Below this many multiply-adds the Fast tier skips panel packing and
+/// falls through to the exact-layout AVX2 kernel — pack setup would
+/// dominate the product itself (think the small QR/Jacobi products
+/// between sweeps).
+#[cfg(target_arch = "x86_64")]
+const FAST_PACK_MIN: usize = 1 << 14;
 
 /// Tuning knobs for the blocked GEMM (exposed for the perf bench).
 #[derive(Debug, Clone, Copy)]
@@ -60,7 +90,7 @@ pub fn matmul_with_plan_pool(a: &Dense, b: &Dense, plan: MatmulPlan, pool: &Thre
     let (m, _k) = a.shape();
     let n = b.cols();
     let mut c = Dense::zeros(m, n);
-    gemm_into(a, b, &mut c, plan, pool);
+    gemm_into(a, b, &mut c, plan, pool, 0);
     c
 }
 
@@ -96,37 +126,73 @@ pub fn matmul_rank1_with_plan_pool(
     assert_eq!(v.len(), n, "v length");
     let mut c = Dense::zeros(m, n);
     // Fused epilogue: seed C with the downdate, then accumulate A·B on
-    // top — one pass over C total. The O(mn) seed is cheap next to the
-    // O(mnk) product, so it stays serial.
-    seed_downdate(&mut c, u, v);
-    gemm_into(a, b, &mut c, plan, pool);
+    // top — one pass over C total. The O(mn) seed parallelizes on its
+    // own (store-bound) threshold, and its cost is charged to the
+    // product's gating work below so the fused op is gated as a whole.
+    seed_downdate(&mut c, u, v, pool);
+    gemm_into(a, b, &mut c, plan, pool, m.saturating_mul(n));
     c
 }
 
 /// Seed `C = −u·vᵀ` — the fused-downdate epilogue shared by both rank-1
 /// kernels and the streaming path ([`crate::linalg::Streamed`]). Kept in
 /// one place because the streamed byte-identical contract depends on the
-/// seed being computed exactly the same way everywhere.
-pub(crate) fn seed_downdate(c: &mut Dense, u: &[f64], v: &[f64]) {
+/// seed being computed exactly the same way everywhere. Large seeds
+/// split over disjoint row strips with the per-row arithmetic unchanged,
+/// so the result stays byte-identical for every pool size.
+pub(crate) fn seed_downdate(c: &mut Dense, u: &[f64], v: &[f64], pool: &ThreadPool) {
     debug_assert_eq!(u.len(), c.rows());
     debug_assert_eq!(v.len(), c.cols());
-    for i in 0..c.rows() {
-        let ui = u[i];
-        if ui != 0.0 {
-            for (cx, &vx) in c.row_mut(i).iter_mut().zip(v) {
-                *cx = -ui * vx;
+    let (m, n) = c.shape();
+    if m == 0 || n == 0 {
+        return;
+    }
+    let work = m.saturating_mul(n);
+    par_row_chunks_min(pool, work, PAR_MIN_SEED, c.data_mut(), m, n, |row0, _nrows, chunk| {
+        for (local, c_row) in chunk.chunks_exact_mut(n).enumerate() {
+            let ui = u[row0 + local];
+            if ui != 0.0 {
+                for (cx, &vx) in c_row.iter_mut().zip(v) {
+                    *cx = -ui * vx;
+                }
             }
         }
-    }
+    });
 }
 
 /// Accumulating core: `C += A · B`, cache-blocked, row-panel parallel.
-fn gemm_into(a: &Dense, b: &Dense, c: &mut Dense, plan: MatmulPlan, pool: &ThreadPool) {
+/// The kernel is resolved here, once, on the calling thread (pool
+/// workers would see default thread-locals) and passed by value into
+/// the row-chunk closure. `extra_work` charges fused-epilogue flops to
+/// the parallel-gating decision (the rank-1 paths pass `m*n`).
+fn gemm_into(
+    a: &Dense,
+    b: &Dense,
+    c: &mut Dense,
+    plan: MatmulPlan,
+    pool: &ThreadPool,
+    extra_work: usize,
+) {
     let (m, kdim) = a.shape();
     let n = b.cols();
-    let work = m.saturating_mul(n).saturating_mul(kdim);
+    let kernel = kernels::select();
+    let work = m
+        .saturating_mul(n)
+        .saturating_mul(kdim)
+        .saturating_add(extra_work);
+    #[cfg(target_arch = "x86_64")]
+    if kernel == Kernel::Avx2Fast && work >= FAST_PACK_MIN {
+        // Fast tier: pack B once (shared read-only by all chunks), then
+        // run the 4x8 FMA microkernel per row strip.
+        let packed = kernels::pack_b(b, plan.kc.max(1));
+        par_row_chunks_min(pool, work, PAR_MIN_FLOPS, c.data_mut(), m, n, |row0, nrows, chunk| {
+            let mut a_buf = Vec::new();
+            kernels::gemm_rows_fast(a, &packed, row0, nrows, chunk, &mut a_buf);
+        });
+        return;
+    }
     par_row_chunks_min(pool, work, PAR_MIN_FLOPS, c.data_mut(), m, n, |row0, nrows, chunk| {
-        gemm_rows(a, b, row0, nrows, chunk, plan);
+        gemm_rows(a, b, row0, nrows, chunk, plan, kernel);
     });
 }
 
@@ -140,6 +206,7 @@ fn gemm_rows(
     nrows: usize,
     c_rows: &mut [f64],
     plan: MatmulPlan,
+    kernel: Kernel,
 ) {
     let (_, kdim) = a.shape();
     let n = b.cols();
@@ -156,29 +223,26 @@ fn gemm_rows(
                 // 4-way k-unroll: quarters the number of passes over
                 // c_row, the dominant memory traffic for wide C.
                 // (Perf log: 2-way = 10.3 GFLOP/s, 4-way = see
-                // EXPERIMENTS.md §Perf.)
+                // EXPERIMENTS.md §Perf.) The AVX2 variant keeps the
+                // exact per-element expression — see kernels::axpy4.
                 let mut kk = 0;
                 while kk + 3 < a_row.len() {
-                    let a0 = a_row[kk];
-                    let a1 = a_row[kk + 1];
-                    let a2 = a_row[kk + 2];
-                    let a3 = a_row[kk + 3];
-                    let b0 = b.row(k0 + kk);
-                    let b1 = b.row(k0 + kk + 1);
-                    let b2 = b.row(k0 + kk + 2);
-                    let b3 = b.row(k0 + kk + 3);
-                    for j in 0..n {
-                        c_row[j] += a0 * b0[j] + a1 * b1[j] + a2 * b2[j] + a3 * b3[j];
-                    }
+                    let av = [a_row[kk], a_row[kk + 1], a_row[kk + 2], a_row[kk + 3]];
+                    kernels::axpy4(
+                        kernel,
+                        c_row,
+                        av,
+                        b.row(k0 + kk),
+                        b.row(k0 + kk + 1),
+                        b.row(k0 + kk + 2),
+                        b.row(k0 + kk + 3),
+                    );
                     kk += 4;
                 }
                 while kk < a_row.len() {
                     let aik = a_row[kk];
                     if aik != 0.0 {
-                        let b_row = b.row(k0 + kk);
-                        for j in 0..n {
-                            c_row[j] += aik * b_row[j];
-                        }
+                        kernels::axpy1(kernel, c_row, aik, b.row(k0 + kk));
                     }
                     kk += 1;
                 }
@@ -204,23 +268,30 @@ pub fn tmatmul_pool(a: &Dense, b: &Dense, pool: &ThreadPool) -> Dense {
     let (_, n) = a.shape();
     let k = b.cols();
     let mut c = Dense::zeros(n, k);
-    tmatmul_into(a, b, &mut c, pool);
+    tmatmul_into(a, b, &mut c, pool, 0);
     c
 }
 
 /// Accumulate `C += Aᵀ · B`, partitioned over output rows (A-columns).
-fn tmatmul_into(a: &Dense, b: &Dense, c: &mut Dense, pool: &ThreadPool) {
+/// Gated on [`PAR_MIN_TFLOPS`] — the scatter kernel is memory-bound and
+/// wins from parallelism earlier than the plain GEMM. `extra_work`
+/// charges a fused epilogue to the gating decision.
+fn tmatmul_into(a: &Dense, b: &Dense, c: &mut Dense, pool: &ThreadPool, extra_work: usize) {
     let (m, n) = a.shape();
     let k = b.cols();
-    let work = m.saturating_mul(n).saturating_mul(k);
-    par_row_chunks_min(pool, work, PAR_MIN_FLOPS, c.data_mut(), n, k, |j0, ncols, chunk| {
-        tmatmul_cols(a, b, j0, ncols, chunk);
+    let kernel = kernels::select();
+    let work = m
+        .saturating_mul(n)
+        .saturating_mul(k)
+        .saturating_add(extra_work);
+    par_row_chunks_min(pool, work, PAR_MIN_TFLOPS, c.data_mut(), n, k, |j0, ncols, chunk| {
+        tmatmul_cols(a, b, j0, ncols, chunk, kernel);
     });
 }
 
 /// Serial Aᵀ·B restricted to output rows (A-columns) `j0 .. j0 + ncols`;
 /// `c_rows` is that strip of C (`ncols * k` elements).
-fn tmatmul_cols(a: &Dense, b: &Dense, j0: usize, ncols: usize, c_rows: &mut [f64]) {
+fn tmatmul_cols(a: &Dense, b: &Dense, j0: usize, ncols: usize, c_rows: &mut [f64], kernel: Kernel) {
     let m = a.rows();
     let k = b.cols();
     for i in 0..m {
@@ -228,10 +299,7 @@ fn tmatmul_cols(a: &Dense, b: &Dense, j0: usize, ncols: usize, c_rows: &mut [f64
         let b_row = b.row(i);
         for (jj, &aij) in a_win.iter().enumerate() {
             if aij != 0.0 {
-                let c_row = &mut c_rows[jj * k..(jj + 1) * k];
-                for l in 0..k {
-                    c_row[l] += aij * b_row[l];
-                }
+                kernels::axpy1(kernel, &mut c_rows[jj * k..(jj + 1) * k], aij, b_row);
             }
         }
     }
@@ -244,7 +312,10 @@ fn tmatmul_cols(a: &Dense, b: &Dense, j0: usize, ncols: usize, c_rows: &mut [f64
 /// consecutive row blocks `Aᵢ` (ascending, each paired with the matching
 /// rows `Bᵢ`) reproduces the one-shot [`tmatmul`] result **bit-for-bit**,
 /// because every output element accumulates its `i`-terms in the same
-/// serial order the in-memory kernel uses.
+/// serial order the in-memory kernel uses. Gated on the transpose
+/// threshold ([`PAR_MIN_TFLOPS`]) rather than the plain-GEMM one, so
+/// per-block products of a streamed sweep fan out as early as the
+/// equivalent in-memory product would.
 pub fn tmatmul_acc(a: &Dense, b: &Dense, c: &mut Dense) {
     assert_eq!(a.rows(), b.rows(), "tmatmul_acc shape mismatch");
     assert_eq!(
@@ -252,7 +323,7 @@ pub fn tmatmul_acc(a: &Dense, b: &Dense, c: &mut Dense) {
         (a.cols(), b.cols()),
         "tmatmul_acc output shape mismatch"
     );
-    parallel::with_current(|pool| tmatmul_into(a, b, c, pool));
+    parallel::with_current(|pool| tmatmul_into(a, b, c, pool, 0));
 }
 
 /// `C = Aᵀ·B − u·vᵀ` fused (u has length n = a.cols()).
@@ -274,9 +345,10 @@ pub fn tmatmul_rank1_pool(
     assert_eq!(u.len(), n);
     assert_eq!(v.len(), k);
     let mut c = Dense::zeros(n, k);
-    // Seed with the downdate (cheap O(nk)), then accumulate Aᵀ·B.
-    seed_downdate(&mut c, u, v);
-    tmatmul_into(a, b, &mut c, pool);
+    // Seed with the downdate (O(nk), own store-bound gating), then
+    // accumulate Aᵀ·B with the epilogue charged to the gating work.
+    seed_downdate(&mut c, u, v, pool);
+    tmatmul_into(a, b, &mut c, pool, n.saturating_mul(k));
     c
 }
 
@@ -290,6 +362,13 @@ mod tests {
         let (m, k) = a.shape();
         let n = b.cols();
         Dense::from_fn(m, n, |i, j| (0..k).map(|l| a[(i, l)] * b[(l, j)]).sum())
+    }
+
+    fn bits_equal(a: &Dense, b: &Dense) -> bool {
+        a.data()
+            .iter()
+            .zip(b.data())
+            .all(|(x, y)| x.to_bits() == y.to_bits())
     }
 
     #[test]
@@ -333,13 +412,95 @@ mod tests {
             let got_r1 = matmul_rank1_with_plan_pool(&a, &b, &u, &v, MatmulPlan::default(), &p);
             let got_t = tmatmul_pool(&a, &b, &p);
             for (x, y) in [(&base, &got), (&base_r1, &got_r1), (&base_t, &got_t)] {
-                let same = x
-                    .data()
-                    .iter()
-                    .zip(y.data())
-                    .all(|(a, b)| a.to_bits() == b.to_bits());
-                assert!(same, "threads {threads}: outputs must be bit-identical");
+                assert!(bits_equal(x, y), "threads {threads}: outputs must be bit-identical");
             }
+        }
+    }
+
+    #[test]
+    fn simd_on_off_is_bitwise_identical_on_exact_tier() {
+        // The Exact-tier contract: the AVX2 kernels reproduce the scalar
+        // accumulation order per lane, so results match to the bit. On
+        // hosts without AVX2 both sides run scalar and the test is
+        // trivially green.
+        let mut rng = Xoshiro256pp::seed_from_u64(21);
+        let a = Dense::gaussian(160, 121, &mut rng); // odd k: remainder path
+        let b = Dense::gaussian(121, 97, &mut rng); // odd n: j-tail path
+        let u: Vec<f64> = (0..160).map(|_| rng.next_gaussian()).collect();
+        let v: Vec<f64> = (0..97).map(|_| rng.next_gaussian()).collect();
+        let scalar = kernels::with_simd(Simd::Scalar, || {
+            (matmul(&a, &b), matmul_rank1(&a, &b, &u, &v), tmatmul(&a, &b))
+        });
+        let simd = kernels::with_simd(Simd::Avx2, || {
+            (matmul(&a, &b), matmul_rank1(&a, &b, &u, &v), tmatmul(&a, &b))
+        });
+        assert!(bits_equal(&scalar.0, &simd.0), "matmul diverged across simd on/off");
+        assert!(bits_equal(&scalar.1, &simd.1), "matmul_rank1 diverged across simd on/off");
+        assert!(bits_equal(&scalar.2, &simd.2), "tmatmul diverged across simd on/off");
+    }
+
+    #[test]
+    fn fast_tier_matches_exact_within_tolerance() {
+        let mut rng = Xoshiro256pp::seed_from_u64(22);
+        let a = Dense::gaussian(120, 90, &mut rng);
+        let b = Dense::gaussian(90, 70, &mut rng);
+        let exact = matmul(&a, &b);
+        let fast = kernels::with_precision(Precision::Fast, || matmul(&a, &b));
+        // FMA contraction only moves the last ulps; scale-relative.
+        let rel = fro_diff(&fast, &exact) / exact.fro_norm().max(1e-300);
+        assert!(rel < 1e-13, "fast tier drifted: rel err {rel:e}");
+    }
+
+    #[test]
+    fn fast_tier_is_pool_invariant_bitwise() {
+        // Fast differs from Exact but must itself stay deterministic
+        // across pool sizes: every output row owns its accumulators and
+        // the k order is fixed regardless of chunk boundaries.
+        let mut rng = Xoshiro256pp::seed_from_u64(23);
+        let a = Dense::gaussian(150, 130, &mut rng);
+        let b = Dense::gaussian(130, 88, &mut rng);
+        let p1 = ThreadPool::new(1);
+        let base = kernels::with_precision(Precision::Fast, || {
+            matmul_with_plan_pool(&a, &b, MatmulPlan::default(), &p1)
+        });
+        for threads in [2, 8] {
+            let p = ThreadPool::new(threads);
+            let got = kernels::with_precision(Precision::Fast, || {
+                matmul_with_plan_pool(&a, &b, MatmulPlan::default(), &p)
+            });
+            assert!(bits_equal(&base, &got), "fast tier not pool-invariant at {threads}");
+        }
+    }
+
+    #[test]
+    fn fast_tier_small_product_falls_through_correctly() {
+        // Below FAST_PACK_MIN the Fast tier reuses the exact-layout
+        // kernel; the result must still be a correct product.
+        let mut rng = Xoshiro256pp::seed_from_u64(24);
+        let a = Dense::gaussian(9, 11, &mut rng);
+        let b = Dense::gaussian(11, 7, &mut rng);
+        let want = naive_matmul(&a, &b);
+        let got = kernels::with_precision(Precision::Fast, || matmul(&a, &b));
+        assert!(fro_diff(&got, &want) < 1e-10);
+    }
+
+    #[test]
+    fn large_seed_downdate_is_pool_invariant_bitwise() {
+        // 1200*1800 = 2.16M elements clears PAR_MIN_SEED (2^21), so the
+        // parallel seed path actually runs; per-row order is unchanged.
+        let mut rng = Xoshiro256pp::seed_from_u64(25);
+        let u: Vec<f64> = (0..1200).map(|_| rng.next_gaussian()).collect();
+        let v: Vec<f64> = (0..1800).map(|_| rng.next_gaussian()).collect();
+        let mut base = Dense::zeros(1200, 1800);
+        seed_downdate(&mut base, &u, &v, &ThreadPool::new(1));
+        for threads in [2, 8] {
+            let mut got = Dense::zeros(1200, 1800);
+            seed_downdate(&mut got, &u, &v, &ThreadPool::new(threads));
+            assert!(bits_equal(&base, &got), "seed_downdate not pool-invariant at {threads}");
+        }
+        // And it is the right matrix.
+        for (i, j) in [(0, 0), (7, 1234), (1199, 1799)] {
+            assert_eq!(base[(i, j)], -u[i] * v[j]);
         }
     }
 
@@ -396,12 +557,7 @@ mod tests {
             row0 += nr;
         }
         assert_eq!(row0, 137);
-        let same = want
-            .data()
-            .iter()
-            .zip(c.data())
-            .all(|(x, y)| x.to_bits() == y.to_bits());
-        assert!(same, "block-accumulated tmatmul must be bit-identical");
+        assert!(bits_equal(&want, &c), "block-accumulated tmatmul must be bit-identical");
     }
 
     #[test]

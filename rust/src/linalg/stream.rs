@@ -41,12 +41,17 @@
 //! ## Prefetch
 //!
 //! Each sweep can run **double-buffered** ([`StreamConfig::prefetch`],
-//! default on): a scoped reader thread fills block `i+1` while the
-//! caller runs the pool-parallel GEMM on block `i`, with two recycled
-//! block buffers circulating between them. Disk latency and compute
+//! default on): a reader fills block `i+1` while the caller runs the
+//! pool-parallel GEMM on block `i`, with two recycled block buffers
+//! circulating between them. The reader runs on the **io pool**
+//! ([`crate::parallel::with_current_io`]) so a blocking read never
+//! occupies a compute thread; when every io worker is busy the sweep
+//! falls back to a plain scoped thread (degraded, never deadlocked —
+//! and never a behavior change, since blocks are consumed in ascending
+//! order on the calling thread either way). Disk latency and compute
 //! overlap instead of alternating, and [`FileSource`] keeps a small
 //! pool of positioned file handles so concurrent readers (the prefetch
-//! thread, parallel jobs sharing one source) never serialize behind a
+//! reader, parallel jobs sharing one source) never serialize behind a
 //! single locked seek+read.
 //!
 //! ## Observability
@@ -83,6 +88,7 @@ use std::sync::{mpsc, Arc, Mutex};
 
 use super::{gemm, Csr, Dense};
 use crate::data::Distribution;
+use crate::parallel;
 use crate::rng::{Rng, SplitMix64, Xoshiro256pp};
 use crate::svd::MatVecOps;
 use crate::util::{Error, Result};
@@ -782,64 +788,118 @@ impl<S: MatrixSource> Streamed<S> {
         }
     }
 
-    /// Double-buffered sweep: a scoped reader thread fills block `i+1`
+    /// Double-buffered sweep: a background reader fills block `i+1`
     /// while the caller consumes block `i`. Two buffers circulate — one
     /// in flight, one in the GEMM — so peak residency is two blocks. A
     /// reader-side IO failure panics with the same context as the
     /// serial path (re-raised on the calling thread).
+    ///
+    /// The reader prefers an io-pool worker
+    /// ([`crate::parallel::ThreadPool::spawn_scoped`] on the effective
+    /// io pool), keeping blocking reads off compute threads. A
+    /// saturated io pool — every worker already held by a spawned job —
+    /// refuses the task, and the sweep falls back to a plain scoped
+    /// thread: degradation, never a deadlock. Both paths consume blocks
+    /// in ascending order on the calling thread, so the byte-identity
+    /// contract is unaffected by which one ran.
     fn sweep_prefetched(&self, m: usize, n: usize, f: &mut impl FnMut(usize, &Dense)) {
         let block_rows = self.block_rows;
         let source = &self.source;
+        {
+            let (full_tx, full_rx) = mpsc::sync_channel::<(usize, Dense)>(1);
+            let (empty_tx, empty_rx) = mpsc::channel::<Vec<f64>>();
+            for _ in 0..2 {
+                let _ = empty_tx.send(Vec::new());
+            }
+            let task = parallel::with_current_io(|io| {
+                io.spawn_scoped(Box::new(move || {
+                    reader_loop(source, m, n, block_rows, empty_rx, full_tx)
+                }))
+            });
+            if let Some(task) = task {
+                self.consume_blocks(m, n, f, &full_rx, &empty_tx);
+                // Unblocks a reader mid-`send` after a cancel break (its
+                // send fails and it exits); a no-op on the normal path.
+                drop(full_rx);
+                // Re-raises a reader panic (source + rows context).
+                task.join();
+                return;
+            }
+        }
         std::thread::scope(|scope| {
             let (full_tx, full_rx) = mpsc::sync_channel::<(usize, Dense)>(1);
             let (empty_tx, empty_rx) = mpsc::channel::<Vec<f64>>();
             for _ in 0..2 {
                 let _ = empty_tx.send(Vec::new());
             }
-            let reader = scope.spawn(move || {
-                let mut row0 = 0;
-                while row0 < m {
-                    let nr = block_rows.min(m - row0);
-                    // A missing recycled buffer (consumer gone) just
-                    // means a fresh allocation for the final read.
-                    let mut buf = empty_rx.recv().unwrap_or_default();
-                    buf.resize(nr * n, 0.0);
-                    if let Err(e) = source.read_rows(row0, nr, &mut buf) {
-                        panic!(
-                            "matrix source failed reading rows {row0}..{} of {m}: {e}",
-                            row0 + nr
-                        );
-                    }
-                    if full_tx.send((row0, Dense::from_vec(nr, n, buf))).is_err() {
-                        return; // consumer stopped; no one wants more blocks
-                    }
-                    row0 += nr;
-                }
-            });
-            let mut next_row = 0;
-            while next_row < m {
-                if self.is_cancelled() {
-                    break;
-                }
-                // A closed channel means the reader panicked mid-sweep;
-                // fall through to the join below to re-raise it.
-                let Ok((row0, block)) = full_rx.recv() else { break };
-                self.stats.blocks.fetch_add(1, Ordering::Relaxed);
-                self.stats
-                    .bytes_read
-                    .fetch_add((block.rows() * n * 8) as u64, Ordering::Relaxed);
-                f(row0, &block);
-                next_row = row0 + block.rows();
-                let _ = empty_tx.send(block.into_vec());
-            }
-            // Unblocks a reader mid-`send` after a cancel break (its
-            // send fails and it exits); a no-op on the normal path.
+            let reader =
+                scope.spawn(move || reader_loop(source, m, n, block_rows, empty_rx, full_tx));
+            self.consume_blocks(m, n, f, &full_rx, &empty_tx);
             drop(full_rx);
             if let Err(payload) = reader.join() {
                 // Preserve the reader's panic message (source + rows).
                 std::panic::resume_unwind(payload);
             }
         });
+    }
+
+    /// The consumer half of a prefetched sweep: drain blocks in
+    /// ascending row order, feeding each to `f` and recycling its
+    /// buffer. A closed `full_rx` means the reader panicked mid-sweep;
+    /// the caller joins the reader afterwards to re-raise it.
+    fn consume_blocks(
+        &self,
+        m: usize,
+        n: usize,
+        f: &mut impl FnMut(usize, &Dense),
+        full_rx: &mpsc::Receiver<(usize, Dense)>,
+        empty_tx: &mpsc::Sender<Vec<f64>>,
+    ) {
+        let mut next_row = 0;
+        while next_row < m {
+            if self.is_cancelled() {
+                break;
+            }
+            let Ok((row0, block)) = full_rx.recv() else { break };
+            self.stats.blocks.fetch_add(1, Ordering::Relaxed);
+            self.stats
+                .bytes_read
+                .fetch_add((block.rows() * n * 8) as u64, Ordering::Relaxed);
+            f(row0, &block);
+            next_row = row0 + block.rows();
+            let _ = empty_tx.send(block.into_vec());
+        }
+    }
+}
+
+/// The reader half of a prefetched sweep (shared by the io-pool and
+/// scoped-thread paths): fill recycled buffers with consecutive row
+/// blocks and hand them over in ascending order.
+fn reader_loop<S: MatrixSource>(
+    source: &S,
+    m: usize,
+    n: usize,
+    block_rows: usize,
+    empty_rx: mpsc::Receiver<Vec<f64>>,
+    full_tx: mpsc::SyncSender<(usize, Dense)>,
+) {
+    let mut row0 = 0;
+    while row0 < m {
+        let nr = block_rows.min(m - row0);
+        // A missing recycled buffer (consumer gone) just means a fresh
+        // allocation for the final read.
+        let mut buf = empty_rx.recv().unwrap_or_default();
+        buf.resize(nr * n, 0.0);
+        if let Err(e) = source.read_rows(row0, nr, &mut buf) {
+            panic!(
+                "matrix source failed reading rows {row0}..{} of {m}: {e}",
+                row0 + nr
+            );
+        }
+        if full_tx.send((row0, Dense::from_vec(nr, n, buf))).is_err() {
+            return; // consumer stopped; no one wants more blocks
+        }
+        row0 += nr;
     }
 }
 
@@ -898,7 +958,7 @@ impl<S: MatrixSource> MatVecOps for Streamed<S> {
         // Seed with the downdate via the one-shot kernel's own epilogue
         // (shared helper — the two paths cannot drift apart), then
         // accumulate block contributions on top.
-        gemm::seed_downdate(&mut c, u, v);
+        parallel::with_current(|pool| gemm::seed_downdate(&mut c, u, v, pool));
         self.sweep(|row0, block| {
             let nr = block.rows();
             let b_rows = Dense::from_vec(nr, k, b.data()[row0 * k..(row0 + nr) * k].to_vec());

@@ -10,7 +10,9 @@
 //! ```
 
 use srsvd::cli::ArgSpec;
-use srsvd::config::{parse_basis, parse_pass_policy, parse_small_svd, stop_criterion, RawConfig};
+use srsvd::config::{
+    parse_basis, parse_pass_policy, parse_precision, parse_small_svd, stop_criterion, RawConfig,
+};
 use srsvd::coordinator::{
     Coordinator, CoordinatorConfig, EnginePreference, JobSpec, MatrixInput, ShiftSpec,
 };
@@ -96,6 +98,7 @@ fn svd_config_from(a: &srsvd::cli::Args) -> Result<SvdConfig> {
         basis: parse_basis(a.get("basis"))?,
         small_svd: parse_small_svd(a.get("small-svd"))?,
         pass_policy: parse_pass_policy(a.get("pass-policy"))?,
+        precision: parse_precision(a.get("precision"))?,
     })
 }
 
@@ -121,6 +124,12 @@ fn cmd_factorize(args: &[String]) -> Result<()> {
             "exact",
             "source-pass schedule: exact (2+2q passes, byte-identical to \
              dense) | fused (<= q+2 passes)",
+        )
+        .opt(
+            "precision",
+            "exact",
+            "GEMM kernel tier: exact (byte-identical results everywhere) | \
+             fast (packed AVX2/FMA, last-ulps differences)",
         )
         .opt("seed", "0", "rng seed")
         .opt("engine", "auto", "auto | native | artifact")
@@ -213,6 +222,7 @@ fn cmd_serve(args: &[String]) -> Result<()> {
     .opt("workers", "0", "native workers (0 = auto)")
     .opt("queue", "64", "queue capacity")
     .opt("threads", "0", "linalg pool threads (0 = auto / SRSVD_THREADS)")
+    .opt("io-threads", "0", "blocking-io pool threads (0 = config / SRSVD_IO_THREADS)")
     .opt("config", "", "optional srsvd.conf path")
     .opt("seed", "0", "rng seed")
     .flag("native-only", "disable the artifact engine");
@@ -226,12 +236,20 @@ fn cmd_serve(args: &[String]) -> Result<()> {
     } else {
         RawConfig::load(std::path::Path::new(a.get("config")))?
     };
+    // `[parallel] simd` is a process-wide override (like SRSVD_SIMD):
+    // apply it before any kernel dispatch happens.
+    if let Some(on) = raw.parallel_simd()? {
+        srsvd::linalg::gemm::kernels::set_simd_enabled(on);
+    }
     let mut cfg = raw.coordinator()?;
     if a.get_usize("workers")? > 0 {
         cfg.native_workers = a.get_usize("workers")?;
     }
     if a.get_usize("threads")? > 0 {
         cfg.pool_threads = Some(a.get_usize("threads")?);
+    }
+    if a.get_usize("io-threads")? > 0 {
+        cfg.io_threads = Some(a.get_usize("io-threads")?);
     }
     cfg.queue_capacity = a.get_usize("queue")?;
     if a.has_flag("native-only") {

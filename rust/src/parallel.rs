@@ -14,18 +14,34 @@
 //!   the exact serial inner-loop order. No cross-thread reductions, so
 //!   results are bit-identical for every pool size (including 1) — a
 //!   hard requirement, since every experiment is seeded.
-//! * **Process-wide handle.** [`global()`] lazily builds one pool sized
-//!   from `SRSVD_THREADS` (else the machine's available parallelism).
-//!   The coordinator can size its own pool from the `[parallel]
-//!   threads` config knob; worker threads install it with
-//!   [`set_thread_pool`] so every job shares one pool instead of each
-//!   job running serial.
+//! * **Split cpu/io pools.** The process runs *two* pools (the
+//!   [`Pools`] pair, symbolicator-style): the **cpu** pool fans out
+//!   GEMM panels and SVD stages, while the **io** pool parks blocking
+//!   work — `Streamed` prefetch readers, `FileSource` handle reads,
+//!   HTTP connection draining — so a slow disk or a pile of idle
+//!   keep-alive sockets can never steal compute threads from the hot
+//!   path. Io-style work is submitted with [`ThreadPool::spawn`]
+//!   (fire-and-forget) or [`ThreadPool::spawn_scoped`] (borrowing,
+//!   joinable); compute fan-out keeps using [`ThreadPool::run_chunks`].
+//! * **Process-wide handles.** [`global()`] lazily builds the cpu pool
+//!   sized from `SRSVD_THREADS` (else the machine's available
+//!   parallelism); [`global_io()`] builds the io pool from
+//!   `SRSVD_IO_THREADS` (else a small bounded default). The coordinator
+//!   can size its own pair from the `[parallel] threads` / `[parallel]
+//!   io_threads` config knobs; worker threads install them with
+//!   [`set_thread_pool`] / [`set_io_pool`] so every job shares one pair
+//!   instead of each job running serial.
 //! * **No nested parallelism.** A parallel op issued from inside a pool
 //!   worker runs inline — the pool can never deadlock on itself.
+//!   Likewise [`ThreadPool::spawn_scoped`] refuses (returns `None`)
+//!   when every worker is already occupied, so callers fall back to a
+//!   plain scoped thread instead of queueing behind long-running jobs.
 //!
-//! The only `unsafe` lives here: one lifetime erasure for the scoped
-//! closure (sound because `run_chunks` blocks until every helper has
-//! finished) and the disjoint row-slice split in [`par_row_chunks`].
+//! The only `unsafe` lives here: lifetime erasures for the scoped
+//! closures (sound because `run_chunks` blocks until every helper has
+//! finished, and a [`ScopedTask`] blocks on drop/join until its job
+//! has finished) and the disjoint row-slice split in
+//! [`par_row_chunks`].
 
 use std::cell::{Cell, RefCell};
 use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
@@ -45,6 +61,9 @@ pub struct PoolStats {
     serial_ops: AtomicU64,
     /// Total chunks executed by parallel operations.
     chunks: AtomicU64,
+    /// Jobs submitted via [`ThreadPool::spawn`] / [`ThreadPool::spawn_scoped`]
+    /// (the io-pool submission path).
+    spawned: AtomicU64,
 }
 
 /// Point-in-time view of a pool's counters.
@@ -58,14 +77,16 @@ pub struct PoolStatsSnapshot {
     pub serial_ops: u64,
     /// Total chunks executed by parallel operations.
     pub chunks: u64,
+    /// Jobs submitted via `spawn` / `spawn_scoped`.
+    pub spawned: u64,
 }
 
 impl std::fmt::Display for PoolStatsSnapshot {
     fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
         write!(
             f,
-            "threads={} par_ops={} serial_ops={} chunks={}",
-            self.threads, self.parallel_ops, self.serial_ops, self.chunks
+            "threads={} par_ops={} serial_ops={} chunks={} spawned={}",
+            self.threads, self.parallel_ops, self.serial_ops, self.chunks, self.spawned
         )
     }
 }
@@ -77,6 +98,10 @@ pub struct ThreadPool {
     tx: Option<Sender<Job>>,
     handles: Vec<std::thread::JoinHandle<()>>,
     stats: PoolStats,
+    /// Workers currently held by `spawn` / `spawn_scoped` jobs; gates
+    /// `spawn_scoped` saturation (shared with the job wrappers, which
+    /// outlive `&self`).
+    in_use: Arc<AtomicUsize>,
 }
 
 impl std::fmt::Debug for ThreadPool {
@@ -91,11 +116,14 @@ thread_local! {
     /// Per-thread pool override (set on coordinator worker threads and
     /// inside [`with_pool`] scopes); `None` means use the global pool.
     static CURRENT: RefCell<Option<Arc<ThreadPool>>> = const { RefCell::new(None) };
+    /// Per-thread io-pool override, mirroring `CURRENT`.
+    static CURRENT_IO: RefCell<Option<Arc<ThreadPool>>> = const { RefCell::new(None) };
     /// True on pool worker threads: parallel ops issued there run inline.
     static IN_WORKER: Cell<bool> = const { Cell::new(false) };
 }
 
 static GLOBAL: OnceLock<Arc<ThreadPool>> = OnceLock::new();
+static GLOBAL_IO: OnceLock<Arc<ThreadPool>> = OnceLock::new();
 
 /// Pool size from the environment: `SRSVD_THREADS` if set to a positive
 /// integer, else the machine's available parallelism, else 1.
@@ -126,10 +154,51 @@ pub fn init_global(threads: usize) -> bool {
     GLOBAL.set(Arc::new(ThreadPool::new(threads))).is_ok()
 }
 
+/// Io-pool size from the environment: `SRSVD_IO_THREADS` if set to a
+/// positive integer, else a small bounded default — enough workers to
+/// overlap prefetch reads and connection draining, but never sized like
+/// the compute pool (io jobs block, they don't burn cores).
+pub fn default_io_threads() -> usize {
+    if let Ok(s) = std::env::var("SRSVD_IO_THREADS") {
+        if let Ok(n) = s.trim().parse::<usize>() {
+            if n >= 1 {
+                return n;
+            }
+        }
+    }
+    let hw = std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(1);
+    hw.clamp(2, 8)
+}
+
+/// The process-wide io pool, built on first use with
+/// [`default_io_threads`].
+pub fn global_io() -> Arc<ThreadPool> {
+    GLOBAL_IO
+        .get_or_init(|| Arc::new(ThreadPool::named(default_io_threads(), "io")))
+        .clone()
+}
+
+/// Size the global io pool explicitly (e.g. from a config file) before
+/// its first use. Returns `false` if it already exists, in which case
+/// the existing pool is kept.
+pub fn init_global_io(threads: usize) -> bool {
+    GLOBAL_IO
+        .set(Arc::new(ThreadPool::named(threads, "io")))
+        .is_ok()
+}
+
 /// Install (or clear) this thread's pool override. Coordinator worker
 /// threads call this once at startup so jobs share the service pool.
 pub fn set_thread_pool(pool: Option<Arc<ThreadPool>>) {
     CURRENT.with(|c| *c.borrow_mut() = pool);
+}
+
+/// Install (or clear) this thread's *io*-pool override, mirroring
+/// [`set_thread_pool`].
+pub fn set_io_pool(pool: Option<Arc<ThreadPool>>) {
+    CURRENT_IO.with(|c| *c.borrow_mut() = pool);
 }
 
 /// Run `f` against the calling thread's effective pool: the thread-local
@@ -139,6 +208,51 @@ pub fn with_current<R>(f: impl FnOnce(&ThreadPool) -> R) -> R {
     match cur {
         Some(p) => f(&p),
         None => f(&global()),
+    }
+}
+
+/// Run `f` against the calling thread's effective *io* pool: the
+/// thread-local override when installed, else the global io pool.
+pub fn with_current_io<R>(f: impl FnOnce(&ThreadPool) -> R) -> R {
+    let cur = CURRENT_IO.with(|c| c.borrow().clone());
+    match cur {
+        Some(p) => f(&p),
+        None => f(&global_io()),
+    }
+}
+
+/// The split executor pair: compute fan-out on `cpu`, blocking work
+/// (prefetch readers, file-handle reads, connection draining) parked on
+/// `io` so neither load can starve the other. The coordinator owns one
+/// pair per process; benches and tests may build ad-hoc pairs.
+#[derive(Debug, Clone)]
+pub struct Pools {
+    /// Compute pool — GEMM panels and SVD stages (`run_chunks` path).
+    pub cpu: Arc<ThreadPool>,
+    /// Blocking pool — io jobs (`spawn` / `spawn_scoped` path).
+    pub io: Arc<ThreadPool>,
+}
+
+impl Pools {
+    /// Build from explicit sizes; `None` falls back to the process-wide
+    /// pool of that kind ([`global`] / [`global_io`]).
+    pub fn from_sizes(cpu: Option<usize>, io: Option<usize>) -> Pools {
+        Pools {
+            cpu: match cpu {
+                Some(t) => Arc::new(ThreadPool::new(t)),
+                None => global(),
+            },
+            io: match io {
+                Some(t) => Arc::new(ThreadPool::named(t, "io")),
+                None => global_io(),
+            },
+        }
+    }
+
+    /// Install both pools as the calling thread's overrides.
+    pub fn install(&self) {
+        set_thread_pool(Some(Arc::clone(&self.cpu)));
+        set_io_pool(Some(Arc::clone(&self.io)));
     }
 }
 
@@ -170,6 +284,7 @@ impl ThreadPool {
                 tx: None,
                 handles: Vec::new(),
                 stats: PoolStats::default(),
+                in_use: Arc::new(AtomicUsize::new(0)),
             };
         }
         let (tx, rx) = channel::<Job>();
@@ -183,7 +298,40 @@ impl ThreadPool {
                 .expect("spawn pool worker");
             handles.push(h);
         }
-        ThreadPool { threads, tx: Some(tx), handles, stats: PoolStats::default() }
+        ThreadPool {
+            threads,
+            tx: Some(tx),
+            handles,
+            stats: PoolStats::default(),
+            in_use: Arc::new(AtomicUsize::new(0)),
+        }
+    }
+
+    /// Build a *named* pool that always dedicates `threads.max(1)`
+    /// spawned workers (`srsvd-{name}-{w}`), even for size 1 — unlike
+    /// [`ThreadPool::new`], whose size-1 pool is fully inline. This is
+    /// the io-pool constructor: `spawn`ed jobs must actually run off
+    /// the caller's thread for a size-1 io pool to be useful.
+    pub fn named(threads: usize, name: &str) -> ThreadPool {
+        let threads = threads.max(1);
+        let (tx, rx) = channel::<Job>();
+        let rx = Arc::new(Mutex::new(rx));
+        let mut handles = Vec::with_capacity(threads);
+        for w in 0..threads {
+            let rx = Arc::clone(&rx);
+            let h = std::thread::Builder::new()
+                .name(format!("srsvd-{name}-{w}"))
+                .spawn(move || worker_loop(rx))
+                .expect("spawn pool worker");
+            handles.push(h);
+        }
+        ThreadPool {
+            threads,
+            tx: Some(tx),
+            handles,
+            stats: PoolStats::default(),
+            in_use: Arc::new(AtomicUsize::new(0)),
+        }
     }
 
     /// Total participants (workers + caller) of a parallel operation.
@@ -198,7 +346,84 @@ impl ThreadPool {
             parallel_ops: self.stats.parallel_ops.load(Ordering::Relaxed),
             serial_ops: self.stats.serial_ops.load(Ordering::Relaxed),
             chunks: self.stats.chunks.load(Ordering::Relaxed),
+            spawned: self.stats.spawned.load(Ordering::Relaxed),
         }
+    }
+
+    /// Spawned worker threads (differs from [`ThreadPool::threads`] for
+    /// `new` pools, where the caller is a participant).
+    fn workers(&self) -> usize {
+        self.handles.len()
+    }
+
+    /// Run `job` asynchronously on a pool worker (fire-and-forget; the
+    /// io-pool path for long-lived work like HTTP connection draining).
+    /// On a pool with no workers (a size-1 [`ThreadPool::new`] pool) the
+    /// job runs inline on the caller. A panicking job is caught and
+    /// logged so the worker thread survives.
+    pub fn spawn(&self, job: impl FnOnce() + Send + 'static) {
+        self.stats.spawned.fetch_add(1, Ordering::Relaxed);
+        if let Some(tx) = &self.tx {
+            let in_use = Arc::clone(&self.in_use);
+            in_use.fetch_add(1, Ordering::SeqCst);
+            let wrapped: Job = Box::new(move || {
+                if std::panic::catch_unwind(std::panic::AssertUnwindSafe(job)).is_err() {
+                    eprintln!("srsvd: spawned pool job panicked (worker survives)");
+                }
+                in_use.fetch_sub(1, Ordering::SeqCst);
+            });
+            tx.send(wrapped).expect("pool queue closed");
+            return;
+        }
+        job();
+    }
+
+    /// Run a *borrowing* job on a pool worker, returning a handle that
+    /// must finish (join or drop) before the borrow ends — the prefetch
+    /// path: readers borrow `&source` for one sweep.
+    ///
+    /// Returns `None` (without running the job) when the pool has no
+    /// workers or every worker is already held by a spawned job: the
+    /// caller falls back to a plain scoped thread instead of queueing
+    /// behind long-running io jobs — degradation, never deadlock.
+    pub fn spawn_scoped<'a>(
+        &self,
+        job: Box<dyn FnOnce() + Send + 'a>,
+    ) -> Option<ScopedTask<'a>> {
+        let tx = self.tx.as_ref()?;
+        let workers = self.workers();
+        if self
+            .in_use
+            .fetch_update(Ordering::SeqCst, Ordering::SeqCst, |n| {
+                if n >= workers {
+                    None
+                } else {
+                    Some(n + 1)
+                }
+            })
+            .is_err()
+        {
+            return None;
+        }
+        self.stats.spawned.fetch_add(1, Ordering::Relaxed);
+        // SAFETY: the returned ScopedTask blocks (join or Drop) until
+        // the worker has sent the job's result, so the erased borrow
+        // never outlives 'a. Same precedent as run_chunks above.
+        let job_static: Box<dyn FnOnce() + Send + 'static> =
+            unsafe { std::mem::transmute(job) };
+        let in_use = Arc::clone(&self.in_use);
+        let (done_tx, done_rx) = channel::<std::thread::Result<()>>();
+        let wrapped: Job = Box::new(move || {
+            let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(job_static));
+            in_use.fetch_sub(1, Ordering::SeqCst);
+            let _ = done_tx.send(result);
+        });
+        tx.send(wrapped).expect("pool queue closed");
+        Some(ScopedTask {
+            rx: done_rx,
+            joined: false,
+            _scope: std::marker::PhantomData,
+        })
     }
 
     /// Execute `f(0), f(1), ..., f(chunks - 1)`, distributing chunk
@@ -280,6 +505,41 @@ impl Drop for ThreadPool {
         self.tx.take();
         for h in self.handles.drain(..) {
             let _ = h.join();
+        }
+    }
+}
+
+/// Handle to a borrowing job submitted with [`ThreadPool::spawn_scoped`].
+/// The job is guaranteed finished once this is joined *or dropped* —
+/// that blocking is what makes the lifetime erasure inside
+/// `spawn_scoped` sound, exactly like a `std::thread::scope` guard.
+pub struct ScopedTask<'scope> {
+    rx: Receiver<std::thread::Result<()>>,
+    joined: bool,
+    _scope: std::marker::PhantomData<&'scope ()>,
+}
+
+impl ScopedTask<'_> {
+    /// Block until the job finishes, propagating its panic (mirrors
+    /// `JoinHandle::join` + `resume_unwind`, like the prefetch reader's
+    /// previous scoped-thread join did).
+    pub fn join(mut self) {
+        self.joined = true;
+        match self.rx.recv() {
+            Ok(Ok(())) => {}
+            Ok(Err(p)) => std::panic::resume_unwind(p),
+            Err(_) => panic!("scoped pool job dropped without reporting"),
+        }
+    }
+}
+
+impl Drop for ScopedTask<'_> {
+    fn drop(&mut self) {
+        if !self.joined {
+            // Must block even on the unwind path: the job may still be
+            // using the borrow this task is scoped to. Panics are
+            // swallowed here (can't double-panic); `join` propagates.
+            let _ = self.rx.recv();
         }
     }
 }
@@ -487,5 +747,111 @@ mod tests {
         });
         assert!(touched.iter().all(|&t| t));
         assert_eq!(pool.stats().parallel_ops, 0);
+    }
+
+    #[test]
+    fn named_pool_spawn_runs_off_thread() {
+        // Even a size-1 named pool has a dedicated worker: the spawned
+        // job runs on a different thread than the caller.
+        let pool = ThreadPool::named(1, "spawntest");
+        let (tx, rx) = channel();
+        let caller = std::thread::current().id();
+        pool.spawn(move || {
+            let _ = tx.send(std::thread::current().id());
+        });
+        let worker = rx.recv().expect("spawned job must run");
+        assert_ne!(worker, caller, "named-pool spawn must not run inline");
+        assert_eq!(pool.stats().spawned, 1);
+    }
+
+    #[test]
+    fn inline_pool_spawn_runs_on_caller() {
+        let pool = ThreadPool::new(1); // no workers: inline fallback
+        let (tx, rx) = channel();
+        let caller = std::thread::current().id();
+        pool.spawn(move || {
+            let _ = tx.send(std::thread::current().id());
+        });
+        assert_eq!(rx.recv().unwrap(), caller);
+    }
+
+    #[test]
+    fn spawn_panic_does_not_kill_worker() {
+        let pool = ThreadPool::named(1, "panictest");
+        pool.spawn(|| panic!("spawned boom"));
+        // The single worker must survive to run the next job.
+        let (tx, rx) = channel();
+        pool.spawn(move || {
+            let _ = tx.send(42);
+        });
+        assert_eq!(rx.recv().unwrap(), 42);
+    }
+
+    #[test]
+    fn spawn_scoped_borrows_and_joins() {
+        let pool = ThreadPool::named(2, "scopedtest");
+        let data = vec![1u64, 2, 3, 4];
+        let sum = Mutex::new(0u64);
+        let task = pool
+            .spawn_scoped(Box::new(|| {
+                // Borrows both `data` and `sum` non-'static.
+                *sum.lock().unwrap() = data.iter().sum();
+            }))
+            .expect("idle named pool must accept a scoped job");
+        task.join();
+        assert_eq!(*sum.lock().unwrap(), 10);
+    }
+
+    #[test]
+    fn spawn_scoped_refuses_when_saturated() {
+        let pool = ThreadPool::named(1, "sattest");
+        let (release_tx, release_rx) = channel::<()>();
+        let blocker = pool
+            .spawn_scoped(Box::new(move || {
+                let _ = release_rx.recv();
+            }))
+            .expect("first scoped job fits");
+        // The only worker is held: a second scoped job must be refused
+        // (the caller falls back to std::thread::scope), not queued.
+        assert!(pool.spawn_scoped(Box::new(|| {})).is_none());
+        release_tx.send(()).unwrap();
+        blocker.join();
+        // After release the worker frees up again.
+        let again = pool.spawn_scoped(Box::new(|| {}));
+        assert!(again.is_some());
+        again.unwrap().join();
+    }
+
+    #[test]
+    fn spawn_scoped_propagates_panic_on_join() {
+        let pool = ThreadPool::named(1, "scopanic");
+        let task = pool.spawn_scoped(Box::new(|| panic!("scoped boom"))).unwrap();
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| task.join()));
+        assert!(result.is_err(), "scoped panic must propagate at join");
+        // Worker survives for the next job.
+        let ok = pool.spawn_scoped(Box::new(|| {})).expect("worker survived");
+        ok.join();
+    }
+
+    #[test]
+    fn pools_pair_installs_and_restores() {
+        let pools = Pools::from_sizes(Some(2), Some(1));
+        assert_eq!(pools.cpu.threads(), 2);
+        assert_eq!(pools.io.threads(), 1);
+        pools.install();
+        assert_eq!(with_current(|p| p.threads()), 2);
+        assert_eq!(with_current_io(|p| p.threads()), 1);
+        set_thread_pool(None);
+        set_io_pool(None);
+    }
+
+    #[test]
+    fn default_io_threads_is_bounded() {
+        // Regardless of host size the default stays in [2, 8] (unless
+        // SRSVD_IO_THREADS overrides, which tests don't set).
+        if std::env::var("SRSVD_IO_THREADS").is_err() {
+            let n = default_io_threads();
+            assert!((2..=8).contains(&n), "default io threads {n} out of bounds");
+        }
     }
 }

@@ -36,7 +36,7 @@ use std::path::{Path, PathBuf};
 
 use crate::coordinator::{EnginePreference, JobSpec, MatrixInput, ShiftSpec};
 use crate::linalg::stream::MatrixSource;
-use crate::svd::{BasisMethod, PassPolicy, SmallSvdMethod, StopCriterion};
+use crate::svd::{BasisMethod, PassPolicy, Precision, SmallSvdMethod, StopCriterion};
 use crate::util::json::Json;
 
 /// Name of the index file inside the cache directory.
@@ -120,6 +120,12 @@ pub fn canonical_spec_bytes(spec: &JobSpec) -> Option<Vec<u8>> {
     b.push(match spec.config.pass_policy {
         PassPolicy::Exact => 0,
         PassPolicy::Fused => 1,
+    });
+    // The kernel tier is accuracy-relevant: Fast factors differ from
+    // Exact in the last ulps, so the two must never share a cache slot.
+    b.push(match spec.config.precision {
+        Precision::Exact => 0,
+        Precision::Fast => 1,
     });
     match &spec.shift {
         ShiftSpec::None => b.push(0),
@@ -408,12 +414,15 @@ mod tests {
         stop.config = stop.config.with_tolerance(1e-3, 8);
         let mut policy = base.clone();
         policy.config.pass_policy = PassPolicy::Fused;
+        let mut tier = base.clone();
+        tier.config.precision = Precision::Fast;
         for (what, spec) in [
             ("seed", seed),
             ("shift", shift),
             ("k", rank),
             ("stop", stop),
             ("pass_policy", policy),
+            ("precision", tier),
         ] {
             assert_ne!(spec_hash(&spec).unwrap(), h0, "{what} not in the key");
         }

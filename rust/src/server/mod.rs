@@ -11,11 +11,17 @@
 //! ## Architecture
 //!
 //! One **accept thread** pushes connections into a bounded channel; a
-//! small pool of **connection workers** (the `[server] workers` knob)
-//! drains it, mirroring the shared-queue pattern of
-//! [`crate::parallel`]. Each worker speaks HTTP/1.1 with keep-alive
-//! ([`http`]), polling between requests so shutdown and idle limits
-//! are enforced without interrupting an in-flight exchange.
+//! small set of **connection workers** (the `[server] workers` knob)
+//! drains it. The workers are not dedicated threads: each drain loop
+//! runs as a job on the coordinator's **io pool**
+//! ([`Coordinator::io_pool`]) alongside streamed-prefetch readers, so
+//! blocking network time shares the pool sized for blocking work and
+//! never occupies a compute worker. Each worker speaks HTTP/1.1 with
+//! keep-alive ([`http`]), polling between requests so shutdown and
+//! idle limits are enforced without interrupting an in-flight
+//! exchange. Shutdown quiesces through a done channel: every drain
+//! loop signals exit, so [`Server::shutdown`] still joins all
+//! connection work without owning the threads.
 //!
 //! ## Endpoints
 //!
@@ -70,7 +76,7 @@ pub use client::Client;
 use std::collections::HashMap;
 use std::net::{SocketAddr, TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, Ordering};
-use std::sync::mpsc::{sync_channel, Receiver, SyncSender};
+use std::sync::mpsc::{channel, sync_channel, Receiver, SyncSender};
 use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
 
@@ -91,7 +97,9 @@ pub struct ServerConfig {
     pub addr: String,
     /// Maximum accepted request body, bytes (`[server] max_body_mb`).
     pub max_body_bytes: usize,
-    /// Connection worker threads.
+    /// Connection worker drain loops, run as jobs on the coordinator's
+    /// io pool. More loops than io threads is allowed — the excess
+    /// queue until a pool worker frees up.
     pub workers: usize,
     /// Per-request timeout in seconds: reading a request, waiting on a
     /// blocking `GET`, and the keep-alive idle limit.
@@ -199,7 +207,9 @@ pub struct Server {
     local_addr: SocketAddr,
     shared: Arc<Shared>,
     accept_handle: Option<std::thread::JoinHandle<()>>,
-    worker_handles: Vec<std::thread::JoinHandle<()>>,
+    /// One `()` per connection worker on exit; the channel closing
+    /// means every drain loop (io-pool job) has finished.
+    worker_done: Option<Receiver<()>>,
 }
 
 impl Server {
@@ -259,29 +269,38 @@ impl Server {
         let workers = config.workers.max(1);
         let (conn_tx, conn_rx) = sync_channel::<TcpStream>(workers * 2);
         let conn_rx = Arc::new(Mutex::new(conn_rx));
-        let mut worker_handles = Vec::with_capacity(workers);
-        for w in 0..workers {
+        // Connection workers are io-pool jobs, not dedicated threads:
+        // blocking network time lands on the pool sized for blocking
+        // work, next to streamed-prefetch readers. Each loop signals
+        // `done` on exit; the sender clones dropping (normal exit or a
+        // panic unwinding the closure) is what closes the channel, so
+        // shutdown can quiesce without thread handles.
+        let io = shared.coord.io_pool();
+        let (done_tx, done_rx) = channel::<()>();
+        for _ in 0..workers {
             let rx = Arc::clone(&conn_rx);
             let sh = Arc::clone(&shared);
-            worker_handles.push(
-                std::thread::Builder::new()
-                    .name(format!("srsvd-http-{w}"))
-                    .spawn(move || worker_loop(rx, sh))
-                    .map_err(|e| Error::Service(format!("spawn http worker: {e}")))?,
-            );
+            let done = done_tx.clone();
+            io.spawn(move || {
+                worker_loop(rx, sh);
+                let _ = done.send(());
+            });
         }
+        drop(done_tx);
         let sh = Arc::clone(&shared);
         let accept_handle = std::thread::Builder::new()
             .name("srsvd-http-accept".into())
             .spawn(move || accept_loop(listener, conn_tx, sh))
             .map_err(|e| Error::Service(format!("spawn accept loop: {e}")))?;
 
-        crate::log_info!("server: listening on http://{local_addr} ({workers} connection workers)");
+        crate::log_info!(
+            "server: listening on http://{local_addr} ({workers} connection workers on the io pool)"
+        );
         Ok(Server {
             local_addr,
             shared,
             accept_handle: Some(accept_handle),
-            worker_handles,
+            worker_done: Some(done_rx),
         })
     }
 
@@ -303,9 +322,7 @@ impl Server {
         if let Some(h) = self.accept_handle.take() {
             let _ = h.join();
         }
-        for h in self.worker_handles.drain(..) {
-            let _ = h.join();
-        }
+        self.drain_workers();
     }
 
     fn shutdown_inner(&mut self) {
@@ -320,10 +337,18 @@ impl Server {
         }
         // The accept thread owned the connection sender; its exit closes
         // the channel, so workers drain what was queued and stop.
-        for h in self.worker_handles.drain(..) {
-            let _ = h.join();
-        }
+        self.drain_workers();
         self.shared.pending.lock().expect("pending jobs mutex").clear();
+    }
+
+    /// Block until every connection worker loop has exited. The loops
+    /// are io-pool jobs, so there are no thread handles to join;
+    /// instead each loop's done-sender drops on exit (even under a
+    /// panic) and the channel closing is the quiescence signal.
+    fn drain_workers(&mut self) {
+        if let Some(rx) = self.worker_done.take() {
+            while rx.recv().is_ok() {}
+        }
     }
 }
 

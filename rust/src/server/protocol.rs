@@ -23,6 +23,8 @@
 //!   "small_svd":   "jacobi",      // optional: jacobi | gram
 //!   "pass_policy": "exact",       // optional: exact | fused (source-pass schedule;
 //!                                 //   fused caps streamed jobs at q+2 passes)
+//!   "precision":   "exact",       // optional: exact | fast (kernel tier; fast =
+//!                                 //   packed AVX2/FMA, last-ulp differences)
 //!   "shift":       "mean-center", // optional: "none" | "mean-center" | [mu_0, ..]
 //!   "engine":      "auto",        // optional: auto | native | artifact
 //!   "seed": 0,                    // optional, default 0 (u64 below 2^53)
@@ -63,12 +65,14 @@
 //! the wire is **byte-identical** to the same spec run in-process
 //! (pinned by `rust/tests/server.rs`).
 
-use crate::config::{parse_basis, parse_pass_policy, parse_small_svd, stop_criterion};
+use crate::config::{parse_basis, parse_pass_policy, parse_precision, parse_small_svd, stop_criterion};
 use crate::coordinator::{EnginePreference, JobResult, JobSpec, MatrixInput, ShiftSpec};
 use crate::data::Distribution;
 use crate::linalg::stream::{FileSource, GeneratorSource, StreamConfig};
 use crate::linalg::{Csr, Dense, Triplets};
-use crate::svd::{BasisMethod, PassPolicy, SmallSvdMethod, StopCriterion, SvdConfig, SvdEngine};
+use crate::svd::{
+    BasisMethod, PassPolicy, Precision, SmallSvdMethod, StopCriterion, SvdConfig, SvdEngine,
+};
 use crate::util::json::Json;
 use crate::util::{Error, Result};
 
@@ -259,7 +263,7 @@ pub fn parse_submit(body: &Json, stream_defaults: &StreamConfig) -> Result<Submi
         body,
         &[
             "input", "k", "oversample", "power_iters", "pve_tol", "max_sweeps", "basis",
-            "small_svd", "pass_policy", "shift", "engine", "seed", "score", "wait",
+            "small_svd", "pass_policy", "precision", "shift", "engine", "seed", "score", "wait",
         ],
         "job",
     )?;
@@ -299,6 +303,10 @@ pub fn parse_submit(body: &Json, stream_defaults: &StreamConfig) -> Result<Submi
         pass_policy: match obj.get("pass_policy") {
             Some(v) => parse_pass_policy(v.as_str()?)?,
             None => PassPolicy::Exact,
+        },
+        precision: match obj.get("precision") {
+            Some(v) => parse_precision(v.as_str()?)?,
+            None => Precision::Exact,
         },
     };
     let shift = match obj.get("shift") {
@@ -408,6 +416,7 @@ impl JobRequest {
             ("basis", Json::str(basis)),
             ("small_svd", Json::str(small_svd)),
             ("pass_policy", Json::str(self.config.pass_policy.name())),
+            ("precision", Json::str(self.config.precision.name())),
             ("shift", shift),
             ("engine", Json::str(engine)),
             ("seed", Json::num(self.seed as f64)),
@@ -649,6 +658,12 @@ pub fn metrics_to_json(m: &crate::coordinator::MetricsSnapshot) -> Json {
         ("pool_parallel_ops", Json::num(m.pool_parallel_ops as f64)),
         ("pool_serial_ops", Json::num(m.pool_serial_ops as f64)),
         ("pool_chunks", Json::num(m.pool_chunks as f64)),
+        ("pool_spawned", Json::num(m.pool_spawned as f64)),
+        ("io_threads", Json::num(m.io_threads as f64)),
+        ("io_parallel_ops", Json::num(m.io_parallel_ops as f64)),
+        ("io_serial_ops", Json::num(m.io_serial_ops as f64)),
+        ("io_chunks", Json::num(m.io_chunks as f64)),
+        ("io_spawned", Json::num(m.io_spawned as f64)),
         ("cancelled", Json::num(m.cancelled as f64)),
         ("evicted", Json::num(m.evicted as f64)),
         ("cache_hits", Json::num(m.cache_hits as f64)),
@@ -865,6 +880,33 @@ mod tests {
         assert!(j.get("cache_hits").is_ok());
         assert!(j.get("cache_misses").is_ok());
         assert!(j.get("cache_bytes").is_ok());
+        // Both pools are reported (split cpu/io pool PR).
+        assert!(j.get("pool_spawned").is_ok());
+        assert!(j.get("io_threads").is_ok());
+        assert!(j.get("io_spawned").is_ok());
+    }
+
+    #[test]
+    fn precision_round_trips_and_rejects_unknowns() {
+        let mut req = JobRequest::new(
+            generator_input(8, 8, Distribution::Uniform, 0, None, None),
+            2,
+        );
+        // Default: exact.
+        let parsed = parse_submit(&req.to_json(), &defaults()).unwrap();
+        assert_eq!(parsed.spec.config.precision, Precision::Exact);
+        // Fast survives the wire.
+        req.config.precision = Precision::Fast;
+        let parsed = parse_submit(&req.to_json(), &defaults()).unwrap();
+        assert_eq!(parsed.spec.config.precision, Precision::Fast);
+        // An unknown value is a 400-class error, not a silent default.
+        let mut bad = req.to_json().as_obj().unwrap().clone();
+        bad.insert("precision".into(), Json::str("warp"));
+        assert!(parse_submit(&Json::Obj(bad), &defaults()).is_err());
+        // A non-string value is rejected too.
+        let mut bad = req.to_json().as_obj().unwrap().clone();
+        bad.insert("precision".into(), Json::num(1.0));
+        assert!(parse_submit(&Json::Obj(bad), &defaults()).is_err());
     }
 
     #[test]

@@ -15,6 +15,11 @@ pub use pca::{column_errors, Pca};
 pub use rsvd::Rsvd;
 pub use shifted::{BasisMethod, PassPolicy, ShiftedRsvd, SmallSvdMethod, SweepReport};
 
+/// Kernel arithmetic tier — defined next to the GEMM dispatch it
+/// controls, re-exported here because it is configured per job through
+/// [`SvdConfig`].
+pub use crate::linalg::gemm::Precision;
+
 use crate::linalg::{gemm, Dense};
 
 /// A rank-k factorization `X̄ ≈ U·diag(s)·Vᵀ`.
@@ -159,6 +164,11 @@ pub struct SvdConfig {
     /// [`StopCriterion::Tolerance`] mode, which always runs the fused
     /// Gram-sweep schedule (one source pass per sweep).
     pub pass_policy: PassPolicy,
+    /// Kernel arithmetic tier: `Exact` (default — factors byte-identical
+    /// across simd on/off and every pool size) or `Fast` (packed
+    /// AVX2/FMA microkernels; deterministic, but the contraction
+    /// rounding differs from scalar in the last ulps).
+    pub precision: Precision,
 }
 
 impl Default for SvdConfig {
@@ -170,6 +180,7 @@ impl Default for SvdConfig {
             basis: BasisMethod::Direct,
             small_svd: SmallSvdMethod::Jacobi,
             pass_policy: PassPolicy::Exact,
+            precision: Precision::Exact,
         }
     }
 }
@@ -206,6 +217,12 @@ impl SvdConfig {
     /// Builder-style override of the source-pass schedule.
     pub fn with_pass_policy(mut self, policy: PassPolicy) -> Self {
         self.pass_policy = policy;
+        self
+    }
+
+    /// Builder-style override of the kernel arithmetic tier.
+    pub fn with_precision(mut self, precision: Precision) -> Self {
+        self.precision = precision;
         self
     }
 }

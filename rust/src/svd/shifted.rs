@@ -218,6 +218,25 @@ impl ShiftedRsvd {
         rng: &mut dyn Rng,
         cancel: &AtomicBool,
     ) -> Result<(Factorization, SweepReport)> {
+        // Scope the job's kernel tier onto this thread: every product
+        // below (and in the helpers it calls) dispatches on the
+        // configured precision without threading it through each call.
+        // The gemm layer resolves the kernel once per product on the
+        // calling thread, so pool workers inherit the decision.
+        crate::linalg::gemm::kernels::with_precision(self.config.precision, || {
+            self.factorize_stages(x, mu, rng, cancel)
+        })
+    }
+
+    /// The factorization pipeline proper, running under the precision
+    /// scope installed by the public entry point.
+    fn factorize_stages(
+        &self,
+        x: &dyn MatVecOps,
+        mu: &[f64],
+        rng: &mut dyn Rng,
+        cancel: &AtomicBool,
+    ) -> Result<(Factorization, SweepReport)> {
         let (m, n) = x.shape();
         crate::ensure!(mu.len() == m, "mu length {} != m {}", mu.len(), m);
         let k = self.config.k;

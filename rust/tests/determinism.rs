@@ -7,14 +7,17 @@
 //! path end-to-end.
 
 use std::sync::Arc;
+use std::time::Duration;
 
 use srsvd::coordinator::{
     Coordinator, CoordinatorConfig, EnginePreference, JobSpec, MatrixInput, ShiftSpec,
 };
-use srsvd::linalg::{Csr, Dense};
+use srsvd::linalg::gemm::kernels::with_simd;
+use srsvd::linalg::gemm::Simd;
+use srsvd::linalg::{Csr, Dense, InMemorySource, MatrixSource, StreamConfig, Streamed};
 use srsvd::parallel::{with_pool, ThreadPool};
 use srsvd::rng::{Rng, Xoshiro256pp};
-use srsvd::svd::{Factorization, ShiftedRsvd, SvdConfig};
+use srsvd::svd::{Factorization, Precision, ShiftedRsvd, SvdConfig};
 
 fn dense_bits(x: &Dense) -> Vec<u64> {
     x.data().iter().map(|v| v.to_bits()).collect()
@@ -163,6 +166,7 @@ fn coordinator_factorizations_identical_across_pool_sizes() {
             queue_capacity: 8,
             artifact_dir: None,
             pool_threads: Some(pool_threads),
+            io_threads: None,
         })
         .expect("coordinator");
         let r = coord.submit_blocking(job()).expect("submit");
@@ -181,4 +185,183 @@ fn coordinator_factorizations_identical_across_pool_sizes() {
         // MSE is computed from identical factors — must match exactly.
         assert_eq!(base.mse, got.mse);
     }
+}
+
+/// The Exact kernel tier must be byte-identical across SIMD modes as
+/// well as pool sizes: the AVX2 exact kernels reproduce the scalar
+/// accumulation order lane-for-lane, so `simd on/off × threads 1/2/8`
+/// is one equivalence class on dense, streamed, and sparse inputs.
+/// (`with_simd(Avx2)` means "best available" — on non-AVX2 hardware it
+/// degrades to scalar and the comparison is trivially exact.)
+#[test]
+fn exact_tier_identical_across_simd_modes_and_pool_sizes() {
+    let dense = dense_input();
+    let sparse = sparse_input();
+    let dcfg = SvdConfig::paper(12).with_fixed_power(1);
+    let scfg = SvdConfig::paper(10).with_fixed_power(1);
+    let run = |simd: Simd, threads: usize| -> Vec<Factorization> {
+        let pool = Arc::new(ThreadPool::new(threads));
+        with_pool(&pool, || {
+            with_simd(simd, || {
+                let mut r1 = Xoshiro256pp::seed_from_u64(42);
+                let f1 = ShiftedRsvd::new(dcfg)
+                    .factorize_mean_centered(&dense, &mut r1)
+                    .expect("dense");
+                let s = Streamed::with_block_rows(InMemorySource::new(dense.clone()), 37);
+                let mut r2 = Xoshiro256pp::seed_from_u64(42);
+                let f2 = ShiftedRsvd::new(dcfg)
+                    .factorize_mean_centered(&s, &mut r2)
+                    .expect("streamed");
+                let mut r3 = Xoshiro256pp::seed_from_u64(43);
+                let f3 = ShiftedRsvd::new(scfg)
+                    .factorize_mean_centered(&sparse, &mut r3)
+                    .expect("sparse");
+                vec![f1, f2, f3]
+            })
+        })
+    };
+    let base = run(Simd::Scalar, 1);
+    for simd in [Simd::Scalar, Simd::Avx2] {
+        for threads in [1, 2, 8] {
+            let got = run(simd, threads);
+            let names = ["dense", "streamed", "sparse"];
+            for (i, (name, g)) in names.iter().zip(&got).enumerate() {
+                assert_identical(
+                    &base[i],
+                    g,
+                    &format!("{name}, simd {:?}, {threads} threads", simd),
+                );
+            }
+        }
+    }
+}
+
+/// Rank-k reconstruction `u · diag(s) · vᵀ`, the sign-invariant way to
+/// compare two factorizations that are only ulp-level apart.
+fn reconstruct(f: &Factorization) -> Vec<f64> {
+    let (m, k) = f.u.shape();
+    let (n, k2) = f.v.shape();
+    assert_eq!(k, k2, "u and v rank mismatch");
+    let (ud, vd) = (f.u.data(), f.v.data());
+    let mut out = vec![0.0; m * n];
+    for i in 0..m {
+        for t in 0..k {
+            let c = ud[i * k + t] * f.s[t];
+            for j in 0..n {
+                out[i * n + j] += c * vd[j * k + t];
+            }
+        }
+    }
+    out
+}
+
+/// The Fast tier trades byte-identity for FMA throughput, but only in
+/// the last ulps: on a seeded fig1-style input its singular values must
+/// track the Exact tier to 1e-12 (relative) and the rank-k
+/// reconstruction to 1e-9 — far below any accuracy the experiments
+/// report. On hardware without AVX2/FMA the Fast tier falls back to the
+/// scalar kernels and the comparison is exact.
+#[test]
+fn fast_tier_tracks_exact_within_tolerance() {
+    let x = dense_input();
+    let run = |p: Precision| -> Factorization {
+        let cfg = SvdConfig::paper(12).with_fixed_power(2).with_precision(p);
+        let mut rng = Xoshiro256pp::seed_from_u64(0xF16);
+        ShiftedRsvd::new(cfg)
+            .factorize_mean_centered(&x, &mut rng)
+            .expect("factorize")
+    };
+    let exact = run(Precision::Exact);
+    let fast = run(Precision::Fast);
+    let scale = exact.s[0];
+    assert!(scale > 0.0, "degenerate spectrum");
+    for (i, (a, b)) in exact.s.iter().zip(&fast.s).enumerate() {
+        assert!(
+            (a - b).abs() <= 1e-12 * scale,
+            "s[{i}]: exact {a} vs fast {b}"
+        );
+    }
+    let re = reconstruct(&exact);
+    let rf = reconstruct(&fast);
+    for (idx, (a, b)) in re.iter().zip(&rf).enumerate() {
+        assert!(
+            (a - b).abs() <= 1e-9 * scale,
+            "reconstruction[{idx}]: exact {a} vs fast {b}"
+        );
+    }
+}
+
+/// A matrix source whose every read sleeps — a stand-in for slow disk
+/// or network I/O.
+#[derive(Debug)]
+struct SlowSource {
+    inner: InMemorySource,
+    delay: Duration,
+}
+
+impl MatrixSource for SlowSource {
+    fn shape(&self) -> (usize, usize) {
+        self.inner.shape()
+    }
+    fn read_rows(&self, row0: usize, nrows: usize, out: &mut [f64]) -> srsvd::util::Result<()> {
+        std::thread::sleep(self.delay);
+        self.inner.read_rows(row0, nrows, out)
+    }
+}
+
+/// Pool separation end-to-end: a streamed job grinding through seconds
+/// of blocking reads (on the io pool) must not starve a concurrent
+/// dense job of cpu-pool workers. The overlap is the assertion — the
+/// dense job completes while the slow job is still running.
+#[test]
+fn slow_streamed_io_does_not_starve_dense_compute() {
+    let coord = Coordinator::start(CoordinatorConfig {
+        native_workers: 2,
+        queue_capacity: 8,
+        artifact_dir: None,
+        pool_threads: Some(2),
+        io_threads: Some(1),
+    })
+    .expect("coordinator");
+
+    let x = dense_input();
+    let slow = SlowSource {
+        inner: InMemorySource::new(x.clone()),
+        delay: Duration::from_millis(25),
+    };
+    // 15 blocks per pass, 2 + 2q = 6 factorization passes plus the
+    // mean pass: >2 s of pure sleeping reads.
+    let slow_spec = JobSpec {
+        input: MatrixInput::streamed(
+            slow,
+            &StreamConfig { block_rows: 10, budget_mb: 64, prefetch: true },
+        ),
+        config: SvdConfig::paper(8).with_fixed_power(2),
+        shift: ShiftSpec::MeanCenter,
+        engine: EnginePreference::Native,
+        seed: 7,
+        score: false,
+    };
+    let dense_spec = JobSpec {
+        input: MatrixInput::Dense(x),
+        config: SvdConfig::paper(8).with_fixed_power(1),
+        shift: ShiftSpec::MeanCenter,
+        engine: EnginePreference::Native,
+        seed: 7,
+        score: false,
+    };
+    let slow_h = coord.submit(slow_spec).expect("submit slow");
+    let dense_h = coord.submit(dense_spec).expect("submit dense");
+    let r = dense_h
+        .wait_timeout(Duration::from_secs(60))
+        .expect("dense job starved: streamed io is blocking the cpu pool");
+    r.outcome.expect("dense job");
+    match slow_h.wait_timeout(Duration::from_millis(0)) {
+        Err(srsvd::util::Error::Timeout(_)) => {}
+        Ok(_) => panic!("slow job finished before the dense job — no overlap to observe"),
+        Err(e) => panic!("slow job failed early: {e}"),
+    }
+    let r = slow_h.wait().expect("slow job result");
+    r.outcome.expect("slow job");
+    coord.shutdown();
 }

@@ -30,6 +30,7 @@ fn coordinator(native_workers: usize) -> Arc<Coordinator> {
             queue_capacity: 16,
             artifact_dir: None,
             pool_threads: Some(2),
+            io_threads: None,
         })
         .unwrap(),
     )

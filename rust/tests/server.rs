@@ -40,6 +40,7 @@ fn start_service(
             queue_capacity,
             artifact_dir: None,
             pool_threads: Some(2),
+            io_threads: None,
         })
         .unwrap(),
     );
@@ -242,6 +243,7 @@ fn claimed_result_surviving_failed_write_is_retryable() {
             queue_capacity: 16,
             artifact_dir: None,
             pool_threads: Some(2),
+            io_threads: None,
         })
         .unwrap(),
     );

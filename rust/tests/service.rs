@@ -113,6 +113,7 @@ fn coordinator_routes_grid_jobs_to_artifact() {
         queue_capacity: 16,
         artifact_dir: Some(dir),
         pool_threads: None,
+        io_threads: None,
     })
     .unwrap();
 
@@ -147,6 +148,7 @@ fn coordinator_engines_agree_for_same_seed() {
         queue_capacity: 16,
         artifact_dir: Some(dir),
         pool_threads: None,
+        io_threads: None,
     })
     .unwrap();
     let x = uniform(100, 1000, 9);
@@ -174,6 +176,7 @@ fn coordinator_sparse_word_job() {
         queue_capacity: 4,
         artifact_dir: Some(dir),
         pool_threads: None,
+        io_threads: None,
     })
     .unwrap();
     let mut rng = Xoshiro256pp::seed_from_u64(13);
@@ -255,6 +258,7 @@ fn coordinator_mixed_burst() {
         queue_capacity: 8,
         artifact_dir: Some(dir),
         pool_threads: None,
+        io_threads: None,
     })
     .unwrap();
     let mut handles = Vec::new();

@@ -140,6 +140,7 @@ fn coordinator_streamed_job_matches_dense_job() {
             queue_capacity: 8,
             artifact_dir: None,
             pool_threads: Some(pool_threads),
+            io_threads: None,
         })
         .expect("coordinator");
         let r = coord
@@ -210,6 +211,7 @@ fn failing_streamed_source_fails_the_job_not_the_worker() {
         queue_capacity: 8,
         artifact_dir: None,
         pool_threads: Some(2),
+        io_threads: None,
     })
     .expect("coordinator");
     let bad = FlakySource { inner: InMemorySource::new(x.clone()), fail_after_row: 60 };
@@ -341,6 +343,7 @@ fn coordinator_surfaces_stream_pass_and_byte_counters() {
         queue_capacity: 8,
         artifact_dir: None,
         pool_threads: Some(2),
+        io_threads: None,
     })
     .expect("coordinator");
     let r = coord
