@@ -10,9 +10,17 @@
 //! response is checked byte-identical to an in-process baseline before
 //! its leg is reported (the server must never change the math).
 //!
+//! The sharded leg scales out instead of up: one routing tier
+//! (`srsvd route`) in front of 1/2/4 in-process replicas, submitting a
+//! family of distinct specs that rendezvous-spread over the shards. It
+//! emits its own `BENCH_router.json` trajectory, and every leg's
+//! factors are checked bit-identical to the single-replica leg's —
+//! sharding must never change the math.
+//!
 //! Run: `cargo bench --bench serve_throughput`.
 //! Env: `SRSVD_BENCH_QUICK=1` (CI smoke),
-//! `SRSVD_BENCH_SERVE_JSON=<path>` (default `BENCH_serve.json`).
+//! `SRSVD_BENCH_SERVE_JSON=<path>` (default `BENCH_serve.json`),
+//! `SRSVD_BENCH_ROUTER_JSON=<path>` (default `BENCH_router.json`).
 
 use std::sync::Arc;
 
@@ -22,6 +30,7 @@ use srsvd::data::Distribution;
 use srsvd::linalg::stream::StreamConfig;
 use srsvd::linalg::Dense;
 use srsvd::rng::{Rng, Xoshiro256pp};
+use srsvd::router::{Router, RouterConfig};
 use srsvd::server::protocol::{dense_input, generator_input, JobRequest};
 use srsvd::server::{Client, Server, ServerConfig};
 use srsvd::svd::{Factorization, ShiftedRsvd, SvdConfig};
@@ -29,6 +38,15 @@ use srsvd::util::json::Json;
 use srsvd::util::timer::Timer;
 
 fn identical(a: &Factorization, b: &srsvd::server::protocol::WireOutput) -> bool {
+    a.s.iter().zip(&b.s).all(|(x, y)| x.to_bits() == y.to_bits())
+        && a.u.data().iter().zip(b.u.data()).all(|(x, y)| x.to_bits() == y.to_bits())
+        && a.v.data().iter().zip(b.v.data()).all(|(x, y)| x.to_bits() == y.to_bits())
+}
+
+fn wire_identical(
+    a: &srsvd::server::protocol::WireOutput,
+    b: &srsvd::server::protocol::WireOutput,
+) -> bool {
     a.s.iter().zip(&b.s).all(|(x, y)| x.to_bits() == y.to_bits())
         && a.u.data().iter().zip(b.u.data()).all(|(x, y)| x.to_bits() == y.to_bits())
         && a.v.data().iter().zip(b.v.data()).all(|(x, y)| x.to_bits() == y.to_bits())
@@ -307,5 +325,137 @@ fn main() {
     match std::fs::write(&json_path, report.to_string_pretty()) {
         Ok(()) => println!("\nwrote {json_path}"),
         Err(e) => eprintln!("\ncould not write {json_path}: {e}"),
+    }
+
+    // Sharded leg: the routing tier in front of 1/2/4 in-process
+    // replicas. Clients submit a family of distinct generator specs
+    // that rendezvous-spread over the shards (replica caches are off:
+    // the number is sharded dispatch, not cache replay). Every spec's
+    // factors are pinned against the 1-replica leg bit-for-bit.
+    let replica_counts: &[usize] = if quick { &[1, 2] } else { &[1, 2, 4] };
+    let shard_clients = if quick { 2 } else { 4 };
+    let shard_jobs_per_client = if quick { 8 } else { 24 };
+    let distinct_specs = 8usize;
+    let mut references: Vec<Option<srsvd::server::protocol::WireOutput>> =
+        (0..distinct_specs).map(|_| None).collect();
+    let mut rt = Table::new(&["replicas", "jobs", "wall", "jobs/s"]);
+    let mut router_rows: Vec<Json> = Vec::new();
+    println!(
+        "\n== sharded throughput: {shard_clients} clients x {shard_jobs_per_client} jobs \
+         over {distinct_specs} specs, via one router =="
+    );
+    for &replicas in replica_counts {
+        let mut backends = Vec::new();
+        for _ in 0..replicas {
+            let coord = Arc::new(
+                Coordinator::start(CoordinatorConfig {
+                    native_workers: 2,
+                    queue_capacity: 256,
+                    artifact_dir: None,
+                    pool_threads: Some(1),
+                    io_threads: None,
+                })
+                .unwrap(),
+            );
+            let server = Server::bind(
+                Arc::clone(&coord),
+                &ServerConfig {
+                    addr: "127.0.0.1:0".into(),
+                    workers: 2,
+                    cache_entries: 0,
+                    ..Default::default()
+                },
+                StreamConfig::default(),
+            )
+            .unwrap();
+            backends.push((coord, server));
+        }
+        let router = Router::bind(
+            &RouterConfig {
+                listen: "127.0.0.1:0".into(),
+                replicas: backends.iter().map(|(_, s)| s.local_addr().to_string()).collect(),
+                workers: 4,
+                ..Default::default()
+            },
+            StreamConfig::default(),
+        )
+        .unwrap();
+        let raddr = router.local_addr().to_string();
+
+        let timer = Timer::start();
+        let mut handles = Vec::new();
+        for c in 0..shard_clients {
+            let raddr = raddr.clone();
+            handles.push(std::thread::spawn(move || {
+                let mut client = Client::connect(&raddr).unwrap();
+                let mut outs = Vec::new();
+                for j in 0..shard_jobs_per_client {
+                    let spec = (c * shard_jobs_per_client + j) % distinct_specs;
+                    let mut req = JobRequest::new(
+                        generator_input(48, 128, Distribution::Uniform, spec as u64, None, None),
+                        4,
+                    );
+                    req.engine = EnginePreference::Native;
+                    req.seed = 17;
+                    let out =
+                        client.submit_wait(&req).unwrap().outcome.expect("sharded job failed");
+                    outs.push((spec, out));
+                }
+                outs
+            }));
+        }
+        let mut outcomes = Vec::new();
+        for h in handles {
+            outcomes.extend(h.join().expect("sharded client panicked"));
+        }
+        let wall = timer.elapsed_secs();
+
+        for (spec, out) in outcomes {
+            if let Some(reference) = &references[spec] {
+                assert!(
+                    wire_identical(reference, &out),
+                    "replicas={replicas} spec {spec}: factors diverged across shards"
+                );
+            } else {
+                references[spec] = Some(out);
+            }
+        }
+
+        let total = shard_clients * shard_jobs_per_client;
+        let rate = total as f64 / wall;
+        rt.row(&[
+            replicas.to_string(),
+            total.to_string(),
+            format!("{wall:.3}s"),
+            format!("{rate:.1}"),
+        ]);
+        router_rows.push(Json::obj(vec![
+            ("case", Json::str("sharded")),
+            ("replicas", Json::num(replicas as f64)),
+            ("clients", Json::num(shard_clients as f64)),
+            ("jobs", Json::num(total as f64)),
+            ("wall_s", Json::num(wall)),
+            ("jobs_per_s", Json::num(rate)),
+            ("bit_identical", Json::Bool(true)),
+        ]));
+        println!("replicas={replicas}: {rate:.1} jobs/s");
+        router.shutdown();
+        for (_, server) in backends {
+            server.shutdown();
+        }
+    }
+    print!("{}", rt.render());
+
+    let router_report = Json::obj(vec![
+        ("bench", Json::str("router_throughput")),
+        ("quick", Json::Bool(quick)),
+        ("distinct_specs", Json::num(distinct_specs as f64)),
+        ("cases", Json::Arr(router_rows)),
+    ]);
+    let router_path = std::env::var("SRSVD_BENCH_ROUTER_JSON")
+        .unwrap_or_else(|_| "BENCH_router.json".into());
+    match std::fs::write(&router_path, router_report.to_string_pretty()) {
+        Ok(()) => println!("\nwrote {router_path}"),
+        Err(e) => eprintln!("\ncould not write {router_path}: {e}"),
     }
 }

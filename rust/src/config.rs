@@ -35,6 +35,20 @@
 //! result_ttl_s      = 600              # unclaimed parked-result lifetime
 //! cache_dir         = off              # persist the result cache here (off|none = memory-only)
 //! cache_entries     = 256              # result-cache capacity (0 disables caching)
+//! connect_timeout_ms = 1000            # bound on outbound TCP connects made against
+//!                                      # this deployment (router fallback; see [router])
+//!
+//! [router]
+//! listen            = 127.0.0.1:7979   # front-end address for `route --listen`
+//! replicas          = 127.0.0.1:7878, 127.0.0.1:7879   # the `srsvd serve` backends
+//! workers           = 4                # front-end connection workers
+//! max_body_mb       = 64               # request body cap (413 beyond)
+//! request_timeout_s = 30               # front-end request timeout; keep >= the replicas'
+//! connect_timeout_ms = 1000            # back-end connect bound (falls back to
+//!                                      # [server] connect_timeout_ms when unset)
+//! probe_interval_ms = 1000             # health-loop period
+//! probe_timeout_ms  = 500              # per-probe IO bound
+//! unhealthy_after   = 3                # consecutive probe failures before mark-down
 //!
 //! [svd]
 //! k           = 10
@@ -217,6 +231,52 @@ impl RawConfig {
         Ok(cfg)
     }
 
+    /// Build the routing-tier config (defaults where unset): `[router]
+    /// listen` / `replicas` (comma-separated) / `workers` /
+    /// `max_body_mb` / `request_timeout_s` / `connect_timeout_ms` /
+    /// `probe_interval_ms` / `probe_timeout_ms` / `unhealthy_after`.
+    ///
+    /// `connect_timeout_ms` falls back to `[server] connect_timeout_ms`
+    /// when the `[router]` section leaves it unset, so one shared
+    /// srsvd.conf can bound outbound connects for the whole deployment
+    /// in one place.
+    pub fn router(&self) -> Result<crate::router::RouterConfig> {
+        let mut cfg = crate::router::RouterConfig::default();
+        if let Some(addr) = self.get("router", "listen") {
+            cfg.listen = addr.to_string();
+        }
+        if let Some(list) = self.get("router", "replicas") {
+            cfg.replicas = split_addr_list(list);
+        }
+        if let Some(w) = self.get_usize("router", "workers")? {
+            cfg.workers = w.max(1);
+        }
+        if let Some(mb) = self.get_usize("router", "max_body_mb")? {
+            cfg.max_body_bytes = mb.max(1) << 20;
+        }
+        if let Some(t) = self.get_usize("router", "request_timeout_s")? {
+            cfg.request_timeout_s = (t as u64).max(1);
+        }
+        match self.get_usize("router", "connect_timeout_ms")? {
+            Some(t) => cfg.connect_timeout_ms = (t as u64).max(1),
+            None => {
+                if let Some(t) = self.get_usize("server", "connect_timeout_ms")? {
+                    cfg.connect_timeout_ms = (t as u64).max(1);
+                }
+            }
+        }
+        if let Some(t) = self.get_usize("router", "probe_interval_ms")? {
+            cfg.probe_interval_ms = (t as u64).max(1);
+        }
+        if let Some(t) = self.get_usize("router", "probe_timeout_ms")? {
+            cfg.probe_timeout_ms = (t as u64).max(1);
+        }
+        if let Some(n) = self.get_usize("router", "unhealthy_after")? {
+            cfg.unhealthy_after = (n as u32).max(1);
+        }
+        Ok(cfg)
+    }
+
     /// Build the SVD config (defaults where unset).
     pub fn svd(&self) -> Result<SvdConfig> {
         let mut cfg = SvdConfig::default();
@@ -288,6 +348,17 @@ pub fn stop_criterion(
             Ok(StopCriterion::FixedPower { q: q.unwrap_or(0) })
         }
     }
+}
+
+/// Split a comma-separated address list (`a:1, b:2`), dropping empty
+/// entries — shared by `[router] replicas` and the repeatable
+/// `--replicas` CLI flag.
+pub fn split_addr_list(list: &str) -> Vec<String> {
+    list.split(',')
+        .map(str::trim)
+        .filter(|s| !s.is_empty())
+        .map(str::to_string)
+        .collect()
 }
 
 /// Parse an on/off switch (`1|true|on|yes` / `0|false|off|no`).
@@ -562,6 +633,70 @@ small_svd = gram
         assert_eq!(raw.server().unwrap().cache_dir, None);
         let raw = RawConfig::parse("[server]\nresult_ttl_s = 0\n").unwrap();
         assert_eq!(raw.server().unwrap().result_ttl_s, 1);
+    }
+
+    #[test]
+    fn router_section_knobs() {
+        let raw = RawConfig::parse(
+            "[router]\nlisten = 0.0.0.0:7979\nreplicas = 127.0.0.1:7878, 127.0.0.1:7879,\n\
+             workers = 2\nmax_body_mb = 8\nrequest_timeout_s = 5\nconnect_timeout_ms = 250\n\
+             probe_interval_ms = 100\nprobe_timeout_ms = 50\nunhealthy_after = 2\n",
+        )
+        .unwrap();
+        let r = raw.router().unwrap();
+        assert_eq!(r.listen, "0.0.0.0:7979");
+        assert_eq!(r.replicas, vec!["127.0.0.1:7878", "127.0.0.1:7879"]);
+        assert_eq!(r.workers, 2);
+        assert_eq!(r.max_body_bytes, 8 << 20);
+        assert_eq!(r.request_timeout_s, 5);
+        assert_eq!(r.connect_timeout_ms, 250);
+        assert_eq!(r.probe_interval_ms, 100);
+        assert_eq!(r.probe_timeout_ms, 50);
+        assert_eq!(r.unhealthy_after, 2);
+        // Defaults when missing (no replicas: Router::bind refuses).
+        let d = RawConfig::parse("").unwrap().router().unwrap();
+        assert_eq!(d.listen, crate::router::RouterConfig::default().listen);
+        assert!(d.replicas.is_empty());
+        // Floors: zeros are clamped, not accepted.
+        let raw = RawConfig::parse(
+            "[router]\nworkers = 0\nconnect_timeout_ms = 0\nunhealthy_after = 0\n",
+        )
+        .unwrap();
+        let r = raw.router().unwrap();
+        assert_eq!(r.workers, 1);
+        assert_eq!(r.connect_timeout_ms, 1);
+        assert_eq!(r.unhealthy_after, 1);
+        // Non-integer errors.
+        let raw = RawConfig::parse("[router]\nprobe_interval_ms = often\n").unwrap();
+        assert!(raw.router().is_err());
+    }
+
+    #[test]
+    fn router_connect_timeout_falls_back_to_server_section() {
+        // One shared srsvd.conf: [server] sets the deployment-wide
+        // connect bound, [router] inherits it...
+        let raw = RawConfig::parse("[server]\nconnect_timeout_ms = 300\n").unwrap();
+        assert_eq!(raw.router().unwrap().connect_timeout_ms, 300);
+        // ...unless the [router] section pins its own.
+        let raw = RawConfig::parse(
+            "[server]\nconnect_timeout_ms = 300\n[router]\nconnect_timeout_ms = 700\n",
+        )
+        .unwrap();
+        assert_eq!(raw.router().unwrap().connect_timeout_ms, 700);
+        // Neither set: the typed default.
+        let d = RawConfig::parse("").unwrap().router().unwrap();
+        assert_eq!(
+            d.connect_timeout_ms,
+            crate::router::RouterConfig::default().connect_timeout_ms
+        );
+    }
+
+    #[test]
+    fn addr_list_splitting() {
+        assert_eq!(split_addr_list("a:1,b:2"), vec!["a:1", "b:2"]);
+        assert_eq!(split_addr_list(" a:1 , b:2 , "), vec!["a:1", "b:2"]);
+        assert!(split_addr_list("").is_empty());
+        assert!(split_addr_list(" , ").is_empty());
     }
 
     #[test]

@@ -155,6 +155,9 @@ pub struct Coordinator {
     /// layer is attached) connection workers run here.
     io: Arc<ThreadPool>,
     next_id: AtomicU64,
+    /// Bounded queue capacity (per engine), kept for readiness probes:
+    /// `GET /readyz` compares the live `queue_depth` gauge against it.
+    queue_capacity: usize,
     native_handles: Vec<std::thread::JoinHandle<()>>,
     actor_handle: Option<std::thread::JoinHandle<()>>,
 }
@@ -230,6 +233,7 @@ impl Coordinator {
             pool,
             io,
             next_id: AtomicU64::new(1),
+            queue_capacity: config.queue_capacity,
             native_handles,
             actor_handle,
         })
@@ -274,6 +278,14 @@ impl Coordinator {
     /// The loaded artifact manifest, when the artifact engine is on.
     pub fn manifest(&self) -> Option<&Manifest> {
         self.manifest.as_ref()
+    }
+
+    /// The bounded queue capacity each engine was started with. The
+    /// network layer's `GET /readyz` answers 503 once `queue_depth`
+    /// reaches this, so a router can shed load to a sibling replica
+    /// *before* a submit eats the 503.
+    pub fn queue_capacity(&self) -> usize {
+        self.queue_capacity
     }
 
     /// The shared raw counters — the network service layer

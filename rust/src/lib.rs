@@ -58,6 +58,12 @@
 //!   *specs* — generator seeds, server-side file paths, CSR skeletons —
 //!   because S-RSVD never needs the shifted matrix materialized;
 //!   queue-full maps to `503` backpressure. `srsvd serve --listen`.
+//! * [`router`] — the routing tier: a sharding reverse proxy in front
+//!   of several coordinator replicas. Cacheable specs go to their
+//!   rendezvous-hash owner (so result caches stay warm), uncacheable
+//!   ones round-robin; a background health loop marks dead replicas
+//!   down and submits fail over to the next candidate.
+//!   `srsvd route --listen --replicas a,b,c`.
 //! * [`experiments`] — one runner per paper figure/table, shared by
 //!   `examples/` and `benches/`.
 //! * [`bench`] / [`prop`] — mini criterion / proptest substitutes
@@ -125,6 +131,7 @@ pub mod linalg;
 pub mod parallel;
 pub mod prop;
 pub mod rng;
+pub mod router;
 pub mod runtime;
 pub mod server;
 pub mod stats;

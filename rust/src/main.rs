@@ -5,6 +5,7 @@
 //!                 [--stream --stream-budget-mb 16]              out-of-core input
 //! srsvd serve     --listen 127.0.0.1:7878 ...                  run the HTTP service
 //! srsvd serve     --jobs 32 --workers 2 ...                    synthetic in-process demo
+//! srsvd route     --listen 127.0.0.1:7979 --replicas a,b ...   shard over serve replicas
 //! srsvd experiment --id fig1a ...                              regenerate a paper artifact
 //! srsvd artifacts [--dir artifacts]                            inspect the AOT manifest
 //! ```
@@ -20,6 +21,7 @@ use srsvd::data::{random_matrix, DataSpec, Distribution};
 use srsvd::experiments::{fig1, k_grid, table1};
 use srsvd::linalg::{Dense, GeneratorSource, StreamConfig};
 use srsvd::rng::Xoshiro256pp;
+use srsvd::router::Router;
 use srsvd::runtime::Manifest;
 use srsvd::server::Server;
 use srsvd::svd::SvdConfig;
@@ -47,6 +49,7 @@ fn run(args: &[String]) -> Result<()> {
     match cmd.as_str() {
         "factorize" => cmd_factorize(rest),
         "serve" => cmd_serve(rest),
+        "route" => cmd_route(rest),
         "experiment" => cmd_experiment(rest),
         "artifacts" => cmd_artifacts(rest),
         "--help" | "-h" | "help" => {
@@ -67,6 +70,8 @@ fn print_root_help() {
          \x20 factorize   one-shot PCA of a generated matrix\n\
          \x20 serve       run the factorization service: --listen ADDR for the\n\
          \x20             HTTP server, or a synthetic in-process job stream\n\
+         \x20 route       run the routing tier: shard jobs over several serve\n\
+         \x20             replicas with health checks and failover\n\
          \x20 experiment  regenerate a paper figure/table\n\
          \x20             (fig1a..fig1f, table1-images, table1-words)\n\
          \x20 artifacts   list the compiled AOT artifacts\n\n\
@@ -323,7 +328,81 @@ fn serve_http(a: &srsvd::cli::Args, raw: RawConfig, cfg: CoordinatorConfig) -> R
     println!("  DEL  /v1/jobs/{{id}}   cancel a pending or running job");
     println!("  GET  /metrics        service counters as JSON");
     println!("  GET  /healthz        liveness probe");
+    println!("  GET  /readyz         readiness probe (503 while the queue is full)");
     server.join();
+    Ok(())
+}
+
+/// `srsvd route`: the sharding reverse proxy in front of several
+/// `srsvd serve --listen` replicas. Runs until the process is killed.
+fn cmd_route(args: &[String]) -> Result<()> {
+    let spec = ArgSpec::new(
+        "Run the routing tier: shard job submissions over several serve \
+         replicas by spec hash, with health checks and failover",
+    )
+    .opt("listen", "", "bind the router on host:port (empty = config/default)")
+    .opt(
+        "replicas",
+        "",
+        "comma-separated replica addresses, e.g. 127.0.0.1:7878,127.0.0.1:7879 \
+         (empty = config)",
+    )
+    .opt("workers", "0", "router connection workers (0 = config/default)")
+    .opt("max-body-mb", "0", "request body cap, MiB (0 = config/default)")
+    .opt("request-timeout-s", "0", "per-request timeout, seconds (0 = config/default)")
+    .opt("connect-timeout-ms", "0", "back-end connect bound, ms (0 = config/default)")
+    .opt("probe-interval-ms", "0", "health-probe period, ms (0 = config/default)")
+    .opt("probe-timeout-ms", "0", "health-probe io bound, ms (0 = config/default)")
+    .opt("unhealthy-after", "0", "consecutive probe failures before mark-down (0 = config)")
+    .opt("config", "", "optional srsvd.conf path");
+    let a = spec.parse(args)?;
+    if a.help {
+        print!("{}", spec.usage("srsvd route"));
+        return Ok(());
+    }
+    let raw = if a.get("config").is_empty() {
+        RawConfig::default()
+    } else {
+        RawConfig::load(std::path::Path::new(a.get("config")))?
+    };
+    let mut cfg = raw.router()?;
+    if !a.get("listen").is_empty() {
+        cfg.listen = a.get("listen").to_string();
+    }
+    if !a.get("replicas").is_empty() {
+        cfg.replicas = srsvd::config::split_addr_list(a.get("replicas"));
+    }
+    if a.get_usize("workers")? > 0 {
+        cfg.workers = a.get_usize("workers")?;
+    }
+    if a.get_usize("max-body-mb")? > 0 {
+        cfg.max_body_bytes = a.get_usize("max-body-mb")? << 20;
+    }
+    if a.get_usize("request-timeout-s")? > 0 {
+        cfg.request_timeout_s = a.get_usize("request-timeout-s")? as u64;
+    }
+    if a.get_usize("connect-timeout-ms")? > 0 {
+        cfg.connect_timeout_ms = a.get_usize("connect-timeout-ms")? as u64;
+    }
+    if a.get_usize("probe-interval-ms")? > 0 {
+        cfg.probe_interval_ms = a.get_usize("probe-interval-ms")? as u64;
+    }
+    if a.get_usize("probe-timeout-ms")? > 0 {
+        cfg.probe_timeout_ms = a.get_usize("probe-timeout-ms")? as u64;
+    }
+    if a.get_usize("unhealthy-after")? > 0 {
+        cfg.unhealthy_after = a.get_usize("unhealthy-after")? as u32;
+    }
+    let router = Router::bind(&cfg, raw.stream()?)?;
+    println!("srsvd router listening on http://{}", router.local_addr());
+    println!("  replicas: {}", cfg.replicas.join(", "));
+    println!("  POST /v1/jobs        submit — sharded by spec hash, failover on dead replicas");
+    println!("  GET  /v1/jobs/{{id}}   block for a routed job's result");
+    println!("  DEL  /v1/jobs/{{id}}   cancel a routed job");
+    println!("  GET  /metrics        router counters + per-replica snapshots");
+    println!("  GET  /healthz        router liveness probe");
+    println!("  GET  /readyz         503 until at least one replica is healthy");
+    router.join();
     Ok(())
 }
 

@@ -1,0 +1,140 @@
+//! The background health loop: bounded `/healthz` probes on an
+//! interval, the N-consecutive-failures mark-down, and re-admission on
+//! recovery.
+//!
+//! Probe state machine (per replica, state lives on
+//! [`super::replica::Replica`]):
+//!
+//! ```text
+//!            probe ok (streak := 0)
+//!          ┌──────────────┐
+//!          ▼              │
+//!      [healthy] ──fail──▶ streak += 1 ──streak == N──▶ [unhealthy]
+//!          ▲                                                │
+//!          └────────────── one probe ok ◀───────────────────┘
+//! ```
+//!
+//! Scheduling is separated from probing so tests can drive both
+//! without sleeping: [`ProbeSchedule::due`] decides *when* against the
+//! injectable [`Clock`](crate::server::Clock), and
+//! [`probe_round`] (exposed as `Router::probe_now`) does one
+//! synchronous round *now*. The background thread is just the trivial
+//! composition of the two.
+
+use std::sync::atomic::Ordering;
+use std::sync::Arc;
+use std::time::Duration;
+
+use crate::server::Client;
+
+use super::{RouterShared, LOOP_SLICE};
+
+/// Decides when probe rounds are due against a millisecond clock.
+///
+/// The first round is due one full interval after construction, so a
+/// router bound with a far-future interval (or a fake clock pinned at
+/// zero) never probes in the background — the seam the loopback tests
+/// use to drive every round by hand via `Router::probe_now`.
+#[derive(Debug)]
+pub struct ProbeSchedule {
+    interval_ms: u64,
+    next_at_ms: u64,
+}
+
+impl ProbeSchedule {
+    /// A schedule firing every `interval_ms` (clamped to ≥ 1 ms).
+    pub fn new(interval_ms: u64) -> ProbeSchedule {
+        let interval_ms = interval_ms.max(1);
+        ProbeSchedule { interval_ms, next_at_ms: interval_ms }
+    }
+
+    /// True when a round is due at `now_ms`; advances the schedule one
+    /// interval past `now_ms` when it is (late ticks don't bunch up).
+    pub fn due(&mut self, now_ms: u64) -> bool {
+        if now_ms >= self.next_at_ms {
+            self.next_at_ms = now_ms.saturating_add(self.interval_ms);
+            true
+        } else {
+            false
+        }
+    }
+}
+
+/// One synchronous probe round over every replica: a fresh connection
+/// (bounded by `connect_timeout`) and a `GET /healthz` (bounded by
+/// `probe_timeout`) each. Success resets the failure streak and
+/// re-admits a down replica; failure ticks `probe_failures` and marks
+/// the replica unhealthy once the streak reaches `unhealthy_after`.
+pub(crate) fn probe_round(shared: &RouterShared) {
+    for replica in &shared.replicas {
+        let probed = Client::with_timeouts(
+            &replica.addr,
+            Some(shared.connect_timeout),
+            shared.probe_timeout,
+        )
+        .and_then(|mut c| c.health());
+        match probed {
+            Ok(()) => {
+                if replica.record_success() {
+                    crate::log_info!("router: replica {} re-admitted", replica.addr);
+                }
+            }
+            Err(e) => {
+                shared.metrics.probe_failures.fetch_add(1, Ordering::Relaxed);
+                if replica.record_failure(shared.unhealthy_after) {
+                    crate::log_warn!(
+                        "router: replica {} marked unhealthy after {} consecutive failures ({e})",
+                        replica.addr,
+                        shared.unhealthy_after
+                    );
+                }
+            }
+        }
+    }
+}
+
+/// The background loop: sleep in short slices (so shutdown is honored
+/// promptly), probing whenever the schedule says a round is due.
+pub(crate) fn health_loop(shared: Arc<RouterShared>) {
+    let mut schedule = ProbeSchedule::new(shared.probe_interval_ms);
+    let slice = Duration::from_millis(shared.probe_interval_ms.clamp(10, LOOP_SLICE));
+    while !shared.shutdown.load(Ordering::SeqCst) {
+        if schedule.due(shared.clock.now_ms()) {
+            probe_round(&shared);
+        }
+        std::thread::sleep(slice);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn first_round_waits_one_interval_then_fires_per_interval() {
+        let mut s = ProbeSchedule::new(100);
+        assert!(!s.due(0), "no round before the first interval elapses");
+        assert!(!s.due(99));
+        assert!(s.due(100), "first round due at one interval");
+        assert!(!s.due(150), "not due again mid-interval");
+        assert!(s.due(200));
+    }
+
+    #[test]
+    fn late_ticks_do_not_bunch_up() {
+        let mut s = ProbeSchedule::new(100);
+        // The clock jumps far past several missed rounds: exactly one
+        // fires, and the next is a full interval out from *now*.
+        assert!(s.due(1_000));
+        assert!(!s.due(1_050));
+        assert!(s.due(1_100));
+    }
+
+    #[test]
+    fn far_future_interval_never_fires_at_time_zero() {
+        let mut s = ProbeSchedule::new(u64::MAX / 2);
+        for now in [0u64, 1, 1_000_000] {
+            assert!(!s.due(now));
+        }
+    }
+}

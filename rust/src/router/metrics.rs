@@ -1,0 +1,61 @@
+//! Router-local counters, rendered into the router's `GET /metrics`
+//! alongside the per-replica snapshots it aggregates.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use crate::util::json::Json;
+
+/// Counters the routing tier maintains itself (replica-side counters
+/// come from proxying each replica's own `/metrics`). All plain
+/// `Relaxed` atomics: monotone counts, no cross-field invariants.
+#[derive(Debug, Default)]
+pub struct RouterMetrics {
+    /// Requests successfully forwarded to a replica (any method).
+    pub routed: AtomicU64,
+    /// Submit attempts moved past a dead, unreachable, or saturated
+    /// candidate to the next one in placement order.
+    pub failovers: AtomicU64,
+    /// Idempotent `GET` forwards retried on a fresh connection after a
+    /// transport failure (`POST`s are never retried — see the module
+    /// docs on the double-run risk).
+    pub retries: AtomicU64,
+    /// Failed health probes (bounded connect, transport, or non-200).
+    pub probe_failures: AtomicU64,
+}
+
+impl RouterMetrics {
+    /// The `"router"` object of the aggregated `/metrics` response.
+    /// `replicas_healthy` is a gauge computed from the live replica
+    /// set at render time, not stored here.
+    pub fn to_json(&self, replicas_healthy: u64, replicas: u64) -> Json {
+        let c = |a: &AtomicU64| Json::num(a.load(Ordering::Relaxed) as f64);
+        Json::obj(vec![
+            ("routed", c(&self.routed)),
+            ("failovers", c(&self.failovers)),
+            ("retries", c(&self.retries)),
+            ("probe_failures", c(&self.probe_failures)),
+            ("replicas_healthy", Json::num(replicas_healthy as f64)),
+            ("replicas", Json::num(replicas as f64)),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn to_json_carries_every_counter() {
+        let m = RouterMetrics::default();
+        m.routed.store(7, Ordering::Relaxed);
+        m.failovers.store(2, Ordering::Relaxed);
+        m.probe_failures.store(5, Ordering::Relaxed);
+        let j = m.to_json(3, 4);
+        assert_eq!(j.get("routed").unwrap().as_u64().unwrap(), 7);
+        assert_eq!(j.get("failovers").unwrap().as_u64().unwrap(), 2);
+        assert_eq!(j.get("retries").unwrap().as_u64().unwrap(), 0);
+        assert_eq!(j.get("probe_failures").unwrap().as_u64().unwrap(), 5);
+        assert_eq!(j.get("replicas_healthy").unwrap().as_u64().unwrap(), 3);
+        assert_eq!(j.get("replicas").unwrap().as_u64().unwrap(), 4);
+    }
+}

@@ -1,0 +1,651 @@
+//! The routing tier: a sharding reverse proxy in front of coordinator
+//! replicas — `srsvd route --listen ADDR --replicas a,b,c`.
+//!
+//! One coordinator process bounds serve throughput; the paper's
+//! workload (many independent large-matrix PCA jobs, Halko et al.,
+//! arXiv 1007.5510) scales horizontally instead: N replica processes
+//! (`srsvd serve`) behind one router. The router speaks the same
+//! HTTP/1.1 wire protocol on the front ([`crate::server::http`]) and
+//! fans out over the blocking client ([`crate::server::Client`]) on
+//! the back, so clients, replicas, and router compose without any new
+//! dependency.
+//!
+//! ## Placement
+//!
+//! * **Cacheable specs** (everything with a canonical spec hash,
+//!   [`cache::spec_hash`]) are sharded by **rendezvous hashing**
+//!   ([`replica::rendezvous_order`]): identical specs always land on
+//!   the same replica, so its content-addressed result cache replays
+//!   warm submits byte-for-byte and sibling caches aren't polluted
+//!   with duplicates.
+//! * **Uncacheable specs** (server-side `file` inputs, whose cache key
+//!   is `None`) go **round-robin** over healthy replicas.
+//!
+//! ## Failover rules
+//!
+//! A submit to a dead or saturated replica moves to the next candidate
+//! in rendezvous (or ring) order, under the same safety rule the
+//! client uses: a **bounded connect failure** and a definitive **503**
+//! are provably pre-acceptance, so trying the next replica cannot
+//! double-run the job; a transport failure *after* the request was
+//! written is ambiguous and surfaces as `502 Bad Gateway` instead of a
+//! blind resubmit. Idempotent routed `GET`s get one retry on a fresh
+//! connection; `POST`s never do.
+//!
+//! ## Job ids
+//!
+//! Router-issued ids carry the owning replica in their low
+//! [`replica::TAG_BITS`] bits (`upstream_id << 8 | replica_index`), so
+//! blocking `GET /v1/jobs/{id}` and `DELETE /v1/jobs/{id}` route
+//! straight to the replica that owns the job — no shared state between
+//! router and replicas beyond the id itself.
+//!
+//! ## Endpoints
+//!
+//! | Method | Path | Meaning |
+//! |--------|------|---------|
+//! | `POST` | `/v1/jobs` | Parse + hash the spec, forward to the owner (failing over as above); `202` bodies come back with the router-tagged id. |
+//! | `GET` | `/v1/jobs/{id}` | Proxied to the replica tagged in the id (query string preserved). |
+//! | `DELETE` | `/v1/jobs/{id}` | Proxied to the replica tagged in the id. |
+//! | `GET` | `/metrics` | Router counters (`routed`, `failovers`, `retries`, `probe_failures`, `replicas_healthy`) plus each replica's own `/metrics` snapshot. |
+//! | `GET` | `/healthz` | Router liveness. |
+//! | `GET` | `/readyz` | `200` while ≥ 1 replica is healthy, else `503`. |
+//!
+//! The health loop ([`health`]) probes every replica's `/healthz` on
+//! `probe_interval_ms`, marks a replica unhealthy after
+//! `unhealthy_after` consecutive failures, and re-admits it on the
+//! first success. Probe scheduling runs against the injectable
+//! [`Clock`], and [`Router::probe_now`] runs one round synchronously —
+//! the loopback tests drive mark-down and re-admission without
+//! sleeping.
+
+pub mod health;
+pub mod metrics;
+pub mod replica;
+
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::mpsc::{sync_channel, Receiver, SyncSender};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use crate::linalg::stream::StreamConfig;
+use crate::server::http::{self, HttpError, HttpLimits, ReadOutcome, Request, Response};
+use crate::server::{cache, protocol, Client, Clock, MonotonicClock};
+use crate::util::json::Json;
+use crate::util::{Error, Result};
+
+use self::metrics::RouterMetrics;
+use self::replica::Replica;
+
+/// How often idle front-end connections poll for data / shutdown.
+const IDLE_POLL: Duration = Duration::from_millis(200);
+
+/// Longest background-loop sleep slice, ms (shutdown latency bound).
+pub(crate) const LOOP_SLICE: u64 = 100;
+
+/// Routing-tier configuration — the `[router]` config section.
+#[derive(Debug, Clone)]
+pub struct RouterConfig {
+    /// Front-end listen address (`host:port`; port 0 picks a free one).
+    pub listen: String,
+    /// Replica addresses (`host:port` of each `srsvd serve`). Order
+    /// fixes each replica's id tag; placement itself is order-free.
+    pub replicas: Vec<String>,
+    /// Front-end connection worker threads.
+    pub workers: usize,
+    /// Maximum accepted request body, bytes (`[router] max_body_mb`).
+    pub max_body_bytes: usize,
+    /// Front-end per-request timeout, seconds (read + keep-alive idle
+    /// limit). Keep it at or above the replicas' `request_timeout_s`:
+    /// proxied blocking `GET`s are given this plus a fixed grace.
+    pub request_timeout_s: u64,
+    /// Bound on every back-end TCP connect, milliseconds — probes,
+    /// forwards, and failover decisions all wait at most this long on
+    /// a dead replica.
+    pub connect_timeout_ms: u64,
+    /// Health-probe period, milliseconds.
+    pub probe_interval_ms: u64,
+    /// Per-probe IO timeout, milliseconds.
+    pub probe_timeout_ms: u64,
+    /// Consecutive probe failures before a replica is marked
+    /// unhealthy (one success re-admits it).
+    pub unhealthy_after: u32,
+}
+
+impl Default for RouterConfig {
+    fn default() -> Self {
+        RouterConfig {
+            listen: "127.0.0.1:7979".into(),
+            replicas: Vec::new(),
+            workers: 4,
+            max_body_bytes: 64 << 20,
+            request_timeout_s: 30,
+            connect_timeout_ms: 1_000,
+            probe_interval_ms: 1_000,
+            probe_timeout_ms: 500,
+            unhealthy_after: 3,
+        }
+    }
+}
+
+/// State shared by the accept loop, connection workers, and the
+/// health loop.
+pub(crate) struct RouterShared {
+    pub(crate) replicas: Vec<Replica>,
+    /// Ring cursor for uncacheable (round-robin) submits.
+    rr_cursor: AtomicUsize,
+    pub(crate) metrics: RouterMetrics,
+    pub(crate) shutdown: AtomicBool,
+    limits: HttpLimits,
+    /// Front-end request/idle timeout.
+    request_timeout: Duration,
+    /// Back-end connect bound (probes and forwards alike).
+    pub(crate) connect_timeout: Duration,
+    /// Back-end IO timeout for forwarded requests; sized
+    /// `request_timeout` + grace so a replica answering a blocking
+    /// `GET` at *its* request timeout is never cut off mid-wait.
+    upstream_timeout: Duration,
+    /// Back-end IO timeout for health probes and metrics scrapes.
+    pub(crate) probe_timeout: Duration,
+    pub(crate) probe_interval_ms: u64,
+    pub(crate) unhealthy_after: u32,
+    pub(crate) clock: Arc<dyn Clock>,
+    stream_defaults: StreamConfig,
+}
+
+impl RouterShared {
+    fn healthy_count(&self) -> usize {
+        self.replicas.iter().filter(|r| r.is_healthy()).count()
+    }
+
+    /// Ring order for uncacheable specs: start at the cursor, wrap
+    /// once around. Element 0 is the primary; the rest is the
+    /// failover order, same as a rendezvous ranking.
+    fn round_robin_order(&self) -> Vec<usize> {
+        let n = self.replicas.len();
+        let start = self.rr_cursor.fetch_add(1, Ordering::Relaxed) % n;
+        (0..n).map(|k| (start + k) % n).collect()
+    }
+}
+
+/// A running routing tier bound to a front-end socket.
+pub struct Router {
+    local_addr: SocketAddr,
+    shared: Arc<RouterShared>,
+    accept_handle: Option<std::thread::JoinHandle<()>>,
+    worker_handles: Vec<std::thread::JoinHandle<()>>,
+    health_handle: Option<std::thread::JoinHandle<()>>,
+}
+
+impl Router {
+    /// Bind `config.listen` and start the accept loop, connection
+    /// workers, and the background health loop. `stream_defaults`
+    /// only affects spec *parsing* (cacheability detection); block
+    /// policy on the replicas is theirs.
+    pub fn bind(config: &RouterConfig, stream_defaults: StreamConfig) -> Result<Router> {
+        Router::bind_with_clock(config, stream_defaults, Arc::new(MonotonicClock::default()))
+    }
+
+    /// [`Router::bind`] with an explicit [`Clock`] driving the probe
+    /// schedule — the seam the tests use: a fake clock plus a
+    /// far-future `probe_interval_ms` parks the background loop, and
+    /// [`Router::probe_now`] drives every round by hand.
+    pub fn bind_with_clock(
+        config: &RouterConfig,
+        stream_defaults: StreamConfig,
+        clock: Arc<dyn Clock>,
+    ) -> Result<Router> {
+        crate::util::logging::init();
+        crate::ensure!(!config.replicas.is_empty(), "router needs at least one replica");
+        crate::ensure!(
+            config.replicas.len() <= replica::MAX_REPLICAS,
+            "router supports at most {} replicas (the id tag is {} bits)",
+            replica::MAX_REPLICAS,
+            replica::TAG_BITS
+        );
+        let listener = TcpListener::bind(config.listen.as_str())
+            .map_err(|e| Error::Service(format!("bind {}: {e}", config.listen)))?;
+        let local_addr = listener
+            .local_addr()
+            .map_err(|e| Error::Service(format!("local_addr: {e}")))?;
+        let shared = Arc::new(RouterShared {
+            replicas: config
+                .replicas
+                .iter()
+                .enumerate()
+                .map(|(i, a)| Replica::new(i, a))
+                .collect(),
+            rr_cursor: AtomicUsize::new(0),
+            metrics: RouterMetrics::default(),
+            shutdown: AtomicBool::new(false),
+            limits: HttpLimits {
+                max_body_bytes: config.max_body_bytes,
+                ..Default::default()
+            },
+            request_timeout: Duration::from_secs(config.request_timeout_s.max(1)),
+            connect_timeout: Duration::from_millis(config.connect_timeout_ms.max(1)),
+            upstream_timeout: Duration::from_secs(config.request_timeout_s.max(1) + 15),
+            probe_timeout: Duration::from_millis(config.probe_timeout_ms.max(1)),
+            probe_interval_ms: config.probe_interval_ms.max(1),
+            unhealthy_after: config.unhealthy_after.max(1),
+            clock,
+            stream_defaults,
+        });
+
+        let workers = config.workers.max(1);
+        let (conn_tx, conn_rx) = sync_channel::<TcpStream>(workers * 2);
+        let conn_rx = Arc::new(Mutex::new(conn_rx));
+        let mut worker_handles = Vec::with_capacity(workers);
+        for w in 0..workers {
+            let rx = Arc::clone(&conn_rx);
+            let sh = Arc::clone(&shared);
+            worker_handles.push(
+                std::thread::Builder::new()
+                    .name(format!("srsvd-route-worker-{w}"))
+                    .spawn(move || worker_loop(&rx, &sh))
+                    .map_err(|e| Error::Service(format!("spawn route worker: {e}")))?,
+            );
+        }
+        let sh = Arc::clone(&shared);
+        let health_handle = std::thread::Builder::new()
+            .name("srsvd-route-health".into())
+            .spawn(move || health::health_loop(sh))
+            .map_err(|e| Error::Service(format!("spawn health loop: {e}")))?;
+        let sh = Arc::clone(&shared);
+        let accept_handle = std::thread::Builder::new()
+            .name("srsvd-route-accept".into())
+            .spawn(move || accept_loop(listener, conn_tx, sh))
+            .map_err(|e| Error::Service(format!("spawn accept loop: {e}")))?;
+
+        crate::log_info!(
+            "router: listening on http://{local_addr} in front of {} replica(s)",
+            config.replicas.len()
+        );
+        Ok(Router {
+            local_addr,
+            shared,
+            accept_handle: Some(accept_handle),
+            worker_handles,
+            health_handle: Some(health_handle),
+        })
+    }
+
+    /// The bound front-end address (actual port when `listen` used 0).
+    pub fn local_addr(&self) -> SocketAddr {
+        self.local_addr
+    }
+
+    /// Run one synchronous probe round over every replica, exactly as
+    /// the background health loop would. Test seam: combined with
+    /// [`Router::bind_with_clock`] and a far-future interval it makes
+    /// mark-down/re-admission fully deterministic, zero sleeps.
+    pub fn probe_now(&self) {
+        health::probe_round(&self.shared);
+    }
+
+    /// Graceful shutdown: stop accepting, finish in-flight exchanges,
+    /// stop the health loop, join every thread.
+    pub fn shutdown(mut self) {
+        self.shutdown_inner();
+    }
+
+    /// Block until the router stops (another thread calling shutdown,
+    /// or a fatal listener error). `srsvd route` runs on this.
+    pub fn join(mut self) {
+        if let Some(h) = self.accept_handle.take() {
+            let _ = h.join();
+        }
+        self.join_rest();
+    }
+
+    fn shutdown_inner(&mut self) {
+        if self.accept_handle.is_none() {
+            return;
+        }
+        self.shared.shutdown.store(true, Ordering::SeqCst);
+        // Wake the blocked accept() with a throwaway connection.
+        let _ = TcpStream::connect(self.local_addr);
+        if let Some(h) = self.accept_handle.take() {
+            let _ = h.join();
+        }
+        self.join_rest();
+    }
+
+    fn join_rest(&mut self) {
+        self.shared.shutdown.store(true, Ordering::SeqCst);
+        // The accept thread owned the connection sender; its exit
+        // closed the channel, so workers drain what was queued.
+        for h in self.worker_handles.drain(..) {
+            let _ = h.join();
+        }
+        if let Some(h) = self.health_handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for Router {
+    fn drop(&mut self) {
+        self.shutdown_inner();
+    }
+}
+
+fn accept_loop(listener: TcpListener, tx: SyncSender<TcpStream>, shared: Arc<RouterShared>) {
+    for stream in listener.incoming() {
+        if shared.shutdown.load(Ordering::SeqCst) {
+            break;
+        }
+        match stream {
+            Ok(s) => {
+                if tx.send(s).is_err() {
+                    break;
+                }
+            }
+            Err(e) => {
+                // Same EMFILE back-off as the server's accept loop.
+                crate::log_warn!("router accept: {e}");
+                std::thread::sleep(Duration::from_millis(50));
+            }
+        }
+    }
+}
+
+fn worker_loop(rx: &Arc<Mutex<Receiver<TcpStream>>>, shared: &Arc<RouterShared>) {
+    loop {
+        let stream = {
+            let guard = rx.lock().expect("connection queue mutex");
+            guard.recv()
+        };
+        let Ok(stream) = stream else { return };
+        handle_connection(shared, stream);
+    }
+}
+
+/// Serve one front-end connection: the same keep-alive loop as the
+/// server's (`idle_wait` between requests honors shutdown; one hard
+/// deadline per request read), minus the TTL reaper — the router
+/// parks nothing.
+fn handle_connection(shared: &RouterShared, mut stream: TcpStream) {
+    let _ = stream.set_nodelay(true);
+    let _ = stream.set_read_timeout(Some(IDLE_POLL));
+    let _ = stream.set_write_timeout(Some(shared.request_timeout));
+    loop {
+        let mut probe = [0u8; 1];
+        let idle = http::idle_wait(
+            &mut || stream.peek(&mut probe),
+            IDLE_POLL,
+            shared.request_timeout,
+            &mut || shared.shutdown.load(Ordering::SeqCst),
+        );
+        if idle == http::IdleOutcome::Close {
+            break;
+        }
+        let deadline = Some(Instant::now() + shared.request_timeout);
+        match http::read_request(&mut stream, &shared.limits, deadline) {
+            Ok(ReadOutcome::Closed) => break,
+            Ok(ReadOutcome::Request(req)) => {
+                let response = route_request(shared, &req);
+                let keep = req.keep_alive && !shared.shutdown.load(Ordering::SeqCst);
+                if response.write_to(&mut stream, keep).is_err() || !keep {
+                    break;
+                }
+            }
+            Err(HttpError::Respond { status, msg }) => {
+                let _ = Response::error(status, &msg).write_to(&mut stream, false);
+                break;
+            }
+            Err(HttpError::Drop(_)) => break,
+        }
+    }
+}
+
+fn route_request(shared: &RouterShared, req: &Request) -> Response {
+    match (req.method.as_str(), req.path.as_str()) {
+        ("GET", "/healthz") => {
+            Response::json(200, &Json::obj(vec![("status", Json::str("ok"))]))
+        }
+        ("GET", "/readyz") => readyz(shared),
+        ("GET", "/metrics") => aggregate_metrics(shared),
+        ("POST", "/v1/jobs") => submit(shared, req),
+        ("GET" | "DELETE", path) if path.strip_prefix("/v1/jobs/").is_some() => {
+            proxy_job(shared, req)
+        }
+        (_, "/healthz" | "/readyz" | "/metrics" | "/v1/jobs") => {
+            Response::error(405, "method not allowed")
+        }
+        (_, path) if path.strip_prefix("/v1/jobs/").is_some() => {
+            Response::error(405, "method not allowed")
+        }
+        _ => Response::error(404, "no such endpoint"),
+    }
+}
+
+/// Router readiness: at least one replica must be healthy to take a
+/// submit at all.
+fn readyz(shared: &RouterShared) -> Response {
+    let healthy = shared.healthy_count();
+    let status = if healthy == 0 { 503 } else { 200 };
+    let state = if healthy == 0 { "no healthy replicas" } else { "ready" };
+    Response::json(
+        status,
+        &Json::obj(vec![
+            ("status", Json::str(state)),
+            ("replicas_healthy", Json::num(healthy as f64)),
+            ("replicas", Json::num(shared.replicas.len() as f64)),
+        ]),
+    )
+}
+
+/// `GET /metrics`: router-local counters plus each replica's own
+/// snapshot (scraped live under the probe timeouts; an unreachable
+/// replica contributes `null`).
+fn aggregate_metrics(shared: &RouterShared) -> Response {
+    let mut entries = Vec::with_capacity(shared.replicas.len());
+    for r in &shared.replicas {
+        let snapshot = Client::with_timeouts(
+            &r.addr,
+            Some(shared.connect_timeout),
+            shared.probe_timeout,
+        )
+        .and_then(|mut c| c.metrics())
+        .unwrap_or(Json::Null);
+        entries.push(Json::obj(vec![
+            ("addr", Json::str(&r.addr)),
+            ("healthy", Json::Bool(r.is_healthy())),
+            ("metrics", snapshot),
+        ]));
+    }
+    let healthy = shared.healthy_count() as u64;
+    Response::json(
+        200,
+        &Json::obj(vec![
+            ("router", shared.metrics.to_json(healthy, shared.replicas.len() as u64)),
+            ("replicas", Json::arr(entries)),
+        ]),
+    )
+}
+
+/// `POST /v1/jobs`: parse the spec (a malformed submit 400s here
+/// without touching any replica), pick the placement order, and
+/// forward with failover.
+fn submit(shared: &RouterShared, req: &Request) -> Response {
+    let Ok(text) = std::str::from_utf8(&req.body) else {
+        return Response::error(400, "request body must be UTF-8 JSON");
+    };
+    let parsed =
+        Json::parse(text).and_then(|j| protocol::parse_submit(&j, &shared.stream_defaults));
+    let sub = match parsed {
+        Ok(s) => s,
+        Err(e) => return Response::error(400, &format!("{e}")),
+    };
+    let order = match cache::spec_hash(&sub.spec) {
+        // Cacheable: rendezvous placement, so an identical spec always
+        // lands on the same replica's result cache.
+        Some(hash) => replica::rendezvous_order(hash, &shared.replicas),
+        // Uncacheable (server-side file inputs): spread round-robin.
+        None => shared.round_robin_order(),
+    };
+    forward_submit(shared, &req.body, &order)
+}
+
+/// Forward a submit body down the candidate order: healthy replicas in
+/// placement order first, marked-down ones as a last resort. Failover
+/// only on provably pre-acceptance failures (bounded connect error, or
+/// a definitive 503); an ambiguous mid-exchange failure is `502`, never
+/// a resubmit.
+fn forward_submit(shared: &RouterShared, body: &[u8], order: &[usize]) -> Response {
+    let primary = order.first().copied();
+    let mut candidates: Vec<usize> =
+        order.iter().copied().filter(|&i| shared.replicas[i].is_healthy()).collect();
+    candidates.extend(order.iter().copied().filter(|&i| !shared.replicas[i].is_healthy()));
+    let mut last = String::from("no replicas configured");
+    for i in candidates {
+        let r = &shared.replicas[i];
+        if Some(i) != primary {
+            // Reaching a non-primary candidate means the preferred
+            // owner was dead, marked down, or saturated.
+            shared.metrics.failovers.fetch_add(1, Ordering::Relaxed);
+        }
+        let mut client =
+            match Client::with_timeouts(&r.addr, Some(shared.connect_timeout), shared.upstream_timeout) {
+                Ok(c) => c,
+                Err(e) => {
+                    // The replica never saw the submit; moving on is
+                    // safe, and the failed connect doubles as a probe.
+                    if r.record_failure(shared.unhealthy_after) {
+                        crate::log_warn!("router: replica {} marked unhealthy (connect failed)", r.addr);
+                    }
+                    last = format!("{e}");
+                    continue;
+                }
+            };
+        match client.request_raw("POST", "/v1/jobs", Some(body)) {
+            // A 503 is a definitive "not accepted": shed to the next
+            // candidate. The replica answered, so it is alive.
+            Ok((503, _)) => {
+                r.record_success();
+                last = format!("replica {} is saturated (503)", r.addr);
+            }
+            Ok((status, bytes)) => {
+                r.record_success();
+                shared.metrics.routed.fetch_add(1, Ordering::Relaxed);
+                return tag_submit_response(status, bytes, i, &r.addr);
+            }
+            // The request left the socket but the exchange died: the
+            // replica may have accepted the job, so a blind resubmit
+            // could run it twice. Surface the ambiguity.
+            Err(e) => return Response::error(502, &format!("replica {}: {e}", r.addr)),
+        }
+    }
+    Response::error(503, &last)
+}
+
+/// Tag the id inside a replica's `202` body with the replica index so
+/// follow-up `GET`/`DELETE`s route back to the owner. Every other
+/// status passes through byte-identical — which is what keeps cached
+/// `200` replays exact across the router.
+fn tag_submit_response(status: u16, bytes: Vec<u8>, index: usize, addr: &str) -> Response {
+    if status != 202 {
+        return Response::json_bytes(status, bytes);
+    }
+    let tagged = std::str::from_utf8(&bytes).ok().and_then(|text| {
+        let mut j = Json::parse(text).ok()?;
+        let upstream = j.get("id").ok()?.as_u64().ok()?;
+        let routed = replica::encode_job_id(upstream, index);
+        let Json::Obj(map) = &mut j else { return None };
+        map.insert("id".to_string(), Json::num(routed as f64));
+        Some(j.to_string().into_bytes())
+    });
+    match tagged {
+        Some(body) => Response::json_bytes(202, body),
+        None => Response::error(502, &format!("replica {addr}: malformed 202 body")),
+    }
+}
+
+/// `GET`/`DELETE /v1/jobs/{id}`: decode the replica tag and proxy to
+/// the owner. Idempotent `GET`s get one retry on a fresh connection;
+/// the job has exactly one owner, so there is no failover here — an
+/// unreachable owner is `502`.
+fn proxy_job(shared: &RouterShared, req: &Request) -> Response {
+    let tail = req.path.strip_prefix("/v1/jobs/").expect("caller matched the prefix");
+    let Ok(routed_id) = tail.parse::<u64>() else {
+        return Response::error(400, "job id must be an unsigned integer");
+    };
+    let (upstream, tag) = replica::decode_job_id(routed_id);
+    let Some(r) = shared.replicas.get(tag) else {
+        return Response::error(404, &format!("unknown job {routed_id}"));
+    };
+    let mut path = format!("/v1/jobs/{upstream}");
+    if !req.query.is_empty() {
+        path.push('?');
+        path.push_str(&req.query);
+    }
+    // A blocking GET may legitimately hold the line for the client's
+    // requested wait; give the upstream socket that long plus grace.
+    let mut io_timeout = shared.upstream_timeout;
+    if let Some(wait_s) = requested_wait_s(&req.query) {
+        io_timeout = io_timeout.max(Duration::from_secs_f64(wait_s) + Duration::from_secs(15));
+    }
+    let mut attempt = 0;
+    loop {
+        attempt += 1;
+        let outcome = Client::with_timeouts(&r.addr, Some(shared.connect_timeout), io_timeout)
+            .and_then(|mut c| c.request_raw(&req.method, &path, None));
+        match outcome {
+            Ok((status, bytes)) => {
+                r.record_success();
+                shared.metrics.routed.fetch_add(1, Ordering::Relaxed);
+                // A 202 ("still running") body carries the upstream id;
+                // re-tag it so the client polls through the router.
+                return tag_submit_response(status, bytes, tag, &r.addr);
+            }
+            Err(e) => {
+                if req.method == "GET" && attempt == 1 {
+                    shared.metrics.retries.fetch_add(1, Ordering::Relaxed);
+                    continue;
+                }
+                return Response::error(502, &format!("replica {}: {e}", r.addr));
+            }
+        }
+    }
+}
+
+/// `timeout_s` out of a raw query string, when present and sane.
+fn requested_wait_s(query: &str) -> Option<f64> {
+    let v: f64 = query
+        .split('&')
+        .find_map(|kv| kv.strip_prefix("timeout_s="))?
+        .parse()
+        .ok()?;
+    (v.is_finite() && (0.0..=86_400.0).contains(&v)).then_some(v)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn requested_wait_parses_sane_values_only() {
+        assert_eq!(requested_wait_s("timeout_s=2.5"), Some(2.5));
+        assert_eq!(requested_wait_s("foo=1&timeout_s=0"), Some(0.0));
+        assert_eq!(requested_wait_s(""), None);
+        assert_eq!(requested_wait_s("timeout_s=-1"), None);
+        assert_eq!(requested_wait_s("timeout_s=1e9"), None);
+        assert_eq!(requested_wait_s("timeout_s=nope"), None);
+    }
+
+    #[test]
+    fn router_refuses_empty_and_oversized_replica_sets() {
+        let cfg = RouterConfig { listen: "127.0.0.1:0".into(), ..Default::default() };
+        assert!(Router::bind(&cfg, StreamConfig::default()).is_err());
+        let cfg = RouterConfig {
+            listen: "127.0.0.1:0".into(),
+            replicas: (0..=replica::MAX_REPLICAS)
+                .map(|i| format!("127.0.0.1:{}", 10_000 + i))
+                .collect(),
+            ..Default::default()
+        };
+        assert!(Router::bind(&cfg, StreamConfig::default()).is_err());
+    }
+}

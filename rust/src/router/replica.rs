@@ -1,0 +1,172 @@
+//! Replica bookkeeping: rendezvous placement, health flags, and the
+//! replica tag carried inside router-issued job ids.
+//!
+//! Placement is highest-random-weight (rendezvous) hashing: every
+//! replica scores each canonical spec hash independently of the other
+//! replicas, so the winner — and the full failover order behind it —
+//! depends only on `(spec hash, replica address)`. Reordering the
+//! configured replica list, or adding/removing a sibling, never
+//! reshuffles the specs the surviving replicas already own, which is
+//! exactly what keeps their result caches warm (pinned as a property in
+//! `tests/props.rs`).
+
+use std::sync::atomic::{AtomicBool, AtomicU32, Ordering};
+
+use crate::server::cache;
+
+/// Low bits of a router-issued job id reserved for the replica tag.
+///
+/// A routed id is `upstream_id << TAG_BITS | replica_index`, so the
+/// router can send `GET`/`DELETE /v1/jobs/{id}` straight to the replica
+/// that owns the job. Ids travel as JSON numbers (exact below 2^53),
+/// which still leaves upstream counters 2^45 submissions of headroom.
+pub const TAG_BITS: u32 = 8;
+
+/// Most replicas one router can front — the tag must fit [`TAG_BITS`].
+pub const MAX_REPLICAS: usize = 1 << TAG_BITS;
+
+/// Tag `upstream` (a replica-local job id) with the replica's index.
+pub fn encode_job_id(upstream: u64, replica: usize) -> u64 {
+    debug_assert!(replica < MAX_REPLICAS);
+    (upstream << TAG_BITS) | replica as u64
+}
+
+/// Split a router-issued id into `(upstream_id, replica_index)`.
+pub fn decode_job_id(routed: u64) -> (u64, usize) {
+    (routed >> TAG_BITS, (routed & (MAX_REPLICAS as u64 - 1)) as usize)
+}
+
+/// One backend coordinator replica plus its probe-driven health state.
+///
+/// The state machine is deliberately asymmetric: `unhealthy_after`
+/// *consecutive* failures mark a replica down (one flaky probe must not
+/// eject a replica mid-burst), while a single success re-admits it (a
+/// recovered replica should take traffic on the next round, not after
+/// N confirmations).
+#[derive(Debug)]
+pub struct Replica {
+    /// `host:port` of the replica's HTTP server.
+    pub addr: String,
+    /// Position in the configured replica list — the tag encoded into
+    /// router-issued job ids ([`encode_job_id`]).
+    pub index: usize,
+    /// Rendezvous identity: a stable hash of the address, mixed with
+    /// each spec hash by [`Replica::score`].
+    seed: u64,
+    healthy: AtomicBool,
+    consecutive_failures: AtomicU32,
+}
+
+impl Replica {
+    /// A replica at `addr`, tagged `index`, starting healthy (a router
+    /// must be able to route before its first probe round completes).
+    pub fn new(index: usize, addr: &str) -> Replica {
+        Replica {
+            addr: addr.to_string(),
+            index,
+            seed: cache::content_hash(addr.as_bytes()),
+            healthy: AtomicBool::new(true),
+            consecutive_failures: AtomicU32::new(0),
+        }
+    }
+
+    /// Whether the health loop currently considers this replica usable.
+    pub fn is_healthy(&self) -> bool {
+        self.healthy.load(Ordering::Relaxed)
+    }
+
+    /// Record a failed probe or connect attempt. Returns `true` when
+    /// this call crossed the `unhealthy_after` threshold and flipped
+    /// the replica from healthy to unhealthy.
+    pub fn record_failure(&self, unhealthy_after: u32) -> bool {
+        let n = self.consecutive_failures.fetch_add(1, Ordering::Relaxed) + 1;
+        n >= unhealthy_after.max(1) && self.healthy.swap(false, Ordering::Relaxed)
+    }
+
+    /// Record a successful probe or exchange. Returns `true` when this
+    /// call re-admitted a previously unhealthy replica.
+    pub fn record_success(&self) -> bool {
+        self.consecutive_failures.store(0, Ordering::Relaxed);
+        !self.healthy.swap(true, Ordering::Relaxed)
+    }
+
+    /// Rendezvous score of this replica for a canonical spec hash:
+    /// the shared SplitMix64-style mixer ([`cache::content_hash`]) over
+    /// the spec hash concatenated with the address hash. Depends only
+    /// on the pair, never on the rest of the replica set.
+    pub fn score(&self, spec_hash: u64) -> u64 {
+        let mut key = [0u8; 16];
+        key[..8].copy_from_slice(&spec_hash.to_le_bytes());
+        key[8..].copy_from_slice(&self.seed.to_le_bytes());
+        cache::content_hash(&key)
+    }
+}
+
+/// Replica indices in descending rendezvous-score order for
+/// `spec_hash`: element 0 is the owner, the rest the failover order.
+/// Ties (score collisions) break on the address so the order stays
+/// permutation-stable.
+pub fn rendezvous_order(spec_hash: u64, replicas: &[Replica]) -> Vec<usize> {
+    let mut order: Vec<usize> = (0..replicas.len()).collect();
+    order.sort_by(|&a, &b| {
+        let (ra, rb) = (&replicas[a], &replicas[b]);
+        rb.score(spec_hash)
+            .cmp(&ra.score(spec_hash))
+            .then_with(|| ra.addr.cmp(&rb.addr))
+    });
+    order
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn job_id_tag_round_trips() {
+        for upstream in [0u64, 1, 7, 1 << 20, (1 << 45) - 1] {
+            for replica in [0usize, 1, 5, MAX_REPLICAS - 1] {
+                let routed = encode_job_id(upstream, replica);
+                assert_eq!(decode_job_id(routed), (upstream, replica));
+            }
+        }
+    }
+
+    #[test]
+    fn three_failures_mark_down_and_one_success_readmits() {
+        let r = Replica::new(0, "127.0.0.1:7878");
+        assert!(r.is_healthy());
+        assert!(!r.record_failure(3));
+        assert!(!r.record_failure(3));
+        assert!(r.record_failure(3), "third consecutive failure must flip");
+        assert!(!r.is_healthy());
+        assert!(!r.record_failure(3), "already down: no second flip");
+        assert!(r.record_success(), "one success must re-admit");
+        assert!(r.is_healthy());
+        assert!(!r.record_success(), "already up: no second flip");
+        // The success reset the streak: marking down takes 3 again.
+        assert!(!r.record_failure(3));
+        assert!(!r.record_failure(3));
+        assert!(r.record_failure(3));
+    }
+
+    #[test]
+    fn rendezvous_order_ignores_list_permutation() {
+        let addrs = ["10.0.0.1:7878", "10.0.0.2:7878", "10.0.0.3:7878", "10.0.0.4:7878"];
+        let set_a: Vec<Replica> =
+            addrs.iter().enumerate().map(|(i, a)| Replica::new(i, a)).collect();
+        let permuted = [addrs[2], addrs[0], addrs[3], addrs[1]];
+        let set_b: Vec<Replica> =
+            permuted.iter().enumerate().map(|(i, a)| Replica::new(i, a)).collect();
+        for hash in [0u64, 1, 42, u64::MAX, 0x9E37_79B9_7F4A_7C15] {
+            let by_addr_a: Vec<&str> = rendezvous_order(hash, &set_a)
+                .into_iter()
+                .map(|i| set_a[i].addr.as_str())
+                .collect();
+            let by_addr_b: Vec<&str> = rendezvous_order(hash, &set_b)
+                .into_iter()
+                .map(|i| set_b[i].addr.as_str())
+                .collect();
+            assert_eq!(by_addr_a, by_addr_b, "placement must not depend on list order");
+        }
+    }
+}

@@ -8,7 +8,7 @@
 //! single retry.
 
 use std::io::{Read, Write};
-use std::net::TcpStream;
+use std::net::{TcpStream, ToSocketAddrs};
 use std::time::Duration;
 
 use crate::util::json::Json;
@@ -49,6 +49,10 @@ pub struct Client {
     served_on_stream: u64,
     /// Socket read/write timeout.
     timeout: Duration,
+    /// Bound on each TCP connect attempt; `None` leaves the OS default
+    /// (which can block for minutes against a dead host). The routing
+    /// tier always sets this so probes and failover stay bounded.
+    connect_timeout: Option<Duration>,
     /// Largest response body the client will buffer.
     max_body_bytes: usize,
 }
@@ -63,19 +67,54 @@ impl Client {
     /// above the server's request timeout: a blocking `GET` is answered
     /// (`202 running`) when the *server* side expires.
     pub fn with_timeout(addr: &str, timeout: Duration) -> Result<Client> {
+        Client::with_timeouts(addr, None, timeout)
+    }
+
+    /// [`Client::with_timeout`] plus an explicit connect bound. With
+    /// `Some(d)` every (re)connect resolves the address and gives each
+    /// candidate at most `d` to complete the TCP handshake, so a dead
+    /// replica costs a bounded wait instead of the OS default.
+    pub fn with_timeouts(
+        addr: &str,
+        connect_timeout: Option<Duration>,
+        timeout: Duration,
+    ) -> Result<Client> {
         let mut c = Client {
             addr: addr.to_string(),
             stream: None,
             served_on_stream: 0,
             timeout,
+            connect_timeout,
             max_body_bytes: 1 << 30,
         };
         c.reconnect()?;
         Ok(c)
     }
 
+    fn connect_stream(&self) -> std::io::Result<TcpStream> {
+        match self.connect_timeout {
+            None => TcpStream::connect(self.addr.as_str()),
+            Some(bound) => {
+                let mut last = None;
+                for resolved in self.addr.as_str().to_socket_addrs()? {
+                    match TcpStream::connect_timeout(&resolved, bound) {
+                        Ok(s) => return Ok(s),
+                        Err(e) => last = Some(e),
+                    }
+                }
+                Err(last.unwrap_or_else(|| {
+                    std::io::Error::new(
+                        std::io::ErrorKind::NotFound,
+                        "address resolved to nothing",
+                    )
+                }))
+            }
+        }
+    }
+
     fn reconnect(&mut self) -> Result<()> {
-        let stream = TcpStream::connect(self.addr.as_str())
+        let stream = self
+            .connect_stream()
             .map_err(|e| Error::Service(format!("connect {}: {e}", self.addr)))?;
         stream
             .set_read_timeout(Some(self.timeout))
@@ -96,6 +135,30 @@ impl Client {
     /// server may have accepted the job before the connection died,
     /// and a blind resubmit would run it twice; the caller decides.
     pub fn request(&mut self, method: &str, path: &str, body: Option<&Json>) -> Result<(u16, Json)> {
+        let payload = body.map(|j| j.to_string());
+        let (status, bytes) = self.request_raw(method, path, payload.as_deref().map(str::as_bytes))?;
+        let text = String::from_utf8(bytes)
+            .map_err(|_| Error::Service(format!("{method} {path}: non-UTF-8 response")))?;
+        let json = if text.is_empty() {
+            Json::Null
+        } else {
+            Json::parse(&text)
+                .map_err(|e| Error::Service(format!("{method} {path}: bad response JSON: {e}")))?
+        };
+        Ok((status, json))
+    }
+
+    /// [`Client::request`] without the JSON layer: the body is sent and
+    /// returned as raw bytes. The routing tier proxies responses through
+    /// this so cached replays stay byte-identical end to end (a parse +
+    /// re-render round trip would canonicalize key order). Same retry
+    /// policy as [`Client::request`].
+    pub fn request_raw(
+        &mut self,
+        method: &str,
+        path: &str,
+        body: Option<&[u8]>,
+    ) -> Result<(u16, Vec<u8>)> {
         let maybe_stale = self.stream.is_some() && self.served_on_stream > 0;
         match self.request_once(method, path, body) {
             Ok(r) => Ok(r),
@@ -114,11 +177,11 @@ impl Client {
         &mut self,
         method: &str,
         path: &str,
-        body: Option<&Json>,
-    ) -> Result<(u16, Json)> {
+        body: Option<&[u8]>,
+    ) -> Result<(u16, Vec<u8>)> {
         let addr = self.addr.clone();
         let max_body = self.max_body_bytes;
-        let payload = body.map(|j| j.to_string()).unwrap_or_default();
+        let payload = body.unwrap_or_default();
         if self.stream.is_none() {
             self.reconnect()?;
         }
@@ -130,7 +193,7 @@ impl Client {
         );
         let io = |e: std::io::Error| Error::Service(format!("{method} {path}: {e}"));
         stream.write_all(head.as_bytes()).map_err(io)?;
-        stream.write_all(payload.as_bytes()).map_err(io)?;
+        stream.write_all(payload).map_err(io)?;
         stream.flush().map_err(io)?;
 
         let (status, body, keep) = read_response(stream, max_body).map_err(io)?;
@@ -138,15 +201,7 @@ impl Client {
         if !keep {
             self.stream = None;
         }
-        let text = String::from_utf8(body)
-            .map_err(|_| Error::Service(format!("{method} {path}: non-UTF-8 response")))?;
-        let json = if text.is_empty() {
-            Json::Null
-        } else {
-            Json::parse(&text)
-                .map_err(|e| Error::Service(format!("{method} {path}: bad response JSON: {e}")))?
-        };
-        Ok((status, json))
+        Ok((status, body))
     }
 
     // ----- endpoint wrappers -----------------------------------------------
@@ -208,13 +263,18 @@ impl Client {
 
     /// `DELETE /v1/jobs/{id}`: cancel a parked job. `Ok(true)` when the
     /// server cancelled it (`200`), `Ok(false)` when the result had
-    /// already been delivered (`409`); an unknown id (`404`) and every
-    /// other status surface as `Err`.
+    /// already been delivered (`409`); an unknown id (`404`) surfaces
+    /// as the typed [`Error::NotFound`] — distinguishable from a
+    /// transport failure — and every other status as `Err`.
     pub fn cancel(&mut self, id: u64) -> Result<bool> {
         let (status, body) = self.request("DELETE", &format!("/v1/jobs/{id}"), None)?;
         match status {
             200 => Ok(true),
             409 => Ok(false),
+            404 => Err(Error::NotFound(format!(
+                "cancel: http 404: {}",
+                error_text(&body)
+            ))),
             _ => Err(Error::Service(format!(
                 "cancel: http {status}: {}",
                 error_text(&body)

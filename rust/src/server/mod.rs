@@ -31,7 +31,8 @@
 //! | `GET` | `/v1/jobs/{id}` | Block (up to the request timeout, or `?timeout_s=`) for a submitted job's result. Retryable: a claimed result whose response write fails is re-parked, not dropped. |
 //! | `DELETE` | `/v1/jobs/{id}` | Cancel: `200` for a pending/running job (cooperative — the engine abandons work at its next sweep checkpoint, the job fails with [`Error::Cancelled`], and the claiming `GET` answers `410 Gone`), `404` unknown, `409` already delivered. |
 //! | `GET` | `/metrics` | Service counters + gauges as JSON ([`protocol::metrics_to_json`]). |
-//! | `GET` | `/healthz` | Liveness probe. |
+//! | `GET` | `/healthz` | Liveness probe: `200` whenever the process answers. Health-loop target for the routing tier. |
+//! | `GET` | `/readyz` | Readiness probe: `200` while the bounded job queue has headroom, `503` once `queue_depth` has reached the configured capacity — a router sheds load to a sibling replica *before* a submit eats the 503. |
 //!
 //! ## Job lifecycle
 //!
@@ -548,6 +549,7 @@ fn route(shared: &Shared, req: &Request) -> Response {
         ("GET", "/healthz") => {
             Response::json(200, &Json::obj(vec![("status", Json::str("ok"))]))
         }
+        ("GET", "/readyz") => readyz(shared),
         ("GET", "/metrics") => {
             Response::json(200, &protocol::metrics_to_json(&shared.coord.metrics()))
         }
@@ -556,7 +558,7 @@ fn route(shared: &Shared, req: &Request) -> Response {
         ("DELETE", path) if path.strip_prefix("/v1/jobs/").is_some() => {
             cancel_job(shared, req)
         }
-        (_, "/healthz" | "/metrics" | "/v1/jobs") => {
+        (_, "/healthz" | "/readyz" | "/metrics" | "/v1/jobs") => {
             Response::error(405, "method not allowed")
         }
         (_, path) if path.strip_prefix("/v1/jobs/").is_some() => {
@@ -564,6 +566,25 @@ fn route(shared: &Shared, req: &Request) -> Response {
         }
         _ => Response::error(404, "no such endpoint"),
     }
+}
+
+/// `GET /readyz`: readiness, as distinct from `/healthz` liveness. The
+/// probe answers `503` once the bounded job queue is at capacity, so a
+/// routing tier can steer submits at a saturated replica toward a
+/// sibling *before* a submit eats the queue-full 503.
+fn readyz(shared: &Shared) -> Response {
+    let depth = shared.metrics.queue_depth.load(Ordering::Relaxed);
+    let capacity = shared.coord.queue_capacity() as u64;
+    let status = if depth >= capacity { 503 } else { 200 };
+    let state = if depth >= capacity { "saturated" } else { "ready" };
+    Response::json(
+        status,
+        &Json::obj(vec![
+            ("status", Json::str(state)),
+            ("queue_depth", Json::num(depth as f64)),
+            ("queue_capacity", Json::num(capacity as f64)),
+        ]),
+    )
 }
 
 /// `DELETE /v1/jobs/{id}`: cancel a parked job. A pending or running

@@ -33,6 +33,10 @@ pub enum Error {
     /// sweeps/blocks abandon the work. Surfaces as the job's failed
     /// outcome.
     Cancelled(String),
+    /// The addressed resource does not exist. The network layer maps
+    /// HTTP 404 here so callers (the routing tier in particular) can
+    /// tell "unknown id" apart from a transport failure.
+    NotFound(String),
     /// An underlying IO failure.
     Io(std::io::Error),
     /// JSON parsing or schema mismatch.
@@ -51,6 +55,7 @@ impl std::fmt::Display for Error {
             Error::Busy(m) => write!(f, "service busy (backpressure): {m}"),
             Error::Timeout(m) => write!(f, "timed out: {m}"),
             Error::Cancelled(m) => write!(f, "cancelled: {m}"),
+            Error::NotFound(m) => write!(f, "not found: {m}"),
             Error::Io(e) => write!(f, "io error: {e}"),
             Error::Json(m) => write!(f, "json error: {m}"),
         }

@@ -439,6 +439,88 @@ fn prop_cache_key_separates_every_submit_knob() {
     });
 }
 
+/// A canonical spec hash out of the same nearby-spec family the cache
+/// properties use, so the placement properties run over realistic keys
+/// rather than raw integers.
+fn spec_hash_of(g: &mut srsvd::prop::Gen) -> Result<u64, String> {
+    let m = g.usize_in(2, 12);
+    let n = g.usize_in(m, 24);
+    let k = g.usize_in(1, (m / 2).max(1));
+    let q = g.usize_in(0, 3);
+    let seed = g.case_seed & 0xFFFF;
+    let dist = *g.choose(&["uniform", "normal", "exponential"]);
+    let body = format!(
+        "{{\"input\":{{\"kind\":\"generator\",\"m\":{m},\"n\":{n},\
+         \"dist\":\"{dist}\",\"seed\":{seed}}},\"k\":{k},\
+         \"power_iters\":{q},\"seed\":{}}}",
+        seed ^ 0xAB
+    );
+    Ok(srsvd::server::cache::content_hash(&canon_of(&body)?))
+}
+
+#[test]
+fn prop_rendezvous_placement_is_permutation_stable() {
+    use srsvd::router::replica::{rendezvous_order, Replica};
+    // The routing tier's cache-affinity guarantee: which replica owns a
+    // spec (and the whole failover order behind it) depends only on the
+    // (spec hash, address) pairs — never on how the replica list was
+    // written down. Reordering `--replicas` must not cold every cache.
+    forall("rendezvous placement ignores replica-list order", 40, |g| {
+        let hash = spec_hash_of(g)?;
+        let count = g.usize_in(2, 6);
+        let addrs: Vec<String> =
+            (0..count).map(|i| format!("10.0.0.{}:7878", i + 1)).collect();
+        let set: Vec<Replica> =
+            addrs.iter().enumerate().map(|(i, a)| Replica::new(i, a)).collect();
+        // A random permutation of the same addresses (Fisher-Yates).
+        let mut perm: Vec<usize> = (0..count).collect();
+        for i in (1..count).rev() {
+            let j = g.usize_in(0, i);
+            perm.swap(i, j);
+        }
+        let permuted: Vec<Replica> = perm
+            .iter()
+            .enumerate()
+            .map(|(i, &p)| Replica::new(i, &addrs[p]))
+            .collect();
+        let by_addr = |set: &[Replica]| -> Vec<String> {
+            rendezvous_order(hash, set).into_iter().map(|i| set[i].addr.clone()).collect()
+        };
+        if by_addr(&set) != by_addr(&permuted) {
+            return Err(format!("order {perm:?} reshuffled placement for hash {hash:#x}"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_rendezvous_balance_within_twice_uniform() {
+    use srsvd::router::replica::{rendezvous_order, Replica};
+    // Sharding must actually spread load: over a large family of nearby
+    // specs, no replica of four may own more than twice its uniform
+    // share (deterministic under the fixed property seeds, and far
+    // inside the concentration bound for a well-mixed score).
+    let replicas: Vec<Replica> = (0..4)
+        .map(|i| Replica::new(i, &format!("10.1.0.{}:7878", i + 1)))
+        .collect();
+    let mut counts = [0usize; 4];
+    let mut total = 0usize;
+    forall("rendezvous balance over the spec family", 240, |g| {
+        let owner = rendezvous_order(spec_hash_of(g)?, &replicas)[0];
+        counts[owner] += 1;
+        total += 1;
+        Ok(())
+    });
+    assert_eq!(total, 240);
+    for (i, &c) in counts.iter().enumerate() {
+        assert!(c > 0, "replica {i} owns nothing out of {total} specs");
+        assert!(
+            c * 4 <= total * 2,
+            "replica {i} owns {c}/{total} specs — more than twice the uniform share"
+        );
+    }
+}
+
 #[test]
 fn prop_json_number_roundtrip_bitexact() {
     use srsvd::util::json::Json;

@@ -1,0 +1,368 @@
+//! Routing-tier integration tests: real loopback replicas (coordinator
+//! + HTTP server each) behind a real [`Router`].
+//!
+//! Pinned contracts:
+//! - Spec-hash affinity: an identical cacheable spec always lands on
+//!   the same replica, and its warm replay through the router is
+//!   byte-identical to the cold response (`native_jobs` stays flat,
+//!   `cache_hits` ticks — on the owner only).
+//! - Failover: killing the owning replica never fails a client submit;
+//!   the router moves to the next rendezvous candidate and counts a
+//!   `failovers`.
+//! - Health loop: `unhealthy_after` consecutive probe failures mark a
+//!   replica down, one success re-admits it. Probe rounds are driven by
+//!   hand (`Router::probe_now` under a pinned fake [`Clock`]) — no
+//!   test sleeps.
+//! - Routed ids: `DELETE`/blocking `GET` follow the replica tag in the
+//!   router-issued id; a replica's `404` surfaces as the typed
+//!   `Error::NotFound` straight through the router.
+//! - `GET /readyz` on a replica answers `503` once the bounded job
+//!   queue is at capacity.
+
+use std::net::TcpListener;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+
+use srsvd::coordinator::{Coordinator, CoordinatorConfig, EnginePreference};
+use srsvd::data::Distribution;
+use srsvd::linalg::stream::StreamConfig;
+use srsvd::router::{Router, RouterConfig};
+use srsvd::server::client::SubmitOutcome;
+use srsvd::server::protocol::{generator_input, JobRequest};
+use srsvd::server::{Client, Clock, Server, ServerConfig};
+use srsvd::util::json::Json;
+use srsvd::util::Error;
+
+fn coordinator(native_workers: usize) -> Arc<Coordinator> {
+    Arc::new(
+        Coordinator::start(CoordinatorConfig {
+            native_workers,
+            queue_capacity: 16,
+            artifact_dir: None,
+            pool_threads: Some(2),
+            io_threads: None,
+        })
+        .unwrap(),
+    )
+}
+
+fn server_config() -> ServerConfig {
+    ServerConfig {
+        addr: "127.0.0.1:0".into(),
+        workers: 2,
+        ..Default::default()
+    }
+}
+
+/// One live replica: a coordinator plus its HTTP server on a free
+/// loopback port.
+fn replica(native_workers: usize) -> (Arc<Coordinator>, Server, String) {
+    let coord = coordinator(native_workers);
+    let server =
+        Server::bind(Arc::clone(&coord), &server_config(), StreamConfig::default()).unwrap();
+    let addr = server.local_addr().to_string();
+    (coord, server, addr)
+}
+
+fn router_over(replicas: Vec<String>) -> Router {
+    let cfg = RouterConfig {
+        listen: "127.0.0.1:0".into(),
+        replicas,
+        workers: 2,
+        ..Default::default()
+    };
+    Router::bind(&cfg, StreamConfig::default()).unwrap()
+}
+
+fn client_for(addr: &str) -> Client {
+    Client::connect(addr).unwrap()
+}
+
+/// A flat counter out of a replica's `/metrics`.
+fn counter(client: &mut Client, key: &str) -> u64 {
+    client.metrics().unwrap().get(key).unwrap().as_u64().unwrap()
+}
+
+/// A counter out of the `"router"` object of the router's `/metrics`.
+fn router_counter(client: &mut Client, key: &str) -> u64 {
+    client.metrics().unwrap().get("router").unwrap().get(key).unwrap().as_u64().unwrap()
+}
+
+/// A waited, cacheable (generator-input) submit body. Identical seeds
+/// give byte-identical request bodies, hence one canonical spec hash.
+fn cacheable_body(gen_seed: u64) -> String {
+    let mut req = JobRequest::new(
+        generator_input(40, 120, Distribution::Uniform, gen_seed, None, None),
+        6,
+    );
+    req.engine = EnginePreference::Native;
+    req.seed = 3;
+    req.wait = true;
+    req.to_json().to_string()
+}
+
+/// A job slow enough that follow-up requests land while it occupies
+/// the single native worker (same shape as the lifecycle suite's).
+fn blocker_request() -> JobRequest {
+    let mut req = JobRequest::new(
+        generator_input(300, 500, Distribution::Uniform, 4, None, None),
+        16,
+    );
+    req.config = req.config.with_fixed_power(2);
+    req.engine = EnginePreference::Native;
+    req
+}
+
+/// A small job that queues behind the blocker.
+fn victim_request(seed: u64) -> JobRequest {
+    let mut req =
+        JobRequest::new(generator_input(8, 24, Distribution::Uniform, seed, None, None), 2);
+    req.engine = EnginePreference::Native;
+    req
+}
+
+#[test]
+fn spec_hash_affinity_replays_cached_bytes_through_the_router() {
+    let (_coord_a, server_a, addr_a) = replica(2);
+    let (_coord_b, server_b, addr_b) = replica(2);
+    let router = router_over(vec![addr_a.clone(), addr_b.clone()]);
+    let mut rc = client_for(&router.local_addr().to_string());
+
+    rc.health().unwrap();
+    let body = cacheable_body(9);
+    let (status, cold) = rc.request_raw("POST", "/v1/jobs", Some(body.as_bytes())).unwrap();
+    assert_eq!(status, 200, "cold waited submit through the router must answer the result");
+
+    // Exactly one replica owns the spec under rendezvous placement.
+    let mut cl_a = client_for(&addr_a);
+    let mut cl_b = client_for(&addr_b);
+    let cold_a = counter(&mut cl_a, "native_jobs");
+    let cold_b = counter(&mut cl_b, "native_jobs");
+    assert_eq!(cold_a + cold_b, 1, "exactly one replica may run the cold job");
+
+    let (status, warm) = rc.request_raw("POST", "/v1/jobs", Some(body.as_bytes())).unwrap();
+    assert_eq!(status, 200, "warm waited submit must answer the result");
+    assert_eq!(warm, cold, "the cache hit must replay the cold bytes through the router");
+
+    // The warm submit landed on the same replica and hit its cache:
+    // neither coordinator ran a second job.
+    assert_eq!(counter(&mut cl_a, "native_jobs"), cold_a, "warm submit must not rerun");
+    assert_eq!(counter(&mut cl_b, "native_jobs"), cold_b, "warm submit must not change owners");
+    let hits = counter(&mut cl_a, "cache_hits") + counter(&mut cl_b, "cache_hits");
+    assert!(hits >= 1, "the warm submit must hit the owner's result cache");
+
+    // The aggregated router metrics carry both counters and snapshots.
+    assert!(router_counter(&mut rc, "routed") >= 2, "both submits must count as routed");
+    let m = rc.metrics().unwrap();
+    let Json::Arr(reps) = m.get("replicas").unwrap() else {
+        panic!("router metrics must carry a replicas array");
+    };
+    assert_eq!(reps.len(), 2, "one snapshot entry per replica");
+    for entry in reps {
+        assert_eq!(entry.get("healthy").unwrap(), &Json::Bool(true));
+    }
+
+    router.shutdown();
+    server_a.shutdown();
+    server_b.shutdown();
+}
+
+#[test]
+fn killed_owner_fails_over_without_a_failed_client_request() {
+    let (_coord_a, server_a, addr_a) = replica(2);
+    let (_coord_b, server_b, addr_b) = replica(2);
+    let router = router_over(vec![addr_a.clone(), addr_b.clone()]);
+    let mut rc = client_for(&router.local_addr().to_string());
+
+    let body = cacheable_body(21);
+    let (status, _) = rc.request_raw("POST", "/v1/jobs", Some(body.as_bytes())).unwrap();
+    assert_eq!(status, 200, "cold submit must succeed");
+
+    // Find the rendezvous owner of this spec, then kill its server.
+    let mut cl_a = client_for(&addr_a);
+    let mut cl_b = client_for(&addr_b);
+    let a_owns = counter(&mut cl_a, "native_jobs") == 1;
+    let mut survivor_cl = if a_owns { cl_b } else { cl_a };
+    let survivor_jobs = counter(&mut survivor_cl, "native_jobs");
+    assert_eq!(survivor_jobs, 0, "the survivor must not have run the cold job");
+    let mut servers = [Some(server_a), Some(server_b)];
+    let owner = if a_owns { 0 } else { 1 };
+    servers[owner].take().unwrap().shutdown();
+
+    // The identical spec now rendezvouses at the dead owner first; the
+    // submit must still succeed, transparently, on the survivor.
+    let (status, bytes) = rc.request_raw("POST", "/v1/jobs", Some(body.as_bytes())).unwrap();
+    assert_eq!(status, 200, "failover submit must succeed without a client-visible error");
+    let parsed = Json::parse(std::str::from_utf8(&bytes).unwrap()).unwrap();
+    assert_eq!(parsed.get("ok").unwrap(), &Json::Bool(true));
+
+    // The survivor ran it natively (its cache was cold for this spec),
+    // and the router counted the move past the dead owner.
+    assert_eq!(counter(&mut survivor_cl, "native_jobs"), survivor_jobs + 1);
+    assert!(router_counter(&mut rc, "failovers") >= 1, "the failover must be counted");
+
+    router.shutdown();
+    for s in &mut servers {
+        if let Some(s) = s.take() {
+            s.shutdown();
+        }
+    }
+}
+
+/// Hand-advanced [`Clock`]: `now_ms` is whatever the test last stored.
+/// Pinned at zero it parks the router's background probe loop, so
+/// every probe round below is one explicit `probe_now` call.
+struct FakeClock(AtomicU64);
+
+impl Clock for FakeClock {
+    fn now_ms(&self) -> u64 {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+#[test]
+fn health_loop_marks_down_and_readmits_without_sleeping() {
+    // Reserve a loopback port with nothing listening behind it: bind,
+    // read the port, drop the listener.
+    let reserved = TcpListener::bind("127.0.0.1:0").unwrap();
+    let dead_addr = reserved.local_addr().unwrap().to_string();
+    drop(reserved);
+
+    let cfg = RouterConfig {
+        listen: "127.0.0.1:0".into(),
+        replicas: vec![dead_addr.clone()],
+        workers: 2,
+        // Far-future interval + a clock pinned at zero: the background
+        // loop never fires on its own.
+        probe_interval_ms: u64::MAX / 4,
+        unhealthy_after: 3,
+        ..Default::default()
+    };
+    let clock = Arc::new(FakeClock(AtomicU64::new(0)));
+    let router =
+        Router::bind_with_clock(&cfg, StreamConfig::default(), clock as Arc<dyn Clock>).unwrap();
+    let mut rc = client_for(&router.local_addr().to_string());
+
+    // Replicas start healthy: the router must route before round one.
+    assert_eq!(router_counter(&mut rc, "replicas_healthy"), 1);
+
+    // Two failing rounds stay below the threshold; the third flips.
+    router.probe_now();
+    router.probe_now();
+    assert_eq!(router_counter(&mut rc, "replicas_healthy"), 1, "two failures may not mark down");
+    router.probe_now();
+    assert_eq!(router_counter(&mut rc, "replicas_healthy"), 0, "third failure must mark down");
+    assert!(router_counter(&mut rc, "probe_failures") >= 3);
+    let (status, _) = rc.request("GET", "/readyz", None).unwrap();
+    assert_eq!(status, 503, "a router with no healthy replicas must fail readiness");
+
+    // Bring a real replica up on the exact address being probed.
+    let coord = coordinator(1);
+    let scfg = ServerConfig { addr: dead_addr, workers: 2, ..Default::default() };
+    let server = Server::bind(Arc::clone(&coord), &scfg, StreamConfig::default()).unwrap();
+
+    // One successful round re-admits it...
+    router.probe_now();
+    assert_eq!(router_counter(&mut rc, "replicas_healthy"), 1, "one success must re-admit");
+    let (status, _) = rc.request("GET", "/readyz", None).unwrap();
+    assert_eq!(status, 200);
+
+    // ...and submits reach it again.
+    let body = cacheable_body(5);
+    let (status, _) = rc.request_raw("POST", "/v1/jobs", Some(body.as_bytes())).unwrap();
+    assert_eq!(status, 200, "a re-admitted replica must take traffic");
+
+    router.shutdown();
+    server.shutdown();
+}
+
+#[test]
+fn routed_cancel_round_trips_and_maps_unknown_ids() {
+    let (_coord, server, addr) = replica(1);
+    let router = router_over(vec![addr]);
+    let mut rc = client_for(&router.local_addr().to_string());
+
+    // Occupy the only native worker, then queue the victim — both
+    // through the router, which re-tags the 202 ids.
+    let SubmitOutcome::Queued(blocker) = rc.submit(&blocker_request()).unwrap() else {
+        panic!("wait=false submit must queue");
+    };
+    let SubmitOutcome::Queued(victim) = rc.submit(&victim_request(7)).unwrap() else {
+        panic!("wait=false submit must queue");
+    };
+    // Router-issued ids carry the replica tag in the low bits.
+    assert_eq!(victim & 0xff, 0, "single-replica set: the tag must be index 0");
+    assert!(victim >> 8 >= 1, "the upstream id must survive the tag shift");
+    assert_ne!(blocker, victim);
+
+    // Cancel routes by the tag; the claiming GET sees 410 Gone; the
+    // 410 was a delivery, so a re-cancel answers 409.
+    assert!(rc.cancel(victim).unwrap(), "routed cancel of a pending job must answer 200");
+    let err = rc.wait(victim).unwrap_err();
+    let text = format!("{err}");
+    assert!(text.contains("410"), "cancelled claim must be 410 through the router, got: {text}");
+    assert!(!rc.cancel(victim).unwrap(), "re-cancel after delivery must answer 409");
+
+    // Unknown id, valid tag: the replica's 404 surfaces as the typed
+    // NotFound straight through the router.
+    match rc.cancel(123_456 << 8) {
+        Err(Error::NotFound(m)) => assert!(m.contains("404"), "got: {m}"),
+        other => panic!("unknown routed id must be NotFound, got {other:?}"),
+    }
+    // A tag beyond the replica set is the router's own 404, and a
+    // malformed id never leaves the router either.
+    let (status, _) = rc.request("DELETE", "/v1/jobs/51", None).unwrap();
+    assert_eq!(status, 404, "an out-of-range replica tag must 404 at the router");
+    let (status, _) = rc.request("DELETE", "/v1/jobs/not-a-number", None).unwrap();
+    assert_eq!(status, 400, "a malformed id must 400 at the router");
+
+    router.shutdown();
+    server.shutdown();
+}
+
+#[test]
+fn server_readyz_answers_503_at_queue_capacity() {
+    let coord = Arc::new(
+        Coordinator::start(CoordinatorConfig {
+            native_workers: 1,
+            queue_capacity: 1,
+            artifact_dir: None,
+            pool_threads: Some(2),
+            io_threads: None,
+        })
+        .unwrap(),
+    );
+    let server =
+        Server::bind(Arc::clone(&coord), &server_config(), StreamConfig::default()).unwrap();
+    let mut client = client_for(&server.local_addr().to_string());
+
+    let (status, body) = client.request("GET", "/readyz", None).unwrap();
+    assert_eq!(status, 200, "an idle queue must be ready");
+    assert_eq!(body.get("status").unwrap(), &Json::str("ready"));
+
+    // Fill the worker with the blocker, then the only queue slot with
+    // the victim — retrying past 503s until the worker has picked the
+    // blocker up and the slot is free.
+    let SubmitOutcome::Queued(_blocker) = client.submit(&blocker_request()).unwrap() else {
+        panic!("wait=false submit must queue");
+    };
+    loop {
+        match client.submit(&victim_request(5)) {
+            Ok(SubmitOutcome::Queued(_)) => break,
+            Ok(other) => panic!("victim must queue, got {other:?}"),
+            Err(e) => {
+                let text = format!("{e}");
+                assert!(text.contains("503"), "only queue-full may reject the victim: {text}");
+            }
+        }
+    }
+
+    // The victim occupies the whole capacity-1 queue while the blocker
+    // runs: readiness must now fail, deterministically.
+    let (status, body) = client.request("GET", "/readyz", None).unwrap();
+    assert_eq!(status, 503, "a full queue must fail readiness");
+    assert_eq!(body.get("status").unwrap(), &Json::str("saturated"));
+    assert_eq!(body.get("queue_capacity").unwrap().as_u64().unwrap(), 1);
+
+    server.shutdown();
+}
