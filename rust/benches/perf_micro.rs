@@ -1,8 +1,10 @@
 //! Perf microbenches: the hot paths behind every experiment —
 //! blocked GEMM (with plan sweep), the parallel threads × size axis
 //! (emits `BENCH_gemm.json` for the perf trajectory), the fused rank-1
-//! product, sparse SpMM, Householder QR, Jacobi SVD, and the artifact
-//! engine's end-to-end execute. Drives the EXPERIMENTS.md §Perf log.
+//! product, sparse SpMM, Householder QR, Jacobi SVD, the artifact
+//! engine's end-to-end execute, and a disarmed fail-point overhead
+//! guard (<1% of a block read, asserted). Drives the EXPERIMENTS.md
+//! §Perf log.
 //!
 //! Run: `cargo bench --bench perf_micro`.
 //! Env: `SRSVD_BENCH_QUICK=1` (CI smoke), `SRSVD_BENCH_JSON=<path>`
@@ -164,13 +166,47 @@ fn parallel_axis(b: &Bencher, quick: bool) -> Json {
     ])
 }
 
+/// Time a disarmed fail-point evaluation and enforce the registry's
+/// "invisible when off" contract: one site check must stay under 1% of
+/// even the cheapest instrumented operation (a 10µs block read is the
+/// conservative floor — real reads and sweeps are far larger). Returns
+/// the per-check cost in nanoseconds for the JSON trajectory.
+fn disarmed_fault_overhead_ns() -> f64 {
+    srsvd::util::faults::disarm();
+    let iters = 5_000_000u64;
+    let t0 = std::time::Instant::now();
+    for i in 0..iters {
+        // Branch on the result so the loop cannot be elided.
+        if srsvd::util::faults::check("stream.read").is_err() {
+            panic!("disarmed check reported a fault at iter {i}");
+        }
+    }
+    let per_check_s = t0.elapsed().as_secs_f64() / iters as f64;
+    let share = per_check_s / 10e-6;
+    println!(
+        "\n== disarmed fail-point overhead ==\n  {:.2}ns per check ({:.4}% of a 10µs block read)",
+        per_check_s * 1e9,
+        share * 100.0
+    );
+    assert!(
+        share < 0.01,
+        "disarmed fail-point costs {:.2}ns per check — over 1% of a 10µs block read",
+        per_check_s * 1e9
+    );
+    per_check_s * 1e9
+}
+
 fn main() {
     let b = Bencher::from_env();
     let quick = std::env::var("SRSVD_BENCH_QUICK").as_deref() == Ok("1");
     let mut rng = Xoshiro256pp::seed_from_u64(0);
 
     // Threads × size axis first: it feeds the committed JSON trajectory.
-    let report = parallel_axis(&b, quick);
+    let mut report = parallel_axis(&b, quick);
+    let fault_ns = disarmed_fault_overhead_ns();
+    if let Json::Obj(pairs) = &mut report {
+        pairs.push(("disarmed_fault_check_ns".to_string(), Json::num(fault_ns)));
+    }
     let json_path = std::env::var("SRSVD_BENCH_JSON").unwrap_or_else(|_| "BENCH_gemm.json".into());
     match std::fs::write(&json_path, report.to_string_pretty()) {
         Ok(()) => println!("\nwrote {json_path}"),

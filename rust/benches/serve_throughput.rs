@@ -85,6 +85,7 @@ fn main() {
                 artifact_dir: None,
                 pool_threads: Some(1),
                 io_threads: None,
+                ..Default::default()
             })
             .unwrap(),
         );
@@ -163,6 +164,7 @@ fn main() {
                 artifact_dir: None,
                 pool_threads: Some(1),
                 io_threads: None,
+                ..Default::default()
             })
             .unwrap(),
         );
@@ -226,6 +228,7 @@ fn main() {
                 artifact_dir: None,
                 pool_threads: Some(1),
                 io_threads: Some(2),
+                ..Default::default()
             })
             .unwrap(),
         );
@@ -354,6 +357,7 @@ fn main() {
                     artifact_dir: None,
                     pool_threads: Some(1),
                     io_threads: None,
+                    ..Default::default()
                 })
                 .unwrap(),
             );

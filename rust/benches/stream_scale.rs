@@ -6,7 +6,9 @@
 //! Legs per (block size × policy × prefetch) cell:
 //!   * `stream-mem` — `Streamed<InMemorySource>`: pure sweep overhead;
 //!   * `stream-file`— `Streamed<FileSource>`: sweep + disk IO;
-//! plus the in-memory [`srsvd::linalg::Dense`] baseline (`dense`).
+//! plus the in-memory [`srsvd::linalg::Dense`] baseline (`dense`) and a
+//! `crash_resume` leg (checkpointed run killed by an injected crash,
+//! restarted, pass savings and bit-identity reported).
 //!
 //! Every `exact` streamed run is checked byte-identical to the dense
 //! baseline (the module contract) before its timing is reported. For
@@ -26,7 +28,8 @@ use srsvd::linalg::stream::{
     spill_to_file, GeneratorSource, InMemorySource, MatrixSource, Streamed,
 };
 use srsvd::rng::Xoshiro256pp;
-use srsvd::svd::{Factorization, PassPolicy, ShiftedRsvd, SvdConfig};
+use srsvd::svd::{Checkpointer, Factorization, PassPolicy, ShiftedRsvd, SvdConfig};
+use srsvd::util::faults;
 use srsvd::util::json::Json;
 use srsvd::util::timer::fmt_duration;
 
@@ -248,6 +251,68 @@ fn main() {
              streamed runs",
             fmt_duration(dense_loaded_mean)
         );
+    }
+    // Crash/resume leg: a checkpointed file-backed run is killed at the
+    // top of sweep 2 by an injected crash, then restarted on the same
+    // checkpoint directory with the same seed. The row reports how much
+    // of the pass schedule the resume skipped; the recovered factors
+    // must stay bit-identical to an uninterrupted run.
+    {
+        let bl = 256.min(m);
+        let resume_cfg = exact_cfg.with_fixed_power(3);
+        let ckpt_dir = std::env::temp_dir().join(format!("srsvd_stream_scale_ckpt_{m}x{n}"));
+        let _ = std::fs::create_dir_all(&ckpt_dir);
+        let run = |engine: ShiftedRsvd| {
+            let w = Streamed::with_block_rows(&file, bl).with_prefetch(true);
+            let mut rng = Xoshiro256pp::seed_from_u64(seed ^ 0xFA);
+            let t0 = std::time::Instant::now();
+            let f = engine.factorize(&w, &mu, &mut rng).unwrap();
+            (f, t0.elapsed().as_secs_f64(), w.stats().passes)
+        };
+        let (full_f, full_s, full_passes) = run(ShiftedRsvd::new(resume_cfg));
+        let ckpt = Checkpointer::new(&ckpt_dir, 0xBE4C);
+        faults::arm("svd.sweep=die_after:2").unwrap();
+        let crashed = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            run(ShiftedRsvd::new(resume_cfg).with_checkpoint(ckpt.clone()))
+        }));
+        faults::disarm();
+        assert!(crashed.is_err(), "crash_resume: injected crash never fired");
+        let (res_f, res_s, res_passes) = run(ShiftedRsvd::new(resume_cfg).with_checkpoint(ckpt));
+        assert!(
+            identical(&full_f, &res_f),
+            "crash_resume: resumed factors diverged from the uninterrupted run"
+        );
+        let saved = full_passes.saturating_sub(res_passes);
+        t.row(&[
+            "crash_resume".into(),
+            "exact".into(),
+            "true".into(),
+            bl.to_string(),
+            format!("{res_passes} (-{saved})"),
+            fmt_duration(res_s),
+            format!("{:.2}x", res_s / full_s.max(1e-12)),
+        ]);
+        rows.push(Json::obj(vec![
+            ("leg", Json::str("crash_resume")),
+            ("block_rows", Json::num(bl as f64)),
+            ("pass_policy", Json::str("exact")),
+            ("prefetch", Json::Bool(true)),
+            ("passes", Json::num(res_passes as f64)),
+            ("passes_full_run", Json::num(full_passes as f64)),
+            ("passes_saved_by_resume", Json::num(saved as f64)),
+            ("mean_s", Json::num(res_s)),
+            ("full_run_s", Json::num(full_s)),
+            ("p95_s", Json::Null),
+            ("slowdown_vs_dense", Json::num(res_s / s_dense.mean_s.max(1e-12))),
+            ("bit_identical", Json::Bool(true)),
+        ]));
+        println!(
+            "crash resume: {res_passes} passes after restart vs {full_passes} uninterrupted \
+             ({saved} saved), {} vs {}",
+            fmt_duration(res_s),
+            fmt_duration(full_s)
+        );
+        let _ = std::fs::remove_dir_all(&ckpt_dir);
     }
     print!("{}", t.render());
 

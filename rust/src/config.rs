@@ -35,6 +35,8 @@
 //! result_ttl_s      = 600              # unclaimed parked-result lifetime
 //! cache_dir         = off              # persist the result cache here (off|none = memory-only)
 //! cache_entries     = 256              # result-cache capacity (0 disables caching)
+//! journal_dir       = off              # journal accepted-but-unfinished job specs here
+//!                                      # (off|none = no crash recovery of queued jobs)
 //! connect_timeout_ms = 1000            # bound on outbound TCP connects made against
 //!                                      # this deployment (router fallback; see [router])
 //!
@@ -50,10 +52,22 @@
 //! probe_timeout_ms  = 500              # per-probe IO bound
 //! unhealthy_after   = 3                # consecutive probe failures before mark-down
 //!
+//! [retry]
+//! max_attempts    = 3     # total tries per idempotent operation (1 = fail-fast)
+//! backoff_base_ms = 10    # first backoff; doubles per attempt
+//! backoff_max_ms  = 1000  # backoff ceiling (also caps honored Retry-After)
+//! jitter          = on    # deterministic ±25% spread (seeded, reproducible)
+//!
+//! [faults]
+//! # spec = stream.read=err:2@0.5;svd.sweep=die_after:3   # fail-point plan
+//! #                                  (same grammar as SRSVD_FAULTS / --faults)
+//!
 //! [svd]
 //! k           = 10
 //! oversample  = 10
 //! power_iters = 0             # fixed sweep count (StopCriterion::FixedPower)
+//! checkpoint_dir = off        # spill per-sweep panel checkpoints here for
+//!                             # crash-safe resume (off|none = cold starts only)
 //! # pve_tol    = 1e-3         # adaptive dashSVD accuracy control instead:
 //! # max_sweeps = 32           #   mutually exclusive with power_iters
 //! basis       = direct        # direct | qr-update-paper | qr-update-exact
@@ -166,7 +180,47 @@ impl RawConfig {
         if let Some(t) = self.get_usize("parallel", "io_threads")? {
             cfg.io_threads = if t == 0 { None } else { Some(t) };
         }
+        // Sweep-granular crash recovery lives in the [svd] section (it
+        // is a property of the factorization), but lands on the
+        // coordinator, which owns job execution.
+        match self.get("svd", "checkpoint_dir") {
+            Some("off") | Some("none") => cfg.checkpoint_dir = None,
+            Some(dir) => cfg.checkpoint_dir = Some(PathBuf::from(dir)),
+            None => {}
+        }
+        cfg.retry = self.retry()?;
         Ok(cfg)
+    }
+
+    /// Build the typed retry/backoff policy (defaults where unset):
+    /// `[retry] max_attempts` / `backoff_base_ms` / `backoff_max_ms` /
+    /// `jitter`. One section feeds every layer that retries — streamed
+    /// source reads, the blocking client, and the router's proxied
+    /// `GET`s — so budgets can't drift apart per layer.
+    pub fn retry(&self) -> Result<crate::util::retry::RetryPolicy> {
+        let mut p = crate::util::retry::RetryPolicy::default();
+        if let Some(n) = self.get_usize("retry", "max_attempts")? {
+            p.max_attempts = (n as u32).max(1);
+        }
+        if let Some(ms) = self.get_usize("retry", "backoff_base_ms")? {
+            p.backoff_base_ms = ms as u64;
+        }
+        if let Some(ms) = self.get_usize("retry", "backoff_max_ms")? {
+            p.backoff_max_ms = ms as u64;
+        }
+        if let Some(j) = self.get("retry", "jitter") {
+            p.jitter = parse_switch(j)
+                .ok_or_else(|| Error::Invalid(format!("retry.jitter: not a boolean: {j:?}")))?;
+        }
+        Ok(p)
+    }
+
+    /// The `[faults] spec` fail-point plan, if set — same grammar as
+    /// the `SRSVD_FAULTS` env var and the `--faults` CLI flag (the env
+    /// var wins when both are set, so a chaos run can override a
+    /// config file without editing it).
+    pub fn faults_spec(&self) -> Option<&str> {
+        self.get("faults", "spec").filter(|s| !s.is_empty())
     }
 
     /// The `[parallel] simd` switch, if set: `Some(false)` forces the
@@ -228,6 +282,11 @@ impl RawConfig {
         if let Some(c) = self.get_usize("server", "cache_entries")? {
             cfg.cache_entries = c;
         }
+        match self.get("server", "journal_dir") {
+            Some("off") | Some("none") => cfg.journal_dir = None,
+            Some(dir) => cfg.journal_dir = Some(PathBuf::from(dir)),
+            None => {}
+        }
         Ok(cfg)
     }
 
@@ -274,6 +333,7 @@ impl RawConfig {
         if let Some(n) = self.get_usize("router", "unhealthy_after")? {
             cfg.unhealthy_after = (n as u32).max(1);
         }
+        cfg.retry = self.retry()?;
         Ok(cfg)
     }
 
@@ -689,6 +749,59 @@ small_svd = gram
             d.connect_timeout_ms,
             crate::router::RouterConfig::default().connect_timeout_ms
         );
+    }
+
+    #[test]
+    fn retry_section_knobs() {
+        let raw = RawConfig::parse(
+            "[retry]\nmax_attempts = 5\nbackoff_base_ms = 20\nbackoff_max_ms = 400\njitter = off\n",
+        )
+        .unwrap();
+        let p = raw.retry().unwrap();
+        assert_eq!(p.max_attempts, 5);
+        assert_eq!(p.backoff_base_ms, 20);
+        assert_eq!(p.backoff_max_ms, 400);
+        assert!(!p.jitter);
+        // One [retry] section feeds both the coordinator and the router.
+        assert_eq!(raw.coordinator().unwrap().retry.max_attempts, 5);
+        assert_eq!(raw.router().unwrap().retry.max_attempts, 5);
+        // Defaults when missing; max_attempts floors at 1 (fail-fast).
+        let d = RawConfig::parse("").unwrap().retry().unwrap();
+        assert_eq!(d, crate::util::retry::RetryPolicy::default());
+        let raw = RawConfig::parse("[retry]\nmax_attempts = 0\n").unwrap();
+        assert_eq!(raw.retry().unwrap().max_attempts, 1);
+        // Non-integer / non-boolean errors.
+        let raw = RawConfig::parse("[retry]\nmax_attempts = lots\n").unwrap();
+        assert!(raw.retry().is_err());
+        let raw = RawConfig::parse("[retry]\njitter = maybe\n").unwrap();
+        assert!(raw.retry().is_err());
+    }
+
+    #[test]
+    fn faults_spec_passthrough() {
+        let raw = RawConfig::parse("[faults]\nspec = stream.read=err:2@0.5\n").unwrap();
+        assert_eq!(raw.faults_spec(), Some("stream.read=err:2@0.5"));
+        assert_eq!(RawConfig::parse("").unwrap().faults_spec(), None);
+        let raw = RawConfig::parse("[faults]\nspec =\n").unwrap();
+        assert_eq!(raw.faults_spec(), None, "empty spec means disarmed");
+    }
+
+    #[test]
+    fn checkpoint_and_journal_dirs() {
+        let raw = RawConfig::parse(
+            "[svd]\ncheckpoint_dir = /tmp/ckpt\n[server]\njournal_dir = /tmp/journal\n",
+        )
+        .unwrap();
+        assert_eq!(raw.coordinator().unwrap().checkpoint_dir, Some(PathBuf::from("/tmp/ckpt")));
+        assert_eq!(raw.server().unwrap().journal_dir, Some(PathBuf::from("/tmp/journal")));
+        // off|none and unset all mean disabled (cold starts only).
+        let raw = RawConfig::parse("[svd]\ncheckpoint_dir = off\n[server]\njournal_dir = none\n")
+            .unwrap();
+        assert_eq!(raw.coordinator().unwrap().checkpoint_dir, None);
+        assert_eq!(raw.server().unwrap().journal_dir, None);
+        let raw = RawConfig::parse("").unwrap();
+        assert_eq!(raw.coordinator().unwrap().checkpoint_dir, None);
+        assert_eq!(raw.server().unwrap().journal_dir, None);
     }
 
     #[test]

@@ -31,6 +31,12 @@ pub struct Metrics {
     pub stream_passes: AtomicU64,
     /// Payload bytes read from streamed sources.
     pub stream_bytes_read: AtomicU64,
+    /// Transient streamed-source read failures retried inside sweeps
+    /// (each successful retry is a job that did NOT fail).
+    pub stream_retries: AtomicU64,
+    /// Journaled job specs re-run through the resume path after a
+    /// service restart.
+    pub journal_replayed: AtomicU64,
     /// Power sweeps executed across completed jobs (fixed `q` or the
     /// adaptive count — the accuracy-control savings signal).
     pub sweeps_used: AtomicU64,
@@ -106,6 +112,15 @@ impl Metrics {
             http_bytes_out: self.http_bytes_out.load(Ordering::Relaxed),
             stream_passes: self.stream_passes.load(Ordering::Relaxed),
             stream_bytes_read: self.stream_bytes_read.load(Ordering::Relaxed),
+            stream_retries: self.stream_retries.load(Ordering::Relaxed),
+            journal_replayed: self.journal_replayed.load(Ordering::Relaxed),
+            // Process-global resilience counters: the fault registry and
+            // the checkpoint layer are statics (armed/written once per
+            // process), so the snapshot reads them directly rather than
+            // duplicating them per coordinator.
+            faults_injected: crate::util::faults::injected_count(),
+            checkpoints_written: crate::svd::checkpoint::checkpoints_written(),
+            checkpoints_resumed: crate::svd::checkpoint::checkpoints_resumed(),
             sweeps_used: self.sweeps_used.load(Ordering::Relaxed),
             mean_achieved_pve: {
                 let jobs = self.pve_jobs.load(Ordering::Relaxed);
@@ -177,6 +192,17 @@ pub struct MetricsSnapshot {
     pub stream_passes: u64,
     /// Payload bytes read from streamed sources.
     pub stream_bytes_read: u64,
+    /// Transient streamed-source read failures retried inside sweeps.
+    pub stream_retries: u64,
+    /// Journaled job specs re-run after a service restart.
+    pub journal_replayed: u64,
+    /// Faults injected by the armed fail-point registry (0 in
+    /// production — a nonzero value means `SRSVD_FAULTS` is live).
+    pub faults_injected: u64,
+    /// Sweep checkpoints written by the engine (process-wide).
+    pub checkpoints_written: u64,
+    /// Factorizations resumed from a checkpoint (process-wide).
+    pub checkpoints_resumed: u64,
     /// Power sweeps executed across completed jobs.
     pub sweeps_used: u64,
     /// Mean achieved PVE over jobs that reported one (adaptive
@@ -229,11 +255,12 @@ impl std::fmt::Display for MetricsSnapshot {
              depth={} inflight={} mean_exec={:.3}ms mean_queue={:.3}ms max_exec={:.3}ms \
              pool[threads={} par_ops={} serial_ops={} chunks={} spawned={}] \
              io[threads={} par_ops={} serial_ops={} chunks={} spawned={}] \
-             stream[passes={} read={}B] \
+             stream[passes={} read={}B retries={}] \
              http[accepted={} rejected={} in={}B out={}B] \
              sweeps[used={} mean_pve={:.4}] \
              cache[hits={} misses={} bytes={}B] \
-             lifecycle[cancelled={} evicted={}]",
+             lifecycle[cancelled={} evicted={}] \
+             resilience[faults={} ckpt_written={} ckpt_resumed={} replayed={}]",
             self.submitted,
             self.completed,
             self.failed,
@@ -256,6 +283,7 @@ impl std::fmt::Display for MetricsSnapshot {
             self.io_spawned,
             self.stream_passes,
             self.stream_bytes_read,
+            self.stream_retries,
             self.http_accepted,
             self.http_rejected,
             self.http_bytes_in,
@@ -267,6 +295,10 @@ impl std::fmt::Display for MetricsSnapshot {
             self.cache_bytes,
             self.cancelled,
             self.evicted,
+            self.faults_injected,
+            self.checkpoints_written,
+            self.checkpoints_resumed,
+            self.journal_replayed,
         )
     }
 }
@@ -301,6 +333,7 @@ mod tests {
         m.http_bytes_out.fetch_add(300, Ordering::Relaxed);
         m.stream_passes.fetch_add(4, Ordering::Relaxed);
         m.stream_bytes_read.fetch_add(4096, Ordering::Relaxed);
+        m.stream_retries.fetch_add(3, Ordering::Relaxed);
         m.record_sweeps(2, None);
         m.record_sweeps(3, Some(0.75));
         m.record_sweeps(5, Some(0.25));
@@ -320,7 +353,8 @@ mod tests {
         assert!((s.mean_achieved_pve - 0.5).abs() < 1e-9);
         let text = format!("{s}");
         assert!(text.contains("inflight=1"), "{text}");
-        assert!(text.contains("stream[passes=4 read=4096B]"), "{text}");
+        assert!(text.contains("stream[passes=4 read=4096B retries=3]"), "{text}");
+        assert!(text.contains("resilience["), "{text}");
         assert!(text.contains("http[accepted=5 rejected=1 in=100B out=300B]"), "{text}");
         assert!(text.contains("sweeps[used=10 mean_pve=0.5000]"), "{text}");
         assert_eq!(s.cancelled, 2);

@@ -44,7 +44,7 @@ use std::time::{Duration, Instant};
 use crate::parallel::{self, ThreadPool};
 use crate::runtime::Manifest;
 use crate::svd::SvdEngine;
-use crate::util::{Error, Result};
+use crate::util::{retry::RetryPolicy, Error, Result};
 
 /// Service configuration.
 #[derive(Debug, Clone)]
@@ -66,6 +66,16 @@ pub struct CoordinatorConfig {
     /// GEMM/SVD compute. `None` = the process global io pool
     /// (`SRSVD_IO_THREADS` / a small core-count-derived default).
     pub io_threads: Option<usize>,
+    /// Sweep-granular checkpoint/resume directory (`[svd]
+    /// checkpoint_dir` / `--checkpoint-dir`): native jobs spill their
+    /// state after every completed sweep and a restarted service
+    /// resumes interrupted jobs byte-identically. `None` (default) = no
+    /// checkpointing.
+    pub checkpoint_dir: Option<PathBuf>,
+    /// Retry policy for transient streamed-source read failures inside
+    /// a sweep (`[retry]` / `--retry-*`). The default allows a couple
+    /// of backed-off retries; [`RetryPolicy::none`] restores fail-fast.
+    pub retry: RetryPolicy,
 }
 
 impl Default for CoordinatorConfig {
@@ -76,6 +86,8 @@ impl Default for CoordinatorConfig {
             artifact_dir: default_artifact_dir(),
             pool_threads: None,
             io_threads: None,
+            checkpoint_dir: None,
+            retry: RetryPolicy::default(),
         }
     }
 }
@@ -158,6 +170,8 @@ pub struct Coordinator {
     /// Bounded queue capacity (per engine), kept for readiness probes:
     /// `GET /readyz` compares the live `queue_depth` gauge against it.
     queue_capacity: usize,
+    /// Retry policy stamped onto every streamed input at submit time.
+    retry: RetryPolicy,
     native_handles: Vec<std::thread::JoinHandle<()>>,
     actor_handle: Option<std::thread::JoinHandle<()>>,
 }
@@ -193,10 +207,11 @@ impl Coordinator {
             let mx = Arc::clone(&metrics);
             let pl = Arc::clone(&pool);
             let iop = Arc::clone(&io);
+            let ckpt = config.checkpoint_dir.clone();
             native_handles.push(
                 std::thread::Builder::new()
                     .name(format!("srsvd-native-{w}"))
-                    .spawn(move || native_loop(rx, mx, pl, iop))
+                    .spawn(move || native_loop(rx, mx, pl, iop, ckpt))
                     .map_err(|e| Error::Service(format!("spawn worker: {e}")))?,
             );
         }
@@ -234,6 +249,7 @@ impl Coordinator {
             io,
             next_id: AtomicU64::new(1),
             queue_capacity: config.queue_capacity,
+            retry: config.retry,
             native_handles,
             actor_handle,
         })
@@ -247,6 +263,8 @@ impl Coordinator {
             artifact_dir: None,
             pool_threads: None,
             io_threads: None,
+            checkpoint_dir: None,
+            retry: RetryPolicy::default(),
         })
     }
 
@@ -312,6 +330,9 @@ impl Coordinator {
         // per-job metric deltas otherwise.
         if let MatrixInput::Streamed(s) = &mut spec.input {
             *s = s.fresh_stats();
+            // Transient read failures inside a sweep retry under the
+            // service's policy instead of failing the job outright.
+            s.set_retry(self.retry);
         }
         let route = router::route(&spec, self.manifest.as_ref())?;
         let id = JobId(self.next_id.fetch_add(1, Ordering::Relaxed));
@@ -393,6 +414,7 @@ fn native_loop(
     metrics: Arc<Metrics>,
     pool: Arc<ThreadPool>,
     io: Arc<ThreadPool>,
+    checkpoint_dir: Option<PathBuf>,
 ) {
     // Every linalg hot path this worker executes dispatches onto the
     // coordinator's shared cpu pool instead of running serial; streamed
@@ -422,12 +444,26 @@ fn native_loop(
             Err(Error::Cancelled("job cancelled before execution".into()))
         } else {
             std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
-                native_worker::execute_native_cancellable(&item.spec, &item.cancel)
+                native_worker::execute_native_job(
+                    &item.spec,
+                    &item.cancel,
+                    checkpoint_dir.as_deref(),
+                )
             }))
             .unwrap_or_else(|payload| {
                 let msg = panic_message(payload.as_ref());
                 crate::log_error!("{}: job panicked: {msg}", item.id);
-                Err(Error::Service(format!("job panicked: {msg}")))
+                if msg.contains(crate::linalg::stream::SOURCE_IO_PANIC) {
+                    // A streamed source that exhausted its retry budget:
+                    // surface the typed IO error (with the attempt
+                    // count already in the message), not a bare panic.
+                    Err(Error::Io(std::io::Error::new(
+                        std::io::ErrorKind::Other,
+                        format!("{}: {msg}", item.id),
+                    )))
+                } else {
+                    Err(Error::Service(format!("{}: job panicked: {msg}", item.id)))
+                }
             })
         };
         let exec_s = t.elapsed().as_secs_f64();
@@ -444,6 +480,9 @@ fn native_loop(
             metrics
                 .stream_bytes_read
                 .fetch_add(io.bytes_read, Ordering::Relaxed);
+            metrics
+                .stream_retries
+                .fetch_add(io.retries, Ordering::Relaxed);
         }
         metrics.in_flight.fetch_sub(1, Ordering::Relaxed);
         let _ = item.reply.send(JobResult {
@@ -554,8 +593,7 @@ mod tests {
             native_workers: 1,
             queue_capacity: 1,
             artifact_dir: None,
-            pool_threads: None,
-            io_threads: None,
+            ..Default::default()
         })
         .unwrap();
         let mut handles = Vec::new();
@@ -591,7 +629,7 @@ mod tests {
             queue_capacity: 8,
             artifact_dir: None,
             pool_threads: Some(1),
-            io_threads: None,
+            ..Default::default()
         })
         .unwrap();
         let mut slow = dense_spec(1);
@@ -637,6 +675,7 @@ mod tests {
             artifact_dir: None,
             pool_threads: Some(3),
             io_threads: Some(2),
+            ..Default::default()
         })
         .unwrap();
         let r = coord.submit_blocking(dense_spec(11)).unwrap();

@@ -6,11 +6,12 @@
 //! module), so the GEMM / CSR kernels inside a job run panel-parallel
 //! on one process-wide pool rather than each job being serial.
 
+use std::path::Path;
 use std::sync::atomic::AtomicBool;
 
 use crate::linalg::Dense;
 use crate::rng::Xoshiro256pp;
-use crate::svd::ShiftedRsvd;
+use crate::svd::{Checkpointer, ShiftedRsvd};
 use crate::util::Result;
 
 use super::job::{JobOutput, JobSpec, MatrixInput};
@@ -24,9 +25,27 @@ pub fn execute_native(spec: &JobSpec) -> Result<JobOutput> {
 /// the factorization abandon work at its next between-sweep checkpoint
 /// and the job fail with [`crate::util::Error::Cancelled`].
 pub fn execute_native_cancellable(spec: &JobSpec, cancel: &AtomicBool) -> Result<JobOutput> {
+    execute_native_job(spec, cancel, None)
+}
+
+/// The full worker entry point: cancellation plus optional sweep-
+/// granular checkpointing. With `checkpoint_dir` set and the spec
+/// having a stable identity ([`crate::server::cache::checkpoint_spec_hash`]),
+/// the engine spills its state after each completed sweep and resumes a
+/// previously interrupted run of the same spec byte-identically.
+pub fn execute_native_job(
+    spec: &JobSpec,
+    cancel: &AtomicBool,
+    checkpoint_dir: Option<&Path>,
+) -> Result<JobOutput> {
     let mu = spec.shift.resolve(&spec.input)?;
     let mut rng = Xoshiro256pp::seed_from_u64(spec.seed);
-    let engine = ShiftedRsvd::new(spec.config);
+    let mut engine = ShiftedRsvd::new(spec.config);
+    if let Some(dir) = checkpoint_dir {
+        if let Some(tag) = crate::server::cache::checkpoint_spec_hash(spec) {
+            engine = engine.with_checkpoint(Checkpointer::new(dir, tag));
+        }
+    }
     let (fact, report) =
         engine.factorize_with_report_cancellable(spec.input.as_ops(), &mu, &mut rng, cancel)?;
     let mse = if spec.score {

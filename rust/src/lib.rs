@@ -64,6 +64,16 @@
 //!   ones round-robin; a background health loop marks dead replicas
 //!   down and submits fail over to the next candidate.
 //!   `srsvd route --listen --replicas a,b,c`.
+//! * [`util::faults`] / [`util::retry`] / [`svd::checkpoint`] — the
+//!   resilience layer: a process-wide fail-point registry (zero-cost
+//!   when disarmed; armed via `SRSVD_FAULTS`, `[faults] spec`, or
+//!   `--faults`) drives chaos tests against every I/O boundary; a
+//!   typed [`util::retry::RetryPolicy`] (`[retry]` config) backs
+//!   transient-read, client, and router retries — applied only where
+//!   at-most-once semantics permit; and sweep-granular checkpoints
+//!   ([`svd::Checkpointer`], `[svd] checkpoint_dir`) plus the server's
+//!   accepted-job journal (`[server] journal_dir`) make streamed
+//!   factorizations crash-safe with byte-identical resume.
 //! * [`experiments`] — one runner per paper figure/table, shared by
 //!   `examples/` and `benches/`.
 //! * [`bench`] / [`prop`] — mini criterion / proptest substitutes
@@ -147,7 +157,8 @@ pub mod prelude {
     };
     pub use crate::rng::{Rng, Xoshiro256pp};
     pub use crate::svd::{
-        Factorization, MatVecOps, PassPolicy, Pca, Precision, Rsvd, ShiftedRsvd, StopCriterion,
-        SvdConfig, SvdEngine, SweepReport,
+        Checkpointer, Factorization, MatVecOps, PassPolicy, Pca, Precision, Rsvd, ShiftedRsvd,
+        StopCriterion, SvdConfig, SvdEngine, SweepReport,
     };
+    pub use crate::util::retry::RetryPolicy;
 }

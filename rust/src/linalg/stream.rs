@@ -91,7 +91,14 @@ use crate::data::Distribution;
 use crate::parallel;
 use crate::rng::{Rng, SplitMix64, Xoshiro256pp};
 use crate::svd::MatVecOps;
-use crate::util::{Error, Result};
+use crate::util::{faults, retry::RetryPolicy, Error, Result};
+
+/// Panic-message prefix of a sweep that exhausted its read-retry budget
+/// (or hit a non-retryable source error). The [`MatVecOps`] signatures
+/// are infallible by design, so the sweep panics with context; the
+/// coordinator's panic isolation recognizes this prefix and maps it
+/// back to a typed [`Error::Io`] carrying the attempt count.
+pub(crate) const SOURCE_IO_PANIC: &str = "matrix source failed reading rows";
 
 /// A matrix exposed as on-demand row blocks.
 ///
@@ -129,6 +136,21 @@ pub trait MatrixSource: Send + Sync + fmt::Debug {
     fn cache_key(&self) -> Option<Vec<u8>> {
         None
     }
+
+    /// Canonical bytes identifying the matrix for *checkpoint/resume*
+    /// tagging, or `None` when not even a claimed identity exists.
+    ///
+    /// Weaker contract than [`MatrixSource::cache_key`] (which must
+    /// prove content stability): a checkpoint key only needs to tell
+    /// *different jobs* apart, because a resumed factorization re-reads
+    /// the source anyway — a wrong cache hit silently serves stale
+    /// factors, while a checkpoint under a mutated source is operator
+    /// error with a visible (failed/garbage) outcome. Defaults to the
+    /// cache key; sources with a stable *claimed* identity but
+    /// unprovable content (e.g. a file path) override this one.
+    fn checkpoint_key(&self) -> Option<Vec<u8>> {
+        self.cache_key()
+    }
 }
 
 impl<'a, S: MatrixSource + ?Sized> MatrixSource for &'a S {
@@ -142,6 +164,10 @@ impl<'a, S: MatrixSource + ?Sized> MatrixSource for &'a S {
 
     fn cache_key(&self) -> Option<Vec<u8>> {
         (**self).cache_key()
+    }
+
+    fn checkpoint_key(&self) -> Option<Vec<u8>> {
+        (**self).checkpoint_key()
     }
 }
 
@@ -160,6 +186,10 @@ impl MatrixSource for SharedSource {
 
     fn cache_key(&self) -> Option<Vec<u8>> {
         (**self).cache_key()
+    }
+
+    fn checkpoint_key(&self) -> Option<Vec<u8>> {
+        (**self).checkpoint_key()
     }
 }
 
@@ -248,6 +278,30 @@ impl MatrixSource for CsrRowSource {
             }
         }
         Ok(())
+    }
+
+    fn cache_key(&self) -> Option<Vec<u8>> {
+        // The matrix is resident, so its content *is* provable from the
+        // handle: serialize shape + per-row (index, bits) structure,
+        // mirroring the cache layer's canonical sparse encoding. Makes
+        // streamed-CSR jobs cacheable and checkpointable.
+        let (m, n) = self.shape();
+        let mut key = Vec::with_capacity(32);
+        key.push(b'C');
+        key.extend_from_slice(&(m as u64).to_le_bytes());
+        key.extend_from_slice(&(n as u64).to_le_bytes());
+        for i in 0..m {
+            let mut len: u64 = 0;
+            let start = key.len();
+            key.extend_from_slice(&0u64.to_le_bytes()); // patched below
+            for (j, v) in self.matrix.row_iter(i) {
+                key.extend_from_slice(&(j as u64).to_le_bytes());
+                key.extend_from_slice(&v.to_bits().to_le_bytes());
+                len += 1;
+            }
+            key[start..start + 8].copy_from_slice(&len.to_le_bytes());
+        }
+        Some(key)
     }
 }
 
@@ -402,8 +456,24 @@ impl FileWriter {
             self.rows,
             self.written_rows
         );
-        for &x in data {
+        // Fail-point: may error, delay, or truncate (torn write). A
+        // truncated append writes a prefix and then reports the short
+        // write, leaving the file detectably incomplete — exactly what
+        // the checkpoint layer's temp-then-rename protocol must survive.
+        let take = faults::write_len("stream.write", data.len())?;
+        for &x in &data[..take] {
             self.out.write_all(&x.to_le_bytes())?;
+        }
+        if take < data.len() {
+            self.out.flush()?;
+            return Err(Error::Io(std::io::Error::new(
+                std::io::ErrorKind::WriteZero,
+                format!(
+                    "short write to {}: {take} of {} values",
+                    self.path.display(),
+                    data.len()
+                ),
+            )));
         }
         self.written_rows += nrows;
         Ok(())
@@ -418,6 +488,7 @@ impl FileWriter {
             self.written_rows,
             self.rows
         );
+        faults::check("stream.write")?;
         self.out.flush()?;
         let path = self.path.clone();
         drop(self);
@@ -526,6 +597,7 @@ impl MatrixSource for FileSource {
 
     fn read_rows(&self, row0: usize, nrows: usize, out: &mut [f64]) -> Result<()> {
         check_block_bounds(self.shape(), row0, nrows, out.len());
+        faults::check("stream.read")?;
         let nbytes = out.len() * 8;
         let mut bytes = vec![0u8; nbytes];
         // Pop an idle handle (or open a private one); IO happens with no
@@ -548,6 +620,20 @@ impl MatrixSource for FileSource {
             *x = f64::from_le_bytes(chunk.try_into().unwrap());
         }
         Ok(())
+    }
+
+    fn checkpoint_key(&self) -> Option<Vec<u8>> {
+        // No cache_key — the file's bytes can change between jobs, so
+        // content can't be proven stable. But (path, shape) is a stable
+        // *claimed* identity, exactly what checkpoint tagging needs:
+        // files are the primary out-of-core input, and a crash-resumed
+        // job re-reads the same path anyway.
+        let mut key = Vec::with_capacity(32);
+        key.push(b'F');
+        key.extend_from_slice(self.path.to_string_lossy().as_bytes());
+        key.extend_from_slice(&(self.rows as u64).to_le_bytes());
+        key.extend_from_slice(&(self.cols as u64).to_le_bytes());
+        Some(key)
     }
 }
 
@@ -609,6 +695,7 @@ pub struct SourceStats {
     passes: AtomicU64,
     blocks: AtomicU64,
     bytes_read: AtomicU64,
+    retries: AtomicU64,
 }
 
 impl SourceStats {
@@ -618,6 +705,7 @@ impl SourceStats {
             passes: self.passes.load(Ordering::Relaxed),
             blocks: self.blocks.load(Ordering::Relaxed),
             bytes_read: self.bytes_read.load(Ordering::Relaxed),
+            retries: self.retries.load(Ordering::Relaxed),
         }
     }
 }
@@ -633,6 +721,10 @@ pub struct SourceStatsSnapshot {
     pub blocks: u64,
     /// Payload bytes read (`rows × cols × 8` per block).
     pub bytes_read: u64,
+    /// Transient read failures retried inside a sweep (under the
+    /// wrapper's [`RetryPolicy`]); each counted attempt eventually
+    /// succeeded or exhausted the budget.
+    pub retries: u64,
 }
 
 // ---------------------------------------------------------------------------
@@ -657,12 +749,16 @@ pub struct Streamed<S> {
     source: S,
     block_rows: usize,
     prefetch: bool,
+    retry: RetryPolicy,
     stats: Arc<SourceStats>,
     cancel: Option<Arc<AtomicBool>>,
 }
 
 impl<S: MatrixSource> Streamed<S> {
-    /// Wrap `source` under the given memory/pipelining policy.
+    /// Wrap `source` under the given memory/pipelining policy. Sweeps
+    /// fail fast on read errors ([`RetryPolicy::none`]) until a policy
+    /// is attached via [`Streamed::with_retry`] (the coordinator does
+    /// so for every submitted job).
     pub fn new(source: S, config: &StreamConfig) -> Streamed<S> {
         let (m, n) = source.shape();
         let block_rows = config.resolve_block_rows(m, n);
@@ -670,6 +766,7 @@ impl<S: MatrixSource> Streamed<S> {
             source,
             block_rows,
             prefetch: config.prefetch,
+            retry: RetryPolicy::none(),
             stats: Arc::new(SourceStats::default()),
             cancel: None,
         }
@@ -683,6 +780,7 @@ impl<S: MatrixSource> Streamed<S> {
             source,
             block_rows: block_rows.clamp(1, m.max(1)),
             prefetch: true,
+            retry: RetryPolicy::none(),
             stats: Arc::new(SourceStats::default()),
             cancel: None,
         }
@@ -692,6 +790,21 @@ impl<S: MatrixSource> Streamed<S> {
     pub fn with_prefetch(mut self, prefetch: bool) -> Streamed<S> {
         self.prefetch = prefetch;
         self
+    }
+
+    /// Builder-style retry policy for transient read errors: a failed
+    /// `read_rows` classified as I/O (not a shape/config bug) is
+    /// retried with backoff inside the sweep, up to the policy's
+    /// budget. Retries never change results — a block is only consumed
+    /// once a read fully succeeds, in the same ascending order.
+    pub fn with_retry(mut self, retry: RetryPolicy) -> Streamed<S> {
+        self.retry = retry;
+        self
+    }
+
+    /// Attach a retry policy in place (coordinator submission path).
+    pub(crate) fn set_retry(&mut self, retry: RetryPolicy) {
+        self.retry = retry;
     }
 
     /// This wrapper with a fresh, zeroed [`SourceStats`] handle (same
@@ -707,6 +820,7 @@ impl<S: MatrixSource> Streamed<S> {
             source: self.source.clone(),
             block_rows: self.block_rows,
             prefetch: self.prefetch,
+            retry: self.retry,
             stats: Arc::new(SourceStats::default()),
             cancel: None,
         }
@@ -771,12 +885,7 @@ impl<S: MatrixSource> Streamed<S> {
             }
             let nr = self.block_rows.min(m - row0);
             buf.resize(nr * n, 0.0);
-            if let Err(e) = self.source.read_rows(row0, nr, &mut buf) {
-                panic!(
-                    "matrix source failed reading rows {row0}..{} of {m}: {e}",
-                    row0 + nr
-                );
-            }
+            read_block_retrying(&self.source, false, row0, nr, m, &mut buf, self.retry, &self.stats);
             self.stats.blocks.fetch_add(1, Ordering::Relaxed);
             self.stats
                 .bytes_read
@@ -805,7 +914,9 @@ impl<S: MatrixSource> Streamed<S> {
     fn sweep_prefetched(&self, m: usize, n: usize, f: &mut impl FnMut(usize, &Dense)) {
         let block_rows = self.block_rows;
         let source = &self.source;
+        let retry = self.retry;
         {
+            let stats = Arc::clone(&self.stats);
             let (full_tx, full_rx) = mpsc::sync_channel::<(usize, Dense)>(1);
             let (empty_tx, empty_rx) = mpsc::channel::<Vec<f64>>();
             for _ in 0..2 {
@@ -813,7 +924,7 @@ impl<S: MatrixSource> Streamed<S> {
             }
             let task = parallel::with_current_io(|io| {
                 io.spawn_scoped(Box::new(move || {
-                    reader_loop(source, m, n, block_rows, empty_rx, full_tx)
+                    reader_loop(source, m, n, block_rows, retry, &stats, empty_rx, full_tx)
                 }))
             });
             if let Some(task) = task {
@@ -827,13 +938,15 @@ impl<S: MatrixSource> Streamed<S> {
             }
         }
         std::thread::scope(|scope| {
+            let stats = Arc::clone(&self.stats);
             let (full_tx, full_rx) = mpsc::sync_channel::<(usize, Dense)>(1);
             let (empty_tx, empty_rx) = mpsc::channel::<Vec<f64>>();
             for _ in 0..2 {
                 let _ = empty_tx.send(Vec::new());
             }
-            let reader =
-                scope.spawn(move || reader_loop(source, m, n, block_rows, empty_rx, full_tx));
+            let reader = scope.spawn(move || {
+                reader_loop(source, m, n, block_rows, retry, &stats, empty_rx, full_tx)
+            });
             self.consume_blocks(m, n, f, &full_rx, &empty_tx);
             drop(full_rx);
             if let Err(payload) = reader.join() {
@@ -874,12 +987,17 @@ impl<S: MatrixSource> Streamed<S> {
 
 /// The reader half of a prefetched sweep (shared by the io-pool and
 /// scoped-thread paths): fill recycled buffers with consecutive row
-/// blocks and hand them over in ascending order.
+/// blocks and hand them over in ascending order. Transient read
+/// failures retry under `retry` before the loop gives up (panicking
+/// with the [`SOURCE_IO_PANIC`] context, re-raised on the caller).
+#[allow(clippy::too_many_arguments)]
 fn reader_loop<S: MatrixSource>(
     source: &S,
     m: usize,
     n: usize,
     block_rows: usize,
+    retry: RetryPolicy,
+    stats: &SourceStats,
     empty_rx: mpsc::Receiver<Vec<f64>>,
     full_tx: mpsc::SyncSender<(usize, Dense)>,
 ) {
@@ -890,16 +1008,60 @@ fn reader_loop<S: MatrixSource>(
         // allocation for the final read.
         let mut buf = empty_rx.recv().unwrap_or_default();
         buf.resize(nr * n, 0.0);
-        if let Err(e) = source.read_rows(row0, nr, &mut buf) {
-            panic!(
-                "matrix source failed reading rows {row0}..{} of {m}: {e}",
-                row0 + nr
-            );
-        }
+        read_block_retrying(source, true, row0, nr, m, &mut buf, retry, stats);
         if full_tx.send((row0, Dense::from_vec(nr, n, buf))).is_err() {
             return; // consumer stopped; no one wants more blocks
         }
         row0 += nr;
+    }
+}
+
+/// Read one row block, retrying transient (I/O-classified) failures
+/// under `retry` with deterministic backoff. Shape/config failures are
+/// not transient and fail on the first attempt. Exhausting the budget
+/// panics with [`SOURCE_IO_PANIC`] context including the attempt count
+/// — the [`MatVecOps`] signatures are infallible, and the coordinator
+/// maps the marker back to a typed [`Error::Io`].
+#[allow(clippy::too_many_arguments)]
+fn read_block_retrying<S: MatrixSource>(
+    source: &S,
+    prefetched: bool,
+    row0: usize,
+    nr: usize,
+    m: usize,
+    buf: &mut [f64],
+    retry: RetryPolicy,
+    stats: &SourceStats,
+) {
+    let mut attempts: u32 = 0;
+    loop {
+        attempts += 1;
+        // The prefetch pipeline has its own fail-point so chaos runs
+        // can target the background reader specifically.
+        let result = if prefetched {
+            faults::check("stream.prefetch")
+                .map_err(Error::Io)
+                .and_then(|()| source.read_rows(row0, nr, buf))
+        } else {
+            source.read_rows(row0, nr, buf)
+        };
+        match result {
+            Ok(()) => return,
+            Err(e @ Error::Io(_)) if retry.allows(attempts) => {
+                stats.retries.fetch_add(1, Ordering::Relaxed);
+                crate::log_warn!(
+                    "transient read failure on rows {row0}..{} (attempt {attempts}): {e}; retrying",
+                    row0 + nr
+                );
+                // Keyed by block so concurrent sweeps spread out while
+                // a seeded replay reproduces the exact schedule.
+                retry.sleep_backoff(attempts, (row0 as u64) ^ 0x5743_7265_7472_7921);
+            }
+            Err(e) => panic!(
+                "{SOURCE_IO_PANIC} {row0}..{} of {m} after {attempts} attempt(s): {e}",
+                row0 + nr
+            ),
+        }
     }
 }
 
@@ -1286,6 +1448,87 @@ mod tests {
     fn open_rejects_garbage() {
         let path = std::env::temp_dir().join("srsvd_stream_test_garbage.bin");
         std::fs::write(&path, b"definitely not a matrix").unwrap();
+        assert!(FileSource::open(&path).is_err());
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn transient_read_errors_retry_to_success() {
+        let _g = faults::test_lock();
+        let mut rng = Xoshiro256pp::seed_from_u64(21);
+        let x = Dense::gaussian(17, 5, &mut rng);
+        let path = std::env::temp_dir().join("srsvd_stream_test_retry.bin");
+        let src = write_matrix(&path, &x).unwrap();
+        let retry = RetryPolicy {
+            max_attempts: 4,
+            backoff_base_ms: 0,
+            backoff_max_ms: 0,
+            jitter: false,
+        };
+        for prefetch in [false, true] {
+            // Two injected failures, then clean: the retry loop must
+            // absorb both and still rebuild the matrix bit-exactly.
+            faults::arm("stream.read=err:2@1.0").unwrap();
+            let s = Streamed::with_block_rows(&src, 6)
+                .with_prefetch(prefetch)
+                .with_retry(retry);
+            let mut rebuilt = Vec::new();
+            s.sweep(|_, block| rebuilt.extend_from_slice(block.data()));
+            faults::disarm();
+            assert_eq!(rebuilt.len(), 17 * 5, "prefetch={prefetch}");
+            let same = x
+                .data()
+                .iter()
+                .zip(&rebuilt)
+                .all(|(a, b)| a.to_bits() == b.to_bits());
+            assert!(same, "prefetch={prefetch}");
+            assert_eq!(s.stats().retries, 2, "prefetch={prefetch}");
+        }
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn exhausted_retry_budget_panics_with_attempt_count() {
+        let _g = faults::test_lock();
+        let mut rng = Xoshiro256pp::seed_from_u64(22);
+        let x = Dense::gaussian(5, 3, &mut rng);
+        let path = std::env::temp_dir().join("srsvd_stream_test_retry_exhaust.bin");
+        let src = write_matrix(&path, &x).unwrap();
+        faults::arm("stream.read=err@1.0").unwrap();
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            let s = Streamed::with_block_rows(&src, 5)
+                .with_prefetch(false)
+                .with_retry(RetryPolicy {
+                    max_attempts: 3,
+                    backoff_base_ms: 0,
+                    backoff_max_ms: 0,
+                    jitter: false,
+                });
+            s.sweep(|_, _| {});
+        }));
+        faults::disarm();
+        let payload = result.expect_err("sweep must panic once retries exhaust");
+        let msg = payload
+            .downcast_ref::<String>()
+            .cloned()
+            .unwrap_or_default();
+        assert!(
+            msg.contains(SOURCE_IO_PANIC) && msg.contains("3 attempt"),
+            "{msg}"
+        );
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn torn_writes_are_reported_short() {
+        let _g = faults::test_lock();
+        let path = std::env::temp_dir().join("srsvd_stream_test_torn.bin");
+        faults::arm("stream.write=partial_write:1@1.0").unwrap();
+        let mut w = FileWriter::create(&path, 2, 3).unwrap();
+        let err = w.append_rows(&[1.0; 6]).unwrap_err();
+        faults::disarm();
+        assert!(format!("{err}").contains("short write"), "{err}");
+        // The file is truncated, not silently wrong: opening it fails.
         assert!(FileSource::open(&path).is_err());
         let _ = std::fs::remove_file(&path);
     }

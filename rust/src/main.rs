@@ -79,6 +79,50 @@ fn print_root_help() {
     );
 }
 
+/// Declare the resilience options shared by `factorize`, `serve`, and
+/// `route`: the fail-point plan and the typed retry/backoff overrides.
+fn resilience_opts(spec: ArgSpec) -> ArgSpec {
+    spec.opt(
+        "faults",
+        "",
+        "fail-point plan, e.g. stream.read=err:2@0.5;svd.sweep=die_after:3 \
+         (SRSVD_FAULTS env wins; off|none disarms)",
+    )
+    .opt("retry-max-attempts", "0", "total tries per idempotent op (0 = config/default)")
+    .opt("retry-backoff-base-ms", "0", "first retry backoff, ms (0 = config/default)")
+    .opt("retry-backoff-max-ms", "0", "retry backoff ceiling, ms (0 = config/default)")
+}
+
+/// Arm fail-points with the documented precedence: the `--faults` flag
+/// beats `[faults] spec`, and `SRSVD_FAULTS` (applied last, also
+/// re-applied at service bind) beats both — a chaos run can override
+/// any deployment without editing it.
+fn arm_faults(a: &srsvd::cli::Args, raw: &RawConfig) -> Result<()> {
+    match (a.get("faults"), raw.faults_spec()) {
+        ("", None) => {}
+        ("", Some(spec)) => srsvd::util::faults::arm(spec)?,
+        (flag, _) => srsvd::util::faults::arm(flag)?,
+    }
+    srsvd::util::faults::init_from_env()
+}
+
+/// Layer the `--retry-*` CLI overrides onto a config-derived policy.
+fn apply_retry_flags(
+    a: &srsvd::cli::Args,
+    p: &mut srsvd::util::retry::RetryPolicy,
+) -> Result<()> {
+    if a.get_usize("retry-max-attempts")? > 0 {
+        p.max_attempts = a.get_usize("retry-max-attempts")? as u32;
+    }
+    if a.get_u64("retry-backoff-base-ms")? > 0 {
+        p.backoff_base_ms = a.get_u64("retry-backoff-base-ms")?;
+    }
+    if a.get_u64("retry-backoff-max-ms")? > 0 {
+        p.backoff_max_ms = a.get_u64("retry-backoff-max-ms")?;
+    }
+    Ok(())
+}
+
 fn svd_config_from(a: &srsvd::cli::Args) -> Result<SvdConfig> {
     // All three stopping flags funnel through the shared conversion
     // point: empty/zero flags mean "unset" so the defaults and the
@@ -142,12 +186,15 @@ fn cmd_factorize(args: &[String]) -> Result<()> {
         .flag("stream", "generate row blocks on demand (out-of-core; not zipf)")
         .opt("stream-block", "0", "streamed block rows (0 = derive from budget)")
         .opt("stream-budget-mb", "64", "streamed resident-block budget, MiB")
-        .flag("no-prefetch", "disable the double-buffered streamed block prefetch");
+        .flag("no-prefetch", "disable the double-buffered streamed block prefetch")
+        .opt("checkpoint-dir", "", "spill per-sweep checkpoints here for crash-safe resume");
+    let spec = resilience_opts(spec);
     let a = spec.parse(args)?;
     if a.help {
         print!("{}", spec.usage("srsvd factorize"));
         return Ok(());
     }
+    arm_faults(&a, &RawConfig::default())?;
     let dist = Distribution::parse(a.get("dist"))
         .ok_or_else(|| srsvd::util::Error::Invalid(format!("unknown dist {:?}", a.get("dist"))))?;
     let (m, n) = (a.get_usize("m")?, a.get_usize("n")?);
@@ -196,6 +243,10 @@ fn cmd_factorize(args: &[String]) -> Result<()> {
     if a.get_usize("threads")? > 0 {
         svc.pool_threads = Some(a.get_usize("threads")?);
     }
+    if !a.get("checkpoint-dir").is_empty() {
+        svc.checkpoint_dir = Some(std::path::PathBuf::from(a.get("checkpoint-dir")));
+    }
+    apply_retry_flags(&a, &mut svc.retry)?;
     let coord = Coordinator::start(svc)?;
     let r = coord.submit_blocking(job)?;
     let out = r.outcome?;
@@ -230,7 +281,15 @@ fn cmd_serve(args: &[String]) -> Result<()> {
     .opt("io-threads", "0", "blocking-io pool threads (0 = config / SRSVD_IO_THREADS)")
     .opt("config", "", "optional srsvd.conf path")
     .opt("seed", "0", "rng seed")
-    .flag("native-only", "disable the artifact engine");
+    .flag("native-only", "disable the artifact engine")
+    .opt("checkpoint-dir", "", "spill per-sweep checkpoints here for crash-safe resume")
+    .opt(
+        "journal-dir",
+        "",
+        "journal accepted-but-unfinished job specs here (defaults to \
+         <checkpoint-dir>/journal when a checkpoint dir is set; off|none disables)",
+    );
+    let spec = resilience_opts(spec);
     let a = spec.parse(args)?;
     if a.help {
         print!("{}", spec.usage("srsvd serve"));
@@ -241,6 +300,7 @@ fn cmd_serve(args: &[String]) -> Result<()> {
     } else {
         RawConfig::load(std::path::Path::new(a.get("config")))?
     };
+    arm_faults(&a, &raw)?;
     // `[parallel] simd` is a process-wide override (like SRSVD_SIMD):
     // apply it before any kernel dispatch happens.
     if let Some(on) = raw.parallel_simd()? {
@@ -260,6 +320,10 @@ fn cmd_serve(args: &[String]) -> Result<()> {
     if a.has_flag("native-only") {
         cfg.artifact_dir = None;
     }
+    if !a.get("checkpoint-dir").is_empty() {
+        cfg.checkpoint_dir = Some(std::path::PathBuf::from(a.get("checkpoint-dir")));
+    }
+    apply_retry_flags(&a, &mut cfg.retry)?;
 
     if !a.get("listen").is_empty() {
         return serve_http(&a, raw, cfg);
@@ -319,6 +383,18 @@ fn serve_http(a: &srsvd::cli::Args, raw: RawConfig, cfg: CoordinatorConfig) -> R
     if a.get_usize("cache-entries")? > 0 {
         scfg.cache_entries = a.get_usize("cache-entries")?;
     }
+    match a.get("journal-dir") {
+        "" => {}
+        "off" | "none" => scfg.journal_dir = None,
+        dir => scfg.journal_dir = Some(std::path::PathBuf::from(dir)),
+    }
+    // A deployment that checkpoints sweeps almost certainly wants its
+    // accepted-job journal too: default it next to the checkpoints.
+    if scfg.journal_dir.is_none() && a.get("journal-dir").is_empty() {
+        if let Some(ckpt) = &cfg.checkpoint_dir {
+            scfg.journal_dir = Some(ckpt.join("journal"));
+        }
+    }
     let stream_defaults = raw.stream()?;
     let coord = std::sync::Arc::new(Coordinator::start(cfg)?);
     let server = Server::bind(coord, &scfg, stream_defaults)?;
@@ -355,6 +431,7 @@ fn cmd_route(args: &[String]) -> Result<()> {
     .opt("probe-timeout-ms", "0", "health-probe io bound, ms (0 = config/default)")
     .opt("unhealthy-after", "0", "consecutive probe failures before mark-down (0 = config)")
     .opt("config", "", "optional srsvd.conf path");
+    let spec = resilience_opts(spec);
     let a = spec.parse(args)?;
     if a.help {
         print!("{}", spec.usage("srsvd route"));
@@ -365,6 +442,7 @@ fn cmd_route(args: &[String]) -> Result<()> {
     } else {
         RawConfig::load(std::path::Path::new(a.get("config")))?
     };
+    arm_faults(&a, &raw)?;
     let mut cfg = raw.router()?;
     if !a.get("listen").is_empty() {
         cfg.listen = a.get("listen").to_string();
@@ -393,6 +471,7 @@ fn cmd_route(args: &[String]) -> Result<()> {
     if a.get_usize("unhealthy-after")? > 0 {
         cfg.unhealthy_after = a.get_usize("unhealthy-after")? as u32;
     }
+    apply_retry_flags(&a, &mut cfg.retry)?;
     let router = Router::bind(&cfg, raw.stream()?)?;
     println!("srsvd router listening on http://{}", router.local_addr());
     println!("  replicas: {}", cfg.replicas.join(", "));

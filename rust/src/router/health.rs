@@ -67,10 +67,13 @@ impl ProbeSchedule {
 /// the replica unhealthy once the streak reaches `unhealthy_after`.
 pub(crate) fn probe_round(shared: &RouterShared) {
     for replica in &shared.replicas {
-        let probed = Client::with_timeouts(
+        // Probes stay fail-fast (no retry policy): a probe *is* the
+        // failure detector, and retries would blur mark-down timing.
+        let probed = Client::with_policy(
             &replica.addr,
             Some(shared.connect_timeout),
             shared.probe_timeout,
+            crate::util::retry::RetryPolicy::none(),
         )
         .and_then(|mut c| c.health());
         match probed {

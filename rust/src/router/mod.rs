@@ -29,8 +29,10 @@
 //! are provably pre-acceptance, so trying the next replica cannot
 //! double-run the job; a transport failure *after* the request was
 //! written is ambiguous and surfaces as `502 Bad Gateway` instead of a
-//! blind resubmit. Idempotent routed `GET`s get one retry on a fresh
-//! connection; `POST`s never do.
+//! blind resubmit. Idempotent routed `GET`s retry on fresh connections
+//! under the `[retry]` policy ([`RouterConfig::retry`]); `POST`s never
+//! do. When every candidate is dead or saturated, the `503` carries a
+//! `Retry-After` hint sized to the probe interval.
 //!
 //! ## Job ids
 //!
@@ -111,6 +113,11 @@ pub struct RouterConfig {
     /// Consecutive probe failures before a replica is marked
     /// unhealthy (one success re-admits it).
     pub unhealthy_after: u32,
+    /// Retry/backoff policy for proxied idempotent `GET`s toward a
+    /// job's owning replica (the `[retry]` config section). Health
+    /// probes deliberately stay fail-fast — a probe *is* the failure
+    /// detector.
+    pub retry: crate::util::retry::RetryPolicy,
 }
 
 impl Default for RouterConfig {
@@ -125,6 +132,7 @@ impl Default for RouterConfig {
             probe_interval_ms: 1_000,
             probe_timeout_ms: 500,
             unhealthy_after: 3,
+            retry: crate::util::retry::RetryPolicy::default(),
         }
     }
 }
@@ -152,6 +160,9 @@ pub(crate) struct RouterShared {
     pub(crate) unhealthy_after: u32,
     pub(crate) clock: Arc<dyn Clock>,
     stream_defaults: StreamConfig,
+    /// Retry policy for proxied idempotent `GET`s (see
+    /// [`RouterConfig::retry`]).
+    retry: crate::util::retry::RetryPolicy,
 }
 
 impl RouterShared {
@@ -197,6 +208,9 @@ impl Router {
         clock: Arc<dyn Clock>,
     ) -> Result<Router> {
         crate::util::logging::init();
+        // Chaos entry point: arm fail-points from SRSVD_FAULTS (no-op
+        // when unset, hard error on a malformed spec).
+        crate::util::faults::init_from_env()?;
         crate::ensure!(!config.replicas.is_empty(), "router needs at least one replica");
         crate::ensure!(
             config.replicas.len() <= replica::MAX_REPLICAS,
@@ -231,6 +245,7 @@ impl Router {
             unhealthy_after: config.unhealthy_after.max(1),
             clock,
             stream_defaults,
+            retry: config.retry,
         });
 
         let workers = config.workers.max(1);
@@ -427,14 +442,21 @@ fn readyz(shared: &RouterShared) -> Response {
     let healthy = shared.healthy_count();
     let status = if healthy == 0 { 503 } else { 200 };
     let state = if healthy == 0 { "no healthy replicas" } else { "ready" };
-    Response::json(
+    let response = Response::json(
         status,
         &Json::obj(vec![
             ("status", Json::str(state)),
             ("replicas_healthy", Json::num(healthy as f64)),
             ("replicas", Json::num(shared.replicas.len() as f64)),
         ]),
-    )
+    );
+    if status == 503 {
+        // The soonest a dead fleet can change state is the next probe
+        // round; hint clients to come back then.
+        response.with_retry_after((shared.probe_interval_ms / 1000).max(1))
+    } else {
+        response
+    }
 }
 
 /// `GET /metrics`: router-local counters plus each replica's own
@@ -443,10 +465,11 @@ fn readyz(shared: &RouterShared) -> Response {
 fn aggregate_metrics(shared: &RouterShared) -> Response {
     let mut entries = Vec::with_capacity(shared.replicas.len());
     for r in &shared.replicas {
-        let snapshot = Client::with_timeouts(
+        let snapshot = Client::with_policy(
             &r.addr,
             Some(shared.connect_timeout),
             shared.probe_timeout,
+            crate::util::retry::RetryPolicy::none(),
         )
         .and_then(|mut c| c.metrics())
         .unwrap_or(Json::Null);
@@ -507,19 +530,31 @@ fn forward_submit(shared: &RouterShared, body: &[u8], order: &[usize]) -> Respon
             // owner was dead, marked down, or saturated.
             shared.metrics.failovers.fetch_add(1, Ordering::Relaxed);
         }
-        let mut client =
-            match Client::with_timeouts(&r.addr, Some(shared.connect_timeout), shared.upstream_timeout) {
-                Ok(c) => c,
-                Err(e) => {
-                    // The replica never saw the submit; moving on is
-                    // safe, and the failed connect doubles as a probe.
-                    if r.record_failure(shared.unhealthy_after) {
-                        crate::log_warn!("router: replica {} marked unhealthy (connect failed)", r.addr);
-                    }
-                    last = format!("{e}");
-                    continue;
+        // The failover loop *is* the router's retry mechanism, so the
+        // inner client stays single-shot; a `router.connect` fail-point
+        // injects dead-replica behaviour without needing a dead socket.
+        let connected = crate::util::faults::check("router.connect")
+            .map_err(Error::from)
+            .and_then(|()| {
+                Client::with_policy(
+                    &r.addr,
+                    Some(shared.connect_timeout),
+                    shared.upstream_timeout,
+                    crate::util::retry::RetryPolicy::none(),
+                )
+            });
+        let mut client = match connected {
+            Ok(c) => c,
+            Err(e) => {
+                // The replica never saw the submit; moving on is
+                // safe, and the failed connect doubles as a probe.
+                if r.record_failure(shared.unhealthy_after) {
+                    crate::log_warn!("router: replica {} marked unhealthy (connect failed)", r.addr);
                 }
-            };
+                last = format!("{e}");
+                continue;
+            }
+        };
         match client.request_raw("POST", "/v1/jobs", Some(body)) {
             // A 503 is a definitive "not accepted": shed to the next
             // candidate. The replica answered, so it is alive.
@@ -538,7 +573,9 @@ fn forward_submit(shared: &RouterShared, body: &[u8], order: &[usize]) -> Respon
             Err(e) => return Response::error(502, &format!("replica {}: {e}", r.addr)),
         }
     }
-    Response::error(503, &last)
+    // Every candidate was dead or saturated; the soonest that changes
+    // is the next health-probe round.
+    Response::error(503, &last).with_retry_after((shared.probe_interval_ms / 1000).max(1))
 }
 
 /// Tag the id inside a replica's `202` body with the replica index so
@@ -564,8 +601,9 @@ fn tag_submit_response(status: u16, bytes: Vec<u8>, index: usize, addr: &str) ->
 }
 
 /// `GET`/`DELETE /v1/jobs/{id}`: decode the replica tag and proxy to
-/// the owner. Idempotent `GET`s get one retry on a fresh connection;
-/// the job has exactly one owner, so there is no failover here — an
+/// the owner. Idempotent `GET`s retry on fresh connections under the
+/// router's [`RetryPolicy`](crate::util::retry::RetryPolicy); the job
+/// has exactly one owner, so there is no failover here — an
 /// unreachable owner is `502`.
 fn proxy_job(shared: &RouterShared, req: &Request) -> Response {
     let tail = req.path.strip_prefix("/v1/jobs/").expect("caller matched the prefix");
@@ -587,11 +625,18 @@ fn proxy_job(shared: &RouterShared, req: &Request) -> Response {
     if let Some(wait_s) = requested_wait_s(&req.query) {
         io_timeout = io_timeout.max(Duration::from_secs_f64(wait_s) + Duration::from_secs(15));
     }
+    // The router owns the retry loop, so the inner client is
+    // single-shot; backoff is seeded by the job id for determinism.
     let mut attempt = 0;
     loop {
         attempt += 1;
-        let outcome = Client::with_timeouts(&r.addr, Some(shared.connect_timeout), io_timeout)
-            .and_then(|mut c| c.request_raw(&req.method, &path, None));
+        let outcome = Client::with_policy(
+            &r.addr,
+            Some(shared.connect_timeout),
+            io_timeout,
+            crate::util::retry::RetryPolicy::none(),
+        )
+        .and_then(|mut c| c.request_raw(&req.method, &path, None));
         match outcome {
             Ok((status, bytes)) => {
                 r.record_success();
@@ -601,8 +646,9 @@ fn proxy_job(shared: &RouterShared, req: &Request) -> Response {
                 return tag_submit_response(status, bytes, tag, &r.addr);
             }
             Err(e) => {
-                if req.method == "GET" && attempt == 1 {
+                if req.method == "GET" && shared.retry.allows(attempt) {
                     shared.metrics.retries.fetch_add(1, Ordering::Relaxed);
+                    shared.retry.sleep_backoff(attempt, routed_id ^ 0x9E37_79B9);
                     continue;
                 }
                 return Response::error(502, &format!("replica {}: {e}", r.addr));

@@ -56,6 +56,10 @@ fn push_u64(out: &mut Vec<u8>, v: u64) {
 /// of the JSON field order a submission arrived with; floats are
 /// encoded by their `f64` bit patterns (no text round-trip).
 pub fn canonical_spec_bytes(spec: &JobSpec) -> Option<Vec<u8>> {
+    canonical_bytes(spec, false)
+}
+
+fn canonical_bytes(spec: &JobSpec, for_checkpoint: bool) -> Option<Vec<u8>> {
     let mut b = Vec::new();
     b.extend_from_slice(b"srsvd-job-v1");
 
@@ -88,7 +92,14 @@ pub fn canonical_spec_bytes(spec: &JobSpec) -> Option<Vec<u8>> {
         // change output bits (the crate's determinism contract).
         MatrixInput::Streamed(s) => {
             b.push(2);
-            let key = s.source().cache_key()?;
+            // Checkpoint tagging accepts the weaker *claimed* identity
+            // (e.g. a file's path + shape) that caching must refuse —
+            // see [`MatrixSource::checkpoint_key`] for the contract.
+            let key = if for_checkpoint {
+                s.source().checkpoint_key()?
+            } else {
+                s.source().cache_key()?
+            };
             push_u64(&mut b, key.len() as u64);
             b.extend_from_slice(&key);
         }
@@ -176,6 +187,15 @@ pub fn spec_hash(spec: &JobSpec) -> Option<u64> {
     canonical_spec_bytes(spec).map(|b| content_hash(&b))
 }
 
+/// The checkpoint tag of a spec: the same canonical encoding as
+/// [`spec_hash`] but keyed by [`MatrixSource::checkpoint_key`] for
+/// streamed inputs, so file-backed jobs — uncacheable by design — still
+/// get a stable identity for crash/resume. `None` means the job cannot
+/// be checkpointed (no identity at all).
+pub fn checkpoint_spec_hash(spec: &JobSpec) -> Option<u64> {
+    canonical_bytes(spec, true).map(|b| content_hash(&b))
+}
+
 struct CacheEntry {
     body: Vec<u8>,
     last_used: u64,
@@ -254,7 +274,7 @@ impl ResultCache {
             return;
         }
         if let Some(d) = &self.dir {
-            if let Err(e) = fs::write(body_path(d, hash), &body) {
+            if let Err(e) = persist_bytes(&body_path(d, hash), "cache.body", &body) {
                 crate::log_warn!("result cache: persist {hash:016x}: {e}");
             }
         }
@@ -298,12 +318,18 @@ impl ResultCache {
             return;
         };
         for row in rows {
-            let Some((hash, last_used)) = parse_manifest_row(row) else {
+            let Some((hash, bytes, last_used)) = parse_manifest_row(row) else {
                 continue;
             };
             let Ok(body) = fs::read(body_path(&d, hash)) else {
                 continue; // body file lost: drop the entry
             };
+            if body.len() as u64 != bytes {
+                // Torn body write (crash or injected fault): the
+                // manifest's declared length is the integrity check.
+                crate::log_warn!("result cache: truncated body {hash:016x} dropped");
+                continue;
+            }
             self.seq = self.seq.max(last_used);
             self.bytes += body.len() as u64;
             self.entries.insert(hash, CacheEntry { body, last_used });
@@ -341,7 +367,7 @@ impl ResultCache {
             ("version", Json::num(MANIFEST_VERSION)),
             ("entries", Json::Arr(rows)),
         ]);
-        if let Err(e) = fs::write(d.join(MANIFEST), manifest.to_string()) {
+        if let Err(e) = persist_bytes(&d.join(MANIFEST), "cache.manifest", manifest.to_string().as_bytes()) {
             crate::log_warn!("result cache: write manifest: {e}");
         }
     }
@@ -351,10 +377,26 @@ fn body_path(dir: &Path, hash: u64) -> PathBuf {
     dir.join(format!("{hash:016x}.json"))
 }
 
-fn parse_manifest_row(row: &Json) -> Option<(u64, u64)> {
+/// Write `bytes` through a fault-injection window: chaos runs truncate
+/// or fail cache persistence here (`cache.body` / `cache.manifest`),
+/// and the loader must treat whatever lands on disk as disposable.
+fn persist_bytes(path: &Path, site: &str, bytes: &[u8]) -> std::io::Result<()> {
+    let take = crate::util::faults::write_len(site, bytes.len())?;
+    fs::write(path, &bytes[..take])?;
+    if take < bytes.len() {
+        return Err(std::io::Error::new(
+            std::io::ErrorKind::WriteZero,
+            format!("short cache write: {take} of {} bytes", bytes.len()),
+        ));
+    }
+    Ok(())
+}
+
+fn parse_manifest_row(row: &Json) -> Option<(u64, u64, u64)> {
     let hash = u64::from_str_radix(row.get("hash").ok()?.as_str().ok()?, 16).ok()?;
+    let bytes = row.get("bytes").ok()?.as_u64().ok()?;
     let last_used = row.get("last_used").ok()?.as_u64().ok()?;
-    Some((hash, last_used))
+    Some((hash, bytes, last_used))
 }
 
 #[cfg(test)]
@@ -468,6 +510,45 @@ mod tests {
         fs::write(dir.join(MANIFEST), "not json{{{").unwrap();
         let broken = ResultCache::new(4, Some(dir.clone()));
         assert!(broken.is_empty());
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn file_sources_are_checkpointable_but_not_cacheable() {
+        let path = std::env::temp_dir().join("srsvd_cache_test_ckpt_key.bin");
+        let mut w = FileWriter::create(&path, 2, 2).unwrap();
+        w.append_rows(&[1.0, 2.0, 3.0, 4.0]).unwrap();
+        let src = w.finish().unwrap();
+        let spec = JobSpec::pca(
+            MatrixInput::streamed(src, &StreamConfig::default()),
+            1,
+            0,
+        );
+        assert_eq!(spec_hash(&spec), None, "content cannot be proven stable");
+        let tag = checkpoint_spec_hash(&spec).expect("claimed identity suffices");
+        // The tag covers the accuracy knobs too.
+        let mut other = spec.clone();
+        other.seed = 99;
+        assert_ne!(checkpoint_spec_hash(&other).unwrap(), tag);
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn torn_body_writes_are_dropped_on_reload() {
+        let _g = crate::util::faults::test_lock();
+        let dir = std::env::temp_dir().join("srsvd_cache_test_torn_body");
+        let _ = fs::remove_dir_all(&dir);
+        {
+            let mut cache = ResultCache::new(4, Some(dir.clone()));
+            cache.insert(20, b"{\"whole\":true}".to_vec());
+            // The next body write is torn mid-file.
+            crate::util::faults::arm("cache.body=partial_write:1@1.0").unwrap();
+            cache.insert(21, b"{\"torn\":true}".to_vec());
+            crate::util::faults::disarm();
+        }
+        let mut back = ResultCache::new(4, Some(dir.clone()));
+        assert_eq!(back.get(20), Some(b"{\"whole\":true}".to_vec()));
+        assert_eq!(back.get(21), None, "torn body must not be served");
         let _ = fs::remove_dir_all(&dir);
     }
 }

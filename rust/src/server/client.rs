@@ -3,15 +3,26 @@
 //! Used by the CLI, the loopback tests (`rust/tests/server.rs`),
 //! `examples/remote_jobs.rs` and `benches/serve_throughput.rs` — no
 //! external HTTP crate exists in the offline environment. One
-//! [`Client`] owns one keep-alive connection; a stale connection
-//! (server idle-limit, restart) is re-established transparently with a
-//! single retry.
+//! [`Client`] owns one keep-alive connection.
+//!
+//! ## Retry semantics
+//!
+//! All transport retries run under a typed [`RetryPolicy`]
+//! ([`Client::with_retry`]): connect attempts and idempotent `GET`s
+//! back off exponentially up to `max_attempts`. A failed `POST` is
+//! **never** resubmitted after the connection carried it — the server
+//! may have accepted the job before the transport died, and a blind
+//! resubmit would run it twice. A `503` **is** safely retryable (the
+//! server rejected the job *before* accepting it); [`Client::submit`]
+//! honors the server's `Retry-After` hint, capped by the policy's
+//! `backoff_max_ms`.
 
 use std::io::{Read, Write};
 use std::net::{TcpStream, ToSocketAddrs};
 use std::time::Duration;
 
 use crate::util::json::Json;
+use crate::util::retry::RetryPolicy;
 use crate::util::{Error, Result};
 
 use super::http::read_line_raw;
@@ -55,6 +66,12 @@ pub struct Client {
     connect_timeout: Option<Duration>,
     /// Largest response body the client will buffer.
     max_body_bytes: usize,
+    /// Transport retry/backoff policy (connects, idempotent `GET`s,
+    /// pre-acceptance `503`s).
+    retry: RetryPolicy,
+    /// `Retry-After` seconds from the most recent response carrying the
+    /// header (the server's `503` backoff hint).
+    last_retry_after: Option<u64>,
 }
 
 impl Client {
@@ -79,6 +96,18 @@ impl Client {
         connect_timeout: Option<Duration>,
         timeout: Duration,
     ) -> Result<Client> {
+        Client::with_policy(addr, connect_timeout, timeout, RetryPolicy::default())
+    }
+
+    /// [`Client::with_timeouts`] plus an explicit [`RetryPolicy`],
+    /// applied from the very first (eager) connect attempt —
+    /// [`RetryPolicy::none`] gives a fail-fast probe client.
+    pub fn with_policy(
+        addr: &str,
+        connect_timeout: Option<Duration>,
+        timeout: Duration,
+        retry: RetryPolicy,
+    ) -> Result<Client> {
         let mut c = Client {
             addr: addr.to_string(),
             stream: None,
@@ -86,9 +115,32 @@ impl Client {
             timeout,
             connect_timeout,
             max_body_bytes: 1 << 30,
+            retry,
+            last_retry_after: None,
         };
         c.reconnect()?;
         Ok(c)
+    }
+
+    /// Replace the transport retry/backoff policy
+    /// ([`RetryPolicy::none`] restores fail-fast single attempts).
+    pub fn with_retry(mut self, retry: RetryPolicy) -> Client {
+        self.retry = retry;
+        self
+    }
+
+    /// `Retry-After` seconds from the most recent response that carried
+    /// the header, if any (`503` backoff hint).
+    pub fn last_retry_after(&self) -> Option<u64> {
+        self.last_retry_after
+    }
+
+    /// Deterministic per-destination jitter seed: two clients hammering
+    /// different replicas must not back off in lockstep.
+    fn retry_seed(&self) -> u64 {
+        self.addr
+            .bytes()
+            .fold(0xA5A5_5A5A_u64, |h, b| h.wrapping_mul(31).wrapping_add(b as u64))
     }
 
     fn connect_stream(&self) -> std::io::Result<TcpStream> {
@@ -112,28 +164,46 @@ impl Client {
         }
     }
 
+    /// (Re)establish the connection under the retry policy: each failed
+    /// attempt backs off exponentially, up to `max_attempts` total. The
+    /// `client.connect` fail-point injects connect failures here.
     fn reconnect(&mut self) -> Result<()> {
-        let stream = self
-            .connect_stream()
-            .map_err(|e| Error::Service(format!("connect {}: {e}", self.addr)))?;
-        stream
-            .set_read_timeout(Some(self.timeout))
-            .and_then(|()| stream.set_write_timeout(Some(self.timeout)))
-            .map_err(|e| Error::Service(format!("socket timeout: {e}")))?;
-        let _ = stream.set_nodelay(true);
-        self.stream = Some(stream);
-        self.served_on_stream = 0;
-        Ok(())
+        let mut attempt: u32 = 0;
+        loop {
+            let connected = crate::util::faults::check("client.connect")
+                .and_then(|()| self.connect_stream());
+            match connected {
+                Ok(stream) => {
+                    stream
+                        .set_read_timeout(Some(self.timeout))
+                        .and_then(|()| stream.set_write_timeout(Some(self.timeout)))
+                        .map_err(|e| Error::Service(format!("socket timeout: {e}")))?;
+                    let _ = stream.set_nodelay(true);
+                    self.stream = Some(stream);
+                    self.served_on_stream = 0;
+                    return Ok(());
+                }
+                Err(e) => {
+                    attempt += 1;
+                    if !self.retry.allows(attempt) {
+                        return Err(Error::Service(format!(
+                            "connect {} (attempt {attempt}): {e}",
+                            self.addr
+                        )));
+                    }
+                    self.retry.sleep_backoff(attempt, self.retry_seed());
+                }
+            }
+        }
     }
 
     /// One request/response exchange; returns `(status, parsed body)`.
     ///
-    /// Retry policy: only an idempotent (`GET`) request is retried,
-    /// and only when the failure hit a keep-alive connection that had
-    /// already served traffic (the server may have idle-closed it). A
-    /// failed `POST` is **never** resubmitted automatically — the
-    /// server may have accepted the job before the connection died,
-    /// and a blind resubmit would run it twice; the caller decides.
+    /// Retry policy: only an idempotent (`GET`) request is retried
+    /// (under the typed [`RetryPolicy`], with backoff). A failed `POST`
+    /// is **never** resubmitted automatically — the server may have
+    /// accepted the job before the connection died, and a blind
+    /// resubmit would run it twice; the caller decides.
     pub fn request(&mut self, method: &str, path: &str, body: Option<&Json>) -> Result<(u16, Json)> {
         let payload = body.map(|j| j.to_string());
         let (status, bytes) = self.request_raw(method, path, payload.as_deref().map(str::as_bytes))?;
@@ -159,15 +229,19 @@ impl Client {
         path: &str,
         body: Option<&[u8]>,
     ) -> Result<(u16, Vec<u8>)> {
-        let maybe_stale = self.stream.is_some() && self.served_on_stream > 0;
-        match self.request_once(method, path, body) {
-            Ok(r) => Ok(r),
-            Err(e) => {
-                self.stream = None;
-                if maybe_stale && method == "GET" {
-                    self.request_once(method, path, body)
-                } else {
-                    Err(e)
+        let mut attempt: u32 = 0;
+        loop {
+            match self.request_once(method, path, body) {
+                Ok(r) => return Ok(r),
+                Err(e) => {
+                    self.stream = None;
+                    attempt += 1;
+                    // Non-idempotent verbs fail fast: the request may
+                    // have been acted on before the transport died.
+                    if method != "GET" || !self.retry.allows(attempt) {
+                        return Err(e);
+                    }
+                    self.retry.sleep_backoff(attempt, self.retry_seed());
                 }
             }
         }
@@ -196,8 +270,9 @@ impl Client {
         stream.write_all(payload).map_err(io)?;
         stream.flush().map_err(io)?;
 
-        let (status, body, keep) = read_response(stream, max_body).map_err(io)?;
+        let (status, body, keep, retry_after) = read_response(stream, max_body).map_err(io)?;
         self.served_on_stream += 1;
+        self.last_retry_after = retry_after;
         if !keep {
             self.stream = None;
         }
@@ -220,8 +295,10 @@ impl Client {
         Ok(body)
     }
 
-    /// `POST /v1/jobs`. Queue-full surfaces as an `Err` whose message
-    /// carries `http 503` (the server's backpressure signal).
+    /// `POST /v1/jobs`, single-shot. Queue-full surfaces as an `Err`
+    /// whose message carries `http 503` (the server's backpressure
+    /// signal) — callers that want automatic backoff use
+    /// [`Client::submit_retrying`].
     pub fn submit(&mut self, job: &JobRequest) -> Result<SubmitOutcome> {
         let (status, body) = self.request("POST", "/v1/jobs", Some(&job.to_json()))?;
         match status {
@@ -231,6 +308,51 @@ impl Client {
                 "submit: http {status}: {}",
                 error_text(&body)
             ))),
+        }
+    }
+
+    /// [`Client::submit`] that rides out backpressure: a `503` is
+    /// retried under the policy — it happens *before* the server
+    /// accepts the job, so resubmission cannot double-run it — sleeping
+    /// the server's `Retry-After` hint capped by the policy's
+    /// `backoff_max_ms` (blind exponential backoff when no hint came).
+    /// Transport failures still follow [`Client::request`]'s rule:
+    /// a `POST` that may have been accepted is never resent.
+    pub fn submit_retrying(&mut self, job: &JobRequest) -> Result<SubmitOutcome> {
+        let body = job.to_json();
+        let mut attempt: u32 = 0;
+        loop {
+            let (status, resp) = self.request("POST", "/v1/jobs", Some(&body))?;
+            match status {
+                200 => return Ok(SubmitOutcome::Done(parse_result(&resp)?)),
+                202 => return Ok(SubmitOutcome::Queued(resp.get("id")?.as_u64()?)),
+                503 => {
+                    attempt += 1;
+                    if !self.retry.allows(attempt) {
+                        return Err(Error::Service(format!(
+                            "submit: http 503: {}",
+                            error_text(&resp)
+                        )));
+                    }
+                    // Prefer the server's hint over blind backoff; the
+                    // policy's ceiling keeps a hostile hint bounded.
+                    let ms = match self.last_retry_after {
+                        Some(secs) => {
+                            secs.saturating_mul(1000).min(self.retry.backoff_max_ms)
+                        }
+                        None => self.retry.backoff_ms(attempt, self.retry_seed()),
+                    };
+                    if ms > 0 {
+                        std::thread::sleep(Duration::from_millis(ms));
+                    }
+                }
+                _ => {
+                    return Err(Error::Service(format!(
+                        "submit: http {status}: {}",
+                        error_text(&resp)
+                    )))
+                }
+            }
         }
     }
 
@@ -301,11 +423,11 @@ fn error_text(body: &Json) -> String {
         .unwrap_or_else(|_| body.to_string())
 }
 
-/// Parse one HTTP response: `(status, body, keep_alive)`.
+/// Parse one HTTP response: `(status, body, keep_alive, retry_after)`.
 fn read_response(
     stream: &mut TcpStream,
     max_body: usize,
-) -> std::io::Result<(u16, Vec<u8>, bool)> {
+) -> std::io::Result<(u16, Vec<u8>, bool, Option<u64>)> {
     let bad = |msg: &str| std::io::Error::new(std::io::ErrorKind::InvalidData, msg.to_string());
     let status_line = read_line_raw(stream, MAX_LINE, None)?
         .ok_or_else(|| bad("connection closed before the status line"))?;
@@ -322,6 +444,7 @@ fn read_response(
 
     let mut content_length: Option<usize> = None;
     let mut keep_alive = true;
+    let mut retry_after: Option<u64> = None;
     loop {
         let line = read_line_raw(stream, MAX_LINE, None)?.ok_or_else(|| bad("eof in headers"))?;
         if line.is_empty() {
@@ -337,6 +460,10 @@ fn read_response(
             content_length = Some(value.parse().map_err(|_| bad("bad content-length"))?);
         } else if name == "connection" && value.eq_ignore_ascii_case("close") {
             keep_alive = false;
+        } else if name == "retry-after" {
+            // Lenient: a non-numeric hint (HTTP-date form) is ignored
+            // rather than failing the exchange.
+            retry_after = value.parse().ok();
         }
     }
     let len = content_length.ok_or_else(|| bad("response without content-length"))?;
@@ -345,5 +472,5 @@ fn read_response(
     }
     let mut body = vec![0u8; len];
     stream.read_exact(&mut body)?;
-    Ok((status, body, keep_alive))
+    Ok((status, body, keep_alive, retry_after))
 }

@@ -258,6 +258,11 @@ pub fn read_request<R: Read>(
     limits: &HttpLimits,
     deadline: Option<Instant>,
 ) -> Result<ReadOutcome, HttpError> {
+    // Fail-point on the request read path: an injected error models a
+    // connection dying mid-request (dropped, not answered).
+    if let Err(e) = crate::util::faults::check("http.read") {
+        return Err(HttpError::Drop(format!("{e}")));
+    }
     let mut bytes_read: u64 = 0;
 
     // Request line.
@@ -392,6 +397,11 @@ pub struct Response {
     /// a retried `GET /v1/jobs/{id}` can claim it again instead of the
     /// result being dropped.
     pub repark_id: Option<u64>,
+    /// When set, a `Retry-After: <secs>` header is emitted — the
+    /// server's backoff hint on `503` responses, computed from queue
+    /// depth so a saturated replica tells clients *when* to come back
+    /// instead of letting them hammer it.
+    pub retry_after: Option<u64>,
 }
 
 impl Response {
@@ -408,6 +418,7 @@ impl Response {
             body,
             content_type: "application/json",
             repark_id: None,
+            retry_after: None,
         }
     }
 
@@ -423,16 +434,40 @@ impl Response {
         self
     }
 
+    /// Attach a `Retry-After` hint, seconds (see
+    /// [`Response::retry_after`]).
+    pub fn with_retry_after(mut self, secs: u64) -> Response {
+        self.retry_after = Some(secs);
+        self
+    }
+
     /// Serialize status line, headers and body; returns bytes written.
     pub fn write_to<W: Write>(&self, w: &mut W, keep_alive: bool) -> std::io::Result<u64> {
+        let retry = match self.retry_after {
+            Some(secs) => format!("retry-after: {secs}\r\n"),
+            None => String::new(),
+        };
         let head = format!(
-            "HTTP/1.1 {} {}\r\ncontent-type: {}\r\ncontent-length: {}\r\nconnection: {}\r\n\r\n",
+            "HTTP/1.1 {} {}\r\ncontent-type: {}\r\ncontent-length: {}\r\n{}connection: {}\r\n\r\n",
             self.status,
             reason(self.status),
             self.content_type,
             self.body.len(),
+            retry,
             if keep_alive { "keep-alive" } else { "close" },
         );
+        // Torn-write fail-point ("http.write"): a truncated head makes
+        // the peer's parse fail, exercising the re-park path for
+        // claimed results.
+        let cap = crate::util::faults::write_len("http.write", head.len())?;
+        if cap < head.len() {
+            w.write_all(&head.as_bytes()[..cap])?;
+            w.flush()?;
+            return Err(std::io::Error::new(
+                ErrorKind::WriteZero,
+                "injected partial response write",
+            ));
+        }
         w.write_all(head.as_bytes())?;
         w.write_all(&self.body)?;
         w.flush()?;
@@ -688,5 +723,20 @@ mod tests {
         let text = String::from_utf8(out).unwrap();
         assert!(text.starts_with("HTTP/1.1 503 Service Unavailable\r\n"), "{text}");
         assert!(text.contains("connection: close"), "{text}");
+        assert!(!text.contains("retry-after"), "{text}");
+    }
+
+    #[test]
+    fn retry_after_header_renders_when_set() {
+        let mut out = Vec::new();
+        Response::error(503, "queue full")
+            .with_retry_after(7)
+            .write_to(&mut out, false)
+            .unwrap();
+        let text = String::from_utf8(out).unwrap();
+        assert!(text.contains("retry-after: 7\r\n"), "{text}");
+        // The header lands before the blank line separating the body.
+        let head_end = text.find("\r\n\r\n").unwrap();
+        assert!(text.find("retry-after").unwrap() < head_end);
     }
 }

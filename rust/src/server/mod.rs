@@ -115,6 +115,11 @@ pub struct ServerConfig {
     /// Capacity of the completed-result cache, in entries
     /// (`[server] cache_entries`); `0` disables caching.
     pub cache_entries: usize,
+    /// Directory journaling accepted-but-undelivered submit bodies.
+    /// On bind, surviving entries are re-submitted through the
+    /// coordinator — which, under `[svd] checkpoint_dir`, resumes each
+    /// from its last completed sweep. `None` disables journaling.
+    pub journal_dir: Option<std::path::PathBuf>,
 }
 
 impl Default for ServerConfig {
@@ -127,6 +132,7 @@ impl Default for ServerConfig {
             result_ttl_s: 600,
             cache_dir: None,
             cache_entries: 256,
+            journal_dir: None,
         }
     }
 }
@@ -201,6 +207,9 @@ struct Shared {
     ttl_ms: u64,
     clock: Arc<dyn Clock>,
     stream_defaults: StreamConfig,
+    /// Crash journal for accepted-but-undelivered submits (see
+    /// [`ServerConfig::journal_dir`]).
+    journal_dir: Option<std::path::PathBuf>,
 }
 
 /// A running HTTP server bound to a socket.
@@ -241,6 +250,11 @@ impl Server {
         clock: Arc<dyn Clock>,
     ) -> Result<Server> {
         crate::util::logging::init();
+        // Arm the fail-point registry from SRSVD_FAULTS (no-op when the
+        // variable is unset) so chaos runs need no code changes. A
+        // malformed spec is a hard error: a chaos run silently testing
+        // nothing is worse than a refusal to start.
+        crate::util::faults::init_from_env()?;
         let listener = TcpListener::bind(config.addr.as_str())
             .map_err(|e| Error::Service(format!("bind {}: {e}", config.addr)))?;
         let local_addr = listener
@@ -265,7 +279,12 @@ impl Server {
             ttl_ms: config.result_ttl_s.max(1).saturating_mul(1000),
             clock,
             stream_defaults,
+            journal_dir: config.journal_dir.clone(),
         });
+        // Re-run whatever a previous process accepted but never
+        // delivered — with checkpointing on, each replayed job resumes
+        // from its last completed sweep instead of starting over.
+        replay_journal(&shared);
 
         let workers = config.workers.max(1);
         let (conn_tx, conn_rx) = sync_channel::<TcpStream>(workers * 2);
@@ -490,6 +509,8 @@ fn park(shared: &Shared, id: u64, state: Pending) {
 
 /// Remember that `id`'s result went out, so a late `DELETE` can answer
 /// `409 Conflict` instead of `404`. Records expire like parked entries.
+/// Delivery is also the end of the job's crash-journal life: the spec
+/// no longer needs replaying.
 fn record_delivered(shared: &Shared, id: u64) {
     let expires = shared.clock.now_ms().saturating_add(shared.ttl_ms);
     shared
@@ -497,6 +518,102 @@ fn record_delivered(shared: &Shared, id: u64) {
         .lock()
         .expect("delivered ids mutex")
         .insert(id, expires);
+    journal_remove(shared, id);
+}
+
+/// Journal file for job `id` under the journal directory.
+fn journal_file(dir: &std::path::Path, id: u64) -> std::path::PathBuf {
+    dir.join(format!("job-{id:016}.json"))
+}
+
+/// Journal an accepted submit body so a restarted server can re-run it
+/// (best-effort: a failed journal write is logged, never fails the
+/// submit — the journal adds durability, it is not on the ack path).
+fn journal_record(shared: &Shared, id: u64, body: &[u8]) {
+    let Some(dir) = &shared.journal_dir else { return };
+    if let Err(e) = journal_write(dir, id, body) {
+        crate::log_warn!("journal: recording job {id}: {e}");
+    }
+}
+
+/// Temp-then-rename journal write; the `journal.write` fail-point can
+/// tear it, leaving only a `.tmp` that replay discards.
+fn journal_write(dir: &std::path::Path, id: u64, body: &[u8]) -> std::io::Result<()> {
+    std::fs::create_dir_all(dir)?;
+    let path = journal_file(dir, id);
+    let tmp = path.with_extension("json.tmp");
+    let cap = crate::util::faults::write_len("journal.write", body.len())?;
+    std::fs::write(&tmp, &body[..cap])?;
+    if cap < body.len() {
+        return Err(std::io::Error::new(
+            std::io::ErrorKind::WriteZero,
+            "injected partial journal write",
+        ));
+    }
+    std::fs::rename(&tmp, &path)
+}
+
+/// Drop `id`'s journal entry (delivered, cancelled, or evicted — no
+/// one is left to want a replay).
+fn journal_remove(shared: &Shared, id: u64) {
+    if let Some(dir) = &shared.journal_dir {
+        let _ = std::fs::remove_file(journal_file(dir, id));
+    }
+}
+
+/// Re-submit every journaled spec a previous process accepted but never
+/// delivered. Each replayed job runs through the normal coordinator
+/// path — under `[svd] checkpoint_dir` that means resuming from the
+/// last completed sweep — and an io-pool waiter feeds the result cache
+/// and clears the journal entry when it completes. Old job ids are not
+/// preserved (clients that lost an id resubmit; seeded jobs replay
+/// exactly), so the point is completing the *work*, not the delivery.
+fn replay_journal(shared: &Arc<Shared>) {
+    let Some(dir) = shared.journal_dir.clone() else { return };
+    let Ok(entries) = std::fs::read_dir(&dir) else { return };
+    let io = shared.coord.io_pool();
+    for entry in entries.flatten() {
+        let path = entry.path();
+        if path.extension().and_then(|e| e.to_str()) != Some("json") {
+            // A `.tmp` torn off mid-journal by a crash: never replayable.
+            let _ = std::fs::remove_file(&path);
+            continue;
+        }
+        let sub = std::fs::read(&path)
+            .ok()
+            .and_then(|b| String::from_utf8(b).ok())
+            .and_then(|t| Json::parse(&t).ok())
+            .and_then(|j| protocol::parse_submit(&j, &shared.stream_defaults).ok());
+        let Some(sub) = sub else {
+            crate::log_warn!("journal: dropping unparseable entry {}", path.display());
+            let _ = std::fs::remove_file(&path);
+            continue;
+        };
+        let hash = cache::spec_hash(&sub.spec);
+        // Queue-full at restart leaves the entry for the next boot.
+        let Ok(handle) = shared.coord.try_submit(sub.spec) else { continue };
+        shared.metrics.journal_replayed.fetch_add(1, Ordering::Relaxed);
+        crate::log_info!(
+            "journal: replaying {} as job {}",
+            path.display(),
+            handle.id.0
+        );
+        let sh = Arc::clone(shared);
+        io.spawn(move || {
+            if let Ok(result) = handle.wait() {
+                if result.outcome.is_ok() {
+                    if let Some(h) = hash {
+                        let body =
+                            protocol::job_result_to_json(&result).to_string().into_bytes();
+                        let mut cache = sh.cache.lock().expect("result cache mutex");
+                        cache.insert(h, body);
+                        sh.metrics.cache_bytes.store(cache.bytes(), Ordering::Relaxed);
+                    }
+                }
+            }
+            let _ = std::fs::remove_file(&path);
+        });
+    }
 }
 
 /// The TTL reaper: drop every parked entry and delivered record whose
@@ -506,9 +623,10 @@ fn record_delivered(shared: &Shared, id: u64) {
 /// every routed request, so eviction needs no dedicated thread.
 fn sweep_expired(shared: &Shared) {
     let now = shared.clock.now_ms();
+    let mut evicted_ids = Vec::new();
     {
         let mut pending = shared.pending.lock().expect("pending jobs mutex");
-        pending.retain(|_, parked| {
+        pending.retain(|id, parked| {
             if parked.expires_at_ms > now {
                 return true;
             }
@@ -516,8 +634,14 @@ fn sweep_expired(shared: &Shared) {
                 handle.cancel();
             }
             shared.metrics.evicted.fetch_add(1, Ordering::Relaxed);
+            evicted_ids.push(*id);
             false
         });
+    }
+    // An evicted job has no claimant left; its journal entry would only
+    // resurrect abandoned work on the next restart.
+    for id in evicted_ids {
+        journal_remove(shared, id);
     }
     shared
         .delivered
@@ -577,14 +701,26 @@ fn readyz(shared: &Shared) -> Response {
     let capacity = shared.coord.queue_capacity() as u64;
     let status = if depth >= capacity { 503 } else { 200 };
     let state = if depth >= capacity { "saturated" } else { "ready" };
-    Response::json(
+    let response = Response::json(
         status,
         &Json::obj(vec![
             ("status", Json::str(state)),
             ("queue_depth", Json::num(depth as f64)),
             ("queue_capacity", Json::num(capacity as f64)),
         ]),
-    )
+    );
+    if status == 503 {
+        response.with_retry_after(retry_after_secs(depth, capacity))
+    } else {
+        response
+    }
+}
+
+/// `Retry-After` hint for `503`s, from queue pressure: one second per
+/// queue-capacity multiple of backlog, capped so the hint stays a
+/// backoff, not a blackout.
+fn retry_after_secs(depth: u64, capacity: u64) -> u64 {
+    (depth / capacity.max(1)).clamp(1, 30)
 }
 
 /// `DELETE /v1/jobs/{id}`: cancel a parked job. A pending or running
@@ -609,6 +745,7 @@ fn cancel_job(shared: &Shared, req: &Request) -> Response {
             }
             Some(Pending::Done(_)) => {
                 pending.remove(&id);
+                journal_remove(shared, id);
                 true
             }
             None => false,
@@ -666,12 +803,18 @@ fn submit_job(shared: &Shared, req: &Request) -> Response {
         Ok(h) => h,
         Err(e) if is_backpressure(&e) => {
             shared.metrics.http_rejected.fetch_add(1, Ordering::Relaxed);
-            return Response::error(503, &format!("{e}"));
+            let depth = shared.metrics.queue_depth.load(Ordering::Relaxed);
+            let capacity = shared.coord.queue_capacity() as u64;
+            return Response::error(503, &format!("{e}"))
+                .with_retry_after(retry_after_secs(depth, capacity));
         }
         Err(e) => return Response::error(400, &format!("{e}")),
     };
     shared.metrics.http_accepted.fetch_add(1, Ordering::Relaxed);
     let id = handle.id.0;
+    // Crash journal: the accepted spec survives a process death until
+    // its result is delivered (or it is cancelled / evicted).
+    journal_record(shared, id, &req.body);
     if sub.wait {
         // wait=true responses are not re-parked on a failed write: the
         // client never learned the id, so it resubmits (seeded jobs
@@ -791,6 +934,25 @@ mod tests {
         assert_eq!(query_param("x=1", "timeout_s"), None);
         assert_eq!(query_param("", "timeout_s"), None);
         assert_eq!(query_param("timeout_s", "timeout_s"), None);
+    }
+
+    #[test]
+    fn retry_after_scales_with_backlog_and_stays_bounded() {
+        assert_eq!(retry_after_secs(0, 8), 1);
+        assert_eq!(retry_after_secs(8, 8), 1);
+        assert_eq!(retry_after_secs(40, 8), 5);
+        assert_eq!(retry_after_secs(10_000, 8), 30);
+        // A zero capacity must not divide by zero.
+        assert_eq!(retry_after_secs(5, 0), 5);
+    }
+
+    #[test]
+    fn journal_files_are_per_id_and_ordered(){
+        let dir = std::path::Path::new("/tmp/j");
+        let a = journal_file(dir, 7);
+        let b = journal_file(dir, 8);
+        assert_ne!(a, b);
+        assert!(a.to_string_lossy().ends_with(".json"));
     }
 
     #[test]

@@ -649,6 +649,7 @@ pub fn metrics_to_json(m: &crate::coordinator::MetricsSnapshot) -> Json {
         ("http_bytes_out", Json::num(m.http_bytes_out as f64)),
         ("stream_passes", Json::num(m.stream_passes as f64)),
         ("stream_bytes_read", Json::num(m.stream_bytes_read as f64)),
+        ("stream_retries", Json::num(m.stream_retries as f64)),
         ("sweeps_used", Json::num(m.sweeps_used as f64)),
         ("mean_achieved_pve", Json::num(m.mean_achieved_pve)),
         ("mean_exec_s", Json::num(m.mean_exec_s)),
@@ -669,6 +670,10 @@ pub fn metrics_to_json(m: &crate::coordinator::MetricsSnapshot) -> Json {
         ("cache_hits", Json::num(m.cache_hits as f64)),
         ("cache_misses", Json::num(m.cache_misses as f64)),
         ("cache_bytes", Json::num(m.cache_bytes as f64)),
+        ("faults_injected", Json::num(m.faults_injected as f64)),
+        ("checkpoints_written", Json::num(m.checkpoints_written as f64)),
+        ("checkpoints_resumed", Json::num(m.checkpoints_resumed as f64)),
+        ("journal_replayed", Json::num(m.journal_replayed as f64)),
     ])
 }
 
@@ -884,6 +889,12 @@ mod tests {
         assert!(j.get("pool_spawned").is_ok());
         assert!(j.get("io_threads").is_ok());
         assert!(j.get("io_spawned").is_ok());
+        // Resilience counters (fault-injection + checkpoint/resume PR).
+        assert!(j.get("stream_retries").is_ok());
+        assert!(j.get("faults_injected").is_ok());
+        assert!(j.get("checkpoints_written").is_ok());
+        assert!(j.get("checkpoints_resumed").is_ok());
+        assert!(j.get("journal_replayed").is_ok());
     }
 
     #[test]

@@ -1,0 +1,457 @@
+//! Sweep-granular crash-safe checkpointing for factorizations.
+//!
+//! A multi-sweep job over an out-of-core source runs for minutes; a
+//! worker crash mid-run used to throw away every completed pass. With a
+//! checkpoint directory configured (`[svd] checkpoint_dir` /
+//! `--checkpoint-dir`), the engine spills its sweep state after every
+//! completed power/adaptive sweep and resumes from the latest valid
+//! checkpoint on the next run of the *same* spec — producing factors
+//! **byte-identical** to an uninterrupted run (pinned by
+//! `rust/tests/faults.rs`).
+//!
+//! ## What a checkpoint holds
+//!
+//! * the evolving panel — `Q` (m×K, exact power) or `W` (n×K,
+//!   fused/adaptive) — spilled losslessly through the crate's on-disk
+//!   matrix format ([`FileWriter`]: raw f64 bit patterns, no text
+//!   round-trip);
+//! * the sweep counter, and for the adaptive schedule the dynamic
+//!   shift `α`, `‖X̄‖²_F`, and the previous Ritz estimates — every f64
+//!   stored as its exact bit pattern in the JSON sidecar;
+//! * the **spec tag**: the job's canonical content hash (the cache
+//!   layer's [`crate::server::cache::checkpoint_spec_hash`]), so a
+//!   checkpoint from a different matrix, config, or seed is refused by
+//!   construction (it lives under a different file name *and* the tag
+//!   inside the sidecar must match).
+//!
+//! ## Crash-safety protocol
+//!
+//! Both files are written temp-then-rename, panel first, sidecar last;
+//! the sidecar carries a content hash of the panel bytes. Every load
+//! failure — missing file, torn write, corrupt JSON, hash mismatch,
+//! stage/shape mismatch — makes [`Checkpointer::load`] return `None`
+//! and the factorization simply starts cold: a checkpoint is an
+//! optimization, never a correctness dependency. Saves are best-effort
+//! for the same reason (a full disk degrades to no checkpointing, it
+//! does not fail jobs).
+//!
+//! RNG safety: Ω is drawn before the first sweep and nothing after
+//! that draw consumes the job RNG, so restoring a panel and skipping
+//! completed sweeps replays the uninterrupted operation sequence
+//! exactly — the byte-identity contract extends across crashes.
+
+use std::fs;
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use crate::linalg::stream::{FileSource, FileWriter, MatrixSource};
+use crate::linalg::Dense;
+use crate::server::cache::content_hash;
+use crate::util::json::Json;
+use crate::util::{faults, Result};
+
+/// Sidecar format version.
+const META_VERSION: f64 = 1.0;
+
+/// Checkpoints successfully written since process start (the
+/// `checkpoints_written` metric).
+static WRITTEN: AtomicU64 = AtomicU64::new(0);
+/// Factorizations resumed from a valid checkpoint since process start
+/// (the `checkpoints_resumed` metric).
+static RESUMED: AtomicU64 = AtomicU64::new(0);
+
+/// Checkpoints successfully written since process start.
+pub fn checkpoints_written() -> u64 {
+    WRITTEN.load(Ordering::Relaxed)
+}
+
+/// Factorizations resumed from a valid checkpoint since process start.
+pub fn checkpoints_resumed() -> u64 {
+    RESUMED.load(Ordering::Relaxed)
+}
+
+/// Which sweep loop produced a checkpoint. A checkpoint only resumes
+/// the exact stage that wrote it (the spec tag already pins the
+/// configuration; this guards against tag collisions and hand-moved
+/// files).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Stage {
+    /// `exact_power`: panel is the m×K basis Q.
+    ExactPower,
+    /// `fused_range`: panel is the n×K sample W.
+    FusedRange,
+    /// `adaptive_range`: panel is W plus the dynamic-shift state.
+    AdaptiveRange,
+}
+
+impl Stage {
+    fn name(&self) -> &'static str {
+        match self {
+            Stage::ExactPower => "exact_power",
+            Stage::FusedRange => "fused_range",
+            Stage::AdaptiveRange => "adaptive_range",
+        }
+    }
+
+    fn parse(s: &str) -> Option<Stage> {
+        match s {
+            "exact_power" => Some(Stage::ExactPower),
+            "fused_range" => Some(Stage::FusedRange),
+            "adaptive_range" => Some(Stage::AdaptiveRange),
+            _ => None,
+        }
+    }
+}
+
+/// The engine's between-sweep state: everything needed to re-enter the
+/// sweep loop as if the completed sweeps had just run.
+#[derive(Debug, Clone)]
+pub struct SweepState {
+    /// Which sweep loop this state belongs to.
+    pub stage: Stage,
+    /// Completed sweeps.
+    pub sweep: usize,
+    /// Whether the sweep loop already finished (the adaptive schedule
+    /// can converge before its ceiling; a crash *after* the loop then
+    /// resumes straight into range capture).
+    pub done: bool,
+    /// The evolving panel (Q or W), exact bytes.
+    pub panel: Dense,
+    /// Adaptive dynamic shift α (0 for fixed-power stages).
+    pub alpha: f64,
+    /// Adaptive `‖X̄‖²_F` (0 for fixed-power stages).
+    pub fro2: f64,
+    /// Adaptive previous Ritz estimates, if a sweep has completed.
+    pub prev: Option<Vec<f64>>,
+}
+
+impl SweepState {
+    /// State for the fixed-power stages, which carry only a panel and
+    /// a counter.
+    pub fn fixed(stage: Stage, sweep: usize, panel: Dense) -> SweepState {
+        SweepState {
+            stage,
+            sweep,
+            done: false,
+            panel,
+            alpha: 0.0,
+            fro2: 0.0,
+            prev: None,
+        }
+    }
+}
+
+/// Writer/loader of one job's checkpoint pair (`ckpt-<tag>.panel` +
+/// `ckpt-<tag>.meta`) under a checkpoint directory. Cheap to clone;
+/// carried by [`crate::svd::ShiftedRsvd`] when checkpointing is on.
+#[derive(Debug, Clone)]
+pub struct Checkpointer {
+    dir: PathBuf,
+    tag: u64,
+}
+
+/// Exact f64 → hex bit-pattern string (lossless, unlike a decimal text
+/// round-trip — resumed runs must replay to the last ulp).
+fn bits_str(v: f64) -> String {
+    format!("{:016x}", v.to_bits())
+}
+
+/// Inverse of [`bits_str`].
+fn parse_bits(s: &str) -> Option<f64> {
+    u64::from_str_radix(s, 16).ok().map(f64::from_bits)
+}
+
+/// Content hash of a panel's exact bytes (the sidecar's torn-write
+/// detector).
+fn panel_hash(panel: &Dense) -> u64 {
+    let mut bytes = Vec::with_capacity(panel.data().len() * 8);
+    for &v in panel.data() {
+        bytes.extend_from_slice(&v.to_bits().to_le_bytes());
+    }
+    content_hash(&bytes)
+}
+
+impl Checkpointer {
+    /// A checkpointer for the job identified by `tag` (the canonical
+    /// spec hash) under `dir`.
+    pub fn new(dir: &Path, tag: u64) -> Checkpointer {
+        Checkpointer { dir: dir.to_path_buf(), tag }
+    }
+
+    /// The spec tag this checkpointer reads and writes.
+    pub fn tag(&self) -> u64 {
+        self.tag
+    }
+
+    fn panel_path(&self) -> PathBuf {
+        self.dir.join(format!("ckpt-{:016x}.panel", self.tag))
+    }
+
+    fn meta_path(&self) -> PathBuf {
+        self.dir.join(format!("ckpt-{:016x}.meta", self.tag))
+    }
+
+    /// Best-effort save: a failure is logged and swallowed (a job must
+    /// never fail because its *checkpoint* could not be written).
+    pub fn save(&self, state: &SweepState) {
+        match self.try_save(state) {
+            Ok(()) => {
+                WRITTEN.fetch_add(1, Ordering::Relaxed);
+            }
+            Err(e) => {
+                crate::log_warn!(
+                    "checkpoint save failed for tag {:016x} (sweep {}): {e}",
+                    self.tag,
+                    state.sweep
+                );
+            }
+        }
+    }
+
+    fn try_save(&self, state: &SweepState) -> Result<()> {
+        fs::create_dir_all(&self.dir)?;
+        // Panel first, temp-then-rename: the final name never holds a
+        // half-written matrix (FileWriter::finish re-validates it).
+        let panel_tmp = self.panel_path().with_extension("panel.tmp");
+        let mut w = FileWriter::create(&panel_tmp, state.panel.rows(), state.panel.cols())?;
+        w.append_rows(state.panel.data())?;
+        w.finish()?;
+        fs::rename(&panel_tmp, self.panel_path())?;
+
+        // Sidecar last: its presence (with a matching panel hash) is
+        // what declares the pair valid.
+        let mut fields = vec![
+            ("version", Json::num(META_VERSION)),
+            ("tag", Json::str(&format!("{:016x}", self.tag))),
+            ("stage", Json::str(state.stage.name())),
+            ("sweep", Json::num(state.sweep as f64)),
+            ("done", Json::Bool(state.done)),
+            ("rows", Json::num(state.panel.rows() as f64)),
+            ("cols", Json::num(state.panel.cols() as f64)),
+            ("alpha", Json::str(&bits_str(state.alpha))),
+            ("fro2", Json::str(&bits_str(state.fro2))),
+            (
+                "panel_hash",
+                Json::str(&format!("{:016x}", panel_hash(&state.panel))),
+            ),
+        ];
+        if let Some(prev) = &state.prev {
+            fields.push((
+                "prev",
+                Json::arr(prev.iter().map(|&v| Json::str(&bits_str(v)))),
+            ));
+        }
+        let text = Json::obj(fields).to_string();
+        let bytes = text.as_bytes();
+        // Fail-point: chaos runs tear the sidecar here; the stale/torn
+        // pair must be detected and ignored on load.
+        let take = faults::write_len("ckpt.meta", bytes.len())?;
+        let meta_tmp = self.meta_path().with_extension("meta.tmp");
+        fs::write(&meta_tmp, &bytes[..take])?;
+        crate::ensure!(
+            take == bytes.len(),
+            "short checkpoint sidecar write: {take} of {} bytes",
+            bytes.len()
+        );
+        fs::rename(&meta_tmp, self.meta_path())?;
+        Ok(())
+    }
+
+    /// Load the checkpoint for this tag, or `None` when there is no
+    /// valid one for the given `stage` and panel `shape` — missing
+    /// files, torn writes, corrupt JSON, a foreign tag, or a hash
+    /// mismatch all land on `None` (start cold), never on an error.
+    pub fn load(&self, stage: Stage, shape: (usize, usize)) -> Option<SweepState> {
+        let state = self.try_load(stage, shape)?;
+        RESUMED.fetch_add(1, Ordering::Relaxed);
+        crate::log_info!(
+            "resuming tag {:016x} from checkpoint at sweep {} ({})",
+            self.tag,
+            state.sweep,
+            state.stage.name()
+        );
+        Some(state)
+    }
+
+    fn try_load(&self, stage: Stage, shape: (usize, usize)) -> Option<SweepState> {
+        let text = fs::read_to_string(self.meta_path()).ok()?;
+        let meta = Json::parse(&text).ok()?;
+        if meta.get("version").ok()?.as_f64().ok()? != META_VERSION {
+            return None;
+        }
+        let tag = u64::from_str_radix(meta.get("tag").ok()?.as_str().ok()?, 16).ok()?;
+        if tag != self.tag {
+            return None;
+        }
+        let st = Stage::parse(meta.get("stage").ok()?.as_str().ok()?)?;
+        if st != stage {
+            return None;
+        }
+        let rows = meta.get("rows").ok()?.as_usize().ok()?;
+        let cols = meta.get("cols").ok()?.as_usize().ok()?;
+        if (rows, cols) != shape {
+            return None;
+        }
+        let sweep = meta.get("sweep").ok()?.as_usize().ok()?;
+        let done = meta.get("done").ok()?.as_bool().ok()?;
+        let alpha = parse_bits(meta.get("alpha").ok()?.as_str().ok()?)?;
+        let fro2 = parse_bits(meta.get("fro2").ok()?.as_str().ok()?)?;
+        let prev = match meta.get("prev") {
+            Ok(arr) => Some(
+                arr.as_arr()
+                    .ok()?
+                    .iter()
+                    .map(|v| v.as_str().ok().and_then(parse_bits))
+                    .collect::<Option<Vec<f64>>>()?,
+            ),
+            Err(_) => None,
+        };
+        let want_hash = u64::from_str_radix(meta.get("panel_hash").ok()?.as_str().ok()?, 16).ok()?;
+        let src = FileSource::open(&self.panel_path()).ok()?;
+        if src.shape() != shape {
+            return None;
+        }
+        let panel = src.materialize().ok()?;
+        if panel_hash(&panel) != want_hash {
+            return None;
+        }
+        Some(SweepState { stage: st, sweep, done, panel, alpha, fro2, prev })
+    }
+
+    /// Remove this tag's checkpoint pair (called once the factorization
+    /// completes; also best-effort).
+    pub fn clear(&self) {
+        let _ = fs::remove_file(self.meta_path());
+        let _ = fs::remove_file(self.panel_path());
+        let _ = fs::remove_file(self.panel_path().with_extension("panel.tmp"));
+        let _ = fs::remove_file(self.meta_path().with_extension("meta.tmp"));
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Xoshiro256pp;
+
+    fn tmp_dir(name: &str) -> PathBuf {
+        let d = std::env::temp_dir().join(format!("srsvd_ckpt_{name}"));
+        let _ = fs::create_dir_all(&d);
+        d
+    }
+
+    fn panel(seed: u64) -> Dense {
+        let mut rng = Xoshiro256pp::seed_from_u64(seed);
+        Dense::gaussian(9, 4, &mut rng)
+    }
+
+    fn bits(x: &Dense) -> Vec<u64> {
+        x.data().iter().map(|v| v.to_bits()).collect()
+    }
+
+    #[test]
+    fn round_trips_every_field_bit_exactly() {
+        let dir = tmp_dir("round_trip");
+        let c = Checkpointer::new(&dir, 0xDEAD_BEEF);
+        let state = SweepState {
+            stage: Stage::AdaptiveRange,
+            sweep: 3,
+            done: false,
+            panel: panel(1),
+            alpha: 0.1 + 0.2, // a value that would not survive decimal text
+            fro2: 123.456789,
+            prev: Some(vec![1.5, f64::MIN_POSITIVE, 0.0]),
+        };
+        c.save(&state);
+        let got = c
+            .load(Stage::AdaptiveRange, (9, 4))
+            .expect("fresh checkpoint must load");
+        assert_eq!(got.sweep, 3);
+        assert!(!got.done);
+        assert_eq!(bits(&got.panel), bits(&state.panel));
+        assert_eq!(got.alpha.to_bits(), state.alpha.to_bits());
+        assert_eq!(got.fro2.to_bits(), state.fro2.to_bits());
+        let prev = got.prev.expect("prev survives");
+        assert_eq!(prev.len(), 3);
+        assert_eq!(prev[1].to_bits(), f64::MIN_POSITIVE.to_bits());
+        c.clear();
+        assert!(c.load(Stage::AdaptiveRange, (9, 4)).is_none());
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn fixed_state_omits_adaptive_fields() {
+        let dir = tmp_dir("fixed");
+        let c = Checkpointer::new(&dir, 7);
+        c.save(&SweepState::fixed(Stage::ExactPower, 2, panel(2)));
+        let got = c.load(Stage::ExactPower, (9, 4)).expect("loads");
+        assert_eq!(got.sweep, 2);
+        assert_eq!(got.alpha, 0.0);
+        assert!(got.prev.is_none());
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn stage_shape_and_tag_mismatches_are_refused() {
+        let dir = tmp_dir("mismatch");
+        let c = Checkpointer::new(&dir, 11);
+        c.save(&SweepState::fixed(Stage::FusedRange, 1, panel(3)));
+        assert!(c.load(Stage::ExactPower, (9, 4)).is_none(), "stage");
+        assert!(c.load(Stage::FusedRange, (9, 5)).is_none(), "shape");
+        assert!(
+            Checkpointer::new(&dir, 12).load(Stage::FusedRange, (9, 4)).is_none(),
+            "tag"
+        );
+        assert!(c.load(Stage::FusedRange, (9, 4)).is_some(), "control");
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn corrupt_sidecar_or_panel_is_ignored() {
+        let dir = tmp_dir("corrupt");
+        let c = Checkpointer::new(&dir, 21);
+        c.save(&SweepState::fixed(Stage::FusedRange, 1, panel(4)));
+        // Torn sidecar.
+        let meta = fs::read_to_string(c.meta_path()).unwrap();
+        fs::write(c.meta_path(), &meta[..meta.len() / 2]).unwrap();
+        assert!(c.load(Stage::FusedRange, (9, 4)).is_none(), "torn sidecar");
+        fs::write(c.meta_path(), &meta).unwrap();
+        assert!(c.load(Stage::FusedRange, (9, 4)).is_some(), "restored");
+        // Panel bytes flipped under a valid sidecar: hash must catch it.
+        let mut p = fs::read(c.panel_path()).unwrap();
+        let last = p.len() - 1;
+        p[last] ^= 0xFF;
+        fs::write(c.panel_path(), &p).unwrap();
+        assert!(c.load(Stage::FusedRange, (9, 4)).is_none(), "flipped panel");
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn torn_sidecar_writes_never_produce_a_valid_pair() {
+        let _g = faults::test_lock();
+        let dir = tmp_dir("torn_write");
+        let c = Checkpointer::new(&dir, 31);
+        faults::arm("ckpt.meta=partial_write:1@1.0").unwrap();
+        c.save(&SweepState::fixed(Stage::FusedRange, 2, panel(5)));
+        faults::disarm();
+        // The torn save was swallowed (best-effort) and must not have
+        // left a loadable pair behind.
+        assert!(c.load(Stage::FusedRange, (9, 4)).is_none());
+        // The next clean save recovers.
+        c.save(&SweepState::fixed(Stage::FusedRange, 2, panel(5)));
+        assert!(c.load(Stage::FusedRange, (9, 4)).is_some());
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn written_and_resumed_counters_move() {
+        let dir = tmp_dir("counters");
+        let w0 = checkpoints_written();
+        let r0 = checkpoints_resumed();
+        let c = Checkpointer::new(&dir, 41);
+        c.save(&SweepState::fixed(Stage::ExactPower, 1, panel(6)));
+        assert!(checkpoints_written() > w0);
+        let _ = c.load(Stage::ExactPower, (9, 4)).expect("loads");
+        assert!(checkpoints_resumed() > r0);
+        let _ = fs::remove_dir_all(&dir);
+    }
+}

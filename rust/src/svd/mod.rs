@@ -3,12 +3,14 @@
 //! a common operator abstraction so dense and sparse inputs share one
 //! code path.
 
+pub mod checkpoint;
 pub mod deterministic;
 pub mod ops;
 pub mod pca;
 pub mod rsvd;
 pub mod shifted;
 
+pub use checkpoint::Checkpointer;
 pub use deterministic::deterministic_svd;
 pub use ops::{shifted_low_rank_mse, MatVecOps};
 pub use pca::{column_errors, Pca};

@@ -75,8 +75,9 @@ use crate::linalg::{
     gemm, householder_qr, jacobi_svd, qr_rank1_update, sym_jacobi_eig, Dense, JacobiOpts,
 };
 use crate::rng::Rng;
-use crate::util::{Error, Result};
+use crate::util::{faults, Error, Result};
 
+use super::checkpoint::{Checkpointer, Stage, SweepState};
 use super::ops::colsums;
 use super::{Factorization, MatVecOps, StopCriterion, SvdConfig};
 
@@ -169,16 +170,40 @@ fn check_cancel(cancel: &AtomicBool) -> Result<()> {
 }
 
 /// The shifted randomized SVD engine.
-#[derive(Debug, Clone, Copy)]
+#[derive(Debug, Clone)]
 pub struct ShiftedRsvd {
     /// Rank / oversampling / power-iteration configuration.
     pub config: SvdConfig,
+    /// Sweep-granular crash-safe checkpointing
+    /// ([`crate::svd::checkpoint`]); `None` — the default — runs
+    /// exactly as before checkpointing existed.
+    checkpoint: Option<Checkpointer>,
 }
 
 impl ShiftedRsvd {
     /// Build an engine with the given configuration.
     pub fn new(config: SvdConfig) -> Self {
-        ShiftedRsvd { config }
+        ShiftedRsvd { config, checkpoint: None }
+    }
+
+    /// Enable sweep-granular checkpointing: after every completed
+    /// power/adaptive sweep the engine spills its state through `ckpt`,
+    /// and on the next run of the same spec it resumes from the latest
+    /// valid checkpoint — producing factors byte-identical to an
+    /// uninterrupted run. Checkpoints are cleared on success.
+    pub fn with_checkpoint(mut self, ckpt: Checkpointer) -> Self {
+        self.checkpoint = Some(ckpt);
+        self
+    }
+
+    fn load_checkpoint(&self, stage: Stage, shape: (usize, usize)) -> Option<SweepState> {
+        self.checkpoint.as_ref()?.load(stage, shape)
+    }
+
+    fn save_checkpoint(&self, state: &SweepState) {
+        if let Some(c) = &self.checkpoint {
+            c.save(state);
+        }
     }
 
     /// Factorize `X − μ·1ᵀ`. `mu` may be any m-vector; zeros reduce the
@@ -258,8 +283,15 @@ impl ShiftedRsvd {
             StopCriterion::FixedPower { q: iters } => {
                 let basis = match self.config.pass_policy {
                     PassPolicy::Exact => {
-                        let q0 = self.exact_basis(x, mu, &omega, shifted, kk);
-                        self.exact_power(x, mu, q0, &ones_n, iters, cancel)?
+                        // A valid checkpoint replaces the sampling
+                        // basis (and its source pass) with the panel as
+                        // of the last completed sweep; Ω was already
+                        // drawn above, so the RNG stream is unperturbed.
+                        let (q0, start) = match self.load_checkpoint(Stage::ExactPower, (m, kk)) {
+                            Some(st) => (st.panel, st.sweep),
+                            None => (self.exact_basis(x, mu, &omega, shifted, kk), 0),
+                        };
+                        self.exact_power(x, mu, q0, &ones_n, start, iters, cancel)?
                     }
                     PassPolicy::Fused => {
                         self.fused_range(x, mu, omega, shifted, iters, cancel)?
@@ -319,6 +351,11 @@ impl ShiftedRsvd {
                 0.0
             }
         });
+        // The factorization completed: its checkpoint is now stale
+        // state that must not shadow a future identical job.
+        if let Some(c) = &self.checkpoint {
+            c.clear();
+        }
         let report = SweepReport { sweeps_used, achieved_pve };
         Ok((
             Factorization {
@@ -366,24 +403,32 @@ impl ShiftedRsvd {
     }
 
     /// Exact power stage (L8-11): `Q ← qr(X̄·qr(X̄ᵀQ))`, two source
-    /// passes per iteration.
+    /// passes per iteration. `start` is the number of sweeps the
+    /// incoming `q` has already absorbed (0 cold, >0 when resumed from
+    /// a checkpoint).
+    #[allow(clippy::too_many_arguments)]
     fn exact_power(
         &self,
         x: &dyn MatVecOps,
         mu: &[f64],
         mut q: Dense,
         ones_n: &[f64],
+        start: usize,
         iters: usize,
         cancel: &AtomicBool,
     ) -> Result<Dense> {
-        for _ in 0..iters {
+        for sweep in start..iters {
             check_cancel(cancel)?;
+            faults::check("svd.sweep")?;
             // Q' = qr(X̄ᵀQ) = qr(XᵀQ − 1(μᵀQ))
             let mtq = q.tmatvec(mu); // μᵀQ, length K
             let qp = householder_qr(&x.tmm_rank1(&q, ones_n, &mtq)).0;
             // Q = qr(X̄Q') = qr(XQ' − μ(1ᵀQ'))
             let colsum_qp = colsums(&qp);
             q = householder_qr(&x.mm_rank1(&qp, mu, &colsum_qp)).0;
+            if self.checkpoint.is_some() {
+                self.save_checkpoint(&SweepState::fixed(Stage::ExactPower, sweep + 1, q.clone()));
+            }
         }
         Ok(q)
     }
@@ -402,11 +447,21 @@ impl ShiftedRsvd {
         iters: usize,
         cancel: &AtomicBool,
     ) -> Result<Dense> {
-        let mut w = omega; // n×K, the evolving right-side sample
-        for _ in 0..iters {
+        let shape = (omega.rows(), omega.cols());
+        // Resume replaces Ω with the panel as of the last completed
+        // sweep; the remaining sweeps replay the uninterrupted sequence.
+        let (mut w, start) = match self.load_checkpoint(Stage::FusedRange, shape) {
+            Some(st) => (st.panel, st.sweep),
+            None => (omega, 0),
+        };
+        for sweep in start..iters {
             check_cancel(cancel)?;
+            faults::check("svd.sweep")?;
             let z = x.gram_sweep(&w, mu);
             w = householder_qr(&z).0; // renormalize: no data pass
+            if self.checkpoint.is_some() {
+                self.save_checkpoint(&SweepState::fixed(Stage::FusedRange, sweep + 1, w.clone()));
+            }
         }
         check_cancel(cancel)?;
         Ok(self.capture(x, mu, &w, shifted))
@@ -445,16 +500,25 @@ impl ShiftedRsvd {
         cancel: &AtomicBool,
     ) -> Result<(Dense, usize, f64)> {
         let k = self.config.k;
-        let fro2 = x.sq_fro_shifted(mu); // one source pass
-        // Orthonormalize Ω before the first sweep (n×K Householder QR,
-        // no data pass) so the Ritz values are bounded by the true
-        // spectrum and the shift can never overshoot it.
-        let mut w = householder_qr(&omega).0;
-        let mut alpha = 0.0_f64;
-        let mut prev: Option<Vec<f64>> = None;
-        let mut sweeps = 0usize;
-        while sweeps < max_sweeps {
+        let shape = (omega.rows(), omega.cols());
+        // A resumed run restores the full between-sweep state — panel,
+        // dynamic shift, previous Ritz estimates, ‖X̄‖²_F (skipping its
+        // source pass) and whether the loop had already converged.
+        let resumed = self.load_checkpoint(Stage::AdaptiveRange, shape);
+        let (mut w, mut alpha, mut prev, mut sweeps, fro2, mut finished) = match resumed {
+            Some(st) => (st.panel, st.alpha, st.prev, st.sweep, st.fro2, st.done),
+            None => {
+                let fro2 = x.sq_fro_shifted(mu); // one source pass
+                // Orthonormalize Ω before the first sweep (n×K
+                // Householder QR, no data pass) so the Ritz values are
+                // bounded by the true spectrum and the shift can never
+                // overshoot it.
+                (householder_qr(&omega).0, 0.0_f64, None, 0usize, fro2, false)
+            }
+        };
+        while !finished && sweeps < max_sweeps {
             check_cancel(cancel)?;
+            faults::check("svd.sweep")?;
             let mut z = x.gram_sweep(&w, mu); // one source pass
             if alpha != 0.0 {
                 // Dynamic shift: Z ← Z − α·W. A rank-K epilogue over
@@ -481,12 +545,28 @@ impl ShiftedRsvd {
                 });
             prev = Some(lam);
             if converged {
-                break;
+                // Converged: record `done` so a crash *after* this
+                // point resumes straight into range capture instead of
+                // running one extra sweep (which would break
+                // byte-identity with the uninterrupted run).
+                finished = true;
+            } else {
+                // α ← (α + λ̂_K)/2 = α + s_K(Z)/2: half-way toward the
+                // smallest retained estimate (the dashSVD update).
+                if let Some(&tail) = s.last() {
+                    alpha += tail / 2.0;
+                }
             }
-            // α ← (α + λ̂_K)/2 = α + s_K(Z)/2: half-way toward the
-            // smallest retained estimate (the dashSVD update).
-            if let Some(&tail) = s.last() {
-                alpha += tail / 2.0;
+            if self.checkpoint.is_some() {
+                self.save_checkpoint(&SweepState {
+                    stage: Stage::AdaptiveRange,
+                    sweep: sweeps,
+                    done: finished,
+                    panel: w.clone(),
+                    alpha,
+                    fro2,
+                    prev: prev.clone(),
+                });
             }
         }
         check_cancel(cancel)?;
@@ -823,5 +903,127 @@ mod tests {
             .factorize_mean_centered(&x, &mut rng)
             .unwrap();
         assert_eq!(f.rank(), 6);
+    }
+
+    // ---- checkpoint/resume ------------------------------------------------
+
+    fn ckpt_dir(name: &str) -> std::path::PathBuf {
+        let d = std::env::temp_dir().join(format!("srsvd_shifted_ckpt_{name}"));
+        let _ = std::fs::create_dir_all(&d);
+        d
+    }
+
+    fn factor_bits(f: &Factorization) -> (Vec<u64>, Vec<u64>, Vec<u64>) {
+        let b = |d: &Dense| d.data().iter().map(|v| v.to_bits()).collect::<Vec<_>>();
+        (b(&f.u), f.s.iter().map(|v| v.to_bits()).collect(), b(&f.v))
+    }
+
+    fn stage_configs() -> [SvdConfig; 3] {
+        [
+            SvdConfig::paper(4).with_fixed_power(3),
+            SvdConfig::paper(4)
+                .with_fixed_power(3)
+                .with_pass_policy(PassPolicy::Fused),
+            SvdConfig::paper(4).with_tolerance(0.0, 3),
+        ]
+    }
+
+    #[test]
+    fn checkpointed_clean_run_is_byte_identical_and_cleans_up() {
+        let x = uniform(25, 80, 40);
+        let mu = x.row_means();
+        for (i, cfg) in stage_configs().into_iter().enumerate() {
+            let plain = ShiftedRsvd::new(cfg)
+                .factorize(&x, &mu, &mut Xoshiro256pp::seed_from_u64(41))
+                .unwrap();
+            let dir = ckpt_dir(&format!("clean_{i}"));
+            let ckpt = Checkpointer::new(&dir, 100 + i as u64);
+            let checked = ShiftedRsvd::new(cfg)
+                .with_checkpoint(ckpt.clone())
+                .factorize(&x, &mu, &mut Xoshiro256pp::seed_from_u64(41))
+                .unwrap();
+            assert_eq!(
+                factor_bits(&plain),
+                factor_bits(&checked),
+                "cfg {i}: checkpointing must not perturb the factors"
+            );
+            // Success cleared the checkpoint pair.
+            let leftover = std::fs::read_dir(&dir).map(|it| it.count()).unwrap_or(0);
+            assert_eq!(leftover, 0, "cfg {i}: stale checkpoint files");
+            drop(ckpt);
+            let _ = std::fs::remove_dir_all(&dir);
+        }
+    }
+
+    #[test]
+    fn crash_mid_sweep_resumes_byte_identical() {
+        let _g = faults::test_lock();
+        let x = uniform(25, 80, 42);
+        let mu = x.row_means();
+        for (i, cfg) in stage_configs().into_iter().enumerate() {
+            let reference = ShiftedRsvd::new(cfg)
+                .factorize(&x, &mu, &mut Xoshiro256pp::seed_from_u64(43))
+                .unwrap();
+            let dir = ckpt_dir(&format!("crash_{i}"));
+            let ckpt = Checkpointer::new(&dir, 200 + i as u64);
+            // Crash at the top of the second sweep: the first sweep's
+            // checkpoint is on disk, the job dies mid-flight.
+            faults::arm("svd.sweep=die_after:2").unwrap();
+            let engine = ShiftedRsvd::new(cfg).with_checkpoint(ckpt.clone());
+            let crashed = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                engine.factorize(&x, &mu, &mut Xoshiro256pp::seed_from_u64(43))
+            }));
+            faults::disarm();
+            let payload = crashed.expect_err("die_after must panic");
+            let msg = payload
+                .downcast_ref::<String>()
+                .map(|s| s.as_str())
+                .or_else(|| payload.downcast_ref::<&str>().copied())
+                .unwrap_or("");
+            assert!(msg.contains(faults::CRASH_MARKER), "cfg {i}: panic payload {msg:?}");
+            // Restart: same spec, same seed — resumes from sweep 1 and
+            // must reproduce the uninterrupted factors bit for bit.
+            let resumed_before = crate::svd::checkpoint::checkpoints_resumed();
+            let resumed = ShiftedRsvd::new(cfg)
+                .with_checkpoint(ckpt)
+                .factorize(&x, &mu, &mut Xoshiro256pp::seed_from_u64(43))
+                .unwrap();
+            assert!(
+                crate::svd::checkpoint::checkpoints_resumed() > resumed_before,
+                "cfg {i}: run did not take the resume path"
+            );
+            assert_eq!(
+                factor_bits(&reference),
+                factor_bits(&resumed),
+                "cfg {i}: resumed factors differ from uninterrupted run"
+            );
+            let _ = std::fs::remove_dir_all(&dir);
+        }
+    }
+
+    #[test]
+    fn foreign_checkpoint_tag_starts_cold() {
+        // A checkpoint written under one tag must never be picked up by
+        // a job with a different tag (different spec hash).
+        let _g = faults::test_lock();
+        let x = uniform(20, 60, 44);
+        let mu = x.row_means();
+        let cfg = SvdConfig::paper(3).with_fixed_power(2);
+        let dir = ckpt_dir("foreign");
+        faults::arm("svd.sweep=die_after:2").unwrap();
+        let engine = ShiftedRsvd::new(cfg).with_checkpoint(Checkpointer::new(&dir, 300));
+        let _ = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            engine.factorize(&x, &mu, &mut Xoshiro256pp::seed_from_u64(45))
+        }));
+        faults::disarm();
+        let reference = ShiftedRsvd::new(cfg)
+            .factorize(&x, &mu, &mut Xoshiro256pp::seed_from_u64(45))
+            .unwrap();
+        let other = ShiftedRsvd::new(cfg)
+            .with_checkpoint(Checkpointer::new(&dir, 301))
+            .factorize(&x, &mu, &mut Xoshiro256pp::seed_from_u64(45))
+            .unwrap();
+        assert_eq!(factor_bits(&reference), factor_bits(&other));
+        let _ = std::fs::remove_dir_all(&dir);
     }
 }

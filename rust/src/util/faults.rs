@@ -1,0 +1,440 @@
+//! Deterministic fail-point injection — the chaos-testing substrate.
+//!
+//! Production code marks the I/O boundaries that can fail in the real
+//! world with named *fail-points* (`faults::check("stream.read")?`).
+//! Disarmed — the default — a fail-point is one relaxed atomic load and
+//! a branch, cheap enough for per-block hot paths (the `perf_micro`
+//! bench smoke asserts the overhead stays under 1%). Armed, each site
+//! consults its policy and may inject an error, a delay, a truncated
+//! write, or a crash.
+//!
+//! ## Arming
+//!
+//! A *fault spec* is a `;`-separated list of `site=policy` entries plus
+//! an optional `seed=N`:
+//!
+//! ```text
+//! SRSVD_FAULTS='seed=7;stream.read=err:2@1.0;cache.body=partial_write:1'
+//! ```
+//!
+//! Policies:
+//!
+//! * `err[:K][@p]` — fail with an injected `std::io::Error` with
+//!   probability `p` (default 1.0), at most `K` times (default
+//!   unlimited). The bounded count is what lets chaos tests arm
+//!   `p=1.0` on a transient class and still converge: the first `K`
+//!   attempts fail, the retry loop's next attempt succeeds.
+//! * `delay:Nms[:K][@p]` — sleep `N` milliseconds.
+//! * `partial_write[:K][@p]` — the instrumented write path truncates
+//!   its buffer (roughly in half), modelling a torn write.
+//! * `die_after:N` — the `N`-th evaluation of the site panics with the
+//!   marker [`CRASH_MARKER`], modelling a worker crash mid-job. The
+//!   coordinator's `catch_unwind` maps it to a failed job; a restarted
+//!   run then exercises checkpoint resume.
+//!
+//! The spec can come from the `SRSVD_FAULTS` env var
+//! ([`init_from_env`]), the `[faults] spec` config key, or the
+//! `--faults` CLI flag (both via [`arm`]). Randomized policies draw
+//! from per-site [`SplitMix64`] streams derived from the spec's seed,
+//! so a chaos run is reproducible by seed regardless of thread
+//! interleaving.
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::Mutex;
+use std::time::Duration;
+
+use crate::rng::{Rng, SplitMix64};
+use crate::util::{Error, Result};
+
+/// Panic-message prefix of an injected `die_after` crash. The
+/// coordinator's panic isolation recognizes it (and test harnesses
+/// assert on it) to tell an injected crash from a genuine bug.
+pub const CRASH_MARKER: &str = "srsvd-fault: injected crash";
+
+/// Message prefix of every injected `err` fault, so logs and tests can
+/// tell injected failures from real ones.
+pub const ERR_MARKER: &str = "srsvd-fault: injected error";
+
+/// The zero-cost fast path: false until [`arm`] installs a policy.
+static ARMED: AtomicBool = AtomicBool::new(false);
+
+/// Total faults injected (errors + delays + partial writes + crashes)
+/// since process start — surfaced as the `faults_injected` metric.
+static INJECTED: AtomicU64 = AtomicU64::new(0);
+
+static REGISTRY: Mutex<Option<Registry>> = Mutex::new(None);
+
+/// What a policy does when it fires.
+#[derive(Debug, Clone, PartialEq)]
+enum Action {
+    Err,
+    DelayMs(u64),
+    PartialWrite,
+    DieAfter(u64),
+}
+
+#[derive(Debug)]
+struct SitePolicy {
+    action: Action,
+    /// Firing probability (1.0 = every eligible evaluation).
+    p: f64,
+    /// Remaining firings; `None` = unlimited. `die_after` counts
+    /// *evaluations* in `evals` instead.
+    budget: Option<u64>,
+    /// Evaluations seen (drives `die_after:N`).
+    evals: u64,
+    /// Per-site deterministic stream for the probability draw.
+    rng: SplitMix64,
+}
+
+#[derive(Debug, Default)]
+struct Registry {
+    sites: HashMap<String, SitePolicy>,
+}
+
+/// What an armed fail-point decided (see [`check`] / [`write_len`]).
+#[derive(Debug, Clone, Copy, PartialEq)]
+enum Decision {
+    Clean,
+    Err,
+    Delay(u64),
+    PartialWrite,
+    Die,
+}
+
+/// Whether any fault policy is armed — the inlineable fast-path guard.
+#[inline]
+pub fn armed() -> bool {
+    ARMED.load(Ordering::Relaxed)
+}
+
+/// Total faults injected since process start.
+pub fn injected_count() -> u64 {
+    INJECTED.load(Ordering::Relaxed)
+}
+
+/// Arm the registry from a fault spec (see the module docs for the
+/// grammar). Replaces any previously armed spec. An empty spec
+/// disarms.
+pub fn arm(spec: &str) -> Result<()> {
+    let spec = spec.trim();
+    if spec.is_empty() || spec == "off" || spec == "none" {
+        disarm();
+        return Ok(());
+    }
+    let mut seed = 0u64;
+    let mut entries: Vec<(String, String)> = Vec::new();
+    for part in spec.split(';').map(str::trim).filter(|s| !s.is_empty()) {
+        let Some((key, value)) = part.split_once('=') else {
+            return Err(Error::Invalid(format!(
+                "fault spec entry {part:?}: expected site=policy"
+            )));
+        };
+        let (key, value) = (key.trim(), value.trim());
+        if key == "seed" {
+            seed = value
+                .parse()
+                .map_err(|_| Error::Invalid(format!("fault spec seed: not a u64: {value:?}")))?;
+        } else {
+            entries.push((key.to_string(), value.to_string()));
+        }
+    }
+    let mut registry = Registry::default();
+    for (site, policy) in entries {
+        let parsed = parse_policy(&policy, seed, &site)?;
+        registry.sites.insert(site, parsed);
+    }
+    let any = !registry.sites.is_empty();
+    *REGISTRY.lock().expect("fault registry mutex") = any.then_some(registry);
+    ARMED.store(any, Ordering::SeqCst);
+    if any {
+        crate::log_info!("faults: armed ({spec})");
+    }
+    Ok(())
+}
+
+/// Disarm every fail-point (back to the zero-cost path).
+pub fn disarm() {
+    ARMED.store(false, Ordering::SeqCst);
+    *REGISTRY.lock().expect("fault registry mutex") = None;
+}
+
+/// Arm from the `SRSVD_FAULTS` env var if it is set. Called by the
+/// service entry points; an invalid spec is a hard error there (a chaos
+/// run with a typo'd spec silently testing nothing is worse than a
+/// refusal to start).
+pub fn init_from_env() -> Result<()> {
+    match std::env::var("SRSVD_FAULTS") {
+        Ok(spec) => arm(&spec),
+        Err(_) => Ok(()),
+    }
+}
+
+/// `policy[:K][@p]` → [`SitePolicy`]. The per-site RNG stream is
+/// derived from the spec seed and the site name so two sites armed
+/// with the same `p` do not fire in lockstep.
+fn parse_policy(text: &str, seed: u64, site: &str) -> Result<SitePolicy> {
+    let bad = |why: &str| Error::Invalid(format!("fault policy {text:?} for {site:?}: {why}"));
+    let (body, p) = match text.rsplit_once('@') {
+        Some((body, p)) => {
+            let p: f64 = p.parse().map_err(|_| bad("bad probability"))?;
+            if !(0.0..=1.0).contains(&p) {
+                return Err(bad("probability must be in [0, 1]"));
+            }
+            (body, p)
+        }
+        None => (text, 1.0),
+    };
+    let mut parts = body.split(':');
+    let name = parts.next().unwrap_or("");
+    let (action, budget) = match name {
+        "err" => {
+            let budget = match parts.next() {
+                None => None,
+                Some(k) => Some(k.parse::<u64>().map_err(|_| bad("bad count"))?),
+            };
+            (Action::Err, budget)
+        }
+        "delay" => {
+            let ms = parts
+                .next()
+                .and_then(|s| s.strip_suffix("ms"))
+                .ok_or_else(|| bad("expected delay:Nms"))?
+                .parse::<u64>()
+                .map_err(|_| bad("bad delay"))?;
+            let budget = match parts.next() {
+                None => None,
+                Some(k) => Some(k.parse::<u64>().map_err(|_| bad("bad count"))?),
+            };
+            (Action::DelayMs(ms), budget)
+        }
+        "partial_write" => {
+            let budget = match parts.next() {
+                None => None,
+                Some(k) => Some(k.parse::<u64>().map_err(|_| bad("bad count"))?),
+            };
+            (Action::PartialWrite, budget)
+        }
+        "die_after" => {
+            let n = parts
+                .next()
+                .ok_or_else(|| bad("expected die_after:N"))?
+                .parse::<u64>()
+                .map_err(|_| bad("bad count"))?;
+            if n == 0 {
+                return Err(bad("die_after count must be >= 1"));
+            }
+            (Action::DieAfter(n), None)
+        }
+        other => return Err(bad(&format!("unknown action {other:?}"))),
+    };
+    if parts.next().is_some() {
+        return Err(bad("trailing policy fields"));
+    }
+    // Site-keyed substream: fold the site bytes into the seed.
+    let mut h = seed ^ 0x5EED_FA17;
+    for &b in site.as_bytes() {
+        h = h.wrapping_mul(0x100_0000_01B3).wrapping_add(b as u64);
+    }
+    Ok(SitePolicy { action, p, budget, evals: 0, rng: SplitMix64::new(h) })
+}
+
+/// Evaluate `site` against the armed registry.
+fn decide(site: &str) -> Decision {
+    let mut guard = REGISTRY.lock().expect("fault registry mutex");
+    let Some(registry) = guard.as_mut() else {
+        return Decision::Clean;
+    };
+    let Some(policy) = registry.sites.get_mut(site) else {
+        return Decision::Clean;
+    };
+    policy.evals += 1;
+    if let Action::DieAfter(n) = policy.action {
+        if policy.evals == n {
+            INJECTED.fetch_add(1, Ordering::Relaxed);
+            return Decision::Die;
+        }
+        return Decision::Clean;
+    }
+    if policy.budget == Some(0) {
+        return Decision::Clean;
+    }
+    if policy.p < 1.0 {
+        // Uniform in [0, 1) from the site's deterministic stream.
+        let draw = (policy.rng.next_u64() >> 11) as f64 / (1u64 << 53) as f64;
+        if draw >= policy.p {
+            return Decision::Clean;
+        }
+    }
+    if let Some(b) = policy.budget.as_mut() {
+        *b -= 1;
+    }
+    INJECTED.fetch_add(1, Ordering::Relaxed);
+    match policy.action {
+        Action::Err => Decision::Err,
+        Action::DelayMs(ms) => Decision::Delay(ms),
+        Action::PartialWrite => Decision::PartialWrite,
+        Action::DieAfter(_) => unreachable!("handled above"),
+    }
+}
+
+/// The standard fail-point: no-op when disarmed; armed, it may inject
+/// a delay, an `std::io::Error` (kind `Other`, message prefixed with
+/// [`ERR_MARKER`]), or a [`CRASH_MARKER`] panic.
+#[inline]
+pub fn check(site: &str) -> std::io::Result<()> {
+    if !armed() {
+        return Ok(());
+    }
+    check_slow(site)
+}
+
+#[cold]
+fn check_slow(site: &str) -> std::io::Result<()> {
+    match decide(site) {
+        Decision::Clean | Decision::PartialWrite => Ok(()),
+        Decision::Delay(ms) => {
+            std::thread::sleep(Duration::from_millis(ms));
+            Ok(())
+        }
+        Decision::Err => Err(std::io::Error::new(std::io::ErrorKind::Other, format!("{ERR_MARKER} at {site}"))),
+        Decision::Die => panic!("{CRASH_MARKER} at {site}"),
+    }
+}
+
+/// Fail-point for write paths that support torn writes: returns how
+/// many of `len` bytes the caller should actually write. Disarmed (or
+/// clean) that is `len`; a `partial_write` firing truncates to half;
+/// `err`/`delay`/`die_after` behave as in [`check`].
+#[inline]
+pub fn write_len(site: &str, len: usize) -> std::io::Result<usize> {
+    if !armed() {
+        return Ok(len);
+    }
+    match decide(site) {
+        Decision::Clean => Ok(len),
+        Decision::PartialWrite => Ok(len / 2),
+        Decision::Delay(ms) => {
+            std::thread::sleep(Duration::from_millis(ms));
+            Ok(len)
+        }
+        Decision::Err => Err(std::io::Error::new(std::io::ErrorKind::Other, format!("{ERR_MARKER} at {site}"))),
+        Decision::Die => panic!("{CRASH_MARKER} at {site}"),
+    }
+}
+
+/// Whether an I/O error is an injected fault (useful for transient
+/// classification: injected errors model transient faults).
+pub fn is_injected(e: &std::io::Error) -> bool {
+    e.to_string().contains(ERR_MARKER)
+}
+
+/// Serializes in-crate tests that arm the process-global registry (lib
+/// tests share one process and run on parallel threads). Every test
+/// that calls [`arm`] must hold this guard for its whole body.
+#[cfg(test)]
+pub(crate) fn test_lock() -> std::sync::MutexGuard<'static, ()> {
+    static LOCK: Mutex<()> = Mutex::new(());
+    LOCK.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// The registry is process-global, so tests that arm it must not
+    /// interleave — the crate-wide [`test_lock`] serializes them.
+    fn locked() -> std::sync::MutexGuard<'static, ()> {
+        test_lock()
+    }
+
+    #[test]
+    fn disarmed_is_clean_and_cheap() {
+        let _g = locked();
+        disarm();
+        assert!(!armed());
+        assert!(check("stream.read").is_ok());
+        assert_eq!(write_len("stream.write", 100).unwrap(), 100);
+    }
+
+    #[test]
+    fn bounded_err_budget_fires_then_clears() {
+        let _g = locked();
+        arm("seed=1;x.read=err:2@1.0").unwrap();
+        assert!(check("x.read").is_err());
+        assert!(check("x.read").is_err());
+        assert!(check("x.read").is_ok()); // budget exhausted
+        assert!(check("unrelated.site").is_ok());
+        disarm();
+    }
+
+    #[test]
+    fn probability_is_seed_deterministic() {
+        let _g = locked();
+        let run = |seed: u64| -> Vec<bool> {
+            arm(&format!("seed={seed};y.read=err@0.5")).unwrap();
+            (0..32).map(|_| check("y.read").is_err()).collect()
+        };
+        let a = run(9);
+        let b = run(9);
+        let c = run(10);
+        assert_eq!(a, b, "same seed must replay the same fault schedule");
+        assert_ne!(a, c, "different seeds should differ (vanishingly unlikely otherwise)");
+        assert!(a.iter().any(|&f| f) && !a.iter().all(|&f| f), "p=0.5 mixes outcomes");
+        disarm();
+    }
+
+    #[test]
+    fn partial_write_truncates() {
+        let _g = locked();
+        arm("w.out=partial_write:1@1.0").unwrap();
+        assert_eq!(write_len("w.out", 100).unwrap(), 50);
+        assert_eq!(write_len("w.out", 100).unwrap(), 100);
+        disarm();
+    }
+
+    #[test]
+    fn die_after_panics_on_the_nth_evaluation() {
+        let _g = locked();
+        arm("z.sweep=die_after:3").unwrap();
+        assert!(check("z.sweep").is_ok());
+        assert!(check("z.sweep").is_ok());
+        let crash = std::panic::catch_unwind(|| check("z.sweep"));
+        let payload = crash.expect_err("third evaluation must panic");
+        let msg = payload
+            .downcast_ref::<String>()
+            .cloned()
+            .unwrap_or_default();
+        assert!(msg.contains(CRASH_MARKER), "{msg}");
+        assert!(check("z.sweep").is_ok(), "after the crash the site is clean");
+        disarm();
+    }
+
+    #[test]
+    fn injected_errors_are_recognizable() {
+        let _g = locked();
+        arm("q.read=err:1").unwrap();
+        let e = check("q.read").unwrap_err();
+        assert!(is_injected(&e), "{e}");
+        assert!(!is_injected(&std::io::Error::new(std::io::ErrorKind::Other, "disk on fire")));
+        disarm();
+    }
+
+    #[test]
+    fn bad_specs_are_rejected() {
+        let _g = locked();
+        assert!(arm("nonsense").is_err());
+        assert!(arm("a.b=explode").is_err());
+        assert!(arm("a.b=err@2.0").is_err());
+        assert!(arm("a.b=die_after:0").is_err());
+        assert!(arm("a.b=delay:5").is_err());
+        assert!(arm("seed=x;a.b=err").is_err());
+        assert!(!armed(), "a rejected spec must not leave faults armed");
+        // And the disarm spellings.
+        arm("a.b=err:1").unwrap();
+        assert!(armed());
+        arm("off").unwrap();
+        assert!(!armed());
+    }
+}

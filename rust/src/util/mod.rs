@@ -1,7 +1,10 @@
-//! Small shared utilities: errors, timing, logging, JSON.
+//! Small shared utilities: errors, timing, logging, JSON, fault
+//! injection, retry policies.
 
+pub mod faults;
 pub mod json;
 pub mod logging;
+pub mod retry;
 pub mod timer;
 
 /// Library-wide error type.

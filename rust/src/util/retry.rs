@@ -1,0 +1,157 @@
+//! Typed retry/backoff policy, shared by every layer that retries.
+//!
+//! One [`RetryPolicy`] shape flows from config (`[retry]`), the CLI
+//! (`--retry-*` flags) and the routing tier down to the call sites that
+//! are allowed to retry: transient streamed-source read errors inside a
+//! sweep, the client's connect/GET paths, and the router's
+//! pre-acceptance failover chain. Sites where a retry could duplicate
+//! work (POST resubmission) never consult a policy — at-most-once is a
+//! property of the call site, not of the knobs.
+//!
+//! Backoff is exponential with an optional deterministic jitter:
+//! `delay(attempt) = min(base · 2^(attempt−1), max)`, the jitter drawn
+//! from a [`SplitMix64`] stream keyed by the caller's seed so chaos
+//! runs replay the exact same schedule.
+
+use crate::rng::{Rng, SplitMix64};
+
+/// How many times to try, and how long to wait between tries.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct RetryPolicy {
+    /// Total attempts including the first (1 = no retries).
+    pub max_attempts: u32,
+    /// First backoff delay, milliseconds.
+    pub backoff_base_ms: u64,
+    /// Backoff ceiling, milliseconds.
+    pub backoff_max_ms: u64,
+    /// Scale each delay by a deterministic factor in [0.5, 1.0] to
+    /// de-synchronize retrying peers.
+    pub jitter: bool,
+}
+
+impl Default for RetryPolicy {
+    fn default() -> Self {
+        RetryPolicy {
+            max_attempts: 3,
+            backoff_base_ms: 10,
+            backoff_max_ms: 1_000,
+            jitter: true,
+        }
+    }
+}
+
+impl RetryPolicy {
+    /// The no-retry policy: one attempt, fail fast. This is the
+    /// behavior every call site had before policies existed.
+    pub fn none() -> RetryPolicy {
+        RetryPolicy {
+            max_attempts: 1,
+            backoff_base_ms: 0,
+            backoff_max_ms: 0,
+            jitter: false,
+        }
+    }
+
+    /// Whether another attempt is allowed after `attempt` tries have
+    /// already failed.
+    pub fn allows(&self, attempts_so_far: u32) -> bool {
+        attempts_so_far < self.max_attempts.max(1)
+    }
+
+    /// Backoff before attempt `attempt + 1`, given `attempt` failures
+    /// so far (`attempt >= 1`). Deterministic in `(self, attempt, seed)`.
+    pub fn backoff_ms(&self, attempt: u32, seed: u64) -> u64 {
+        if self.backoff_base_ms == 0 {
+            return 0;
+        }
+        let exp = attempt.saturating_sub(1).min(32);
+        let raw = self
+            .backoff_base_ms
+            .saturating_mul(1u64 << exp)
+            .min(self.backoff_max_ms.max(self.backoff_base_ms));
+        if !self.jitter {
+            return raw;
+        }
+        // Deterministic jitter in [0.5, 1.0]: keyed by caller seed and
+        // attempt so concurrent retriers spread out but replays agree.
+        let mut rng = SplitMix64::new(seed ^ ((attempt as u64) << 32));
+        let f = 0.5 + ((rng.next_u64() >> 11) as f64 / (1u64 << 53) as f64) * 0.5;
+        ((raw as f64) * f) as u64
+    }
+
+    /// Sleep for the backoff before attempt `attempt + 1` (no-op when
+    /// the computed delay is zero, so zero-base chaos tests never
+    /// sleep).
+    pub fn sleep_backoff(&self, attempt: u32, seed: u64) {
+        let ms = self.backoff_ms(attempt, seed);
+        if ms > 0 {
+            std::thread::sleep(std::time::Duration::from_millis(ms));
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_are_sane() {
+        let p = RetryPolicy::default();
+        assert!(p.max_attempts >= 2);
+        assert!(p.backoff_max_ms >= p.backoff_base_ms);
+        assert!(p.allows(0));
+        assert!(p.allows(p.max_attempts - 1));
+        assert!(!p.allows(p.max_attempts));
+    }
+
+    #[test]
+    fn none_means_one_attempt() {
+        let p = RetryPolicy::none();
+        assert!(p.allows(0));
+        assert!(!p.allows(1));
+        assert_eq!(p.backoff_ms(1, 42), 0);
+    }
+
+    #[test]
+    fn backoff_doubles_and_caps() {
+        let p = RetryPolicy {
+            max_attempts: 10,
+            backoff_base_ms: 10,
+            backoff_max_ms: 50,
+            jitter: false,
+        };
+        assert_eq!(p.backoff_ms(1, 0), 10);
+        assert_eq!(p.backoff_ms(2, 0), 20);
+        assert_eq!(p.backoff_ms(3, 0), 40);
+        assert_eq!(p.backoff_ms(4, 0), 50); // capped
+        assert_eq!(p.backoff_ms(9, 0), 50);
+    }
+
+    #[test]
+    fn jitter_is_deterministic_and_bounded() {
+        let p = RetryPolicy { jitter: true, ..RetryPolicy::default() };
+        let a = p.backoff_ms(2, 7);
+        let b = p.backoff_ms(2, 7);
+        assert_eq!(a, b, "same (attempt, seed) must replay");
+        let raw = RetryPolicy { jitter: false, ..p }.backoff_ms(2, 7);
+        assert!(a >= raw / 2 && a <= raw, "jittered {a} outside [{}..{raw}]", raw / 2);
+        // Different seeds spread.
+        let c = p.backoff_ms(2, 8);
+        let d = p.backoff_ms(2, 9);
+        assert!(a != c || a != d, "jitter should vary by seed");
+    }
+
+    #[test]
+    fn zero_base_never_sleeps() {
+        let p = RetryPolicy {
+            max_attempts: 5,
+            backoff_base_ms: 0,
+            backoff_max_ms: 0,
+            jitter: true,
+        };
+        assert_eq!(p.backoff_ms(3, 1), 0);
+        let t = std::time::Instant::now();
+        p.sleep_backoff(3, 1);
+        assert!(t.elapsed().as_millis() < 50);
+    }
+}

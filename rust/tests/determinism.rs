@@ -167,6 +167,7 @@ fn coordinator_factorizations_identical_across_pool_sizes() {
             artifact_dir: None,
             pool_threads: Some(pool_threads),
             io_threads: None,
+            ..Default::default()
         })
         .expect("coordinator");
         let r = coord.submit_blocking(job()).expect("submit");
@@ -321,6 +322,7 @@ fn slow_streamed_io_does_not_starve_dense_compute() {
         artifact_dir: None,
         pool_threads: Some(2),
         io_threads: Some(1),
+        ..Default::default()
     })
     .expect("coordinator");
 

@@ -1,0 +1,452 @@
+//! Chaos suite: end-to-end behaviour under injected faults.
+//!
+//! Every test arms the process-global fail-point registry
+//! (`srsvd::util::faults`), so the whole file serializes on a local
+//! mutex — the crate-internal test lock is not visible to integration
+//! binaries, and this binary's registry is its own process anyway.
+//!
+//! What is pinned here, layer by layer:
+//!
+//! * transient `stream.read` errors at `p = 1.0` complete through the
+//!   typed retry policy with **byte-identical** factors, on file and
+//!   CSR-row sources, across thread pools 1/2/8 and prefetch on/off;
+//! * a `die_after` crash mid-sweep, then a restart with the same spec
+//!   and seed, resumes from the checkpoint and reproduces the
+//!   uninterrupted factors bit for bit;
+//! * an exhausted retry budget fails the *job* with a typed I/O error
+//!   (attempt count included) — the worker survives;
+//! * a worker panic surfaces as `Error::Service` carrying the job id
+//!   and the panic message;
+//! * a torn HTTP response write re-parks the claimed result and the
+//!   client's policy-driven GET retry recovers it intact;
+//! * backpressure 503s carry `Retry-After`, and `submit_retrying`
+//!   honors it until the queue drains;
+//! * journaled accepted-but-unfinished jobs are re-run when a server
+//!   restarts on the same journal directory.
+
+use std::sync::{Arc, Mutex, MutexGuard};
+use std::time::{Duration, Instant};
+
+use srsvd::coordinator::{
+    Coordinator, CoordinatorConfig, EnginePreference, JobSpec, MatrixInput, ShiftSpec,
+};
+use srsvd::data::Distribution;
+use srsvd::linalg::stream::{
+    spill_to_file, CsrRowSource, FileSource, GeneratorSource, MatrixSource, StreamConfig, Streamed,
+};
+use srsvd::linalg::{Csr, Dense};
+use srsvd::parallel::{with_pool, ThreadPool};
+use srsvd::rng::{Rng, Xoshiro256pp};
+use srsvd::server::client::{SubmitOutcome, WaitOutcome};
+use srsvd::server::protocol::{generator_input, JobRequest};
+use srsvd::server::{Client, Server, ServerConfig};
+use srsvd::svd::{Checkpointer, Factorization, ShiftedRsvd, SvdConfig};
+use srsvd::util::faults;
+use srsvd::util::retry::RetryPolicy;
+
+/// The fail-point registry is process-global: every test in this
+/// binary that arms it holds this guard for its whole body.
+fn locked() -> MutexGuard<'static, ()> {
+    static LOCK: Mutex<()> = Mutex::new(());
+    LOCK.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+/// Zero-sleep retry policy: chaos tests must converge fast, and the
+/// backoff arithmetic is covered by the unit tests.
+fn fast_retry(max_attempts: u32) -> RetryPolicy {
+    RetryPolicy { max_attempts, backoff_base_ms: 0, backoff_max_ms: 0, jitter: false }
+}
+
+fn factor_bits(f: &Factorization) -> (Vec<u64>, Vec<u64>, Vec<u64>) {
+    let b = |d: &Dense| d.data().iter().map(|v| v.to_bits()).collect::<Vec<_>>();
+    (b(&f.u), f.s.iter().map(|v| v.to_bits()).collect(), b(&f.v))
+}
+
+fn temp_dir(name: &str) -> std::path::PathBuf {
+    let d = std::env::temp_dir().join(format!("srsvd_faults_{}_{name}", std::process::id()));
+    let _ = std::fs::create_dir_all(&d);
+    d
+}
+
+/// The two streamed source kinds under test, behind one constructor so
+/// the pool × prefetch grids below stay readable.
+fn file_source(path: &std::path::Path) -> FileSource {
+    let gen = GeneratorSource::new(60, 200, Distribution::Uniform, 17).unwrap();
+    spill_to_file(&gen, path, 16).unwrap()
+}
+
+fn csr_source() -> CsrRowSource {
+    let mut rng = Xoshiro256pp::seed_from_u64(23);
+    CsrRowSource::new(Csr::random(60, 200, 0.2, &mut rng, |r| r.next_uniform() + 0.1))
+}
+
+fn factorize(ops: &dyn srsvd::svd::MatVecOps, cfg: SvdConfig, seed: u64) -> Factorization {
+    let mut rng = Xoshiro256pp::seed_from_u64(seed);
+    ShiftedRsvd::new(cfg)
+        .factorize_mean_centered(ops, &mut rng)
+        .expect("factorize")
+}
+
+#[test]
+fn transient_read_errors_complete_byte_identical_across_pools_and_sources() {
+    let _g = locked();
+    faults::disarm();
+    let cfg = SvdConfig::paper(6).with_fixed_power(2);
+    let path = temp_dir("transient").join("src.bin");
+    let file = file_source(&path);
+    let csr = csr_source();
+    // `stream.read` fires inside FileSource; the prefetch pipeline's
+    // own `stream.prefetch` site covers sources (CSR, generator) that
+    // have no I/O of their own.
+    let cases: [(&str, &dyn MatrixSource, &str, &[bool]); 2] = [
+        ("file", &file, "stream.read=err:2@1.0", &[true, false]),
+        ("csr", &csr, "stream.prefetch=err:2@1.0", &[true]),
+    ];
+    for (name, src, spec, prefetches) in cases {
+        // Clean baseline, then the same factorization with the read
+        // site failing twice at p = 1.0: the retry loop must absorb
+        // the failures without perturbing a single bit.
+        let base = factorize(&Streamed::with_block_rows(src, 13), cfg, 71);
+        for threads in [1usize, 2, 8] {
+            let pool = Arc::new(ThreadPool::new(threads));
+            with_pool(&pool, || {
+                for &prefetch in prefetches {
+                    faults::arm(spec).unwrap();
+                    let injected_before = faults::injected_count();
+                    let s = Streamed::with_block_rows(src, 13)
+                        .with_prefetch(prefetch)
+                        .with_retry(fast_retry(4));
+                    let got = factorize(&s, cfg, 71);
+                    faults::disarm();
+                    assert!(
+                        faults::injected_count() >= injected_before + 2,
+                        "{name}: faults never fired"
+                    );
+                    assert!(s.stats().retries >= 2, "{name}: retries not counted");
+                    assert_eq!(
+                        factor_bits(&base),
+                        factor_bits(&got),
+                        "{name}: retried factors differ (pool={threads}, prefetch={prefetch})"
+                    );
+                }
+            });
+        }
+    }
+    let _ = std::fs::remove_dir_all(path.parent().unwrap());
+}
+
+#[test]
+fn crash_mid_sweep_resumes_byte_identical_across_pools_and_sources() {
+    let _g = locked();
+    faults::disarm();
+    let cfg = SvdConfig::paper(6).with_fixed_power(3);
+    let dir = temp_dir("crash_resume");
+    let path = dir.join("src.bin");
+    let file = file_source(&path);
+    let csr = csr_source();
+    let mut tag = 0x0FEE_D000u64;
+    for (name, src) in [("file", &file as &dyn MatrixSource), ("csr", &csr)] {
+        let base = factorize(&Streamed::with_block_rows(src, 17), cfg, 83);
+        for threads in [1usize, 2, 8] {
+            let pool = Arc::new(ThreadPool::new(threads));
+            with_pool(&pool, || {
+                for prefetch in [true, false] {
+                    tag += 1;
+                    let ckpt = Checkpointer::new(&dir, tag);
+                    // Crash at the top of sweep 2: sweep 1's checkpoint
+                    // is on disk, the process "dies" mid-job.
+                    faults::arm("svd.sweep=die_after:2").unwrap();
+                    let engine = ShiftedRsvd::new(cfg).with_checkpoint(ckpt.clone());
+                    let s = Streamed::with_block_rows(src, 17).with_prefetch(prefetch);
+                    let crashed = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                        engine.factorize_mean_centered(&s, &mut Xoshiro256pp::seed_from_u64(83))
+                    }));
+                    faults::disarm();
+                    let payload = crashed.expect_err("die_after must panic");
+                    let msg = payload
+                        .downcast_ref::<String>()
+                        .map(|s| s.as_str())
+                        .or_else(|| payload.downcast_ref::<&str>().copied())
+                        .unwrap_or("");
+                    assert!(msg.contains(faults::CRASH_MARKER), "{name}: {msg:?}");
+                    // Restart: same spec, same seed, same tag.
+                    let s = Streamed::with_block_rows(src, 17).with_prefetch(prefetch);
+                    let resumed = ShiftedRsvd::new(cfg)
+                        .with_checkpoint(ckpt)
+                        .factorize_mean_centered(&s, &mut Xoshiro256pp::seed_from_u64(83))
+                        .expect("resume");
+                    assert_eq!(
+                        factor_bits(&base),
+                        factor_bits(&resumed),
+                        "{name}: resumed factors differ (pool={threads}, prefetch={prefetch})"
+                    );
+                }
+            });
+        }
+    }
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn exhausted_retry_budget_fails_the_job_typed_and_the_worker_survives() {
+    let _g = locked();
+    faults::disarm();
+    let coord = Coordinator::start(CoordinatorConfig {
+        native_workers: 1,
+        queue_capacity: 8,
+        artifact_dir: None,
+        pool_threads: Some(2),
+        io_threads: None,
+        checkpoint_dir: None,
+        retry: fast_retry(3),
+    })
+    .unwrap();
+    let gen = GeneratorSource::new(40, 120, Distribution::Uniform, 5).unwrap();
+    let x = gen.materialize().unwrap();
+    // Every prefetched read fails, forever: 3 attempts per block, then
+    // the reader thread gives up, the panic is re-raised on the worker,
+    // and the coordinator maps it to a typed I/O error.
+    faults::arm("stream.prefetch=err@1.0").unwrap();
+    let r = coord
+        .submit_blocking(JobSpec {
+            input: MatrixInput::streamed(
+                gen,
+                &StreamConfig { block_rows: 16, budget_mb: 64, prefetch: true },
+            ),
+            config: SvdConfig::paper(4),
+            shift: ShiftSpec::MeanCenter,
+            engine: EnginePreference::Native,
+            seed: 2,
+            score: false,
+        })
+        .unwrap();
+    faults::disarm();
+    let err = r.outcome.expect_err("all-reads-fail job must fail");
+    let text = format!("{err}");
+    assert!(matches!(err, srsvd::util::Error::Io(_)), "typed Io, got: {text}");
+    assert!(text.contains("attempt"), "attempt count missing: {text}");
+    assert!(text.contains("srsvd-fault"), "injected marker missing: {text}");
+    // The worker survives and the retry traffic reaches the metrics.
+    let m = coord.metrics();
+    assert_eq!(m.failed, 1);
+    assert!(m.stream_retries >= 2, "{m:?}");
+    assert!(m.faults_injected >= 3, "{m:?}");
+    let ok = coord
+        .submit_blocking(JobSpec {
+            input: MatrixInput::Dense(x),
+            config: SvdConfig::paper(4),
+            shift: ShiftSpec::MeanCenter,
+            engine: EnginePreference::Native,
+            seed: 2,
+            score: false,
+        })
+        .unwrap();
+    assert!(ok.outcome.is_ok(), "worker must outlive the failed job");
+    coord.shutdown();
+}
+
+#[test]
+fn worker_panic_maps_to_service_error_with_job_id_and_message() {
+    let _g = locked();
+    faults::disarm();
+    let coord = Coordinator::start(CoordinatorConfig {
+        native_workers: 1,
+        queue_capacity: 4,
+        artifact_dir: None,
+        pool_threads: Some(2),
+        io_threads: None,
+        ..Default::default()
+    })
+    .unwrap();
+    let mut rng = Xoshiro256pp::seed_from_u64(3);
+    let x = Dense::from_fn(20, 50, |_, _| rng.next_uniform());
+    faults::arm("svd.sweep=die_after:1").unwrap();
+    let r = coord
+        .submit_blocking(JobSpec {
+            input: MatrixInput::Dense(x),
+            config: SvdConfig::paper(3).with_fixed_power(1),
+            shift: ShiftSpec::MeanCenter,
+            engine: EnginePreference::Native,
+            seed: 4,
+            score: false,
+        })
+        .unwrap();
+    faults::disarm();
+    let err = r.outcome.expect_err("injected crash must fail the job");
+    let text = format!("{err}");
+    assert!(
+        matches!(err, srsvd::util::Error::Service(_)),
+        "typed Service, got: {text}"
+    );
+    assert!(text.contains("job panicked"), "{text}");
+    assert!(text.contains("srsvd-fault: injected crash"), "{text}");
+    assert!(text.contains(&format!("{}", r.id)), "job id missing: {text}");
+    coord.shutdown();
+}
+
+fn start_server(queue_capacity: usize, scfg_extra: impl FnOnce(&mut ServerConfig)) -> Server {
+    let coord = Arc::new(
+        Coordinator::start(CoordinatorConfig {
+            native_workers: 1,
+            queue_capacity,
+            artifact_dir: None,
+            pool_threads: Some(2),
+            io_threads: None,
+            ..Default::default()
+        })
+        .unwrap(),
+    );
+    let mut scfg = ServerConfig { addr: "127.0.0.1:0".into(), ..Default::default() };
+    scfg_extra(&mut scfg);
+    Server::bind(coord, &scfg, StreamConfig::default()).unwrap()
+}
+
+fn wait_for(deadline: Duration, what: &str, mut done: impl FnMut() -> bool) {
+    let end = Instant::now() + deadline;
+    while !done() {
+        assert!(Instant::now() < end, "timed out waiting for {what}");
+        std::thread::sleep(Duration::from_millis(25));
+    }
+}
+
+#[test]
+fn torn_response_write_is_recovered_by_the_client_retry() {
+    let _g = locked();
+    faults::disarm();
+    let server = start_server(16, |_| {});
+    let mut client = Client::connect(&server.local_addr().to_string()).unwrap();
+    let mut req = JobRequest::new(
+        generator_input(30, 40, Distribution::Uniform, 6, None, None),
+        3,
+    );
+    req.engine = EnginePreference::Native;
+    let SubmitOutcome::Queued(id) = client.submit(&req).unwrap() else {
+        panic!("wait=false submit must queue");
+    };
+    // Let the job finish server-side while the registry is disarmed, so
+    // the single torn write lands on the claiming GET below.
+    wait_for(Duration::from_secs(60), "job completion", || {
+        client.metrics().unwrap().get("completed").unwrap().as_usize().unwrap() >= 1
+    });
+    faults::arm("http.write=partial_write:1@1.0").unwrap();
+    // First claim: the response is torn mid-flight, the server re-parks
+    // the result, and the client's policy-driven GET retry claims the
+    // re-parked copy in full on a fresh connection.
+    let wire = loop {
+        match client.wait_timeout(id, 5.0) {
+            Ok(WaitOutcome::Done(r)) => break r,
+            Ok(WaitOutcome::Running) => {}
+            Err(e) => panic!("torn write must be retried, not surfaced: {e}"),
+        }
+    };
+    faults::disarm();
+    let out = wire.outcome.expect("re-parked result must be intact");
+    assert_eq!(out.s.len(), 3);
+    server.shutdown();
+}
+
+#[test]
+fn backpressure_503_carries_retry_after_and_submit_retrying_honors_it() {
+    let _g = locked();
+    faults::disarm();
+    let server = start_server(1, |_| {});
+    let mut client = Client::connect(&server.local_addr().to_string()).unwrap();
+    let mut req = JobRequest::new(
+        generator_input(300, 500, Distribution::Uniform, 7, None, None),
+        16,
+    );
+    req.config = req.config.with_fixed_power(2);
+    req.engine = EnginePreference::Native;
+    // Saturate the capacity-1 queue.
+    let mut queued = Vec::new();
+    let mut saw_503 = false;
+    for _ in 0..60 {
+        match client.submit(&req) {
+            Ok(SubmitOutcome::Queued(id)) => queued.push(id),
+            Ok(SubmitOutcome::Done(_)) => panic!("wait=false submit answered with a result"),
+            Err(e) => {
+                assert!(format!("{e}").contains("503"), "{e}");
+                saw_503 = true;
+                break;
+            }
+        }
+    }
+    assert!(saw_503, "never saw 503 with queue capacity 1");
+    let hint = client.last_retry_after();
+    assert!(hint.is_some(), "backpressure 503 must carry Retry-After");
+    assert!((1..=30).contains(&hint.unwrap()), "hint {hint:?} outside [1, 30]");
+    // submit_retrying sleeps on the hint (capped by the policy) and
+    // lands once the queue drains.
+    client = client.with_retry(RetryPolicy {
+        max_attempts: 200,
+        backoff_base_ms: 25,
+        backoff_max_ms: 100,
+        jitter: false,
+    });
+    match client.submit_retrying(&req).expect("retrying submit must land") {
+        SubmitOutcome::Queued(id) => queued.push(id),
+        SubmitOutcome::Done(_) => panic!("wait=false submit answered with a result"),
+    }
+    for id in queued {
+        loop {
+            match client.wait(id).unwrap() {
+                WaitOutcome::Done(r) => {
+                    r.outcome.expect("queued job failed");
+                    break;
+                }
+                WaitOutcome::Running => {}
+            }
+        }
+    }
+    server.shutdown();
+}
+
+#[test]
+fn journaled_jobs_are_rerun_on_restart_and_the_journal_is_cleaned() {
+    let _g = locked();
+    faults::disarm();
+    let dir = temp_dir("journal");
+    // A crashed server's journal: one accepted-but-unfinished job spec,
+    // written exactly as the submit path journals raw bodies.
+    let mut req = JobRequest::new(
+        generator_input(30, 40, Distribution::Uniform, 8, None, None),
+        3,
+    );
+    req.engine = EnginePreference::Native;
+    let body = req.to_json().to_string();
+    let entry = dir.join(format!("job-{:016}.json", 42));
+    std::fs::write(&entry, body.as_bytes()).unwrap();
+    // A torn temp file from a crashed journal write must be discarded.
+    let torn = dir.join("job-0000000000000043.json.tmp");
+    std::fs::write(&torn, &body.as_bytes()[..body.len() / 2]).unwrap();
+
+    let server = start_server(8, |scfg| scfg.journal_dir = Some(dir.clone()));
+    let mut client = Client::connect(&server.local_addr().to_string()).unwrap();
+    wait_for(Duration::from_secs(60), "journal replay", || {
+        let m = client.metrics().unwrap();
+        m.get("journal_replayed").unwrap().as_usize().unwrap() >= 1
+            && m.get("completed").unwrap().as_usize().unwrap() >= 1
+    });
+    // The replayed job's completion removes its journal entry (and the
+    // torn temp file was swept on replay).
+    wait_for(Duration::from_secs(30), "journal cleanup", || !entry.exists());
+    assert!(!torn.exists(), "torn journal temp file must be discarded");
+    server.shutdown();
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn disarmed_fail_points_inject_nothing() {
+    let _g = locked();
+    faults::disarm();
+    let before = faults::injected_count();
+    let path = temp_dir("disarmed").join("src.bin");
+    let file = file_source(&path);
+    let _ = factorize(
+        &Streamed::with_block_rows(&file, 13).with_retry(fast_retry(4)),
+        SvdConfig::paper(4).with_fixed_power(1),
+        9,
+    );
+    assert_eq!(faults::injected_count(), before, "disarmed run injected faults");
+    let _ = std::fs::remove_dir_all(path.parent().unwrap());
+}

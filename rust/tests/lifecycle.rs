@@ -31,6 +31,7 @@ fn coordinator(native_workers: usize) -> Arc<Coordinator> {
             artifact_dir: None,
             pool_threads: Some(2),
             io_threads: None,
+            ..Default::default()
         })
         .unwrap(),
     )

@@ -41,6 +41,7 @@ fn coordinator(native_workers: usize) -> Arc<Coordinator> {
             artifact_dir: None,
             pool_threads: Some(2),
             io_threads: None,
+            ..Default::default()
         })
         .unwrap(),
     )
@@ -329,6 +330,7 @@ fn server_readyz_answers_503_at_queue_capacity() {
             artifact_dir: None,
             pool_threads: Some(2),
             io_threads: None,
+            ..Default::default()
         })
         .unwrap(),
     );

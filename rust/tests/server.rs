@@ -41,6 +41,7 @@ fn start_service(
             artifact_dir: None,
             pool_threads: Some(2),
             io_threads: None,
+            ..Default::default()
         })
         .unwrap(),
     );
@@ -244,6 +245,7 @@ fn claimed_result_surviving_failed_write_is_retryable() {
             artifact_dir: None,
             pool_threads: Some(2),
             io_threads: None,
+            ..Default::default()
         })
         .unwrap(),
     );

@@ -114,6 +114,7 @@ fn coordinator_routes_grid_jobs_to_artifact() {
         artifact_dir: Some(dir),
         pool_threads: None,
         io_threads: None,
+        ..Default::default()
     })
     .unwrap();
 
@@ -149,6 +150,7 @@ fn coordinator_engines_agree_for_same_seed() {
         artifact_dir: Some(dir),
         pool_threads: None,
         io_threads: None,
+        ..Default::default()
     })
     .unwrap();
     let x = uniform(100, 1000, 9);
@@ -177,6 +179,7 @@ fn coordinator_sparse_word_job() {
         artifact_dir: Some(dir),
         pool_threads: None,
         io_threads: None,
+        ..Default::default()
     })
     .unwrap();
     let mut rng = Xoshiro256pp::seed_from_u64(13);
@@ -259,6 +262,7 @@ fn coordinator_mixed_burst() {
         artifact_dir: Some(dir),
         pool_threads: None,
         io_threads: None,
+        ..Default::default()
     })
     .unwrap();
     let mut handles = Vec::new();

@@ -141,6 +141,7 @@ fn coordinator_streamed_job_matches_dense_job() {
             artifact_dir: None,
             pool_threads: Some(pool_threads),
             io_threads: None,
+            ..Default::default()
         })
         .expect("coordinator");
         let r = coord
@@ -212,6 +213,7 @@ fn failing_streamed_source_fails_the_job_not_the_worker() {
         artifact_dir: None,
         pool_threads: Some(2),
         io_threads: None,
+        ..Default::default()
     })
     .expect("coordinator");
     let bad = FlakySource { inner: InMemorySource::new(x.clone()), fail_after_row: 60 };
@@ -344,6 +346,7 @@ fn coordinator_surfaces_stream_pass_and_byte_counters() {
         artifact_dir: None,
         pool_threads: Some(2),
         io_threads: None,
+        ..Default::default()
     })
     .expect("coordinator");
     let r = coord
